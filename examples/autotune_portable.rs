@@ -1,0 +1,57 @@
+//! Portable tiling selection across the whole device registry — the
+//! paper's §V conclusion ("optimize for the worst-case GPU") extended to
+//! seven real GPU models + the two synthetic ones.
+//!
+//! For each scale, prints each device's own best tile and the min-max
+//! regret (portable) tile, then shows how much each device loses by
+//! adopting the portable tile instead of its personal best.
+//!
+//! Run: `cargo run --release --example autotune_portable`
+
+use tilekit::autotuner::{portable_tile, sweep};
+use tilekit::device::builtin_devices;
+use tilekit::image::Interpolator;
+use tilekit::tiling::paper_sweep_tiles;
+use tilekit::util::text::Table;
+
+fn main() {
+    let devices = builtin_devices();
+    let tiles = paper_sweep_tiles();
+
+    for scale in [2u32, 6, 10] {
+        println!("=== scale {scale} ===\n");
+        let sweeps: Vec<_> = devices
+            .iter()
+            .map(|d| sweep(d, Interpolator::Bilinear, &tiles, scale, (800, 800)))
+            .collect();
+        let choice = portable_tile(&sweeps).expect("non-empty registry");
+        let mut t = Table::new(vec![
+            "device",
+            "own best",
+            "own best ms",
+            "portable ms",
+            "regret",
+        ]);
+        for s in &sweeps {
+            let best = s.best().unwrap();
+            let portable_ms = s.time_of(choice.tile).unwrap();
+            t.row(vec![
+                s.device_id.clone(),
+                best.tile.label(),
+                format!("{:.3}", best.report.ms),
+                format!("{portable_ms:.3}"),
+                format!("{:.3}x", portable_ms / best.report.ms),
+            ]);
+        }
+        print!("{}", t.render());
+        println!(
+            "\nportable tile: {} (worst-case regret {:.3}x)\n",
+            choice.tile, choice.worst_regret
+        );
+    }
+    println!(
+        "Paper §V: \"the tiling dimensions 32x4 seems to be a better choice which can\n\
+         offer better performance in general when performing in different situations,\n\
+         especially for larger final images.\""
+    );
+}

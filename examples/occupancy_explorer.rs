@@ -1,0 +1,65 @@
+//! Occupancy explorer: a full occupancy map (every paper-sweep tile ×
+//! every registry device × every kernel resource profile), highlighting
+//! where each compute capability's limiter bites — the data behind the
+//! paper's §III.B reasoning, generalized.
+//!
+//! Run: `cargo run --release --example occupancy_explorer`
+
+use tilekit::device::builtin_devices;
+use tilekit::tiling::occupancy::{occupancy, KernelResources, Limiter};
+use tilekit::tiling::paper_sweep_tiles;
+use tilekit::util::text::Table;
+
+fn main() {
+    let kernels = [
+        ("nearest", KernelResources::NEAREST),
+        ("bilinear", KernelResources::BILINEAR),
+        ("bicubic", KernelResources::BICUBIC),
+    ];
+    for (kname, res) in kernels {
+        println!("=== kernel: {kname} ({} regs/thread) ===\n", res.regs_per_thread);
+        let devices = builtin_devices();
+        let mut header = vec!["tile".to_string()];
+        header.extend(devices.iter().map(|d| d.id.clone()));
+        let mut t = Table::new(header);
+        for tile in paper_sweep_tiles() {
+            let mut row = vec![tile.label()];
+            for d in &devices {
+                let o = occupancy(tile, &res, &d.cc);
+                let cell = if o.limiter == Limiter::Invalid {
+                    "-".to_string()
+                } else {
+                    format!("{:.0}%{}", o.ratio * 100.0, limiter_mark(o.limiter))
+                };
+                row.push(cell);
+            }
+            t.row(row);
+        }
+        print!("{}", t.render());
+        println!("  (* = register-limited, # = block-slot-limited, blank = threads/warps)\n");
+    }
+
+    // The §III.B cliff, called out explicitly.
+    println!("§III.B focus — 32x16 bilinear across capabilities:");
+    let tile = "32x16".parse().unwrap();
+    let mut t = Table::new(vec!["device", "cc", "blocks/SM", "threads/SM", "occupancy"]);
+    for d in builtin_devices() {
+        let o = occupancy(tile, &KernelResources::BILINEAR, &d.cc);
+        t.row(vec![
+            d.id.clone(),
+            d.cc.version(),
+            o.blocks_per_sm.to_string(),
+            o.threads_per_sm.to_string(),
+            format!("{:.0}%", o.ratio * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn limiter_mark(l: Limiter) -> &'static str {
+    match l {
+        Limiter::Registers => "*",
+        Limiter::BlockSlots => "#",
+        _ => "",
+    }
+}

@@ -1,0 +1,91 @@
+//! Quickstart: the 60-second tour of tilekit's public API.
+//!
+//! 1. Look up the paper's two GPUs in the device registry.
+//! 2. Ask the occupancy calculator about the §III.B 32×16 cliff.
+//! 3. Simulate one kernel launch on each device.
+//! 4. Let the autotuner pick the portable tile (the paper's 32×4).
+//! 5. If artifacts are built (`make artifacts`), resize a real image
+//!    through the AOT Pallas kernel via PJRT.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+use tilekit::autotuner::{portable_tile, sweep};
+use tilekit::device::paper_pair;
+use tilekit::image::{generate, pnm, Interpolator};
+use tilekit::runtime::{Engine, Manifest};
+use tilekit::sim::{simulate, Launch};
+use tilekit::tiling::occupancy::{occupancy, KernelResources};
+use tilekit::tiling::paper_sweep_tiles;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The paper's testbed.
+    let (gtx, gts) = paper_pair();
+    println!("devices: {gtx}\n         {gts}\n");
+
+    // 2. The §III.B occupancy cliff.
+    let tile = "32x16".parse().unwrap();
+    for dev in [&gtx, &gts] {
+        let o = occupancy(tile, &KernelResources::BILINEAR, &dev.cc);
+        println!(
+            "occupancy of 32x16 on {}: {} blocks/SM, {} threads, {:.0}%",
+            dev.id,
+            o.blocks_per_sm,
+            o.threads_per_sm,
+            o.ratio * 100.0
+        );
+    }
+
+    // 3. Simulate the paper's workload: 800x800 at scale 8, tile 32x4.
+    let launch = Launch::paper(Interpolator::Bilinear, "32x4".parse().unwrap(), 8);
+    println!();
+    for dev in [&gtx, &gts] {
+        let r = simulate(&launch, dev, None);
+        println!(
+            "simulate 800x800 x8 bilinear @32x4 on {:>8}: {:8.3} ms ({:.0} Mpix/s)",
+            dev.id,
+            r.ms,
+            r.mpix_per_s(&launch)
+        );
+    }
+
+    // 4. Portable tile over both devices (the paper's §V conclusion).
+    let tiles = paper_sweep_tiles();
+    let sweeps = vec![
+        sweep(&gtx, Interpolator::Bilinear, &tiles, 8, (800, 800)),
+        sweep(&gts, Interpolator::Bilinear, &tiles, 8, (800, 800)),
+    ];
+    let choice = portable_tile(&sweeps).expect("sweep non-empty");
+    println!(
+        "\nportable tile over {{gtx260, 8800gts}}: {} (worst-case regret {:.3}x)",
+        choice.tile, choice.worst_regret
+    );
+
+    // 5. Run a REAL resize through the AOT Pallas artifact, if present.
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(manifest) => {
+            let entry = manifest
+                .select(Interpolator::Bilinear, (64, 64), 2, 1, None)
+                .expect("64x64 s2 artifact");
+            let engine = Engine::cpu(manifest.clone())?;
+            let exe = engine.load(entry)?;
+            let img = generate::test_scene(64, 64, 42);
+            let out = exe.run(&[img.clone()])?.remove(0);
+            let want = tilekit::image::bilinear(&img, 2);
+            println!(
+                "\nAOT artifact '{}' on {}: out {}x{}, max|err| vs CPU ref = {:.2e}",
+                entry.name,
+                engine.platform(),
+                out.width(),
+                out.height(),
+                out.max_abs_diff(&want)
+            );
+            let out_path = std::env::temp_dir().join("tilekit_quickstart.pgm");
+            pnm::write_pgm(&out_path, &out)?;
+            println!("wrote {}", out_path.display());
+        }
+        Err(_) => println!("\n(no artifacts yet — run `make artifacts` for the AOT demo)"),
+    }
+    Ok(())
+}

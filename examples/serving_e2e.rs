@@ -1,0 +1,144 @@
+//! END-TO-END SYSTEM DRIVER (the repo's full-stack validation, recorded
+//! in EXPERIMENTS.md): loads the AOT Pallas artifacts built by `make
+//! artifacts`, starts the L3 coordinator with the PJRT backend, replays
+//! a mixed batched workload, verifies every response against the rust
+//! CPU reference, and reports latency percentiles + throughput — all
+//! three layers composing with Python nowhere on the request path.
+//!
+//! Run: `make artifacts && cargo run --release --example serving_e2e`
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{Coordinator, Router};
+use tilekit::image::{generate, Image};
+use tilekit::runtime::executor::EngineHandle;
+use tilekit::runtime::{Manifest, ResizeBackend};
+use tilekit::util::text::Table;
+use tilekit::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    println!(
+        "loaded manifest: {} artifacts, shapes: {:?}",
+        manifest.entries.len(),
+        manifest.shapes().len()
+    );
+
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+
+    let cfg = ServingConfig {
+        workers: 2,
+        batch_max: 4,
+        batch_deadline_ms: 1.5,
+        queue_cap: 256,
+        artifacts_dir: "artifacts".into(),
+    };
+    let router = Router::new(&manifest, None); // None => largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
+    let keys = router.keys();
+    let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(manifest.clone()));
+    let co = Coordinator::start(&cfg, router, backend);
+
+    // Warmup: each worker thread compiles artifacts on first use (the
+    // PJRT client is thread-local); warm every shape through every
+    // worker before the timed region so the numbers measure serving,
+    // not compilation.
+    let warm: Vec<_> = (0..2 * cfg.workers.max(1))
+        .flat_map(|_| {
+            keys.iter().map(|key| {
+                let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, 0);
+                co.submit_blocking(key.kernel, img, key.scale).expect("warm")
+            })
+        })
+        .collect();
+    for t in warm {
+        t.wait()?;
+    }
+
+    co.stats().reset();
+
+    // Mixed workload: random artifact shapes, deterministic images.
+    let mut rng = Pcg32::seeded(2010);
+    let workload: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let key = *rng.pick(&keys);
+            let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, rng.next_u64());
+            (key, img)
+        })
+        .collect();
+
+    println!(
+        "replaying {} requests over {} shapes (workers={}, batch_max={}) ...",
+        n_requests,
+        keys.len(),
+        cfg.workers,
+        cfg.batch_max
+    );
+    let t0 = Instant::now();
+    let tickets: Vec<_> = workload
+        .iter()
+        .map(|(key, img)| {
+            (
+                *key,
+                img.clone(),
+                co.submit_blocking(key.kernel, img.clone(), key.scale)
+                    .expect("admitted"),
+            )
+        })
+        .collect();
+
+    let mut verified = 0usize;
+    let mut max_err = 0f32;
+    for (key, img, ticket) in tickets {
+        let out: Image<f32> = ticket.wait()?;
+        // Verify against the rust CPU reference.
+        let want = key.kernel.run(&img, key.scale);
+        let err = out.max_abs_diff(&want);
+        max_err = max_err.max(err);
+        assert!(err < 2e-5, "response numerics drifted: {err}");
+        verified += 1;
+    }
+    let wall = t0.elapsed();
+    let stats = co.shutdown();
+
+    println!("\nall {verified} responses verified against the CPU reference (max|err| {max_err:.2e})\n");
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec![
+        "wall time".to_string(),
+        format!("{:.1} ms", wall.as_secs_f64() * 1e3),
+    ]);
+    t.row(vec![
+        "throughput".to_string(),
+        format!("{:.1} req/s", n_requests as f64 / wall.as_secs_f64()),
+    ]);
+    t.row(vec!["batches".to_string(), stats.batches.get().to_string()]);
+    t.row(vec![
+        "mean batch size".to_string(),
+        format!("{:.2}", stats.mean_batch()),
+    ]);
+    t.row(vec![
+        "latency p50".to_string(),
+        format!("{:.0} us", stats.latency.percentile_us(50.0)),
+    ]);
+    t.row(vec![
+        "latency p90".to_string(),
+        format!("{:.0} us", stats.latency.percentile_us(90.0)),
+    ]);
+    t.row(vec![
+        "latency p99".to_string(),
+        format!("{:.0} us", stats.latency.percentile_us(99.0)),
+    ]);
+    t.row(vec![
+        "queue wait p50".to_string(),
+        format!("{:.0} us", stats.queue_wait.percentile_us(50.0)),
+    ]);
+    print!("{}", t.render());
+    println!("\n{}", stats.summary());
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT pipeline: lower the L2 resize model to HLO **text** for every
+(kernel, src, scale, batch, tile) in the artifact matrix, write
+`artifacts/manifest.json`, and self-check one artifact's numerics against
+the jnp reference before declaring success.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--full]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import REFS
+from .model import example_input, make_resize, test_image
+
+# ---------------------------------------------------------------------------
+# The artifact matrix.
+#
+# Serving artifacts are deliberately small (64x64 / 128x128 sources): the
+# CPU PJRT testbed plays the role of the GPU, and the serving experiments
+# measure coordinator behaviour (batching, routing, backpressure), not
+# kernel FLOPs. `--full` adds the paper's 800x800 source at scale 2 for
+# the quickstart/e2e examples.
+#
+# Tiles: the portable winner 32x4 (y=4, x=32) plus an 8x8 variant so the
+# router has a real choice to make.
+# ---------------------------------------------------------------------------
+
+BASE_MATRIX = [
+    # (kernel, (src_h, src_w), scale, batch, (tile_h, tile_w))
+    ("bilinear", (64, 64), 2, 1, (4, 32)),
+    ("bilinear", (64, 64), 2, 4, (4, 32)),
+    ("bilinear", (64, 64), 2, 4, (8, 8)),
+    ("bilinear", (64, 64), 4, 1, (4, 32)),
+    ("bilinear", (64, 64), 4, 4, (4, 32)),
+    ("bilinear", (128, 128), 2, 1, (4, 32)),
+    ("bilinear", (128, 128), 2, 4, (4, 32)),
+    ("nearest", (64, 64), 2, 1, (4, 32)),
+    ("nearest", (64, 64), 2, 4, (4, 32)),
+    ("bicubic", (64, 64), 2, 1, (4, 32)),
+    ("bicubic", (64, 64), 2, 4, (4, 32)),
+    # CPU-tile ablation (EXPERIMENTS.md §Perf): the SAME kernel with
+    # progressively larger Pallas output tiles. 32x4 is the GPU-portable
+    # choice from the paper; on the CPU PJRT testbed fewer/larger grid
+    # steps win — the paper's "optimum does not transfer between devices"
+    # thesis, demonstrated on our own hardware pair (sim-GPU vs real CPU).
+    ("bilinear", (64, 64), 2, 4, (16, 128)),
+    ("bilinear", (64, 64), 2, 4, (128, 128)),
+]
+
+FULL_EXTRA = [
+    ("bilinear", (800, 800), 2, 1, (4, 32)),
+    ("bilinear", (800, 800), 2, 2, (4, 32)),
+]
+
+
+def full_matrix(base):
+    """The base matrix plus a whole-output-tile variant per entry — the
+    CPU-optimal tiles the router's largest-tile fallback selects
+    (EXPERIMENTS.md §Perf: 5.7x over the GPU-portable 32x4 on PJRT-CPU).
+    """
+    out = list(base)
+    seen = {(k, s, sc, b, t) for (k, s, sc, b, t) in base}
+    for kernel, src, scale, batch, _tile in base:
+        whole = (src[0] * scale, src[1] * scale)
+        row = (kernel, src, scale, batch, whole)
+        if row not in seen:
+            seen.add(row)
+            out.append(row)
+    return out
+
+
+def artifact_name(kernel, src, scale, batch, tile):
+    return f"{kernel}_s{scale}_b{batch}_t{tile[1]}x{tile[0]}_{src[0]}x{src[1]}"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kernel, src, scale, batch, tile) -> str:
+    fn = make_resize(kernel, scale, tile=tile, interpret=True)
+    spec = example_input(batch, src[0], src[1])
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def self_check(kernel, src, scale, batch, tile, atol=2e-5) -> float:
+    """Eager numeric check of the model (pallas interpret) vs the jnp
+    reference — the same oracle pytest sweeps more broadly."""
+    fn = make_resize(kernel, scale, tile=tile, interpret=True)
+    imgs = jnp.stack([test_image(src[0], src[1], seed=i) for i in range(batch)])
+    got = np.asarray(fn(imgs))
+    ref = np.stack([np.asarray(REFS[kernel](imgs[i], scale)) for i in range(batch)])
+    err = float(np.max(np.abs(got - ref)))
+    if err > atol:
+        raise AssertionError(
+            f"self-check failed for {artifact_name(kernel, src, scale, batch, tile)}: "
+            f"max |err| = {err}"
+        )
+    return err
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also lower the 800x800 paper-sized artifacts (slower)",
+    )
+    ap.add_argument(
+        "--skip-check", action="store_true", help="skip the numeric self-check"
+    )
+    args = ap.parse_args()
+
+    matrix = full_matrix(BASE_MATRIX) + (list(FULL_EXTRA) if args.full else [])
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for kernel, src, scale, batch, tile in matrix:
+        name = artifact_name(kernel, src, scale, batch, tile)
+        path = f"{name}.hlo.txt"
+        print(f"[aot] lowering {name} ...", flush=True)
+        text = lower_one(kernel, src, scale, batch, tile)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kernel": kernel,
+                "src": list(src),
+                "scale": scale,
+                "batch": batch,
+                "tile": list(tile),
+                "path": path,
+            }
+        )
+
+    if not args.skip_check:
+        # Check one representative per kernel (pytest covers the rest).
+        checked = set()
+        for kernel, src, scale, batch, tile in matrix:
+            if kernel in checked or src[0] > 128:
+                continue
+            err = self_check(kernel, src, scale, batch, tile)
+            print(f"[aot] self-check {kernel}: max |err| = {err:.2e}")
+            checked.add(kernel)
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: bilinear interpolation with a PER-TILE SOURCE
+WINDOW — the DESIGN.md §Hardware-Adaptation variant for sources too
+large to keep resident in VMEM.
+
+Instead of reading the whole source per program (`bilinear.py`), each
+program loads only the `(tile_h/scale + 2) x (tile_w/scale + 2)` window
+its output tile depends on, via a dynamic slice from the source ref.
+On a real TPU the source would sit in HBM (`memory_space=ANY`) and the
+slice becomes an async DMA into VMEM scratch; under interpret=True the
+dynamic slice exercises the same indexing logic, which is what the
+correctness tests pin down.
+
+The window start is clamped so the window never leaves the image;
+neighbour indices are then clamped *within* the window, preserving the
+border-clamp semantics of the resident-source kernel bit-for-bit.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = (4, 32)
+
+
+def _kernel(src_ref, out_ref, *, scale: int, tile: tuple, src_hw: tuple):
+    tile_h, tile_w = tile
+    h, w = src_hw
+    fdtype = out_ref.dtype
+
+    # Window geometry (static): the source span of one output tile plus
+    # a +2 halo (floor neighbour + right/bottom neighbour).
+    win_h = min(tile_h // scale + 2, h)
+    win_w = min(tile_w // scale + 2, w)
+
+    y0 = pl.program_id(0) * tile_h
+    x0 = pl.program_id(1) * tile_w
+
+    # Clamped window start in source coordinates.
+    ws_y = jnp.clip(y0 // scale, 0, h - win_h)
+    ws_x = jnp.clip(x0 // scale, 0, w - win_w)
+
+    # Load ONLY the window (dynamic slice; DMA on real hardware).
+    win = src_ref[pl.ds(ws_y, win_h), pl.ds(ws_x, win_w)]
+
+    yf = y0 + jax.lax.iota(jnp.int32, tile_h)
+    xf = x0 + jax.lax.iota(jnp.int32, tile_w)
+    yp = yf.astype(fdtype) / jnp.asarray(scale, fdtype)
+    xp = xf.astype(fdtype) / jnp.asarray(scale, fdtype)
+
+    y1 = jnp.floor(yp).astype(jnp.int32)
+    x1 = jnp.floor(xp).astype(jnp.int32)
+    off_y = (yp - y1.astype(fdtype))[:, None]
+    off_x = (xp - x1.astype(fdtype))[None, :]
+
+    # Global clamp first (border semantics), then window-relative.
+    y1g = jnp.clip(y1, 0, h - 1)
+    y2g = jnp.clip(y1 + 1, 0, h - 1)
+    x1g = jnp.clip(x1, 0, w - 1)
+    x2g = jnp.clip(x1 + 1, 0, w - 1)
+    y1r = jnp.clip(y1g - ws_y, 0, win_h - 1)
+    y2r = jnp.clip(y2g - ws_y, 0, win_h - 1)
+    x1r = jnp.clip(x1g - ws_x, 0, win_w - 1)
+    x2r = jnp.clip(x2g - ws_x, 0, win_w - 1)
+
+    f11 = win[y1r[:, None], x1r[None, :]]
+    f21 = win[y1r[:, None], x2r[None, :]]
+    f12 = win[y2r[:, None], x1r[None, :]]
+    f22 = win[y2r[:, None], x2r[None, :]]
+
+    top = off_x * f21 + (1.0 - off_x) * f11
+    bot = off_x * f22 + (1.0 - off_x) * f12
+    out_ref[...] = (1.0 - off_y) * top + off_y * bot
+
+
+def bilinear_windowed_pallas(src, scale: int, tile=DEFAULT_TILE, interpret: bool = True):
+    """Bilinear upscale with per-tile source windows.
+
+    Requires the output tile dims to be multiples of `scale` (so each
+    tile's source window is rectangular); falls back is the caller's
+    concern — `window_supported` reports the constraint.
+    """
+    h, w = src.shape
+    oh, ow = h * scale, w * scale
+    tile_h = min(tile[0], oh)
+    tile_w = min(tile[1], ow)
+    if tile_h % scale != 0 and tile_h < oh:
+        raise ValueError(f"tile_h {tile_h} must be a multiple of scale {scale}")
+    if tile_w % scale != 0 and tile_w < ow:
+        raise ValueError(f"tile_w {tile_w} must be a multiple of scale {scale}")
+    grid = (pl.cdiv(oh, tile_h), pl.cdiv(ow, tile_w))
+    kernel = functools.partial(
+        _kernel, scale=scale, tile=(tile_h, tile_w), src_hw=(h, w)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((h, w), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((tile_h, tile_w), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), src.dtype),
+        interpret=interpret,
+    )(src)
+
+
+def window_supported(scale: int, tile=DEFAULT_TILE) -> bool:
+    """Can this (scale, tile) use the windowed kernel?"""
+    return tile[0] % scale == 0 and tile[1] % scale == 0

@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: nearest-neighbour interpolation (1 tap).
+
+Same output-tiling skeleton as `bilinear.py`; the cheapest kernel, used
+as the baseline in the kernel-cost ablation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = (4, 32)
+
+
+def _nearest_kernel(src_ref, out_ref, *, scale: int, tile: tuple):
+    tile_h, tile_w = tile
+    src = src_ref[...]
+    h, w = src.shape
+    fdtype = src.dtype
+
+    y0 = pl.program_id(0) * tile_h
+    x0 = pl.program_id(1) * tile_w
+    yf = y0 + jax.lax.iota(jnp.int32, tile_h)
+    xf = x0 + jax.lax.iota(jnp.int32, tile_w)
+
+    # round-half-up of the logical coordinate (matches ref + rust)
+    yp = jnp.floor(yf.astype(fdtype) / jnp.asarray(scale, fdtype) + jnp.asarray(0.5, fdtype)).astype(jnp.int32)
+    xp = jnp.floor(xf.astype(fdtype) / jnp.asarray(scale, fdtype) + jnp.asarray(0.5, fdtype)).astype(jnp.int32)
+    ypc = jnp.clip(yp, 0, h - 1)
+    xpc = jnp.clip(xp, 0, w - 1)
+    out_ref[...] = src[ypc[:, None], xpc[None, :]]
+
+
+def nearest_pallas(src, scale: int, tile=DEFAULT_TILE, interpret: bool = True):
+    """Nearest-neighbour upscale of a [H, W] array by integer `scale`."""
+    h, w = src.shape
+    oh, ow = h * scale, w * scale
+    tile_h = min(tile[0], oh)
+    tile_w = min(tile[1], ow)
+    grid = (pl.cdiv(oh, tile_h), pl.cdiv(ow, tile_w))
+    kernel = functools.partial(_nearest_kernel, scale=scale, tile=(tile_h, tile_w))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((h, w), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((tile_h, tile_w), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), src.dtype),
+        interpret=interpret,
+    )(src)

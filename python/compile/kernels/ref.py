@@ -1,0 +1,102 @@
+"""Pure-jnp reference interpolators — the correctness oracle for the
+Pallas kernels (L1) and, transitively, for the whole AOT path: pytest
+checks kernel-vs-ref, and the rust integration tests check the compiled
+artifacts against `image::interpolate` which implements the same math.
+
+The math is the paper's §II.B, equations (1)-(5):
+    x_p = x_f / scale                          (1)
+    x1 = int(x_p), x2 = x1 + 1  (clamped)      (2)(3)
+    offX = x_p - x1, offY = y_p - y1           (4)
+    f = (1-offY)(offX·f21 + (1-offX)·f11)
+      +    offY (offX·f22 + (1-offX)·f12)      (5)
+
+Boundary convention: neighbour coordinates clamp to the image border
+(identical to `Image::get_clamped` on the rust side).
+"""
+
+import jax.numpy as jnp
+
+
+def _logical_coords(out_len: int, scale: int, dtype=jnp.float32):
+    """Paper eq. (1): terminal -> logical coordinate along one axis."""
+    return jnp.arange(out_len, dtype=dtype) / dtype(scale)
+
+
+def nearest_ref(src, scale: int):
+    """Nearest-neighbour upscale of a [H, W] image by integer `scale`.
+
+    Rounds half-up (matching the rust reference's `(x_p + 0.5) as int`).
+    """
+    h, w = src.shape
+    yp = jnp.floor(_logical_coords(h * scale, scale) + 0.5).astype(jnp.int32)
+    xp = jnp.floor(_logical_coords(w * scale, scale) + 0.5).astype(jnp.int32)
+    yp = jnp.clip(yp, 0, h - 1)
+    xp = jnp.clip(xp, 0, w - 1)
+    return src[yp[:, None], xp[None, :]]
+
+
+def bilinear_ref(src, scale: int):
+    """Bilinear upscale of a [H, W] image by integer `scale` — eqs (1)-(5)."""
+    h, w = src.shape
+    yp = _logical_coords(h * scale, scale)
+    xp = _logical_coords(w * scale, scale)
+    y1 = jnp.floor(yp).astype(jnp.int32)
+    x1 = jnp.floor(xp).astype(jnp.int32)
+    off_y = (yp - y1.astype(yp.dtype))[:, None]
+    off_x = (xp - x1.astype(xp.dtype))[None, :]
+
+    y1c = jnp.clip(y1, 0, h - 1)
+    y2c = jnp.clip(y1 + 1, 0, h - 1)
+    x1c = jnp.clip(x1, 0, w - 1)
+    x2c = jnp.clip(x1 + 1, 0, w - 1)
+
+    f11 = src[y1c[:, None], x1c[None, :]]
+    f21 = src[y1c[:, None], x2c[None, :]]
+    f12 = src[y2c[:, None], x1c[None, :]]
+    f22 = src[y2c[:, None], x2c[None, :]]
+
+    top = off_x * f21 + (1.0 - off_x) * f11
+    bot = off_x * f22 + (1.0 - off_x) * f12
+    return (1.0 - off_y) * top + off_y * bot
+
+
+def _cubic_weight(t):
+    """Catmull-Rom weight (a = -0.5), matching the rust reference."""
+    a = -0.5
+    t = jnp.abs(t)
+    w1 = (a + 2.0) * t**3 - (a + 3.0) * t**2 + 1.0
+    w2 = a * t**3 - 5.0 * a * t**2 + 8.0 * a * t - 4.0 * a
+    return jnp.where(t <= 1.0, w1, jnp.where(t < 2.0, w2, 0.0))
+
+
+def bicubic_ref(src, scale: int):
+    """Bicubic (Catmull-Rom, 16-tap) upscale with border clamping and
+    weight renormalization (identical to the rust reference)."""
+    h, w = src.shape
+    yp = _logical_coords(h * scale, scale)
+    xp = _logical_coords(w * scale, scale)
+    y1 = jnp.floor(yp).astype(jnp.int32)
+    x1 = jnp.floor(xp).astype(jnp.int32)
+    fy = (yp - y1.astype(yp.dtype))[:, None]
+    fx = (xp - x1.astype(xp.dtype))[None, :]
+
+    acc = jnp.zeros((h * scale, w * scale), dtype=src.dtype)
+    wsum = jnp.zeros_like(acc)
+    for dy in (-1, 0, 1, 2):
+        wy = _cubic_weight(fy - dy)
+        yc = jnp.clip(y1 + dy, 0, h - 1)
+        for dx in (-1, 0, 1, 2):
+            wx = _cubic_weight(fx - dx)
+            xc = jnp.clip(x1 + dx, 0, w - 1)
+            tap = src[yc[:, None], xc[None, :]]
+            wgt = wy * wx
+            acc = acc + wgt * tap
+            wsum = wsum + wgt
+    return acc / wsum
+
+
+REFS = {
+    "nearest": nearest_ref,
+    "bilinear": bilinear_ref,
+    "bicubic": bicubic_ref,
+}

@@ -1,0 +1,64 @@
+"""L2: the JAX resize model — the compute graph the rust coordinator
+executes through PJRT.
+
+`make_resize` builds a jittable function over a static (kernel, scale,
+tile, batch): input [B, H, W] f32, output [B, H*s, W*s] f32. The batch
+dimension is vmapped over the L1 Pallas kernel so the whole batch lowers
+into ONE fused HLO module — the unit the coordinator's dynamic batcher
+schedules.
+
+Build-time only; never imported on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bicubic import bicubic_pallas
+from .kernels.bilinear import bilinear_pallas
+from .kernels.nearest import nearest_pallas
+
+KERNELS = {
+    "nearest": nearest_pallas,
+    "bilinear": bilinear_pallas,
+    "bicubic": bicubic_pallas,
+}
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def make_resize(kernel: str, scale: int, tile=(4, 32), interpret: bool = True):
+    """A function [B, H, W] -> [B, H*scale, W*scale] for one kernel/tile.
+
+    Returns a plain python callable (jit-compatible); `aot.py` lowers it,
+    pytest calls it eagerly.
+    """
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel '{kernel}' (have {sorted(KERNELS)})")
+    if scale < 1:
+        raise ValueError("scale must be >= 1")
+    kfn = KERNELS[kernel]
+
+    def resize_batch(batch):
+        if batch.ndim != 3:
+            raise ValueError(f"expected [B, H, W], got shape {batch.shape}")
+        single = functools.partial(kfn, scale=scale, tile=tile, interpret=interpret)
+        return jax.vmap(single)(batch)
+
+    return resize_batch
+
+
+def example_input(batch: int, h: int, w: int, dtype=jnp.float32):
+    """The ShapeDtypeStruct `aot.py` lowers against."""
+    return jax.ShapeDtypeStruct((batch, h, w), dtype)
+
+
+def test_image(h: int, w: int, seed: int = 0, dtype=jnp.float32):
+    """A deterministic synthetic test image (gradient + sinusoidal
+    texture), value range [0, 1]. Used by pytest and by aot self-checks."""
+    ys = jnp.linspace(0.0, 1.0, h, dtype=dtype)[:, None]
+    xs = jnp.linspace(0.0, 1.0, w, dtype=dtype)[None, :]
+    tex = 0.5 + 0.5 * jnp.sin(12.3 * xs + 7.1 * ys + float(seed))
+    img = 0.6 * (0.5 * xs + 0.5 * ys) + 0.4 * tex
+    return jnp.clip(img, 0.0, 1.0)

@@ -1,0 +1,117 @@
+"""L1 performance estimation for TPU targets: VMEM footprint and VPU
+lane utilization per (kernel, tile, source, scale) design point.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the
+Pallas perf story is structural: does the working set fit VMEM, are the
+lanes full, how many HBM bytes move per output pixel. These estimates
+feed EXPERIMENTS.md §Perf (L1) and mirror the paper's occupancy-style
+reasoning on the TPU side (DESIGN.md §Hardware-Adaptation).
+
+Run as a module for the report:  python -m compile.vmem
+"""
+
+from dataclasses import dataclass
+
+# TPU-v4-ish constants (order-of-magnitude; the report states them).
+VMEM_BYTES = 16 * 1024 * 1024
+LANES = 128  # vector lane width (f32)
+SUBLANES = 8  # vreg sublanes
+
+
+TAPS = {"nearest": 1, "bilinear": 4, "bicubic": 16}
+
+
+@dataclass
+class L1Estimate:
+    kernel: str
+    tile: tuple  # (tile_h, tile_w) output tile
+    src: tuple  # (h, w)
+    scale: int
+    windowed: bool
+
+    @property
+    def out_tile_bytes(self) -> int:
+        return self.tile[0] * self.tile[1] * 4
+
+    @property
+    def src_resident_bytes(self) -> int:
+        """Source bytes resident per program."""
+        if self.windowed:
+            wh = self.tile[0] // self.scale + 2
+            ww = self.tile[1] // self.scale + 2
+            return wh * ww * 4
+        return self.src[0] * self.src[1] * 4
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Working set per program: source (full or window) + out tile
+        (double-buffered) + index/offset vectors."""
+        index_vectors = 6 * self.tile[1] * 4 + 6 * self.tile[0] * 4
+        return self.src_resident_bytes + 2 * self.out_tile_bytes + index_vectors
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def lane_utilization(self) -> float:
+        """Fraction of the 128-lane vector unit used by the minor (x)
+        axis of the output tile — the paper's coalescing story mapped to
+        lanes (DESIGN.md §Hardware-Adaptation)."""
+        minor = self.tile[1]
+        used = minor % LANES or LANES
+        if minor >= LANES:
+            # full vregs plus a possibly partial tail
+            full = minor // LANES
+            return (full * LANES + (minor % LANES)) / ((full + (1 if minor % LANES else 0)) * LANES)
+        return used / LANES
+
+    @property
+    def hbm_bytes_per_out_px(self) -> float:
+        """HBM traffic per output pixel: the out store plus the source
+        window amortized over the tile (windowed) or the full source
+        amortized over the whole output (resident)."""
+        out_px = self.tile[0] * self.tile[1]
+        if self.windowed:
+            return 4.0 + self.src_resident_bytes / out_px
+        total_out = self.src[0] * self.src[1] * self.scale * self.scale
+        return 4.0 + (self.src[0] * self.src[1] * 4) / total_out
+
+    def row(self):
+        return [
+            self.kernel,
+            f"{self.tile[1]}x{self.tile[0]}",
+            "window" if self.windowed else "resident",
+            f"{self.vmem_bytes / 1024:.1f} KiB",
+            "yes" if self.fits_vmem else "NO",
+            f"{self.lane_utilization * 100:.0f}%",
+            f"{self.hbm_bytes_per_out_px:.2f}",
+        ]
+
+
+def report(rows=None):
+    """Print the L1 estimate table used in EXPERIMENTS.md §Perf."""
+    rows = rows or default_design_points()
+    header = ["kernel", "tile(WxH)", "source", "VMEM/prog", "fits", "lanes", "HBM B/px"]
+    widths = [max(len(header[i]), max(len(r[i]) for r in rows)) for i in range(len(header))]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    print(fmt.format(*header))
+    print("-" * (sum(widths) + 2 * (len(widths) - 1)))
+    for r in rows:
+        print(fmt.format(*r))
+
+
+def default_design_points():
+    pts = []
+    for tile in [(4, 32), (8, 8), (8, 128), (16, 256)]:
+        for windowed in (False, True):
+            e = L1Estimate("bilinear", tile, (800, 800), 8, windowed)
+            pts.append(e.row())
+    # the paper-size source, resident vs windowed at the big tile
+    pts.append(L1Estimate("bilinear", (8, 128), (4096, 4096), 2, False).row())
+    pts.append(L1Estimate("bilinear", (8, 128), (4096, 4096), 2, True).row())
+    return pts
+
+
+if __name__ == "__main__":
+    report()

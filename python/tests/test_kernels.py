@@ -1,0 +1,177 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Every Pallas kernel (interpret=True) is checked against the pure-jnp
+oracle in `compile.kernels.ref` across shapes, scales, tiles, and dtypes
+— both with fixed paper-relevant cases and hypothesis sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bicubic import bicubic_pallas
+from compile.kernels.bilinear import bilinear_pallas
+from compile.kernels.nearest import nearest_pallas
+from compile.kernels.ref import REFS, bilinear_ref
+from compile.model import test_image as make_test_image
+
+KERNELS = {
+    "nearest": nearest_pallas,
+    "bilinear": bilinear_pallas,
+    "bicubic": bicubic_pallas,
+}
+
+TOL = {"nearest": 0.0, "bilinear": 2e-6, "bicubic": 5e-6}
+
+
+def check(kernel_name, h, w, scale, tile, seed=0, dtype=jnp.float32, tol=None):
+    img = make_test_image(h, w, seed=seed).astype(dtype)
+    got = np.asarray(KERNELS[kernel_name](img, scale, tile=tile))
+    ref = np.asarray(REFS[kernel_name](img, scale))
+    assert got.shape == (h * scale, w * scale)
+    err = float(np.max(np.abs(got.astype(np.float32) - ref.astype(np.float32))))
+    limit = tol if tol is not None else TOL[kernel_name]
+    assert err <= limit, f"{kernel_name} {h}x{w} s{scale} t{tile}: err {err}"
+
+
+# ---------------------------------------------------------------------------
+# Fixed cases: the paper's named tiles on small analogues of its workload.
+# ---------------------------------------------------------------------------
+
+PAPER_TILES = [(4, 32), (8, 8), (16, 16), (8, 4), (4, 8), (16, 32)]
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+@pytest.mark.parametrize("tile", PAPER_TILES)
+def test_paper_tiles(kernel, tile):
+    check(kernel, 32, 32, 2, tile)
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+@pytest.mark.parametrize("scale", [1, 2, 4, 6, 8, 10])
+def test_paper_scales(kernel, scale):
+    # 80x80 is the 1/10-size analogue of the paper's 800x800 source.
+    check(kernel, 80, 80, scale, (4, 32))
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_ragged_tiles(kernel):
+    # Output 66x66 does not divide 4x32 tiles: Pallas masks the edge.
+    check(kernel, 33, 33, 2, (4, 32))
+
+
+@pytest.mark.parametrize("kernel", sorted(KERNELS))
+def test_tile_bigger_than_output(kernel):
+    check(kernel, 8, 8, 2, (64, 64))
+
+
+def test_bf16_bilinear():
+    # bf16 has ~3 decimal digits; tolerance scaled accordingly.
+    check("bilinear", 32, 32, 2, (4, 32), dtype=jnp.bfloat16, tol=0.02)
+
+
+def test_tile_variants_bitwise_equal():
+    # Tiling must not change numerics (the property the paper's timing
+    # comparison implicitly relies on).
+    img = make_test_image(40, 40, seed=3)
+    a = np.asarray(bilinear_pallas(img, 4, tile=(4, 32)))
+    b = np.asarray(bilinear_pallas(img, 4, tile=(8, 8)))
+    c = np.asarray(bilinear_pallas(img, 4, tile=(16, 4)))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+
+
+def test_scale_one_is_identity():
+    img = make_test_image(24, 24)
+    for k in ("nearest", "bilinear"):
+        out = np.asarray(KERNELS[k](img, 1))
+        np.testing.assert_allclose(out, np.asarray(img), atol=1e-6)
+
+
+def test_constant_image_invariant():
+    img = jnp.full((16, 16), 0.37, dtype=jnp.float32)
+    for k, fn in KERNELS.items():
+        out = np.asarray(fn(img, 4))
+        np.testing.assert_allclose(out, 0.37, atol=1e-5, err_msg=k)
+
+
+def test_bilinear_midpoint_average():
+    # [0, 1] row at scale 2: x_f=1 -> x_p=0.5 -> exact average.
+    img = jnp.array([[0.0, 1.0]], dtype=jnp.float32)
+    out = np.asarray(bilinear_pallas(img, 2, tile=(1, 4)))
+    np.testing.assert_allclose(out[0], [0.0, 0.5, 1.0, 1.0], atol=1e-7)
+
+
+def test_rejects_bad_args():
+    from compile.model import make_resize
+
+    with pytest.raises(ValueError):
+        make_resize("sinc", 2)
+    with pytest.raises(ValueError):
+        make_resize("bilinear", 0)
+    fn = make_resize("bilinear", 2)
+    with pytest.raises(ValueError):
+        fn(jnp.zeros((4, 4)))  # missing batch dim
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps.
+# ---------------------------------------------------------------------------
+
+shape_st = st.tuples(st.integers(2, 40), st.integers(2, 40))
+scale_st = st.integers(1, 8)
+tile_st = st.tuples(
+    st.sampled_from([1, 2, 4, 8, 16, 32]), st.sampled_from([1, 2, 4, 8, 16, 32])
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(shape=shape_st, scale=scale_st, tile=tile_st, seed=st.integers(0, 10))
+def test_hypothesis_bilinear(shape, scale, tile, seed):
+    check("bilinear", shape[0], shape[1], scale, tile, seed=seed)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_st, scale=scale_st, tile=tile_st)
+def test_hypothesis_nearest(shape, scale, tile):
+    check("nearest", shape[0], shape[1], scale, tile)
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=st.tuples(st.integers(4, 24), st.integers(4, 24)), scale=st.integers(1, 4))
+def test_hypothesis_bicubic(shape, scale):
+    check("bicubic", shape[0], shape[1], scale, (4, 32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.tuples(st.integers(2, 24), st.integers(2, 24)),
+    scale=st.integers(1, 6),
+    seed=st.integers(0, 100),
+)
+def test_hypothesis_bilinear_bounds_and_samples(shape, scale, seed):
+    """Structural properties, independent of the reference: outputs stay
+    in the input range and reproduce the source at sample points."""
+    h, w = shape
+    img = make_test_image(h, w, seed=seed)
+    out = np.asarray(bilinear_pallas(img, scale, tile=(4, 32)))
+    src = np.asarray(img)
+    assert out.min() >= src.min() - 1e-6
+    assert out.max() <= src.max() + 1e-6
+    np.testing.assert_allclose(out[::scale, ::scale], src, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.integers(1, 4), batch=st.integers(1, 5))
+def test_hypothesis_vmap_batch_consistency(scale, batch):
+    """The batched L2 model must equal per-image kernel calls."""
+    from compile.model import make_resize
+
+    imgs = jnp.stack([make_test_image(16, 16, seed=i) for i in range(batch)])
+    fn = make_resize("bilinear", scale)
+    got = np.asarray(fn(imgs))
+    for i in range(batch):
+        ref = np.asarray(bilinear_ref(imgs[i], scale))
+        np.testing.assert_allclose(got[i], ref, atol=2e-6)

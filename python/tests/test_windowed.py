@@ -1,0 +1,88 @@
+"""Windowed-kernel correctness: the per-tile source-window variant must
+agree exactly with the resident-source kernel and the jnp oracle, plus
+the VMEM estimator's structural claims."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bilinear import bilinear_pallas
+from compile.kernels.bilinear_windowed import (
+    bilinear_windowed_pallas,
+    window_supported,
+)
+from compile.kernels.ref import bilinear_ref
+from compile.model import test_image as make_test_image
+from compile.vmem import L1Estimate
+
+
+@pytest.mark.parametrize("scale", [1, 2, 4])
+@pytest.mark.parametrize("tile", [(4, 32), (8, 8), (16, 16)])
+def test_windowed_matches_ref(scale, tile):
+    if not window_supported(scale, tile):
+        pytest.skip("tile not divisible by scale")
+    img = make_test_image(32, 32, seed=1)
+    got = np.asarray(bilinear_windowed_pallas(img, scale, tile=tile))
+    ref = np.asarray(bilinear_ref(img, scale))
+    np.testing.assert_allclose(got, ref, atol=2e-6)
+
+
+def test_windowed_matches_resident_bitwise():
+    img = make_test_image(48, 48, seed=2)
+    a = np.asarray(bilinear_windowed_pallas(img, 4, tile=(4, 32)))
+    b = np.asarray(bilinear_pallas(img, 4, tile=(4, 32)))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_rejects_non_divisible_tile():
+    img = make_test_image(16, 16)
+    with pytest.raises(ValueError):
+        bilinear_windowed_pallas(img, 3, tile=(4, 32))
+    assert not window_supported(3, (4, 32))
+    assert window_supported(4, (4, 32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    hw=st.tuples(st.integers(8, 40), st.integers(8, 40)),
+    scale=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 50),
+)
+def test_hypothesis_windowed(hw, scale, seed):
+    img = make_test_image(hw[0], hw[1], seed=seed)
+    got = np.asarray(bilinear_windowed_pallas(img, scale, tile=(4, 32)))
+    ref = np.asarray(bilinear_ref(img, scale))
+    np.testing.assert_allclose(got, ref, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# VMEM estimator structure
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_resident_vs_windowed():
+    resident = L1Estimate("bilinear", (8, 128), (4096, 4096), 2, windowed=False)
+    windowed = L1Estimate("bilinear", (8, 128), (4096, 4096), 2, windowed=True)
+    # A 4096^2 f32 source (64 MiB) cannot stay resident; the window can.
+    assert not resident.fits_vmem
+    assert windowed.fits_vmem
+    assert windowed.vmem_bytes < resident.vmem_bytes
+
+
+def test_vmem_paper_source_fits_resident():
+    e = L1Estimate("bilinear", (4, 32), (800, 800), 8, windowed=False)
+    assert e.fits_vmem  # 2.56 MB source + tiles < 16 MiB
+
+
+def test_lane_utilization_favors_wide_tiles():
+    narrow = L1Estimate("bilinear", (32, 8), (800, 800), 2, windowed=True)
+    wide = L1Estimate("bilinear", (2, 128), (800, 800), 2, windowed=True)
+    assert wide.lane_utilization == 1.0
+    assert narrow.lane_utilization < 0.1
+
+
+def test_hbm_bytes_per_px_decrease_with_scale_amortization():
+    small_tile = L1Estimate("bilinear", (4, 32), (800, 800), 8, windowed=True)
+    big_tile = L1Estimate("bilinear", (16, 256), (800, 800), 8, windowed=True)
+    assert big_tile.hbm_bytes_per_out_px < small_tile.hbm_bytes_per_out_px

@@ -1,0 +1,101 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. Coalescing model: run the 8800 GTS with cc1.3-style segmented
+//!    coalescing ("what if G80 had GT200's memory system?") — isolates
+//!    how much of the device gap is coalescing vs clocks/SM count.
+//! 2. Row-penalty term: disable it and watch the 32×4-vs-taller ordering
+//!    collapse — shows the Fig. 4 mechanism carries the large-scale
+//!    findings.
+//! 3. Kernel cost: nearest vs bilinear vs bicubic across the sweep (tile
+//!    sensitivity grows with taps).
+//! 4. Smoothness metric: relative spread vs absolute range per device
+//!    (the §IV.B reading; see DESIGN.md).
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use tilekit::autotuner::sweep;
+use tilekit::device::{paper_pair, CoalescingModel};
+use tilekit::image::Interpolator;
+use tilekit::sim::{simulate, Launch};
+use tilekit::tiling::paper_sweep_tiles;
+use tilekit::util::text::{fmt_ms, Table};
+
+fn main() {
+    let (gtx, gts) = paper_pair();
+    let tiles = paper_sweep_tiles();
+
+    // ---- 1. coalescing ablation ---------------------------------------
+    println!("=== ablation 1: give the 8800 GTS segmented (cc1.3) coalescing ===\n");
+    let mut gts_seg = gts.clone();
+    gts_seg.cc.coalescing = CoalescingModel::SegmentedHalfWarp;
+    gts_seg.id = "8800gts+seg".into();
+    let mut t = Table::new(vec!["tile", "8800gts ms", "8800gts+seg ms", "speedup"]);
+    for &tile in &tiles {
+        let l = Launch::paper(Interpolator::Bilinear, tile, 4);
+        let a = simulate(&l, &gts, None).ms;
+        let b = simulate(&l, &gts_seg, None).ms;
+        t.row(vec![
+            tile.label(),
+            fmt_ms(a),
+            fmt_ms(b),
+            format!("{:.2}x", a / b),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- 2. row-penalty ablation ---------------------------------------
+    println!("\n=== ablation 2: disable the row-switch penalty (Fig. 4 mechanism) ===\n");
+    let mut gtx_norow = gtx.clone();
+    gtx_norow.row_switch_cycles = 0.0;
+    gtx_norow.id = "gtx260-norow".into();
+    for scale in [2, 10] {
+        let with_pen = sweep(&gtx, Interpolator::Bilinear, &tiles, scale, (800, 800));
+        let without = sweep(&gtx_norow, Interpolator::Bilinear, &tiles, scale, (800, 800));
+        println!(
+            "scale {scale}: best with penalty = {}, without = {}",
+            with_pen.best().unwrap().tile,
+            without.best().unwrap().tile
+        );
+    }
+
+    // ---- 3. kernel cost ablation ----------------------------------------
+    println!("\n=== ablation 3: kernel tap count vs tile sensitivity (gtx260, s6) ===\n");
+    let mut t = Table::new(vec!["kernel", "best tile", "best ms", "range ms"]);
+    for kernel in [
+        Interpolator::Nearest,
+        Interpolator::Bilinear,
+        Interpolator::Bicubic,
+    ] {
+        let r = sweep(&gtx, kernel, &tiles, 6, (800, 800));
+        let best = r.best().unwrap();
+        t.row(vec![
+            kernel.label().to_string(),
+            best.tile.label(),
+            fmt_ms(best.report.ms),
+            format!("{:.3}", r.range_ms()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // ---- 4. smoothness metrics -------------------------------------------
+    println!("\n=== ablation 4: relative spread vs absolute range (§IV.B reading) ===\n");
+    let mut t = Table::new(vec![
+        "scale",
+        "gtx260 rel",
+        "8800gts rel",
+        "gtx260 range ms",
+        "8800gts range ms",
+    ]);
+    for scale in [2u32, 4, 6, 8, 10] {
+        let a = sweep(&gtx, Interpolator::Bilinear, &tiles, scale, (800, 800));
+        let b = sweep(&gts, Interpolator::Bilinear, &tiles, scale, (800, 800));
+        t.row(vec![
+            scale.to_string(),
+            format!("{:.3}", a.spread_ratio()),
+            format!("{:.3}", b.spread_ratio()),
+            format!("{:.3}", a.range_ms()),
+            format!("{:.3}", b.range_ms()),
+        ]);
+    }
+    print!("{}", t.render());
+}

@@ -1,0 +1,123 @@
+//! Bench: **end-to-end serving** over real AOT artifacts — the system
+//! validation workload. Loads the manifest, starts the coordinator with
+//! the PJRT backend, replays a mixed request stream, and reports
+//! latency percentiles + throughput. Also sweeps batch_max to show the
+//! dynamic batcher's effect (the ablation recorded in EXPERIMENTS.md).
+//!
+//! Requires `make artifacts`; falls back to the mock backend with a
+//! loud note when artifacts are absent (so `cargo bench` never breaks).
+//!
+//! Run: `cargo bench --bench e2e_serving`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{Coordinator, Router};
+use tilekit::image::generate;
+use tilekit::runtime::executor::EngineHandle;
+use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
+use tilekit::util::text::Table;
+use tilekit::util::Pcg32;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (manifest, backend, backend_name): (Manifest, Arc<dyn ResizeBackend>, &str) =
+        match Manifest::load(&dir) {
+            Ok(m) => {
+                let h: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m.clone()));
+                (m, h, "pjrt-cpu")
+            }
+            Err(e) => {
+                eprintln!("NOTE: artifacts unavailable ({e}); using mock backend");
+                let m = Manifest::parse(
+                    r#"{"version":1,"artifacts":[
+                        {"name":"bl_s2_b4","kernel":"bilinear","src":[64,64],
+                         "scale":2,"batch":4,"tile":[4,32],"path":"x"}]}"#,
+                    dir,
+                )
+                .unwrap();
+                (m.clone(), Arc::new(MockEngine::new()), "mock")
+            }
+        };
+
+    let n_requests: usize = std::env::var("TILEKIT_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    println!("=== e2e serving over {backend_name}: {n_requests} requests ===\n");
+    let mut table = Table::new(vec![
+        "batch_max",
+        "workers",
+        "wall ms",
+        "req/s",
+        "mean batch",
+        "p50 us",
+        "p99 us",
+    ]);
+    for (batch_max, workers) in [(1usize, 1usize), (1, 2), (4, 1), (4, 2), (8, 2)] {
+        let cfg = ServingConfig {
+            workers,
+            batch_max,
+            batch_deadline_ms: 1.0,
+            queue_cap: 512,
+            artifacts_dir: "artifacts".into(),
+        };
+        let router = Router::new(&manifest, None); // None => largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
+        let keys = router.keys();
+        let co = Coordinator::start(&cfg, router, Arc::clone(&backend));
+        // Warmup outside the timed region: every worker thread compiles
+        // its artifacts on first use (the PJRT client is thread-local);
+        // drive enough requests through each shape to warm all workers.
+        for _ in 0..workers.max(2) {
+            let warm: Vec<_> = keys
+                .iter()
+                .flat_map(|key| {
+                    (0..batch_max).map(|_| {
+                        let img =
+                            generate::test_scene(key.src.1 as usize, key.src.0 as usize, 0);
+                        co.submit_blocking(key.kernel, img, key.scale).unwrap()
+                    })
+                })
+                .collect();
+            for t in warm {
+                t.wait().unwrap();
+            }
+        }
+        co.stats().reset();
+        let mut rng = Pcg32::seeded(7);
+        // Pre-generate request images outside the timed region.
+        let reqs: Vec<_> = (0..n_requests)
+            .map(|_| {
+                let key = *rng.pick(&keys);
+                let img =
+                    generate::test_scene(key.src.1 as usize, key.src.0 as usize, rng.next_u64());
+                (key, img)
+            })
+            .collect();
+        let t0 = Instant::now();
+        let tickets: Vec<_> = reqs
+            .into_iter()
+            .map(|(key, img)| {
+                co.submit_blocking(key.kernel, img, key.scale)
+                    .expect("admitted")
+            })
+            .collect();
+        for t in tickets {
+            t.wait().expect("completed");
+        }
+        let wall = t0.elapsed();
+        let stats = co.shutdown();
+        table.row(vec![
+            batch_max.to_string(),
+            workers.to_string(),
+            format!("{:.1}", wall.as_secs_f64() * 1e3),
+            format!("{:.0}", n_requests as f64 / wall.as_secs_f64()),
+            format!("{:.2}", stats.mean_batch()),
+            format!("{:.0}", stats.latency.percentile_us(50.0)),
+            format!("{:.0}", stats.latency.percentile_us(99.0)),
+        ]);
+    }
+    print!("{}", table.render());
+}

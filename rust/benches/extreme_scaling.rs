@@ -1,0 +1,62 @@
+//! Bench: the paper's **§IV.C extreme example** — G1 (2 SMs / 16 cores)
+//! vs G2 (20 SMs / 160 cores) with a tile that halves one SM's
+//! efficiency; the total efficiency loss should dilute ~1/4 → ~1/40.
+//! Extended with a straggler-speed sweep and an SM-count scaling curve.
+//!
+//! Run: `cargo bench --bench extreme_scaling`.
+
+use tilekit::bench::figures::extreme_example;
+use tilekit::bench::Bench;
+use tilekit::device::find_device;
+use tilekit::image::Interpolator;
+use tilekit::sim::{simulate, Launch, Straggler};
+use tilekit::util::text::Table;
+
+fn main() {
+    println!("=== §IV.C extreme example (paper: 1/4 vs 1/40) ===\n");
+    print!("{}", extreme_example().render());
+
+    // Extension: the dilution curve across SM counts.
+    println!("\n=== dilution vs SM count (extension) ===\n");
+    let base = find_device("g2").unwrap();
+    let l = Launch::paper(Interpolator::Bilinear, "32x4".parse().unwrap(), 4);
+    let mut t = Table::new(vec!["SMs", "efficiency lost", "theory 0.5/N"]);
+    for sms in [1u32, 2, 4, 8, 12, 16, 20, 24, 30] {
+        let mut dev = base.clone();
+        dev.sm_count = sms;
+        let clean = simulate(&l, &dev, None).ms;
+        let hurt = simulate(&l, &dev, Some(Straggler { sm: 0, speed: 0.5 })).ms;
+        let lost = (hurt - clean) / hurt;
+        t.row(vec![
+            sms.to_string(),
+            format!("{:.4}", lost),
+            format!("{:.4}", 0.5 / sms as f64),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Extension: straggler severity sweep on the paper pair of SM counts.
+    println!("\n=== straggler severity sweep ===\n");
+    let mut t = Table::new(vec!["speed", "G1 (2 SM) lost", "G2 (20 SM) lost"]);
+    let g1 = find_device("g1").unwrap();
+    let g2 = find_device("g2").unwrap();
+    for speed in [0.9, 0.75, 0.5, 0.25, 0.1] {
+        let loss = |dev: &tilekit::device::DeviceDescriptor| {
+            let clean = simulate(&l, dev, None).ms;
+            let hurt = simulate(&l, dev, Some(Straggler { sm: 0, speed })).ms;
+            (hurt - clean) / hurt
+        };
+        t.row(vec![
+            format!("{speed}"),
+            format!("{:.4}", loss(&g1)),
+            format!("{:.4}", loss(&g2)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== harness: straggler dispatch (heap path) ===");
+    let b = Bench::from_env();
+    b.report("simulate with straggler (g2)", || {
+        simulate(&l, &g2, Some(Straggler { sm: 0, speed: 0.5 }))
+    });
+}

@@ -1,0 +1,44 @@
+//! Bench: regenerate the paper's **Fig. 3** — execution time vs tiling
+//! dimensions for an 800×800 source at scales 2/4/6/8/10 on the
+//! simulated GTX 260 and GeForce 8800 GTS, plus the harness timing of
+//! the sweep itself (the autotuner's hot path).
+//!
+//! Run: `cargo bench --bench fig3_tiling` (CSV via TILEKIT_CSV=1).
+
+use tilekit::bench::figures::{fig3_summary, FIG3_SCALES};
+use tilekit::bench::Bench;
+use tilekit::device::paper_pair;
+use tilekit::image::Interpolator;
+use tilekit::sim::{simulate, Launch};
+use tilekit::tiling::paper_sweep_tiles;
+
+fn main() {
+    let csv = std::env::var("TILEKIT_CSV").is_ok();
+    println!("=== Fig. 3: time vs tile, both devices, scales {FIG3_SCALES:?} ===");
+    let (insets, summary) = fig3_summary(Interpolator::Bilinear, (800, 800));
+    for (scale, table) in &insets {
+        println!("\n--- inset scale {scale} ---");
+        if csv {
+            print!("{}", table.to_csv());
+        } else {
+            print!("{}", table.render());
+        }
+    }
+    println!("\n--- summary (paper findings) ---");
+    print!("{}", summary.render());
+
+    // Harness: how fast is one full-sweep point (simulator hot path)?
+    println!("\n=== harness: simulator throughput ===");
+    let b = Bench::from_env();
+    let (gtx, gts) = paper_pair();
+    let tiles = paper_sweep_tiles();
+    for dev in [&gtx, &gts] {
+        let l = Launch::paper(Interpolator::Bilinear, tiles[0], 8);
+        b.report(&format!("simulate(800x800, s8) on {}", dev.id), || {
+            simulate(&l, dev, None)
+        });
+    }
+    b.report("full fig3 sweep (5 scales x 14 tiles x 2 devices)", || {
+        fig3_summary(Interpolator::Bilinear, (800, 800))
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate the paper's **Fig. 4** — the 4×8 vs 8×4 access
+//! pattern comparison (row crossings per block, transactions, the
+//! resulting simulated times) across all five scales.
+//!
+//! Run: `cargo bench --bench fig4_access`.
+
+use tilekit::bench::figures::fig4_access;
+use tilekit::bench::Bench;
+use tilekit::device::paper_pair;
+use tilekit::sim::block_traffic;
+use tilekit::sim::Launch;
+use tilekit::image::Interpolator;
+
+fn main() {
+    println!("=== Fig. 4: 4x8 vs 8x4 (same 32 threads, different shape) ===");
+    for scale in [2, 4, 6, 8, 10] {
+        println!("\n--- scale {scale} ---");
+        print!("{}", fig4_access(scale).render());
+    }
+
+    println!("\n=== harness: memory-model throughput ===");
+    let b = Bench::from_env();
+    let (gtx, _) = paper_pair();
+    let l = Launch::paper(Interpolator::Bilinear, "8x4".parse().unwrap(), 6);
+    b.report("block_traffic(8x4, scale 6, gtx260)", || {
+        block_traffic(&l, &gtx)
+    });
+}

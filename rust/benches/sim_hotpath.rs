@@ -1,0 +1,89 @@
+//! Bench: micro-benchmarks of the L3 hot paths — the simulator inner
+//! loop (the Fig-3 sweep calls it thousands of times), the occupancy
+//! calculator, the memory model, the channel, and the batcher state
+//! machine. This is the before/after instrument for EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench sim_hotpath`.
+
+use std::time::{Duration, Instant};
+use tilekit::bench::Bench;
+use tilekit::coordinator::batcher::BatcherState;
+use tilekit::coordinator::request::{RequestKey, ResizeRequest, Ticket};
+use tilekit::device::paper_pair;
+use tilekit::exec::bounded;
+use tilekit::image::{generate, Interpolator};
+use tilekit::sim::{block_traffic, simulate, Launch};
+use tilekit::tiling::occupancy::{occupancy, KernelResources};
+use tilekit::tiling::paper_sweep_tiles;
+
+fn main() {
+    let b = Bench::from_env();
+    let (gtx, gts) = paper_pair();
+
+    println!("=== simulator hot path ===");
+    let tiles = paper_sweep_tiles();
+    let l = Launch::paper(Interpolator::Bilinear, "32x4".parse().unwrap(), 8);
+    b.report("simulate: one launch (gtx260, s8)", || {
+        simulate(&l, &gtx, None)
+    });
+    b.report("simulate: one launch (8800gts, s8)", || {
+        simulate(&l, &gts, None)
+    });
+    b.report("simulate: 14-tile sweep x 2 devices (one inset)", || {
+        for dev in [&gtx, &gts] {
+            for &tile in &tiles {
+                let l = Launch::paper(Interpolator::Bilinear, tile, 8);
+                std::hint::black_box(simulate(&l, dev, None));
+            }
+        }
+    });
+
+    println!("\n=== component micro-benches ===");
+    let t32x16 = "32x16".parse().unwrap();
+    b.report("occupancy(32x16)", || {
+        occupancy(t32x16, &KernelResources::BILINEAR, &gtx.cc)
+    });
+    b.report("block_traffic(32x4, s8)", || block_traffic(&l, &gtx));
+
+    println!("\n=== coordinator substrate micro-benches ===");
+    b.report("channel send+recv (cap 64)", || {
+        let (tx, rx) = bounded(64);
+        for i in 0..32u32 {
+            tx.send(i).unwrap();
+        }
+        let mut s = 0u32;
+        for _ in 0..32 {
+            s += rx.recv().unwrap();
+        }
+        s
+    });
+
+    let img = generate::gradient(16, 16);
+    let key = RequestKey::of(Interpolator::Bilinear, &img, 2);
+    b.report("batcher push+flush (batch 8)", || {
+        let mut state = BatcherState::new(8, Duration::from_millis(1));
+        for i in 0..8u64 {
+            let (_t, tx) = Ticket::new(i);
+            let out = state.push(ResizeRequest {
+                id: i,
+                key,
+                image: img.clone(),
+                admitted: Instant::now(),
+                reply: tx,
+            });
+            if out.is_some() {
+                return 1usize;
+            }
+        }
+        0usize
+    });
+
+    println!("\n=== image substrate ===");
+    let scene = generate::test_scene(128, 128, 3);
+    b.report("cpu bilinear 128x128 -> 256x256", || {
+        Interpolator::Bilinear.run(&scene, 2)
+    });
+    b.report("cpu bicubic 128x128 -> 256x256", || {
+        Interpolator::Bicubic.run(&scene, 2)
+    });
+}

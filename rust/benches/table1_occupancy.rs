@@ -1,0 +1,43 @@
+//! Bench: regenerate **Table I** from the device registry and the
+//! **§III.B occupancy-cliff** scenario (32×16: 100% on GTX 260, 66% on
+//! 8800 GTS), plus an occupancy table across the full paper sweep.
+//!
+//! Run: `cargo bench --bench table1_occupancy`.
+
+use tilekit::bench::figures::{occupancy_cliff, table1_figure};
+use tilekit::bench::Bench;
+use tilekit::device::paper_pair;
+use tilekit::tiling::occupancy::{occupancy, KernelResources};
+use tilekit::tiling::paper_sweep_tiles;
+use tilekit::util::text::Table;
+
+fn main() {
+    println!("=== TABLE I. COMPUTE CAPABILITY OF GTX260 AND GEFORCE 8800 ===\n");
+    print!("{}", table1_figure().render());
+
+    println!("\n=== §III.B: the 32x16 occupancy cliff ===\n");
+    print!("{}", occupancy_cliff("32x16".parse().unwrap()).render());
+
+    println!("\n=== occupancy across the full paper sweep ===\n");
+    let (gtx, gts) = paper_pair();
+    let mut t = Table::new(vec!["tile", "gtx260 occ", "gtx260 blocks", "8800gts occ", "8800gts blocks"]);
+    for tile in paper_sweep_tiles() {
+        let a = occupancy(tile, &KernelResources::BILINEAR, &gtx.cc);
+        let b = occupancy(tile, &KernelResources::BILINEAR, &gts.cc);
+        t.row(vec![
+            tile.label(),
+            format!("{:.0}%", a.ratio * 100.0),
+            a.blocks_per_sm.to_string(),
+            format!("{:.0}%", b.ratio * 100.0),
+            b.blocks_per_sm.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== harness: occupancy calculator throughput ===");
+    let b = Bench::from_env();
+    let tile = "32x16".parse().unwrap();
+    b.report("occupancy(32x16, bilinear, cc1.3)", || {
+        occupancy(tile, &KernelResources::BILINEAR, &gtx.cc)
+    });
+}

@@ -1,0 +1,11 @@
+//! The tiling autotuner: sweep candidate tiles on one or more devices,
+//! extract the best tile per device, and compute a *portable* tile — the
+//! paper's §V recommendation to "consider more about the performance on
+//! the worst-case GPU in order to let the program get better performance
+//! on most GPUs".
+
+pub mod portable;
+pub mod sweep;
+
+pub use portable::{portable_tile, PortableChoice};
+pub use sweep::{sweep, SweepPoint, SweepResult};

@@ -1,0 +1,130 @@
+//! Portable tile selection — the paper's §V takeaway operationalized:
+//! "consider more about the performance on the worst-case GPU in order to
+//! let the program get better performance on most GPUs".
+//!
+//! For each candidate tile we compute its *relative slowdown* vs the best
+//! tile on every device; the portable tile minimizes the worst-case
+//! slowdown (min-max regret). This is exactly the decision rule under
+//! which the paper's data picks 32×4.
+
+use super::sweep::SweepResult;
+use crate::tiling::TileDim;
+
+/// The outcome of portable selection over a device set.
+#[derive(Debug, Clone)]
+pub struct PortableChoice {
+    /// The selected tile.
+    pub tile: TileDim,
+    /// Worst-case relative slowdown of `tile` across devices
+    /// (1.0 = best everywhere).
+    pub worst_regret: f64,
+    /// (device id, best tile there, regret of `tile` there).
+    pub per_device: Vec<(String, TileDim, f64)>,
+}
+
+/// Choose the min-max-regret tile over one sweep per device (all sweeps
+/// must cover the same tile set). Returns `None` if no tile is launchable
+/// on every device.
+pub fn portable_tile(sweeps: &[SweepResult]) -> Option<PortableChoice> {
+    let first = sweeps.first()?;
+    let mut best: Option<PortableChoice> = None;
+    for p in &first.points {
+        let tile = p.tile;
+        let mut worst = 0f64;
+        let mut per_device = Vec::with_capacity(sweeps.len());
+        let mut ok = true;
+        for s in sweeps {
+            let t_tile = match s.time_of(tile) {
+                Some(t) => t,
+                None => {
+                    ok = false;
+                    break;
+                }
+            };
+            let best_point = s.best().expect("non-empty sweep");
+            let regret = t_tile / best_point.report.ms;
+            worst = worst.max(regret);
+            per_device.push((s.device_id.clone(), best_point.tile, regret));
+        }
+        if !ok {
+            continue;
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                worst < b.worst_regret - 1e-12
+                    || ((worst - b.worst_regret).abs() <= 1e-12
+                        && tile.aspect() > b.tile.aspect())
+            }
+        };
+        if better {
+            best = Some(PortableChoice {
+                tile,
+                worst_regret: worst,
+                per_device,
+            });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::sweep::sweep;
+    use crate::device::{builtin_devices, paper_pair};
+    use crate::image::Interpolator;
+    use crate::tiling::paper_sweep_tiles;
+
+    #[test]
+    fn portable_pick_matches_paper_conclusion() {
+        // Over the paper pair at the large scales, the portable tile is
+        // 32x4 ("the tiling dimensions 32x4 seems to be a better choice
+        // which can offer better performance in general").
+        let (gtx, gts) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        for scale in [6, 8, 10] {
+            let sweeps = vec![
+                sweep(&gtx, Interpolator::Bilinear, &tiles, scale, (800, 800)),
+                sweep(&gts, Interpolator::Bilinear, &tiles, scale, (800, 800)),
+            ];
+            let choice = portable_tile(&sweeps).unwrap();
+            assert_eq!(choice.tile, "32x4".parse().unwrap(), "scale {scale}");
+            assert!(choice.worst_regret < 1.05, "regret {}", choice.worst_regret);
+        }
+    }
+
+    #[test]
+    fn regret_at_least_one() {
+        let (gtx, gts) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let sweeps = vec![
+            sweep(&gtx, Interpolator::Bilinear, &tiles, 2, (800, 800)),
+            sweep(&gts, Interpolator::Bilinear, &tiles, 2, (800, 800)),
+        ];
+        let choice = portable_tile(&sweeps).unwrap();
+        assert!(choice.worst_regret >= 1.0 - 1e-12);
+        for (_, _, r) in &choice.per_device {
+            assert!(*r >= 1.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn works_across_whole_registry() {
+        // Portable selection over every builtin device (including the
+        // synthetic pair and Fermi) still returns a launchable tile.
+        let tiles = paper_sweep_tiles();
+        let sweeps: Vec<_> = builtin_devices()
+            .iter()
+            .map(|d| sweep(d, Interpolator::Bilinear, &tiles, 6, (800, 800)))
+            .collect();
+        let choice = portable_tile(&sweeps).unwrap();
+        assert_eq!(choice.per_device.len(), builtin_devices().len());
+        assert!(choice.worst_regret < 2.0);
+    }
+
+    #[test]
+    fn empty_input_is_none() {
+        assert!(portable_tile(&[]).is_none());
+    }
+}

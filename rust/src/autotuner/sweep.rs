@@ -1,0 +1,188 @@
+//! Exhaustive tile sweeps — the machinery behind the paper's Fig. 3.
+
+use crate::device::DeviceDescriptor;
+use crate::image::Interpolator;
+use crate::sim::{simulate, Launch, SimReport};
+use crate::tiling::TileDim;
+use crate::util::stats;
+
+/// One point of a sweep: a tile and its simulated outcome.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub tile: TileDim,
+    pub report: SimReport,
+}
+
+/// A full sweep of one (device, kernel, scale) combination.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub device_id: String,
+    pub kernel: Interpolator,
+    pub scale: u32,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepResult {
+    /// The fastest launchable tile (ties broken toward wider tiles, the
+    /// row-friendly shapes — matching how the paper reads its figures).
+    pub fn best(&self) -> Option<&SweepPoint> {
+        self.points
+            .iter()
+            .filter(|p| p.report.ms.is_finite())
+            .min_by(|a, b| {
+                a.report
+                    .ms
+                    .partial_cmp(&b.report.ms)
+                    .unwrap()
+                    .then(b.tile.aspect().partial_cmp(&a.tile.aspect()).unwrap())
+            })
+    }
+
+    /// Times of all launchable tiles, in sweep order.
+    pub fn times_ms(&self) -> Vec<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.report.ms.is_finite())
+            .map(|p| p.report.ms)
+            .collect()
+    }
+
+    /// Relative "jaggedness" of the curve: range/mean over launchable
+    /// tiles.
+    pub fn spread_ratio(&self) -> f64 {
+        stats::spread_ratio(&self.times_ms())
+    }
+
+    /// Absolute curve range in milliseconds (max − min over launchable
+    /// tiles). The paper's §IV.B observation — "the lower line [GTX 260]
+    /// is smoother than the upper line [8800 GTS] ... the block size
+    /// doesn't affect the performance on GTX 260 as significantly as on
+    /// GeForce 8800 GTS" — reads off Fig. 3's ms axis: the 8800 curve
+    /// moves through a larger ms band. (Relative spread is necessarily
+    /// larger on the faster device; see the `smoothness` ablation bench.)
+    pub fn range_ms(&self) -> f64 {
+        let t = self.times_ms();
+        match stats::Summary::of(&t) {
+            Some(s) => s.max - s.min,
+            None => 0.0,
+        }
+    }
+
+    /// Time of a specific tile, if present and launchable.
+    pub fn time_of(&self, tile: TileDim) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.tile == tile)
+            .map(|p| p.report.ms)
+            .filter(|ms| ms.is_finite())
+    }
+}
+
+/// Sweep `tiles` for `kernel` at `scale` on `dev` over a `src`-sized
+/// source image (the paper uses 800×800).
+pub fn sweep(
+    dev: &DeviceDescriptor,
+    kernel: Interpolator,
+    tiles: &[TileDim],
+    scale: u32,
+    src: (u32, u32),
+) -> SweepResult {
+    let points = tiles
+        .iter()
+        .map(|&tile| {
+            let launch = Launch {
+                kernel,
+                tile,
+                src_w: src.0,
+                src_h: src.1,
+                scale,
+            };
+            SweepPoint {
+                tile,
+                report: simulate(&launch, dev, None),
+            }
+        })
+        .collect();
+    SweepResult {
+        device_id: dev.id.clone(),
+        kernel,
+        scale,
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::paper_pair;
+    use crate::tiling::paper_sweep_tiles;
+
+    fn run(dev: &DeviceDescriptor, scale: u32) -> SweepResult {
+        sweep(
+            dev,
+            Interpolator::Bilinear,
+            &paper_sweep_tiles(),
+            scale,
+            (800, 800),
+        )
+    }
+
+    #[test]
+    fn best_exists_and_is_finite() {
+        let (gtx, _) = paper_pair();
+        let r = run(&gtx, 4);
+        let best = r.best().unwrap();
+        assert!(best.report.ms.is_finite());
+        // everything else is no faster
+        for p in &r.points {
+            if p.report.ms.is_finite() {
+                assert!(p.report.ms >= best.report.ms);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_finding_32x4_wins_at_large_scales_on_both() {
+        // "the tiling dimensions which can provide the best performance
+        // both on GTX 260 and GeForce 8800 GTS ... is the tiling
+        // dimensions 32x4 in inset (c), (d) and (e)" — scales 6, 8, 10.
+        let (gtx, gts) = paper_pair();
+        for dev in [&gtx, &gts] {
+            for scale in [6, 8, 10] {
+                let r = run(dev, scale);
+                let best = r.best().unwrap().tile;
+                assert_eq!(
+                    best,
+                    TileDim::new(32, 4),
+                    "{} at scale {scale}: best was {best}",
+                    dev.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_finding_gtx_smoother_at_small_scales() {
+        // §IV.B: "The lower line is smoother than the upper line. This
+        // means the block size doesn't affect the performance on GTX 260
+        // as significantly as on GeForce 8800 GTS." Fig. 3's axis is ms,
+        // so the claim is about the absolute band the curve moves in.
+        let (gtx, gts) = paper_pair();
+        for scale in [2, 4, 6, 8, 10] {
+            let sg = run(&gtx, scale).range_ms();
+            let ss = run(&gts, scale).range_ms();
+            assert!(
+                sg < ss,
+                "scale {scale}: gtx range {sg} ms should be < gts range {ss} ms"
+            );
+        }
+    }
+
+    #[test]
+    fn time_of_lookup() {
+        let (gtx, _) = paper_pair();
+        let r = run(&gtx, 2);
+        assert!(r.time_of(TileDim::new(32, 4)).is_some());
+        assert!(r.time_of(TileDim::new(7, 3)).is_none());
+    }
+}

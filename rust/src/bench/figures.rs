@@ -1,0 +1,242 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//! Each function returns a [`Table`] whose rows carry the same series the
+//! paper plots; the bench binaries and the CLI print them (and CSV for
+//! plotting).
+
+use crate::autotuner::{portable_tile, sweep, SweepResult};
+use crate::device::{paper_pair, table1, DeviceDescriptor};
+use crate::image::Interpolator;
+use crate::sim::{block_traffic, simulate, Launch, Straggler};
+use crate::tiling::occupancy::{occupancy, KernelResources};
+use crate::tiling::{paper_sweep_tiles, TileDim};
+use crate::util::text::{fmt_ms, Table};
+
+/// The paper's Fig. 3 scales, insets (a)–(e).
+pub const FIG3_SCALES: [u32; 5] = [2, 4, 6, 8, 10];
+
+/// Table I — regenerated from the device registry.
+pub fn table1_figure() -> Table {
+    table1()
+}
+
+/// One inset of Fig. 3: time per tile on both paper devices at `scale`.
+pub fn fig3_inset(kernel: Interpolator, scale: u32, src: (u32, u32)) -> Table {
+    let (gtx, gts) = paper_pair();
+    let tiles = paper_sweep_tiles();
+    let sg = sweep(&gtx, kernel, &tiles, scale, src);
+    let ss = sweep(&gts, kernel, &tiles, scale, src);
+    let mut t = Table::new(vec![
+        "tile".to_string(),
+        "threads".to_string(),
+        format!("{} ms", gtx.id),
+        format!("{} ms", gts.id),
+        "ratio".to_string(),
+    ]);
+    for (pg, ps) in sg.points.iter().zip(&ss.points) {
+        let (a, b) = (pg.report.ms, ps.report.ms);
+        t.row(vec![
+            pg.tile.label(),
+            pg.tile.threads().to_string(),
+            fmt_ms(a),
+            fmt_ms(b),
+            if a.is_finite() && a > 0.0 {
+                format!("{:.2}", b / a)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    t
+}
+
+/// All five Fig. 3 insets plus the per-inset best tiles and smoothness —
+/// the full headline figure with the paper's three findings called out.
+pub fn fig3_summary(kernel: Interpolator, src: (u32, u32)) -> (Vec<(u32, Table)>, Table) {
+    let (gtx, gts) = paper_pair();
+    let tiles = paper_sweep_tiles();
+    let mut insets = Vec::new();
+    let mut summary = Table::new(vec![
+        "scale",
+        "best@gtx260",
+        "best@8800gts",
+        "range@gtx260 (ms)",
+        "range@8800gts (ms)",
+    ]);
+    for scale in FIG3_SCALES {
+        insets.push((scale, fig3_inset(kernel, scale, src)));
+        let sg = sweep(&gtx, kernel, &tiles, scale, src);
+        let ss = sweep(&gts, kernel, &tiles, scale, src);
+        summary.row(vec![
+            scale.to_string(),
+            sg.best().map(|p| p.tile.label()).unwrap_or_default(),
+            ss.best().map(|p| p.tile.label()).unwrap_or_default(),
+            format!("{:.3}", sg.range_ms()),
+            format!("{:.3}", ss.range_ms()),
+        ]);
+    }
+    (insets, summary)
+}
+
+/// Fig. 4 — the 4×8 vs 8×4 access-pattern comparison, as per-block
+/// traffic counts on both devices, across the paper's scales.
+pub fn fig4_access(scale: u32) -> Table {
+    let (gtx, gts) = paper_pair();
+    let mut t = Table::new(vec![
+        "device",
+        "tile",
+        "row crossings/block",
+        "load tx/block",
+        "store tx/block",
+        "row penalty (cyc)",
+        "sim ms (800x800)",
+    ]);
+    for dev in [&gtx, &gts] {
+        for tile in [TileDim::new(4, 8), TileDim::new(8, 4)] {
+            let l = Launch::paper(Interpolator::Bilinear, tile, scale);
+            let tr = block_traffic(&l, dev);
+            let r = simulate(&l, dev, None);
+            t.row(vec![
+                dev.id.clone(),
+                tile.label(),
+                tr.row_crossings.to_string(),
+                tr.load_transactions.to_string(),
+                tr.store_transactions.to_string(),
+                format!("{:.0}", tr.row_penalty_cycles),
+                fmt_ms(r.ms),
+            ]);
+        }
+    }
+    t
+}
+
+/// §III.B — the 32×16 occupancy cliff table.
+pub fn occupancy_cliff(tile: TileDim) -> Table {
+    let (gtx, gts) = paper_pair();
+    let mut t = Table::new(vec![
+        "device",
+        "tile",
+        "blocks/SM",
+        "threads/SM",
+        "occupancy",
+        "limiter",
+    ]);
+    for dev in [&gtx, &gts] {
+        let o = occupancy(tile, &KernelResources::BILINEAR, &dev.cc);
+        t.row(vec![
+            dev.id.clone(),
+            tile.label(),
+            o.blocks_per_sm.to_string(),
+            o.threads_per_sm.to_string(),
+            format!("{:.0}%", o.ratio * 100.0),
+            o.limiter.label().to_string(),
+        ]);
+    }
+    t
+}
+
+/// §IV.C — the G1/G2 straggler-dilution experiment: a half-speed SM on a
+/// 2-SM vs a 20-SM device.
+pub fn extreme_example() -> Table {
+    let mut t = Table::new(vec![
+        "device",
+        "SMs",
+        "clean ms",
+        "straggler ms",
+        "efficiency lost",
+        "paper predicts",
+    ]);
+    for (id, predict) in [("g1", "1/4"), ("g2", "1/40")] {
+        let dev = crate::device::find_device(id).expect("builtin");
+        let l = Launch::paper(Interpolator::Bilinear, TileDim::new(32, 4), 4);
+        let clean = simulate(&l, &dev, None).ms;
+        let hurt = simulate(&l, &dev, Some(Straggler { sm: 0, speed: 0.5 })).ms;
+        let lost = (hurt - clean) / hurt;
+        t.row(vec![
+            dev.id.clone(),
+            dev.sm_count.to_string(),
+            fmt_ms(clean),
+            fmt_ms(hurt),
+            format!("{:.3}", lost),
+            predict.to_string(),
+        ]);
+    }
+    t
+}
+
+/// §V — portable-tile selection over a device set at a given scale.
+pub fn portable_selection(
+    devices: &[DeviceDescriptor],
+    kernel: Interpolator,
+    scale: u32,
+    src: (u32, u32),
+) -> (Table, Option<TileDim>) {
+    let tiles = paper_sweep_tiles();
+    let sweeps: Vec<SweepResult> = devices
+        .iter()
+        .map(|d| sweep(d, kernel, &tiles, scale, src))
+        .collect();
+    let choice = portable_tile(&sweeps);
+    let mut t = Table::new(vec!["device", "best tile", "portable-tile regret"]);
+    if let Some(c) = &choice {
+        for (dev, best, regret) in &c.per_device {
+            t.row(vec![dev.clone(), best.label(), format!("{:.3}x", regret)]);
+        }
+    }
+    (t, choice.map(|c| c.tile))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_inset_has_all_tiles() {
+        let t = fig3_inset(Interpolator::Bilinear, 2, (800, 800));
+        assert_eq!(t.n_rows(), paper_sweep_tiles().len());
+    }
+
+    #[test]
+    fn fig3_summary_finds_32x4_at_large_scale() {
+        let (_insets, summary) = fig3_summary(Interpolator::Bilinear, (800, 800));
+        let text = summary.render();
+        // scales 6,8,10 rows contain 32x4 twice (both devices)
+        for line in text.lines().filter(|l| {
+            l.starts_with("6 ") || l.starts_with("8 ") || l.starts_with("10")
+        }) {
+            assert_eq!(
+                line.matches("32x4").count(),
+                2,
+                "expected 32x4 best on both devices: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_table_shape() {
+        let t = fig4_access(6);
+        assert_eq!(t.n_rows(), 4); // 2 devices × 2 tiles
+    }
+
+    #[test]
+    fn occupancy_cliff_table() {
+        let t = occupancy_cliff(TileDim::new(32, 16));
+        let text = t.render();
+        assert!(text.contains("100%"));
+        assert!(text.contains("67%") || text.contains("66%"));
+    }
+
+    #[test]
+    fn extreme_table_has_both() {
+        let t = extreme_example();
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn portable_runs_over_paper_pair() {
+        let (gtx, gts) = paper_pair();
+        let (t, choice) =
+            portable_selection(&[gtx, gts], Interpolator::Bilinear, 8, (800, 800));
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(choice, Some(TileDim::new(32, 4)));
+    }
+}

@@ -1,0 +1,142 @@
+//! A small wall-clock benchmark harness: warmup, calibrated iteration
+//! counts, and robust statistics. Used by every `cargo bench` target
+//! (they are `harness = false` binaries).
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Per-iteration wall time summary (µs).
+    pub us: Summary,
+    /// Iterations per sample batch.
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    /// Mean per-iteration time in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        self.us.mean
+    }
+
+    /// One line: `name  mean ± std  [min .. max]  (n samples × iters)`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12.3} us ± {:>8.3}  [{:>10.3} .. {:>10.3}]  ({} × {})",
+            self.name, self.us.mean, self.us.std, self.us.min, self.us.max, self.us.n,
+            self.iters_per_sample
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Wall-clock budget for warmup.
+    pub warmup: Duration,
+    /// Samples to collect.
+    pub samples: usize,
+    /// Target wall time per sample (iterations are calibrated to this).
+    pub sample_target: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 20,
+            sample_target: Duration::from_millis(50),
+        }
+    }
+}
+
+impl Bench {
+    /// A faster profile for CI / smoke runs (set `TILEKIT_BENCH_FAST=1`).
+    pub fn from_env() -> Bench {
+        if std::env::var("TILEKIT_BENCH_FAST").is_ok() {
+            Bench {
+                warmup: Duration::from_millis(20),
+                samples: 5,
+                sample_target: Duration::from_millis(5),
+            }
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        // Warmup + calibration: figure out how many iters fill
+        // sample_target.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.sample_target.as_secs_f64() / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples_us = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            samples_us.push(dt * 1e6 / iters as f64);
+        }
+        Measurement {
+            name: name.to_string(),
+            us: Summary::of(&samples_us).expect("non-empty"),
+            iters_per_sample: iters,
+        }
+    }
+
+    /// Run and print in one step; returns the measurement for recording.
+    pub fn report<R>(&self, name: &str, f: impl FnMut() -> R) -> Measurement {
+        let m = self.run(name, f);
+        println!("{}", m.line());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            sample_target: Duration::from_millis(2),
+        };
+        let m = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.us.mean > 0.0);
+        assert_eq!(m.us.n, 3);
+        assert!(m.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn line_formats() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 2,
+            sample_target: Duration::from_millis(1),
+        };
+        let m = b.run("fmt", || 1 + 1);
+        assert!(m.line().contains("fmt"));
+    }
+}

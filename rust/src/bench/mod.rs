@@ -1,0 +1,8 @@
+//! Benchmark support: a measurement harness (the offline environment has
+//! no criterion) and the renderers that regenerate the paper's tables and
+//! figures as text/CSV.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{Bench, Measurement};

@@ -1,0 +1,181 @@
+//! A small command-line argument parser (no clap offline): subcommands,
+//! `--flag value` / `--flag=value` options, boolean switches, positional
+//! arguments, and generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// The subcommand (first non-flag token), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options.
+    opts: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    switches: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Parse error (unknown syntax only; semantic validation is the caller's).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse a token stream. `value_flags` lists flags that consume a
+    /// value; any other `--flag` is a boolean switch.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        value_flags: &[&str],
+    ) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    // `--` separator: everything after is positional
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if value_flags.contains(&flag) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ArgError(format!("--{flag} needs a value")))?;
+                    args.opts.insert(flag.to_string(), v);
+                } else {
+                    args.switches.push(flag.to_string());
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                return Err(ArgError(format!(
+                    "short flags are not supported: '{tok}'"
+                )));
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env(value_flags: &[&str]) -> Result<Args, ArgError> {
+        Self::parse(std::env::args().skip(1), value_flags)
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option (parse error surfaces the flag name).
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ArgError>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| ArgError(format!("--{key}={v}: {e}"))),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, ArgError>
+    where
+        T::Err: fmt::Display,
+    {
+        Ok(self.get_parsed(key)?.unwrap_or(default))
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.opts.contains_key(switch)
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], vf: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), vf).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(
+            &["sweep", "--device", "gtx260", "--scale=4", "--csv"],
+            &["device", "scale"],
+        );
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert_eq!(a.get("device"), Some("gtx260"));
+        assert_eq!(a.get("scale"), Some("4"));
+        assert!(a.has("csv"));
+        assert!(!a.has("json"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = parse(&["x", "--scale", "6"], &["scale"]);
+        assert_eq!(a.get_parsed_or("scale", 2u32).unwrap(), 6);
+        assert_eq!(a.get_parsed_or("missing", 9u32).unwrap(), 9);
+        let bad = parse(&["x", "--scale", "abc"], &["scale"]);
+        assert!(bad.get_parsed::<u32>("scale").is_err());
+    }
+
+    #[test]
+    fn lists_and_positionals() {
+        let a = parse(&["run", "in.pgm", "out.pgm", "--tiles=32x4,16x8"], &[]);
+        assert_eq!(a.positional, vec!["in.pgm", "out.pgm"]);
+        assert_eq!(a.get_list("tiles"), vec!["32x4", "16x8"]);
+        assert!(a.get_list("none").is_empty());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["x".to_string(), "--device".to_string()], &["device"]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = parse(&["cmd", "--", "--not-a-flag"], &[]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn short_flags_rejected() {
+        assert!(Args::parse(["-x".to_string()], &[]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained data codecs (the offline environment has no serde):
+//!
+//! * [`json`] — a full JSON parser/serializer used for the artifact
+//!   `manifest.json` interchange with the python AOT pipeline and for
+//!   machine-readable report output.
+//! * [`toml`] — a pragmatic TOML-subset parser (tables, arrays of tables,
+//!   scalars, arrays) used by the config system.
+
+pub mod json;
+pub mod toml;
+
+pub use json::Json;
+pub use toml::TomlDoc;

@@ -1,0 +1,368 @@
+//! A pragmatic TOML-subset parser for the config system.
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `[[array-of-tables]]`,
+//! `key = value` with string / integer / float / bool / array values,
+//! comments, and bare or quoted keys. Unsupported TOML (dates, inline
+//! tables, multi-line strings) produces a clear error rather than silent
+//! misparse — the config files this crate ships stay inside the subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A TOML scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[table]` (or one element of a `[[table]]` array): flat key→value.
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: the root table, named tables (dotted path joined
+/// with '.'), and arrays of tables.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub root: TomlTable,
+    pub tables: BTreeMap<String, TomlTable>,
+    pub arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+impl TomlDoc {
+    /// Look up a table by dotted path; the empty path returns the root.
+    pub fn table(&self, path: &str) -> Option<&TomlTable> {
+        if path.is_empty() {
+            Some(&self.root)
+        } else {
+            self.tables.get(path)
+        }
+    }
+
+    /// Look up `key` inside table `path` (empty path = root).
+    pub fn get(&self, path: &str, key: &str) -> Option<&TomlValue> {
+        self.table(path).and_then(|t| t.get(key))
+    }
+
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        // Which container new keys go into:
+        enum Target {
+            Root,
+            Table(String),
+            ArrayElem(String),
+        }
+        let mut target = Target::Root;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| err("unterminated [[table]] header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                doc.arrays
+                    .entry(name.to_string())
+                    .or_default()
+                    .push(TomlTable::new());
+                target = Target::ArrayElem(name.to_string());
+            } else if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated [table] header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty table name"));
+                }
+                doc.tables.entry(name.to_string()).or_default();
+                target = Target::Table(name.to_string());
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| err("expected 'key = value'"))?;
+                let key = parse_key(line[..eq].trim()).map_err(|m| err(&m))?;
+                let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+                    Target::ArrayElem(name) => {
+                        doc.arrays.get_mut(name).unwrap().last_mut().unwrap()
+                    }
+                };
+                if table.insert(key.clone(), val).is_some() {
+                    return Err(err(&format!("duplicate key '{key}'")));
+                }
+            }
+        }
+        Ok(doc)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_key(s: &str) -> Result<String, String> {
+    if let Some(q) = s.strip_prefix('"') {
+        q.strip_suffix('"')
+            .map(|k| k.to_string())
+            .ok_or_else(|| "unterminated quoted key".to_string())
+    } else if !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    {
+        Ok(s.to_string())
+    } else {
+        Err(format!("invalid bare key '{s}'"))
+    }
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("missing value".to_string());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let body = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(unescape(body)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    // number: TOML allows underscores
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned
+            .parse::<f64>()
+            .map(TomlValue::Float)
+            .map_err(|_| format!("invalid float '{s}'"))
+    } else {
+        cleaned
+            .parse::<i64>()
+            .map(TomlValue::Int)
+            .map_err(|_| format!("invalid value '{s}'"))
+    }
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("bad escape '\\{:?}'", other)),
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+# tilekit config
+title = "sweep"
+
+[sweep]
+scales = [2, 4, 6, 8, 10]
+source = [800, 800]
+min_threads = 32
+max_threads = 512
+
+[serving]
+batch_max = 8
+deadline_ms = 5.5
+enabled = true
+
+[[device]]
+name = "gtx260"
+sms = 24
+
+[[device]]
+name = "8800gts"
+sms = 12
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "title").unwrap().as_str(), Some("sweep"));
+        let scales: Vec<i64> = doc
+            .get("sweep", "scales")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_int().unwrap())
+            .collect();
+        assert_eq!(scales, vec![2, 4, 6, 8, 10]);
+        assert_eq!(doc.get("serving", "deadline_ms").unwrap().as_float(), Some(5.5));
+        assert_eq!(doc.get("serving", "enabled").unwrap().as_bool(), Some(true));
+        let devs = &doc.arrays["device"];
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0]["name"].as_str(), Some("gtx260"));
+        assert_eq!(devs[1]["sms"].as_int(), Some(12));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = TomlDoc::parse("k = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = TomlDoc::parse("tiles = [[32, 4], [16, 8]]").unwrap();
+        let outer = doc.get("", "tiles").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[0].as_int(), Some(32));
+        assert_eq!(outer[1].as_array().unwrap()[1].as_int(), Some(8));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("mem = 1_073_741_824\nclk = 1.242_000").unwrap();
+        assert_eq!(doc.get("", "mem").unwrap().as_int(), Some(1073741824));
+        assert!((doc.get("", "clk").unwrap().as_float().unwrap() - 1.242).abs() < 1e-9);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float(), Some(3.0));
+    }
+}

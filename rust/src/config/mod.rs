@@ -1,0 +1,346 @@
+//! Configuration system: a typed view over the TOML subset in
+//! [`crate::codec::toml`]. One file configures devices (custom entries
+//! merged over the builtin registry), sweep parameters, and the serving
+//! coordinator. See `examples/tilekit.toml` (written by `tilekit
+//! init-config`) for the full schema.
+
+use crate::codec::toml::{TomlDoc, TomlValue};
+use crate::device::{builtin_devices, DeviceDescriptor};
+use crate::image::Interpolator;
+use crate::tiling::TileDim;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Sweep parameters (`[sweep]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Source image size (the paper: 800×800).
+    pub src: (u32, u32),
+    /// Scales to sweep (the paper: 2, 4, 6, 8, 10).
+    pub scales: Vec<u32>,
+    /// Devices to sweep (registry ids).
+    pub devices: Vec<String>,
+    /// Kernel to sweep.
+    pub kernel: Interpolator,
+    /// Explicit tile list; empty = the paper's power-of-two sweep.
+    pub tiles: Vec<TileDim>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            src: (800, 800),
+            scales: vec![2, 4, 6, 8, 10],
+            devices: vec!["gtx260".into(), "8800gts".into()],
+            kernel: Interpolator::Bilinear,
+            tiles: Vec::new(),
+        }
+    }
+}
+
+/// Serving parameters (`[serving]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Worker threads executing artifacts.
+    pub workers: usize,
+    /// Max requests folded into one batch.
+    pub batch_max: usize,
+    /// Batching deadline: a partial batch is flushed after this long.
+    pub batch_deadline_ms: f64,
+    /// Bounded queue capacity (backpressure beyond this).
+    pub queue_cap: usize,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            workers: 2,
+            batch_max: 8,
+            batch_deadline_ms: 2.0,
+            queue_cap: 256,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub sweep: SweepConfig,
+    pub serving: ServingConfig,
+    /// Builtin devices plus any `[[device]]` entries (by id; custom
+    /// entries with a builtin id override it).
+    pub devices: Vec<DeviceDescriptor>,
+}
+
+impl Config {
+    /// Builtin defaults (no file).
+    pub fn builtin() -> Config {
+        Config {
+            sweep: SweepConfig::default(),
+            serving: ServingConfig::default(),
+            devices: builtin_devices(),
+        }
+    }
+
+    /// Load from a TOML file, merging over the defaults.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&text).with_context(|| format!("in {}", path.display()))
+    }
+
+    /// Parse from TOML text, merging over the defaults.
+    pub fn from_toml_str(text: &str) -> Result<Config> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = Config::builtin();
+
+        if let Some(t) = doc.table("sweep") {
+            if let Some(v) = t.get("src") {
+                let pair = int_pair(v).context("sweep.src")?;
+                cfg.sweep.src = pair;
+            }
+            if let Some(v) = t.get("scales") {
+                cfg.sweep.scales = int_list(v).context("sweep.scales")?;
+            }
+            if let Some(v) = t.get("devices") {
+                cfg.sweep.devices = str_list(v).context("sweep.devices")?;
+            }
+            if let Some(v) = t.get("kernel") {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("sweep.kernel must be a string"))?;
+                cfg.sweep.kernel = Interpolator::parse(s)
+                    .ok_or_else(|| anyhow!("unknown kernel '{s}'"))?;
+            }
+            if let Some(v) = t.get("tiles") {
+                cfg.sweep.tiles = str_list(v)?
+                    .iter()
+                    .map(|s| s.parse::<TileDim>().map_err(|e| anyhow!("{e}")))
+                    .collect::<Result<Vec<_>>>()
+                    .context("sweep.tiles")?;
+            }
+        }
+
+        if let Some(t) = doc.table("serving") {
+            if let Some(v) = t.get("workers") {
+                cfg.serving.workers = as_usize(v).context("serving.workers")?;
+            }
+            if let Some(v) = t.get("batch_max") {
+                cfg.serving.batch_max = as_usize(v).context("serving.batch_max")?;
+            }
+            if let Some(v) = t.get("batch_deadline_ms") {
+                cfg.serving.batch_deadline_ms = v
+                    .as_float()
+                    .ok_or_else(|| anyhow!("serving.batch_deadline_ms must be a number"))?;
+            }
+            if let Some(v) = t.get("queue_cap") {
+                cfg.serving.queue_cap = as_usize(v).context("serving.queue_cap")?;
+            }
+            if let Some(v) = t.get("artifacts_dir") {
+                cfg.serving.artifacts_dir = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("serving.artifacts_dir must be a string"))?
+                    .to_string();
+            }
+        }
+
+        if let Some(devs) = doc.arrays.get("device") {
+            for d in devs {
+                let desc = DeviceDescriptor::from_toml(d).map_err(|e| anyhow!("{e}"))?;
+                // Override a builtin with the same id, else append.
+                if let Some(slot) = cfg.devices.iter_mut().find(|b| b.id == desc.id) {
+                    *slot = desc;
+                } else {
+                    cfg.devices.push(desc);
+                }
+            }
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.sweep.scales.is_empty() {
+            bail!("sweep.scales must be non-empty");
+        }
+        if self.sweep.scales.iter().any(|&s| s == 0 || s > 64) {
+            bail!("sweep.scales entries must be in 1..=64");
+        }
+        if self.sweep.src.0 == 0 || self.sweep.src.1 == 0 {
+            bail!("sweep.src must be positive");
+        }
+        for id in &self.sweep.devices {
+            if !self.devices.iter().any(|d| &d.id == id) {
+                bail!("sweep.devices references unknown device '{id}'");
+            }
+        }
+        if self.serving.workers == 0 || self.serving.batch_max == 0 {
+            bail!("serving.workers and serving.batch_max must be >= 1");
+        }
+        if self.serving.queue_cap < self.serving.batch_max {
+            bail!("serving.queue_cap must be >= serving.batch_max");
+        }
+        Ok(())
+    }
+
+    /// Resolve a device id against this config's device set.
+    pub fn device(&self, id: &str) -> Result<&DeviceDescriptor> {
+        let id_l = id.to_ascii_lowercase();
+        self.devices
+            .iter()
+            .find(|d| d.id == id_l)
+            .ok_or_else(|| anyhow!("unknown device '{id}'"))
+    }
+}
+
+fn as_usize(v: &TomlValue) -> Result<usize> {
+    v.as_int()
+        .filter(|&i| i >= 0)
+        .map(|i| i as usize)
+        .ok_or_else(|| anyhow!("expected a non-negative integer"))
+}
+
+fn int_list(v: &TomlValue) -> Result<Vec<u32>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("expected an array"))?
+        .iter()
+        .map(|x| {
+            x.as_int()
+                .filter(|&i| i >= 0)
+                .map(|i| i as u32)
+                .ok_or_else(|| anyhow!("expected integers"))
+        })
+        .collect()
+}
+
+fn int_pair(v: &TomlValue) -> Result<(u32, u32)> {
+    let l = int_list(v)?;
+    if l.len() != 2 {
+        bail!("expected a [w, h] pair");
+    }
+    Ok((l[0], l[1]))
+}
+
+fn str_list(v: &TomlValue) -> Result<Vec<String>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("expected an array"))?
+        .iter()
+        .map(|x| {
+            x.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("expected strings"))
+        })
+        .collect()
+}
+
+/// The default config file content written by `tilekit init-config`.
+pub const EXAMPLE_CONFIG: &str = r#"# tilekit configuration
+# Everything here overrides the builtin defaults; all sections optional.
+
+[sweep]
+src = [800, 800]          # the paper's source image
+scales = [2, 4, 6, 8, 10] # Fig. 3 insets (a)-(e)
+devices = ["gtx260", "8800gts"]
+kernel = "bilinear"
+# tiles = ["32x4", "16x8"]  # empty = full power-of-two sweep
+
+[serving]
+workers = 2
+batch_max = 8
+batch_deadline_ms = 2.0
+queue_cap = 256
+artifacts_dir = "artifacts"
+
+# Custom GPUs (merged over the registry by id):
+# [[device]]
+# id = "mygpu"
+# name = "My GPU"
+# cc = "1.3"
+# sms = 16
+# sp_clock_mhz = 1300.0
+# mem_clock_mhz = 2000.0
+# mem_bus_bits = 256
+# global_mem_mib = 512
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_is_valid() {
+        Config::builtin().validate().unwrap();
+    }
+
+    #[test]
+    fn example_config_parses() {
+        let cfg = Config::from_toml_str(EXAMPLE_CONFIG).unwrap();
+        assert_eq!(cfg.sweep.scales, vec![2, 4, 6, 8, 10]);
+        assert_eq!(cfg.serving.batch_max, 8);
+    }
+
+    #[test]
+    fn partial_override_keeps_defaults() {
+        let cfg = Config::from_toml_str("[serving]\nworkers = 7\n").unwrap();
+        assert_eq!(cfg.serving.workers, 7);
+        assert_eq!(cfg.serving.batch_max, ServingConfig::default().batch_max);
+        assert_eq!(cfg.sweep.scales, SweepConfig::default().scales);
+    }
+
+    #[test]
+    fn custom_device_merges_and_overrides() {
+        let text = r#"
+[[device]]
+id = "gtx260"
+name = "Overridden GTX 260"
+cc = "1.3"
+sms = 99
+sp_clock_mhz = 1.0
+mem_clock_mhz = 1.0
+mem_bus_bits = 64
+global_mem_mib = 64
+
+[[device]]
+id = "brand-new"
+name = "Brand New"
+cc = "2.0"
+sms = 4
+sp_clock_mhz = 1.0
+mem_clock_mhz = 1.0
+mem_bus_bits = 64
+global_mem_mib = 64
+"#;
+        let cfg = Config::from_toml_str(text).unwrap();
+        assert_eq!(cfg.device("gtx260").unwrap().sm_count, 99);
+        assert!(cfg.device("brand-new").is_ok());
+        assert_eq!(
+            cfg.devices.len(),
+            builtin_devices().len() + 1,
+            "override must not duplicate"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(Config::from_toml_str("[sweep]\nscales = []\n").is_err());
+        assert!(Config::from_toml_str("[sweep]\nscales = [0]\n").is_err());
+        assert!(Config::from_toml_str("[sweep]\ndevices = [\"ghost\"]\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nworkers = 0\n").is_err());
+        assert!(
+            Config::from_toml_str("[serving]\nqueue_cap = 2\nbatch_max = 10\n").is_err()
+        );
+        assert!(Config::from_toml_str("[sweep]\nkernel = \"sinc\"\n").is_err());
+    }
+
+    #[test]
+    fn tiles_parse() {
+        let cfg = Config::from_toml_str("[sweep]\ntiles = [\"32x4\", \"8x8\"]\n").unwrap();
+        assert_eq!(cfg.sweep.tiles, vec![TileDim::new(32, 4), TileDim::new(8, 8)]);
+        assert!(Config::from_toml_str("[sweep]\ntiles = [\"zz\"]\n").is_err());
+    }
+}

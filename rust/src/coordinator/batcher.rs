@@ -1,0 +1,172 @@
+//! The dynamic batcher: accumulates admitted requests per
+//! [`RequestKey`], flushing a batch when it reaches the configured size
+//! or when the oldest member hits its deadline — the same size+deadline
+//! policy inference servers use.
+//!
+//! The batcher is written as a pure state machine ([`BatcherState`]) so
+//! its invariants are property-testable without threads; the server
+//! wraps it in a thread that owns the admission queue.
+
+use super::request::{RequestKey, ResizeRequest};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A flushed batch headed to the worker pool.
+pub struct Batch {
+    pub key: RequestKey,
+    pub requests: Vec<ResizeRequest>,
+}
+
+/// Pure batching state machine.
+pub struct BatcherState {
+    batch_max: usize,
+    deadline: Duration,
+    pending: HashMap<RequestKey, Vec<ResizeRequest>>,
+}
+
+impl BatcherState {
+    pub fn new(batch_max: usize, deadline: Duration) -> BatcherState {
+        assert!(batch_max >= 1);
+        BatcherState {
+            batch_max,
+            deadline,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Admit one request; returns a full batch if this admission filled
+    /// one.
+    pub fn push(&mut self, req: ResizeRequest) -> Option<Batch> {
+        let key = req.key;
+        let slot = self.pending.entry(key).or_default();
+        slot.push(req);
+        if slot.len() >= self.batch_max {
+            let requests = std::mem::take(slot);
+            self.pending.remove(&key);
+            Some(Batch { key, requests })
+        } else {
+            None
+        }
+    }
+
+    /// Flush every group whose oldest request has waited ≥ deadline.
+    pub fn flush_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let expired: Vec<RequestKey> = self
+            .pending
+            .iter()
+            .filter(|(_, reqs)| {
+                reqs.first()
+                    .map(|r| now.duration_since(r.admitted) >= self.deadline)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| *k)
+            .collect();
+        expired
+            .into_iter()
+            .filter_map(|key| {
+                self.pending.remove(&key).map(|requests| Batch { key, requests })
+            })
+            .collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        self.pending
+            .drain()
+            .map(|(key, requests)| Batch { key, requests })
+            .collect()
+    }
+
+    /// Time until the next deadline expiry (None when idle) — the
+    /// batcher thread's poll timeout.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter_map(|reqs| reqs.first())
+            .map(|r| {
+                let age = now.duration_since(r.admitted);
+                self.deadline.saturating_sub(age)
+            })
+            .min()
+    }
+
+    /// Requests currently held.
+    pub fn pending_len(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Ticket;
+    use crate::image::{generate, Interpolator};
+
+    fn req(scale: u32) -> ResizeRequest {
+        let img = generate::gradient(16, 16);
+        let (_t, tx) = Ticket::new(0);
+        ResizeRequest {
+            id: 0,
+            key: RequestKey::of(Interpolator::Bilinear, &img, scale),
+            image: img,
+            admitted: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn fills_at_batch_max() {
+        let mut b = BatcherState::new(3, Duration::from_secs(10));
+        assert!(b.push(req(2)).is_none());
+        assert!(b.push(req(2)).is_none());
+        let batch = b.push(req(2)).expect("full batch");
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn keys_batch_separately() {
+        let mut b = BatcherState::new(2, Duration::from_secs(10));
+        assert!(b.push(req(2)).is_none());
+        assert!(b.push(req(4)).is_none());
+        assert_eq!(b.pending_len(), 2);
+        let batch = b.push(req(2)).expect("scale-2 batch fills");
+        assert_eq!(batch.key.scale, 2);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = BatcherState::new(100, Duration::from_millis(5));
+        b.push(req(2));
+        b.push(req(4));
+        assert!(b.flush_expired(Instant::now()).is_empty());
+        let later = Instant::now() + Duration::from_millis(50);
+        let flushed = b.flush_expired(later);
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = BatcherState::new(100, Duration::from_millis(100));
+        assert!(b.next_deadline(Instant::now()).is_none());
+        b.push(req(2));
+        let d = b.next_deadline(Instant::now()).unwrap();
+        assert!(d <= Duration::from_millis(100));
+        let far = Instant::now() + Duration::from_secs(1);
+        assert_eq!(b.next_deadline(far).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = BatcherState::new(100, Duration::from_secs(10));
+        b.push(req(2));
+        b.push(req(4));
+        b.push(req(6));
+        let all = b.flush_all();
+        let total: usize = all.iter().map(|b| b.requests.len()).sum();
+        assert_eq!(total, 3);
+        assert_eq!(b.pending_len(), 0);
+    }
+}

@@ -1,0 +1,32 @@
+//! The serving coordinator (L3): an image-resize service in the style of
+//! an inference router — bounded admission queue with backpressure, a
+//! dynamic batcher (size + deadline), a worker pool executing AOT PJRT
+//! artifacts, per-request latency accounting, and graceful shutdown.
+//!
+//! Data flow:
+//!
+//! ```text
+//! submit() ──► admission queue (bounded) ──► batcher thread
+//!                                              │ groups by (kernel, src, scale),
+//!                                              │ flushes at batch_max or deadline
+//!                                              ▼
+//!                                        batch channel ──► worker pool ──► PJRT
+//!                                                              │
+//! Ticket::wait() ◄── per-request reply channel ◄───────────────┘
+//! ```
+//!
+//! The paper's tiling result enters through the router: artifact variants
+//! are keyed by Pallas tile, and [`router::Router`] prefers the portable
+//! tile (32×4) chosen by the autotuner.
+
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod stats;
+pub mod worker;
+
+pub use request::{RequestKey, ResizeRequest, Ticket};
+pub use router::Router;
+pub use server::{Coordinator, SubmitError};
+pub use stats::ServingStats;

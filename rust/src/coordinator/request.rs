@@ -1,0 +1,115 @@
+//! Request/response types for the resize service.
+
+use crate::image::{Image, Interpolator};
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// The batching key: requests sharing it can ride the same artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestKey {
+    pub kernel: Interpolator,
+    /// Source size (h, w).
+    pub src: (u32, u32),
+    pub scale: u32,
+}
+
+impl RequestKey {
+    pub fn of(kernel: Interpolator, img: &Image<f32>, scale: u32) -> RequestKey {
+        RequestKey {
+            kernel,
+            src: (img.height() as u32, img.width() as u32),
+            scale,
+        }
+    }
+}
+
+/// An in-flight resize request.
+pub struct ResizeRequest {
+    pub id: u64,
+    pub key: RequestKey,
+    pub image: Image<f32>,
+    /// Admission timestamp (queue latency accounting).
+    pub admitted: Instant,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<Image<f32>>>,
+}
+
+/// The caller's handle to a pending request.
+#[derive(Debug)]
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<Result<Image<f32>>>,
+}
+
+impl Ticket {
+    /// Create a ticket + its reply sender. Public so external harnesses
+    /// (benches, property tests) can drive `worker::run_batch` directly.
+    pub fn new(id: u64) -> (Ticket, mpsc::Sender<Result<Image<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        (Ticket { id, rx }, tx)
+    }
+
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Image<f32>> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!(
+                "request {} dropped: coordinator shut down",
+                self.id
+            )),
+        }
+    }
+
+    /// Wait with a timeout; `Ok(None)` on timeout.
+    pub fn wait_timeout(&self, d: std::time::Duration) -> Result<Option<Image<f32>>> {
+        match self.rx.recv_timeout(d) {
+            Ok(Ok(img)) => Ok(Some(img)),
+            Ok(Err(e)) => Err(e),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
+                "request {} dropped: coordinator shut down",
+                self.id
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+
+    #[test]
+    fn key_of_image() {
+        let img = generate::gradient(64, 32);
+        let k = RequestKey::of(Interpolator::Bilinear, &img, 2);
+        assert_eq!(k.src, (32, 64));
+        assert_eq!(k.scale, 2);
+    }
+
+    #[test]
+    fn ticket_round_trip() {
+        let (ticket, tx) = Ticket::new(7);
+        tx.send(Ok(generate::gradient(4, 4))).unwrap();
+        let img = ticket.wait().unwrap();
+        assert_eq!(img.width(), 4);
+    }
+
+    #[test]
+    fn ticket_reports_shutdown() {
+        let (ticket, tx) = Ticket::new(9);
+        drop(tx);
+        let err = ticket.wait().unwrap_err();
+        assert!(err.to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn ticket_timeout() {
+        let (ticket, _tx) = Ticket::new(1);
+        let r = ticket
+            .wait_timeout(std::time::Duration::from_millis(10))
+            .unwrap();
+        assert!(r.is_none());
+    }
+}

@@ -1,0 +1,149 @@
+//! The router: maps a [`RequestKey`] to the artifact that should serve
+//! it, preferring the portable tile variant (the paper's §V conclusion,
+//! computed by the autotuner) and falling back to whatever variant the
+//! manifest offers.
+
+use super::request::RequestKey;
+use crate::runtime::{ArtifactEntry, Manifest};
+use crate::tiling::TileDim;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Routing table built once from the manifest.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Preferred Pallas tile (e.g. the autotuner's portable 32×4).
+    pub tile_pref: Option<TileDim>,
+    /// Precomputed key → candidate entries (sorted by preference).
+    table: HashMap<RequestKey, Vec<ArtifactEntry>>,
+}
+
+impl Router {
+    /// Build a routing table over `manifest`, preferring `tile_pref`
+    /// variants when several serve the same key.
+    pub fn new(manifest: &Manifest, tile_pref: Option<TileDim>) -> Router {
+        let mut table: HashMap<RequestKey, Vec<ArtifactEntry>> = HashMap::new();
+        for e in &manifest.entries {
+            let key = RequestKey {
+                kernel: e.kernel,
+                src: e.src,
+                scale: e.scale,
+            };
+            table.entry(key).or_default().push(e.clone());
+        }
+        for entries in table.values_mut() {
+            entries.sort_by_key(|e| {
+                let tile_match = tile_pref.map(|t| e.tile == t).unwrap_or(true);
+                // Among equally-preferred variants, larger Pallas tiles
+                // first: on the CPU PJRT backend fewer grid steps win
+                // (measured 5.7x in `cargo bench --bench artifact_exec`;
+                // EXPERIMENTS.md §Perf). A GPU backend would pass an
+                // explicit tile_pref from the autotuner instead.
+                (!tile_match, e.batch, std::cmp::Reverse(e.tile.threads()))
+            });
+        }
+        Router { tile_pref, table }
+    }
+
+    /// Keys this router can serve.
+    pub fn keys(&self) -> Vec<RequestKey> {
+        let mut ks: Vec<RequestKey> = self.table.keys().copied().collect();
+        ks.sort();
+        ks
+    }
+
+    /// Can this key be served at all?
+    pub fn supports(&self, key: &RequestKey) -> bool {
+        self.table.contains_key(key)
+    }
+
+    /// The artifact for `key` able to carry `batch_size` requests:
+    /// smallest sufficient batch among preferred-tile variants, falling
+    /// back to the largest available (the batcher will split).
+    pub fn route(&self, key: &RequestKey, batch_size: usize) -> Result<&ArtifactEntry> {
+        let entries = self
+            .table
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact serves {key:?}"))?;
+        // entries are sorted tile-pref-first then by ascending batch
+        entries
+            .iter()
+            .find(|e| e.batch as usize >= batch_size)
+            .or_else(|| entries.iter().max_by_key(|e| e.batch))
+            .ok_or_else(|| anyhow!("no artifact serves {key:?}"))
+    }
+
+    /// Largest static batch available for `key` (the batcher's cap).
+    pub fn max_batch(&self, key: &RequestKey) -> usize {
+        self.table
+            .get(key)
+            .map(|es| es.iter().map(|e| e.batch as usize).max().unwrap_or(1))
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::Interpolator;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let text = r#"{
+          "version": 1,
+          "artifacts": [
+            {"name": "bl_s2_b1_t32x4", "kernel": "bilinear", "src": [64, 64],
+             "scale": 2, "batch": 1, "tile": [4, 32], "path": "a.hlo.txt"},
+            {"name": "bl_s2_b4_t32x4", "kernel": "bilinear", "src": [64, 64],
+             "scale": 2, "batch": 4, "tile": [4, 32], "path": "b.hlo.txt"},
+            {"name": "bl_s2_b4_t8x8", "kernel": "bilinear", "src": [64, 64],
+             "scale": 2, "batch": 4, "tile": [8, 8], "path": "c.hlo.txt"}
+          ]
+        }"#;
+        Manifest::parse(text, PathBuf::from(".")).unwrap()
+    }
+
+    fn key() -> RequestKey {
+        RequestKey {
+            kernel: Interpolator::Bilinear,
+            src: (64, 64),
+            scale: 2,
+        }
+    }
+
+    #[test]
+    fn routes_by_batch_size() {
+        let r = Router::new(&manifest(), Some(TileDim::new(32, 4)));
+        assert_eq!(r.route(&key(), 1).unwrap().name, "bl_s2_b1_t32x4");
+        assert_eq!(r.route(&key(), 3).unwrap().name, "bl_s2_b4_t32x4");
+        assert_eq!(r.route(&key(), 4).unwrap().name, "bl_s2_b4_t32x4");
+        // oversize falls back to largest; the batcher splits
+        assert_eq!(r.route(&key(), 9).unwrap().batch, 4);
+    }
+
+    #[test]
+    fn tile_preference_respected() {
+        let r = Router::new(&manifest(), Some(TileDim::new(8, 8)));
+        assert_eq!(r.route(&key(), 4).unwrap().name, "bl_s2_b4_t8x8");
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let r = Router::new(&manifest(), None);
+        let bad = RequestKey {
+            kernel: Interpolator::Bicubic,
+            src: (64, 64),
+            scale: 2,
+        };
+        assert!(r.route(&bad, 1).is_err());
+        assert!(!r.supports(&bad));
+        assert!(r.supports(&key()));
+    }
+
+    #[test]
+    fn max_batch() {
+        let r = Router::new(&manifest(), None);
+        assert_eq!(r.max_batch(&key()), 4);
+        assert_eq!(r.keys().len(), 1);
+    }
+}

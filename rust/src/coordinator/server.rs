@@ -1,0 +1,370 @@
+//! The coordinator façade: wires the admission queue, batcher thread,
+//! and worker pool together; owns graceful shutdown.
+
+use super::batcher::{Batch, BatcherState};
+use super::request::{RequestKey, ResizeRequest, Ticket};
+use super::router::Router;
+use super::stats::{IdGen, ServingStats};
+use super::worker::spawn_workers;
+use crate::config::ServingConfig;
+use crate::exec::{bounded, Sender, TrySendError};
+use crate::image::{Image, Interpolator};
+use crate::runtime::ResizeBackend;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Why a submission was not admitted.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission queue full — retry later (backpressure).
+    Saturated,
+    /// No artifact can serve this (kernel, size, scale).
+    Unsupported,
+    /// Coordinator is shutting down.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Saturated => write!(f, "admission queue saturated"),
+            SubmitError::Unsupported => write!(f, "no artifact serves this request shape"),
+            SubmitError::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+impl std::error::Error for SubmitError {}
+
+/// The running serving system.
+pub struct Coordinator {
+    admit_tx: Option<Sender<ResizeRequest>>,
+    router: Arc<Router>,
+    stats: Arc<ServingStats>,
+    ids: IdGen,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the pipeline: 1 batcher thread + `cfg.workers` executor
+    /// threads over `backend`.
+    pub fn start(
+        cfg: &ServingConfig,
+        router: Router,
+        backend: Arc<dyn ResizeBackend>,
+    ) -> Coordinator {
+        let stats = Arc::new(ServingStats::new());
+        let router = Arc::new(router);
+        let (admit_tx, admit_rx) = bounded::<ResizeRequest>(cfg.queue_cap);
+        let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_cap.max(4));
+
+        // Batcher thread: drain admissions, group, flush on size/deadline.
+        let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
+        let batch_max = cfg.batch_max;
+        let batcher = {
+            std::thread::Builder::new()
+                .name("tilekit-batcher".into())
+                .spawn(move || {
+                    let mut state = BatcherState::new(batch_max, deadline);
+                    loop {
+                        let timeout = state
+                            .next_deadline(Instant::now())
+                            .unwrap_or(Duration::from_millis(50));
+                        match admit_rx.recv_timeout(timeout) {
+                            Ok(Some(req)) => {
+                                if let Some(batch) = state.push(req) {
+                                    if batch_tx.send(batch).is_err() {
+                                        break;
+                                    }
+                                }
+                            }
+                            Ok(None) => {} // timeout: fall through to expiry
+                            Err(_) => break, // admissions closed: shutdown
+                        }
+                        for batch in state.flush_expired(Instant::now()) {
+                            if batch_tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                    // Shutdown: flush everything still pending.
+                    for batch in state.flush_all() {
+                        let _ = batch_tx.send(batch);
+                    }
+                })
+                .expect("spawn batcher")
+        };
+
+        let workers = spawn_workers(
+            cfg.workers,
+            batch_rx,
+            Arc::clone(&router),
+            backend,
+            Arc::clone(&stats),
+        );
+
+        Coordinator {
+            admit_tx: Some(admit_tx),
+            router,
+            stats,
+            ids: IdGen::default(),
+            batcher: Some(batcher),
+            workers,
+        }
+    }
+
+    /// Serving statistics handle.
+    pub fn stats(&self) -> Arc<ServingStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The routing table in use.
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a resize request. Non-blocking: `Saturated` signals
+    /// backpressure.
+    pub fn submit(
+        &self,
+        kernel: Interpolator,
+        image: Image<f32>,
+        scale: u32,
+    ) -> Result<Ticket, SubmitError> {
+        let key = RequestKey::of(kernel, &image, scale);
+        if !self.router.supports(&key) {
+            self.stats.rejected.inc();
+            return Err(SubmitError::Unsupported);
+        }
+        let tx = self.admit_tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
+        let id = self.ids.next();
+        let (ticket, reply) = Ticket::new(id);
+        let req = ResizeRequest {
+            id,
+            key,
+            image,
+            admitted: Instant::now(),
+            reply,
+        };
+        match tx.try_send(req) {
+            Ok(()) => {
+                self.stats.admitted.inc();
+                Ok(ticket)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.rejected.inc();
+                Err(SubmitError::Saturated)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Blocking submit: waits for queue space instead of failing.
+    pub fn submit_blocking(
+        &self,
+        kernel: Interpolator,
+        image: Image<f32>,
+        scale: u32,
+    ) -> Result<Ticket, SubmitError> {
+        loop {
+            match self.submit(kernel, image.clone(), scale) {
+                Err(SubmitError::Saturated) => {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Graceful shutdown: stop admissions, drain the pipeline, join all
+    /// threads.
+    pub fn shutdown(mut self) -> Arc<ServingStats> {
+        self.shutdown_inner();
+        Arc::clone(&self.stats)
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.admit_tx.take(); // closes admissions → batcher exits → workers exit
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if self.admit_tx.is_some() {
+            self.shutdown_inner();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+    use crate::runtime::{Manifest, MockEngine};
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1,
+              "artifacts": [
+                {"name": "bl_s2_b4", "kernel": "bilinear", "src": [16, 16],
+                 "scale": 2, "batch": 4, "tile": [4, 32], "path": "x"},
+                {"name": "nn_s4_b2", "kernel": "nearest", "src": [16, 16],
+                 "scale": 4, "batch": 2, "tile": [4, 32], "path": "x"}
+              ]
+            }"#,
+            PathBuf::from("."),
+        )
+        .unwrap()
+    }
+
+    fn cfg() -> ServingConfig {
+        ServingConfig {
+            workers: 2,
+            batch_max: 4,
+            batch_deadline_ms: 2.0,
+            queue_cap: 64,
+            artifacts_dir: ".".into(),
+        }
+    }
+
+    fn start(backend: Arc<dyn ResizeBackend>) -> Coordinator {
+        let m = manifest();
+        let router = Router::new(&m, None);
+        Coordinator::start(&cfg(), router, backend)
+    }
+
+    #[test]
+    fn end_to_end_requests_complete_correctly() {
+        let co = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 9);
+        let want = crate::image::bilinear(&img, 2);
+        let tickets: Vec<_> = (0..20)
+            .map(|_| {
+                co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
+                    .unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert_eq!(out.width(), 32);
+            assert!(out.max_abs_diff(&want) < 1e-6);
+        }
+        let stats = co.shutdown();
+        assert_eq!(stats.completed.get(), 20);
+        assert_eq!(stats.failed.get(), 0);
+        assert!(stats.batches.get() <= 20);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn unsupported_shape_rejected_fast() {
+        let co = start(Arc::new(MockEngine::new()));
+        let img = generate::gradient(9, 9);
+        match co.submit(Interpolator::Bilinear, img, 2) {
+            Err(SubmitError::Unsupported) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        let img16 = generate::gradient(16, 16);
+        assert!(matches!(
+            co.submit(Interpolator::Bicubic, img16, 2),
+            Err(SubmitError::Unsupported)
+        ));
+    }
+
+    #[test]
+    fn mixed_kernels_route_independently() {
+        let co = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 2);
+        let t1 = co
+            .submit_blocking(Interpolator::Bilinear, img.clone(), 2)
+            .unwrap();
+        let t2 = co
+            .submit_blocking(Interpolator::Nearest, img.clone(), 4)
+            .unwrap();
+        assert_eq!(t1.wait().unwrap().width(), 32);
+        assert_eq!(t2.wait().unwrap().width(), 64);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        // One request with batch_max 4: only the deadline can flush it.
+        let co = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 4);
+        let t = co
+            .submit(Interpolator::Bilinear, img, 2)
+            .expect("admitted");
+        let out = t.wait().unwrap();
+        assert_eq!(out.height(), 32);
+    }
+
+    #[test]
+    fn backend_failures_reported_per_request() {
+        let co = start(Arc::new(MockEngine::failing_every(1)));
+        let img = generate::test_scene(16, 16, 5);
+        let t = co.submit_blocking(Interpolator::Bilinear, img, 2).unwrap();
+        assert!(t.wait().is_err());
+        let stats = co.shutdown();
+        assert_eq!(stats.failed.get(), 1);
+    }
+
+    #[test]
+    fn backpressure_saturates() {
+        // Slow backend + tiny queue: eventually Saturated.
+        let slow = MockEngine::with_delay(Duration::from_millis(30));
+        let m = manifest();
+        let router = Router::new(&m, None);
+        let small = ServingConfig {
+            workers: 1,
+            batch_max: 1,
+            batch_deadline_ms: 0.1,
+            queue_cap: 2,
+            artifacts_dir: ".".into(),
+        };
+        let co = Coordinator::start(&small, router, Arc::new(slow));
+        let img = generate::test_scene(16, 16, 6);
+        let mut saturated = false;
+        let mut tickets = Vec::new();
+        for _ in 0..64 {
+            match co.submit(Interpolator::Bilinear, img.clone(), 2) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Saturated) => {
+                    saturated = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(saturated, "queue should saturate under a slow backend");
+        for t in tickets {
+            let _ = t.wait();
+        }
+        let stats = co.shutdown();
+        assert!(stats.rejected.get() >= 1);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let co = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 7);
+        let tickets: Vec<_> = (0..10)
+            .map(|_| {
+                co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
+                    .unwrap()
+            })
+            .collect();
+        let stats = co.shutdown(); // must drain, not drop
+        assert_eq!(stats.completed.get() + stats.failed.get(), 10);
+        for t in tickets {
+            let _ = t.wait(); // all replies delivered
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Serving statistics: request/batch counters and latency histograms,
+//! shared (via `Arc`) between the pipeline stages and the caller.
+
+use crate::metrics::{Counter, Histogram};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct ServingStats {
+    /// Requests admitted into the queue.
+    pub admitted: Counter,
+    /// Requests rejected by backpressure.
+    pub rejected: Counter,
+    /// Requests completed successfully.
+    pub completed: Counter,
+    /// Requests failed (backend error).
+    pub failed: Counter,
+    /// Batches executed.
+    pub batches: Counter,
+    /// Sum of batch sizes (mean batch size = batched / batches).
+    pub batched: Counter,
+    /// End-to-end latency (admission → reply).
+    pub latency: Histogram,
+    /// Queue+batch wait (admission → execution start).
+    pub queue_wait: Histogram,
+    /// Pure execution time per batch.
+    pub exec_time: Histogram,
+}
+
+impl ServingStats {
+    pub fn new() -> ServingStats {
+        ServingStats::default()
+    }
+
+    /// Reset every counter and histogram (e.g. after a warmup phase so
+    /// the reported numbers measure serving, not first-use compilation).
+    pub fn reset(&self) {
+        self.admitted.reset();
+        self.rejected.reset();
+        self.completed.reset();
+        self.failed.reset();
+        self.batches.reset();
+        self.batched.reset();
+        self.latency.reset();
+        self.queue_wait.reset();
+        self.exec_time.reset();
+    }
+
+    /// Mean batch size so far (0 when no batches).
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batched.get() as f64 / b as f64
+        }
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "admitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} | latency {}",
+            self.admitted.get(),
+            self.rejected.get(),
+            self.completed.get(),
+            self.failed.get(),
+            self.batches.get(),
+            self.mean_batch(),
+            self.latency.summary(),
+        )
+    }
+}
+
+/// Monotonic request-id allocator.
+#[derive(Debug, Default)]
+pub struct IdGen(AtomicU64);
+
+impl IdGen {
+    pub fn next(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_batch() {
+        let s = ServingStats::new();
+        assert_eq!(s.mean_batch(), 0.0);
+        s.batches.add(2);
+        s.batched.add(6);
+        assert_eq!(s.mean_batch(), 3.0);
+    }
+
+    #[test]
+    fn idgen_unique() {
+        let g = IdGen::default();
+        let a = g.next();
+        let b = g.next();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn summary_contains_counts() {
+        let s = ServingStats::new();
+        s.admitted.inc();
+        assert!(s.summary().contains("admitted=1"));
+    }
+}

@@ -1,0 +1,216 @@
+//! The worker stage: a pool of threads pulling flushed batches, routing
+//! them to an artifact, splitting oversize groups to the artifact's
+//! static batch, executing through the [`ResizeBackend`], and replying
+//! per request.
+
+use super::batcher::Batch;
+use super::router::Router;
+use super::stats::ServingStats;
+use crate::exec::Receiver;
+use crate::runtime::ResizeBackend;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Spawn `n` workers draining `rx`. They exit when the channel closes.
+pub fn spawn_workers(
+    n: usize,
+    rx: Receiver<Batch>,
+    router: Arc<Router>,
+    backend: Arc<dyn ResizeBackend>,
+    stats: Arc<ServingStats>,
+) -> Vec<JoinHandle<()>> {
+    (0..n.max(1))
+        .map(|i| {
+            let rx = rx.clone();
+            let router = Arc::clone(&router);
+            let backend = Arc::clone(&backend);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name(format!("tilekit-exec-{i}"))
+                .spawn(move || {
+                    // Compile/prepare everything BEFORE serving: the
+                    // request path must never pay first-use compilation.
+                    if let Err(e) = backend.warm() {
+                        eprintln!("worker {i}: backend warmup failed: {e:#}");
+                    }
+                    while let Ok(batch) = rx.recv() {
+                        run_batch(batch, &router, backend.as_ref(), &stats);
+                    }
+                })
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+/// Execute one flushed batch (possibly splitting across artifact
+/// invocations) and deliver replies. Public so tests and the e2e bench
+/// can drive it synchronously.
+pub fn run_batch(
+    batch: Batch,
+    router: &Router,
+    backend: &dyn ResizeBackend,
+    stats: &ServingStats,
+) {
+    let key = batch.key;
+    let mut requests = batch.requests;
+    while !requests.is_empty() {
+        let entry = match router.route(&key, requests.len()) {
+            Ok(e) => e,
+            Err(err) => {
+                // No artifact: fail the whole group.
+                let msg = err.to_string();
+                for r in requests.drain(..) {
+                    stats.failed.inc();
+                    let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+                return;
+            }
+        };
+        let take = requests.len().min(entry.batch as usize);
+        let chunk: Vec<_> = requests.drain(..take).collect();
+        let images: Vec<_> = chunk.iter().map(|r| r.image.clone()).collect();
+
+        let exec_start = Instant::now();
+        for r in &chunk {
+            stats
+                .queue_wait
+                .record(exec_start.duration_since(r.admitted));
+        }
+        let result = backend.run_batch(entry, &images);
+        stats.exec_time.record(exec_start.elapsed());
+        stats.batches.inc();
+        stats.batched.add(chunk.len() as u64);
+
+        match result {
+            Ok(outputs) => {
+                debug_assert_eq!(outputs.len(), chunk.len());
+                for (r, out) in chunk.into_iter().zip(outputs) {
+                    stats.completed.inc();
+                    stats.latency.record(r.admitted.elapsed());
+                    let _ = r.reply.send(Ok(out));
+                }
+            }
+            Err(err) => {
+                let msg = err.to_string();
+                for r in chunk {
+                    stats.failed.inc();
+                    stats.latency.record(r.admitted.elapsed());
+                    let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestKey, ResizeRequest, Ticket};
+    use crate::image::{generate, Interpolator};
+    use crate::runtime::{Manifest, MockEngine};
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1,
+              "artifacts": [
+                {"name": "bl_s2_b1", "kernel": "bilinear", "src": [16, 16],
+                 "scale": 2, "batch": 1, "tile": [4, 32], "path": "x"},
+                {"name": "bl_s2_b4", "kernel": "bilinear", "src": [16, 16],
+                 "scale": 2, "batch": 4, "tile": [4, 32], "path": "x"}
+              ]
+            }"#,
+            PathBuf::from("."),
+        )
+        .unwrap()
+    }
+
+    fn make_batch(n: usize) -> (Batch, Vec<Ticket>) {
+        let img = generate::test_scene(16, 16, 1);
+        let key = RequestKey::of(Interpolator::Bilinear, &img, 2);
+        let mut tickets = Vec::new();
+        let requests = (0..n)
+            .map(|i| {
+                let (t, tx) = Ticket::new(i as u64);
+                tickets.push(t);
+                ResizeRequest {
+                    id: i as u64,
+                    key,
+                    image: img.clone(),
+                    admitted: Instant::now(),
+                    reply: tx,
+                }
+            })
+            .collect();
+        (Batch { key, requests }, tickets)
+    }
+
+    #[test]
+    fn executes_and_replies() {
+        let router = Router::new(&manifest(), None);
+        let backend = MockEngine::new();
+        let stats = ServingStats::new();
+        let (batch, tickets) = make_batch(3);
+        run_batch(batch, &router, &backend, &stats);
+        for t in tickets {
+            let out = t.wait().unwrap();
+            assert_eq!(out.width(), 32);
+        }
+        assert_eq!(stats.completed.get(), 3);
+        assert_eq!(stats.batches.get(), 1);
+        assert_eq!(stats.mean_batch(), 3.0);
+    }
+
+    #[test]
+    fn splits_oversize_groups() {
+        let router = Router::new(&manifest(), None);
+        let backend = MockEngine::new();
+        let stats = ServingStats::new();
+        let (batch, tickets) = make_batch(10); // max artifact batch = 4
+        run_batch(batch, &router, &backend, &stats);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert_eq!(stats.completed.get(), 10);
+        assert_eq!(stats.batches.get(), 3); // 4 + 4 + 2
+    }
+
+    #[test]
+    fn backend_failure_propagates() {
+        let router = Router::new(&manifest(), None);
+        let backend = MockEngine::failing_every(1); // every batch fails
+        let stats = ServingStats::new();
+        let (batch, tickets) = make_batch(2);
+        run_batch(batch, &router, &backend, &stats);
+        for t in tickets {
+            assert!(t.wait().is_err());
+        }
+        assert_eq!(stats.failed.get(), 2);
+        assert_eq!(stats.completed.get(), 0);
+    }
+
+    #[test]
+    fn unroutable_key_fails_cleanly() {
+        let router = Router::new(&manifest(), None);
+        let backend = MockEngine::new();
+        let stats = ServingStats::new();
+        let img = generate::gradient(8, 8); // no 8x8 artifact
+        let key = RequestKey::of(Interpolator::Bilinear, &img, 2);
+        let (t, tx) = Ticket::new(0);
+        let batch = Batch {
+            key,
+            requests: vec![ResizeRequest {
+                id: 0,
+                key,
+                image: img,
+                admitted: Instant::now(),
+                reply: tx,
+            }],
+        };
+        run_batch(batch, &router, &backend, &stats);
+        assert!(t.wait().is_err());
+        assert_eq!(stats.failed.get(), 1);
+    }
+}

@@ -1,0 +1,248 @@
+//! CUDA compute-capability feature sets (versions 1.0 – 2.0).
+//!
+//! The paper's central observation is that tiling tuned on one compute
+//! capability does not transfer to another; the capability version fixes
+//! the *architectural limits* (max threads/warps/blocks per SM, register
+//! file size, block dimension caps) and the *global-memory coalescing
+//! rules* that the simulator's memory model implements.
+//!
+//! Sources: NVIDIA CUDA Programming Guide 2.1 (the version the paper
+//! used), Appendix A; GTX 200 architectural brief.
+
+use std::fmt;
+
+/// How the device coalesces global-memory accesses of a half-warp/warp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoalescingModel {
+    /// cc 1.0/1.1: a half-warp (16 threads) coalesces into ONE transaction
+    /// only if threads access a contiguous, aligned 64B/128B segment in
+    /// strict thread-order; any deviation serializes into 16 separate
+    /// transactions.
+    StrictHalfWarp,
+    /// cc 1.2/1.3: the hardware issues the minimal set of 32/64/128-byte
+    /// segment transactions covering the addresses touched by a half-warp;
+    /// misalignment degrades gracefully instead of serializing.
+    SegmentedHalfWarp,
+    /// cc 2.x (Fermi): per-warp transactions through an L1 cache with
+    /// 128-byte lines. Included for the "newer models keep shifting the
+    /// optimum" extension experiments.
+    CachedWarp,
+}
+
+impl CoalescingModel {
+    /// Human-readable label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            CoalescingModel::StrictHalfWarp => "strict half-warp (cc1.0/1.1)",
+            CoalescingModel::SegmentedHalfWarp => "segmented half-warp (cc1.2/1.3)",
+            CoalescingModel::CachedWarp => "cached warp (cc2.x)",
+        }
+    }
+}
+
+/// Architectural limits of one compute-capability version.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeCapability {
+    pub major: u8,
+    pub minor: u8,
+    /// Maximum resident threads per SM (768 on cc1.0/1.1, 1024 on 1.2/1.3,
+    /// 1536 on 2.0).
+    pub max_threads_per_sm: u32,
+    /// Maximum resident warps per SM (24 / 32 / 48).
+    pub max_warps_per_sm: u32,
+    /// Maximum resident blocks per SM (8 for all cc 1.x/2.x).
+    pub max_blocks_per_sm: u32,
+    /// 32-bit registers per SM (8K / 16K / 32K).
+    pub registers_per_sm: u32,
+    /// Shared memory per SM in bytes (16 KiB on cc1.x, 48 KiB on 2.0).
+    pub shared_mem_per_sm: u32,
+    /// Maximum threads per block (512 on cc1.x, 1024 on 2.0).
+    pub max_threads_per_block: u32,
+    /// Maximum block dimensions (x, y, z): (512,512,64) on cc1.x.
+    pub max_block_dim: (u32, u32, u32),
+    /// Maximum grid dimensions (x, y): 65535 each on cc1.x/2.x.
+    pub max_grid_dim: (u32, u32),
+    /// Warp size (32 for every CUDA architecture covered).
+    pub warp_size: u32,
+    /// Register allocation granularity per block (256 on cc1.0/1.1,
+    /// 512 on cc1.2/1.3 — registers round up to this multiple).
+    pub register_alloc_unit: u32,
+    /// Coalescing behaviour.
+    pub coalescing: CoalescingModel,
+    /// SPs per SM (8 on cc1.x, 32 on cc2.0).
+    pub sps_per_sm: u32,
+}
+
+impl ComputeCapability {
+    /// cc 1.0 — GeForce 8800 GTS/GTX generation (G80).
+    pub const CC_1_0: ComputeCapability = ComputeCapability {
+        major: 1,
+        minor: 0,
+        max_threads_per_sm: 768,
+        max_warps_per_sm: 24,
+        max_blocks_per_sm: 8,
+        registers_per_sm: 8192,
+        shared_mem_per_sm: 16 * 1024,
+        max_threads_per_block: 512,
+        max_block_dim: (512, 512, 64),
+        max_grid_dim: (65535, 65535),
+        warp_size: 32,
+        register_alloc_unit: 256,
+        coalescing: CoalescingModel::StrictHalfWarp,
+        sps_per_sm: 8,
+    };
+
+    /// cc 1.1 — G84/G86/G92 (e.g. 9600 GT). Same limits as 1.0 plus
+    /// global atomics (not modeled).
+    pub const CC_1_1: ComputeCapability = ComputeCapability {
+        minor: 1,
+        ..ComputeCapability::CC_1_0
+    };
+
+    /// cc 1.2 — GT21x. 1024 threads / 32 warps / 16K registers, relaxed
+    /// coalescing.
+    pub const CC_1_2: ComputeCapability = ComputeCapability {
+        major: 1,
+        minor: 2,
+        max_threads_per_sm: 1024,
+        max_warps_per_sm: 32,
+        max_blocks_per_sm: 8,
+        registers_per_sm: 16384,
+        shared_mem_per_sm: 16 * 1024,
+        max_threads_per_block: 512,
+        max_block_dim: (512, 512, 64),
+        max_grid_dim: (65535, 65535),
+        warp_size: 32,
+        register_alloc_unit: 512,
+        coalescing: CoalescingModel::SegmentedHalfWarp,
+        sps_per_sm: 8,
+    };
+
+    /// cc 1.3 — GT200 (GTX 260/280, Tesla C1060). As 1.2 + double support.
+    pub const CC_1_3: ComputeCapability = ComputeCapability {
+        minor: 3,
+        ..ComputeCapability::CC_1_2
+    };
+
+    /// cc 2.0 — Fermi (the "recently announced" architecture in the
+    /// paper's introduction). Used by the forward-looking ablation.
+    pub const CC_2_0: ComputeCapability = ComputeCapability {
+        major: 2,
+        minor: 0,
+        max_threads_per_sm: 1536,
+        max_warps_per_sm: 48,
+        max_blocks_per_sm: 8,
+        registers_per_sm: 32768,
+        shared_mem_per_sm: 48 * 1024,
+        max_threads_per_block: 1024,
+        max_block_dim: (1024, 1024, 64),
+        max_grid_dim: (65535, 65535),
+        warp_size: 32,
+        register_alloc_unit: 64,
+        coalescing: CoalescingModel::CachedWarp,
+        sps_per_sm: 32,
+    };
+
+    /// Look up a capability by `major.minor` string, e.g. `"1.3"`.
+    pub fn by_version(v: &str) -> Option<ComputeCapability> {
+        match v {
+            "1.0" => Some(Self::CC_1_0),
+            "1.1" => Some(Self::CC_1_1),
+            "1.2" => Some(Self::CC_1_2),
+            "1.3" => Some(Self::CC_1_3),
+            "2.0" => Some(Self::CC_2_0),
+            _ => None,
+        }
+    }
+
+    /// `major.minor` as a string.
+    pub fn version(&self) -> String {
+        format!("{}.{}", self.major, self.minor)
+    }
+
+    /// Sanity invariant: threads = warps × warp_size must hold for every
+    /// real capability (checked by tests and proptests).
+    pub fn is_consistent(&self) -> bool {
+        self.max_threads_per_sm == self.max_warps_per_sm * self.warp_size
+            && self.max_threads_per_block <= self.max_threads_per_sm
+            && self.warp_size == 32
+    }
+}
+
+impl fmt::Display for ComputeCapability {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cc{}.{}", self.major, self.minor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [ComputeCapability; 5] = [
+        ComputeCapability::CC_1_0,
+        ComputeCapability::CC_1_1,
+        ComputeCapability::CC_1_2,
+        ComputeCapability::CC_1_3,
+        ComputeCapability::CC_2_0,
+    ];
+
+    #[test]
+    fn all_versions_consistent() {
+        for cc in ALL {
+            assert!(cc.is_consistent(), "{cc} inconsistent");
+        }
+    }
+
+    #[test]
+    fn paper_table1_limits() {
+        // Table I row "active warps per SM": 32 vs 24.
+        assert_eq!(ComputeCapability::CC_1_3.max_warps_per_sm, 32);
+        assert_eq!(ComputeCapability::CC_1_0.max_warps_per_sm, 24);
+        // Table I row "active threads per SM": 1024 vs 768.
+        assert_eq!(ComputeCapability::CC_1_3.max_threads_per_sm, 1024);
+        assert_eq!(ComputeCapability::CC_1_0.max_threads_per_sm, 768);
+        // Table I row "number of register per SM": 16384 vs 8192.
+        assert_eq!(ComputeCapability::CC_1_3.registers_per_sm, 16384);
+        assert_eq!(ComputeCapability::CC_1_0.registers_per_sm, 8192);
+    }
+
+    #[test]
+    fn block_dim_limits_match_guide() {
+        // §II.A: "a thread block has the maximum dimensions sizes of
+        // 512, 512 and 62 [64]" and "maximum number of threads in one
+        // block is limited to 512" for cc1.3.
+        let cc = ComputeCapability::CC_1_3;
+        assert_eq!(cc.max_block_dim, (512, 512, 64));
+        assert_eq!(cc.max_threads_per_block, 512);
+        assert_eq!(cc.max_grid_dim, (65535, 65535));
+    }
+
+    #[test]
+    fn version_round_trip() {
+        for cc in ALL {
+            if cc.minor == 1 && cc.major == 1 {
+                continue; // 1.1 shares limits with 1.0 but is distinct
+            }
+            let again = ComputeCapability::by_version(&cc.version()).unwrap();
+            assert_eq!(again, cc);
+        }
+        assert!(ComputeCapability::by_version("9.9").is_none());
+    }
+
+    #[test]
+    fn coalescing_progression() {
+        assert_eq!(
+            ComputeCapability::CC_1_0.coalescing,
+            CoalescingModel::StrictHalfWarp
+        );
+        assert_eq!(
+            ComputeCapability::CC_1_3.coalescing,
+            CoalescingModel::SegmentedHalfWarp
+        );
+        assert_eq!(
+            ComputeCapability::CC_2_0.coalescing,
+            CoalescingModel::CachedWarp
+        );
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-device descriptors: a compute capability plus the chip-specific
+//! parameters (SM count, clocks, memory) — one row of the paper's Table I
+//! plus the timing constants the simulator needs.
+
+use super::capability::ComputeCapability;
+use crate::codec::toml::TomlTable;
+use std::fmt;
+
+/// A concrete GPU model. `cc` carries the architectural limits; the other
+/// fields are the chip parameters that differ between models sharing a
+/// capability (e.g. GTX 260 vs GTX 280 are both cc1.3 with 24 vs 30 SMs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceDescriptor {
+    /// Short identifier used on the CLI and in reports (`gtx260`).
+    pub id: String,
+    /// Marketing name ("NVIDIA GeForce GTX 260").
+    pub name: String,
+    /// Architectural limits.
+    pub cc: ComputeCapability,
+    /// Number of streaming multiprocessors.
+    pub sm_count: u32,
+    /// Shader (SP) clock in MHz.
+    pub sp_clock_mhz: f64,
+    /// Memory clock in MHz (effective, DDR-doubled).
+    pub mem_clock_mhz: f64,
+    /// Memory bus width in bits.
+    pub mem_bus_bits: u32,
+    /// Global memory in MiB.
+    pub global_mem_mib: u32,
+    /// Approximate DRAM latency in SP-clock cycles (400–600 per the
+    /// programming guide; the simulator treats this as the uncontended
+    /// round-trip).
+    pub mem_latency_cycles: f64,
+    /// Extra cost (cycles) charged when a block's access pattern crosses
+    /// from one output row to the next and the rows land in different
+    /// DRAM pages — scaled by row pitch in the memory model. This is the
+    /// Fig. 4 "pointer movement between rows" effect.
+    pub row_switch_cycles: f64,
+}
+
+impl DeviceDescriptor {
+    /// Total SP (core) count = SMs × SPs/SM (Table I row "total SP").
+    pub fn total_sps(&self) -> u32 {
+        self.sm_count * self.cc.sps_per_sm
+    }
+
+    /// Peak memory bandwidth in GiB/s.
+    pub fn mem_bandwidth_gib(&self) -> f64 {
+        self.mem_clock_mhz * 1e6 * (self.mem_bus_bits as f64 / 8.0) / (1u64 << 30) as f64
+    }
+
+    /// Internal consistency (used by proptests and config validation).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.id.is_empty() || self.name.is_empty() {
+            return Err("device id/name must be non-empty".into());
+        }
+        if self.sm_count == 0 {
+            return Err(format!("{}: sm_count must be > 0", self.id));
+        }
+        if !self.cc.is_consistent() {
+            return Err(format!("{}: inconsistent compute capability", self.id));
+        }
+        if self.sp_clock_mhz <= 0.0 || self.mem_clock_mhz <= 0.0 {
+            return Err(format!("{}: clocks must be positive", self.id));
+        }
+        if self.mem_latency_cycles < 0.0 || self.row_switch_cycles < 0.0 {
+            return Err(format!("{}: latencies must be non-negative", self.id));
+        }
+        Ok(())
+    }
+
+    /// Build a descriptor from a parsed `[[device]]` TOML table. Fields:
+    /// `id`, `name`, `cc` (string, e.g. "1.3"), `sms`, `sp_clock_mhz`,
+    /// `mem_clock_mhz`, `mem_bus_bits`, `global_mem_mib`, and optional
+    /// `mem_latency_cycles` / `row_switch_cycles` overrides.
+    pub fn from_toml(t: &TomlTable) -> Result<DeviceDescriptor, String> {
+        let get_str = |k: &str| -> Result<String, String> {
+            t.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| format!("device missing string field '{k}'"))
+        };
+        let get_int = |k: &str| -> Result<i64, String> {
+            t.get(k)
+                .and_then(|v| v.as_int())
+                .ok_or_else(|| format!("device missing integer field '{k}'"))
+        };
+        let get_float = |k: &str| -> Result<f64, String> {
+            t.get(k)
+                .and_then(|v| v.as_float())
+                .ok_or_else(|| format!("device missing float field '{k}'"))
+        };
+        let cc_str = get_str("cc")?;
+        let cc = ComputeCapability::by_version(&cc_str)
+            .ok_or_else(|| format!("unknown compute capability '{cc_str}'"))?;
+        let d = DeviceDescriptor {
+            id: get_str("id")?,
+            name: get_str("name").unwrap_or_else(|_| get_str("id").unwrap()),
+            cc,
+            sm_count: get_int("sms")? as u32,
+            sp_clock_mhz: get_float("sp_clock_mhz")?,
+            mem_clock_mhz: get_float("mem_clock_mhz")?,
+            mem_bus_bits: get_int("mem_bus_bits")? as u32,
+            global_mem_mib: get_int("global_mem_mib")? as u32,
+            mem_latency_cycles: t
+                .get("mem_latency_cycles")
+                .and_then(|v| v.as_float())
+                .unwrap_or(500.0),
+            row_switch_cycles: t
+                .get("row_switch_cycles")
+                .and_then(|v| v.as_float())
+                .unwrap_or(20.0),
+        };
+        d.validate()?;
+        Ok(d)
+    }
+}
+
+impl fmt::Display for DeviceDescriptor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} ({}, {} SMs / {} SPs, {} MiB)",
+            self.name,
+            self.cc,
+            self.sm_count,
+            self.total_sps(),
+            self.global_mem_mib
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::toml::TomlDoc;
+
+    fn sample() -> DeviceDescriptor {
+        DeviceDescriptor {
+            id: "test".into(),
+            name: "Test GPU".into(),
+            cc: ComputeCapability::CC_1_3,
+            sm_count: 24,
+            sp_clock_mhz: 1242.0,
+            mem_clock_mhz: 999.0 * 2.0,
+            mem_bus_bits: 448,
+            global_mem_mib: 896,
+            mem_latency_cycles: 500.0,
+            row_switch_cycles: 20.0,
+        }
+    }
+
+    #[test]
+    fn total_sps_matches_table1() {
+        assert_eq!(sample().total_sps(), 192); // 24 SM × 8 SP
+    }
+
+    #[test]
+    fn bandwidth_is_plausible() {
+        // GTX 260: 448-bit @ ~2 GHz effective ≈ 104 GiB/s
+        let bw = sample().mem_bandwidth_gib();
+        assert!((90.0..120.0).contains(&bw), "bw={bw}");
+    }
+
+    #[test]
+    fn validate_catches_bad_fields() {
+        let mut d = sample();
+        d.sm_count = 0;
+        assert!(d.validate().is_err());
+        let mut d = sample();
+        d.sp_clock_mhz = -1.0;
+        assert!(d.validate().is_err());
+        let mut d = sample();
+        d.id.clear();
+        assert!(d.validate().is_err());
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn from_toml_round_trip() {
+        let doc = TomlDoc::parse(
+            r#"
+[[device]]
+id = "mygpu"
+name = "My GPU"
+cc = "1.0"
+sms = 12
+sp_clock_mhz = 1188.0
+mem_clock_mhz = 1584.0
+mem_bus_bits = 320
+global_mem_mib = 320
+"#,
+        )
+        .unwrap();
+        let d = DeviceDescriptor::from_toml(&doc.arrays["device"][0]).unwrap();
+        assert_eq!(d.id, "mygpu");
+        assert_eq!(d.cc.max_threads_per_sm, 768);
+        assert_eq!(d.mem_latency_cycles, 500.0); // default applied
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_cc() {
+        let doc = TomlDoc::parse(
+            "[[device]]\nid = \"x\"\nname = \"x\"\ncc = \"7.5\"\nsms = 1\nsp_clock_mhz = 1.0\nmem_clock_mhz = 1.0\nmem_bus_bits = 64\nglobal_mem_mib = 128\n",
+        )
+        .unwrap();
+        assert!(DeviceDescriptor::from_toml(&doc.arrays["device"][0]).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! GPU device models: compute-capability feature sets and per-device
+//! descriptors (the paper's Table I), plus a registry of known devices.
+//!
+//! Everything downstream — the occupancy calculator ([`crate::tiling`]),
+//! the timing simulator ([`crate::sim`]), and the autotuner — is
+//! parameterized by a [`DeviceDescriptor`], so adding a new GPU model is a
+//! single registry entry (or a `[[device]]` block in a TOML config).
+
+pub mod capability;
+pub mod descriptor;
+pub mod registry;
+
+pub use capability::{CoalescingModel, ComputeCapability};
+pub use descriptor::DeviceDescriptor;
+pub use registry::{builtin_devices, find_device, paper_pair, table1};

@@ -1,0 +1,258 @@
+//! Built-in device registry: the paper's two testbed GPUs, several
+//! contemporaries for the cross-model ablations, and the synthetic G1/G2
+//! pair from the paper's §IV.C extreme example.
+
+use super::capability::ComputeCapability;
+use super::descriptor::DeviceDescriptor;
+use crate::util::text::Table;
+
+fn dev(
+    id: &str,
+    name: &str,
+    cc: ComputeCapability,
+    sm_count: u32,
+    sp_clock_mhz: f64,
+    mem_clock_mhz: f64,
+    mem_bus_bits: u32,
+    global_mem_mib: u32,
+) -> DeviceDescriptor {
+    DeviceDescriptor {
+        id: id.into(),
+        name: name.into(),
+        cc,
+        sm_count,
+        sp_clock_mhz,
+        mem_clock_mhz,
+        mem_bus_bits,
+        global_mem_mib,
+        mem_latency_cycles: 500.0,
+        row_switch_cycles: 20.0,
+    }
+}
+
+/// All built-in devices. The first two are the paper's testbed (Table I).
+pub fn builtin_devices() -> Vec<DeviceDescriptor> {
+    vec![
+        // ---- the paper's testbed -----------------------------------------
+        dev(
+            "gtx260",
+            "NVIDIA GeForce GTX 260",
+            ComputeCapability::CC_1_3,
+            24,     // Table I: 24 SMs, 192 SPs
+            1242.0, // shader clock
+            1998.0, // effective memory clock
+            448,
+            896, // "1G" in Table I is marketing rounding of 896 MiB
+        ),
+        dev(
+            "8800gts",
+            "NVIDIA GeForce 8800 GTS",
+            ComputeCapability::CC_1_0,
+            12,     // Table I: 12 SMs, 96 SPs
+            1188.0, // shader clock (G80 GTS)
+            1584.0, // effective memory clock
+            320,
+            320, // Table I: 320 MB
+        ),
+        // ---- contemporaries for the cross-model ablation ------------------
+        dev(
+            "8800gtx",
+            "NVIDIA GeForce 8800 GTX",
+            ComputeCapability::CC_1_0,
+            16,
+            1350.0,
+            1800.0,
+            384,
+            768,
+        ),
+        dev(
+            "9600gt",
+            "NVIDIA GeForce 9600 GT",
+            ComputeCapability::CC_1_1,
+            8,
+            1625.0,
+            1800.0,
+            256,
+            512,
+        ),
+        dev(
+            "gtx280",
+            "NVIDIA GeForce GTX 280",
+            ComputeCapability::CC_1_3,
+            30,
+            1296.0,
+            2214.0,
+            512,
+            1024,
+        ),
+        dev(
+            "teslac1060",
+            "NVIDIA Tesla C1060",
+            ComputeCapability::CC_1_3,
+            30,
+            1296.0,
+            1600.0,
+            512,
+            4096,
+        ),
+        dev(
+            "fermi",
+            "NVIDIA Fermi (GF100-class, announced)",
+            ComputeCapability::CC_2_0,
+            16,
+            1401.0,
+            3696.0,
+            384,
+            1536,
+        ),
+        // ---- §IV.C synthetic extreme pair ---------------------------------
+        // "G1 is a GPU with two SMs (16 cores), G2 is a GPU with twenty SMs
+        // (160 cores). Each SM can support at most 1024 active threads."
+        dev(
+            "g1",
+            "Synthetic G1 (2 SMs, paper §IV.C)",
+            ComputeCapability::CC_1_3,
+            2,
+            1242.0,
+            1998.0,
+            448,
+            896,
+        ),
+        dev(
+            "g2",
+            "Synthetic G2 (20 SMs, paper §IV.C)",
+            ComputeCapability::CC_1_3,
+            20,
+            1242.0,
+            1998.0,
+            448,
+            896,
+        ),
+    ]
+}
+
+/// Find a built-in device by id (case-insensitive).
+pub fn find_device(id: &str) -> Option<DeviceDescriptor> {
+    let id = id.to_ascii_lowercase();
+    builtin_devices().into_iter().find(|d| d.id == id)
+}
+
+/// The paper's testbed pair: (GTX 260, GeForce 8800 GTS).
+pub fn paper_pair() -> (DeviceDescriptor, DeviceDescriptor) {
+    (
+        find_device("gtx260").expect("builtin"),
+        find_device("8800gts").expect("builtin"),
+    )
+}
+
+/// Regenerate the paper's Table I ("COMPUTE CAPABILITY OF GTX260 AND
+/// GEFORCE 8800") from the registry.
+pub fn table1() -> Table {
+    let (gtx, gts) = paper_pair();
+    let mut t = Table::new(vec!["Features", &gtx.name, &gts.name]);
+    let row = |t: &mut Table, label: &str, a: String, b: String| {
+        t.row(vec![label.to_string(), a, b]);
+    };
+    row(
+        &mut t,
+        "number of register per SM",
+        gtx.cc.registers_per_sm.to_string(),
+        gts.cc.registers_per_sm.to_string(),
+    );
+    row(
+        &mut t,
+        "active warps per SM",
+        gtx.cc.max_warps_per_sm.to_string(),
+        gts.cc.max_warps_per_sm.to_string(),
+    );
+    row(
+        &mut t,
+        "active threads per SM",
+        gtx.cc.max_threads_per_sm.to_string(),
+        gts.cc.max_threads_per_sm.to_string(),
+    );
+    row(
+        &mut t,
+        "total SP",
+        gtx.total_sps().to_string(),
+        gts.total_sps().to_string(),
+    );
+    row(
+        &mut t,
+        "number of SM",
+        gtx.sm_count.to_string(),
+        gts.sm_count.to_string(),
+    );
+    row(
+        &mut t,
+        "global memory",
+        format!("{} MiB", gtx.global_mem_mib),
+        format!("{} MiB", gts.global_mem_mib),
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_builtins_validate() {
+        for d in builtin_devices() {
+            d.validate().unwrap_or_else(|e| panic!("{}: {e}", d.id));
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let devs = builtin_devices();
+        let mut ids: Vec<&str> = devs.iter().map(|d| d.id.as_str()).collect();
+        ids.sort_unstable();
+        let before = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "duplicate device ids");
+    }
+
+    #[test]
+    fn paper_pair_matches_table1() {
+        let (gtx, gts) = paper_pair();
+        // Table I, all six rows:
+        assert_eq!(gtx.cc.registers_per_sm, 16384);
+        assert_eq!(gts.cc.registers_per_sm, 8192);
+        assert_eq!(gtx.cc.max_warps_per_sm, 32);
+        assert_eq!(gts.cc.max_warps_per_sm, 24);
+        assert_eq!(gtx.cc.max_threads_per_sm, 1024);
+        assert_eq!(gts.cc.max_threads_per_sm, 768);
+        assert_eq!(gtx.total_sps(), 192);
+        assert_eq!(gts.total_sps(), 96);
+        assert_eq!(gtx.sm_count, 24);
+        assert_eq!(gts.sm_count, 12);
+    }
+
+    #[test]
+    fn extreme_pair_matches_section_4c() {
+        let g1 = find_device("g1").unwrap();
+        let g2 = find_device("g2").unwrap();
+        assert_eq!(g1.sm_count, 2);
+        assert_eq!(g1.total_sps(), 16);
+        assert_eq!(g2.sm_count, 20);
+        assert_eq!(g2.total_sps(), 160);
+        assert_eq!(g1.cc.max_threads_per_sm, 1024);
+    }
+
+    #[test]
+    fn find_is_case_insensitive_and_total() {
+        assert!(find_device("GTX260").is_some());
+        assert!(find_device("nope").is_none());
+    }
+
+    #[test]
+    fn table1_renders_six_rows() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 6);
+        let text = t.render();
+        assert!(text.contains("16384"));
+        assert!(text.contains("8192"));
+        assert!(text.contains("320 MiB"));
+    }
+}

@@ -1,0 +1,321 @@
+//! A bounded multi-producer/multi-consumer channel built on
+//! `Mutex<VecDeque>` + condvars.
+//!
+//! Why not `std::sync::mpsc`? The coordinator needs (a) *multi-consumer*
+//! receive (a worker pool pulling from one queue) and (b) *backpressure*
+//! — a bounded queue whose `send` blocks (or `try_send` fails) when the
+//! serving system is saturated. Both are first-class here and covered by
+//! the coordinator's property tests.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Shared<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half. Cloning adds a producer.
+pub struct Sender<T>(Arc<Shared<T>>);
+
+/// Receiving half. Cloning adds a consumer.
+pub struct Receiver<T>(Arc<Shared<T>>);
+
+/// Error returned by `send` when all receivers are gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+/// Error returned by `try_send`.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// Queue at capacity (backpressure signal).
+    Full(T),
+    /// All receivers dropped.
+    Disconnected(T),
+}
+
+/// Error returned by `recv` when the queue is empty and all senders are
+/// gone.
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a bounded channel of capacity `cap` (≥ 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(cap >= 1, "channel capacity must be >= 1");
+    let shared = Arc::new(Shared {
+        q: Mutex::new(State {
+            buf: VecDeque::with_capacity(cap),
+            senders: 1,
+            receivers: 1,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap,
+    });
+    (Sender(Arc::clone(&shared)), Receiver(shared))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; waits while full. Errors if all receivers dropped.
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError(v));
+            }
+            if st.buf.len() < self.0.cap {
+                st.buf.push_back(v);
+                drop(st);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send: `Full` signals backpressure.
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.0.q.lock().unwrap();
+        if st.receivers == 0 {
+            return Err(TrySendError::Disconnected(v));
+        }
+        if st.buf.len() >= self.0.cap {
+            return Err(TrySendError::Full(v));
+        }
+        st.buf.push_back(v);
+        drop(st);
+        self.0.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive. Errors once empty AND all senders dropped.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.0.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, d: Duration) -> Result<Option<T>, RecvError> {
+        let deadline = std::time::Instant::now() + d;
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                drop(st);
+                self.0.not_full.notify_one();
+                return Ok(Some(v));
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _res) = self
+                .0
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain_now(&self) -> Vec<T> {
+        let mut st = self.0.q.lock().unwrap();
+        let out: Vec<T> = st.buf.drain(..).collect();
+        drop(st);
+        self.0.not_full.notify_all();
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().senders += 1;
+        Sender(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.q.lock().unwrap().receivers += 1;
+        Receiver(Arc::clone(&self.0))
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            drop(st);
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            drop(st);
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let (tx, rx) = bounded(8);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn try_send_full_signals_backpressure() {
+        let (tx, rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        match tx.try_send(3) {
+            Err(TrySendError::Full(3)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(rx.recv().unwrap(), 1);
+        tx.try_send(3).unwrap();
+    }
+
+    #[test]
+    fn recv_errors_after_senders_gone() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_errors_after_receivers_gone() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError(1)));
+        assert!(matches!(
+            tx.try_send(2),
+            Err(TrySendError::Disconnected(2))
+        ));
+    }
+
+    #[test]
+    fn blocking_send_wakes_on_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send(1));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 0);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(16);
+        let n_producers = 4;
+        let per = 500;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = bounded::<u32>(1);
+        let got = rx.recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn drain_now() {
+        let (tx, rx) = bounded(8);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.drain_now(), vec![0, 1, 2, 3]);
+        assert!(rx.is_empty());
+    }
+}

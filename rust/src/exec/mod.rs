@@ -1,0 +1,10 @@
+//! Execution substrate: a fixed-size thread pool and a bounded MPMC
+//! channel (the offline environment has no tokio; the coordinator is a
+//! thread-per-worker system, which at this scale is the simpler and
+//! faster design anyway — see DESIGN.md §2).
+
+pub mod channel;
+pub mod pool;
+
+pub use channel::{bounded, Receiver, RecvError, SendError, Sender, TrySendError};
+pub use pool::ThreadPool;

@@ -1,0 +1,154 @@
+//! A fixed-size thread pool with graceful shutdown, used by the
+//! coordinator's worker stage and by the bench harness's parallel sweeps.
+
+use super::channel::{bounded, Receiver, Sender};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size pool. Jobs are dispatched FIFO to idle workers; `drop`
+/// (or [`ThreadPool::join`]) waits for queued jobs to finish.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Create a pool of `n` workers (≥1) with a job queue of `2n`.
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = bounded(2 * n);
+        let workers = (0..n)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("tilekit-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Submit a job; blocks if the queue is full (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool joined")
+            .send(Box::new(job))
+            .ok();
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Close the queue and wait for all workers to drain and exit.
+    pub fn join(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        self.tx.take(); // closes the channel
+        for w in self.workers.drain(..) {
+            w.join().expect("worker panicked");
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order. A convenience
+    /// built on scoped threads (no 'static bound needed).
+    pub fn scoped_map<T: Sync, R: Send>(
+        n_threads: usize,
+        items: &[T],
+        f: impl Fn(&T) -> R + Sync,
+    ) -> Vec<R> {
+        let n_threads = n_threads.max(1).min(items.len().max(1));
+        let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let out_ptr = std::sync::Mutex::new(&mut out);
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..n_threads {
+                s.spawn(|_| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    out_ptr.lock().unwrap()[i] = Some(r);
+                });
+            }
+        })
+        .expect("scoped threads");
+        out.into_iter().map(|o| o.expect("all filled")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if self.tx.is_some() {
+            self.join_inner();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = ThreadPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&count);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn drop_joins() {
+        let count = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&count);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop here
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn scoped_map_preserves_order() {
+        let items: Vec<u64> = (0..200).collect();
+        let out = ThreadPool::scoped_map(8, &items, |&x| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        pool.join();
+        let out = ThreadPool::scoped_map(0, &[1, 2, 3], |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

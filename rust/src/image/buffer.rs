@@ -1,0 +1,195 @@
+//! Row-major image buffer with explicit pitch.
+//!
+//! The pitch (row stride) is kept distinct from the width because the
+//! paper's Fig. 4 effect — the cost of "pointer movement between rows" —
+//! is a function of the *pitch in memory*, and the simulator's DRAM model
+//! consumes it directly.
+
+use std::fmt;
+
+/// A single-channel image of `T` (the kernels operate per channel; RGB
+/// images are three planes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image<T> {
+    width: usize,
+    height: usize,
+    /// Row stride in elements; ≥ width.
+    pitch: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Image<T> {
+    /// A zeroed `w`×`h` image with tight pitch.
+    pub fn new(w: usize, h: usize) -> Image<T> {
+        Self::with_pitch(w, h, w)
+    }
+
+    /// A zeroed image with an explicit pitch (pitch ≥ w).
+    pub fn with_pitch(w: usize, h: usize, pitch: usize) -> Image<T> {
+        assert!(w > 0 && h > 0, "image dims must be positive");
+        assert!(pitch >= w, "pitch must cover the width");
+        Image {
+            width: w,
+            height: h,
+            pitch,
+            data: vec![T::default(); pitch * h],
+        }
+    }
+
+    /// Build from row-major data with tight pitch. `data.len()` must be
+    /// exactly `w*h`.
+    pub fn from_vec(w: usize, h: usize, data: Vec<T>) -> Image<T> {
+        assert!(w > 0 && h > 0, "image dims must be positive");
+        assert_eq!(data.len(), w * h, "data length must be w*h");
+        Image {
+            width: w,
+            height: h,
+            pitch: w,
+            data,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+    pub fn height(&self) -> usize {
+        self.height
+    }
+    pub fn pitch(&self) -> usize {
+        self.pitch
+    }
+
+    /// Raw element storage (pitch-strided).
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Dense row-major copy without pitch padding.
+    pub fn to_dense(&self) -> Vec<T> {
+        if self.pitch == self.width {
+            return self.data.clone();
+        }
+        let mut out = Vec::with_capacity(self.width * self.height);
+        for y in 0..self.height {
+            let start = y * self.pitch;
+            out.extend_from_slice(&self.data[start..start + self.width]);
+        }
+        out
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> T {
+        debug_assert!(x < self.width && y < self.height);
+        self.data[y * self.pitch + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: T) {
+        debug_assert!(x < self.width && y < self.height);
+        self.data[y * self.pitch + x] = v;
+    }
+
+    /// Clamped fetch: out-of-range coordinates are clamped to the border
+    /// (the boundary convention shared with the Pallas kernels and ref.py).
+    #[inline]
+    pub fn get_clamped(&self, x: isize, y: isize) -> T {
+        let xc = x.clamp(0, self.width as isize - 1) as usize;
+        let yc = y.clamp(0, self.height as isize - 1) as usize;
+        self.get(xc, yc)
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, y: usize) -> &[T] {
+        let start = y * self.pitch;
+        &self.data[start..start + self.width]
+    }
+
+    /// Map every pixel through `f`, producing a new image (tight pitch).
+    pub fn map<U: Copy + Default>(&self, mut f: impl FnMut(T) -> U) -> Image<U> {
+        let mut out = Image::new(self.width, self.height);
+        for y in 0..self.height {
+            for x in 0..self.width {
+                out.set(x, y, f(self.get(x, y)));
+            }
+        }
+        out
+    }
+}
+
+impl Image<f32> {
+    /// Maximum absolute difference against another image of the same size.
+    pub fn max_abs_diff(&self, other: &Image<f32>) -> f32 {
+        assert_eq!(self.width, other.width);
+        assert_eq!(self.height, other.height);
+        let mut m = 0f32;
+        for y in 0..self.height {
+            for x in 0..self.width {
+                m = m.max((self.get(x, y) - other.get(x, y)).abs());
+            }
+        }
+        m
+    }
+}
+
+impl<T> fmt::Display for Image<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Image({}x{}, pitch {})", self.width, self.height, self.pitch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_round_trip() {
+        let mut img: Image<f32> = Image::new(4, 3);
+        img.set(3, 2, 7.5);
+        assert_eq!(img.get(3, 2), 7.5);
+        assert_eq!(img.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn pitch_indexing() {
+        let mut img: Image<u8> = Image::with_pitch(3, 2, 8);
+        img.set(2, 1, 9);
+        assert_eq!(img.data()[8 + 2], 9);
+        assert_eq!(img.to_dense(), vec![0, 0, 0, 0, 0, 9]);
+    }
+
+    #[test]
+    fn clamped_fetch() {
+        let img = Image::from_vec(2, 2, vec![1f32, 2.0, 3.0, 4.0]);
+        assert_eq!(img.get_clamped(-5, -5), 1.0);
+        assert_eq!(img.get_clamped(10, 0), 2.0);
+        assert_eq!(img.get_clamped(0, 10), 3.0);
+        assert_eq!(img.get_clamped(10, 10), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn from_vec_checks_len() {
+        Image::from_vec(2, 2, vec![0f32; 3]);
+    }
+
+    #[test]
+    fn map_converts_type() {
+        let img = Image::from_vec(2, 1, vec![0.25f32, 0.5]);
+        let bytes = img.map(|v| (v * 255.0) as u8);
+        assert_eq!(bytes.get(0, 0), 63);
+        assert_eq!(bytes.get(1, 0), 127);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Image::from_vec(2, 1, vec![1f32, 2.0]);
+        let b = Image::from_vec(2, 1, vec![1.5f32, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn row_slice() {
+        let img = Image::from_vec(3, 2, vec![1u8, 2, 3, 4, 5, 6]);
+        assert_eq!(img.row(1), &[4, 5, 6]);
+    }
+}

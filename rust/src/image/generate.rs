@@ -1,0 +1,138 @@
+//! Deterministic synthetic test images.
+//!
+//! The paper resizes an 800×800 photograph; interpolation cost is
+//! data-independent, so any deterministic source with structure (edges,
+//! gradients, texture) exercises the same code paths while keeping the
+//! repo free of binary assets. All generators are seeded/deterministic so
+//! python and rust can build bit-identical inputs.
+
+use super::buffer::Image;
+use crate::util::Pcg32;
+
+/// Smooth two-axis gradient: f(x,y) = x/(w-1) stacked with y/(h-1).
+pub fn gradient(w: usize, h: usize) -> Image<f32> {
+    let mut img = Image::new(w, h);
+    let wd = (w.max(2) - 1) as f32;
+    let hd = (h.max(2) - 1) as f32;
+    for y in 0..h {
+        for x in 0..w {
+            img.set(x, y, 0.5 * (x as f32 / wd) + 0.5 * (y as f32 / hd));
+        }
+    }
+    img
+}
+
+/// Checkerboard with the given cell size — the worst case for
+/// interpolation quality (hard edges everywhere).
+pub fn checkerboard(w: usize, h: usize, cell: usize) -> Image<f32> {
+    assert!(cell > 0);
+    let mut img = Image::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let v = ((x / cell) + (y / cell)) % 2;
+            img.set(x, y, v as f32);
+        }
+    }
+    img
+}
+
+/// Band-limited value noise: bilinearly-interpolated random lattice,
+/// several octaves. A stand-in for photographic texture.
+pub fn value_noise(w: usize, h: usize, seed: u64) -> Image<f32> {
+    let mut img = Image::new(w, h);
+    let octaves: &[(usize, f32)] = &[(8, 0.5), (16, 0.3), (32, 0.2)];
+    for (oi, &(cells, amp)) in octaves.iter().enumerate() {
+        let gw = cells + 2;
+        let gh = cells + 2;
+        let mut rng = Pcg32::new(seed, oi as u64 + 1);
+        let lattice: Vec<f32> = (0..gw * gh).map(|_| rng.f32()).collect();
+        for y in 0..h {
+            let fy = y as f32 / h as f32 * cells as f32;
+            let y0 = fy as usize;
+            let ty = fy - y0 as f32;
+            for x in 0..w {
+                let fx = x as f32 / w as f32 * cells as f32;
+                let x0 = fx as usize;
+                let tx = fx - x0 as f32;
+                let l = |xx: usize, yy: usize| lattice[yy * gw + xx];
+                let top = l(x0, y0) * (1.0 - tx) + l(x0 + 1, y0) * tx;
+                let bot = l(x0, y0 + 1) * (1.0 - tx) + l(x0 + 1, y0 + 1) * tx;
+                let v = top * (1.0 - ty) + bot * ty;
+                img.set(x, y, img.get(x, y) + amp * v);
+            }
+        }
+    }
+    img
+}
+
+/// The standard test scene used across examples and benches: gradient +
+/// noise + a checker patch, mimicking a photo's mix of smooth regions,
+/// texture, and hard edges. Deterministic for a given seed.
+pub fn test_scene(w: usize, h: usize, seed: u64) -> Image<f32> {
+    let g = gradient(w, h);
+    let n = value_noise(w, h, seed);
+    let c = checkerboard(w, h, (w / 40).max(1));
+    let mut img = Image::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let blend = 0.55 * g.get(x, y) + 0.35 * n.get(x, y) + 0.10 * c.get(x, y);
+            img.set(x, y, blend.clamp(0.0, 1.0));
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_corners() {
+        let g = gradient(10, 10);
+        assert!((g.get(0, 0) - 0.0).abs() < 1e-6);
+        assert!((g.get(9, 9) - 1.0).abs() < 1e-6);
+        assert!((g.get(9, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkerboard_alternates() {
+        let c = checkerboard(8, 8, 2);
+        assert_eq!(c.get(0, 0), 0.0);
+        assert_eq!(c.get(2, 0), 1.0);
+        assert_eq!(c.get(0, 2), 1.0);
+        assert_eq!(c.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn noise_deterministic_and_bounded() {
+        let a = value_noise(32, 32, 7);
+        let b = value_noise(32, 32, 7);
+        assert_eq!(a, b);
+        let c = value_noise(32, 32, 8);
+        assert_ne!(a, c, "different seeds should differ");
+        for y in 0..32 {
+            for x in 0..32 {
+                let v = a.get(x, y);
+                assert!((0.0..=1.0).contains(&v), "noise out of range: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn scene_in_unit_range() {
+        let s = test_scene(64, 48, 42);
+        assert_eq!(s.width(), 64);
+        assert_eq!(s.height(), 48);
+        for y in 0..48 {
+            for x in 0..64 {
+                let v = s.get(x, y);
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn scene_deterministic() {
+        assert_eq!(test_scene(16, 16, 1), test_scene(16, 16, 1));
+    }
+}

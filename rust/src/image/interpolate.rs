@@ -1,0 +1,281 @@
+//! CPU reference interpolators.
+//!
+//! These implement exactly the paper's §II.B formulation (equations
+//! (1)–(5)): the *terminal* pixel at `(x_f, y_f)` in the final image maps
+//! to the *logical* pixel `(x_p, y_p) = (x_f/scale, y_f/scale)` in the
+//! source; the four neighbours and the fractional offsets produce the
+//! bilinear blend. The same convention (truncation to int, clamp at the
+//! border) is implemented by `python/compile/kernels/ref.py` and the
+//! Pallas kernels, so all three layers agree bit-for-bit up to f32
+//! rounding.
+
+use super::buffer::Image;
+
+/// Interpolation method selector (shared with CLI / config / manifest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Interpolator {
+    Nearest,
+    Bilinear,
+    Bicubic,
+}
+
+impl Interpolator {
+    pub fn label(self) -> &'static str {
+        match self {
+            Interpolator::Nearest => "nearest",
+            Interpolator::Bilinear => "bilinear",
+            Interpolator::Bicubic => "bicubic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Interpolator> {
+        match s.to_ascii_lowercase().as_str() {
+            "nearest" | "nn" => Some(Interpolator::Nearest),
+            "bilinear" | "bl" => Some(Interpolator::Bilinear),
+            "bicubic" | "bc" => Some(Interpolator::Bicubic),
+            _ => None,
+        }
+    }
+
+    /// Run this interpolator over `src`, scaling by `scale`.
+    pub fn run(self, src: &Image<f32>, scale: u32) -> Image<f32> {
+        match self {
+            Interpolator::Nearest => nearest(src, scale),
+            Interpolator::Bilinear => bilinear(src, scale),
+            Interpolator::Bicubic => bicubic(src, scale),
+        }
+    }
+}
+
+/// Output size for a given source and integer scale.
+pub fn output_size(src_w: usize, src_h: usize, scale: u32) -> (usize, usize) {
+    (src_w * scale as usize, src_h * scale as usize)
+}
+
+/// Paper eq. (1): terminal → logical coordinates.
+#[inline]
+fn logical(xf: usize, scale: u32) -> f32 {
+    xf as f32 / scale as f32
+}
+
+/// Nearest-neighbour up-scaling.
+pub fn nearest(src: &Image<f32>, scale: u32) -> Image<f32> {
+    assert!(scale >= 1);
+    let (w, h) = output_size(src.width(), src.height(), scale);
+    let mut out = Image::new(w, h);
+    for yf in 0..h {
+        let yp = (logical(yf, scale) + 0.5) as isize;
+        for xf in 0..w {
+            let xp = (logical(xf, scale) + 0.5) as isize;
+            out.set(xf, yf, src.get_clamped(xp, yp));
+        }
+    }
+    out
+}
+
+/// Bilinear up-scaling — paper equations (1)–(5) with border clamping.
+pub fn bilinear(src: &Image<f32>, scale: u32) -> Image<f32> {
+    assert!(scale >= 1);
+    let (w, h) = output_size(src.width(), src.height(), scale);
+    let mut out = Image::new(w, h);
+    for yf in 0..h {
+        let yp = logical(yf, scale);
+        let y1 = yp as isize; // eq. (3): int(y_p)
+        let off_y = yp - y1 as f32; // eq. (4)
+        for xf in 0..w {
+            let xp = logical(xf, scale);
+            let x1 = xp as isize; // eq. (2): int(x_p)
+            let off_x = xp - x1 as f32; // eq. (4)
+
+            // eq. (2)/(3): the four neighbours (clamped at the border)
+            let f11 = src.get_clamped(x1, y1); // (x1, y1)
+            let f21 = src.get_clamped(x1 + 1, y1); // (x2, y2)
+            let f12 = src.get_clamped(x1, y1 + 1); // (x3, y3)
+            let f22 = src.get_clamped(x1 + 1, y1 + 1); // (x4, y4)
+
+            // eq. (5) (with the obvious correction of the final term's
+            // (1-offsetY) typo to (1-offsetX); the published formula does
+            // not reduce to the identity at offset 0 otherwise)
+            let top = off_x * f21 + (1.0 - off_x) * f11;
+            let bot = off_x * f22 + (1.0 - off_x) * f12;
+            out.set(xf, yf, (1.0 - off_y) * top + off_y * bot);
+        }
+    }
+    out
+}
+
+/// Catmull-Rom cubic weight (a = -0.5, the classic bicubic kernel).
+#[inline]
+fn cubic_weight(t: f32) -> f32 {
+    const A: f32 = -0.5;
+    let t = t.abs();
+    if t <= 1.0 {
+        (A + 2.0) * t * t * t - (A + 3.0) * t * t + 1.0
+    } else if t < 2.0 {
+        A * t * t * t - 5.0 * A * t * t + 8.0 * A * t - 4.0 * A
+    } else {
+        0.0
+    }
+}
+
+/// Bicubic (Catmull-Rom, 16-tap) up-scaling with border clamping.
+pub fn bicubic(src: &Image<f32>, scale: u32) -> Image<f32> {
+    assert!(scale >= 1);
+    let (w, h) = output_size(src.width(), src.height(), scale);
+    let mut out = Image::new(w, h);
+    for yf in 0..h {
+        let yp = logical(yf, scale);
+        let y1 = yp as isize;
+        let fy = yp - y1 as f32;
+        for xf in 0..w {
+            let xp = logical(xf, scale);
+            let x1 = xp as isize;
+            let fx = xp - x1 as f32;
+            let mut acc = 0f32;
+            let mut wsum = 0f32;
+            for dy in -1..=2isize {
+                let wy = cubic_weight(fy - dy as f32);
+                for dx in -1..=2isize {
+                    let wx = cubic_weight(fx - dx as f32);
+                    let wgt = wx * wy;
+                    acc += wgt * src.get_clamped(x1 + dx, y1 + dy);
+                    wsum += wgt;
+                }
+            }
+            out.set(xf, yf, acc / wsum);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+
+    fn constant(w: usize, h: usize, v: f32) -> Image<f32> {
+        Image::from_vec(w, h, vec![v; w * h])
+    }
+
+    #[test]
+    fn scale_one_is_identity() {
+        let src = generate::gradient(16, 12);
+        for interp in [Interpolator::Nearest, Interpolator::Bilinear] {
+            let out = interp.run(&src, 1);
+            assert_eq!(out.width(), 16);
+            assert_eq!(out.height(), 12);
+            assert!(out.max_abs_diff(&src) < 1e-6, "{:?}", interp);
+        }
+        // bicubic at integer sample points is also the identity
+        // (Catmull-Rom interpolates through its control points)
+        let out = bicubic(&src, 1);
+        assert!(out.max_abs_diff(&src) < 1e-5);
+    }
+
+    #[test]
+    fn constant_image_stays_constant() {
+        let src = constant(8, 8, 3.25);
+        for interp in [
+            Interpolator::Nearest,
+            Interpolator::Bilinear,
+            Interpolator::Bicubic,
+        ] {
+            let out = interp.run(&src, 4);
+            assert_eq!(out.width(), 32);
+            for y in 0..out.height() {
+                for x in 0..out.width() {
+                    assert!(
+                        (out.get(x, y) - 3.25).abs() < 1e-5,
+                        "{:?} at ({x},{y}) = {}",
+                        interp,
+                        out.get(x, y)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bilinear_midpoint_exact() {
+        // Two-pixel row [0, 1] at scale 2: output x=1 maps to x_p = 0.5 ⇒
+        // exact average 0.5.
+        let src = Image::from_vec(2, 1, vec![0f32, 1.0]);
+        let out = bilinear(&src, 2);
+        assert_eq!(out.width(), 4);
+        assert!((out.get(0, 0) - 0.0).abs() < 1e-7);
+        assert!((out.get(1, 0) - 0.5).abs() < 1e-7);
+        assert!((out.get(2, 0) - 1.0).abs() < 1e-7);
+        // x=3 → x_p=1.5, neighbour x2 clamps to border ⇒ stays 1.0
+        assert!((out.get(3, 0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bilinear_linear_ramp_preserved() {
+        // Bilinear must reproduce an affine function exactly (up to f32):
+        // f(x,y) = x + 2y on a ramp image, interior points.
+        let mut src = Image::new(8, 8);
+        for y in 0..8 {
+            for x in 0..8 {
+                src.set(x, y, x as f32 + 2.0 * y as f32);
+            }
+        }
+        let out = bilinear(&src, 4);
+        for yf in 0..(7 * 4) {
+            for xf in 0..(7 * 4) {
+                let want = xf as f32 / 4.0 + 2.0 * (yf as f32 / 4.0);
+                assert!(
+                    (out.get(xf, yf) - want).abs() < 1e-4,
+                    "({xf},{yf}): {} vs {want}",
+                    out.get(xf, yf)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_picks_nearest() {
+        // src 2x1 at scale 2 → 4x2 output. x_p = x_f/2, rounded half-up:
+        // x_f=0 → 0, x_f=1 → 1 (0.5 rounds up), x_f=2,3 → 1.
+        let src = Image::from_vec(2, 1, vec![10f32, 20.0]);
+        let out = nearest(&src, 2);
+        assert_eq!(out.width(), 4);
+        assert_eq!(out.height(), 2);
+        assert_eq!(
+            out.to_dense(),
+            vec![10.0, 20.0, 20.0, 20.0, 10.0, 20.0, 20.0, 20.0]
+        );
+    }
+
+    #[test]
+    fn bicubic_sharper_than_bilinear_on_edge() {
+        // On a step edge, bicubic overshoots (ringing) while bilinear
+        // stays within [0, 1]: a qualitative sanity check that the two
+        // kernels genuinely differ.
+        let mut src = Image::new(8, 1);
+        for x in 4..8 {
+            src.set(x, 0, 1.0);
+        }
+        let bl = bilinear(&src, 4);
+        let bc = bicubic(&src, 4);
+        let bl_max = (0..bl.width()).map(|x| bl.get(x, 0)).fold(0f32, f32::max);
+        let bc_max = (0..bc.width()).map(|x| bc.get(x, 0)).fold(0f32, f32::max);
+        assert!(bl_max <= 1.0 + 1e-6);
+        assert!(bc_max > 1.0 + 1e-4, "bicubic should overshoot: {bc_max}");
+    }
+
+    #[test]
+    fn output_sizes() {
+        for s in 1..=10 {
+            let (w, h) = output_size(800, 800, s);
+            assert_eq!((w, h), (800 * s as usize, 800 * s as usize));
+        }
+    }
+
+    #[test]
+    fn parse_labels() {
+        assert_eq!(Interpolator::parse("bilinear"), Some(Interpolator::Bilinear));
+        assert_eq!(Interpolator::parse("NN"), Some(Interpolator::Nearest));
+        assert_eq!(Interpolator::parse("bc"), Some(Interpolator::Bicubic));
+        assert_eq!(Interpolator::parse("lanczos"), None);
+    }
+}

@@ -1,0 +1,16 @@
+//! Image substrate: pixel buffers, PNM (PGM/PPM) codecs, synthetic image
+//! generators, and CPU reference interpolators.
+//!
+//! The CPU interpolators are the rust-side oracle: the serving path's AOT
+//! Pallas artifacts are checked against [`interpolate::bilinear`] in the
+//! integration tests, mirroring how the python side checks the kernel
+//! against `ref.py`.
+
+pub mod generate;
+pub mod interpolate;
+pub mod pnm;
+
+mod buffer;
+
+pub use buffer::Image;
+pub use interpolate::{bicubic, bilinear, nearest, Interpolator};

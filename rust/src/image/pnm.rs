@@ -1,0 +1,219 @@
+//! PNM (PGM/PPM) image codec — the portable grayscale/pixmap formats.
+//!
+//! Supports reading P2 (ascii gray), P5 (binary gray), P3 (ascii RGB) and
+//! P6 (binary RGB, collapsed to luminance), and writing P5/P2. This gives
+//! the examples and the serving demo a real image interchange format
+//! without binary assets or external codec crates.
+
+use super::buffer::Image;
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Read a PNM file into a normalized `[0,1]` grayscale image. RGB inputs
+/// are converted with the Rec. 601 luma weights.
+pub fn read_pnm(path: &Path) -> Result<Image<f32>> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_pnm(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Write a `[0,1]` grayscale image as binary PGM (P5, maxval 255).
+pub fn write_pgm(path: &Path, img: &Image<f32>) -> Result<()> {
+    let mut out = format!("P5\n{} {}\n255\n", img.width(), img.height()).into_bytes();
+    for y in 0..img.height() {
+        for x in 0..img.width() {
+            out.push((img.get(x, y).clamp(0.0, 1.0) * 255.0).round() as u8);
+        }
+    }
+    fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Write ascii PGM (P2) — handy for golden files in tests.
+pub fn write_pgm_ascii(path: &Path, img: &Image<f32>) -> Result<()> {
+    fs::write(path, render_p2(img)).with_context(|| format!("writing {}", path.display()))
+}
+
+fn render_p2(img: &Image<f32>) -> String {
+    let mut s = format!("P2\n{} {}\n255\n", img.width(), img.height());
+    for y in 0..img.height() {
+        let row: Vec<String> = (0..img.width())
+            .map(|x| ((img.get(x, y).clamp(0.0, 1.0) * 255.0).round() as u8).to_string())
+            .collect();
+        s.push_str(&row.join(" "));
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse PNM bytes (P2/P3/P5/P6).
+pub fn parse_pnm(bytes: &[u8]) -> Result<Image<f32>> {
+    let mut cur = Cursor { bytes, pos: 0 };
+    let magic = cur.token()?;
+    let (binary, channels) = match magic.as_str() {
+        "P2" => (false, 1),
+        "P3" => (false, 3),
+        "P5" => (true, 1),
+        "P6" => (true, 3),
+        m => bail!("unsupported PNM magic '{m}'"),
+    };
+    let w: usize = cur.token()?.parse().context("width")?;
+    let h: usize = cur.token()?.parse().context("height")?;
+    let maxval: u32 = cur.token()?.parse().context("maxval")?;
+    if w == 0 || h == 0 {
+        bail!("degenerate image {w}x{h}");
+    }
+    if maxval == 0 || maxval > 65535 {
+        bail!("bad maxval {maxval}");
+    }
+    let wide = maxval > 255;
+    let n = w * h * channels;
+    let mut vals: Vec<f32> = Vec::with_capacity(n);
+    if binary {
+        cur.skip_single_whitespace()?;
+        let bytes_per = if wide { 2 } else { 1 };
+        let need = n * bytes_per;
+        let raw = cur.rest();
+        if raw.len() < need {
+            bail!("truncated raster: need {need} bytes, have {}", raw.len());
+        }
+        for i in 0..n {
+            let v = if wide {
+                u16::from_be_bytes([raw[2 * i], raw[2 * i + 1]]) as u32
+            } else {
+                raw[i] as u32
+            };
+            vals.push(v as f32 / maxval as f32);
+        }
+    } else {
+        for _ in 0..n {
+            let v: u32 = cur.token()?.parse().context("sample")?;
+            vals.push(v as f32 / maxval as f32);
+        }
+    }
+    // Collapse channels to luminance.
+    let data: Vec<f32> = if channels == 1 {
+        vals
+    } else {
+        vals.chunks_exact(3)
+            .map(|px| 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2])
+            .collect()
+    };
+    Ok(Image::from_vec(w, h, data))
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Next whitespace-delimited token, skipping `#` comments.
+    fn token(&mut self) -> Result<String> {
+        loop {
+            while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+                self.pos += 1;
+            }
+            if self.pos < self.bytes.len() && self.bytes[self.pos] == b'#' {
+                while self.pos < self.bytes.len() && self.bytes[self.pos] != b'\n' {
+                    self.pos += 1;
+                }
+                continue;
+            }
+            break;
+        }
+        let start = self.pos;
+        while self.pos < self.bytes.len() && !self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+        if start == self.pos {
+            return Err(anyhow!("unexpected end of header"));
+        }
+        Ok(String::from_utf8_lossy(&self.bytes[start..self.pos]).into_owned())
+    }
+
+    /// Exactly one whitespace byte separates the header from a binary
+    /// raster.
+    fn skip_single_whitespace(&mut self) -> Result<()> {
+        if self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(anyhow!("missing whitespace before raster"))
+        }
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.bytes[self.pos..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+
+    #[test]
+    fn p2_parse_with_comments() {
+        let src = b"P2\n# a comment\n3 2\n255\n0 128 255\n10 20 30\n";
+        let img = parse_pnm(src).unwrap();
+        assert_eq!(img.width(), 3);
+        assert_eq!(img.height(), 2);
+        assert!((img.get(1, 0) - 128.0 / 255.0).abs() < 1e-6);
+        assert!((img.get(2, 1) - 30.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p5_round_trip_via_files() {
+        let dir = std::env::temp_dir().join("tilekit_pnm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.pgm");
+        let img = generate::test_scene(37, 23, 5);
+        write_pgm(&path, &img).unwrap();
+        let back = read_pnm(&path).unwrap();
+        assert_eq!(back.width(), 37);
+        assert_eq!(back.height(), 23);
+        // 8-bit quantization error only
+        assert!(img.max_abs_diff(&back) <= 0.5 / 255.0 + 1e-6);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn p6_luma_collapse() {
+        // one pure-red and one pure-white pixel
+        let mut bytes = b"P6\n2 1\n255\n".to_vec();
+        bytes.extend_from_slice(&[255, 0, 0, 255, 255, 255]);
+        let img = parse_pnm(&bytes).unwrap();
+        assert!((img.get(0, 0) - 0.299).abs() < 1e-3);
+        assert!((img.get(1, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn p3_ascii_rgb() {
+        let src = b"P3\n1 1\n255\n0 255 0\n";
+        let img = parse_pnm(src).unwrap();
+        assert!((img.get(0, 0) - 0.587).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sixteen_bit_p5() {
+        let mut bytes = b"P5\n1 1\n65535\n".to_vec();
+        bytes.extend_from_slice(&32768u16.to_be_bytes());
+        let img = parse_pnm(&bytes).unwrap();
+        assert!((img.get(0, 0) - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_pnm(b"P7\n1 1\n255\n\x00").is_err()); // bad magic
+        assert!(parse_pnm(b"P5\n0 1\n255\n").is_err()); // zero dim
+        assert!(parse_pnm(b"P5\n2 2\n255\n\x00\x00").is_err()); // truncated
+        assert!(parse_pnm(b"P2\n1 1\n0\n0").is_err()); // maxval 0
+        assert!(parse_pnm(b"").is_err());
+    }
+
+    #[test]
+    fn ascii_writer_golden() {
+        let img = Image::from_vec(2, 1, vec![0.0f32, 1.0]);
+        assert_eq!(render_p2(&img), "P2\n2 1\n255\n0 255\n");
+    }
+}

@@ -1,0 +1,44 @@
+//! # tilekit
+//!
+//! A production-grade reproduction of *"Tiling for Performance Tuning on
+//! Different Models of GPUs"* (Chang Xu, Steven R. Kirk, Samantha Jenkins,
+//! CS.DC 2010).
+//!
+//! The paper studies how CUDA thread-block **tiling dimensions** interact
+//! with the **compute capability** of different GPU models (GTX 260 vs
+//! GeForce 8800 GTS) for a bilinear image-interpolation kernel. This crate
+//! rebuilds the whole study as a three-layer system:
+//!
+//! * **L3 (this crate)** — a compute-capability-aware GPU timing simulator
+//!   ([`sim`]), a CUDA-style occupancy calculator ([`tiling`]), a tiling
+//!   autotuner with portable (worst-case-GPU) selection ([`autotuner`]),
+//!   and an image-resize serving system ([`coordinator`]) that executes
+//!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
+//! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
+//! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels
+//!   whose `BlockSpec` output tile plays the role of the CUDA block shape.
+//!
+//! The environment is fully offline, so foundational substrates that would
+//! normally come from crates.io are implemented in-tree: [`codec`] (JSON +
+//! TOML subset), [`cli`], [`exec`] (thread pool), [`bench`] (benchmark
+//! harness), and [`prop`] (property-based testing).
+//!
+//! Start with [`device::registry`] and [`sim::engine`], or run
+//! `tilekit sweep --fig3` to regenerate the paper's headline figure.
+
+pub mod autotuner;
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod exec;
+pub mod image;
+pub mod metrics;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+pub mod tiling;
+pub mod util;
+pub mod workload;

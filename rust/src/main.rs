@@ -1,0 +1,472 @@
+//! `tilekit` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   devices      print the device registry (incl. the paper's Table I)
+//!   occupancy    occupancy calculator for a tile on one/all devices
+//!   sweep        Fig. 3 tile sweeps (simulator)
+//!   simulate     single-launch simulation / Fig. 4 / §IV.C experiments
+//!   autotune     best-tile + portable (min-max regret) selection
+//!   resize       resize a PGM/PPM file through an AOT artifact
+//!   serve        run the serving demo workload and print stats
+//!   init-config  write an example tilekit.toml
+//!
+//! Run `tilekit help` for the full flag list.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+use tilekit::autotuner::sweep as run_sweep;
+use tilekit::bench::figures;
+use tilekit::cli::Args;
+use tilekit::config::Config;
+use tilekit::coordinator::{Coordinator, Router};
+use tilekit::image::{generate, pnm, Interpolator};
+use tilekit::runtime::executor::EngineHandle;
+use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
+use tilekit::sim::{simulate, KernelCost, Launch, Straggler};
+use tilekit::tiling::occupancy::occupancy;
+use tilekit::tiling::{paper_sweep_tiles, TileDim};
+use tilekit::util::text::fmt_ms;
+
+const VALUE_FLAGS: &[&str] = &[
+    "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
+    "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
+    "output", "seed",
+];
+
+fn main() {
+    let args = match Args::from_env(VALUE_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?,
+        None => Config::builtin(),
+    };
+    match args.command.as_deref() {
+        Some("devices") => cmd_devices(args, &cfg),
+        Some("occupancy") => cmd_occupancy(args, &cfg),
+        Some("sweep") => cmd_sweep(args, &cfg),
+        Some("simulate") => cmd_simulate(args, &cfg),
+        Some("autotune") => cmd_autotune(args, &cfg),
+        Some("resize") => cmd_resize(args, &cfg),
+        Some("serve") => cmd_serve(args, &cfg),
+        Some("artifacts") => cmd_artifacts(args, &cfg),
+        Some("init-config") => {
+            let path = args.get_or("out", "tilekit.toml");
+            std::fs::write(path, tilekit::config::EXAMPLE_CONFIG)?;
+            println!("wrote {path}");
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try 'tilekit help')"),
+    }
+}
+
+const HELP: &str = r#"tilekit — tiling-for-performance-tuning reproduction (Xu/Kirk/Jenkins 2010)
+
+USAGE: tilekit <command> [flags]
+
+COMMANDS
+  devices [--table1]                    device registry / the paper's Table I
+  occupancy --tile 32x16 [--device id]  occupancy calculator (all devices default)
+  sweep [--fig3] [--device id] [--scale N] [--kernel k] [--csv]
+                                        tile sweep; --fig3 = all five insets
+  simulate [--fig4|--extreme] [--device id --tile WxH --scale N]
+                                        memory-model / straggler experiments
+  autotune [--scale N] [--devices a,b,c]
+                                        best & portable tile selection
+  resize <in.pgm> <out.pgm> --scale N [--kernel bilinear] [--artifacts dir] [--mock]
+                                        run a real resize through an AOT artifact
+  serve [--requests N] [--workers N] [--artifacts dir] [--mock]
+                                        serving demo: batched requests + stats
+  artifacts [--artifacts dir] [--verify]
+                                        list AOT artifacts with HLO stats;
+                                        --verify compiles + checks numerics
+  init-config [--out tilekit.toml]      write an example config
+
+GLOBAL FLAGS
+  --config path.toml                    load configuration
+"#;
+
+fn cmd_devices(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("table1") {
+        println!("TABLE I. COMPUTE CAPABILITY OF GTX260 AND GEFORCE 8800\n");
+        print!("{}", figures::table1_figure().render());
+        return Ok(());
+    }
+    let mut t = tilekit::util::text::Table::new(vec![
+        "id", "name", "cc", "SMs", "SPs", "clk MHz", "mem MiB", "coalescing",
+    ]);
+    for d in &cfg.devices {
+        t.row(vec![
+            d.id.clone(),
+            d.name.clone(),
+            d.cc.version(),
+            d.sm_count.to_string(),
+            d.total_sps().to_string(),
+            format!("{:.0}", d.sp_clock_mhz),
+            d.global_mem_mib.to_string(),
+            d.cc.coalescing.label().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn parse_kernel(args: &Args) -> Result<Interpolator> {
+    let k = args.get_or("kernel", "bilinear");
+    Interpolator::parse(k).ok_or_else(|| anyhow!("unknown kernel '{k}'"))
+}
+
+fn cmd_occupancy(args: &Args, cfg: &Config) -> Result<()> {
+    let tile: TileDim = args
+        .get_or("tile", "32x16")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let kernel = parse_kernel(args)?;
+    let res = KernelCost::of(kernel).resources;
+    let devices: Vec<_> = match args.get("device") {
+        Some(id) => vec![cfg.device(id)?.clone()],
+        None => cfg.devices.clone(),
+    };
+    let mut t = tilekit::util::text::Table::new(vec![
+        "device", "tile", "blocks/SM", "warps/SM", "threads/SM", "occupancy", "limiter",
+    ]);
+    for d in devices {
+        let o = occupancy(tile, &res, &d.cc);
+        t.row(vec![
+            d.id.clone(),
+            tile.label(),
+            o.blocks_per_sm.to_string(),
+            o.warps_per_sm.to_string(),
+            o.threads_per_sm.to_string(),
+            format!("{:.0}%", o.ratio * 100.0),
+            o.limiter.label().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
+    let kernel = parse_kernel(args)?;
+    let src = cfg.sweep.src;
+    if args.has("fig3") {
+        let (insets, summary) = figures::fig3_summary(kernel, src);
+        for (scale, table) in &insets {
+            println!(
+                "\nFig. 3 inset (scale {scale}): {} {}x{} -> {}x{}",
+                kernel.label(),
+                src.0,
+                src.1,
+                src.0 * scale,
+                src.1 * scale,
+            );
+            if args.has("csv") {
+                print!("{}", table.to_csv());
+            } else {
+                print!("{}", table.render());
+            }
+        }
+        println!("\nSummary (best tile + curve spread per device):");
+        print!("{}", summary.render());
+        return Ok(());
+    }
+    let scale: u32 = args.get_parsed_or("scale", 4)?;
+    let tiles = if cfg.sweep.tiles.is_empty() {
+        paper_sweep_tiles()
+    } else {
+        cfg.sweep.tiles.clone()
+    };
+    let device_ids: Vec<String> = match args.get("device") {
+        Some(id) => vec![id.to_string()],
+        None => cfg.sweep.devices.clone(),
+    };
+    for id in device_ids {
+        let d = cfg.device(&id)?;
+        let r = run_sweep::sweep(d, kernel, &tiles, scale, src);
+        println!("\n{} — {} scale {scale}:", d.name, kernel.label());
+        let mut t = tilekit::util::text::Table::new(vec!["tile", "ms", "occupancy", "rounds"]);
+        for p in &r.points {
+            t.row(vec![
+                p.tile.label(),
+                fmt_ms(p.report.ms),
+                format!("{:.0}%", p.report.occupancy.ratio * 100.0),
+                p.report.rounds.to_string(),
+            ]);
+        }
+        if args.has("csv") {
+            print!("{}", t.to_csv());
+        } else {
+            print!("{}", t.render());
+        }
+        if let Some(best) = r.best() {
+            println!("best: {} at {} ms", best.tile, fmt_ms(best.report.ms));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("fig4") {
+        let scale: u32 = args.get_parsed_or("scale", 6)?;
+        println!("Fig. 4 — 4x8 vs 8x4 access patterns (scale {scale}):\n");
+        print!("{}", figures::fig4_access(scale).render());
+        return Ok(());
+    }
+    if args.has("extreme") {
+        println!("§IV.C extreme example — straggler dilution G1 (2 SM) vs G2 (20 SM):\n");
+        print!("{}", figures::extreme_example().render());
+        return Ok(());
+    }
+    let d = cfg.device(args.get_or("device", "gtx260"))?;
+    let tile: TileDim = args
+        .get_or("tile", "32x4")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let scale: u32 = args.get_parsed_or("scale", 4)?;
+    let kernel = parse_kernel(args)?;
+    let l = Launch {
+        kernel,
+        tile,
+        src_w: cfg.sweep.src.0,
+        src_h: cfg.sweep.src.1,
+        scale,
+    };
+    let straggler = args
+        .get_parsed::<f64>("straggler-speed")?
+        .map(|speed| Straggler { sm: 0, speed });
+    let r = simulate(&l, d, straggler);
+    println!("{} | {} tile {} scale {}", d.name, kernel.label(), tile, scale);
+    println!(
+        "  blocks={} rounds={} occupancy={:.0}% ({})",
+        r.total_blocks,
+        r.rounds,
+        r.occupancy.ratio * 100.0,
+        r.occupancy.limiter.label()
+    );
+    println!(
+        "  traffic/block: {} load tx, {} store tx, {} row crossings, {:.0} penalty cyc",
+        r.traffic.load_transactions,
+        r.traffic.store_transactions,
+        r.traffic.row_crossings,
+        r.traffic.row_penalty_cycles
+    );
+    println!("  time: {} ms  ({:.1} Mpix/s)", fmt_ms(r.ms), r.mpix_per_s(&l));
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args, cfg: &Config) -> Result<()> {
+    let kernel = parse_kernel(args)?;
+    let scale: u32 = args.get_parsed_or("scale", 8)?;
+    let ids: Vec<String> = {
+        let list = args.get_list("devices");
+        if list.is_empty() {
+            cfg.sweep.devices.clone()
+        } else {
+            list
+        }
+    };
+    let devices: Vec<_> = ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+    let (table, choice) = figures::portable_selection(&devices, kernel, scale, cfg.sweep.src);
+    println!(
+        "Autotune — {} at scale {scale} over {:?}:\n",
+        kernel.label(),
+        ids
+    );
+    print!("{}", table.render());
+    match choice {
+        Some(tile) => println!("\nportable tile (min-max regret): {tile}"),
+        None => println!("\nno tile is launchable on every device"),
+    }
+    Ok(())
+}
+
+fn backend_from_args(args: &Args, cfg: &Config) -> Result<(Arc<dyn ResizeBackend>, Manifest)> {
+    let dir = args.get_or("artifacts", &cfg.serving.artifacts_dir);
+    let manifest = Manifest::load(Path::new(dir))
+        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))?;
+    let backend: Arc<dyn ResizeBackend> = if args.has("mock") {
+        Arc::new(MockEngine::new())
+    } else {
+        Arc::new(EngineHandle::new(manifest.clone()))
+    };
+    Ok((backend, manifest))
+}
+
+fn cmd_resize(args: &Args, cfg: &Config) -> Result<()> {
+    let input = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: tilekit resize <in.pgm> <out.pgm> --scale N"))?;
+    let output = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: tilekit resize <in.pgm> <out.pgm> --scale N"))?;
+    let scale: u32 = args.get_parsed_or("scale", 2)?;
+    let kernel = parse_kernel(args)?;
+    let img = pnm::read_pnm(Path::new(input))?;
+    let (backend, manifest) = backend_from_args(args, cfg)?;
+    let entry = manifest
+        .select(
+            kernel,
+            (img.height() as u32, img.width() as u32),
+            scale,
+            1,
+            None,
+        )
+        .ok_or_else(|| {
+            anyhow!(
+                "no artifact for {} {}x{} scale {} — available: {:?}",
+                kernel.label(),
+                img.width(),
+                img.height(),
+                scale,
+                manifest.shapes()
+            )
+        })?;
+    let t0 = std::time::Instant::now();
+    let out = backend.run_batch(entry, &[img])?.remove(0);
+    let dt = t0.elapsed();
+    pnm::write_pgm(Path::new(output), &out)?;
+    println!(
+        "{} -> {} ({}x{}, {} via '{}', {:.2} ms)",
+        input,
+        output,
+        out.width(),
+        out.height(),
+        kernel.label(),
+        entry.name,
+        dt.as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args, cfg: &Config) -> Result<()> {
+    let dir = args.get_or("artifacts", &cfg.serving.artifacts_dir);
+    let manifest = Manifest::load(Path::new(dir))
+        .with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))?;
+    let verify = args.has("verify");
+    let engine = if verify {
+        Some(tilekit::runtime::Engine::cpu(manifest.clone())?)
+    } else {
+        None
+    };
+    let mut t = tilekit::util::text::Table::new(vec![
+        "artifact", "kernel", "src", "scale", "batch", "tile", "KiB", "instrs", "whiles",
+        "gathers", "fusions", if verify { "verified" } else { "" },
+    ]);
+    for e in &manifest.entries {
+        let s = tilekit::runtime::stats_of_file(&manifest.hlo_path(e))?;
+        let verdict = match &engine {
+            None => String::new(),
+            Some(eng) => {
+                let exe = eng.load(e)?;
+                let imgs: Vec<_> = (0..e.batch as usize)
+                    .map(|i| {
+                        generate::test_scene(e.src.1 as usize, e.src.0 as usize, i as u64)
+                    })
+                    .collect();
+                let outs = exe.run(&imgs)?;
+                let want = e.kernel.run(&imgs[0], e.scale);
+                let err = outs[0].max_abs_diff(&want);
+                if err < 2e-5 {
+                    format!("ok ({err:.1e})")
+                } else {
+                    format!("FAIL ({err:.1e})")
+                }
+            }
+        };
+        t.row(vec![
+            e.name.clone(),
+            e.kernel.label().to_string(),
+            format!("{}x{}", e.src.1, e.src.0),
+            e.scale.to_string(),
+            e.batch.to_string(),
+            e.tile.label(),
+            format!("{:.0}", s.bytes as f64 / 1024.0),
+            s.instructions.to_string(),
+            s.whiles.to_string(),
+            s.gathers.to_string(),
+            s.fusions.to_string(),
+            verdict,
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\n{} artifacts in {dir}", manifest.entries.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let n_requests: usize = args.get_parsed_or("requests", 64)?;
+    let mut serving = cfg.serving.clone();
+    if let Some(w) = args.get_parsed::<usize>("workers")? {
+        serving.workers = w;
+    }
+    if let Some(b) = args.get_parsed::<usize>("batch-max")? {
+        serving.batch_max = b;
+    }
+    let (backend, manifest) = backend_from_args(args, cfg)?;
+    // None => largest-tile (CPU-optimal) variant preference; a GPU backend
+    // would pass the autotuner-chosen tile here (see EXPERIMENTS.md §Perf).
+    let router = Router::new(&manifest, None);
+    let keys = router.keys();
+    if keys.is_empty() {
+        bail!("manifest has no artifacts");
+    }
+    println!(
+        "serving demo: {} requests over {} artifact shapes, {} workers, batch_max {}",
+        n_requests,
+        keys.len(),
+        serving.workers,
+        serving.batch_max
+    );
+    let co = Coordinator::start(&serving, router, backend);
+    let seed: u64 = args.get_parsed_or("seed", 42)?;
+    let mut rng = tilekit::util::Pcg32::seeded(seed);
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let key = *rng.pick(&keys);
+        let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, rng.next_u64());
+        let t = co
+            .submit_blocking(key.kernel, img, key.scale)
+            .map_err(|e| anyhow!("{e}"))?;
+        tickets.push(t);
+    }
+    let mut ok = 0usize;
+    for t in tickets {
+        if t.wait().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = co.shutdown();
+    println!(
+        "\ncompleted {ok}/{n_requests} in {:.1} ms",
+        wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "throughput: {:.1} req/s | {}",
+        n_requests as f64 / wall.as_secs_f64(),
+        stats.summary()
+    );
+    Ok(())
+}

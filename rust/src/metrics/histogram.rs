@@ -1,0 +1,191 @@
+//! A log-bucketed latency histogram (HdrHistogram-style, simplified).
+//!
+//! Buckets are geometric: bucket i covers `[base^i, base^(i+1))`
+//! microseconds with base 1.2 — ~2% relative error, 128 buckets spanning
+//! 1 µs to ~10 minutes. Recording is lock-free (atomic per-bucket adds),
+//! so worker threads record directly into a shared histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const N_BUCKETS: usize = 128;
+const BASE: f64 = 1.2;
+
+/// Lock-free latency histogram over microsecond values.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        let i = us.ln() / BASE.ln();
+        (i as usize).min(N_BUCKETS - 1)
+    }
+
+    /// Lower edge of bucket `i` in µs.
+    fn bucket_lo(i: usize) -> f64 {
+        BASE.powi(i as i32)
+    }
+
+    /// Record one latency in microseconds.
+    pub fn record_us(&self, us: f64) {
+        let us = us.max(0.0);
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us as u64, Ordering::Relaxed);
+    }
+
+    /// Record a `std::time::Duration`.
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64
+    }
+
+    /// Approximate percentile in µs (`p` in [0,100]); 0 when empty.
+    /// Error is bounded by the bucket width (~20%... the bucket's lower
+    /// edge is reported, biasing slightly low but consistently).
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_lo(i);
+            }
+        }
+        self.max_us()
+    }
+
+    /// Reset all buckets and counters (e.g. after a warmup phase).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    /// A one-line text summary: `n=…, mean=…, p50=…, p99=…, max=… (µs)`.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={:.0}us p90={:.0}us p99={:.0}us max={:.0}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(90.0),
+            self.percentile_us(99.0),
+            self.max_us()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn mean_and_max() {
+        let h = Histogram::new();
+        for v in [100.0, 200.0, 300.0] {
+            h.record_us(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean_us() - 200.0).abs() < 1.0);
+        assert_eq!(h.max_us(), 300.0);
+    }
+
+    #[test]
+    fn percentile_monotone_and_bounded() {
+        let h = Histogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p90 = h.percentile_us(90.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p90 && p90 <= p99);
+        // within bucket error of the true values
+        assert!((400.0..600.0).contains(&p50), "p50={p50}");
+        assert!((700.0..1100.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.record_us((t * 1000 + i) as f64);
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn tiny_values_land_in_first_bucket() {
+        let h = Histogram::new();
+        h.record_us(0.0);
+        h.record_us(0.5);
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(100.0) <= BASE);
+    }
+}

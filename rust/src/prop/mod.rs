@@ -1,0 +1,164 @@
+//! A miniature property-based testing framework (the offline environment
+//! has no `proptest`). It provides the subset the test suite needs:
+//! seeded generators, `forall`-style runners with a configurable case
+//! count, and failure reports that print the reproducing seed.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries don't inherit the xla rpath flags
+//! use tilekit::prop::{forall, prop_assert};
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.u32(0, 1000);
+//!     let b = g.u32(0, 1000);
+//!     prop_assert(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Generator handle passed to property bodies.
+pub struct Gen {
+    rng: Pcg32,
+    /// Trace of drawn values, printed on failure for reproduction.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg32::new(seed, 0xF00D),
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        let v = self.rng.range_u32(lo, hi);
+        self.trace.push(format!("u32[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range_usize(lo, hi);
+        self.trace.push(format!("usize[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.f64() * (hi - lo);
+        self.trace.push(format!("f64[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T: std::fmt::Debug>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.below(xs.len() as u32) as usize;
+        self.trace.push(format!("choose[{}]={:?}", i, xs[i]));
+        &xs[i]
+    }
+
+    /// A power of two in `[2^lo_exp, 2^hi_exp]`.
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> u32 {
+        let e = self.rng.range_u32(lo_exp, hi_exp);
+        let v = 1u32 << e;
+        self.trace.push(format!("pow2[{lo_exp},{hi_exp}]={v}"));
+        v
+    }
+
+    /// A vector of `n` values drawn by `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Property outcome: `Ok(())` or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property body.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper for property bodies.
+pub fn prop_close(a: f64, b: f64, tol: f64, label: &str) -> PropResult {
+    prop_assert(
+        (a - b).abs() <= tol,
+        format!("{label}: {a} vs {b} (tol {tol})"),
+    )
+}
+
+/// Run `body` for `cases` seeded cases. Panics with the seed and the
+/// drawn-value trace on the first failure. The base seed is fixed for
+/// reproducibility; set `TILEKIT_PROP_SEED` to explore other streams.
+pub fn forall(name: &str, cases: u32, mut body: impl FnMut(&mut Gen) -> PropResult) {
+    let base: u64 = std::env::var("TILEKIT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB10C_5EED);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed}):\n  {msg}\n  trace: {}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("count", 50, |g| {
+            let _ = g.u32(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("fails", 10, |g| {
+            let v = g.u32(0, 100);
+            prop_assert(v < 1000 && false, format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 200, |g| {
+            let a = g.u32(5, 9);
+            prop_assert((5..=9).contains(&a), format!("u32 {a}"))?;
+            let f = g.f64(-1.0, 1.0);
+            prop_assert((-1.0..1.0).contains(&f), format!("f64 {f}"))?;
+            let p = g.pow2(2, 5);
+            prop_assert([4, 8, 16, 32].contains(&p), format!("pow2 {p}"))
+        });
+    }
+
+    #[test]
+    fn choose_covers_all() {
+        let mut seen = [false; 3];
+        forall("choose", 100, |g| {
+            let v = *g.choose(&[0usize, 1, 2]);
+            seen[v] = true;
+            Ok(())
+        });
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,236 @@
+//! The artifact manifest: the contract between `python/compile/aot.py`
+//! (which writes `artifacts/manifest.json` + one `.hlo.txt` per entry)
+//! and the rust runtime (which loads and executes them).
+
+use crate::codec::json::Json;
+use crate::image::Interpolator;
+use crate::tiling::TileDim;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Unique name, e.g. `bilinear_s2_b4_t32x4_64x64`.
+    pub name: String,
+    /// Interpolation kernel.
+    pub kernel: Interpolator,
+    /// Source image size (h, w).
+    pub src: (u32, u32),
+    /// Integer scale factor.
+    pub scale: u32,
+    /// Static batch size of the compiled executable.
+    pub batch: u32,
+    /// Pallas output-tile shape baked into the kernel (y, x order in the
+    /// manifest; exposed as a TileDim).
+    pub tile: TileDim,
+    /// Path to the HLO text, relative to the manifest's directory.
+    pub path: String,
+}
+
+impl ArtifactEntry {
+    /// Output image size (h, w).
+    pub fn dst(&self) -> (u32, u32) {
+        (self.src.0 * self.scale, self.src.1 * self.scale)
+    }
+
+    fn from_json(j: &Json) -> Result<ArtifactEntry> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifact entry missing '{k}'"))
+        };
+        let n = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("artifact entry missing numeric '{k}'"))
+        };
+        let pair = |k: &str| -> Result<(u32, u32)> {
+            let arr = j
+                .get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact entry missing pair '{k}'"))?;
+            if arr.len() != 2 {
+                bail!("'{k}' must have 2 entries");
+            }
+            Ok((
+                arr[0].as_u64().ok_or_else(|| anyhow!("bad '{k}'"))? as u32,
+                arr[1].as_u64().ok_or_else(|| anyhow!("bad '{k}'"))? as u32,
+            ))
+        };
+        let kernel_s = s("kernel")?;
+        let kernel = Interpolator::parse(&kernel_s)
+            .ok_or_else(|| anyhow!("unknown kernel '{kernel_s}'"))?;
+        let (ty, tx) = pair("tile")?;
+        Ok(ArtifactEntry {
+            name: s("name")?,
+            kernel,
+            src: pair("src")?,
+            scale: n("scale")? as u32,
+            batch: n("batch")? as u32,
+            tile: TileDim::new(tx, ty),
+            path: s("path")?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: u64,
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (artifact paths resolve
+    /// against it).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing 'version'"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arr = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let entries = arr
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        if names.len() != n {
+            bail!("duplicate artifact names in manifest");
+        }
+        Ok(Manifest {
+            version,
+            entries,
+            dir,
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.path)
+    }
+
+    /// Find entries matching a request shape, preferring `tile_pref` and
+    /// then the smallest batch ≥ `min_batch` (the router's lookup).
+    pub fn select(
+        &self,
+        kernel: Interpolator,
+        src: (u32, u32),
+        scale: u32,
+        min_batch: u32,
+        tile_pref: Option<TileDim>,
+    ) -> Option<&ArtifactEntry> {
+        let mut cands: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kernel == kernel && e.src == src && e.scale == scale)
+            .collect();
+        cands.sort_by_key(|e| {
+            let batch_ok = e.batch >= min_batch;
+            let tile_match = tile_pref.map(|t| e.tile == t).unwrap_or(true);
+            // prefer: batch big enough, tile match, then smallest batch
+            (
+                !batch_ok,
+                !tile_match,
+                if batch_ok { e.batch } else { u32::MAX - e.batch },
+            )
+        });
+        cands.into_iter().next()
+    }
+
+    /// All (kernel, src, scale) combos available.
+    pub fn shapes(&self) -> Vec<(Interpolator, (u32, u32), u32)> {
+        let mut v: Vec<_> = self
+            .entries
+            .iter()
+            .map(|e| (e.kernel, e.src, e.scale))
+            .collect();
+        v.sort_by_key(|&(k, s, sc)| (k.label(), s, sc));
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "bilinear_s2_b1_t32x4_64x64", "kernel": "bilinear",
+         "src": [64, 64], "scale": 2, "batch": 1, "tile": [4, 32],
+         "path": "bilinear_s2_b1_t32x4_64x64.hlo.txt"},
+        {"name": "bilinear_s2_b4_t32x4_64x64", "kernel": "bilinear",
+         "src": [64, 64], "scale": 2, "batch": 4, "tile": [4, 32],
+         "path": "bilinear_s2_b4_t32x4_64x64.hlo.txt"},
+        {"name": "nearest_s4_b1_t8x8_64x64", "kernel": "nearest",
+         "src": [64, 64], "scale": 4, "batch": 1, "tile": [8, 8],
+         "path": "nearest_s4_b1_t8x8_64x64.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = &m.entries[0];
+        assert_eq!(e.kernel, Interpolator::Bilinear);
+        assert_eq!(e.src, (64, 64));
+        assert_eq!(e.tile, TileDim::new(32, 4));
+        assert_eq!(e.dst(), (128, 128));
+        assert_eq!(
+            m.hlo_path(e),
+            PathBuf::from("/tmp/bilinear_s2_b1_t32x4_64x64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn select_prefers_sufficient_batch() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let e = m
+            .select(Interpolator::Bilinear, (64, 64), 2, 3, None)
+            .unwrap();
+        assert_eq!(e.batch, 4);
+        let e1 = m
+            .select(Interpolator::Bilinear, (64, 64), 2, 1, None)
+            .unwrap();
+        assert_eq!(e1.batch, 1, "smallest sufficient batch preferred");
+        assert!(m.select(Interpolator::Bicubic, (64, 64), 2, 1, None).is_none());
+    }
+
+    #[test]
+    fn shapes_deduped() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.shapes().len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#, ".".into()).is_err());
+        let dup = SAMPLE.replace("nearest_s4_b1_t8x8_64x64", "bilinear_s2_b1_t32x4_64x64");
+        assert!(Manifest::parse(&dup, ".".into()).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! PJRT execution engine: compile-once / execute-many over the AOT HLO
+//! artifacts, with `Image<f32>` ⇄ `Literal` marshaling.
+//!
+//! Thread-model note: the `xla` crate's `PjRtClient` is `Rc`-based (not
+//! `Send`), so an [`Engine`] is thread-local by construction. The
+//! coordinator gives each worker thread its own `Engine` (compilation of
+//! these small modules is cheap and happens once per worker at startup);
+//! see `coordinator::worker`.
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::ResizeBackend;
+use crate::image::Image;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// The manifest entry this executable implements.
+    pub fn entry(&self) -> &ArtifactEntry {
+        &self.entry
+    }
+
+    /// Execute on a batch of images. The batch is zero-padded up to the
+    /// artifact's static batch size; `batch.len()` outputs are returned.
+    pub fn run(&self, batch: &[Image<f32>]) -> Result<Vec<Image<f32>>> {
+        let e = &self.entry;
+        let (sh, sw) = (e.src.0 as usize, e.src.1 as usize);
+        let b = e.batch as usize;
+        if batch.is_empty() || batch.len() > b {
+            bail!(
+                "batch size {} out of range for artifact '{}' (max {b})",
+                batch.len(),
+                e.name
+            );
+        }
+        for (i, img) in batch.iter().enumerate() {
+            if img.width() != sw || img.height() != sh {
+                bail!(
+                    "request {i} is {}x{} but artifact '{}' expects {sw}x{sh}",
+                    img.width(),
+                    img.height(),
+                    e.name
+                );
+            }
+        }
+        // Stack into [B, H, W], zero-padding the tail.
+        let mut data = vec![0f32; b * sh * sw];
+        for (i, img) in batch.iter().enumerate() {
+            let dense = img.to_dense();
+            data[i * sh * sw..(i + 1) * sh * sw].copy_from_slice(&dense);
+        }
+        let lit = xla::Literal::vec1(&data)
+            .reshape(&[b as i64, sh as i64, sw as i64])
+            .context("reshape input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .with_context(|| format!("executing '{}'", e.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("unwrapping output tuple")?;
+        let vals: Vec<f32> = out.to_vec().context("reading output values")?;
+        let (dh, dw) = (e.dst().0 as usize, e.dst().1 as usize);
+        if vals.len() != b * dh * dw {
+            bail!(
+                "artifact '{}' returned {} values, expected {}",
+                e.name,
+                vals.len(),
+                b * dh * dw
+            );
+        }
+        Ok((0..batch.len())
+            .map(|i| {
+                Image::from_vec(dw, dh, vals[i * dh * dw..(i + 1) * dh * dw].to_vec())
+            })
+            .collect())
+    }
+}
+
+/// A thread-local PJRT engine: one CPU client plus a cache of compiled
+/// executables keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over a loaded manifest.
+    pub fn cpu(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) the executable for an entry.
+    pub fn load(&self, entry: &ArtifactEntry) -> Result<std::rc::Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.name) {
+            return Ok(std::rc::Rc::clone(exe));
+        }
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling '{}'", entry.name))?;
+        let executable = std::rc::Rc::new(Executable {
+            entry: entry.clone(),
+            exe,
+        });
+        self.cache
+            .borrow_mut()
+            .insert(entry.name.clone(), std::rc::Rc::clone(&executable));
+        Ok(executable)
+    }
+
+    /// Compile every artifact up front (worker startup).
+    pub fn warm_all(&self) -> Result<usize> {
+        let entries = self.manifest.entries.clone();
+        for e in &entries {
+            self.load(e)?;
+        }
+        Ok(entries.len())
+    }
+}
+
+impl ResizeBackend for EngineHandle {
+    fn run_batch(&self, entry: &ArtifactEntry, batch: &[Image<f32>]) -> Result<Vec<Image<f32>>> {
+        ENGINE.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(Engine::cpu(self.manifest.clone())?);
+            }
+            let engine = slot.as_ref().unwrap();
+            let exe = engine.load(entry)?;
+            exe.run(batch)
+        })
+    }
+
+    /// Compile every artifact on this thread's engine — called by each
+    /// worker at spawn so the request path never compiles.
+    fn warm(&self) -> Result<usize> {
+        ENGINE.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(Engine::cpu(self.manifest.clone())?);
+            }
+            slot.as_ref().unwrap().warm_all()
+        })
+    }
+}
+
+thread_local! {
+    static ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
+}
+
+/// A `Send + Sync` handle that materializes a thread-local [`Engine`] on
+/// every thread that executes through it — the bridge between the
+/// non-`Send` PJRT client and the threaded coordinator.
+#[derive(Clone)]
+pub struct EngineHandle {
+    manifest: Manifest,
+}
+
+impl EngineHandle {
+    pub fn new(manifest: Manifest) -> EngineHandle {
+        EngineHandle { manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}

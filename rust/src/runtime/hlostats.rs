@@ -1,0 +1,155 @@
+//! HLO-text inspection: lightweight structural statistics over the AOT
+//! artifacts — the L2 "profiler" of this stack. XLA's own cost analysis
+//! lives behind the C++ API; for the perf story we need exactly the
+//! structure the tile choice changes: module size, instruction count,
+//! control flow (while loops = Pallas grid steps after interpret
+//! lowering), gathers/dynamic-slices (the interpolation taps), and
+//! fusion count.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Structural statistics of one HLO text module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HloStats {
+    /// File size in bytes.
+    pub bytes: u64,
+    /// Total instruction lines (assignments inside computations).
+    pub instructions: u64,
+    /// `while` ops — the Pallas grid loop(s); fewer/larger tiles shrink
+    /// the trip count, not this number, but a whole-image tile removes
+    /// the loop entirely.
+    pub whiles: u64,
+    /// gather + dynamic-slice ops (the interpolation taps / windows).
+    pub gathers: u64,
+    /// dynamic-update-slice ops (output tile writes).
+    pub dus: u64,
+    /// fusion ops (XLA's fused kernels).
+    pub fusions: u64,
+    /// Named computations in the module.
+    pub computations: u64,
+}
+
+/// Parse statistics out of HLO text.
+pub fn stats_of_text(text: &str) -> HloStats {
+    let mut s = HloStats {
+        bytes: text.len() as u64,
+        ..Default::default()
+    };
+    for line in text.lines() {
+        let t = line.trim_start();
+        // computation headers look like `%name (args) -> type {` or
+        // `ENTRY %name ...`
+        if (t.starts_with('%') || t.starts_with("ENTRY")) && t.contains(") ->") {
+            s.computations += 1;
+            continue;
+        }
+        // instruction lines: `%x = type op(...)` / `x.1 = type op(...)`
+        let Some(eq) = t.find(" = ") else { continue };
+        if !t.starts_with('%') && !t
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_alphanumeric())
+            .unwrap_or(false)
+        {
+            continue;
+        }
+        s.instructions += 1;
+        let rhs = &t[eq + 3..];
+        // The op name appears as ` op-name(` after the result type; the
+        // type may be a tuple containing spaces, so match substrings
+        // (checking dynamic-update-slice before dynamic-slice).
+        if rhs.contains(" while(") {
+            s.whiles += 1;
+        } else if rhs.contains(" gather(") {
+            s.gathers += 1;
+        } else if rhs.contains(" dynamic-update-slice(") {
+            s.dus += 1;
+        } else if rhs.contains(" dynamic-slice(") {
+            s.gathers += 1;
+        } else if rhs.contains(" fusion(") {
+            s.fusions += 1;
+        }
+    }
+    s
+}
+
+/// Load + analyze one artifact file.
+pub fn stats_of_file(path: &Path) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(stats_of_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_resize_batch
+
+%region_0.20 (arg_tuple.1: (s32[], f32[64,64], f32[128,128])) -> (s32[], f32[64,64], f32[128,128]) {
+  %arg_tuple.1 = (s32[], f32[64,64], f32[128,128]) parameter(0)
+  %gte = s32[] get-tuple-element((s32[], f32[64,64], f32[128,128]) %arg_tuple.1), index=0
+  %g.1 = f32[4,32]{1,0} gather(f32[64,64]{1,0} %p, s32[4,32,2]{2,1,0} %idx), offset_dims={}
+  %ds.1 = f32[1,32]{1,0} dynamic-slice(f32[64,64]{1,0} %p, s32[] %a, s32[] %b), dynamic_slice_sizes={1,32}
+  %dus.1 = f32[128,128]{1,0} dynamic-update-slice(f32[128,128]{1,0} %acc, f32[4,32]{1,0} %t, s32[] %a, s32[] %b)
+}
+
+ENTRY %main.42 (Arg_0.1: f32[4,64,64]) -> (f32[4,128,128]) {
+  %Arg_0.1 = f32[4,64,64]{2,1,0} parameter(0)
+  %w.1 = (s32[], f32[64,64], f32[128,128]) while((s32[], f32[64,64], f32[128,128]) %init), condition=%cond, body=%region_0.20
+  %f.1 = f32[4,128,128]{2,1,0} fusion(f32[4,64,64]{2,1,0} %Arg_0.1), kind=kLoop, calls=%fused
+  ROOT %tuple.1 = (f32[4,128,128]{2,1,0}) tuple(f32[4,128,128]{2,1,0} %f.1)
+}
+"#;
+
+    #[test]
+    fn counts_ops() {
+        let s = stats_of_text(SAMPLE);
+        assert_eq!(s.whiles, 1);
+        assert_eq!(s.gathers, 2); // gather + dynamic-slice
+        assert_eq!(s.dus, 1);
+        assert_eq!(s.fusions, 1);
+        assert_eq!(s.computations, 2);
+        assert!(s.instructions >= 8);
+        assert_eq!(s.bytes, SAMPLE.len() as u64);
+    }
+
+    #[test]
+    fn empty_module() {
+        let s = stats_of_text("HloModule empty\n");
+        assert_eq!(s.instructions, 0);
+        assert_eq!(s.whiles, 0);
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(manifest) = crate::runtime::Manifest::load(&dir) else {
+            eprintln!("SKIP: no artifacts");
+            return;
+        };
+        // Whole-image tiles must have strictly fewer instructions than
+        // the 32x4 grid variant of the same shape (the §Perf L2 claim).
+        let small = manifest
+            .entries
+            .iter()
+            .find(|e| e.name == "bilinear_s2_b4_t32x4_64x64");
+        let whole = manifest
+            .entries
+            .iter()
+            .find(|e| e.name == "bilinear_s2_b4_t128x128_64x64");
+        let (Some(a), Some(b)) = (small, whole) else {
+            eprintln!("SKIP: variants missing");
+            return;
+        };
+        let sa = stats_of_file(&manifest.hlo_path(a)).unwrap();
+        let sb = stats_of_file(&manifest.hlo_path(b)).unwrap();
+        assert!(sa.instructions > 0 && sb.instructions > 0);
+        assert!(
+            sb.whiles < sa.whiles || sb.instructions < sa.instructions,
+            "whole-image tile should simplify the module: {sa:?} vs {sb:?}"
+        );
+    }
+}

@@ -1,0 +1,139 @@
+//! A mock backend implementing [`ResizeBackend`] with the CPU reference
+//! interpolators. Used by coordinator unit/property tests (no artifacts
+//! needed) and by `tilekit serve --mock`. Optionally injects failures and
+//! artificial latency for resilience tests.
+
+use super::artifact::ArtifactEntry;
+use super::ResizeBackend;
+use crate::image::{Image, Interpolator};
+use crate::metrics::Counter;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// CPU-reference backend with optional fault injection.
+#[derive(Default)]
+pub struct MockEngine {
+    /// Fail every Nth batch (0 = never) — exercises the coordinator's
+    /// error propagation.
+    pub fail_every: u64,
+    /// Artificial per-batch latency.
+    pub delay: Option<Duration>,
+    batches: AtomicU64,
+    /// Executed batch counter (observable by tests).
+    pub executed: Counter,
+}
+
+impl MockEngine {
+    pub fn new() -> MockEngine {
+        MockEngine::default()
+    }
+
+    pub fn failing_every(n: u64) -> MockEngine {
+        MockEngine {
+            fail_every: n,
+            ..MockEngine::default()
+        }
+    }
+
+    pub fn with_delay(d: Duration) -> MockEngine {
+        MockEngine {
+            delay: Some(d),
+            ..MockEngine::default()
+        }
+    }
+}
+
+impl ResizeBackend for MockEngine {
+    fn run_batch(&self, entry: &ArtifactEntry, batch: &[Image<f32>]) -> Result<Vec<Image<f32>>> {
+        if batch.is_empty() || batch.len() > entry.batch as usize {
+            bail!(
+                "batch size {} out of range for '{}' (max {})",
+                batch.len(),
+                entry.name,
+                entry.batch
+            );
+        }
+        let n = self.batches.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.fail_every > 0 && n % self.fail_every == 0 {
+            bail!("injected failure on batch {n}");
+        }
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let (sh, sw) = (entry.src.0 as usize, entry.src.1 as usize);
+        let mut out = Vec::with_capacity(batch.len());
+        for img in batch {
+            if img.width() != sw || img.height() != sh {
+                bail!(
+                    "image {}x{} does not match artifact src {sw}x{sh}",
+                    img.width(),
+                    img.height()
+                );
+            }
+            out.push(run_reference(entry.kernel, img, entry.scale));
+        }
+        self.executed.inc();
+        Ok(out)
+    }
+}
+
+fn run_reference(kernel: Interpolator, img: &Image<f32>, scale: u32) -> Image<f32> {
+    kernel.run(img, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+    use crate::tiling::TileDim;
+
+    fn entry(batch: u32) -> ArtifactEntry {
+        ArtifactEntry {
+            name: format!("mock_b{batch}"),
+            kernel: Interpolator::Bilinear,
+            src: (16, 16),
+            scale: 2,
+            batch,
+            tile: TileDim::new(32, 4),
+            path: "unused".into(),
+        }
+    }
+
+    #[test]
+    fn resizes_via_reference() {
+        let m = MockEngine::new();
+        let img = generate::test_scene(16, 16, 3);
+        let out = m.run_batch(&entry(4), &[img.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].width(), 32);
+        let want = crate::image::bilinear(&img, 2);
+        assert!(out[0].max_abs_diff(&want) < 1e-6);
+        assert_eq!(m.executed.get(), 1);
+    }
+
+    #[test]
+    fn rejects_oversized_batch() {
+        let m = MockEngine::new();
+        let img = generate::gradient(16, 16);
+        let batch: Vec<_> = (0..5).map(|_| img.clone()).collect();
+        assert!(m.run_batch(&entry(4), &batch).is_err());
+        assert!(m.run_batch(&entry(4), &[]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_shape() {
+        let m = MockEngine::new();
+        let img = generate::gradient(8, 8);
+        assert!(m.run_batch(&entry(1), &[img]).is_err());
+    }
+
+    #[test]
+    fn fault_injection_fires() {
+        let m = MockEngine::failing_every(2);
+        let img = generate::gradient(16, 16);
+        assert!(m.run_batch(&entry(1), &[img.clone()]).is_ok());
+        assert!(m.run_batch(&entry(1), &[img.clone()]).is_err());
+        assert!(m.run_batch(&entry(1), &[img]).is_ok());
+    }
+}

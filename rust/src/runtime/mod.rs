@@ -1,0 +1,39 @@
+//! The AOT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client via
+//! the `xla` crate. Python never runs on this path.
+//!
+//! * [`artifact`] — the `manifest.json` schema: which (kernel, source
+//!   size, scale, batch, tile) each `.hlo.txt` implements.
+//! * [`executor`] — compile-once/execute-many wrapper around
+//!   `PjRtClient`, with image ⇄ literal marshaling.
+//! * [`mock`] — a CPU-reference executor with the same interface, used by
+//!   coordinator tests and as a fallback when artifacts are absent.
+
+pub mod artifact;
+pub mod executor;
+pub mod hlostats;
+pub mod mock;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use executor::{Engine, Executable};
+pub use hlostats::{stats_of_file, HloStats};
+pub use mock::MockEngine;
+
+use crate::image::Image;
+use anyhow::Result;
+
+/// Anything that can run a resize batch: the PJRT engine or the mock.
+/// Batches are `[B, H, W]` stacked images; the executor returns `B`
+/// output images of `[H*scale, W*scale]`.
+pub trait ResizeBackend: Send + Sync {
+    /// Execute one batch through the artifact keyed by `entry`.
+    fn run_batch(&self, entry: &ArtifactEntry, batch: &[Image<f32>]) -> Result<Vec<Image<f32>>>;
+
+    /// Prepare this backend on the CALLING thread (compile artifacts,
+    /// allocate clients). Workers invoke it once at spawn so nothing
+    /// compiles on the request path. Returns the number of artifacts
+    /// prepared; the default no-op suits stateless backends.
+    fn warm(&self) -> Result<usize> {
+        Ok(0)
+    }
+}

@@ -1,0 +1,335 @@
+//! Generalized kernel configurations: block tiling × thread tiling ×
+//! the paper's other optimization categories ("Categories of
+//! optimizations can be summarized as tiling, using shared memory,
+//! unrolling and prefetching", §I).
+//!
+//! [`simulate_config`] extends the block-only [`super::engine::simulate`]
+//! to the full design space so the ablation benches can test the
+//! paper's central thesis — that tiling "is always the decisive factor"
+//! — against the other knobs.
+//!
+//! Modeling of the extra knobs:
+//!
+//! * **Thread tiling** (`Tiling::per_thread`) — fewer blocks, more work
+//!   and registers per thread ([`crate::tiling::thread_tile`]).
+//! * **Shared-memory staging** (`smem_staging`) — the block
+//!   cooperatively loads its source window once (coalesced row
+//!   segments) instead of issuing per-thread gathers; costs smem bytes
+//!   (occupancy pressure) + staging instructions + a barrier, and makes
+//!   the gather traffic footprint-proportional even on cc1.0 (this was
+//!   THE standard fix for strict-coalescing devices).
+//! * **Unrolling** (`unrolled`) — removes per-pixel loop overhead,
+//!   +4 registers.
+//! * **Prefetching** (`prefetch`) — overlaps the next gather with
+//!   compute: halves exposed latency, +2 registers.
+
+use super::cost::KernelCost;
+use super::engine::{SimReport, Straggler};
+use super::launch::Launch;
+use super::memory::{
+    gather_tx_per_group, row_penalty_factor, store_tx_per_group, BlockTraffic,
+};
+use crate::device::{CoalescingModel, DeviceDescriptor};
+use crate::image::Interpolator;
+use crate::tiling::occupancy::{occupancy, KernelResources};
+use crate::tiling::{ThreadTile, Tiling};
+
+/// A full kernel design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelConfig {
+    pub kernel: Interpolator,
+    pub tiling: Tiling,
+    /// Stage the block's source window in shared memory.
+    pub smem_staging: bool,
+    /// Fully unroll the per-thread pixel loop.
+    pub unrolled: bool,
+    /// Software prefetch of the next gather.
+    pub prefetch: bool,
+}
+
+impl KernelConfig {
+    /// The paper's configuration: block tiling only, plain global loads.
+    pub fn paper(kernel: Interpolator, block: crate::tiling::TileDim) -> KernelConfig {
+        KernelConfig {
+            kernel,
+            tiling: Tiling::block_only(block),
+            smem_staging: false,
+            unrolled: false,
+            prefetch: false,
+        }
+    }
+
+    /// Effective per-thread resources after all knobs.
+    pub fn resources(&self, launch: &Launch) -> KernelResources {
+        let base = KernelCost::of(self.kernel).resources;
+        let mut regs = self.tiling.regs_per_thread(base.regs_per_thread);
+        if self.unrolled {
+            regs += 4;
+        }
+        if self.prefetch {
+            regs += 2;
+        }
+        let smem = if self.smem_staging {
+            self.window_bytes(launch)
+        } else {
+            0
+        };
+        KernelResources {
+            regs_per_thread: regs,
+            smem_per_block: smem,
+        }
+    }
+
+    /// Source-window bytes a staging block needs: footprint/scale plus a
+    /// +2 halo on each axis (bilinear/bicubic taps).
+    pub fn window_bytes(&self, launch: &Launch) -> u32 {
+        let fp = self.tiling.footprint();
+        let cost = KernelCost::of(self.kernel);
+        let wy = fp.y / launch.scale + 2;
+        let wx = fp.x / launch.scale + 2;
+        wy * wx * cost.elem_bytes
+    }
+
+    /// Per-thread instruction count after thread tiling / unroll /
+    /// staging overheads.
+    pub fn instrs_per_thread(&self) -> u32 {
+        let base = KernelCost::of(self.kernel).instrs_per_thread;
+        let mut n = self.tiling.instrs_per_thread(base, self.unrolled);
+        if self.smem_staging {
+            n += 6; // cooperative load + barrier + smem addressing
+        }
+        if self.prefetch {
+            n += 2;
+        }
+        n
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = self.tiling.label();
+        if self.smem_staging {
+            s.push_str("+smem");
+        }
+        if self.unrolled {
+            s.push_str("+unroll");
+        }
+        if self.prefetch {
+            s.push_str("+pf");
+        }
+        s
+    }
+}
+
+/// Traffic of one block under a full config (generalizes
+/// [`super::memory::block_traffic`]).
+pub fn config_traffic(cfg: &KernelConfig, launch: &Launch, dev: &DeviceDescriptor) -> BlockTraffic {
+    let cost = KernelCost::of(cfg.kernel);
+    let block = cfg.tiling.block;
+    let fp = cfg.tiling.footprint();
+    let model = dev.cc.coalescing;
+    let group = match model {
+        CoalescingModel::CachedWarp => dev.cc.warp_size,
+        _ => dev.cc.warp_size / 2,
+    };
+    let groups_per_block = block.threads().div_ceil(group) as u64;
+    let g = group.min(block.threads());
+
+    // Stores: every owned pixel, issued per thread-tile column piece —
+    // a thread tile of tx>1 keeps stores contiguous per thread, so the
+    // group still covers g·tx consecutive pixels per row piece.
+    let store_tx = groups_per_block
+        * store_tx_per_group(model, g, block.x * cfg.tiling.per_thread.x, cost.elem_bytes)
+        * (cost.stores_per_thread * cfg.tiling.per_thread.pixels()) as u64;
+
+    let (load_tx, load_bytes) = if cfg.smem_staging {
+        // Cooperative window load: contiguous rows of the source window,
+        // fully coalesced segments on every cc (this is why smem staging
+        // was the standard cc1.0 remedy).
+        let wy = (fp.y / launch.scale + 2) as u64;
+        let wx_bytes = (fp.x / launch.scale + 2) as u64 * cost.elem_bytes as u64;
+        let tx = wy * wx_bytes.div_ceil(64).max(1);
+        (tx, wy * wx_bytes)
+    } else {
+        let per_group = gather_tx_per_group(model, g, block.x, launch.scale, cost.elem_bytes);
+        let tx = groups_per_block
+            * per_group
+            * (cost.loads_per_thread * cfg.tiling.per_thread.pixels()) as u64;
+        let wy = (fp.y / launch.scale + 2) as u64;
+        let wx_bytes = (fp.x / launch.scale + 2) as u64 * cost.elem_bytes as u64;
+        (tx, wy * wx_bytes)
+    };
+
+    let store_bytes = fp.threads() as u64 * cost.elem_bytes as u64;
+
+    // Row crossings over the block's *footprint*.
+    let store_crossings = fp.y as u64;
+    let load_crossings = fp.y as u64 / launch.scale as u64 + 1;
+    let store_pen = store_crossings as f64
+        * dev.row_switch_cycles
+        * row_penalty_factor(launch.out_pitch_bytes() as f64);
+    let load_pen = load_crossings as f64
+        * dev.row_switch_cycles
+        * row_penalty_factor(launch.src_pitch_bytes() as f64);
+
+    BlockTraffic {
+        load_transactions: load_tx,
+        store_transactions: store_tx,
+        bytes: store_bytes + load_bytes,
+        row_crossings: store_crossings + load_crossings,
+        row_penalty_cycles: store_pen + load_pen,
+    }
+}
+
+/// Simulate a full kernel configuration. Mirrors
+/// [`super::engine::simulate`]'s cost structure with config-adjusted
+/// occupancy, instruction counts, traffic, and latency overlap.
+pub fn simulate_config(
+    cfg: &KernelConfig,
+    launch: &Launch,
+    dev: &DeviceDescriptor,
+    straggler: Option<Straggler>,
+) -> SimReport {
+    // Normalize the launch's block shape and kernel to the config's
+    // FIRST (the engine core derives warps-per-block and costs from
+    // them) — the delegate below must see the config's block, not the
+    // caller's.
+    let launch = Launch {
+        kernel: cfg.kernel,
+        tile: cfg.tiling.block,
+        ..*launch
+    };
+    // Delegate the block-only, no-knob case to the canonical engine so
+    // the two paths can never drift for the paper's experiments.
+    if cfg.tiling.per_thread == ThreadTile::ONE
+        && !cfg.smem_staging
+        && !cfg.unrolled
+        && !cfg.prefetch
+    {
+        return super::engine::simulate(&launch, dev, straggler);
+    }
+    super::engine::simulate_parts(
+        &launch,
+        dev,
+        straggler,
+        occupancy(cfg.tiling.block, &cfg.resources(&launch), &dev.cc),
+        cfg.tiling.blocks_for(launch.out_w(), launch.out_h()),
+        config_traffic(cfg, &launch, dev),
+        cfg.instrs_per_thread() as f64,
+        KernelCost::of(cfg.kernel).loads_per_thread as f64
+            * cfg.tiling.per_thread.pixels() as f64
+            * if cfg.prefetch { 0.5 } else { 1.0 }
+            * if cfg.smem_staging { 0.25 } else { 1.0 },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::paper_pair;
+    use crate::tiling::TileDim;
+
+    fn launch(scale: u32) -> Launch {
+        Launch::paper(Interpolator::Bilinear, TileDim::new(32, 4), scale)
+    }
+
+    #[test]
+    fn paper_config_delegates_to_engine() {
+        let (gtx, _) = paper_pair();
+        let cfg = KernelConfig::paper(Interpolator::Bilinear, TileDim::new(32, 4));
+        let l = launch(4);
+        let a = simulate_config(&cfg, &l, &gtx, None);
+        let b = super::super::engine::simulate(&l, &gtx, None);
+        assert_eq!(a.ms, b.ms);
+    }
+
+    #[test]
+    fn smem_staging_rescues_cc10() {
+        // The classic remedy: staging turns the 8800 GTS's serialized
+        // gathers into coalesced window loads — a large win.
+        let (_, gts) = paper_pair();
+        let l = launch(4);
+        let plain = KernelConfig::paper(Interpolator::Bilinear, TileDim::new(32, 4));
+        let staged = KernelConfig {
+            smem_staging: true,
+            ..plain
+        };
+        let a = simulate_config(&plain, &l, &gts, None).ms;
+        let b = simulate_config(&staged, &l, &gts, None).ms;
+        assert!(b < a * 0.5, "staging should win big on cc1.0: {a} vs {b}");
+    }
+
+    #[test]
+    fn thread_tiling_trades_blocks_for_registers() {
+        let (gtx, _) = paper_pair();
+        let l = launch(4);
+        let cfg = KernelConfig {
+            kernel: Interpolator::Bilinear,
+            tiling: Tiling {
+                block: TileDim::new(32, 4),
+                per_thread: ThreadTile::new(2, 2),
+            },
+            smem_staging: false,
+            unrolled: true,
+            prefetch: false,
+        };
+        let r = simulate_config(&cfg, &l, &gtx, None);
+        assert!(r.ms.is_finite());
+        // 4x fewer blocks
+        let base = simulate_config(
+            &KernelConfig::paper(Interpolator::Bilinear, TileDim::new(32, 4)),
+            &l,
+            &gtx,
+            None,
+        );
+        assert_eq!(r.total_blocks * 4, base.total_blocks);
+    }
+
+    #[test]
+    fn window_bytes_and_resources() {
+        let l = launch(4);
+        let cfg = KernelConfig {
+            smem_staging: true,
+            ..KernelConfig::paper(Interpolator::Bilinear, TileDim::new(32, 4))
+        };
+        // footprint 32x4 at scale 4: window (4/4+2)x(32/4+2)=3x10 f32 = 120B
+        assert_eq!(cfg.window_bytes(&l), 3 * 10 * 4);
+        let res = cfg.resources(&l);
+        assert_eq!(res.smem_per_block, 120);
+        assert_eq!(res.regs_per_thread, 10);
+    }
+
+    #[test]
+    fn unroll_removes_loop_overhead() {
+        let t = Tiling {
+            block: TileDim::new(32, 4),
+            per_thread: ThreadTile::new(2, 1),
+        };
+        let rolled = KernelConfig {
+            kernel: Interpolator::Bilinear,
+            tiling: t,
+            smem_staging: false,
+            unrolled: false,
+            prefetch: false,
+        };
+        let unrolled = KernelConfig {
+            unrolled: true,
+            ..rolled
+        };
+        assert!(unrolled.instrs_per_thread() < rolled.instrs_per_thread());
+        assert!(unrolled.resources(&launch(4)).regs_per_thread > rolled.resources(&launch(4)).regs_per_thread);
+    }
+
+    #[test]
+    fn labels() {
+        let cfg = KernelConfig {
+            kernel: Interpolator::Bilinear,
+            tiling: Tiling {
+                block: TileDim::new(32, 4),
+                per_thread: ThreadTile::new(2, 2),
+            },
+            smem_staging: true,
+            unrolled: true,
+            prefetch: true,
+        };
+        assert_eq!(cfg.label(), "32x4+2x2pt+smem+unroll+pf");
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-kernel cost descriptors: how much arithmetic and how many global
+//! memory operations one thread of each interpolation kernel performs.
+//!
+//! The counts come from reading the kernels' inner loops (eqs. (1)–(5) of
+//! the paper for bilinear): coordinate math, tap weights, the gathers and
+//! the single store. They feed the simulator's compute-issue and
+//! memory-traffic terms; absolute values only need to be *proportionally*
+//! right across kernels and small enough that memory dominates, matching
+//! the memory-bound reality the paper describes.
+
+use crate::image::Interpolator;
+use crate::tiling::occupancy::KernelResources;
+
+/// Static cost profile of one interpolation kernel, per thread.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelCost {
+    /// Arithmetic/control instructions per thread (SP issue slots).
+    pub instrs_per_thread: u32,
+    /// Global-memory gathers per thread.
+    pub loads_per_thread: u32,
+    /// Global-memory stores per thread (always 1: the terminal pixel).
+    pub stores_per_thread: u32,
+    /// Bytes per element (f32).
+    pub elem_bytes: u32,
+    /// Occupancy-relevant resources (registers / shared memory).
+    pub resources: KernelResources,
+}
+
+impl KernelCost {
+    /// Cost profile for a kernel.
+    pub fn of(kernel: Interpolator) -> KernelCost {
+        match kernel {
+            // int coords + rounding + 1 tap
+            Interpolator::Nearest => KernelCost {
+                instrs_per_thread: 14,
+                loads_per_thread: 1,
+                stores_per_thread: 1,
+                elem_bytes: 4,
+                resources: KernelResources::NEAREST,
+            },
+            // eq. (1)-(5): 2 divides, offsets, 3 lerps ≈ 30 slots, 4 taps
+            Interpolator::Bilinear => KernelCost {
+                instrs_per_thread: 30,
+                loads_per_thread: 4,
+                stores_per_thread: 1,
+                elem_bytes: 4,
+                resources: KernelResources::BILINEAR,
+            },
+            // 16 taps, 8 cubic weights ≈ 90 slots
+            Interpolator::Bicubic => KernelCost {
+                instrs_per_thread: 90,
+                loads_per_thread: 16,
+                stores_per_thread: 1,
+                elem_bytes: 4,
+                resources: KernelResources::BICUBIC,
+            },
+        }
+    }
+
+    /// SP-issue cycles for one warp executing the whole thread body on a
+    /// cc with `sps_per_sm` SPs: a 32-lane warp instruction occupies the
+    /// SP pipeline for `32 / sps_per_sm` cycles (4 on cc1.x, 1 on cc2.0).
+    pub fn warp_issue_cycles(&self, sps_per_sm: u32) -> f64 {
+        let cycles_per_warp_instr = 32.0 / sps_per_sm as f64;
+        self.instrs_per_thread as f64 * cycles_per_warp_instr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_nearest_lt_bilinear_lt_bicubic() {
+        let n = KernelCost::of(Interpolator::Nearest);
+        let bl = KernelCost::of(Interpolator::Bilinear);
+        let bc = KernelCost::of(Interpolator::Bicubic);
+        assert!(n.instrs_per_thread < bl.instrs_per_thread);
+        assert!(bl.instrs_per_thread < bc.instrs_per_thread);
+        assert!(n.loads_per_thread < bl.loads_per_thread);
+        assert!(bl.loads_per_thread < bc.loads_per_thread);
+    }
+
+    #[test]
+    fn bilinear_is_four_tap() {
+        let bl = KernelCost::of(Interpolator::Bilinear);
+        assert_eq!(bl.loads_per_thread, 4); // eq. (5): f11,f21,f12,f22
+        assert_eq!(bl.stores_per_thread, 1);
+    }
+
+    #[test]
+    fn warp_issue_cycles_scale_with_sps() {
+        let bl = KernelCost::of(Interpolator::Bilinear);
+        // cc1.x: 8 SPs → 4 cycles per warp instruction
+        assert_eq!(bl.warp_issue_cycles(8), 30.0 * 4.0);
+        // Fermi: 32 SPs → 1 cycle
+        assert_eq!(bl.warp_issue_cycles(32), 30.0);
+    }
+}

@@ -1,0 +1,419 @@
+//! The whole-GPU timing engine.
+//!
+//! For one launch on one device:
+//!
+//! 1. Occupancy fixes `R`, the blocks resident per SM
+//!    ([`crate::tiling::occupancy`]).
+//! 2. Per-block compute-issue cycles, memory transactions, and row
+//!    penalties come from [`super::cost`] and [`super::memory`].
+//! 3. An SM executes its resident set as a *round*: the round's cycles
+//!    are `max(compute-issue, memory-service) + exposed-latency`, where
+//!    exposed latency shrinks as resident warps grow (latency hiding —
+//!    this is where occupancy buys time, and where the §III.B cliff turns
+//!    into milliseconds).
+//! 4. Blocks are dispatched greedily to the earliest-free SM (the
+//!    hardware's dynamic block scheduler). Per-SM speed factors support
+//!    the §IV.C straggler experiment: one slow SM dilutes with SM count.
+//!
+//! Cycles are shader-clock cycles; `ms` divides by the device clock.
+
+use super::cost::KernelCost;
+use super::launch::Launch;
+use super::memory::{block_traffic, BlockTraffic};
+use crate::device::DeviceDescriptor;
+use crate::tiling::occupancy::{occupancy, Occupancy};
+
+/// Resident warps needed to fully hide one DRAM access round-trip: at
+/// ~500-cycle latency and ~25 issue-cycles between dependent loads, ~20
+/// warps hide everything (cc1.x figures; the guide's rule of thumb is
+/// "hundreds of threads per SM").
+const CYCLES_HIDDEN_PER_WARP: f64 = 25.0;
+
+/// Per-SM degradation for the §IV.C extreme experiment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    /// Index of the degraded SM.
+    pub sm: u32,
+    /// Speed multiplier (< 1.0 = slower). The paper's example uses 0.5
+    /// ("one tiling dimension t2 leads to the half efficiency").
+    pub speed: f64,
+}
+
+/// Cycle breakdown of one simulated launch (per-SM-round aggregates
+/// summed over the whole grid, before dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SimBreakdown {
+    /// Total compute-issue cycles across all blocks.
+    pub compute_cycles: f64,
+    /// Total memory-service cycles (transactions at device bandwidth).
+    pub memory_cycles: f64,
+    /// Total DRAM row-switch penalty cycles.
+    pub row_penalty_cycles: f64,
+    /// Total exposed (unhidden) latency cycles.
+    pub exposed_latency_cycles: f64,
+}
+
+/// Result of simulating one launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// End-to-end kernel time in shader-clock cycles.
+    pub cycles: f64,
+    /// End-to-end kernel time in milliseconds.
+    pub ms: f64,
+    /// Residency outcome used.
+    pub occupancy: Occupancy,
+    /// Blocks in the grid.
+    pub total_blocks: u64,
+    /// SM rounds executed (sum over SMs).
+    pub rounds: u64,
+    /// Per-block memory traffic.
+    pub traffic: BlockTraffic,
+    /// Aggregate cost attribution.
+    pub breakdown: SimBreakdown,
+}
+
+impl SimReport {
+    /// Throughput in output megapixels per second.
+    pub fn mpix_per_s(&self, launch: &Launch) -> f64 {
+        launch.out_pixels() as f64 / (self.ms / 1000.0) / 1e6
+    }
+}
+
+/// Memory-service cycles for one transaction on `dev`, per SM, when
+/// `active_sms` SMs are concurrently issuing.
+///
+/// The chip moves `mem_bandwidth` bytes/s; an SM's fair share is
+/// 1/active of it (idle SMs don't consume bandwidth — this matters in
+/// the grid's tail wave). A transaction occupies the memory system for
+/// `segment_bytes / share` seconds, converted to shader cycles.
+fn cycles_per_transaction(dev: &DeviceDescriptor, active_sms: u32) -> f64 {
+    let seg_bytes = 64.0; // accounting granularity used by the tx counters
+    let bw_bytes_per_s = dev.mem_bandwidth_gib() * (1u64 << 30) as f64;
+    let share = bw_bytes_per_s / active_sms.max(1) as f64;
+    let secs = seg_bytes / share;
+    secs * dev.sp_clock_mhz * 1e6
+}
+
+/// Simulate `launch` on `dev`. `straggler` optionally degrades one SM.
+pub fn simulate(launch: &Launch, dev: &DeviceDescriptor, straggler: Option<Straggler>) -> SimReport {
+    let cost = KernelCost::of(launch.kernel);
+    let occ = occupancy(launch.tile, &cost.resources, &dev.cc);
+    simulate_parts(
+        launch,
+        dev,
+        straggler,
+        occ,
+        launch.total_blocks(),
+        block_traffic(launch, dev),
+        cost.instrs_per_thread as f64,
+        cost.loads_per_thread as f64,
+    )
+}
+
+/// The generalized engine core, shared by [`simulate`] (the paper's
+/// block-only configuration) and [`super::config::simulate_config`]
+/// (thread tiling / shared-memory / unroll / prefetch extensions).
+/// `instrs_per_thread` and `latency_load_groups` are the config-adjusted
+/// compute and dependent-gather-round counts.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn simulate_parts(
+    launch: &Launch,
+    dev: &DeviceDescriptor,
+    straggler: Option<Straggler>,
+    occ: Occupancy,
+    total_blocks: u64,
+    traffic: BlockTraffic,
+    instrs_per_thread: f64,
+    latency_load_groups: f64,
+) -> SimReport {
+    if occ.blocks_per_sm == 0 {
+        // Unlaunchable tile: report infinite time so sweeps rank it last.
+        return SimReport {
+            cycles: f64::INFINITY,
+            ms: f64::INFINITY,
+            occupancy: occ,
+            total_blocks,
+            rounds: 0,
+            traffic: BlockTraffic {
+                load_transactions: 0,
+                store_transactions: 0,
+                bytes: 0,
+                row_crossings: 0,
+                row_penalty_cycles: 0.0,
+            },
+            breakdown: SimBreakdown::default(),
+        };
+    }
+
+    let warps_per_block = launch.tile.warps(dev.cc.warp_size) as f64;
+    let r = occ.blocks_per_sm as f64;
+
+    // ---- one SM round: R resident blocks run to completion ------------
+    // Parameterized by how many SMs are concurrently active (bandwidth
+    // is shared only among active SMs — the grid's tail wave runs with
+    // fewer).
+    let tx = (traffic.load_transactions + traffic.store_transactions) as f64;
+    // Compute side: all resident warps share the SP issue pipeline.
+    let cycles_per_warp_instr = 32.0 / dev.cc.sps_per_sm as f64;
+    let round_compute = r * warps_per_block * instrs_per_thread * cycles_per_warp_instr;
+    // Latency exposure: each thread performs `loads` dependent gather
+    // rounds; resident warps hide CYCLES_HIDDEN_PER_WARP each.
+    let hidden = (occ.warps_per_sm as f64 * CYCLES_HIDDEN_PER_WARP / dev.mem_latency_cycles)
+        .clamp(0.0, 1.0);
+    let round_latency = latency_load_groups * dev.mem_latency_cycles * (1.0 - hidden);
+    // Row-switch chain (the paper's "pointer movement between rows",
+    // §IV.B / Fig. 4): within one block the row switches are a *serial
+    // dependency chain* — each crossing stalls that block's access
+    // stream. The R resident blocks' chains overlap each other, so one
+    // chain's length is exposed per round. Taller tiles have longer
+    // chains AND fewer blocks per grid to amortize them, which is
+    // exactly why the paper finds 32×4 beating taller tiles once the
+    // output pitch (scale) makes crossings expensive.
+    let round_rowchain = traffic.row_penalty_cycles;
+    let round_cycles = |active_sms: u32| -> f64 {
+        let round_memory = r * tx * cycles_per_transaction(dev, active_sms);
+        round_compute.max(round_memory) + round_latency + round_rowchain
+    };
+
+    let total_rounds = total_blocks.div_ceil(occ.blocks_per_sm as u64);
+    let cycles = match straggler {
+        None => {
+            // ---- uniform wave schedule --------------------------------
+            // full waves use every SM; the tail wave's fewer active SMs
+            // each get a larger bandwidth share.
+            let sms = dev.sm_count as u64;
+            let full_waves = total_rounds / sms;
+            let tail_rounds = total_rounds % sms;
+            let mut c = full_waves as f64 * round_cycles(dev.sm_count);
+            if tail_rounds > 0 {
+                c += round_cycles(tail_rounds as u32);
+            }
+            c
+        }
+        Some(s) => {
+            // ---- greedy dispatch with a degraded SM --------------------
+            // Rounds are identical, so dispatch reduces to earliest-free
+            // assignment over SM speeds; the straggler gets
+            // proportionally fewer rounds (the hardware feeds blocks to
+            // whichever SM frees up first).
+            let mut speeds = vec![1.0f64; dev.sm_count as usize];
+            if (s.sm as usize) < speeds.len() {
+                speeds[s.sm as usize] = s.speed.max(1e-6);
+            }
+            dispatch_rounds(total_rounds, round_cycles(dev.sm_count), &speeds)
+        }
+    };
+
+    let ms = cycles / (dev.sp_clock_mhz * 1e3);
+    let b = total_blocks as f64;
+    SimReport {
+        cycles,
+        ms,
+        occupancy: occ,
+        total_blocks,
+        rounds: total_rounds,
+        traffic,
+        breakdown: SimBreakdown {
+            compute_cycles: b * warps_per_block * instrs_per_thread * cycles_per_warp_instr,
+            memory_cycles: b * tx * cycles_per_transaction(dev, dev.sm_count),
+            row_penalty_cycles: total_rounds as f64 * round_rowchain,
+            exposed_latency_cycles: total_rounds as f64 * round_latency,
+        },
+    }
+}
+
+/// Greedy earliest-free dispatch of `n` identical rounds of `round_cycles`
+/// over SMs with the given speed factors. Returns the makespan in cycles.
+///
+/// With uniform speeds this is exactly `ceil(n / sms) * round_cycles`;
+/// with a straggler it reproduces the throughput-dilution arithmetic of
+/// the paper's §IV.C. O(n log sms) via a binary heap, but the uniform
+/// case is computed in O(1) — the Fig. 3 sweep calls this thousands of
+/// times.
+fn dispatch_rounds(n: u64, round_cycles: f64, speeds: &[f64]) -> f64 {
+    let sms = speeds.len() as u64;
+    if n == 0 {
+        return 0.0;
+    }
+    let uniform = speeds.iter().all(|&s| (s - speeds[0]).abs() < 1e-12);
+    if uniform {
+        let per_sm = n.div_ceil(sms);
+        return per_sm as f64 * round_cycles / speeds[0];
+    }
+    // Binary heap of (next-free-time, sm). BinaryHeap is a max-heap, so
+    // store negated times via Reverse on an ordered wrapper.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct T(f64);
+    impl Eq for T {}
+    impl PartialOrd for T {
+        fn partial_cmp(&self, o: &T) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for T {
+        fn cmp(&self, o: &T) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
+        }
+    }
+
+    let mut heap: BinaryHeap<Reverse<(T, usize)>> = speeds
+        .iter()
+        .enumerate()
+        .map(|(i, _)| Reverse((T(0.0), i)))
+        .collect();
+    let mut makespan = 0.0f64;
+    for _ in 0..n {
+        let Reverse((T(free), i)) = heap.pop().expect("non-empty heap");
+        let done = free + round_cycles / speeds[i];
+        makespan = makespan.max(done);
+        heap.push(Reverse((T(done), i)));
+    }
+    makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{find_device, paper_pair};
+    use crate::image::Interpolator;
+    use crate::tiling::TileDim;
+
+    fn launch(tile: TileDim, scale: u32) -> Launch {
+        Launch::paper(Interpolator::Bilinear, tile, scale)
+    }
+
+    #[test]
+    fn gtx260_faster_than_8800gts_everywhere() {
+        // "It is absolutely clear that, the GTX 260 can provide better
+        // performance than the GeForce 8800 GTS."
+        let (gtx, gts) = paper_pair();
+        for scale in [2, 4, 6, 8, 10] {
+            for tile in crate::tiling::paper_sweep_tiles() {
+                let l = launch(tile, scale);
+                let a = simulate(&l, &gtx, None);
+                let b = simulate(&l, &gts, None);
+                if a.ms.is_finite() && b.ms.is_finite() {
+                    assert!(
+                        a.ms < b.ms,
+                        "tile {tile} scale {scale}: gtx {} vs gts {}",
+                        a.ms,
+                        b.ms
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unlaunchable_tile_is_infinite() {
+        let gtx = find_device("gtx260").unwrap();
+        let r = simulate(&launch(TileDim::new(32, 32), 2), &gtx, None);
+        assert!(r.ms.is_infinite());
+    }
+
+    #[test]
+    fn more_sms_never_slower() {
+        let gtx = find_device("gtx260").unwrap();
+        let mut small = gtx.clone();
+        small.sm_count = 6;
+        for tile in [TileDim::new(32, 4), TileDim::new(8, 8)] {
+            let l = launch(tile, 4);
+            let big = simulate(&l, &gtx, None);
+            let sm = simulate(&l, &small, None);
+            assert!(big.ms <= sm.ms + 1e-9, "{tile}: {} vs {}", big.ms, sm.ms);
+        }
+    }
+
+    #[test]
+    fn straggler_dilutes_with_sm_count_as_paper_4c() {
+        // §IV.C: a half-speed SM costs G1 (2 SMs) ~1/4 of total efficiency
+        // but G2 (20 SMs) only ~1/40 — a 10× dilution.
+        let g1 = find_device("g1").unwrap();
+        let g2 = find_device("g2").unwrap();
+        let l = launch(TileDim::new(32, 4), 4);
+        let loss = |dev: &crate::device::DeviceDescriptor| {
+            let clean = simulate(&l, dev, None).ms;
+            let hurt = simulate(
+                &l,
+                dev,
+                Some(Straggler {
+                    sm: 0,
+                    speed: 0.5,
+                }),
+            )
+            .ms;
+            (hurt - clean) / hurt // efficiency lost
+        };
+        let l1 = loss(&g1);
+        let l2 = loss(&g2);
+        // theoretical: 1 - (N-0.5)/N ⇒ 0.25 for N=2, 0.025 for N=20
+        assert!((l1 - 0.25).abs() < 0.04, "G1 loss {l1}");
+        assert!((l2 - 0.025).abs() < 0.01, "G2 loss {l2}");
+        let ratio = l1 / l2;
+        assert!((8.0..12.5).contains(&ratio), "dilution ratio {ratio}");
+    }
+
+    #[test]
+    fn occupancy_cliff_shows_up_in_time() {
+        // 32x16 on the 8800 GTS runs at 66% occupancy; 32x4 at 100%.
+        // The simulator must rank 32x4 no worse.
+        let gts = find_device("8800gts").unwrap();
+        let t_32x16 = simulate(&launch(TileDim::new(32, 16), 4), &gts, None).ms;
+        let t_32x4 = simulate(&launch(TileDim::new(32, 4), 4), &gts, None).ms;
+        assert!(t_32x4 <= t_32x16, "{t_32x4} vs {t_32x16}");
+    }
+
+    #[test]
+    fn wide_beats_tall_at_large_scale() {
+        // Fig. 4 consequence at the grid level: 8x4 ≤ 4x8 at scale 8.
+        let (gtx, gts) = paper_pair();
+        for dev in [&gtx, &gts] {
+            let wide = simulate(&launch(TileDim::new(8, 4), 8), dev, None).ms;
+            let tall = simulate(&launch(TileDim::new(4, 8), 8), dev, None).ms;
+            assert!(wide <= tall, "{}: wide {} tall {}", dev.id, wide, tall);
+        }
+    }
+
+    #[test]
+    fn dispatch_uniform_matches_closed_form() {
+        let speeds = [1.0; 24];
+        let t = dispatch_rounds(100, 10.0, &speeds);
+        assert_eq!(t, (100f64 / 24.0).ceil() * 10.0);
+        assert_eq!(dispatch_rounds(0, 10.0, &speeds), 0.0);
+    }
+
+    #[test]
+    fn dispatch_straggler_matches_throughput_model() {
+        // 2 SMs, one at half speed, many rounds: makespan ≈ n/(1.5) * t.
+        let speeds = [1.0, 0.5];
+        let n = 3000u64;
+        let t = dispatch_rounds(n, 1.0, &speeds);
+        let ideal = n as f64 / 1.5;
+        assert!((t - ideal).abs() / ideal < 0.01, "t={t} ideal={ideal}");
+    }
+
+    #[test]
+    fn report_throughput_sane() {
+        let gtx = find_device("gtx260").unwrap();
+        let l = launch(TileDim::new(32, 4), 2);
+        let r = simulate(&l, &gtx, None);
+        let mp = r.mpix_per_s(&l);
+        assert!(mp > 1.0, "suspiciously slow: {mp} Mpix/s");
+        assert!(mp < 1e6, "suspiciously fast: {mp} Mpix/s");
+    }
+
+    #[test]
+    fn ms_positive_finite_for_all_valid_tiles() {
+        let (gtx, gts) = paper_pair();
+        for dev in [&gtx, &gts] {
+            for tile in crate::tiling::paper_sweep_tiles() {
+                let r = simulate(&launch(tile, 6), dev, None);
+                assert!(r.ms > 0.0);
+                assert!(r.ms.is_finite(), "{tile} on {}", dev.id);
+            }
+        }
+    }
+}

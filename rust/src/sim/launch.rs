@@ -1,0 +1,85 @@
+//! Kernel-launch descriptor: which kernel, which tile, what geometry.
+
+use crate::image::Interpolator;
+use crate::tiling::TileDim;
+
+/// One kernel launch: resize `src_w`×`src_h` by integer `scale` using
+/// `kernel`, with thread blocks shaped `tile`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Launch {
+    pub kernel: Interpolator,
+    pub tile: TileDim,
+    pub src_w: u32,
+    pub src_h: u32,
+    pub scale: u32,
+}
+
+impl Launch {
+    /// The paper's standard workload: 800×800 source.
+    pub fn paper(kernel: Interpolator, tile: TileDim, scale: u32) -> Launch {
+        Launch {
+            kernel,
+            tile,
+            src_w: 800,
+            src_h: 800,
+            scale,
+        }
+    }
+
+    pub fn out_w(&self) -> u32 {
+        self.src_w * self.scale
+    }
+
+    pub fn out_h(&self) -> u32 {
+        self.src_h * self.scale
+    }
+
+    /// Output pixels (total threads launched, one per terminal pixel).
+    pub fn out_pixels(&self) -> u64 {
+        self.out_w() as u64 * self.out_h() as u64
+    }
+
+    /// Grid size in blocks.
+    pub fn grid(&self) -> (u32, u32) {
+        self.tile.grid_for(self.out_w(), self.out_h())
+    }
+
+    /// Total blocks in the grid.
+    pub fn total_blocks(&self) -> u64 {
+        self.tile.blocks_for(self.out_w(), self.out_h())
+    }
+
+    /// Output row pitch in bytes (f32 pixels, tight pitch).
+    pub fn out_pitch_bytes(&self) -> u64 {
+        self.out_w() as u64 * 4
+    }
+
+    /// Source row pitch in bytes.
+    pub fn src_pitch_bytes(&self) -> u64 {
+        self.src_w as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let l = Launch::paper(Interpolator::Bilinear, TileDim::new(32, 4), 2);
+        assert_eq!(l.out_w(), 1600);
+        assert_eq!(l.out_h(), 1600);
+        assert_eq!(l.out_pixels(), 2_560_000);
+        assert_eq!(l.grid(), (50, 400));
+        assert_eq!(l.total_blocks(), 20_000);
+        assert_eq!(l.out_pitch_bytes(), 6400);
+    }
+
+    #[test]
+    fn block_count_scales_with_scale_squared() {
+        let t = TileDim::new(16, 16);
+        let b2 = Launch::paper(Interpolator::Bilinear, t, 2).total_blocks();
+        let b10 = Launch::paper(Interpolator::Bilinear, t, 10).total_blocks();
+        assert_eq!(b10, b2 * 25);
+    }
+}

@@ -1,0 +1,294 @@
+//! The global-memory model: per-block transaction counts under the
+//! compute capability's coalescing rules, plus the DRAM row-switch
+//! penalty that reproduces the paper's Fig. 4.
+//!
+//! ## Coalescing
+//!
+//! Threads in a block are linearized row-major (x fastest) and issued in
+//! half-warps of 16 (cc1.x) or warps of 32 (cc2.x).
+//!
+//! * **Stores** (one per thread, to consecutive output pixels):
+//!   - cc1.0/1.1 (strict): ONE 64-byte transaction iff the half-warp's 16
+//!     addresses are consecutive and aligned — i.e. `tile.x ≥ 16`.
+//!     Otherwise the half-warp spans rows and serializes into one
+//!     transaction per thread.
+//!   - cc1.2/1.3 (segmented): the minimal set of aligned segments
+//!     covering the addresses — one per row-piece the half-warp touches.
+//!   - cc2.x: as segmented but warp-wide through the L1 (128 B lines).
+//! * **Gathers** (bilinear reads 4 neighbours): addresses are *compressed*
+//!   by the scale (thread i and i+1 often read the same source pixel), so
+//!   they are never one-per-thread sequential:
+//!   - strict cc1.0: the half-warp serializes — 16 transactions per
+//!     gather. This is the big 8800 GTS handicap.
+//!   - segmented cc1.3: the footprint of a half-warp's gather is
+//!     `⌈piece_px/scale⌉+1` consecutive source pixels per row-piece — a
+//!     couple of 64-byte segments at most.
+//!
+//! ## Row-switch penalty (Fig. 4)
+//!
+//! Each time a block's access stream moves to a different image row, the
+//! DRAM row buffer / TLB locality is lost. The penalty per crossing grows
+//! with the row pitch (wider final images put consecutive rows in
+//! different DRAM pages), which is exactly the paper's explanation for
+//! why 32×4 beats taller tiles at scales 6–10. We charge
+//! `row_switch_cycles × min(pitch/page, 16)` per crossing.
+
+use super::cost::KernelCost;
+use super::launch::Launch;
+use crate::device::{CoalescingModel, DeviceDescriptor};
+
+/// DRAM page (row-buffer) size the penalty model assumes.
+pub const DRAM_PAGE_BYTES: f64 = 2048.0;
+/// Cap on the pitch/page penalty multiplier.
+pub const ROW_PENALTY_CAP: f64 = 16.0;
+
+/// Memory traffic of ONE block of a launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockTraffic {
+    /// Global-memory transactions for all gathers of the block.
+    pub load_transactions: u64,
+    /// Global-memory transactions for all stores of the block.
+    pub store_transactions: u64,
+    /// Bytes moved (loads + stores), for the bandwidth bound.
+    pub bytes: u64,
+    /// Image-row crossings performed by the block (loads + stores).
+    pub row_crossings: u64,
+    /// Cycles charged for those crossings on `dev`.
+    pub row_penalty_cycles: f64,
+}
+
+/// Row-pieces a coalescing group spans: a group of `group` linear threads
+/// inside a `tile.x`-wide block touches `ceil(group / tile.x)` distinct
+/// rows when `tile.x < group`, else 1.
+pub(crate) fn row_pieces(group: u32, tile_x: u32) -> u32 {
+    group.div_ceil(tile_x.max(1)).max(1)
+}
+
+/// Transactions for one *store* issued by one coalescing group.
+pub(crate) fn store_tx_per_group(model: CoalescingModel, group: u32, tile_x: u32, elem_bytes: u32) -> u64 {
+    let pieces = row_pieces(group, tile_x) as u64;
+    let piece_px = tile_x.min(group) as u64;
+    match model {
+        CoalescingModel::StrictHalfWarp => {
+            // Coalesces only if the whole group is one consecutive run.
+            if pieces == 1 {
+                1
+            } else {
+                group as u64 // serialized: one transaction per thread
+            }
+        }
+        CoalescingModel::SegmentedHalfWarp | CoalescingModel::CachedWarp => {
+            // Minimal segments: each row-piece is `piece_px * elem_bytes`
+            // consecutive bytes → ceil over 64B segments (128B lines on
+            // cc2.x behave the same at this granularity).
+            let seg = if model == CoalescingModel::CachedWarp {
+                128
+            } else {
+                64
+            };
+            let bytes = piece_px * elem_bytes as u64;
+            pieces * bytes.div_ceil(seg).max(1)
+        }
+    }
+}
+
+/// Transactions for one *gather* (scale-compressed addresses) issued by
+/// one coalescing group.
+pub(crate) fn gather_tx_per_group(
+    model: CoalescingModel,
+    group: u32,
+    tile_x: u32,
+    scale: u32,
+    elem_bytes: u32,
+) -> u64 {
+    let pieces = row_pieces(group, tile_x) as u64;
+    let piece_px = tile_x.min(group) as u64;
+    // Footprint of one row-piece in source pixels.
+    let fp_px = piece_px / scale as u64 + 1;
+    match model {
+        CoalescingModel::StrictHalfWarp => {
+            // Gathers are not thread-sequential under upscaling (threads
+            // share neighbours) — strict coalescing fails, the half-warp
+            // serializes. scale == 1 keeps addresses sequential per piece.
+            if scale == 1 && pieces == 1 {
+                1
+            } else {
+                group as u64
+            }
+        }
+        CoalescingModel::SegmentedHalfWarp | CoalescingModel::CachedWarp => {
+            let seg = if model == CoalescingModel::CachedWarp {
+                128
+            } else {
+                64
+            };
+            let bytes = fp_px * elem_bytes as u64;
+            pieces * bytes.div_ceil(seg).max(1)
+        }
+    }
+}
+
+/// Row-switch penalty multiplier for a given pitch.
+pub fn row_penalty_factor(pitch_bytes: f64) -> f64 {
+    (pitch_bytes / DRAM_PAGE_BYTES).clamp(1.0, ROW_PENALTY_CAP)
+}
+
+/// Compute the memory traffic of one block of `launch` on `dev`.
+pub fn block_traffic(launch: &Launch, dev: &DeviceDescriptor) -> BlockTraffic {
+    let cost = KernelCost::of(launch.kernel);
+    let tile = launch.tile;
+    let threads = tile.threads() as u64;
+    let model = dev.cc.coalescing;
+    // Coalescing group size: half-warp on cc1.x, full warp on cc2.x.
+    let group = match model {
+        CoalescingModel::CachedWarp => dev.cc.warp_size,
+        _ => dev.cc.warp_size / 2,
+    };
+    let groups_per_block = (tile.threads().div_ceil(group)) as u64;
+
+    let store_tx = groups_per_block
+        * store_tx_per_group(model, group.min(tile.threads()), tile.x, cost.elem_bytes)
+        * cost.stores_per_thread as u64;
+    let load_tx = groups_per_block
+        * gather_tx_per_group(
+            model,
+            group.min(tile.threads()),
+            tile.x,
+            launch.scale,
+            cost.elem_bytes,
+        )
+        * cost.loads_per_thread as u64;
+
+    // Useful bytes: every thread stores one pixel and gathers its taps
+    // (tap reuse across threads is served by the same transactions; for
+    // the bandwidth bound we count unique-ish traffic: stores exact,
+    // loads approximated by the block's source footprint per tap group).
+    let store_bytes = threads * cost.elem_bytes as u64;
+    let src_fp_w = tile.x as u64 / launch.scale as u64 + 2;
+    let src_fp_h = tile.y as u64 / launch.scale as u64 + 2;
+    let load_bytes = src_fp_w * src_fp_h * cost.elem_bytes as u64
+        * (cost.loads_per_thread as u64).min(4).max(1) / 4 * 4; // footprint read once per tap quad
+    let bytes = store_bytes + load_bytes.max(cost.elem_bytes as u64);
+
+    // Row crossings: the block walks tile.y output rows (stores) and
+    // ~tile.y/scale + 1 source rows (gathers).
+    let store_crossings = tile.y as u64;
+    let load_crossings = tile.y as u64 / launch.scale as u64 + 1;
+    let row_crossings = store_crossings + load_crossings;
+
+    let store_pen = store_crossings as f64
+        * dev.row_switch_cycles
+        * row_penalty_factor(launch.out_pitch_bytes() as f64);
+    let load_pen = load_crossings as f64
+        * dev.row_switch_cycles
+        * row_penalty_factor(launch.src_pitch_bytes() as f64);
+
+    BlockTraffic {
+        load_transactions: load_tx,
+        store_transactions: store_tx,
+        bytes,
+        row_crossings,
+        row_penalty_cycles: store_pen + load_pen,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{find_device, paper_pair};
+    use crate::image::Interpolator;
+    use crate::tiling::TileDim;
+
+    fn launch(tile: TileDim, scale: u32) -> Launch {
+        Launch::paper(Interpolator::Bilinear, tile, scale)
+    }
+
+    #[test]
+    fn fig4_asymmetry_8x4_beats_4x8() {
+        // Fig. 4: same 32 threads, 8x4 crosses 4 output rows, 4x8 crosses
+        // 8 — the wide tile must have fewer crossings and a smaller
+        // penalty on both devices.
+        let (gtx, gts) = paper_pair();
+        for dev in [&gtx, &gts] {
+            let wide = block_traffic(&launch(TileDim::new(8, 4), 6), dev);
+            let tall = block_traffic(&launch(TileDim::new(4, 8), 6), dev);
+            assert!(
+                wide.row_crossings < tall.row_crossings,
+                "{}: wide {} vs tall {}",
+                dev.id,
+                wide.row_crossings,
+                tall.row_crossings
+            );
+            assert!(wide.row_penalty_cycles < tall.row_penalty_cycles);
+        }
+    }
+
+    #[test]
+    fn row_penalty_grows_with_scale() {
+        let gtx = find_device("gtx260").unwrap();
+        let t = TileDim::new(16, 8);
+        let p2 = block_traffic(&launch(t, 2), &gtx).row_penalty_cycles;
+        let p6 = block_traffic(&launch(t, 6), &gtx).row_penalty_cycles;
+        let p10 = block_traffic(&launch(t, 10), &gtx).row_penalty_cycles;
+        assert!(p2 < p6, "penalty must grow with pitch: {p2} vs {p6}");
+        assert!(p6 < p10, "{p6} vs {p10}");
+    }
+
+    #[test]
+    fn strict_coalescing_serializes_narrow_stores() {
+        // tile.x = 8 < 16: a half-warp spans 2 rows → cc1.0 serializes
+        // (16 tx), cc1.3 issues 2 segments.
+        let gts = find_device("8800gts").unwrap();
+        let gtx = find_device("gtx260").unwrap();
+        let l = launch(TileDim::new(8, 8), 2);
+        let strict = block_traffic(&l, &gts);
+        let seg = block_traffic(&l, &gtx);
+        // per block: 64 threads = 4 half-warps; strict: 4*16, segmented: 4*2
+        assert_eq!(strict.store_transactions, 4 * 16);
+        assert_eq!(seg.store_transactions, 4 * 2);
+    }
+
+    #[test]
+    fn wide_stores_coalesce_on_both() {
+        let (gtx, gts) = paper_pair();
+        let l = launch(TileDim::new(32, 4), 2);
+        // 128 threads = 8 half-warps, tile.x=32 ≥ 16 → 1 tx each on both.
+        assert_eq!(block_traffic(&l, &gts).store_transactions, 8);
+        assert_eq!(block_traffic(&l, &gtx).store_transactions, 8);
+    }
+
+    #[test]
+    fn gathers_serialize_on_cc10_but_not_cc13() {
+        let (gtx, gts) = paper_pair();
+        let l = launch(TileDim::new(32, 4), 4);
+        let strict = block_traffic(&l, &gts);
+        let seg = block_traffic(&l, &gtx);
+        // 8 half-warps × 4 taps: strict = 8×16×4, segmented ≈ 8×1×4
+        assert_eq!(strict.load_transactions, 8 * 16 * 4);
+        assert_eq!(seg.load_transactions, 8 * 4);
+        assert!(strict.load_transactions > 10 * seg.load_transactions);
+    }
+
+    #[test]
+    fn penalty_factor_caps() {
+        assert_eq!(row_penalty_factor(100.0), 1.0);
+        assert!((row_penalty_factor(6400.0) - 3.125).abs() < 1e-9);
+        assert_eq!(row_penalty_factor(1e9), ROW_PENALTY_CAP);
+    }
+
+    #[test]
+    fn bytes_positive_and_store_dominated_at_scale() {
+        let gtx = find_device("gtx260").unwrap();
+        let t = block_traffic(&launch(TileDim::new(16, 16), 8), &gtx);
+        assert!(t.bytes >= 256 * 4); // at least the stores
+    }
+
+    #[test]
+    fn fermi_uses_warp_granularity() {
+        let fermi = find_device("fermi").unwrap();
+        let l = launch(TileDim::new(32, 4), 2);
+        // 128 threads = 4 warps; tile.x=32 = warp-wide piece of 128B → 1 tx
+        let t = block_traffic(&l, &fermi);
+        assert_eq!(t.store_transactions, 4);
+    }
+}

@@ -1,0 +1,33 @@
+//! The GPU timing simulator — the substrate that stands in for the
+//! paper's physical GTX 260 / GeForce 8800 GTS testbed.
+//!
+//! The paper's claims are about *relative timing shapes* induced by three
+//! microarchitectural mechanisms, each modeled by a submodule:
+//!
+//! 1. **Residency / occupancy** (`tiling::occupancy`) — how many blocks of
+//!    a given tile shape fit on an SM under the capability limits
+//!    (the §III.B 32×16 cliff).
+//! 2. **Memory-access geometry** ([`memory`]) — coalescing rules per
+//!    compute capability and the DRAM row-switch penalty that grows with
+//!    the output image's row pitch (the Fig. 4 4×8-vs-8×4 effect and the
+//!    Fig. 3 (c)–(e) jaggedness at large scales).
+//! 3. **Block dispatch across SMs** ([`engine`]) — greedy dynamic
+//!    dispatch of blocks to free SMs, which dilutes per-SM inefficiency
+//!    on many-SM devices (the §IV.C G1/G2 extreme example).
+//!
+//! [`cost`] carries per-kernel instruction/footprint counts, and
+//! [`launch`] describes a kernel launch (tile + output geometry).
+//! Cycle counts are converted to milliseconds with the device's shader
+//! clock; EXPERIMENTS.md compares *shapes*, never absolute numbers.
+
+pub mod config;
+pub mod cost;
+pub mod engine;
+pub mod launch;
+pub mod memory;
+
+pub use config::{simulate_config, KernelConfig};
+pub use cost::KernelCost;
+pub use engine::{simulate, SimBreakdown, SimReport, Straggler};
+pub use launch::Launch;
+pub use memory::{block_traffic, BlockTraffic};

@@ -1,0 +1,161 @@
+//! Tile (thread-block) dimensions.
+//!
+//! The paper writes tiles as `WxH` (e.g. "32x4" = 32 threads along x /
+//! image width, 4 along y / rows). We keep that convention: `x` is the
+//! fast, row-contiguous axis; `y` counts rows covered by the block —
+//! exactly the quantity Fig. 4 cares about (row crossings per block).
+
+use crate::device::ComputeCapability;
+use std::fmt;
+use std::str::FromStr;
+
+/// A 2-D tile shape (z fixed at 1; the paper only sweeps 2-D tiles, and
+/// image kernels have no use for a depth axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileDim {
+    /// Extent along the image row (CUDA blockDim.x).
+    pub x: u32,
+    /// Extent across rows (CUDA blockDim.y).
+    pub y: u32,
+}
+
+impl TileDim {
+    pub const fn new(x: u32, y: u32) -> TileDim {
+        TileDim { x, y }
+    }
+
+    /// Threads per block.
+    pub fn threads(&self) -> u32 {
+        self.x * self.y
+    }
+
+    /// Warps per block (ceil over the warp size).
+    pub fn warps(&self, warp_size: u32) -> u32 {
+        self.threads().div_ceil(warp_size)
+    }
+
+    /// Is this tile launchable under the given compute capability?
+    pub fn is_valid(&self, cc: &ComputeCapability) -> bool {
+        self.x >= 1
+            && self.y >= 1
+            && self.x <= cc.max_block_dim.0
+            && self.y <= cc.max_block_dim.1
+            && self.threads() <= cc.max_threads_per_block
+    }
+
+    /// Number of blocks needed to cover a `w`×`h` output image (the CUDA
+    /// grid size, eq. (6) of the paper solved for block counts).
+    pub fn grid_for(&self, w: u32, h: u32) -> (u32, u32) {
+        (w.div_ceil(self.x), h.div_ceil(self.y))
+    }
+
+    /// Total blocks covering a `w`×`h` output.
+    pub fn blocks_for(&self, w: u32, h: u32) -> u64 {
+        let (gx, gy) = self.grid_for(w, h);
+        gx as u64 * gy as u64
+    }
+
+    /// The paper's label format, `32x4`.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.x, self.y)
+    }
+
+    /// Aspect preference used in tie-breaks: wider-than-tall first (the
+    /// row-friendly shapes the paper recommends).
+    pub fn aspect(&self) -> f64 {
+        self.x as f64 / self.y as f64
+    }
+}
+
+impl fmt::Display for TileDim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.x, self.y)
+    }
+}
+
+/// Parse `"32x4"` / `"32X4"` / `"32,4"`.
+impl FromStr for TileDim {
+    type Err = String;
+    fn from_str(s: &str) -> Result<TileDim, String> {
+        let norm = s.trim().to_ascii_lowercase().replace(',', "x");
+        let (xs, ys) = norm
+            .split_once('x')
+            .ok_or_else(|| format!("tile '{s}' must look like 32x4"))?;
+        let x: u32 = xs
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad tile width in '{s}'"))?;
+        let y: u32 = ys
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad tile height in '{s}'"))?;
+        if x == 0 || y == 0 {
+            return Err(format!("tile dims must be positive in '{s}'"));
+        }
+        Ok(TileDim::new(x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ComputeCapability;
+
+    #[test]
+    fn threads_and_warps() {
+        let t = TileDim::new(32, 4);
+        assert_eq!(t.threads(), 128);
+        assert_eq!(t.warps(32), 4);
+        // partial warp rounds up
+        assert_eq!(TileDim::new(8, 4).warps(32), 1);
+        assert_eq!(TileDim::new(33, 1).warps(32), 2);
+    }
+
+    #[test]
+    fn validity_per_cc() {
+        let cc13 = ComputeCapability::CC_1_3;
+        assert!(TileDim::new(32, 16).is_valid(&cc13)); // 512 = max
+        assert!(!TileDim::new(32, 17).is_valid(&cc13)); // 544 > 512
+        assert!(!TileDim::new(513, 1).is_valid(&cc13)); // x over dim cap
+        assert!(TileDim::new(1, 512).is_valid(&cc13));
+        let cc20 = ComputeCapability::CC_2_0;
+        assert!(TileDim::new(32, 32).is_valid(&cc20)); // 1024 ok on Fermi
+        assert!(!TileDim::new(32, 32).is_valid(&cc13));
+    }
+
+    #[test]
+    fn grid_covering_paper_example() {
+        // Fig. 2: 8x8 blocks over a 16-wide image put pixel (10,4) in
+        // block (1,0) — grid must be at least 2 wide.
+        let t = TileDim::new(8, 8);
+        let (gx, gy) = t.grid_for(16, 8);
+        assert_eq!((gx, gy), (2, 1));
+        // 800x800 at scale 2 → 1600x1600 output with 32x4 tiles:
+        let t = TileDim::new(32, 4);
+        assert_eq!(t.grid_for(1600, 1600), (50, 400));
+        assert_eq!(t.blocks_for(1600, 1600), 20_000);
+        // non-divisible sizes round up
+        assert_eq!(TileDim::new(32, 4).grid_for(33, 5), (2, 2));
+    }
+
+    #[test]
+    fn parse_formats() {
+        assert_eq!("32x4".parse::<TileDim>().unwrap(), TileDim::new(32, 4));
+        assert_eq!("16X8".parse::<TileDim>().unwrap(), TileDim::new(16, 8));
+        assert_eq!(" 8,8 ".parse::<TileDim>().unwrap(), TileDim::new(8, 8));
+        assert!("32".parse::<TileDim>().is_err());
+        assert!("0x4".parse::<TileDim>().is_err());
+        assert!("axb".parse::<TileDim>().is_err());
+    }
+
+    #[test]
+    fn display_round_trip() {
+        let t = TileDim::new(32, 4);
+        assert_eq!(t.to_string().parse::<TileDim>().unwrap(), t);
+    }
+
+    #[test]
+    fn aspect_orders_wide_tiles_first() {
+        assert!(TileDim::new(32, 4).aspect() > TileDim::new(4, 32).aspect());
+    }
+}

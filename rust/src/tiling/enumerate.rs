@@ -1,0 +1,164 @@
+//! Candidate-tile enumeration: the x-axis of the paper's Fig. 3.
+//!
+//! The paper sweeps power-of-two block shapes between one warp (32
+//! threads) and the 512-thread block cap. [`paper_sweep_tiles`] generates
+//! that set in a deterministic order; [`pow2_tiles`] is the generic
+//! generator with a thread-count window and shape filter.
+
+use super::dims::TileDim;
+use crate::device::ComputeCapability;
+
+/// Shape filters for enumeration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileFilter {
+    /// Every valid shape in the window.
+    All,
+    /// Only shapes with x ≥ y (row-friendly; excludes tall-narrow tiles).
+    WideOrSquare,
+    /// Only full-warp shapes (threads divisible by the warp size) — what a
+    /// CUDA programmer would actually launch.
+    FullWarps,
+}
+
+/// All power-of-two tiles `x`×`y` with `min_threads ≤ x·y ≤ max_threads`
+/// that are valid on `cc` and pass `filter`. Sorted by total threads then
+/// by descending aspect, so sweeps print in a stable, paper-like order
+/// (… 32x4 before 4x32 …).
+pub fn pow2_tiles(
+    cc: &ComputeCapability,
+    min_threads: u32,
+    max_threads: u32,
+    filter: TileFilter,
+) -> Vec<TileDim> {
+    let mut out = Vec::new();
+    let mut x = 1u32;
+    while x <= cc.max_block_dim.0 {
+        let mut y = 1u32;
+        while y <= cc.max_block_dim.1 {
+            let t = TileDim::new(x, y);
+            let n = t.threads();
+            if n >= min_threads && n <= max_threads && t.is_valid(cc) {
+                let keep = match filter {
+                    TileFilter::All => true,
+                    TileFilter::WideOrSquare => x >= y,
+                    TileFilter::FullWarps => n % cc.warp_size == 0,
+                };
+                if keep {
+                    out.push(t);
+                }
+            }
+            y <<= 1;
+        }
+        x <<= 1;
+    }
+    out.sort_by(|a, b| {
+        a.threads()
+            .cmp(&b.threads())
+            .then(b.aspect().partial_cmp(&a.aspect()).unwrap())
+    });
+    out
+}
+
+/// The tile set used for the Fig. 3 reproduction: every power-of-two
+/// shape with both dimensions in 4..=32 and 32..=512 threads — the range
+/// the paper's figures actually exercise (every tile the text names is a
+/// member: 8×8, 32×16, 32×4, 4×8, 8×4; degenerate 1-wide/1-tall shapes
+/// and >32 extents do not appear in the study). 14 tiles.
+pub fn paper_sweep_tiles() -> Vec<TileDim> {
+    pow2_tiles_dims(&ComputeCapability::CC_1_0, 32, 512, 4, 32, TileFilter::FullWarps)
+}
+
+/// As [`pow2_tiles`] but additionally bounding each dimension to
+/// `[min_dim, max_dim]`.
+pub fn pow2_tiles_dims(
+    cc: &ComputeCapability,
+    min_threads: u32,
+    max_threads: u32,
+    min_dim: u32,
+    max_dim: u32,
+    filter: TileFilter,
+) -> Vec<TileDim> {
+    pow2_tiles(cc, min_threads, max_threads, filter)
+        .into_iter()
+        .filter(|t| {
+            t.x >= min_dim && t.x <= max_dim && t.y >= min_dim && t.y <= max_dim
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tiles_include_named_shapes() {
+        let tiles = paper_sweep_tiles();
+        for name in ["8x8", "32x16", "32x4", "4x8", "8x4", "16x16"] {
+            let t: TileDim = name.parse().unwrap();
+            assert!(tiles.contains(&t), "{name} missing from sweep");
+        }
+    }
+
+    #[test]
+    fn paper_tiles_all_valid_on_both_devices() {
+        use crate::device::paper_pair;
+        let (gtx, gts) = paper_pair();
+        for t in paper_sweep_tiles() {
+            assert!(t.is_valid(&gtx.cc), "{t} invalid on gtx260");
+            assert!(t.is_valid(&gts.cc), "{t} invalid on 8800gts");
+        }
+    }
+
+    #[test]
+    fn window_respected() {
+        let tiles = pow2_tiles(&ComputeCapability::CC_1_3, 64, 128, TileFilter::All);
+        assert!(!tiles.is_empty());
+        for t in &tiles {
+            assert!((64..=128).contains(&t.threads()), "{t}");
+        }
+    }
+
+    #[test]
+    fn full_warp_filter() {
+        let tiles = pow2_tiles(&ComputeCapability::CC_1_0, 1, 512, TileFilter::FullWarps);
+        for t in &tiles {
+            assert_eq!(t.threads() % 32, 0, "{t} is not a whole-warp tile");
+        }
+        // 4x4 = 16 threads must be excluded, 8x4 = 32 included
+        assert!(!tiles.contains(&TileDim::new(4, 4)));
+        assert!(tiles.contains(&TileDim::new(8, 4)));
+    }
+
+    #[test]
+    fn wide_or_square_filter() {
+        let tiles = pow2_tiles(
+            &ComputeCapability::CC_1_0,
+            32,
+            512,
+            TileFilter::WideOrSquare,
+        );
+        for t in &tiles {
+            assert!(t.x >= t.y, "{t} is taller than wide");
+        }
+    }
+
+    #[test]
+    fn deterministic_order() {
+        let a = paper_sweep_tiles();
+        let b = paper_sweep_tiles();
+        assert_eq!(a, b);
+        // stable order: ascending thread count
+        for w in a.windows(2) {
+            assert!(w[0].threads() <= w[1].threads());
+        }
+    }
+
+    #[test]
+    fn no_duplicates() {
+        let tiles = paper_sweep_tiles();
+        let mut sorted = tiles.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), tiles.len());
+    }
+}

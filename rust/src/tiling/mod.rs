@@ -1,0 +1,19 @@
+//! Tiling: the paper's tuning knob.
+//!
+//! * [`dims`] — the [`TileDim`](dims::TileDim) type (a CUDA thread-block /
+//!   Pallas output-tile shape) and validity rules per compute capability.
+//! * [`enumerate`] — generation of candidate tile sets (the sweep axis of
+//!   the paper's Fig. 3).
+//! * [`occupancy`] — a CUDA occupancy calculator: resident blocks per SM
+//!   limited by threads, warps, registers, shared memory, and the
+//!   max-blocks cap; reproduces the §III.B 32×16 occupancy cliff.
+
+pub mod dims;
+pub mod enumerate;
+pub mod occupancy;
+pub mod thread_tile;
+
+pub use dims::TileDim;
+pub use enumerate::{paper_sweep_tiles, pow2_tiles, TileFilter};
+pub use occupancy::{occupancy, KernelResources, Occupancy};
+pub use thread_tile::{thread_tile_candidates, ThreadTile, Tiling};

@@ -1,0 +1,284 @@
+//! The CUDA occupancy calculator.
+//!
+//! Given a tile (block) shape, a kernel's per-thread register count and
+//! per-block shared memory, and a device's compute capability, compute how
+//! many blocks are simultaneously *resident* on one SM and the resulting
+//! occupancy (resident warps / max warps). This is the spreadsheet NVIDIA
+//! shipped as `CUDA_Occupancy_calculator.xls`, as a library.
+//!
+//! The paper's §III.B scenario falls out directly: a 32×16 tile (512
+//! threads) gives 2 resident blocks = 1024 threads = 100% occupancy on the
+//! GTX 260 (cc1.3) but only 1 block = 512/768 = 66% on the 8800 GTS
+//! (cc1.0).
+
+use super::dims::TileDim;
+use crate::device::ComputeCapability;
+
+/// Per-kernel resource usage that constrains residency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelResources {
+    /// Registers per thread (as reported by `nvcc --ptxas-options=-v`).
+    pub regs_per_thread: u32,
+    /// Static + dynamic shared memory per block, bytes.
+    pub smem_per_block: u32,
+}
+
+impl KernelResources {
+    /// Resource profile of the bilinear-interpolation kernel: the paper's
+    /// kernel is arithmetic-light (coordinate math + 4 loads + 1 store);
+    /// nvcc for cc1.x allocates ~10 registers and no shared memory.
+    pub const BILINEAR: KernelResources = KernelResources {
+        regs_per_thread: 10,
+        smem_per_block: 0,
+    };
+
+    /// Nearest-neighbour: fewer temporaries.
+    pub const NEAREST: KernelResources = KernelResources {
+        regs_per_thread: 6,
+        smem_per_block: 0,
+    };
+
+    /// Bicubic (Catmull-Rom, 16 taps): register-hungry.
+    pub const BICUBIC: KernelResources = KernelResources {
+        regs_per_thread: 24,
+        smem_per_block: 0,
+    };
+}
+
+/// The outcome of the occupancy computation for one (tile, kernel, cc).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Blocks resident per SM (0 if the tile cannot launch at all).
+    pub blocks_per_sm: u32,
+    /// Resident warps per SM.
+    pub warps_per_sm: u32,
+    /// Resident threads per SM.
+    pub threads_per_sm: u32,
+    /// warps_per_sm / cc.max_warps_per_sm ∈ [0, 1].
+    pub ratio: f64,
+    /// Which resource clamped residency.
+    pub limiter: Limiter,
+}
+
+/// The binding constraint on residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    /// Tile invalid on this capability (too many threads / dim overflow).
+    Invalid,
+    /// max_threads_per_sm (or equivalently max warps).
+    ThreadsOrWarps,
+    /// Register file exhausted.
+    Registers,
+    /// Shared memory exhausted.
+    SharedMem,
+    /// The 8-blocks-per-SM architectural cap.
+    BlockSlots,
+}
+
+impl Limiter {
+    pub fn label(self) -> &'static str {
+        match self {
+            Limiter::Invalid => "invalid-tile",
+            Limiter::ThreadsOrWarps => "threads/warps",
+            Limiter::Registers => "registers",
+            Limiter::SharedMem => "shared-mem",
+            Limiter::BlockSlots => "block-slots",
+        }
+    }
+}
+
+/// Registers consumed by one block after the per-block allocation
+/// granularity round-up (cc1.x allocates registers block-wise in units of
+/// `register_alloc_unit`).
+fn regs_per_block(tile: TileDim, res: &KernelResources, cc: &ComputeCapability) -> u32 {
+    let raw = res.regs_per_thread * tile.threads();
+    raw.div_ceil(cc.register_alloc_unit) * cc.register_alloc_unit
+}
+
+/// Compute occupancy of `tile` running `res` on capability `cc`.
+pub fn occupancy(tile: TileDim, res: &KernelResources, cc: &ComputeCapability) -> Occupancy {
+    if !tile.is_valid(cc) {
+        return Occupancy {
+            blocks_per_sm: 0,
+            warps_per_sm: 0,
+            threads_per_sm: 0,
+            ratio: 0.0,
+            limiter: Limiter::Invalid,
+        };
+    }
+    let warps_per_block = tile.warps(cc.warp_size);
+
+    // Candidate limits. Each is "how many blocks could fit considering
+    // only this resource".
+    let by_threads = cc.max_threads_per_sm / tile.threads();
+    let by_warps = cc.max_warps_per_sm / warps_per_block;
+    let rpb = regs_per_block(tile, res, cc);
+    let by_regs = if rpb == 0 {
+        u32::MAX
+    } else {
+        cc.registers_per_sm / rpb
+    };
+    let by_smem = if res.smem_per_block == 0 {
+        u32::MAX
+    } else {
+        cc.shared_mem_per_sm / res.smem_per_block
+    };
+    let by_slots = cc.max_blocks_per_sm;
+
+    let blocks = by_threads
+        .min(by_warps)
+        .min(by_regs)
+        .min(by_smem)
+        .min(by_slots);
+
+    // Attribute the limiter (ties resolved in the order the hardware
+    // documentation lists them; Invalid handled above, blocks==0 means
+    // a single block over-subscribes a resource).
+    let limiter = if blocks == by_threads.min(by_warps) && blocks < by_regs.min(by_smem).min(by_slots) {
+        Limiter::ThreadsOrWarps
+    } else if blocks == by_regs && by_regs < by_threads.min(by_warps).min(by_smem).min(by_slots) {
+        Limiter::Registers
+    } else if blocks == by_smem && by_smem < by_threads.min(by_warps).min(by_regs).min(by_slots) {
+        Limiter::SharedMem
+    } else if blocks == by_slots && by_slots < by_threads.min(by_warps).min(by_regs).min(by_smem) {
+        Limiter::BlockSlots
+    } else {
+        // Multiple constraints tie; report the threads/warps family as the
+        // canonical one (it is what the paper reasons about).
+        Limiter::ThreadsOrWarps
+    };
+
+    let warps = blocks * warps_per_block;
+    Occupancy {
+        blocks_per_sm: blocks,
+        warps_per_sm: warps,
+        threads_per_sm: blocks * tile.threads(),
+        ratio: warps as f64 / cc.max_warps_per_sm as f64,
+        limiter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ComputeCapability;
+
+    const CC13: ComputeCapability = ComputeCapability::CC_1_3;
+    const CC10: ComputeCapability = ComputeCapability::CC_1_0;
+
+    #[test]
+    fn paper_section_3b_scenario() {
+        // "he perhaps sets the tiling dimensions as 32x16 ... each SM can
+        // have the maximum number of active threads of 1024 within 2
+        // blocks. But ... on the GeForce 8800 GTS ... only one block which
+        // includes 512 threads can be placed into each SM."
+        let tile = TileDim::new(32, 16);
+        let on_gtx = occupancy(tile, &KernelResources::BILINEAR, &CC13);
+        assert_eq!(on_gtx.blocks_per_sm, 2);
+        assert_eq!(on_gtx.threads_per_sm, 1024);
+        assert!((on_gtx.ratio - 1.0).abs() < 1e-12);
+
+        let on_gts = occupancy(tile, &KernelResources::BILINEAR, &CC10);
+        assert_eq!(on_gts.blocks_per_sm, 1);
+        assert_eq!(on_gts.threads_per_sm, 512);
+        assert!((on_gts.ratio - 512.0 / 768.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tile_32x4_reaches_full_occupancy_on_both() {
+        // 32x4 = 128 threads, 4 warps. GTX260: 8 blocks (slot cap) = 1024
+        // threads = 100%. 8800GTS: 6 blocks = 768 threads = 100%.
+        let tile = TileDim::new(32, 4);
+        let a = occupancy(tile, &KernelResources::BILINEAR, &CC13);
+        assert_eq!(a.blocks_per_sm, 8);
+        assert!((a.ratio - 1.0).abs() < 1e-12);
+        let b = occupancy(tile, &KernelResources::BILINEAR, &CC10);
+        assert_eq!(b.blocks_per_sm, 6);
+        assert!((b.ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_warp_tile_hits_block_slot_cap() {
+        // 8x4 = 32 threads. 8 blocks max ⇒ 8 warps of 32 possible ⇒ 25%
+        // occupancy on cc1.3, 33% on cc1.0: small tiles under-fill SMs.
+        let tile = TileDim::new(8, 4);
+        let a = occupancy(tile, &KernelResources::BILINEAR, &CC13);
+        assert_eq!(a.blocks_per_sm, 8);
+        assert_eq!(a.limiter, Limiter::BlockSlots);
+        assert!((a.ratio - 0.25).abs() < 1e-12);
+        let b = occupancy(tile, &KernelResources::BILINEAR, &CC10);
+        assert_eq!(b.blocks_per_sm, 8);
+        assert!((b.ratio - 8.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn register_pressure_limits_bicubic_on_cc10() {
+        // Bicubic at 24 regs/thread, 16x16 tile = 256 threads ⇒ 6144 regs
+        // + round-up ⇒ only 1 block on cc1.0 (8192 regs), vs threads would
+        // allow 3 fitting warps-wise... registers bind.
+        let tile = TileDim::new(16, 16);
+        let occ = occupancy(tile, &KernelResources::BICUBIC, &CC10);
+        assert_eq!(occ.blocks_per_sm, 1);
+        assert_eq!(occ.limiter, Limiter::Registers);
+        // Same tile+kernel on cc1.3 (16384 regs): 2 blocks.
+        let occ13 = occupancy(tile, &KernelResources::BICUBIC, &CC13);
+        assert_eq!(occ13.blocks_per_sm, 2);
+    }
+
+    #[test]
+    fn smem_limit_binds_when_large() {
+        let res = KernelResources {
+            regs_per_thread: 4,
+            smem_per_block: 9 * 1024, // two blocks would need 18K > 16K
+        };
+        let occ = occupancy(TileDim::new(16, 8), &res, &CC13);
+        assert_eq!(occ.blocks_per_sm, 1);
+        assert_eq!(occ.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn invalid_tile_is_zero() {
+        let occ = occupancy(TileDim::new(32, 32), &KernelResources::BILINEAR, &CC13);
+        assert_eq!(occ.blocks_per_sm, 0);
+        assert_eq!(occ.ratio, 0.0);
+        assert_eq!(occ.limiter, Limiter::Invalid);
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_caps() {
+        // exhaustive check over the paper sweep on all builtin devices
+        use crate::device::builtin_devices;
+        use crate::tiling::enumerate::paper_sweep_tiles;
+        for d in builtin_devices() {
+            for t in paper_sweep_tiles() {
+                for res in [
+                    KernelResources::BILINEAR,
+                    KernelResources::NEAREST,
+                    KernelResources::BICUBIC,
+                ] {
+                    let o = occupancy(t, &res, &d.cc);
+                    assert!(o.threads_per_sm <= d.cc.max_threads_per_sm);
+                    assert!(o.warps_per_sm <= d.cc.max_warps_per_sm);
+                    assert!(o.blocks_per_sm <= d.cc.max_blocks_per_sm);
+                    assert!(o.ratio <= 1.0 + 1e-12);
+                    let rpb = super::regs_per_block(t, &res, &d.cc);
+                    assert!(o.blocks_per_sm * rpb <= d.cc.registers_per_sm);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn register_roundup_granularity() {
+        // 10 regs × 128 threads = 1280 → rounds to 1536 on cc1.3 (unit 512)
+        assert_eq!(
+            super::regs_per_block(TileDim::new(32, 4), &KernelResources::BILINEAR, &CC13),
+            1536
+        );
+        // and to 1280 on cc1.0 (unit 256)
+        assert_eq!(
+            super::regs_per_block(TileDim::new(32, 4), &KernelResources::BILINEAR, &CC10),
+            1280
+        );
+    }
+}

@@ -1,0 +1,188 @@
+//! Thread-level tiling — the "deeper" tiling the paper names but never
+//! explores (§III.A: "There are, in fact, two kinds of tiling
+//! techniques, block level tiling and the deeper thread level tiling").
+//!
+//! With a thread tile of (ty, tx), each thread computes `ty × tx` output
+//! pixels instead of one. Consequences modeled here and in the
+//! simulator:
+//!
+//! * the grid shrinks by `ty·tx` (fewer blocks → fewer scheduling
+//!   rounds),
+//! * each thread's instruction count multiplies by the pixels it owns
+//!   (plus loop overhead unless fully unrolled),
+//! * registers per thread grow with live pixel state (occupancy may
+//!   drop — the classic ILP-vs-TLP trade),
+//! * the block's data footprint grows: a (by,bx) block with (ty,tx)
+//!   thread tiles covers `(by·ty) × (bx·tx)` output pixels, changing
+//!   the row-crossing count exactly like a taller/wider block tile.
+
+use super::dims::TileDim;
+use crate::device::ComputeCapability;
+
+/// A thread-level tile: pixels computed per thread along y and x.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ThreadTile {
+    pub y: u32,
+    pub x: u32,
+}
+
+impl ThreadTile {
+    pub const ONE: ThreadTile = ThreadTile { y: 1, x: 1 };
+
+    pub const fn new(y: u32, x: u32) -> ThreadTile {
+        ThreadTile { y, x }
+    }
+
+    /// Pixels per thread.
+    pub fn pixels(&self) -> u32 {
+        self.x * self.y
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}pt", self.x, self.y)
+    }
+}
+
+/// A combined (block, thread) tiling: the full design point of §III.A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tiling {
+    /// Thread-block shape (threads).
+    pub block: TileDim,
+    /// Pixels per thread.
+    pub per_thread: ThreadTile,
+}
+
+impl Tiling {
+    /// Pure block-level tiling (the paper's experiments).
+    pub fn block_only(block: TileDim) -> Tiling {
+        Tiling {
+            block,
+            per_thread: ThreadTile::ONE,
+        }
+    }
+
+    /// Output-pixel footprint of one block: block dims × thread tile.
+    pub fn footprint(&self) -> TileDim {
+        TileDim::new(
+            self.block.x * self.per_thread.x,
+            self.block.y * self.per_thread.y,
+        )
+    }
+
+    /// Blocks needed to cover a w×h output.
+    pub fn blocks_for(&self, w: u32, h: u32) -> u64 {
+        self.footprint().blocks_for(w, h)
+    }
+
+    /// Launchable under `cc`? (Block validity; footprint is uncapped.)
+    pub fn is_valid(&self, cc: &ComputeCapability) -> bool {
+        self.block.is_valid(cc) && self.per_thread.pixels() >= 1
+    }
+
+    /// Registers per thread for a base kernel cost: each extra owned
+    /// pixel keeps ~2 extra values live (accumulator + coordinate) on
+    /// top of the shared address math.
+    pub fn regs_per_thread(&self, base_regs: u32) -> u32 {
+        base_regs + 2 * (self.per_thread.pixels().saturating_sub(1))
+    }
+
+    /// Instructions per thread: owned pixels × per-pixel cost, plus loop
+    /// overhead of ~2 slots per non-unrolled iteration beyond the first.
+    pub fn instrs_per_thread(&self, base_instrs: u32, unrolled: bool) -> u32 {
+        let p = self.per_thread.pixels();
+        let loop_overhead = if unrolled || p == 1 { 0 } else { 2 * p };
+        base_instrs * p + loop_overhead
+    }
+
+    pub fn label(&self) -> String {
+        if self.per_thread == ThreadTile::ONE {
+            self.block.label()
+        } else {
+            format!("{}+{}", self.block.label(), self.per_thread.label())
+        }
+    }
+}
+
+/// Candidate thread tiles for the extension sweep: 1, 2 and 4 pixels
+/// per thread in each axis arrangement.
+pub fn thread_tile_candidates() -> Vec<ThreadTile> {
+    vec![
+        ThreadTile::new(1, 1),
+        ThreadTile::new(1, 2),
+        ThreadTile::new(2, 1),
+        ThreadTile::new(2, 2),
+        ThreadTile::new(1, 4),
+        ThreadTile::new(4, 1),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::ComputeCapability;
+
+    #[test]
+    fn footprint_multiplies() {
+        let t = Tiling {
+            block: TileDim::new(32, 4),
+            per_thread: ThreadTile::new(2, 2),
+        };
+        assert_eq!(t.footprint(), TileDim::new(64, 8));
+        assert_eq!(t.blocks_for(1600, 1600), (1600 / 64) * (1600 / 8));
+    }
+
+    #[test]
+    fn block_only_is_identity() {
+        let t = Tiling::block_only(TileDim::new(16, 8));
+        assert_eq!(t.footprint(), TileDim::new(16, 8));
+        assert_eq!(t.label(), "16x8");
+    }
+
+    #[test]
+    fn regs_and_instrs_grow_with_pixels() {
+        let t = Tiling {
+            block: TileDim::new(32, 4),
+            per_thread: ThreadTile::new(2, 2),
+        };
+        assert_eq!(t.regs_per_thread(10), 16);
+        assert_eq!(t.instrs_per_thread(30, true), 120);
+        assert_eq!(t.instrs_per_thread(30, false), 128); // + loop overhead
+        let one = Tiling::block_only(TileDim::new(32, 4));
+        assert_eq!(one.regs_per_thread(10), 10);
+        assert_eq!(one.instrs_per_thread(30, false), 30);
+    }
+
+    #[test]
+    fn validity_follows_block() {
+        let cc = ComputeCapability::CC_1_3;
+        assert!(Tiling {
+            block: TileDim::new(32, 16),
+            per_thread: ThreadTile::new(4, 4),
+        }
+        .is_valid(&cc));
+        assert!(!Tiling {
+            block: TileDim::new(32, 32),
+            per_thread: ThreadTile::ONE,
+        }
+        .is_valid(&cc));
+    }
+
+    #[test]
+    fn candidates_unique_and_start_at_one() {
+        let c = thread_tile_candidates();
+        assert_eq!(c[0], ThreadTile::ONE);
+        let mut s = c.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), c.len());
+    }
+
+    #[test]
+    fn label_format() {
+        let t = Tiling {
+            block: TileDim::new(32, 4),
+            per_thread: ThreadTile::new(1, 2),
+        };
+        assert_eq!(t.label(), "32x4+2x1pt");
+    }
+}

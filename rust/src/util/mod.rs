@@ -1,0 +1,9 @@
+//! Small shared utilities: a deterministic PRNG, descriptive statistics,
+//! and text-formatting helpers used by the bench harness and reports.
+
+pub mod pcg;
+pub mod stats;
+pub mod text;
+
+pub use pcg::Pcg32;
+pub use stats::Summary;

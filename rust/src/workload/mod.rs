@@ -1,0 +1,17 @@
+//! Workload generation and trace replay for the serving system.
+//!
+//! The closed-loop driver in `examples/serving_e2e.rs` saturates the
+//! queue, which measures throughput but makes latency percentiles
+//! queue-dominated. This module provides **open-loop** load: requests
+//! arrive on a schedule (Poisson / uniform / bursty), so latency
+//! reflects the system under a target load — the methodology serving
+//! papers use.
+//!
+//! Traces are JSON (via [`crate::codec::json`]) and can be saved,
+//! loaded, and replayed bit-identically.
+
+pub mod replay;
+pub mod trace;
+
+pub use replay::{replay, ReplayOutcome};
+pub use trace::{Arrival, Trace, TraceEvent};

@@ -1,0 +1,251 @@
+//! Workload traces: timestamped resize requests with JSON round-trip.
+
+use crate::codec::json::Json;
+use crate::coordinator::RequestKey;
+use crate::image::Interpolator;
+use crate::util::Pcg32;
+use anyhow::{anyhow, Result};
+
+/// Arrival process for trace generation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// All requests at t=0 (the closed-loop saturation pattern).
+    Immediate,
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Evenly spaced arrivals at `rate` requests/second.
+    Uniform { rate: f64 },
+    /// Bursts of `burst` back-to-back requests, bursts Poisson at
+    /// `rate` bursts/second.
+    Bursty { rate: f64, burst: u32 },
+}
+
+/// One trace event: a request shape arriving at `t_us` after start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub t_us: u64,
+    pub key: RequestKey,
+    /// Seed for the deterministic synthetic input image.
+    pub seed: u64,
+}
+
+/// A replayable workload trace.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Generate a trace of `n` events over `keys` with the given
+    /// arrival process. Deterministic in `seed`.
+    pub fn generate(keys: &[RequestKey], n: usize, arrival: Arrival, seed: u64) -> Trace {
+        assert!(!keys.is_empty(), "need at least one request shape");
+        let mut rng = Pcg32::new(seed, 0x7ACE);
+        let mut t_us = 0f64;
+        let mut events = Vec::with_capacity(n);
+        let mut burst_left = 0u32;
+        for _ in 0..n {
+            match arrival {
+                Arrival::Immediate => {}
+                Arrival::Poisson { rate } => {
+                    // exponential inter-arrival
+                    let u = rng.f64().max(1e-12);
+                    t_us += -u.ln() / rate * 1e6;
+                }
+                Arrival::Uniform { rate } => {
+                    t_us += 1e6 / rate;
+                }
+                Arrival::Bursty { rate, burst } => {
+                    if burst_left == 0 {
+                        let u = rng.f64().max(1e-12);
+                        t_us += -u.ln() / rate * 1e6;
+                        burst_left = burst;
+                    }
+                    burst_left -= 1;
+                }
+            }
+            events.push(TraceEvent {
+                t_us: t_us as u64,
+                key: *rng.pick(keys),
+                // Mask to 53 bits: seeds survive the JSON f64 number
+                // representation exactly.
+                seed: rng.next_u64() & ((1u64 << 53) - 1),
+            });
+        }
+        Trace { events }
+    }
+
+    /// Trace duration (arrival of the last event), µs.
+    pub fn span_us(&self) -> u64 {
+        self.events.last().map(|e| e.t_us).unwrap_or(0)
+    }
+
+    /// Offered load in requests/second (0 for immediate traces).
+    pub fn offered_rps(&self) -> f64 {
+        let span = self.span_us();
+        if span == 0 {
+            0.0
+        } else {
+            self.events.len() as f64 / (span as f64 / 1e6)
+        }
+    }
+
+    // ---- JSON round-trip --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("t_us", e.t_us)
+                    .set("kernel", e.key.kernel.label())
+                    .set("src", vec![e.key.src.0 as u64, e.key.src.1 as u64])
+                    .set("scale", e.key.scale as u64)
+                    .set("seed", e.seed)
+            })
+            .collect();
+        Json::obj().set("version", 1u64).set("events", events)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let events = j
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace missing 'events'"))?;
+        let parsed = events
+            .iter()
+            .map(|e| -> Result<TraceEvent> {
+                let kernel_s = e
+                    .get("kernel")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("event missing kernel"))?;
+                let kernel = Interpolator::parse(kernel_s)
+                    .ok_or_else(|| anyhow!("unknown kernel '{kernel_s}'"))?;
+                let src = e
+                    .get("src")
+                    .and_then(Json::as_arr)
+                    .filter(|a| a.len() == 2)
+                    .ok_or_else(|| anyhow!("event missing src pair"))?;
+                Ok(TraceEvent {
+                    t_us: e
+                        .get("t_us")
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| anyhow!("event missing t_us"))?,
+                    key: RequestKey {
+                        kernel,
+                        src: (
+                            src[0].as_u64().ok_or_else(|| anyhow!("bad src"))? as u32,
+                            src[1].as_u64().ok_or_else(|| anyhow!("bad src"))? as u32,
+                        ),
+                        scale: e
+                            .get("scale")
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| anyhow!("event missing scale"))?
+                            as u32,
+                    },
+                    seed: e.get("seed").and_then(Json::as_u64).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace { events: parsed })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys() -> Vec<RequestKey> {
+        vec![
+            RequestKey {
+                kernel: Interpolator::Bilinear,
+                src: (64, 64),
+                scale: 2,
+            },
+            RequestKey {
+                kernel: Interpolator::Nearest,
+                src: (64, 64),
+                scale: 2,
+            },
+        ]
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = Trace::generate(&keys(), 100, Arrival::Poisson { rate: 500.0 }, 1);
+        let b = Trace::generate(&keys(), 100, Arrival::Poisson { rate: 500.0 }, 1);
+        assert_eq!(a, b);
+        let c = Trace::generate(&keys(), 100, Arrival::Poisson { rate: 500.0 }, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let t = Trace::generate(&keys(), 2000, Arrival::Poisson { rate: 1000.0 }, 7);
+        for w in t.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us);
+        }
+        let rps = t.offered_rps();
+        assert!((700.0..1400.0).contains(&rps), "offered {rps}");
+    }
+
+    #[test]
+    fn uniform_spacing_exact() {
+        let t = Trace::generate(&keys(), 10, Arrival::Uniform { rate: 1000.0 }, 3);
+        for (i, e) in t.events.iter().enumerate() {
+            assert_eq!(e.t_us, 1000 * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn bursty_groups() {
+        let t = Trace::generate(&keys(), 30, Arrival::Bursty { rate: 100.0, burst: 3 }, 5);
+        // events come in triplets sharing a timestamp
+        for chunk in t.events.chunks(3) {
+            assert!(chunk.iter().all(|e| e.t_us == chunk[0].t_us));
+        }
+    }
+
+    #[test]
+    fn immediate_all_zero() {
+        let t = Trace::generate(&keys(), 5, Arrival::Immediate, 1);
+        assert!(t.events.iter().all(|e| e.t_us == 0));
+        assert_eq!(t.offered_rps(), 0.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let t = Trace::generate(&keys(), 50, Arrival::Poisson { rate: 200.0 }, 11);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let t = Trace::generate(&keys(), 20, Arrival::Uniform { rate: 50.0 }, 2);
+        let path = std::env::temp_dir().join("tilekit_trace_test.json");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Trace::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"events": [{"t_us": 1, "kernel": "sinc", "src": [2,2], "scale": 2}]}"#;
+        assert!(Trace::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! CLI smoke tests: run the built `tilekit` binary as a subprocess and
+//! check each subcommand's output carries the expected experiment
+//! content. Skips (loudly) if the binary hasn't been built.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn binary() -> Option<PathBuf> {
+    // Integration tests live next to the binary under target/<profile>/.
+    let mut path = std::env::current_exe().ok()?;
+    path.pop(); // deps/
+    path.pop(); // debug|release/
+    let bin = path.join("tilekit");
+    if bin.exists() {
+        Some(bin)
+    } else {
+        eprintln!("SKIP: {} not built", bin.display());
+        None
+    }
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let bin = binary().expect("binary checked by caller");
+    let out = Command::new(bin)
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn tilekit");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["devices", "occupancy", "sweep", "simulate", "autotune", "serve"] {
+        assert!(out.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn devices_table1() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["devices", "--table1"]);
+    assert!(ok);
+    assert!(out.contains("16384") && out.contains("8192"));
+    assert!(out.contains("GTX 260") && out.contains("8800"));
+}
+
+#[test]
+fn occupancy_cliff() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["occupancy", "--tile", "32x16"]);
+    assert!(ok);
+    assert!(out.contains("gtx260") && out.contains("100%"));
+    assert!(out.contains("8800gts") && (out.contains("67%") || out.contains("66%")));
+}
+
+#[test]
+fn sweep_single_scale_finds_best() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["sweep", "--scale", "8"]);
+    assert!(ok);
+    assert!(out.contains("best: 32x4"), "expected 32x4 best:\n{out}");
+}
+
+#[test]
+fn simulate_extreme_matches_paper() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["simulate", "--extreme"]);
+    assert!(ok);
+    assert!(out.contains("0.250") && out.contains("0.025"), "{out}");
+}
+
+#[test]
+fn autotune_portable_is_32x4() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["autotune", "--scale", "8"]);
+    assert!(ok);
+    assert!(out.contains("portable tile (min-max regret): 32x4"), "{out}");
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    if binary().is_none() {
+        return;
+    }
+    let (_, err, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(err.contains("unknown subcommand"));
+}
+
+#[test]
+fn init_config_round_trips() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("t.toml");
+    let (_, _, ok) = run(&["init-config", "--out", cfg.to_str().unwrap()]);
+    assert!(ok);
+    // the generated config must itself be loadable
+    let (out, err, ok) = run(&[
+        "devices",
+        "--config",
+        cfg.to_str().unwrap(),
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("gtx260"));
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn artifacts_listing_if_built() {
+    if binary().is_none() {
+        return;
+    }
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !artifacts.exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let (out, err, ok) = run(&["artifacts"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("bilinear") && out.contains("whiles"));
+    // every artifact row parses to non-zero instructions
+    assert!(out.contains("artifacts in"), "{out}");
+}
+
+#[test]
+fn resize_file_round_trip_if_artifacts() {
+    if binary().is_none() {
+        return;
+    }
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !artifacts.exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    // Write a 64x64 PGM, upscale it through the artifact, check header.
+    let dir = std::env::temp_dir().join("tilekit_cli_resize");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = dir.join("in.pgm");
+    let dst = dir.join("out.pgm");
+    let mut body = b"P5\n64 64\n255\n".to_vec();
+    body.extend((0..64 * 64).map(|i| (i % 251) as u8));
+    std::fs::write(&src, body).unwrap();
+    let (out, err, ok) = run(&[
+        "resize",
+        src.to_str().unwrap(),
+        dst.to_str().unwrap(),
+        "--scale",
+        "2",
+    ]);
+    assert!(ok, "stderr: {err}\nstdout: {out}");
+    let result = std::fs::read(&dst).unwrap();
+    assert!(result.starts_with(b"P5\n128 128\n255\n"));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,147 @@
+//! Integration: the full AOT path. Loads `artifacts/manifest.json`
+//! (produced by `make artifacts`), compiles the HLO through the PJRT CPU
+//! client, executes batches, and checks the numerics against the rust
+//! CPU reference interpolators — the cross-language twin of the python
+//! kernel-vs-ref pytest.
+//!
+//! Skipped (with a loud message) if artifacts are absent.
+
+use std::path::Path;
+use std::sync::Arc;
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{Coordinator, Router};
+use tilekit::image::{generate, Image, Interpolator};
+use tilekit::runtime::executor::EngineHandle;
+use tilekit::runtime::{Engine, Manifest, ResizeBackend};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP: no artifacts ({e}); run `make artifacts` first");
+            None
+        }
+    }
+}
+
+/// Reference output for an entry+input, via the rust CPU interpolators.
+fn reference(kernel: Interpolator, img: &Image<f32>, scale: u32) -> Image<f32> {
+    kernel.run(img, scale)
+}
+
+#[test]
+fn every_artifact_compiles_and_matches_reference() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu(m.clone()).expect("PJRT CPU client");
+    println!("platform: {}", engine.platform());
+    for entry in &m.entries {
+        if entry.src.0 > 256 {
+            continue; // paper-sized artifacts exercised in the e2e bench
+        }
+        let exe = engine
+            .load(entry)
+            .unwrap_or_else(|e| panic!("compile {}: {e:#}", entry.name));
+        let imgs: Vec<Image<f32>> = (0..entry.batch as usize)
+            .map(|i| {
+                generate::test_scene(entry.src.1 as usize, entry.src.0 as usize, i as u64 + 7)
+            })
+            .collect();
+        let outs = exe
+            .run(&imgs)
+            .unwrap_or_else(|e| panic!("execute {}: {e:#}", entry.name));
+        assert_eq!(outs.len(), imgs.len(), "{}", entry.name);
+        for (img, out) in imgs.iter().zip(&outs) {
+            let want = reference(entry.kernel, img, entry.scale);
+            let err = out.max_abs_diff(&want);
+            assert!(
+                err < 2e-5,
+                "{}: artifact vs rust reference max |err| = {err}",
+                entry.name
+            );
+        }
+    }
+}
+
+#[test]
+fn partial_batches_are_padded_and_truncated() {
+    let Some(m) = manifest() else { return };
+    let entry = m
+        .select(Interpolator::Bilinear, (64, 64), 2, 4, None)
+        .expect("b4 artifact")
+        .clone();
+    assert_eq!(entry.batch, 4);
+    let engine = Engine::cpu(m).expect("client");
+    let exe = engine.load(&entry).unwrap();
+    // Submit only 2 images into the batch-4 executable.
+    let imgs: Vec<Image<f32>> = (0..2).map(|i| generate::test_scene(64, 64, i)).collect();
+    let outs = exe.run(&imgs).unwrap();
+    assert_eq!(outs.len(), 2);
+    for (img, out) in imgs.iter().zip(&outs) {
+        let want = reference(Interpolator::Bilinear, img, 2);
+        assert!(out.max_abs_diff(&want) < 2e-5);
+    }
+}
+
+#[test]
+fn tile_variants_agree_numerically() {
+    // The 32x4 and 8x8 Pallas tilings must produce identical outputs —
+    // tiling is a performance knob, not a numerics knob (the same
+    // property the paper implicitly relies on when comparing times).
+    let Some(m) = manifest() else { return };
+    let v32x4 = m
+        .entries
+        .iter()
+        .find(|e| e.name.contains("b4_t32x4_64x64") && e.kernel == Interpolator::Bilinear);
+    let v8x8 = m
+        .entries
+        .iter()
+        .find(|e| e.name.contains("b4_t8x8_64x64") && e.kernel == Interpolator::Bilinear);
+    let (Some(a), Some(b)) = (v32x4, v8x8) else {
+        eprintln!("SKIP: tile variants not in manifest");
+        return;
+    };
+    let engine = Engine::cpu(m.clone()).expect("client");
+    let imgs: Vec<Image<f32>> = (0..4).map(|i| generate::test_scene(64, 64, 100 + i)).collect();
+    let oa = engine.load(a).unwrap().run(&imgs).unwrap();
+    let ob = engine.load(b).unwrap().run(&imgs).unwrap();
+    for (x, y) in oa.iter().zip(&ob) {
+        assert!(x.max_abs_diff(y) < 1e-6, "tile variants diverge");
+    }
+}
+
+#[test]
+fn coordinator_serves_real_artifacts_end_to_end() {
+    let Some(m) = manifest() else { return };
+    let router = Router::new(&m, Some("32x4".parse().unwrap()));
+    let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m));
+    let cfg = ServingConfig {
+        workers: 2,
+        batch_max: 4,
+        batch_deadline_ms: 2.0,
+        queue_cap: 64,
+        artifacts_dir: "artifacts".into(),
+    };
+    let co = Coordinator::start(&cfg, router, backend);
+    let img = generate::test_scene(64, 64, 11);
+    let want = reference(Interpolator::Bilinear, &img, 2);
+    let tickets: Vec<_> = (0..12)
+        .map(|_| {
+            co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
+                .expect("admitted")
+        })
+        .collect();
+    for t in tickets {
+        let out = t.wait().expect("completed");
+        assert_eq!(out.width(), 128);
+        assert!(out.max_abs_diff(&want) < 2e-5);
+    }
+    let stats = co.shutdown();
+    assert_eq!(stats.completed.get(), 12);
+    assert_eq!(stats.failed.get(), 0);
+    assert!(
+        stats.mean_batch() > 1.0,
+        "dynamic batching should group requests (mean batch {})",
+        stats.mean_batch()
+    );
+}

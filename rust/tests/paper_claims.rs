@@ -1,0 +1,166 @@
+//! The paper's findings, asserted as integration tests over the public
+//! API. Each test cites the passage it reproduces. These are the
+//! "shape" claims of EXPERIMENTS.md: who wins, in which regime, by
+//! roughly what structure — never absolute milliseconds.
+
+use tilekit::autotuner::{portable_tile, sweep};
+use tilekit::device::{builtin_devices, find_device, paper_pair};
+use tilekit::image::Interpolator;
+use tilekit::sim::{simulate, Launch, Straggler};
+use tilekit::tiling::occupancy::{occupancy, KernelResources};
+use tilekit::tiling::{paper_sweep_tiles, TileDim};
+
+fn paper_sweep(dev: &tilekit::device::DeviceDescriptor, scale: u32) -> tilekit::autotuner::SweepResult {
+    sweep(
+        dev,
+        Interpolator::Bilinear,
+        &paper_sweep_tiles(),
+        scale,
+        (800, 800),
+    )
+}
+
+/// Table I: the registry reproduces every row for the paper pair.
+#[test]
+fn table1_rows() {
+    let (gtx, gts) = paper_pair();
+    assert_eq!(
+        (gtx.cc.registers_per_sm, gts.cc.registers_per_sm),
+        (16384, 8192)
+    );
+    assert_eq!((gtx.cc.max_warps_per_sm, gts.cc.max_warps_per_sm), (32, 24));
+    assert_eq!(
+        (gtx.cc.max_threads_per_sm, gts.cc.max_threads_per_sm),
+        (1024, 768)
+    );
+    assert_eq!((gtx.total_sps(), gts.total_sps()), (192, 96));
+    assert_eq!((gtx.sm_count, gts.sm_count), (24, 12));
+}
+
+/// §IV.A: "It is absolutely clear that, the GTX 260 can provide better
+/// performance than the GeForce 8800 GTS."
+#[test]
+fn gtx260_dominates() {
+    let (gtx, gts) = paper_pair();
+    for scale in [2, 4, 6, 8, 10] {
+        for tile in paper_sweep_tiles() {
+            let l = Launch::paper(Interpolator::Bilinear, tile, scale);
+            let (a, b) = (simulate(&l, &gtx, None).ms, simulate(&l, &gts, None).ms);
+            assert!(a < b, "tile {tile} scale {scale}: {a} !< {b}");
+        }
+    }
+}
+
+/// §IV.B: "the tiling dimensions which can provide the best performance
+/// both on GTX 260 and GeForce 8800 GTX ... is the tiling dimensions
+/// 32x4 in inset (c), (d) and (e)" — scales 6, 8, 10.
+#[test]
+fn tile_32x4_best_on_both_at_large_scales() {
+    let (gtx, gts) = paper_pair();
+    let t32x4: TileDim = "32x4".parse().unwrap();
+    for dev in [&gtx, &gts] {
+        for scale in [6, 8, 10] {
+            let best = paper_sweep(dev, scale).best().unwrap().tile;
+            assert_eq!(best, t32x4, "{} at scale {scale}", dev.id);
+        }
+    }
+}
+
+/// §IV.B / Fig. 4: wide-short tiles beat tall-narrow tiles of the same
+/// thread count once row crossings are expensive, on both devices.
+#[test]
+fn fig4_wide_beats_tall() {
+    let (gtx, gts) = paper_pair();
+    for dev in [&gtx, &gts] {
+        for (wide, tall) in [("8x4", "4x8"), ("16x4", "4x16"), ("32x8", "8x32")] {
+            let w: TileDim = wide.parse().unwrap();
+            let t: TileDim = tall.parse().unwrap();
+            for scale in [6, 8, 10] {
+                let lw = Launch::paper(Interpolator::Bilinear, w, scale);
+                let lt = Launch::paper(Interpolator::Bilinear, t, scale);
+                let (tw, tt) = (simulate(&lw, dev, None).ms, simulate(&lt, dev, None).ms);
+                assert!(
+                    tw <= tt,
+                    "{}: {wide} ({tw}) should beat {tall} ({tt}) at scale {scale}",
+                    dev.id
+                );
+            }
+        }
+    }
+}
+
+/// §IV.B: the GTX 260 curve moves in a narrower ms band than the 8800
+/// GTS curve ("the lower line is smoother than the upper line").
+#[test]
+fn gtx_curve_smoother_in_ms() {
+    let (gtx, gts) = paper_pair();
+    for scale in [2, 4, 6, 8, 10] {
+        let rg = paper_sweep(&gtx, scale).range_ms();
+        let rs = paper_sweep(&gts, scale).range_ms();
+        assert!(rg < rs, "scale {scale}: {rg} !< {rs}");
+    }
+}
+
+/// §III.B: the 32×16 occupancy cliff — 2 blocks/1024 threads on the
+/// GTX 260, 1 block/512 threads (66%) on the 8800 GTS.
+#[test]
+fn occupancy_cliff_32x16() {
+    let (gtx, gts) = paper_pair();
+    let tile: TileDim = "32x16".parse().unwrap();
+    let a = occupancy(tile, &KernelResources::BILINEAR, &gtx.cc);
+    let b = occupancy(tile, &KernelResources::BILINEAR, &gts.cc);
+    assert_eq!((a.blocks_per_sm, a.threads_per_sm), (2, 1024));
+    assert_eq!((b.blocks_per_sm, b.threads_per_sm), (1, 512));
+    assert!((a.ratio - 1.0).abs() < 1e-9);
+    assert!((b.ratio - 2.0 / 3.0).abs() < 1e-9);
+}
+
+/// §IV.C: a half-speed SM costs G1 (2 SMs) ≈1/4 of efficiency and G2
+/// (20 SMs) ≈1/40 — "the effect caused by tiling dimensions is less when
+/// the number of cores is larger".
+#[test]
+fn extreme_example_dilution() {
+    let g1 = find_device("g1").unwrap();
+    let g2 = find_device("g2").unwrap();
+    let l = Launch::paper(Interpolator::Bilinear, "32x4".parse().unwrap(), 4);
+    let loss = |dev| {
+        let clean = simulate(&l, dev, None).ms;
+        let hurt = simulate(&l, dev, Some(Straggler { sm: 0, speed: 0.5 })).ms;
+        (hurt - clean) / hurt
+    };
+    let (l1, l2) = (loss(&g1), loss(&g2));
+    assert!((l1 - 0.25).abs() < 0.05, "G1 loss {l1} (paper: 1/4)");
+    assert!((l2 - 0.025).abs() < 0.01, "G2 loss {l2} (paper: 1/40)");
+}
+
+/// §V: the portable (min-max regret) tile over the paper pair is 32×4
+/// at the large scales — "consider more about the performance on the
+/// worst-case GPU".
+#[test]
+fn portable_tile_is_32x4() {
+    let (gtx, gts) = paper_pair();
+    let tiles = paper_sweep_tiles();
+    for scale in [6, 8, 10] {
+        let sweeps = vec![
+            sweep(&gtx, Interpolator::Bilinear, &tiles, scale, (800, 800)),
+            sweep(&gts, Interpolator::Bilinear, &tiles, scale, (800, 800)),
+        ];
+        let c = portable_tile(&sweeps).unwrap();
+        assert_eq!(c.tile, "32x4".parse().unwrap(), "scale {scale}");
+    }
+}
+
+/// Cross-registry sanity: every builtin device runs the whole paper
+/// sweep to finite positive times for launchable tiles.
+#[test]
+fn all_devices_simulate_cleanly() {
+    for dev in builtin_devices() {
+        for tile in paper_sweep_tiles() {
+            let l = Launch::paper(Interpolator::Bilinear, tile, 4);
+            let r = simulate(&l, &dev, None);
+            if tile.is_valid(&dev.cc) {
+                assert!(r.ms.is_finite() && r.ms > 0.0, "{} {tile}", dev.id);
+            }
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! Property-based tests over the library's invariants, using the
+//! in-tree [`tilekit::prop`] mini-framework (see DESIGN.md §2 for why
+//! proptest itself is not available). Each `forall` draws seeded random
+//! cases and reports the reproducing seed on failure.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tilekit::codec::json::Json;
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{Coordinator, Router};
+use tilekit::device::{builtin_devices, ComputeCapability};
+use tilekit::image::{generate, Interpolator};
+use tilekit::prop::{forall, prop_assert, prop_close};
+use tilekit::runtime::{Manifest, MockEngine};
+use tilekit::sim::{simulate, Launch};
+use tilekit::tiling::occupancy::{occupancy, KernelResources};
+use tilekit::tiling::TileDim;
+
+const CCS: [ComputeCapability; 4] = [
+    ComputeCapability::CC_1_0,
+    ComputeCapability::CC_1_1,
+    ComputeCapability::CC_1_2,
+    ComputeCapability::CC_1_3,
+];
+
+#[test]
+fn prop_occupancy_bounds_and_monotonicity() {
+    forall("occupancy bounds", 500, |g| {
+        let cc = *g.choose(&CCS);
+        let tile = TileDim::new(g.pow2(0, 9), g.pow2(0, 9));
+        let res = KernelResources {
+            regs_per_thread: g.u32(1, 64),
+            smem_per_block: g.u32(0, 20 * 1024),
+        };
+        let o = occupancy(tile, &res, &cc);
+        prop_assert(
+            o.threads_per_sm <= cc.max_threads_per_sm,
+            format!("threads {} > cap", o.threads_per_sm),
+        )?;
+        prop_assert(o.warps_per_sm <= cc.max_warps_per_sm, "warps over cap")?;
+        prop_assert(o.blocks_per_sm <= cc.max_blocks_per_sm, "blocks over cap")?;
+        prop_assert((0.0..=1.0 + 1e-12).contains(&o.ratio), "ratio out of range")?;
+        // More registers per thread can never raise residency.
+        let hungrier = KernelResources {
+            regs_per_thread: res.regs_per_thread + g.u32(1, 32),
+            smem_per_block: res.smem_per_block,
+        };
+        let o2 = occupancy(tile, &hungrier, &cc);
+        prop_assert(
+            o2.blocks_per_sm <= o.blocks_per_sm,
+            "register monotonicity violated",
+        )
+    });
+}
+
+#[test]
+fn prop_tile_grid_covers_output() {
+    forall("grid covers output", 500, |g| {
+        let tile = TileDim::new(g.pow2(0, 9), g.pow2(0, 9));
+        let w = g.u32(1, 4096);
+        let h = g.u32(1, 4096);
+        let (gx, gy) = tile.grid_for(w, h);
+        prop_assert(gx as u64 * tile.x as u64 >= w as u64, "x not covered")?;
+        prop_assert(gy as u64 * tile.y as u64 >= h as u64, "y not covered")?;
+        // minimality
+        prop_assert(
+            (gx as u64 - 1) * (tile.x as u64) < (w as u64),
+            "gx not minimal",
+        )?;
+        prop_assert(
+            (gy as u64 - 1) * (tile.y as u64) < (h as u64),
+            "gy not minimal",
+        )
+    });
+}
+
+#[test]
+fn prop_simulator_sanity() {
+    let devices = builtin_devices();
+    forall("simulator sanity", 300, |g| {
+        let dev = g.choose(&devices).clone();
+        let tile = TileDim::new(g.pow2(2, 5), g.pow2(2, 5));
+        let scale = *g.choose(&[1u32, 2, 3, 4, 6, 8, 10]);
+        let kernel = *g.choose(&[
+            Interpolator::Nearest,
+            Interpolator::Bilinear,
+            Interpolator::Bicubic,
+        ]);
+        let src = g.pow2(5, 8); // 32..256
+        let l = Launch {
+            kernel,
+            tile,
+            src_w: src,
+            src_h: src,
+            scale,
+        };
+        let r = simulate(&l, &dev, None);
+        // A tile can be dimensionally valid yet unlaunchable when one
+        // block over-subscribes a resource (e.g. bicubic's 24 regs/thread
+        // at 512 threads needs 12K registers > cc1.0's 8K).
+        let res = tilekit::sim::KernelCost::of(kernel).resources;
+        let occ = occupancy(tile, &res, &dev.cc);
+        if !tile.is_valid(&dev.cc) || occ.blocks_per_sm == 0 {
+            return prop_assert(r.ms.is_infinite(), "unlaunchable tile must be inf");
+        }
+        prop_assert(r.ms.is_finite() && r.ms > 0.0, format!("ms={}", r.ms))?;
+        // More SMs -> never slower.
+        let mut bigger = dev.clone();
+        bigger.sm_count = dev.sm_count * 2;
+        let r2 = simulate(&l, &bigger, None);
+        prop_assert(
+            r2.ms <= r.ms + 1e-9,
+            format!("more SMs slower: {} vs {}", r2.ms, r.ms),
+        )?;
+        // Rounds account for every block.
+        let blocks_covered = r.rounds as u128 * r.occupancy.blocks_per_sm as u128;
+        prop_assert(
+            blocks_covered >= r.total_blocks as u128,
+            "rounds don't cover grid",
+        )
+    });
+}
+
+#[test]
+fn prop_json_round_trip() {
+    fn gen_json(g: &mut tilekit::prop::Gen, depth: u32) -> Json {
+        match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..g.usize(0, 12))
+                    .map(|_| *g.choose(&['a', 'ß', '"', '\\', '\n', '😀', ' ', 'z']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => {
+                let mut obj = Json::obj();
+                for i in 0..g.usize(0, 4) {
+                    obj = obj.set(&format!("k{i}"), gen_json(g, depth - 1));
+                }
+                obj
+            }
+        }
+    }
+    forall("json round trip", 300, |g| {
+        let v = gen_json(g, 3);
+        let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        prop_assert(compact == v, "compact round-trip differs")?;
+        let pretty = Json::parse(&v.pretty()).map_err(|e| e.to_string())?;
+        prop_assert(pretty == v, "pretty round-trip differs")
+    });
+}
+
+#[test]
+fn prop_interpolators_preserve_affine_and_bounds() {
+    forall("interp bounds", 60, |g| {
+        let w = g.usize(2, 24);
+        let h = g.usize(2, 24);
+        let scale = g.u32(1, 6);
+        let img = generate::test_scene(w, h, g.u32(0, 1000) as u64);
+        // bilinear and nearest stay within the input's range
+        for kernel in [Interpolator::Nearest, Interpolator::Bilinear] {
+            let out = kernel.run(&img, scale);
+            for y in 0..out.height() {
+                for x in 0..out.width() {
+                    let v = out.get(x, y);
+                    prop_assert(
+                        (-1e-6..=1.0 + 1e-6).contains(&(v as f64)),
+                        format!("{:?} out of range: {v}", kernel),
+                    )?;
+                }
+            }
+        }
+        // at source sample points bilinear reproduces the source
+        let out = Interpolator::Bilinear.run(&img, scale);
+        let s = scale as usize;
+        for y in 0..h {
+            for x in 0..w {
+                prop_close(
+                    out.get(x * s, y * s) as f64,
+                    img.get(x, y) as f64,
+                    1e-5,
+                    "sample point",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coordinator_conserves_requests() {
+    // Every admitted request is answered exactly once (completed or
+    // failed), across random load patterns and failure injection.
+    let manifest = Manifest::parse(
+        r#"{
+          "version": 1,
+          "artifacts": [
+            {"name": "bl2", "kernel": "bilinear", "src": [16, 16],
+             "scale": 2, "batch": 4, "tile": [4, 32], "path": "x"},
+            {"name": "bl4", "kernel": "bilinear", "src": [16, 16],
+             "scale": 4, "batch": 2, "tile": [4, 32], "path": "x"},
+            {"name": "nn2", "kernel": "nearest", "src": [16, 16],
+             "scale": 2, "batch": 8, "tile": [4, 32], "path": "x"}
+          ]
+        }"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+
+    forall("request conservation", 15, |g| {
+        let fail_every = *g.choose(&[0u64, 2, 3]);
+        let cfg = ServingConfig {
+            workers: g.usize(1, 4),
+            batch_max: g.usize(1, 6),
+            batch_deadline_ms: 0.5,
+            queue_cap: 128,
+            artifacts_dir: ".".into(),
+        };
+        let router = Router::new(&manifest, None);
+        let backend = Arc::new(MockEngine::failing_every(fail_every));
+        let co = Coordinator::start(&cfg, router, backend);
+        let n = g.usize(1, 60);
+        let img = generate::test_scene(16, 16, 3);
+        let mut tickets = Vec::new();
+        for _ in 0..n {
+            let (kernel, scale) = *g.choose(&[
+                (Interpolator::Bilinear, 2u32),
+                (Interpolator::Bilinear, 4),
+                (Interpolator::Nearest, 2),
+            ]);
+            match co.submit_blocking(kernel, img.clone(), scale) {
+                Ok(t) => tickets.push(t),
+                Err(e) => return Err(format!("unexpected submit error: {e}")),
+            }
+        }
+        let mut answered = 0usize;
+        for t in tickets {
+            match t.wait_timeout(Duration::from_secs(5)) {
+                Ok(Some(_)) => answered += 1,
+                Err(_) => answered += 1, // failed is still answered
+                Ok(None) => return Err("request timed out".into()),
+            }
+        }
+        let stats = co.shutdown();
+        prop_assert(answered == n, format!("answered {answered} of {n}"))?;
+        prop_assert(
+            stats.completed.get() + stats.failed.get() == n as u64,
+            format!(
+                "stats disagree: {} + {} != {n}",
+                stats.completed.get(),
+                stats.failed.get()
+            ),
+        )
+    });
+}
