@@ -1,30 +1,31 @@
 //! Portable tiling selection across the whole device registry — the
 //! paper's §V conclusion ("optimize for the worst-case GPU") extended to
-//! seven real GPU models + the two synthetic ones.
+//! seven real GPU models + the two synthetic ones, driven through the
+//! `TuningSession` API.
 //!
-//! For each scale, prints each device's own best tile and the min-max
-//! regret (portable) tile, then shows how much each device loses by
-//! adopting the portable tile instead of its personal best.
+//! For each scale, one session tunes every registry device and reports
+//! each device's own best tile, the min-max regret (portable) tile, and
+//! how much each device loses by adopting the portable tile instead of
+//! its personal best.
 //!
 //! Run: `cargo run --release --example autotune_portable`
 
-use tilekit::autotuner::{portable_tile, sweep};
+use tilekit::autotuner::{SimCostModel, TuningSession};
 use tilekit::device::builtin_devices;
-use tilekit::image::Interpolator;
-use tilekit::tiling::paper_sweep_tiles;
 use tilekit::util::text::Table;
 
 fn main() {
-    let devices = builtin_devices();
-    let tiles = paper_sweep_tiles();
-
     for scale in [2u32, 6, 10] {
         println!("=== scale {scale} ===\n");
-        let sweeps: Vec<_> = devices
-            .iter()
-            .map(|d| sweep(d, Interpolator::Bilinear, &tiles, scale, (800, 800)))
-            .collect();
-        let choice = portable_tile(&sweeps).expect("non-empty registry");
+        let outcome = TuningSession::new(SimCostModel)
+            .devices(builtin_devices())
+            .scale(scale)
+            .run()
+            .expect("every registry device launches some paper tile");
+        let choice = outcome
+            .portable
+            .as_ref()
+            .expect("some tile is launchable on every device");
         let mut t = Table::new(vec![
             "device",
             "own best",
@@ -32,21 +33,22 @@ fn main() {
             "portable ms",
             "regret",
         ]);
-        for s in &sweeps {
-            let best = s.best().unwrap();
-            let portable_ms = s.time_of(choice.tile).unwrap();
+        for dt in &outcome.per_device {
+            let portable_ms = dt
+                .time_of(choice.tile)
+                .expect("portable tile was evaluated everywhere");
             t.row(vec![
-                s.device_id.clone(),
-                best.tile.label(),
-                format!("{:.3}", best.report.ms),
+                dt.device_id.clone(),
+                dt.best.label(),
+                format!("{:.3}", dt.best_ms),
                 format!("{portable_ms:.3}"),
-                format!("{:.3}x", portable_ms / best.report.ms),
+                format!("{:.3}x", portable_ms / dt.best_ms),
             ]);
         }
         print!("{}", t.render());
         println!(
-            "\nportable tile: {} (worst-case regret {:.3}x)\n",
-            choice.tile, choice.worst_regret
+            "\nportable tile: {} (worst-case regret {:.3}x, {} evaluations)\n",
+            choice.tile, choice.worst_regret, outcome.evaluations
         );
     }
     println!(

@@ -3,20 +3,22 @@
 //! 1. Look up the paper's two GPUs in the device registry.
 //! 2. Ask the occupancy calculator about the §III.B 32×16 cliff.
 //! 3. Simulate one kernel launch on each device.
-//! 4. Let the autotuner pick the portable tile (the paper's 32×4).
+//! 4. Run a `TuningSession` over both devices: per-device best tiles
+//!    plus the portable (min-max regret) pick — the paper's 32×4.
+//!    Swap in `CoordinateDescent` or a `Cached` strategy to tune with
+//!    fewer simulator evaluations or a persistent `tuning_cache.json`.
 //! 5. If artifacts are built (`make artifacts`), resize a real image
 //!    through the AOT Pallas kernel via PJRT.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::path::Path;
-use tilekit::autotuner::{portable_tile, sweep};
+use tilekit::autotuner::{SimCostModel, TuningSession};
 use tilekit::device::paper_pair;
 use tilekit::image::{generate, pnm, Interpolator};
 use tilekit::runtime::{Engine, Manifest};
 use tilekit::sim::{simulate, Launch};
 use tilekit::tiling::occupancy::{occupancy, KernelResources};
-use tilekit::tiling::paper_sweep_tiles;
 
 fn main() -> anyhow::Result<()> {
     // 1. The paper's testbed.
@@ -49,15 +51,25 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 4. Portable tile over both devices (the paper's §V conclusion).
-    let tiles = paper_sweep_tiles();
-    let sweeps = vec![
-        sweep(&gtx, Interpolator::Bilinear, &tiles, 8, (800, 800)),
-        sweep(&gts, Interpolator::Bilinear, &tiles, 8, (800, 800)),
-    ];
-    let choice = portable_tile(&sweeps).expect("sweep non-empty");
+    // 4. A tuning session over both devices (the paper's §V conclusion).
+    //    Defaults are the paper's setup: paper tile set, 800x800 source.
+    let outcome = TuningSession::new(SimCostModel)
+        .devices([gtx.clone(), gts.clone()])
+        .scale(8)
+        .run()?;
+    println!();
+    for dt in &outcome.per_device {
+        println!(
+            "tuned best on {:>8}: {} ({:.3} ms, {} evaluations)",
+            dt.device_id, dt.best, dt.best_ms, dt.evaluations
+        );
+    }
+    let choice = outcome
+        .portable
+        .as_ref()
+        .expect("paper tiles are launchable on both devices");
     println!(
-        "\nportable tile over {{gtx260, 8800gts}}: {} (worst-case regret {:.3}x)",
+        "portable tile over {{gtx260, 8800gts}}: {} (worst-case regret {:.3}x)",
         choice.tile, choice.worst_regret
     );
 

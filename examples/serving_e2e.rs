@@ -11,7 +11,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
 use tilekit::image::{generate, Image};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, ResizeBackend};
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         queue_cap: 256,
         artifacts_dir: "artifacts".into(),
     };
-    let router = Router::new(&manifest, None); // None => largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
+    let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
     let keys = router.keys();
     let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(manifest.clone()));
     let co = Coordinator::start(&cfg, router, backend);

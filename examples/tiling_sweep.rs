@@ -1,6 +1,8 @@
 //! Reproduce the paper's Fig. 3 from the library API and dump CSV files
 //! for plotting: one file per inset (scale), rows = tiles, columns = the
-//! two simulated devices.
+//! two simulated devices. The figure layer runs exhaustive
+//! `TuningSession`s over the paper pair under the hood; see
+//! `examples/autotune_portable.rs` for driving sessions directly.
 //!
 //! Run: `cargo run --release --example tiling_sweep [-- out_dir]`
 

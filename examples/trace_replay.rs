@@ -10,7 +10,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
                 queue_cap: 64,
                 artifacts_dir: "artifacts".into(),
             };
-            let router = Router::new(&manifest, None); // None => largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
+            let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
             let keys = router.keys();
             let co = Coordinator::start(&cfg, router, make_backend());
             // warm every worker/shape outside the measured replay

@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -64,7 +64,7 @@ fn main() {
             queue_cap: 512,
             artifacts_dir: "artifacts".into(),
         };
-        let router = Router::new(&manifest, None); // None => largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
+        let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
         let keys = router.keys();
         let co = Coordinator::start(&cfg, router, Arc::clone(&backend));
         // Warmup outside the timed region: every worker thread compiles

@@ -1,0 +1,114 @@
+//! Cost models: the pluggable "how long does this launch take?" oracle
+//! behind every search strategy.
+//!
+//! The paper's experiments measure wall-clock time on physical GPUs; this
+//! repository's substrate is the timing simulator ([`crate::sim`]). The
+//! [`CostModel`] trait is the seam between the two: [`SimCostModel`] wraps
+//! the simulator, and a measured backend (PJRT timings, an on-device
+//! microbenchmark, a learned model) can plug in later without touching any
+//! search code. [`CountingCostModel`] wraps any model and counts
+//! `evaluate` calls — the currency search strategies compete on.
+
+use crate::device::DeviceDescriptor;
+use crate::sim::{simulate, Launch, SimReport};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Anything that can predict (or measure) the execution of one kernel
+/// launch on one device.
+pub trait CostModel {
+    /// Evaluate `launch` on `dev`. Unlaunchable configurations report a
+    /// non-finite `ms` (matching the simulator's convention).
+    fn evaluate(&self, launch: &Launch, dev: &DeviceDescriptor) -> SimReport;
+
+    /// Short label for reports and tuning-cache provenance.
+    fn name(&self) -> String {
+        "cost-model".to_string()
+    }
+}
+
+/// The default cost model: the compute-capability-aware timing simulator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimCostModel;
+
+impl CostModel for SimCostModel {
+    fn evaluate(&self, launch: &Launch, dev: &DeviceDescriptor) -> SimReport {
+        simulate(launch, dev, None)
+    }
+
+    fn name(&self) -> String {
+        "sim".to_string()
+    }
+}
+
+/// Decorator counting `evaluate` calls on an inner model. The counter is
+/// shared through an `Arc`, so a handle obtained via [`counter`]
+/// (`CountingCostModel::counter`) stays readable after the model moves
+/// into a [`TuningSession`](super::TuningSession).
+pub struct CountingCostModel {
+    inner: Box<dyn CostModel>,
+    count: Arc<AtomicU64>,
+}
+
+impl CountingCostModel {
+    /// Wrap `inner`.
+    pub fn new(inner: impl CostModel + 'static) -> CountingCostModel {
+        CountingCostModel {
+            inner: Box::new(inner),
+            count: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// A shared handle to the call counter.
+    pub fn counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.count)
+    }
+
+    /// Calls observed so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl CostModel for CountingCostModel {
+    fn evaluate(&self, launch: &Launch, dev: &DeviceDescriptor) -> SimReport {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.evaluate(launch, dev)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::paper_pair;
+    use crate::image::Interpolator;
+    use crate::tiling::TileDim;
+
+    #[test]
+    fn sim_cost_model_matches_simulate() {
+        let (gtx, _) = paper_pair();
+        let l = Launch::paper(Interpolator::Bilinear, TileDim::new(32, 4), 6);
+        let a = SimCostModel.evaluate(&l, &gtx);
+        let b = simulate(&l, &gtx, None);
+        assert_eq!(a.ms, b.ms);
+        assert_eq!(a.rounds, b.rounds);
+    }
+
+    #[test]
+    fn counting_model_counts() {
+        let (gtx, gts) = paper_pair();
+        let model = CountingCostModel::new(SimCostModel);
+        let handle = model.counter();
+        let l = Launch::paper(Interpolator::Bilinear, TileDim::new(16, 8), 4);
+        let want = SimCostModel.evaluate(&l, &gtx).ms;
+        assert_eq!(model.evaluate(&l, &gtx).ms, want);
+        model.evaluate(&l, &gts);
+        assert_eq!(model.count(), 2);
+        assert_eq!(handle.load(Ordering::Relaxed), 2);
+        assert_eq!(model.name(), "sim");
+    }
+}

@@ -1,0 +1,372 @@
+//! The persistent tuning database behind the [`Cached`](super::Cached)
+//! strategy and the CLI's `--cache` flag.
+//!
+//! A [`TuningDb`] is a flat map from (device id, kernel, scale, source
+//! size) to the [`DeviceTuning`] found there, serialized as one versioned
+//! JSON document (`tuning_cache.json` by convention). The file format is
+//! stable and diff-friendly: sorted keys, pretty-printed, one entry per
+//! tuned combination — re-tuning when a new GPU model appears is an
+//! append, exactly the re-runnable workflow the paper's "not always a
+//! good solution ... on other GPU models" finding demands.
+
+use super::outcome::{arr_field, str_field, u64_field, DeviceTuning};
+use crate::codec::json::Json;
+use crate::image::Interpolator;
+use crate::tiling::TileDim;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One stored tuning with its full key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbEntry {
+    pub kernel: Interpolator,
+    pub scale: u32,
+    pub src: (u32, u32),
+    /// Name of the strategy that produced the points. Part of the key: a
+    /// coordinate-descent path (a handful of points) must never
+    /// masquerade as an exhaustive sweep, and entries from different
+    /// strategies coexist in one file.
+    pub strategy: String,
+    /// Fingerprint of the candidate tile set the search ran over. Part
+    /// of the key: results for different candidate sets are not
+    /// interchangeable.
+    pub tiles: String,
+    pub tuning: DeviceTuning,
+}
+
+/// A persistent map of tuning results.
+#[derive(Debug, Clone, Default)]
+pub struct TuningDb {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, DbEntry>,
+}
+
+impl TuningDb {
+    /// An unbacked database (nothing is persisted).
+    pub fn in_memory() -> TuningDb {
+        TuningDb::default()
+    }
+
+    /// Open (or start) the database at `path`. A missing file is an empty
+    /// database; the file is created on the first [`persist`](Self::persist).
+    pub fn open(path: &Path) -> Result<TuningDb> {
+        let mut db = TuningDb {
+            path: Some(path.to_path_buf()),
+            entries: BTreeMap::new(),
+        };
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading tuning cache {}", path.display()))?;
+            let j = Json::parse(&text)
+                .map_err(|e| anyhow!("{e}"))
+                .with_context(|| format!("parsing tuning cache {}", path.display()))?;
+            db.entries = Self::entries_from_json(&j)
+                .with_context(|| format!("in tuning cache {}", path.display()))?;
+        }
+        Ok(db)
+    }
+
+    /// Stable fingerprint of a candidate tile set (FNV-1a over the
+    /// ordered labels): results searched over different candidate sets
+    /// must not be served for one another.
+    pub fn tiles_fingerprint(tiles: &[TileDim]) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for t in tiles {
+            for b in t.label().bytes().chain([b';']) {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        format!("{h:016x}")
+    }
+
+    /// The canonical cache key for one tuned combination. The paper's
+    /// experimental axes (device, kernel, scale, size) plus the two
+    /// facts that make results non-interchangeable: the strategy and the
+    /// candidate tile set.
+    pub fn key(
+        device_id: &str,
+        kernel: Interpolator,
+        scale: u32,
+        src: (u32, u32),
+        strategy: &str,
+        tiles_fp: &str,
+    ) -> String {
+        format!(
+            "{device_id}|{}|{scale}|{}x{}|{strategy}|{tiles_fp}",
+            kernel.label(),
+            src.0,
+            src.1
+        )
+    }
+
+    /// Look up a stored tuning.
+    pub fn get(
+        &self,
+        device_id: &str,
+        kernel: Interpolator,
+        scale: u32,
+        src: (u32, u32),
+        strategy: &str,
+        tiles_fp: &str,
+    ) -> Option<&DeviceTuning> {
+        self.entries
+            .get(&Self::key(device_id, kernel, scale, src, strategy, tiles_fp))
+            .map(|e| &e.tuning)
+    }
+
+    /// Insert (or replace) a tuning; the device id comes from the tuning
+    /// record itself.
+    pub fn insert(
+        &mut self,
+        kernel: Interpolator,
+        scale: u32,
+        src: (u32, u32),
+        strategy: &str,
+        tiles_fp: &str,
+        tuning: DeviceTuning,
+    ) {
+        let key = Self::key(&tuning.device_id, kernel, scale, src, strategy, tiles_fp);
+        self.entries.insert(
+            key,
+            DbEntry {
+                kernel,
+                scale,
+                src,
+                strategy: strategy.to_string(),
+                tiles: tiles_fp.to_string(),
+                tuning,
+            },
+        );
+    }
+
+    /// Number of stored tunings.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the database empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Stored entries in key order.
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &DbEntry)> {
+        self.entries.iter()
+    }
+
+    /// Write the database to its backing file (no-op when in-memory).
+    pub fn persist(&self) -> Result<()> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing tuning cache {}", path.display()))
+    }
+
+    /// Serialize to a versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .values()
+            .map(|e| {
+                e.tuning
+                    .to_json()
+                    .set("kernel", e.kernel.label())
+                    .set("scale", e.scale)
+                    .set("src", vec![e.src.0, e.src.1])
+                    .set("strategy", e.strategy.as_str())
+                    .set("tiles", e.tiles.as_str())
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1u64)
+            .set("entries", Json::Arr(entries))
+    }
+
+    fn entries_from_json(j: &Json) -> Result<BTreeMap<String, DbEntry>> {
+        match j.get("version").and_then(Json::as_u64) {
+            Some(1) => {}
+            Some(v) => bail!("unsupported tuning cache version {v}"),
+            None => bail!("tuning cache is missing 'version'"),
+        }
+        let mut entries = BTreeMap::new();
+        for e in arr_field(j, "entries")? {
+            let kernel_s = str_field(e, "kernel")?;
+            let kernel = Interpolator::parse(&kernel_s)
+                .ok_or_else(|| anyhow!("unknown kernel '{kernel_s}'"))?;
+            let scale = u64_field(e, "scale")? as u32;
+            let src_arr = arr_field(e, "src")?;
+            if src_arr.len() != 2 {
+                bail!("'src' must be a [w, h] pair");
+            }
+            let src = (
+                src_arr[0].as_u64().context("src[0]")? as u32,
+                src_arr[1].as_u64().context("src[1]")? as u32,
+            );
+            let strategy = str_field(e, "strategy")?;
+            let tiles = str_field(e, "tiles")?;
+            let tuning = DeviceTuning::from_json(e)?;
+            let key = Self::key(&tuning.device_id, kernel, scale, src, &strategy, &tiles);
+            entries.insert(
+                key,
+                DbEntry {
+                    kernel,
+                    scale,
+                    src,
+                    strategy,
+                    tiles,
+                    tuning,
+                },
+            );
+        }
+        Ok(entries)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::outcome::TunedPoint;
+    use crate::tiling::TileDim;
+
+    fn tuning(id: &str) -> DeviceTuning {
+        DeviceTuning::from_points(
+            id.to_string(),
+            vec![
+                TunedPoint {
+                    tile: TileDim::new(32, 4),
+                    ms: 1.5,
+                },
+                TunedPoint {
+                    tile: TileDim::new(8, 8),
+                    ms: 2.25,
+                },
+            ],
+            2,
+        )
+        .unwrap()
+    }
+
+    fn fp() -> String {
+        TuningDb::tiles_fingerprint(&[TileDim::new(32, 4), TileDim::new(8, 8)])
+    }
+
+    #[test]
+    fn insert_get_and_key_axes() {
+        let mut db = TuningDb::in_memory();
+        let fp = fp();
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "exhaustive",
+            &fp,
+            tuning("gtx260"),
+        );
+        assert_eq!(db.len(), 1);
+        let hit = db
+            .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "exhaustive", &fp)
+            .unwrap();
+        assert_eq!(hit.best, TileDim::new(32, 4));
+        // every key axis matters
+        for (dev, k, s, src) in [
+            ("8800gts", Interpolator::Bilinear, 8, (800, 800)),
+            ("gtx260", Interpolator::Nearest, 8, (800, 800)),
+            ("gtx260", Interpolator::Bilinear, 6, (800, 800)),
+            ("gtx260", Interpolator::Bilinear, 8, (400, 400)),
+        ] {
+            assert!(db.get(dev, k, s, src, "exhaustive", &fp).is_none());
+        }
+        // a descent run must not be served an exhaustive entry (the point
+        // sets are not interchangeable) ...
+        assert!(db
+            .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "descent", &fp)
+            .is_none());
+        // ... nor a run over a different candidate tile set
+        let other_fp = TuningDb::tiles_fingerprint(&[TileDim::new(16, 16)]);
+        assert_ne!(fp, other_fp);
+        assert!(db
+            .get(
+                "gtx260",
+                Interpolator::Bilinear,
+                8,
+                (800, 800),
+                "exhaustive",
+                &other_fp
+            )
+            .is_none());
+        // entries for both strategies coexist under one (device, kernel,
+        // scale, size)
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "descent",
+            &fp,
+            tuning("gtx260"),
+        );
+        assert_eq!(db.len(), 2);
+        assert!(db
+            .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "exhaustive", &fp)
+            .is_some());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("tilekit_tuning_db_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        std::fs::remove_file(&path).ok();
+        let fp = fp();
+
+        let mut db = TuningDb::open(&path).unwrap();
+        assert!(db.is_empty());
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "exhaustive",
+            &fp,
+            tuning("gtx260"),
+        );
+        db.insert(
+            Interpolator::Bilinear,
+            6,
+            (800, 800),
+            "descent",
+            &fp,
+            tuning("8800gts"),
+        );
+        db.persist().unwrap();
+
+        let back = TuningDb::open(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        let hit = back
+            .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "exhaustive", &fp)
+            .unwrap();
+        assert_eq!(hit.points, tuning("gtx260").points);
+        assert!(back
+            .get("8800gts", Interpolator::Bilinear, 6, (800, 800), "descent", &fp)
+            .is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_cache() {
+        let dir = std::env::temp_dir().join("tilekit_tuning_db_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{\"version\": 99, \"entries\": []}").unwrap();
+        assert!(TuningDb::open(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(TuningDb::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,11 +1,74 @@
-//! The tiling autotuner: sweep candidate tiles on one or more devices,
-//! extract the best tile per device, and compute a *portable* tile — the
-//! paper's §V recommendation to "consider more about the performance on
-//! the worst-case GPU in order to let the program get better performance
-//! on most GPUs".
+//! The tiling autotuner: a strategy-driven tuning API over pluggable
+//! cost models, with persistent caching and portable (worst-case-GPU)
+//! selection — the paper's §V recommendation to "consider more about the
+//! performance on the worst-case GPU in order to let the program get
+//! better performance on most GPUs", made re-runnable per device.
+//!
+//! # Architecture
+//!
+//! Three seams compose into a session:
+//!
+//! * [`CostModel`] ([`cost`]) — "how long does this launch take?".
+//!   [`SimCostModel`] wraps the timing simulator; measured backends plug
+//!   in later. [`CountingCostModel`] audits evaluation spend.
+//! * [`SearchStrategy`] ([`strategy`]) — how the tile space is explored:
+//!   [`Exhaustive`] (every candidate, the ground truth),
+//!   [`CoordinateDescent`] (lattice hill-climb, far fewer evaluations),
+//!   and [`Cached`] (decorator over a persistent [`TuningDb`], zero
+//!   evaluations on a hit).
+//! * [`TuningSession`] ([`session`]) — the builder façade tying a cost
+//!   model, a device set, a tile set, and a strategy together, producing
+//!   a [`TuningOutcome`] ([`outcome`]) that serializes losslessly to JSON
+//!   (`tuning_cache.json`, keyed by device id / kernel / scale / size).
+//!
+//! Downstream, [`crate::coordinator::TilePolicy`] routes serving traffic
+//! straight off an outcome (`PerDevice`), so a freshly tuned device gets
+//! its own tile without touching the serving code — exactly the failure
+//! mode the paper warns about ("an optimized tiling strategy on one GPU
+//! model is not always a good solution ... on other GPU models").
+//!
+//! # Migrating from `sweep` / `portable_tile`
+//!
+//! The free functions remain as the low-level primitives, but callers
+//! should move to the session:
+//!
+//! ```text
+//! // before                                   // after
+//! let sweeps = vec![                          let outcome = TuningSession::new(SimCostModel)
+//!     sweep(&gtx, k, &tiles, 8, src),             .devices([gtx, gts])
+//!     sweep(&gts, k, &tiles, 8, src),             .kernel(k).scale(8).src(src)
+//! ];                                              .tiles(tiles)
+//! let best = sweeps[0].best();                    .run()?;
+//! let choice = portable_tile(&sweeps);        let best = outcome.best_for("gtx260");
+//!                                             let choice = &outcome.portable;
+//! ```
+//!
+//! What maps where:
+//!
+//! * `SweepResult` per device → [`DeviceTuning`] (in
+//!   `outcome.per_device`), including `best`, `time_of`, `range_ms`.
+//! * `PortableChoice` → `outcome.portable` (same type, same min-max
+//!   regret rule, now NaN-safe via `f64::total_cmp`).
+//! * New capabilities: swap [`CoordinateDescent`] in via
+//!   [`TuningSession::strategy`], persist results with [`Cached`] /
+//!   [`TuningDb`], serialize via [`TuningOutcome::to_json`], and count
+//!   evaluations with [`CountingCostModel`].
 
+pub mod cost;
+pub mod db;
+pub mod outcome;
 pub mod portable;
+pub mod session;
+pub mod strategy;
 pub mod sweep;
 
-pub use portable::{portable_tile, PortableChoice};
+pub use cost::{CostModel, CountingCostModel, SimCostModel};
+pub use db::{DbEntry, TuningDb};
+pub use outcome::{DeviceTuning, TunedPoint, TuningOutcome};
+pub use portable::{portable_over, portable_tile, PortableChoice};
+pub use session::TuningSession;
+pub use strategy::{
+    strategy_by_name, Cached, CoordinateDescent, Exhaustive, SearchSpace, SearchStrategy,
+    STRATEGY_NAMES,
+};
 pub use sweep::{sweep, SweepPoint, SweepResult};

@@ -1,0 +1,437 @@
+//! Tuning results: the durable record a [`TuningSession`](super::TuningSession)
+//! produces.
+//!
+//! [`TuningOutcome`] subsumes the old `SweepResult`-per-device +
+//! `PortableChoice` pair behind one value that (a) answers routing
+//! questions (`best_for`, `portable_tile`) and (b) serializes losslessly
+//! through [`crate::codec::json`] so it can live in a persistent tuning
+//! cache (`tuning_cache.json`) or ship between processes. Keys follow the
+//! paper's experimental axes: device id, kernel, scale, source size.
+
+use super::portable::PortableChoice;
+use super::sweep::SweepResult;
+use crate::codec::json::Json;
+use crate::image::Interpolator;
+use crate::tiling::TileDim;
+use crate::util::stats;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// One evaluated candidate: a tile and its (simulated or measured) time.
+/// Non-finite `ms` marks an unlaunchable tile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedPoint {
+    pub tile: TileDim,
+    pub ms: f64,
+}
+
+/// Everything tuning learned about one device: the evaluated points, the
+/// winning tile, and how much work it took to find it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTuning {
+    /// Registry id of the device (`gtx260`).
+    pub device_id: String,
+    /// The fastest launchable tile (ties broken toward wider tiles, the
+    /// row-friendly shapes — matching how the paper reads its figures).
+    pub best: TileDim,
+    /// Time of `best` in milliseconds.
+    pub best_ms: f64,
+    /// `CostModel::evaluate` calls spent on this device (0 = cache hit).
+    pub evaluations: u64,
+    /// Every evaluated point, in evaluation/sweep order. May include
+    /// non-finite (unlaunchable) entries; those are dropped when the
+    /// tuning is persisted.
+    pub points: Vec<TunedPoint>,
+}
+
+impl DeviceTuning {
+    /// Build from evaluated points; `None` when no point is launchable.
+    /// NaN-safe: ordering uses `f64::total_cmp`, so a non-finite time can
+    /// never panic the tuner (it simply loses).
+    pub fn from_points(
+        device_id: String,
+        points: Vec<TunedPoint>,
+        evaluations: u64,
+    ) -> Option<DeviceTuning> {
+        let (best, best_ms) = {
+            let b = points
+                .iter()
+                .filter(|p| p.ms.is_finite())
+                .min_by(|a, b| {
+                    a.ms.total_cmp(&b.ms)
+                        .then_with(|| b.tile.aspect().total_cmp(&a.tile.aspect()))
+                })?;
+            (b.tile, b.ms)
+        };
+        Some(DeviceTuning {
+            device_id,
+            best,
+            best_ms,
+            evaluations,
+            points,
+        })
+    }
+
+    /// Project a full sweep down to a tuning record (one evaluation per
+    /// swept tile).
+    pub fn from_sweep(sweep: &SweepResult) -> Option<DeviceTuning> {
+        let points: Vec<TunedPoint> = sweep
+            .points
+            .iter()
+            .map(|p| TunedPoint {
+                tile: p.tile,
+                ms: p.report.ms,
+            })
+            .collect();
+        let evaluations = points.len() as u64;
+        Self::from_points(sweep.device_id.clone(), points, evaluations)
+    }
+
+    /// Time of a specific tile, if evaluated and launchable.
+    pub fn time_of(&self, tile: TileDim) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|p| p.tile == tile)
+            .map(|p| p.ms)
+            .filter(|ms| ms.is_finite())
+    }
+
+    /// Times of all launchable evaluated tiles, in evaluation order.
+    pub fn times_ms(&self) -> Vec<f64> {
+        self.points
+            .iter()
+            .filter(|p| p.ms.is_finite())
+            .map(|p| p.ms)
+            .collect()
+    }
+
+    /// Absolute curve range in milliseconds (max − min over launchable
+    /// tiles) — the §IV.B "smoothness" reading of Fig. 3.
+    pub fn range_ms(&self) -> f64 {
+        match stats::Summary::of(&self.times_ms()) {
+            Some(s) => s.max - s.min,
+            None => 0.0,
+        }
+    }
+
+    /// JSON object for this tuning. Only launchable (finite-time) points
+    /// are persisted.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .points
+            .iter()
+            .filter(|p| p.ms.is_finite())
+            .map(|p| {
+                Json::obj()
+                    .set("tile", p.tile.label())
+                    .set("ms", p.ms)
+            })
+            .collect();
+        Json::obj()
+            .set("device", self.device_id.as_str())
+            .set("best", self.best.label())
+            .set("best_ms", self.best_ms)
+            .set("evaluations", self.evaluations)
+            .set("points", Json::Arr(points))
+    }
+
+    /// Parse back what [`to_json`](Self::to_json) wrote.
+    pub fn from_json(j: &Json) -> Result<DeviceTuning> {
+        let device_id = str_field(j, "device")?;
+        let best = tile_field(j, "best")?;
+        let best_ms = num_field(j, "best_ms")?;
+        let evaluations = u64_field(j, "evaluations")?;
+        let mut points = Vec::new();
+        for p in arr_field(j, "points")? {
+            points.push(TunedPoint {
+                tile: tile_field(p, "tile")?,
+                ms: num_field(p, "ms")?,
+            });
+        }
+        Ok(DeviceTuning {
+            device_id,
+            best,
+            best_ms,
+            evaluations,
+            points,
+        })
+    }
+}
+
+/// The complete result of one tuning session over a device set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningOutcome {
+    /// Kernel that was tuned.
+    pub kernel: Interpolator,
+    /// Upscaling factor of the tuned workload.
+    pub scale: u32,
+    /// Source image size of the tuned workload.
+    pub src: (u32, u32),
+    /// Name of the strategy that produced this outcome.
+    pub strategy: String,
+    /// Total `CostModel::evaluate` calls across all devices.
+    pub evaluations: u64,
+    /// Per-device results, in session device order.
+    pub per_device: Vec<DeviceTuning>,
+    /// The min-max-regret portable pick over the device set, when some
+    /// tile is launchable everywhere (the paper's §V conclusion).
+    pub portable: Option<PortableChoice>,
+}
+
+impl TuningOutcome {
+    /// The tuning record for one device.
+    pub fn device(&self, device_id: &str) -> Option<&DeviceTuning> {
+        self.per_device.iter().find(|d| d.device_id == device_id)
+    }
+
+    /// The tuned best tile for one device.
+    pub fn best_for(&self, device_id: &str) -> Option<TileDim> {
+        self.device(device_id).map(|d| d.best)
+    }
+
+    /// The portable (min-max regret) tile, if any.
+    pub fn portable_tile(&self) -> Option<TileDim> {
+        self.portable.as_ref().map(|c| c.tile)
+    }
+
+    /// Worst-case relative slowdown of the portable tile across devices.
+    pub fn worst_regret(&self) -> Option<f64> {
+        self.portable.as_ref().map(|c| c.worst_regret)
+    }
+
+    /// Serialize to a versioned JSON document.
+    pub fn to_json(&self) -> Json {
+        let devices: Vec<Json> = self.per_device.iter().map(|d| d.to_json()).collect();
+        let mut j = Json::obj()
+            .set("version", 1u64)
+            .set("kernel", self.kernel.label())
+            .set("scale", self.scale)
+            .set("src", vec![self.src.0, self.src.1])
+            .set("strategy", self.strategy.as_str())
+            .set("evaluations", self.evaluations)
+            .set("devices", Json::Arr(devices));
+        if let Some(c) = &self.portable {
+            let per: Vec<Json> = c
+                .per_device
+                .iter()
+                .map(|(dev, best, regret)| {
+                    Json::obj()
+                        .set("device", dev.as_str())
+                        .set("best", best.label())
+                        .set("regret", *regret)
+                })
+                .collect();
+            j = j.set(
+                "portable",
+                Json::obj()
+                    .set("tile", c.tile.label())
+                    .set("worst_regret", c.worst_regret)
+                    .set("per_device", Json::Arr(per)),
+            );
+        }
+        j
+    }
+
+    /// Parse back what [`to_json`](Self::to_json) wrote.
+    pub fn from_json(j: &Json) -> Result<TuningOutcome> {
+        match j.get("version").and_then(Json::as_u64) {
+            Some(1) => {}
+            Some(v) => bail!("unsupported tuning outcome version {v}"),
+            None => bail!("tuning outcome is missing 'version'"),
+        }
+        let kernel_s = str_field(j, "kernel")?;
+        let kernel = Interpolator::parse(&kernel_s)
+            .ok_or_else(|| anyhow!("unknown kernel '{kernel_s}'"))?;
+        let scale = u64_field(j, "scale")? as u32;
+        let src_arr = arr_field(j, "src")?;
+        if src_arr.len() != 2 {
+            bail!("'src' must be a [w, h] pair");
+        }
+        let src = (
+            src_arr[0].as_u64().context("src[0]")? as u32,
+            src_arr[1].as_u64().context("src[1]")? as u32,
+        );
+        let strategy = str_field(j, "strategy")?;
+        let evaluations = u64_field(j, "evaluations")?;
+        let mut per_device = Vec::new();
+        for d in arr_field(j, "devices")? {
+            per_device.push(DeviceTuning::from_json(d)?);
+        }
+        let portable = match j.get("portable") {
+            None | Some(Json::Null) => None,
+            Some(p) => {
+                let tile = tile_field(p, "tile")?;
+                let worst_regret = num_field(p, "worst_regret")?;
+                let mut per = Vec::new();
+                for e in arr_field(p, "per_device")? {
+                    per.push((
+                        str_field(e, "device")?,
+                        tile_field(e, "best")?,
+                        num_field(e, "regret")?,
+                    ));
+                }
+                Some(PortableChoice {
+                    tile,
+                    worst_regret,
+                    per_device: per,
+                })
+            }
+        };
+        Ok(TuningOutcome {
+            kernel,
+            scale,
+            src,
+            strategy,
+            evaluations,
+            per_device,
+            portable,
+        })
+    }
+
+    /// Write the outcome as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing tuning outcome {}", path.display()))
+    }
+
+    /// Load an outcome written by [`save`](Self::save).
+    pub fn load(path: &Path) -> Result<TuningOutcome> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning outcome {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j).with_context(|| format!("in {}", path.display()))
+    }
+}
+
+// ----- small JSON field accessors (shared with the tuning db) ------------
+
+pub(crate) fn str_field(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing or non-string field '{key}'"))
+}
+
+pub(crate) fn num_field(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing or non-numeric field '{key}'"))
+}
+
+pub(crate) fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("missing or non-integer field '{key}'"))
+}
+
+pub(crate) fn arr_field<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing or non-array field '{key}'"))
+}
+
+pub(crate) fn tile_field(j: &Json, key: &str) -> Result<TileDim> {
+    let s = str_field(j, key)?;
+    s.parse::<TileDim>()
+        .map_err(|e| anyhow!("field '{key}': {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tuning(id: &str, bias: f64) -> DeviceTuning {
+        let points = vec![
+            TunedPoint {
+                tile: TileDim::new(8, 8),
+                ms: 2.5 + bias,
+            },
+            TunedPoint {
+                tile: TileDim::new(32, 4),
+                ms: 1.25 + bias,
+            },
+            TunedPoint {
+                tile: TileDim::new(32, 16),
+                ms: f64::INFINITY,
+            },
+        ];
+        DeviceTuning::from_points(id.to_string(), points, 3).unwrap()
+    }
+
+    #[test]
+    fn best_ignores_non_finite() {
+        let t = sample_tuning("gtx260", 0.0);
+        assert_eq!(t.best, TileDim::new(32, 4));
+        assert_eq!(t.best_ms, 1.25);
+        assert_eq!(t.time_of(TileDim::new(32, 16)), None);
+        assert_eq!(t.times_ms().len(), 2);
+        assert!((t.range_ms() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_points_cannot_panic_selection() {
+        let points = vec![
+            TunedPoint {
+                tile: TileDim::new(8, 8),
+                ms: f64::NAN,
+            },
+            TunedPoint {
+                tile: TileDim::new(16, 8),
+                ms: 3.0,
+            },
+        ];
+        let t = DeviceTuning::from_points("d".into(), points, 2).unwrap();
+        assert_eq!(t.best, TileDim::new(16, 8));
+        // all-NaN input yields None rather than a panic
+        let bad = vec![TunedPoint {
+            tile: TileDim::new(8, 8),
+            ms: f64::NAN,
+        }];
+        assert!(DeviceTuning::from_points("d".into(), bad, 1).is_none());
+    }
+
+    #[test]
+    fn outcome_json_round_trip_drops_only_unlaunchable_points() {
+        let a = sample_tuning("gtx260", 0.0);
+        let b = sample_tuning("8800gts", 1.0);
+        let portable = super::super::portable::portable_over(&[a.clone(), b.clone()]);
+        let outcome = TuningOutcome {
+            kernel: Interpolator::Bilinear,
+            scale: 8,
+            src: (800, 800),
+            strategy: "exhaustive".to_string(),
+            evaluations: 6,
+            per_device: vec![a, b],
+            portable,
+        };
+        let text = outcome.to_json().pretty();
+        let back = TuningOutcome::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // the infinite 32x16 point is dropped in serialization; everything
+        // else survives exactly
+        assert_eq!(back.per_device[0].points.len(), 2);
+        assert_eq!(back.per_device[0].best, outcome.per_device[0].best);
+        assert_eq!(back.per_device[0].best_ms, outcome.per_device[0].best_ms);
+        assert_eq!(back.portable, outcome.portable);
+        assert_eq!(back.kernel, outcome.kernel);
+        assert_eq!(back.scale, outcome.scale);
+        assert_eq!(back.src, outcome.src);
+        assert_eq!(back.strategy, outcome.strategy);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for text in [
+            "{}",
+            r#"{"version": 2}"#,
+            r#"{"version": 1, "kernel": "sinc", "scale": 2, "src": [1, 1],
+                "strategy": "x", "evaluations": 0, "devices": []}"#,
+            r#"{"version": 1, "kernel": "bilinear", "scale": 2, "src": [1],
+                "strategy": "x", "evaluations": 0, "devices": []}"#,
+        ] {
+            let j = Json::parse(text).unwrap();
+            assert!(TuningOutcome::from_json(&j).is_err(), "accepted {text}");
+        }
+    }
+}

@@ -6,12 +6,18 @@
 //! tile on every device; the portable tile minimizes the worst-case
 //! slowdown (min-max regret). This is exactly the decision rule under
 //! which the paper's data picks 32×4.
+//!
+//! The min-max core ([`portable_over`]) operates on [`DeviceTuning`]
+//! records, so it serves both the low-level sweep API
+//! ([`portable_tile`]) and [`TuningSession`](super::TuningSession)
+//! outcomes, whatever strategy produced them.
 
+use super::outcome::DeviceTuning;
 use super::sweep::SweepResult;
 use crate::tiling::TileDim;
 
 /// The outcome of portable selection over a device set.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PortableChoice {
     /// The selected tile.
     pub tile: TileDim,
@@ -22,29 +28,31 @@ pub struct PortableChoice {
     pub per_device: Vec<(String, TileDim, f64)>,
 }
 
-/// Choose the min-max-regret tile over one sweep per device (all sweeps
-/// must cover the same tile set). Returns `None` if no tile is launchable
-/// on every device.
-pub fn portable_tile(sweeps: &[SweepResult]) -> Option<PortableChoice> {
-    let first = sweeps.first()?;
+/// Choose the min-max-regret tile over per-device tuning records.
+/// Candidates are the first device's evaluated tiles; a tile missing (or
+/// unlaunchable) on any device is skipped. Returns `None` if no tile is
+/// launchable on every device.
+pub fn portable_over(tunings: &[DeviceTuning]) -> Option<PortableChoice> {
+    let first = tunings.first()?;
     let mut best: Option<PortableChoice> = None;
     for p in &first.points {
         let tile = p.tile;
         let mut worst = 0f64;
-        let mut per_device = Vec::with_capacity(sweeps.len());
+        let mut per_device = Vec::with_capacity(tunings.len());
         let mut ok = true;
-        for s in sweeps {
-            let t_tile = match s.time_of(tile) {
-                Some(t) => t,
+        for t in tunings {
+            let t_tile = match t.time_of(tile) {
+                Some(ms) => ms,
                 None => {
                     ok = false;
                     break;
                 }
             };
-            let best_point = s.best().expect("non-empty sweep");
-            let regret = t_tile / best_point.report.ms;
-            worst = worst.max(regret);
-            per_device.push((s.device_id.clone(), best_point.tile, regret));
+            let regret = t_tile / t.best_ms;
+            if regret > worst {
+                worst = regret;
+            }
+            per_device.push((t.device_id.clone(), t.best, regret));
         }
         if !ok {
             continue;
@@ -68,9 +76,24 @@ pub fn portable_tile(sweeps: &[SweepResult]) -> Option<PortableChoice> {
     best
 }
 
+/// Choose the min-max-regret tile over one full sweep per device (all
+/// sweeps should cover the same tile set). Returns `None` if no tile is
+/// launchable on every device.
+pub fn portable_tile(sweeps: &[SweepResult]) -> Option<PortableChoice> {
+    if sweeps.is_empty() {
+        return None;
+    }
+    let mut tunings = Vec::with_capacity(sweeps.len());
+    for s in sweeps {
+        tunings.push(DeviceTuning::from_sweep(s)?);
+    }
+    portable_over(&tunings)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autotuner::session::TuningSession;
     use crate::autotuner::sweep::sweep;
     use crate::device::{builtin_devices, paper_pair};
     use crate::image::Interpolator;
@@ -80,18 +103,28 @@ mod tests {
     fn portable_pick_matches_paper_conclusion() {
         // Over the paper pair at the large scales, the portable tile is
         // 32x4 ("the tiling dimensions 32x4 seems to be a better choice
-        // which can offer better performance in general").
-        let (gtx, gts) = paper_pair();
-        let tiles = paper_sweep_tiles();
+        // which can offer better performance in general") — asserted
+        // through the TuningSession API, whose defaults are exactly the
+        // paper's setup (paper pair, paper tiles, bilinear, 800×800).
         for scale in [6, 8, 10] {
-            let sweeps = vec![
-                sweep(&gtx, Interpolator::Bilinear, &tiles, scale, (800, 800)),
-                sweep(&gts, Interpolator::Bilinear, &tiles, scale, (800, 800)),
-            ];
-            let choice = portable_tile(&sweeps).unwrap();
+            let outcome = TuningSession::sim().scale(scale).run().unwrap();
+            let choice = outcome.portable.as_ref().unwrap();
             assert_eq!(choice.tile, "32x4".parse().unwrap(), "scale {scale}");
             assert!(choice.worst_regret < 1.05, "regret {}", choice.worst_regret);
         }
+    }
+
+    #[test]
+    fn session_portable_agrees_with_sweep_portable() {
+        let (gtx, gts) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let sweeps = vec![
+            sweep(&gtx, Interpolator::Bilinear, &tiles, 8, (800, 800)),
+            sweep(&gts, Interpolator::Bilinear, &tiles, 8, (800, 800)),
+        ];
+        let legacy = portable_tile(&sweeps).unwrap();
+        let outcome = TuningSession::sim().scale(8).run().unwrap();
+        assert_eq!(outcome.portable.unwrap(), legacy);
     }
 
     #[test]
@@ -126,5 +159,6 @@ mod tests {
     #[test]
     fn empty_input_is_none() {
         assert!(portable_tile(&[]).is_none());
+        assert!(portable_over(&[]).is_none());
     }
 }

@@ -1,0 +1,319 @@
+//! The tuning façade: a builder that runs one search strategy over a
+//! device set through a cost model and returns a durable
+//! [`TuningOutcome`].
+//!
+//! ```no_run
+//! use tilekit::autotuner::{CoordinateDescent, SimCostModel, TuningSession};
+//! use tilekit::device::builtin_devices;
+//!
+//! let outcome = TuningSession::new(SimCostModel)
+//!     .devices(builtin_devices())
+//!     .scale(8)
+//!     .strategy(CoordinateDescent::default())
+//!     .run()?;
+//! println!(
+//!     "portable tile: {:?} after {} evaluations",
+//!     outcome.portable_tile(),
+//!     outcome.evaluations
+//! );
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Defaults reproduce the paper's setup exactly: the GTX 260 / 8800 GTS
+//! pair, the Fig. 3 power-of-two tile set, bilinear, an 800×800 source,
+//! scale 8, and the [`Exhaustive`] strategy.
+
+use super::cost::{CostModel, SimCostModel};
+use super::outcome::{DeviceTuning, TuningOutcome};
+use super::portable::portable_over;
+use super::strategy::{Exhaustive, SearchSpace, SearchStrategy};
+use crate::device::{paper_pair, DeviceDescriptor};
+use crate::image::Interpolator;
+use crate::sim::{Launch, SimReport};
+use crate::tiling::{paper_sweep_tiles, TileDim};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Internal per-device evaluation counter (the public, shareable variant
+/// is [`CountingCostModel`](super::CountingCostModel)).
+struct CountedRef<'a> {
+    inner: &'a dyn CostModel,
+    count: AtomicU64,
+}
+
+impl CostModel for CountedRef<'_> {
+    fn evaluate(&self, launch: &Launch, dev: &DeviceDescriptor) -> SimReport {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.evaluate(launch, dev)
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+/// Builder for one tuning run. See the module docs for an example.
+pub struct TuningSession {
+    cost: Box<dyn CostModel>,
+    devices: Vec<DeviceDescriptor>,
+    tiles: Vec<TileDim>,
+    kernel: Interpolator,
+    scale: u32,
+    src: (u32, u32),
+    strategy: Box<dyn SearchStrategy>,
+}
+
+impl TuningSession {
+    /// Start a session over `cost`, with the paper's defaults for
+    /// everything else.
+    pub fn new(cost: impl CostModel + 'static) -> TuningSession {
+        let (gtx, gts) = paper_pair();
+        TuningSession {
+            cost: Box::new(cost),
+            devices: vec![gtx, gts],
+            tiles: paper_sweep_tiles(),
+            kernel: Interpolator::Bilinear,
+            scale: 8,
+            src: (800, 800),
+            strategy: Box::new(Exhaustive),
+        }
+    }
+
+    /// Shorthand for a session over the timing simulator.
+    pub fn sim() -> TuningSession {
+        TuningSession::new(SimCostModel)
+    }
+
+    /// Replace the device set.
+    pub fn devices(mut self, devs: impl IntoIterator<Item = DeviceDescriptor>) -> TuningSession {
+        self.devices = devs.into_iter().collect();
+        self
+    }
+
+    /// Add one device to the set.
+    pub fn device(mut self, dev: DeviceDescriptor) -> TuningSession {
+        self.devices.push(dev);
+        self
+    }
+
+    /// Replace the candidate tile set.
+    pub fn tiles(mut self, tiles: impl IntoIterator<Item = TileDim>) -> TuningSession {
+        self.tiles = tiles.into_iter().collect();
+        self
+    }
+
+    /// Kernel to tune.
+    pub fn kernel(mut self, kernel: Interpolator) -> TuningSession {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Upscaling factor of the tuned workload.
+    pub fn scale(mut self, scale: u32) -> TuningSession {
+        self.scale = scale;
+        self
+    }
+
+    /// Source image size of the tuned workload.
+    pub fn src(mut self, src: (u32, u32)) -> TuningSession {
+        self.src = src;
+        self
+    }
+
+    /// Replace the search strategy.
+    pub fn strategy(mut self, strategy: impl SearchStrategy + 'static) -> TuningSession {
+        self.strategy = Box::new(strategy);
+        self
+    }
+
+    /// Run the strategy on every device and assemble the outcome (incl.
+    /// the min-max-regret portable pick over the device set). Devices
+    /// are topped up to the union of tiles any device's search visited,
+    /// so portable regrets are always computed over a common pool.
+    pub fn run(&self) -> Result<TuningOutcome> {
+        if self.devices.is_empty() {
+            bail!("tuning session has no devices");
+        }
+        if self.tiles.is_empty() {
+            bail!("tuning session has no candidate tiles");
+        }
+        let mut per_device = Vec::with_capacity(self.devices.len());
+        let mut total = 0u64;
+        for dev in &self.devices {
+            let counted = CountedRef {
+                inner: &*self.cost,
+                count: AtomicU64::new(0),
+            };
+            let space = SearchSpace {
+                dev,
+                kernel: self.kernel,
+                tiles: &self.tiles,
+                scale: self.scale,
+                src: self.src,
+            };
+            let points = self.strategy.search(&space, &counted);
+            let evaluations = counted.count.load(Ordering::Relaxed);
+            total += evaluations;
+            let Some(tuning) = DeviceTuning::from_points(dev.id.clone(), points, evaluations)
+            else {
+                bail!(
+                    "no candidate tile is launchable on device '{}' for {} at scale {}",
+                    dev.id,
+                    self.kernel.label(),
+                    self.scale
+                );
+            };
+            per_device.push(tuning);
+        }
+        // Portable selection needs a common candidate pool with
+        // comparable regrets. Path-based strategies (descent) may visit
+        // different tiles per device, so top every device up to the
+        // union of visited tiles before choosing; for exhaustive
+        // searches this is a no-op. The extra evaluations are counted.
+        let union: Vec<TileDim> = self
+            .tiles
+            .iter()
+            .copied()
+            .filter(|t| {
+                per_device
+                    .iter()
+                    .any(|d| d.points.iter().any(|p| p.tile == *t))
+            })
+            .collect();
+        for (dev, tuning) in self.devices.iter().zip(per_device.iter_mut()) {
+            let missing: Vec<TileDim> = union
+                .iter()
+                .copied()
+                .filter(|t| !tuning.points.iter().any(|p| p.tile == *t))
+                .collect();
+            if missing.is_empty() {
+                continue;
+            }
+            let counted = CountedRef {
+                inner: &*self.cost,
+                count: AtomicU64::new(0),
+            };
+            let space = SearchSpace {
+                dev,
+                kernel: self.kernel,
+                tiles: &self.tiles,
+                scale: self.scale,
+                src: self.src,
+            };
+            let mut points = std::mem::take(&mut tuning.points);
+            for t in missing {
+                points.push(space.evaluate(&counted, t));
+            }
+            let extra = counted.count.load(Ordering::Relaxed);
+            total += extra;
+            *tuning = DeviceTuning::from_points(
+                tuning.device_id.clone(),
+                points,
+                tuning.evaluations + extra,
+            )
+            .expect("union includes this device's own launchable points");
+        }
+        let portable = portable_over(&per_device);
+        Ok(TuningOutcome {
+            kernel: self.kernel,
+            scale: self.scale,
+            src: self.src,
+            strategy: self.strategy.name(),
+            evaluations: total,
+            per_device,
+            portable,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::sweep::sweep;
+    use crate::device::paper_pair;
+
+    #[test]
+    fn defaults_reproduce_the_paper_setup() {
+        let outcome = TuningSession::sim().run().unwrap();
+        assert_eq!(outcome.kernel, Interpolator::Bilinear);
+        assert_eq!(outcome.scale, 8);
+        assert_eq!(outcome.src, (800, 800));
+        assert_eq!(outcome.strategy, "exhaustive");
+        assert_eq!(outcome.per_device.len(), 2);
+        assert_eq!(outcome.per_device[0].device_id, "gtx260");
+        assert_eq!(outcome.per_device[1].device_id, "8800gts");
+    }
+
+    #[test]
+    fn exhaustive_session_matches_raw_sweep_exactly() {
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let raw = sweep(&gtx, Interpolator::Bilinear, &tiles, 8, (800, 800));
+        let outcome = TuningSession::sim().scale(8).run().unwrap();
+        let dt = outcome.device("gtx260").unwrap();
+        assert_eq!(dt.points.len(), raw.points.len());
+        for (a, b) in dt.points.iter().zip(&raw.points) {
+            assert_eq!(a.tile, b.tile);
+            assert_eq!(a.ms, b.report.ms);
+        }
+        assert_eq!(dt.best, raw.best().unwrap().tile);
+        assert_eq!(dt.evaluations, tiles.len() as u64);
+    }
+
+    #[test]
+    fn empty_inputs_error_cleanly() {
+        assert!(TuningSession::sim().devices([]).run().is_err());
+        assert!(TuningSession::sim().tiles([]).run().is_err());
+    }
+
+    #[test]
+    fn unlaunchable_everything_errors_with_device_name() {
+        // A tile far over every block cap is unlaunchable everywhere.
+        let err = TuningSession::sim()
+            .tiles([TileDim::new(1024, 1024)])
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gtx260"), "{err}");
+    }
+
+    #[test]
+    fn portable_pool_is_topped_up_across_devices() {
+        // Descent paths may diverge per device; the session must
+        // evaluate the union of visited tiles on every device so
+        // portable regrets compare like with like.
+        use crate::autotuner::strategy::CoordinateDescent;
+        for scale in [2u32, 4, 6, 8, 10] {
+            let outcome = TuningSession::sim()
+                .scale(scale)
+                .strategy(CoordinateDescent::default())
+                .run()
+                .unwrap();
+            let mut union: Vec<TileDim> = outcome
+                .per_device
+                .iter()
+                .flat_map(|d| d.points.iter().map(|p| p.tile))
+                .collect();
+            union.sort();
+            union.dedup();
+            for d in &outcome.per_device {
+                let mut mine: Vec<TileDim> = d.points.iter().map(|p| p.tile).collect();
+                mine.sort();
+                mine.dedup();
+                assert_eq!(mine, union, "{} at scale {scale}", d.device_id);
+            }
+            assert!(outcome.portable.is_some(), "scale {scale}");
+        }
+    }
+
+    #[test]
+    fn device_builder_appends() {
+        let (gtx, gts) = paper_pair();
+        let outcome = TuningSession::sim()
+            .devices([gtx])
+            .device(gts)
+            .run()
+            .unwrap();
+        assert_eq!(outcome.per_device.len(), 2);
+    }
+}

@@ -1,0 +1,528 @@
+//! Search strategies: how a [`TuningSession`](super::TuningSession)
+//! explores the tile space of one device.
+//!
+//! * [`Exhaustive`] — evaluate every candidate (the seed crate's `sweep`
+//!   behavior; the ground truth the other strategies are judged against).
+//! * [`CoordinateDescent`] — hill-climb over the w×h tile lattice,
+//!   evaluating only a path plus its neighbors. On large tile sets this
+//!   needs roughly an order of magnitude fewer `CostModel::evaluate`
+//!   calls than an exhaustive sweep while landing on (or next to) the
+//!   same winner on tiling surfaces like the paper's Fig. 3 curves.
+//! * [`Cached`] — decorator consulting a persistent [`TuningDb`] keyed by
+//!   (device id, kernel, scale, source size); hits cost zero evaluations.
+//!
+//! Strategies are judged on `CostModel::evaluate` calls; wrap a model in
+//! [`CountingCostModel`](super::CountingCostModel) to audit them.
+
+use super::cost::CostModel;
+use super::db::TuningDb;
+use super::outcome::{DeviceTuning, TunedPoint};
+use crate::device::DeviceDescriptor;
+use crate::image::Interpolator;
+use crate::sim::Launch;
+use crate::tiling::TileDim;
+use anyhow::{bail, Result};
+use std::cell::{Ref, RefCell};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// One device's search problem: the candidate tiles and the workload they
+/// will run.
+pub struct SearchSpace<'a> {
+    pub dev: &'a DeviceDescriptor,
+    pub kernel: Interpolator,
+    pub tiles: &'a [TileDim],
+    pub scale: u32,
+    pub src: (u32, u32),
+}
+
+impl SearchSpace<'_> {
+    /// The launch a candidate tile corresponds to.
+    pub fn launch(&self, tile: TileDim) -> Launch {
+        Launch {
+            kernel: self.kernel,
+            tile,
+            src_w: self.src.0,
+            src_h: self.src.1,
+            scale: self.scale,
+        }
+    }
+
+    /// Evaluate one candidate through a cost model.
+    pub fn evaluate(&self, cost: &dyn CostModel, tile: TileDim) -> TunedPoint {
+        TunedPoint {
+            tile,
+            ms: cost.evaluate(&self.launch(tile), self.dev).ms,
+        }
+    }
+}
+
+/// How to explore a [`SearchSpace`]. Implementations return every point
+/// they evaluated (or recalled from a cache), in discovery order; best-
+/// tile extraction and portable selection happen in the session layer.
+pub trait SearchStrategy {
+    /// Strategy label recorded in [`TuningOutcome`](super::TuningOutcome)
+    /// provenance.
+    fn name(&self) -> String;
+
+    /// Explore the space through `cost`.
+    fn search(&self, space: &SearchSpace<'_>, cost: &dyn CostModel) -> Vec<TunedPoint>;
+}
+
+impl SearchStrategy for Box<dyn SearchStrategy> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn search(&self, space: &SearchSpace<'_>, cost: &dyn CostModel) -> Vec<TunedPoint> {
+        (**self).search(space, cost)
+    }
+}
+
+/// Evaluate every candidate tile — the seed `sweep` behavior.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Exhaustive;
+
+impl SearchStrategy for Exhaustive {
+    fn name(&self) -> String {
+        "exhaustive".to_string()
+    }
+
+    fn search(&self, space: &SearchSpace<'_>, cost: &dyn CostModel) -> Vec<TunedPoint> {
+        space
+            .tiles
+            .iter()
+            .map(|&tile| space.evaluate(cost, tile))
+            .collect()
+    }
+}
+
+/// Hill-climb over the w×h tile lattice.
+///
+/// The candidate set is treated as a 2-D lattice over its distinct tile
+/// widths and heights. From a start tile the search repeatedly evaluates
+/// the four axis neighbors present in the candidate set and moves to the
+/// strictest improvement, stopping at a local minimum. Every evaluation
+/// is memoized, so the cost is the path length plus its frontier — far
+/// below the full lattice on big tile sets.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinateDescent {
+    /// Explicit start tile; `None` uses the midpoint rule (the candidate
+    /// closest to the geometric mean thread count, widest aspect first —
+    /// the row-friendly shapes the paper recommends).
+    pub start: Option<TileDim>,
+}
+
+impl CoordinateDescent {
+    /// Descend from an explicit start tile.
+    pub fn from(start: TileDim) -> CoordinateDescent {
+        CoordinateDescent { start: Some(start) }
+    }
+
+    fn default_start(tiles: &[TileDim]) -> Option<TileDim> {
+        let min = tiles.iter().map(TileDim::threads).min()? as f64;
+        let max = tiles.iter().map(TileDim::threads).max()? as f64;
+        let target = (min.ln() + max.ln()) / 2.0;
+        tiles.iter().copied().min_by(|a, b| {
+            let da = ((a.threads() as f64).ln() - target).abs();
+            let db = ((b.threads() as f64).ln() - target).abs();
+            da.total_cmp(&db)
+                .then_with(|| b.aspect().total_cmp(&a.aspect()))
+        })
+    }
+}
+
+fn eval_memo(
+    space: &SearchSpace<'_>,
+    cost: &dyn CostModel,
+    tile: TileDim,
+    seen: &mut BTreeMap<(u32, u32), f64>,
+    order: &mut Vec<TunedPoint>,
+) -> f64 {
+    if let Some(&ms) = seen.get(&(tile.x, tile.y)) {
+        return ms;
+    }
+    let p = space.evaluate(cost, tile);
+    seen.insert((tile.x, tile.y), p.ms);
+    order.push(p);
+    p.ms
+}
+
+impl SearchStrategy for CoordinateDescent {
+    fn name(&self) -> String {
+        "descent".to_string()
+    }
+
+    fn search(&self, space: &SearchSpace<'_>, cost: &dyn CostModel) -> Vec<TunedPoint> {
+        let tiles = space.tiles;
+        let mut order = Vec::new();
+        if tiles.is_empty() {
+            return order;
+        }
+        let mut xs: Vec<u32> = tiles.iter().map(|t| t.x).collect();
+        xs.sort_unstable();
+        xs.dedup();
+        let mut ys: Vec<u32> = tiles.iter().map(|t| t.y).collect();
+        ys.sort_unstable();
+        ys.dedup();
+        let members: BTreeSet<(u32, u32)> = tiles.iter().map(|t| (t.x, t.y)).collect();
+
+        let start = self
+            .start
+            .filter(|t| members.contains(&(t.x, t.y)))
+            .or_else(|| Self::default_start(tiles));
+        let Some(mut cur) = start else {
+            return order;
+        };
+        let mut seen = BTreeMap::new();
+        let mut cur_ms = eval_memo(space, cost, cur, &mut seen, &mut order);
+        if !cur_ms.is_finite() {
+            // Unlaunchable start: fall back to the first launchable
+            // candidate (scanning is still bounded by the tile set).
+            let mut found = false;
+            for &t in tiles {
+                let ms = eval_memo(space, cost, t, &mut seen, &mut order);
+                if ms.is_finite() {
+                    cur = t;
+                    cur_ms = ms;
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                return order;
+            }
+        }
+
+        for _ in 0..tiles.len() {
+            let ix = xs.iter().position(|&v| v == cur.x).expect("member x");
+            let iy = ys.iter().position(|&v| v == cur.y).expect("member y");
+            let mut neighbors = Vec::with_capacity(4);
+            if ix > 0 {
+                neighbors.push((xs[ix - 1], cur.y));
+            }
+            if ix + 1 < xs.len() {
+                neighbors.push((xs[ix + 1], cur.y));
+            }
+            if iy > 0 {
+                neighbors.push((cur.x, ys[iy - 1]));
+            }
+            if iy + 1 < ys.len() {
+                neighbors.push((cur.x, ys[iy + 1]));
+            }
+            let mut best_step: Option<(TileDim, f64)> = None;
+            for (x, y) in neighbors {
+                if !members.contains(&(x, y)) {
+                    continue;
+                }
+                let t = TileDim::new(x, y);
+                let ms = eval_memo(space, cost, t, &mut seen, &mut order);
+                if !ms.is_finite() {
+                    continue;
+                }
+                let take = match best_step {
+                    None => true,
+                    Some((bt, bms)) => {
+                        ms.total_cmp(&bms).is_lt()
+                            || (ms.total_cmp(&bms).is_eq() && t.aspect() > bt.aspect())
+                    }
+                };
+                if take {
+                    best_step = Some((t, ms));
+                }
+            }
+            match best_step {
+                Some((t, ms)) if ms < cur_ms => {
+                    cur = t;
+                    cur_ms = ms;
+                }
+                _ => break, // local minimum
+            }
+        }
+        order
+    }
+}
+
+/// Decorator: consult a persistent [`TuningDb`] before searching, and
+/// write-through results so the next session (or process) gets them for
+/// free. Cache keys are (device id, kernel, scale, source size) plus the
+/// producing strategy and a fingerprint of the candidate tile set, so a
+/// descent path never masquerades as an exhaustive sweep and a changed
+/// tile set is a clean miss, never a stale hit.
+pub struct Cached<S: SearchStrategy> {
+    inner: S,
+    db: RefCell<TuningDb>,
+}
+
+impl<S: SearchStrategy> Cached<S> {
+    /// Wrap `inner` over an already-opened database.
+    pub fn new(inner: S, db: TuningDb) -> Cached<S> {
+        Cached {
+            inner,
+            db: RefCell::new(db),
+        }
+    }
+
+    /// Wrap `inner` over the database at `path` (created on first write).
+    pub fn open(inner: S, path: &Path) -> Result<Cached<S>> {
+        Ok(Cached::new(inner, TuningDb::open(path)?))
+    }
+
+    /// Inspect the underlying database.
+    pub fn db(&self) -> Ref<'_, TuningDb> {
+        self.db.borrow()
+    }
+
+    /// Take the database back out.
+    pub fn into_db(self) -> TuningDb {
+        self.db.into_inner()
+    }
+}
+
+impl<S: SearchStrategy> SearchStrategy for Cached<S> {
+    fn name(&self) -> String {
+        format!("cached+{}", self.inner.name())
+    }
+
+    fn search(&self, space: &SearchSpace<'_>, cost: &dyn CostModel) -> Vec<TunedPoint> {
+        let strategy = self.inner.name();
+        let tiles_fp = TuningDb::tiles_fingerprint(space.tiles);
+        if let Some(hit) = self.db.borrow().get(
+            &space.dev.id,
+            space.kernel,
+            space.scale,
+            space.src,
+            &strategy,
+            &tiles_fp,
+        ) {
+            return hit.points.clone();
+        }
+        let points = self.inner.search(space, cost);
+        if let Some(tuning) = DeviceTuning::from_points(
+            space.dev.id.clone(),
+            points.clone(),
+            points.len() as u64,
+        ) {
+            let mut db = self.db.borrow_mut();
+            db.insert(
+                space.kernel,
+                space.scale,
+                space.src,
+                &strategy,
+                &tiles_fp,
+                tuning,
+            );
+            if let Err(e) = db.persist() {
+                eprintln!("tilekit: warning: could not persist tuning cache: {e:#}");
+            }
+        }
+        points
+    }
+}
+
+/// Valid `--strategy` names on the CLI.
+pub const STRATEGY_NAMES: &[&str] = &["exhaustive", "descent", "cached"];
+
+/// Resolve a CLI strategy name (optionally wrapped in a [`Cached`]
+/// decorator when `cache` names a database file). Unknown names produce a
+/// friendly error listing the valid options.
+pub fn strategy_by_name(name: &str, cache: Option<&Path>) -> Result<Box<dyn SearchStrategy>> {
+    let base: Box<dyn SearchStrategy> = match name {
+        "exhaustive" | "sweep" => Box::new(Exhaustive),
+        "descent" | "coordinate-descent" => Box::new(CoordinateDescent::default()),
+        "cached" => Box::new(Exhaustive),
+        other => bail!(
+            "unknown strategy '{other}' — valid strategies: {}",
+            STRATEGY_NAMES.join(", ")
+        ),
+    };
+    Ok(match (name == "cached", cache) {
+        (false, None) => base,
+        (_, Some(path)) => Box::new(Cached::open(base, path)?),
+        (true, None) => Box::new(Cached::open(base, Path::new("tuning_cache.json"))?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::cost::{CountingCostModel, SimCostModel};
+    use crate::device::paper_pair;
+    use crate::tiling::paper_sweep_tiles;
+
+    fn space<'a>(
+        dev: &'a DeviceDescriptor,
+        tiles: &'a [TileDim],
+        scale: u32,
+    ) -> SearchSpace<'a> {
+        SearchSpace {
+            dev,
+            kernel: Interpolator::Bilinear,
+            tiles,
+            scale,
+            src: (800, 800),
+        }
+    }
+
+    #[test]
+    fn exhaustive_evaluates_every_tile_once() {
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let model = CountingCostModel::new(SimCostModel);
+        let points = Exhaustive.search(&space(&gtx, &tiles, 6), &model);
+        assert_eq!(points.len(), tiles.len());
+        assert_eq!(model.count(), tiles.len() as u64);
+        for (p, t) in points.iter().zip(&tiles) {
+            assert_eq!(p.tile, *t);
+        }
+    }
+
+    #[test]
+    fn descent_midpoint_rule_prefers_wide_tiles() {
+        let tiles = paper_sweep_tiles();
+        // 32..512 threads → geometric mean 128; widest 128-thread member
+        // is 32x4
+        assert_eq!(
+            CoordinateDescent::default_start(&tiles),
+            Some(TileDim::new(32, 4))
+        );
+    }
+
+    #[test]
+    fn descent_finds_near_optimal_with_fewer_evaluations() {
+        let (gtx, gts) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        for dev in [&gtx, &gts] {
+            for scale in [6, 8, 10] {
+                let exhaustive = CountingCostModel::new(SimCostModel);
+                let all = Exhaustive.search(&space(dev, &tiles, scale), &exhaustive);
+                let best_all =
+                    DeviceTuning::from_points(dev.id.clone(), all, tiles.len() as u64)
+                        .unwrap();
+
+                let counted = CountingCostModel::new(SimCostModel);
+                let found =
+                    CoordinateDescent::default().search(&space(dev, &tiles, scale), &counted);
+                let evals = counted.count();
+                let best_found =
+                    DeviceTuning::from_points(dev.id.clone(), found, evals).unwrap();
+
+                assert!(
+                    evals < exhaustive.count(),
+                    "{} scale {scale}: descent used {evals} >= {}",
+                    dev.id,
+                    exhaustive.count()
+                );
+                assert!(
+                    best_found.best_ms <= best_all.best_ms * 1.05,
+                    "{} scale {scale}: {} vs {}",
+                    dev.id,
+                    best_found.best_ms,
+                    best_all.best_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn descent_memoizes_repeat_visits() {
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let model = CountingCostModel::new(SimCostModel);
+        let points = CoordinateDescent::default().search(&space(&gtx, &tiles, 8), &model);
+        // every returned point is distinct and each evaluation produced
+        // exactly one point
+        let mut seen: Vec<TileDim> = points.iter().map(|p| p.tile).collect();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), points.len());
+        assert_eq!(model.count(), points.len() as u64);
+    }
+
+    #[test]
+    fn descent_explicit_start_is_honored() {
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let model = CountingCostModel::new(SimCostModel);
+        let start = TileDim::new(8, 8);
+        let points = CoordinateDescent::from(start).search(&space(&gtx, &tiles, 8), &model);
+        assert_eq!(points[0].tile, start);
+    }
+
+    #[test]
+    fn strategy_by_name_resolves_and_rejects() {
+        assert_eq!(
+            strategy_by_name("exhaustive", None).unwrap().name(),
+            "exhaustive"
+        );
+        assert_eq!(strategy_by_name("descent", None).unwrap().name(), "descent");
+        let err = strategy_by_name("annealing", None).unwrap_err().to_string();
+        assert!(err.contains("unknown strategy 'annealing'"), "{err}");
+        assert!(err.contains("exhaustive"), "{err}");
+        assert!(err.contains("descent"), "{err}");
+        assert!(err.contains("cached"), "{err}");
+    }
+
+    #[test]
+    fn cached_decorator_hits_skip_the_inner_strategy() {
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+        let strat = Cached::new(Exhaustive, TuningDb::in_memory());
+        let model = CountingCostModel::new(SimCostModel);
+        let first = strat.search(&space(&gtx, &tiles, 8), &model);
+        let after_first = model.count();
+        assert_eq!(after_first, tiles.len() as u64);
+        let second = strat.search(&space(&gtx, &tiles, 8), &model);
+        assert_eq!(model.count(), after_first, "hit must not evaluate");
+        assert_eq!(first, second);
+        // a different scale is a different key
+        strat.search(&space(&gtx, &tiles, 6), &model);
+        assert!(model.count() > after_first);
+        assert_eq!(strat.db().len(), 2);
+    }
+
+    #[test]
+    fn cached_entries_do_not_cross_strategies() {
+        // A descent-populated cache must not serve an exhaustive request:
+        // descent stores only its path, not the full sweep.
+        let dir = std::env::temp_dir().join("tilekit_strategy_cross_cache");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        std::fs::remove_file(&path).ok();
+        let (gtx, _) = paper_pair();
+        let tiles = paper_sweep_tiles();
+
+        let descent = Cached::open(CoordinateDescent::default(), &path).unwrap();
+        let model = CountingCostModel::new(SimCostModel);
+        let path_points = descent.search(&space(&gtx, &tiles, 8), &model);
+        assert!(path_points.len() < tiles.len());
+
+        let exhaustive = Cached::open(Exhaustive, &path).unwrap();
+        let model2 = CountingCostModel::new(SimCostModel);
+        let all_points = exhaustive.search(&space(&gtx, &tiles, 8), &model2);
+        assert_eq!(all_points.len(), tiles.len(), "must re-evaluate, not hit");
+        assert_eq!(model2.count(), tiles.len() as u64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cached_entries_do_not_cross_tile_sets() {
+        // A cache populated with the paper tile set must not answer a
+        // request over a different candidate set.
+        let (gtx, _) = paper_pair();
+        let strat = Cached::new(Exhaustive, TuningDb::in_memory());
+        let model = CountingCostModel::new(SimCostModel);
+        let tiles = paper_sweep_tiles();
+        strat.search(&space(&gtx, &tiles, 8), &model);
+        let after_paper = model.count();
+        let small = [TileDim::new(8, 8), TileDim::new(16, 16)];
+        let points = strat.search(&space(&gtx, &small, 8), &model);
+        assert_eq!(points.len(), 2, "different tile set must miss the cache");
+        assert_eq!(model.count(), after_paper + 2);
+        // both entries coexist; re-requesting either is a hit
+        assert_eq!(strat.db().len(), 2);
+        strat.search(&space(&gtx, &tiles, 8), &model);
+        strat.search(&space(&gtx, &small, 8), &model);
+        assert_eq!(model.count(), after_paper + 2);
+    }
+}

@@ -25,6 +25,8 @@ pub struct SweepResult {
 impl SweepResult {
     /// The fastest launchable tile (ties broken toward wider tiles, the
     /// row-friendly shapes — matching how the paper reads its figures).
+    /// NaN-safe: ordering uses `f64::total_cmp`, so a non-finite simulated
+    /// time can never panic the tuner.
     pub fn best(&self) -> Option<&SweepPoint> {
         self.points
             .iter()
@@ -32,9 +34,8 @@ impl SweepResult {
             .min_by(|a, b| {
                 a.report
                     .ms
-                    .partial_cmp(&b.report.ms)
-                    .unwrap()
-                    .then(b.tile.aspect().partial_cmp(&a.tile.aspect()).unwrap())
+                    .total_cmp(&b.report.ms)
+                    .then_with(|| b.tile.aspect().total_cmp(&a.tile.aspect()))
             })
     }
 
@@ -176,6 +177,28 @@ mod tests {
                 "scale {scale}: gtx range {sg} ms should be < gts range {ss} ms"
             );
         }
+    }
+
+    #[test]
+    fn best_is_nan_safe() {
+        // A cost model gone wrong (NaN time) must lose quietly, not panic
+        // the tuner mid-comparison.
+        let (gtx, _) = paper_pair();
+        let mut r = run(&gtx, 4);
+        let want = r.best().unwrap().tile;
+        // poison two non-winning points with NaN / infinity
+        let mut poisoned = 0;
+        for p in r.points.iter_mut() {
+            if p.tile != want && poisoned < 2 {
+                p.report.ms = if poisoned == 0 { f64::NAN } else { f64::INFINITY };
+                poisoned += 1;
+            }
+        }
+        assert_eq!(poisoned, 2);
+        let best = r.best().unwrap();
+        assert!(best.report.ms.is_finite());
+        // NaN-ing non-winners leaves the winner unchanged
+        assert_eq!(best.tile, want);
     }
 
     #[test]

@@ -3,12 +3,12 @@
 //! paper plots; the bench binaries and the CLI print them (and CSV for
 //! plotting).
 
-use crate::autotuner::{portable_tile, sweep, SweepResult};
+use crate::autotuner::{SimCostModel, TuningOutcome, TuningSession};
 use crate::device::{paper_pair, table1, DeviceDescriptor};
 use crate::image::Interpolator;
 use crate::sim::{block_traffic, simulate, Launch, Straggler};
 use crate::tiling::occupancy::{occupancy, KernelResources};
-use crate::tiling::{paper_sweep_tiles, TileDim};
+use crate::tiling::TileDim;
 use crate::util::text::{fmt_ms, Table};
 
 /// The paper's Fig. 3 scales, insets (a)–(e).
@@ -19,21 +19,36 @@ pub fn table1_figure() -> Table {
     table1()
 }
 
+/// An exhaustive paper-pair tuning outcome for one (kernel, scale, src)
+/// — the data behind each Fig. 3 inset.
+fn paper_pair_outcome(kernel: Interpolator, scale: u32, src: (u32, u32)) -> TuningOutcome {
+    let (gtx, gts) = paper_pair();
+    TuningSession::new(SimCostModel)
+        .devices([gtx, gts])
+        .kernel(kernel)
+        .scale(scale)
+        .src(src)
+        .run()
+        .expect("paper tiles are launchable on the paper pair")
+}
+
 /// One inset of Fig. 3: time per tile on both paper devices at `scale`.
 pub fn fig3_inset(kernel: Interpolator, scale: u32, src: (u32, u32)) -> Table {
-    let (gtx, gts) = paper_pair();
-    let tiles = paper_sweep_tiles();
-    let sg = sweep(&gtx, kernel, &tiles, scale, src);
-    let ss = sweep(&gts, kernel, &tiles, scale, src);
+    inset_table(&paper_pair_outcome(kernel, scale, src))
+}
+
+/// Render the inset table for an already-computed paper-pair outcome.
+fn inset_table(outcome: &TuningOutcome) -> Table {
+    let (sg, ss) = (&outcome.per_device[0], &outcome.per_device[1]);
     let mut t = Table::new(vec![
         "tile".to_string(),
         "threads".to_string(),
-        format!("{} ms", gtx.id),
-        format!("{} ms", gts.id),
+        format!("{} ms", sg.device_id),
+        format!("{} ms", ss.device_id),
         "ratio".to_string(),
     ]);
     for (pg, ps) in sg.points.iter().zip(&ss.points) {
-        let (a, b) = (pg.report.ms, ps.report.ms);
+        let (a, b) = (pg.ms, ps.ms);
         t.row(vec![
             pg.tile.label(),
             pg.tile.threads().to_string(),
@@ -52,8 +67,6 @@ pub fn fig3_inset(kernel: Interpolator, scale: u32, src: (u32, u32)) -> Table {
 /// All five Fig. 3 insets plus the per-inset best tiles and smoothness —
 /// the full headline figure with the paper's three findings called out.
 pub fn fig3_summary(kernel: Interpolator, src: (u32, u32)) -> (Vec<(u32, Table)>, Table) {
-    let (gtx, gts) = paper_pair();
-    let tiles = paper_sweep_tiles();
     let mut insets = Vec::new();
     let mut summary = Table::new(vec![
         "scale",
@@ -63,13 +76,13 @@ pub fn fig3_summary(kernel: Interpolator, src: (u32, u32)) -> (Vec<(u32, Table)>
         "range@8800gts (ms)",
     ]);
     for scale in FIG3_SCALES {
-        insets.push((scale, fig3_inset(kernel, scale, src)));
-        let sg = sweep(&gtx, kernel, &tiles, scale, src);
-        let ss = sweep(&gts, kernel, &tiles, scale, src);
+        let outcome = paper_pair_outcome(kernel, scale, src);
+        insets.push((scale, inset_table(&outcome)));
+        let (sg, ss) = (&outcome.per_device[0], &outcome.per_device[1]);
         summary.row(vec![
             scale.to_string(),
-            sg.best().map(|p| p.tile.label()).unwrap_or_default(),
-            ss.best().map(|p| p.tile.label()).unwrap_or_default(),
+            sg.best.label(),
+            ss.best.label(),
             format!("{:.3}", sg.range_ms()),
             format!("{:.3}", ss.range_ms()),
         ]);
@@ -163,31 +176,41 @@ pub fn extreme_example() -> Table {
     t
 }
 
-/// §V — portable-tile selection over a device set at a given scale.
+/// §V — portable-tile selection over a device set at a given scale,
+/// through the TuningSession API.
 pub fn portable_selection(
     devices: &[DeviceDescriptor],
     kernel: Interpolator,
     scale: u32,
     src: (u32, u32),
 ) -> (Table, Option<TileDim>) {
-    let tiles = paper_sweep_tiles();
-    let sweeps: Vec<SweepResult> = devices
-        .iter()
-        .map(|d| sweep(d, kernel, &tiles, scale, src))
-        .collect();
-    let choice = portable_tile(&sweeps);
     let mut t = Table::new(vec!["device", "best tile", "portable-tile regret"]);
-    if let Some(c) = &choice {
+    if devices.is_empty() {
+        return (t, None);
+    }
+    let outcome = match TuningSession::new(SimCostModel)
+        .devices(devices.to_vec())
+        .kernel(kernel)
+        .scale(scale)
+        .src(src)
+        .run()
+    {
+        Ok(o) => o,
+        Err(_) => return (t, None), // no launchable tile on some device
+    };
+    if let Some(c) = &outcome.portable {
         for (dev, best, regret) in &c.per_device {
             t.row(vec![dev.clone(), best.label(), format!("{:.3}x", regret)]);
         }
     }
-    (t, choice.map(|c| c.tile))
+    let tile = outcome.portable_tile();
+    (t, tile)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tiling::paper_sweep_tiles;
 
     #[test]
     fn fig3_inset_has_all_tiles() {

@@ -16,8 +16,17 @@
 //! ```
 //!
 //! The paper's tiling result enters through the router: artifact variants
-//! are keyed by Pallas tile, and [`router::Router`] prefers the portable
-//! tile (32×4) chosen by the autotuner.
+//! are keyed by Pallas tile, and [`router::Router`] resolves which
+//! variant to prefer through a [`router::TilePolicy`]:
+//!
+//! * `TilePolicy::Fixed(tile)` — pin one tile (benchmark overrides);
+//! * `TilePolicy::PerDevice(outcome)` — route each serving device to its
+//!   own tuned tile from a [`crate::autotuner::TuningOutcome`], falling
+//!   back to the outcome's portable (min-max regret) pick for devices
+//!   the tuner has not seen — re-tune, rebuild the router, done;
+//! * `TilePolicy::PortableFallback` — no tuned preference; the
+//!   backend-optimal variant order (largest Pallas tile first on the
+//!   CPU PJRT backend).
 
 pub mod batcher;
 pub mod request;
@@ -27,6 +36,6 @@ pub mod stats;
 pub mod worker;
 
 pub use request::{RequestKey, ResizeRequest, Ticket};
-pub use router::Router;
+pub use router::{Router, TilePolicy};
 pub use server::{Coordinator, SubmitError};
 pub use stats::ServingStats;

@@ -1,27 +1,69 @@
 //! The router: maps a [`RequestKey`] to the artifact that should serve
-//! it, preferring the portable tile variant (the paper's §V conclusion,
-//! computed by the autotuner) and falling back to whatever variant the
-//! manifest offers.
+//! it, with the preferred Pallas tile decided by a [`TilePolicy`] — the
+//! seam through which autotuner results reach serving.
 
 use super::request::RequestKey;
+use crate::autotuner::TuningOutcome;
 use crate::runtime::{ArtifactEntry, Manifest};
 use crate::tiling::TileDim;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
+/// How the router chooses among tile variants of the same artifact shape.
+#[derive(Debug, Clone)]
+pub enum TilePolicy {
+    /// Always prefer this tile (the old `Some(tile)` behavior).
+    Fixed(TileDim),
+    /// Prefer each device's tuned best tile from a [`TuningOutcome`];
+    /// devices absent from the outcome fall back to its portable pick.
+    /// Build one router per serving device with [`Router::for_device`].
+    PerDevice(TuningOutcome),
+    /// No tuned preference: backend-optimal variant order (largest Pallas
+    /// tile first — on the CPU PJRT backend fewer grid steps win,
+    /// measured 5.7x in `cargo bench --bench artifact_exec`;
+    /// EXPERIMENTS.md §Perf). The old `None` behavior.
+    PortableFallback,
+}
+
+impl TilePolicy {
+    /// The tile this policy prefers when serving `device_id` (`None` =
+    /// device unknown / single-backend deployment).
+    pub fn tile_for(&self, device_id: Option<&str>) -> Option<TileDim> {
+        match self {
+            TilePolicy::Fixed(tile) => Some(*tile),
+            TilePolicy::PerDevice(outcome) => match device_id {
+                Some(id) => outcome.best_for(id).or_else(|| outcome.portable_tile()),
+                None => outcome.portable_tile(),
+            },
+            TilePolicy::PortableFallback => None,
+        }
+    }
+}
+
 /// Routing table built once from the manifest.
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// Preferred Pallas tile (e.g. the autotuner's portable 32×4).
+    /// Resolved preferred Pallas tile (e.g. the autotuner's portable
+    /// 32×4, or a device's tuned best under `TilePolicy::PerDevice`).
     pub tile_pref: Option<TileDim>,
+    /// The policy this router was built from.
+    policy: TilePolicy,
     /// Precomputed key → candidate entries (sorted by preference).
     table: HashMap<RequestKey, Vec<ArtifactEntry>>,
 }
 
 impl Router {
-    /// Build a routing table over `manifest`, preferring `tile_pref`
-    /// variants when several serve the same key.
-    pub fn new(manifest: &Manifest, tile_pref: Option<TileDim>) -> Router {
+    /// Build a routing table over `manifest` for a deployment with no
+    /// specific device identity (see [`Router::for_device`]).
+    pub fn new(manifest: &Manifest, policy: TilePolicy) -> Router {
+        Self::for_device(manifest, policy, None)
+    }
+
+    /// Build a routing table over `manifest` serving `device_id`: the
+    /// policy resolves to that device's preferred tile, so each device
+    /// routes to its own tuned variant.
+    pub fn for_device(manifest: &Manifest, policy: TilePolicy, device_id: Option<&str>) -> Router {
+        let tile_pref = policy.tile_for(device_id);
         let mut table: HashMap<RequestKey, Vec<ArtifactEntry>> = HashMap::new();
         for e in &manifest.entries {
             let key = RequestKey {
@@ -35,14 +77,20 @@ impl Router {
             entries.sort_by_key(|e| {
                 let tile_match = tile_pref.map(|t| e.tile == t).unwrap_or(true);
                 // Among equally-preferred variants, larger Pallas tiles
-                // first: on the CPU PJRT backend fewer grid steps win
-                // (measured 5.7x in `cargo bench --bench artifact_exec`;
-                // EXPERIMENTS.md §Perf). A GPU backend would pass an
-                // explicit tile_pref from the autotuner instead.
+                // first (the PortableFallback rationale above).
                 (!tile_match, e.batch, std::cmp::Reverse(e.tile.threads()))
             });
         }
-        Router { tile_pref, table }
+        Router {
+            tile_pref,
+            policy,
+            table,
+        }
+    }
+
+    /// The policy this router was built from.
+    pub fn policy(&self) -> &TilePolicy {
+        &self.policy
     }
 
     /// Keys this router can serve.
@@ -85,6 +133,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::autotuner::{portable_over, DeviceTuning, TunedPoint, TuningOutcome};
     use crate::image::Interpolator;
     use std::path::PathBuf;
 
@@ -111,9 +160,54 @@ mod tests {
         }
     }
 
+    /// A hand-built outcome where the two paper devices tune to
+    /// different tiles (32x4 vs 8x8).
+    fn split_outcome() -> TuningOutcome {
+        let gtx = DeviceTuning::from_points(
+            "gtx260".to_string(),
+            vec![
+                TunedPoint {
+                    tile: TileDim::new(32, 4),
+                    ms: 1.0,
+                },
+                TunedPoint {
+                    tile: TileDim::new(8, 8),
+                    ms: 2.0,
+                },
+            ],
+            2,
+        )
+        .unwrap();
+        let gts = DeviceTuning::from_points(
+            "8800gts".to_string(),
+            vec![
+                TunedPoint {
+                    tile: TileDim::new(32, 4),
+                    ms: 3.0,
+                },
+                TunedPoint {
+                    tile: TileDim::new(8, 8),
+                    ms: 1.5,
+                },
+            ],
+            2,
+        )
+        .unwrap();
+        let per_device = vec![gtx, gts];
+        TuningOutcome {
+            kernel: Interpolator::Bilinear,
+            scale: 2,
+            src: (64, 64),
+            strategy: "exhaustive".to_string(),
+            evaluations: 4,
+            per_device: per_device.clone(),
+            portable: portable_over(&per_device),
+        }
+    }
+
     #[test]
     fn routes_by_batch_size() {
-        let r = Router::new(&manifest(), Some(TileDim::new(32, 4)));
+        let r = Router::new(&manifest(), TilePolicy::Fixed(TileDim::new(32, 4)));
         assert_eq!(r.route(&key(), 1).unwrap().name, "bl_s2_b1_t32x4");
         assert_eq!(r.route(&key(), 3).unwrap().name, "bl_s2_b4_t32x4");
         assert_eq!(r.route(&key(), 4).unwrap().name, "bl_s2_b4_t32x4");
@@ -123,13 +217,37 @@ mod tests {
 
     #[test]
     fn tile_preference_respected() {
-        let r = Router::new(&manifest(), Some(TileDim::new(8, 8)));
+        let r = Router::new(&manifest(), TilePolicy::Fixed(TileDim::new(8, 8)));
         assert_eq!(r.route(&key(), 4).unwrap().name, "bl_s2_b4_t8x8");
     }
 
     #[test]
+    fn per_device_policy_routes_each_device_to_its_tuned_tile() {
+        let outcome = split_outcome();
+        let policy = TilePolicy::PerDevice(outcome.clone());
+        let ra = Router::for_device(&manifest(), policy.clone(), Some("gtx260"));
+        assert_eq!(ra.tile_pref, Some(TileDim::new(32, 4)));
+        assert_eq!(ra.route(&key(), 4).unwrap().name, "bl_s2_b4_t32x4");
+        let rb = Router::for_device(&manifest(), policy.clone(), Some("8800gts"));
+        assert_eq!(rb.tile_pref, Some(TileDim::new(8, 8)));
+        assert_eq!(rb.route(&key(), 4).unwrap().name, "bl_s2_b4_t8x8");
+        // an untuned device falls back to the outcome's portable pick
+        let rc = Router::for_device(&manifest(), policy, Some("fermi480"));
+        assert_eq!(rc.tile_pref, outcome.portable_tile());
+    }
+
+    #[test]
+    fn portable_fallback_prefers_largest_tile() {
+        let r = Router::new(&manifest(), TilePolicy::PortableFallback);
+        assert_eq!(r.tile_pref, None);
+        // 32x4 (128 threads) outranks 8x8 (64 threads) at equal batch
+        assert_eq!(r.route(&key(), 4).unwrap().name, "bl_s2_b4_t32x4");
+        assert!(matches!(r.policy(), TilePolicy::PortableFallback));
+    }
+
+    #[test]
     fn unknown_key_errors() {
-        let r = Router::new(&manifest(), None);
+        let r = Router::new(&manifest(), TilePolicy::PortableFallback);
         let bad = RequestKey {
             kernel: Interpolator::Bicubic,
             src: (64, 64),
@@ -142,7 +260,7 @@ mod tests {
 
     #[test]
     fn max_batch() {
-        let r = Router::new(&manifest(), None);
+        let r = Router::new(&manifest(), TilePolicy::PortableFallback);
         assert_eq!(r.max_batch(&key()), 4);
         assert_eq!(r.keys().len(), 1);
     }

@@ -238,7 +238,7 @@ mod tests {
 
     fn start(backend: Arc<dyn ResizeBackend>) -> Coordinator {
         let m = manifest();
-        let router = Router::new(&m, None);
+        let router = Router::new(&m, super::super::TilePolicy::PortableFallback);
         Coordinator::start(&cfg(), router, backend)
     }
 
@@ -321,7 +321,7 @@ mod tests {
         // Slow backend + tiny queue: eventually Saturated.
         let slow = MockEngine::with_delay(Duration::from_millis(30));
         let m = manifest();
-        let router = Router::new(&m, None);
+        let router = Router::new(&m, super::super::TilePolicy::PortableFallback);
         let small = ServingConfig {
             workers: 1,
             batch_max: 1,

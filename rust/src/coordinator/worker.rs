@@ -107,6 +107,7 @@ pub fn run_batch(
 mod tests {
     use super::*;
     use crate::coordinator::request::{RequestKey, ResizeRequest, Ticket};
+    use crate::coordinator::TilePolicy;
     use crate::image::{generate, Interpolator};
     use crate::runtime::{Manifest, MockEngine};
     use std::path::PathBuf;
@@ -149,7 +150,7 @@ mod tests {
 
     #[test]
     fn executes_and_replies() {
-        let router = Router::new(&manifest(), None);
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
         let backend = MockEngine::new();
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(3);
@@ -165,7 +166,7 @@ mod tests {
 
     #[test]
     fn splits_oversize_groups() {
-        let router = Router::new(&manifest(), None);
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
         let backend = MockEngine::new();
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(10); // max artifact batch = 4
@@ -179,7 +180,7 @@ mod tests {
 
     #[test]
     fn backend_failure_propagates() {
-        let router = Router::new(&manifest(), None);
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
         let backend = MockEngine::failing_every(1); // every batch fails
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(2);
@@ -193,7 +194,7 @@ mod tests {
 
     #[test]
     fn unroutable_key_fails_cleanly() {
-        let router = Router::new(&manifest(), None);
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
         let backend = MockEngine::new();
         let stats = ServingStats::new();
         let img = generate::gradient(8, 8); // no 8x8 artifact

@@ -6,25 +6,53 @@
 //!
 //! The paper studies how CUDA thread-block **tiling dimensions** interact
 //! with the **compute capability** of different GPU models (GTX 260 vs
-//! GeForce 8800 GTS) for a bilinear image-interpolation kernel. This crate
-//! rebuilds the whole study as a three-layer system:
+//! GeForce 8800 GTS) for a bilinear image-interpolation kernel — and
+//! concludes that a tile tuned on one model "is not always a good
+//! solution when executed on other GPU models". This crate rebuilds the
+//! whole study as a three-layer system and turns that conclusion into a
+//! first-class, re-runnable operation:
 //!
-//! * **L3 (this crate)** — a compute-capability-aware GPU timing simulator
-//!   ([`sim`]), a CUDA-style occupancy calculator ([`tiling`]), a tiling
-//!   autotuner with portable (worst-case-GPU) selection ([`autotuner`]),
-//!   and an image-resize serving system ([`coordinator`]) that executes
+//! * **L3 (this crate)** — a compute-capability-aware GPU timing
+//!   simulator ([`sim`]), a CUDA-style occupancy calculator ([`tiling`]),
+//!   a **strategy-driven tuning API** ([`autotuner`]): pluggable
+//!   [`CostModel`](autotuner::CostModel)s, search strategies
+//!   (exhaustive / coordinate descent / persistent-cache decorator), a
+//!   [`TuningSession`](autotuner::TuningSession) builder producing
+//!   serializable [`TuningOutcome`](autotuner::TuningOutcome)s, and
+//!   portable (worst-case-GPU) selection — plus an image-resize serving
+//!   system ([`coordinator`]) whose router consumes those outcomes
+//!   through a [`TilePolicy`](coordinator::TilePolicy) and executes
 //!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
 //! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
 //! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels
 //!   whose `BlockSpec` output tile plays the role of the CUDA block shape.
 //!
+//! The tuning flow end to end:
+//!
+//! ```no_run
+//! use tilekit::autotuner::{CoordinateDescent, SimCostModel, TuningSession};
+//! use tilekit::coordinator::TilePolicy;
+//!
+//! let outcome = TuningSession::new(SimCostModel)
+//!     .scale(8)
+//!     .strategy(CoordinateDescent::default())
+//!     .run()?;
+//! // Route each serving device to its own tuned tile:
+//! let policy = TilePolicy::PerDevice(outcome);
+//! # let _ = policy;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
 //! The environment is fully offline, so foundational substrates that would
 //! normally come from crates.io are implemented in-tree: [`codec`] (JSON +
 //! TOML subset), [`cli`], [`exec`] (thread pool), [`bench`] (benchmark
-//! harness), and [`prop`] (property-based testing).
+//! harness), and [`prop`] (property-based testing). The `anyhow` and
+//! `xla` dependencies are vendored under `rust/vendor/`.
 //!
-//! Start with [`device::registry`] and [`sim::engine`], or run
-//! `tilekit sweep --fig3` to regenerate the paper's headline figure.
+//! Start with [`device::registry`] and [`autotuner`] (its module docs
+//! include a migration guide from the old `sweep`/`portable_tile` free
+//! functions), or run `tilekit tune` / `tilekit sweep --fig3` to
+//! regenerate the paper's headline results.
 
 pub mod autotuner;
 pub mod bench;

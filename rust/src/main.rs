@@ -3,23 +3,27 @@
 //! Subcommands:
 //!   devices      print the device registry (incl. the paper's Table I)
 //!   occupancy    occupancy calculator for a tile on one/all devices
-//!   sweep        Fig. 3 tile sweeps (simulator)
+//!   sweep        Fig. 3 tile sweeps (TuningSession, per-device tables)
 //!   simulate     single-launch simulation / Fig. 4 / §IV.C experiments
+//!   tune         strategy-driven tuning session (exhaustive / descent /
+//!                cached) with a persistent tuning cache
 //!   autotune     best-tile + portable (min-max regret) selection
 //!   resize       resize a PGM/PPM file through an AOT artifact
 //!   serve        run the serving demo workload and print stats
 //!   init-config  write an example tilekit.toml
 //!
-//! Run `tilekit help` for the full flag list.
+//! Run `tilekit help` for the full flag list, or `tilekit tune --help` /
+//! `tilekit sweep --help` for the tuning flags.
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::sync::Arc;
-use tilekit::autotuner::sweep as run_sweep;
+use tilekit::autotuner::{strategy_by_name, SearchStrategy, SimCostModel, TuningSession};
 use tilekit::bench::figures;
 use tilekit::cli::Args;
 use tilekit::config::Config;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -31,7 +35,7 @@ use tilekit::util::text::fmt_ms;
 const VALUE_FLAGS: &[&str] = &[
     "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
     "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
-    "output", "seed",
+    "output", "seed", "strategy", "cache",
 ];
 
 fn main() {
@@ -58,6 +62,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("occupancy") => cmd_occupancy(args, &cfg),
         Some("sweep") => cmd_sweep(args, &cfg),
         Some("simulate") => cmd_simulate(args, &cfg),
+        Some("tune") => cmd_tune(args, &cfg),
         Some("autotune") => cmd_autotune(args, &cfg),
         Some("resize") => cmd_resize(args, &cfg),
         Some("serve") => cmd_serve(args, &cfg),
@@ -84,14 +89,18 @@ COMMANDS
   devices [--table1]                    device registry / the paper's Table I
   occupancy --tile 32x16 [--device id]  occupancy calculator (all devices default)
   sweep [--fig3] [--device id] [--scale N] [--kernel k] [--csv]
-                                        tile sweep; --fig3 = all five insets
+        [--strategy s] [--cache f]      tile sweep; --fig3 = all five insets
+                                        (see 'tilekit sweep --help')
   simulate [--fig4|--extreme] [--device id --tile WxH --scale N]
                                         memory-model / straggler experiments
+  tune [--strategy s] [--cache f] [--scale N] [--devices a,b,c|all]
+       [--tiles t1,t2] [--out f.json]   tuning session: per-device best +
+                                        portable pick (see 'tilekit tune --help')
   autotune [--scale N] [--devices a,b,c]
                                         best & portable tile selection
   resize <in.pgm> <out.pgm> --scale N [--kernel bilinear] [--artifacts dir] [--mock]
                                         run a real resize through an AOT artifact
-  serve [--requests N] [--workers N] [--artifacts dir] [--mock]
+  serve [--requests N] [--workers N] [--artifacts dir] [--mock] [--tile WxH]
                                         serving demo: batched requests + stats
   artifacts [--artifacts dir] [--verify]
                                         list AOT artifacts with HLO stats;
@@ -162,10 +171,46 @@ fn cmd_occupancy(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+const SWEEP_HELP: &str = r#"tilekit sweep — tile sweep over one or more devices (Fig. 3)
+
+USAGE: tilekit sweep [flags]
+
+FLAGS
+  --fig3               print all five paper insets (scales 2/4/6/8/10)
+  --device id          sweep one device (default: config sweep.devices)
+  --scale N            upscaling factor (default 4)
+  --kernel k           nearest | bilinear | bicubic (default bilinear)
+  --csv                CSV instead of aligned tables
+  --strategy NAME      search strategy: exhaustive (default) | descent | cached
+                         exhaustive  evaluate every candidate tile
+                         descent     coordinate descent over the w x h lattice
+                                     (fewer evaluations, near-optimal best)
+                         cached      exhaustive behind the persistent cache
+  --cache FILE         persistent tuning database (JSON); any strategy wrapped
+                       in the cache decorator: hits cost zero evaluations
+
+Sweeps run through the TuningSession API; 'tilekit tune' additionally
+prints the portable (min-max regret) pick and can save the outcome.
+"#;
+
 fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("help") {
+        print!("{SWEEP_HELP}");
+        return Ok(());
+    }
     let kernel = parse_kernel(args)?;
     let src = cfg.sweep.src;
     if args.has("fig3") {
+        // Validate the flags even though the figure is always exhaustive:
+        // a typo'd --strategy must still fail loudly, and ignored flags
+        // must say so rather than pretend they took effect.
+        strategy_from_args(args)?;
+        if args.get("strategy").is_some() || args.get("cache").is_some() {
+            eprintln!(
+                "note: --fig3 regenerates the full figure exhaustively; \
+                 --strategy/--cache are ignored here"
+            );
+        }
         let (insets, summary) = figures::fig3_summary(kernel, src);
         for (scale, table) in &insets {
             println!(
@@ -196,17 +241,38 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         Some(id) => vec![id.to_string()],
         None => cfg.sweep.devices.clone(),
     };
-    for id in device_ids {
-        let d = cfg.device(&id)?;
-        let r = run_sweep::sweep(d, kernel, &tiles, scale, src);
-        println!("\n{} — {} scale {scale}:", d.name, kernel.label());
-        let mut t = tilekit::util::text::Table::new(vec!["tile", "ms", "occupancy", "rounds"]);
-        for p in &r.points {
+    let devices: Vec<DeviceDescriptor> = device_ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+    let outcome = TuningSession::new(SimCostModel)
+        .devices(devices.clone())
+        .kernel(kernel)
+        .scale(scale)
+        .src(src)
+        .tiles(tiles)
+        .strategy(strategy_from_args(args)?)
+        .run()?;
+    for dt in &outcome.per_device {
+        let d = devices
+            .iter()
+            .find(|d| d.id == dt.device_id)
+            .expect("outcome device came from the session's device set");
+        println!(
+            "\n{} — {} scale {scale} ('{}' strategy, {} evaluations):",
+            d.name,
+            kernel.label(),
+            outcome.strategy,
+            dt.evaluations
+        );
+        let res = KernelCost::of(kernel).resources;
+        let mut t = tilekit::util::text::Table::new(vec!["tile", "ms", "occupancy"]);
+        for p in &dt.points {
+            let o = occupancy(p.tile, &res, &d.cc);
             t.row(vec![
                 p.tile.label(),
-                fmt_ms(p.report.ms),
-                format!("{:.0}%", p.report.occupancy.ratio * 100.0),
-                p.report.rounds.to_string(),
+                fmt_ms(p.ms),
+                format!("{:.0}%", o.ratio * 100.0),
             ]);
         }
         if args.has("csv") {
@@ -214,9 +280,125 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         } else {
             print!("{}", t.render());
         }
-        if let Some(best) = r.best() {
-            println!("best: {} at {} ms", best.tile, fmt_ms(best.report.ms));
+        println!("best: {} at {} ms", dt.best, fmt_ms(dt.best_ms));
+    }
+    Ok(())
+}
+
+const TUNE_HELP: &str = r#"tilekit tune — strategy-driven tuning session with a persistent cache
+
+USAGE: tilekit tune [flags]
+
+FLAGS
+  --strategy NAME      search strategy: exhaustive (default) | descent | cached
+                         exhaustive  evaluate every candidate tile (ground truth)
+                         descent     coordinate descent over the w x h tile
+                                     lattice — near-optimal with far fewer
+                                     CostModel evaluations
+                         cached      exhaustive behind the persistent cache
+                                     (default file tuning_cache.json)
+  --cache FILE         persistent tuning database (JSON). Combines with any
+                       strategy: results are written through, and later runs
+                       with the same (device, kernel, scale, size) key cost
+                       zero evaluations.
+  --devices a,b,c|all  device ids to tune (default: config sweep.devices;
+                       'all' = every configured device)
+  --scale N            upscaling factor (default 8)
+  --kernel k           nearest | bilinear | bicubic (default bilinear)
+  --tiles t1,t2,...    explicit candidate tiles (default: the paper sweep set)
+  --out FILE           save the full TuningOutcome as JSON
+
+Prints each device's tuned best tile and the portable (min-max regret)
+pick across the device set — the paper's worst-case-GPU rule.
+"#;
+
+fn strategy_from_args(args: &Args) -> Result<Box<dyn SearchStrategy>> {
+    let name = args.get_or("strategy", "exhaustive");
+    let cache = args.get("cache").map(Path::new);
+    strategy_by_name(name, cache)
+}
+
+fn cmd_tune(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("help") {
+        print!("{TUNE_HELP}");
+        return Ok(());
+    }
+    let kernel = parse_kernel(args)?;
+    let scale: u32 = args.get_parsed_or("scale", 8)?;
+    let ids: Vec<String> = {
+        let list = args.get_list("devices");
+        if list.is_empty() {
+            cfg.sweep.devices.clone()
+        } else if list.len() == 1 && list[0] == "all" {
+            cfg.devices.iter().map(|d| d.id.clone()).collect()
+        } else {
+            list
         }
+    };
+    let devices: Vec<DeviceDescriptor> = ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+    let tiles: Vec<TileDim> = match args.get("tiles") {
+        Some(_) => args
+            .get_list("tiles")
+            .iter()
+            .map(|s| s.parse::<TileDim>().map_err(|e| anyhow!(e)))
+            .collect::<Result<_>>()?,
+        None if cfg.sweep.tiles.is_empty() => paper_sweep_tiles(),
+        None => cfg.sweep.tiles.clone(),
+    };
+    let outcome = TuningSession::new(SimCostModel)
+        .devices(devices)
+        .kernel(kernel)
+        .scale(scale)
+        .src(cfg.sweep.src)
+        .tiles(tiles)
+        .strategy(strategy_from_args(args)?)
+        .run()?;
+    println!(
+        "Tuning — {} at scale {scale} over {:?} via '{}' ({} evaluations):\n",
+        kernel.label(),
+        ids,
+        outcome.strategy,
+        outcome.evaluations
+    );
+    let mut t = tilekit::util::text::Table::new(vec![
+        "device",
+        "best tile",
+        "best ms",
+        "evaluations",
+        "portable regret",
+    ]);
+    for dt in &outcome.per_device {
+        let regret = outcome
+            .portable
+            .as_ref()
+            .and_then(|c| c.per_device.iter().find(|(d, _, _)| d == &dt.device_id))
+            .map(|(_, _, r)| format!("{r:.3}x"))
+            .unwrap_or_else(|| "-".to_string());
+        t.row(vec![
+            dt.device_id.clone(),
+            dt.best.label(),
+            fmt_ms(dt.best_ms),
+            dt.evaluations.to_string(),
+            regret,
+        ]);
+    }
+    print!("{}", t.render());
+    match &outcome.portable {
+        Some(c) => println!(
+            "\nportable tile (min-max regret): {} (worst-case {:.3}x)",
+            c.tile, c.worst_regret
+        ),
+        None => println!("\nno evaluated tile is launchable on every device"),
+    }
+    if let Some(path) = args.get("out") {
+        outcome.save(Path::new(path))?;
+        println!("wrote tuning outcome to {path}");
+    }
+    if let Some(cache) = args.get("cache") {
+        println!("tuning cache: {cache}");
     }
     Ok(())
 }
@@ -424,9 +606,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         serving.batch_max = b;
     }
     let (backend, manifest) = backend_from_args(args, cfg)?;
-    // None => largest-tile (CPU-optimal) variant preference; a GPU backend
-    // would pass the autotuner-chosen tile here (see EXPERIMENTS.md §Perf).
-    let router = Router::new(&manifest, None);
+    // PortableFallback => largest-tile (CPU-optimal) variant preference; a
+    // GPU deployment would pass TilePolicy::PerDevice with a tuning
+    // outcome, or pin one tile with --tile (see EXPERIMENTS.md §Perf).
+    let policy = match args.get("tile") {
+        Some(t) => TilePolicy::Fixed(t.parse().map_err(|e: String| anyhow!(e))?),
+        None => TilePolicy::PortableFallback,
+    };
+    let router = Router::new(&manifest, policy);
     let keys = router.keys();
     if keys.is_empty() {
         bail!("manifest has no artifacts");

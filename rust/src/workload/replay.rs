@@ -145,7 +145,7 @@ pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
 mod tests {
     use super::*;
     use crate::config::ServingConfig;
-    use crate::coordinator::{RequestKey, Router};
+    use crate::coordinator::{RequestKey, Router, TilePolicy};
     use crate::runtime::{Manifest, MockEngine};
     use crate::workload::trace::Arrival;
     use std::sync::Arc;
@@ -162,7 +162,7 @@ mod tests {
             std::path::PathBuf::from("."),
         )
         .unwrap();
-        let router = Router::new(&manifest, None);
+        let router = Router::new(&manifest, TilePolicy::PortableFallback);
         let keys = router.keys();
         let backend: Arc<dyn crate::runtime::ResizeBackend> = if delay_ms > 0 {
             Arc::new(MockEngine::with_delay(Duration::from_millis(delay_ms)))

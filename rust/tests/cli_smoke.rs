@@ -98,6 +98,94 @@ fn autotune_portable_is_32x4() {
 }
 
 #[test]
+fn tune_help_lists_strategies_and_cache_flags() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["tune", "--help"]);
+    assert!(ok);
+    for needle in ["--strategy", "exhaustive", "descent", "cached", "--cache", "--out"] {
+        assert!(out.contains(needle), "tune --help missing '{needle}':\n{out}");
+    }
+}
+
+#[test]
+fn sweep_help_lists_strategies_and_cache_flags() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["sweep", "--help"]);
+    assert!(ok);
+    for needle in ["--strategy", "exhaustive", "descent", "cached", "--cache"] {
+        assert!(out.contains(needle), "sweep --help missing '{needle}':\n{out}");
+    }
+}
+
+#[test]
+fn tune_unknown_strategy_is_a_friendly_error() {
+    if binary().is_none() {
+        return;
+    }
+    let (_, err, ok) = run(&["tune", "--strategy", "annealing"]);
+    assert!(!ok);
+    assert!(err.contains("unknown strategy 'annealing'"), "{err}");
+    for valid in ["exhaustive", "descent", "cached"] {
+        assert!(err.contains(valid), "error must name '{valid}': {err}");
+    }
+}
+
+#[test]
+fn tune_exhaustive_portable_is_32x4() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, err, ok) = run(&["tune", "--scale", "8"]);
+    assert!(ok, "stderr: {err}");
+    assert!(
+        out.contains("portable tile (min-max regret): 32x4"),
+        "{out}"
+    );
+    assert!(out.contains("gtx260") && out.contains("8800gts"), "{out}");
+}
+
+#[test]
+fn tune_descent_with_cache_round_trips() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_tune_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cache = dir.join("cache.json");
+    std::fs::remove_file(&cache).ok();
+    let args = [
+        "tune",
+        "--strategy",
+        "descent",
+        "--scale",
+        "8",
+        "--cache",
+        cache.to_str().unwrap(),
+    ];
+    let (out, err, ok) = run(&args);
+    assert!(ok, "stderr: {err}");
+    assert!(
+        out.contains("portable tile (min-max regret): 32x4"),
+        "{out}"
+    );
+    let written = std::fs::read_to_string(&cache).expect("cache file written");
+    assert!(written.contains("gtx260") && written.contains("8800gts"));
+    // second run is served from the cache: zero evaluations
+    let (out2, err2, ok2) = run(&args);
+    assert!(ok2, "stderr: {err2}");
+    assert!(out2.contains("(0 evaluations)"), "{out2}");
+    assert!(
+        out2.contains("portable tile (min-max regret): 32x4"),
+        "{out2}"
+    );
+    std::fs::remove_file(&cache).ok();
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     if binary().is_none() {
         return;

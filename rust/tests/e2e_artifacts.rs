@@ -9,7 +9,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
 use tilekit::image::{generate, Image, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Engine, Manifest, ResizeBackend};
@@ -113,7 +113,7 @@ fn tile_variants_agree_numerically() {
 #[test]
 fn coordinator_serves_real_artifacts_end_to_end() {
     let Some(m) = manifest() else { return };
-    let router = Router::new(&m, Some("32x4".parse().unwrap()));
+    let router = Router::new(&m, TilePolicy::Fixed("32x4".parse().unwrap()));
     let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m));
     let cfg = ServingConfig {
         workers: 2,

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use tilekit::codec::json::Json;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router};
+use tilekit::coordinator::{Coordinator, Router, TilePolicy};
 use tilekit::device::{builtin_devices, ComputeCapability};
 use tilekit::image::{generate, Interpolator};
 use tilekit::prop::{forall, prop_assert, prop_close};
@@ -190,6 +190,58 @@ fn prop_interpolators_preserve_affine_and_bounds() {
 }
 
 #[test]
+fn prop_tuning_outcome_json_round_trip() {
+    // TuningOutcome → JSON text → TuningOutcome is lossless for any
+    // finite tuning data (f64 times survive exactly: the JSON writer
+    // emits shortest round-trippable representations).
+    use tilekit::autotuner::{portable_over, DeviceTuning, TunedPoint, TuningOutcome};
+
+    forall("tuning outcome round trip", 200, |g| {
+        let n_dev = g.usize(1, 4);
+        let n_tiles = g.usize(1, 8);
+        let tiles: Vec<TileDim> = (0..n_tiles)
+            .map(|_| TileDim::new(g.pow2(0, 6), g.pow2(0, 6)))
+            .collect();
+        let mut per_device = Vec::new();
+        for d in 0..n_dev {
+            let points: Vec<TunedPoint> = tiles
+                .iter()
+                .map(|&tile| TunedPoint {
+                    tile,
+                    ms: g.f64(1e-3, 500.0),
+                })
+                .collect();
+            let dt = DeviceTuning::from_points(format!("dev{d}"), points, g.u32(1, 200) as u64)
+                .expect("finite points always yield a best");
+            per_device.push(dt);
+        }
+        let kernel = *g.choose(&[
+            Interpolator::Nearest,
+            Interpolator::Bilinear,
+            Interpolator::Bicubic,
+        ]);
+        let portable = portable_over(&per_device);
+        let outcome = TuningOutcome {
+            kernel,
+            scale: g.u32(1, 16),
+            src: (g.u32(1, 2048), g.u32(1, 2048)),
+            strategy: g
+                .choose(&["exhaustive", "descent", "cached+exhaustive", "cached+descent"])
+                .to_string(),
+            evaluations: g.u32(0, 50_000) as u64,
+            per_device,
+            portable,
+        };
+        for text in [outcome.to_json().to_string(), outcome.to_json().pretty()] {
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = TuningOutcome::from_json(&parsed).map_err(|e| e.to_string())?;
+            prop_assert(back == outcome, format!("round trip differs via {text}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_coordinator_conserves_requests() {
     // Every admitted request is answered exactly once (completed or
     // failed), across random load patterns and failure injection.
@@ -218,7 +270,7 @@ fn prop_coordinator_conserves_requests() {
             queue_cap: 128,
             artifacts_dir: ".".into(),
         };
-        let router = Router::new(&manifest, None);
+        let router = Router::new(&manifest, TilePolicy::PortableFallback);
         let backend = Arc::new(MockEngine::failing_every(fail_every));
         let co = Coordinator::start(&cfg, router, backend);
         let n = g.usize(1, 60);

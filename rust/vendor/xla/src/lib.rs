@@ -1,0 +1,149 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the native XLA runtime, which is not present in
+//! this build environment. This stub provides the exact API surface
+//! `tilekit::runtime::executor` compiles against; every operation that
+//! would need the native runtime returns a descriptive error instead.
+//!
+//! All call sites are already defensive: the AOT tests, benches, and
+//! examples check for `artifacts/manifest.json` first and skip loudly
+//! when artifacts are absent, and the serving CLI offers `--mock`. The
+//! in-tree [`MockEngine`](../../src/runtime/mock.rs) covers the
+//! coordinator tests. Swapping this stub for the real bindings is a
+//! one-line change in the workspace manifest.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Error type returned by every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: the native XLA/PJRT runtime is not available in this offline \
+         build (vendored stub); use --mock or the MockEngine backend"
+    )))
+}
+
+/// A host-side literal (stub).
+pub struct Literal {
+    _p: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice (stub: shape is not retained).
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal { _p: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    /// Read the literal out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// A device buffer handle (stub).
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable (stub). `!Send` like the real binding.
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over a set of input literals.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A PJRT client (stub). `!Send` like the real binding, which is why the
+/// engine layer keeps one client per worker thread.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    /// Create the CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto {
+    _p: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _p: (),
+}
+
+impl XlaComputation {
+    /// Wrap a module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _p: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_descriptive() {
+        let err = PjRtClient::cpu().err().expect("stub must error");
+        assert!(err.to_string().contains("not available"));
+        assert!(Literal::vec1(&[0f32]).reshape(&[1]).is_err());
+    }
+}
