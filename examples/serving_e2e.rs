@@ -9,9 +9,11 @@
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{
+    BlockWithTimeout, Priority, Request, ServiceBuilder, TilePolicy,
+};
 use tilekit::image::{generate, Image};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, ResizeBackend};
@@ -39,11 +41,16 @@ fn main() -> anyhow::Result<()> {
         batch_deadline_ms: 1.5,
         queue_cap: 256,
         artifacts_dir: "artifacts".into(),
+        ..ServingConfig::default()
     };
-    let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
-    let keys = router.keys();
     let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(manifest.clone()));
-    let co = Coordinator::start(&cfg, router, backend);
+    // Single-backend deployment: largest-tile (CPU-optimal) variants
+    // (EXPERIMENTS.md §Perf); closed loop, so block on backpressure.
+    let svc = ServiceBuilder::new(&cfg, &manifest)
+        .backend(backend, TilePolicy::PortableFallback)
+        .admission(BlockWithTimeout(Duration::from_secs(60)))
+        .build()?;
+    let keys = svc.keys();
 
     // Warmup: each worker thread compiles artifacts on first use (the
     // PJRT client is thread-local); warm every shape through every
@@ -53,7 +60,8 @@ fn main() -> anyhow::Result<()> {
         .flat_map(|_| {
             keys.iter().map(|key| {
                 let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, 0);
-                co.submit_blocking(key.kernel, img, key.scale).expect("warm")
+                svc.submit(Request::new(key.kernel, img, key.scale))
+                    .expect("warm")
             })
         })
         .collect();
@@ -61,15 +69,21 @@ fn main() -> anyhow::Result<()> {
         t.wait()?;
     }
 
-    co.stats().reset();
+    svc.reset_stats();
 
-    // Mixed workload: random artifact shapes, deterministic images.
+    // Mixed workload: random artifact shapes, deterministic images, a
+    // quarter of the traffic batch-class for the QoS histograms.
     let mut rng = Pcg32::seeded(2010);
     let workload: Vec<_> = (0..n_requests)
-        .map(|_| {
+        .map(|i| {
             let key = *rng.pick(&keys);
             let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, rng.next_u64());
-            (key, img)
+            let priority = if i % 4 == 3 {
+                Priority::Batch
+            } else {
+                Priority::Interactive
+            };
+            (key, img, priority)
         })
         .collect();
 
@@ -83,12 +97,14 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     let tickets: Vec<_> = workload
         .iter()
-        .map(|(key, img)| {
+        .map(|(key, img, priority)| {
             (
                 *key,
                 img.clone(),
-                co.submit_blocking(key.kernel, img.clone(), key.scale)
-                    .expect("admitted"),
+                svc.submit(
+                    Request::new(key.kernel, img.clone(), key.scale).priority(*priority),
+                )
+                .expect("admitted"),
             )
         })
         .collect();
@@ -105,7 +121,7 @@ fn main() -> anyhow::Result<()> {
         verified += 1;
     }
     let wall = t0.elapsed();
-    let stats = co.shutdown();
+    let stats = svc.shutdown();
 
     println!("\nall {verified} responses verified against the CPU reference (max|err| {max_err:.2e})\n");
     let mut t = Table::new(vec!["metric", "value"]);
@@ -140,5 +156,6 @@ fn main() -> anyhow::Result<()> {
     ]);
     print!("{}", t.render());
     println!("\n{}", stats.summary());
+    println!("\nper-priority latency:\n{}", stats.class_summary());
     Ok(())
 }

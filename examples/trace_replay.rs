@@ -10,7 +10,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{RejectWhenFull, Request, ServiceBuilder, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -67,27 +67,33 @@ fn main() -> anyhow::Result<()> {
                 batch_deadline_ms: 1.0,
                 queue_cap: 64,
                 artifacts_dir: "artifacts".into(),
+                ..ServingConfig::default()
             };
-            let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
-            let keys = router.keys();
-            let co = Coordinator::start(&cfg, router, make_backend());
+            // Open-loop driver: backpressure must be recorded, not
+            // absorbed, so admission is strictly non-blocking (largest-
+            // tile variants per EXPERIMENTS.md §Perf).
+            let svc = ServiceBuilder::new(&cfg, &manifest)
+                .backend(make_backend(), TilePolicy::PortableFallback)
+                .admission(RejectWhenFull)
+                .build()?;
+            let keys = svc.keys();
             // warm every worker/shape outside the measured replay
             let warm: Vec<_> = (0..2 * cfg.workers)
                 .flat_map(|_| {
                     keys.iter().map(|k| {
                         let img =
                             generate::test_scene(k.src.1 as usize, k.src.0 as usize, 0);
-                        co.submit_blocking(k.kernel, img, k.scale).unwrap()
+                        svc.submit(Request::new(k.kernel, img, k.scale)).unwrap()
                     })
                 })
                 .collect();
             for t in warm {
                 t.wait()?;
             }
-            co.stats().reset();
+            svc.reset_stats();
 
             let trace = Trace::generate(&keys, n, arrival, 42);
-            let out = replay(&co, &trace);
+            let out = replay(&svc, &trace);
             table.row(vec![
                 name.to_string(),
                 format!("{rate:.0}"),
@@ -97,7 +103,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.0}", out.latency.percentile_us(99.0)),
                 format!("{:.0}", out.achieved_rps()),
             ]);
-            co.shutdown();
+            svc.shutdown();
         }
     }
     println!("\nopen-loop latency vs offered load ({n} requests per cell):\n");

@@ -11,9 +11,9 @@
 
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -63,10 +63,16 @@ fn main() {
             batch_deadline_ms: 1.0,
             queue_cap: 512,
             artifacts_dir: "artifacts".into(),
+            ..ServingConfig::default()
         };
-        let router = Router::new(&manifest, TilePolicy::PortableFallback); // largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf)
-        let keys = router.keys();
-        let co = Coordinator::start(&cfg, router, Arc::clone(&backend));
+        // Largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf);
+        // closed loop, so block on backpressure instead of rejecting.
+        let svc = ServiceBuilder::new(&cfg, &manifest)
+            .backend(Arc::clone(&backend), TilePolicy::PortableFallback)
+            .admission(BlockWithTimeout(Duration::from_secs(60)))
+            .build()
+            .expect("service starts");
+        let keys = svc.keys();
         // Warmup outside the timed region: every worker thread compiles
         // its artifacts on first use (the PJRT client is thread-local);
         // drive enough requests through each shape to warm all workers.
@@ -77,7 +83,7 @@ fn main() {
                     (0..batch_max).map(|_| {
                         let img =
                             generate::test_scene(key.src.1 as usize, key.src.0 as usize, 0);
-                        co.submit_blocking(key.kernel, img, key.scale).unwrap()
+                        svc.submit(Request::new(key.kernel, img, key.scale)).unwrap()
                     })
                 })
                 .collect();
@@ -85,7 +91,7 @@ fn main() {
                 t.wait().unwrap();
             }
         }
-        co.stats().reset();
+        svc.reset_stats();
         let mut rng = Pcg32::seeded(7);
         // Pre-generate request images outside the timed region.
         let reqs: Vec<_> = (0..n_requests)
@@ -100,7 +106,7 @@ fn main() {
         let tickets: Vec<_> = reqs
             .into_iter()
             .map(|(key, img)| {
-                co.submit_blocking(key.kernel, img, key.scale)
+                svc.submit(Request::new(key.kernel, img, key.scale))
                     .expect("admitted")
             })
             .collect();
@@ -108,7 +114,7 @@ fn main() {
             t.wait().expect("completed");
         }
         let wall = t0.elapsed();
-        let stats = co.shutdown();
+        let stats = svc.shutdown();
         table.row(vec![
             batch_max.to_string(),
             workers.to_string(),

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench sim_hotpath`.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 use tilekit::bench::Bench;
 use tilekit::coordinator::batcher::BatcherState;
 use tilekit::coordinator::request::{RequestKey, ResizeRequest, Ticket};
@@ -64,13 +64,7 @@ fn main() {
         let mut state = BatcherState::new(8, Duration::from_millis(1));
         for i in 0..8u64 {
             let (_t, tx) = Ticket::new(i);
-            let out = state.push(ResizeRequest {
-                id: i,
-                key,
-                image: img.clone(),
-                admitted: Instant::now(),
-                reply: tx,
-            });
+            let out = state.push(ResizeRequest::bare(i, key, img.clone(), tx));
             if out.is_some() {
                 return 1usize;
             }

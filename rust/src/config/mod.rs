@@ -38,19 +38,32 @@ impl Default for SweepConfig {
     }
 }
 
-/// Serving parameters (`[serving]`).
+/// Serving parameters (`[serving]`). Per-device settings apply to every
+/// fleet member; `devices` names the fleet (empty = one anonymous
+/// single-backend member).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
-    /// Worker threads executing artifacts.
+    /// Worker threads executing artifacts (per device member).
     pub workers: usize,
     /// Max requests folded into one batch.
     pub batch_max: usize,
     /// Batching deadline: a partial batch is flushed after this long.
     pub batch_deadline_ms: f64,
-    /// Bounded queue capacity (backpressure beyond this).
+    /// Bounded queue capacity per member (backpressure beyond this).
     pub queue_cap: usize,
     /// Artifacts directory.
     pub artifacts_dir: String,
+    /// Serving fleet device ids (registry/config ids). Empty = serve a
+    /// single anonymous backend.
+    pub devices: Vec<String>,
+    /// Scheduler picking the device per request: `round-robin`,
+    /// `least-loaded`, or `cost-eta`.
+    pub scheduler: String,
+    /// Admission policy when a member's queue is full: `reject`,
+    /// `block`, or `shed-batch`.
+    pub admission: String,
+    /// Wait budget (ms) for the blocking admission policies.
+    pub admission_timeout_ms: f64,
 }
 
 impl Default for ServingConfig {
@@ -61,7 +74,47 @@ impl Default for ServingConfig {
             batch_deadline_ms: 2.0,
             queue_cap: 256,
             artifacts_dir: "artifacts".into(),
+            devices: Vec::new(),
+            scheduler: "round-robin".into(),
+            admission: "reject".into(),
+            admission_timeout_ms: 5000.0,
         }
+    }
+}
+
+impl ServingConfig {
+    /// Field-level validation, called from config load and again at
+    /// `Service` startup (builders can be fed hand-made configs).
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("serving.workers must be >= 1 (got 0)");
+        }
+        if self.batch_max == 0 {
+            bail!("serving.batch_max must be >= 1 (got 0)");
+        }
+        if self.queue_cap == 0 {
+            bail!("serving.queue_cap must be >= 1 (got 0)");
+        }
+        if self.batch_deadline_ms.is_nan() || self.batch_deadline_ms < 0.0 {
+            bail!(
+                "serving.batch_deadline_ms must be >= 0 (got {})",
+                self.batch_deadline_ms
+            );
+        }
+        if self.admission_timeout_ms.is_nan() || self.admission_timeout_ms < 0.0 {
+            bail!(
+                "serving.admission_timeout_ms must be >= 0 (got {})",
+                self.admission_timeout_ms
+            );
+        }
+        if self.queue_cap < self.batch_max {
+            bail!(
+                "serving.queue_cap ({}) must be >= serving.batch_max ({})",
+                self.queue_cap,
+                self.batch_max
+            );
+        }
+        Ok(())
     }
 }
 
@@ -145,6 +198,26 @@ impl Config {
                     .ok_or_else(|| anyhow!("serving.artifacts_dir must be a string"))?
                     .to_string();
             }
+            if let Some(v) = t.get("devices") {
+                cfg.serving.devices = str_list(v).context("serving.devices")?;
+            }
+            if let Some(v) = t.get("scheduler") {
+                cfg.serving.scheduler = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("serving.scheduler must be a string"))?
+                    .to_string();
+            }
+            if let Some(v) = t.get("admission") {
+                cfg.serving.admission = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("serving.admission must be a string"))?
+                    .to_string();
+            }
+            if let Some(v) = t.get("admission_timeout_ms") {
+                cfg.serving.admission_timeout_ms = v
+                    .as_float()
+                    .ok_or_else(|| anyhow!("serving.admission_timeout_ms must be a number"))?;
+            }
         }
 
         if let Some(devs) = doc.arrays.get("device") {
@@ -179,12 +252,19 @@ impl Config {
                 bail!("sweep.devices references unknown device '{id}'");
             }
         }
-        if self.serving.workers == 0 || self.serving.batch_max == 0 {
-            bail!("serving.workers and serving.batch_max must be >= 1");
+        for id in &self.serving.devices {
+            if !self.devices.iter().any(|d| &d.id == id) {
+                bail!("serving.devices references unknown device '{id}'");
+            }
         }
-        if self.serving.queue_cap < self.serving.batch_max {
-            bail!("serving.queue_cap must be >= serving.batch_max");
-        }
+        self.serving.validate()?;
+        // Fail at load time on a name no scheduler/policy will accept,
+        // not at service startup.
+        crate::coordinator::scheduler_by_name(&self.serving.scheduler)?;
+        crate::coordinator::admission_by_name(
+            &self.serving.admission,
+            std::time::Duration::from_secs_f64(self.serving.admission_timeout_ms / 1e3),
+        )?;
         Ok(())
     }
 
@@ -250,11 +330,15 @@ kernel = "bilinear"
 # tiles = ["32x4", "16x8"]  # empty = full power-of-two sweep
 
 [serving]
-workers = 2
+workers = 2                # per device member
 batch_max = 8
 batch_deadline_ms = 2.0
 queue_cap = 256
 artifacts_dir = "artifacts"
+# devices = ["gtx260", "fermi"]  # fleet members; empty = one anonymous backend
+scheduler = "round-robin"  # round-robin | least-loaded | cost-eta
+admission = "reject"       # reject | block | shed-batch
+admission_timeout_ms = 5000.0
 
 # Custom GPUs (merged over the registry by id):
 # [[device]]
@@ -335,6 +419,76 @@ global_mem_mib = 64
             Config::from_toml_str("[serving]\nqueue_cap = 2\nbatch_max = 10\n").is_err()
         );
         assert!(Config::from_toml_str("[sweep]\nkernel = \"sinc\"\n").is_err());
+        assert!(Config::from_toml_str("[serving]\ndevices = [\"ghost\"]\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nscheduler = \"fifo\"\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nadmission = \"yolo\"\n").is_err());
+    }
+
+    #[test]
+    fn serving_validate_friendly_errors() {
+        let base = ServingConfig::default();
+        let cases: Vec<(ServingConfig, &str)> = vec![
+            (
+                ServingConfig {
+                    workers: 0,
+                    ..base.clone()
+                },
+                "serving.workers",
+            ),
+            (
+                ServingConfig {
+                    batch_max: 0,
+                    ..base.clone()
+                },
+                "serving.batch_max",
+            ),
+            (
+                ServingConfig {
+                    queue_cap: 0,
+                    ..base.clone()
+                },
+                "serving.queue_cap",
+            ),
+            (
+                ServingConfig {
+                    batch_deadline_ms: -1.0,
+                    ..base.clone()
+                },
+                "serving.batch_deadline_ms",
+            ),
+            (
+                ServingConfig {
+                    batch_deadline_ms: f64::NAN,
+                    ..base.clone()
+                },
+                "serving.batch_deadline_ms",
+            ),
+            (
+                ServingConfig {
+                    admission_timeout_ms: -5.0,
+                    ..base.clone()
+                },
+                "serving.admission_timeout_ms",
+            ),
+        ];
+        for (cfg, needle) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "'{err}' should name {needle}");
+        }
+        base.validate().unwrap();
+    }
+
+    #[test]
+    fn serving_fleet_fields_parse() {
+        let cfg = Config::from_toml_str(
+            "[serving]\ndevices = [\"gtx260\", \"fermi\"]\nscheduler = \"cost-eta\"\n\
+             admission = \"shed-batch\"\nadmission_timeout_ms = 250.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serving.devices, vec!["gtx260", "fermi"]);
+        assert_eq!(cfg.serving.scheduler, "cost-eta");
+        assert_eq!(cfg.serving.admission, "shed-batch");
+        assert_eq!(cfg.serving.admission_timeout_ms, 250.0);
     }
 
     #[test]

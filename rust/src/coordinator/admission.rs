@@ -1,0 +1,277 @@
+//! Admission control: what happens when a request meets a full queue.
+//!
+//! The old coordinator hardcoded two behaviors — `submit` (try_send,
+//! fail on full) and `submit_blocking` (a 200µs sleep/retry loop). The
+//! [`AdmissionPolicy`] trait replaces both with a pluggable decision,
+//! and the sleep loop is gone: [`BlockWithTimeout`] parks on the
+//! channel's `not_full` condvar via
+//! [`Sender::send_timeout`](crate::exec::Sender::send_timeout).
+
+use super::request::{Priority, ResizeRequest};
+use super::server::SubmitError;
+use crate::exec::{SendTimeoutError, Sender, TrySendError};
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+
+/// Decides whether (and how long) a request may wait for queue space on
+/// the member the scheduler picked.
+pub trait AdmissionPolicy: Send + Sync {
+    /// Try to enqueue `req` on `tx`. On error the request is dropped
+    /// (its ticket will observe the submit error instead).
+    fn admit(&self, tx: &Sender<ResizeRequest>, req: ResizeRequest) -> Result<(), SubmitError>;
+
+    /// Label for reports and `tilekit serve` output.
+    fn name(&self) -> &'static str;
+}
+
+/// Non-blocking admission: a full queue fails fast with
+/// [`SubmitError::Saturated`] (the open-loop replay driver's contract —
+/// backpressure must be *recorded*, never absorbed).
+#[derive(Debug, Default)]
+pub struct RejectWhenFull;
+
+impl AdmissionPolicy for RejectWhenFull {
+    fn admit(&self, tx: &Sender<ResizeRequest>, req: ResizeRequest) -> Result<(), SubmitError> {
+        match tx.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Saturated),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "reject"
+    }
+}
+
+/// Blocking admission: wait for queue space up to the timeout, then
+/// report [`SubmitError::Saturated`]. This is the closed-loop driver's
+/// policy (the old `submit_blocking`, minus the busy-wait). The wait is
+/// additionally capped by the request's own latency budget — blocking a
+/// caller past its deadline would only hand back a doomed ticket, so an
+/// exhausted budget reports [`SubmitError::DeadlineExceeded`] instead.
+#[derive(Debug)]
+pub struct BlockWithTimeout(pub Duration);
+
+impl Default for BlockWithTimeout {
+    fn default() -> Self {
+        BlockWithTimeout(Duration::from_secs(5))
+    }
+}
+
+impl AdmissionPolicy for BlockWithTimeout {
+    fn admit(&self, tx: &Sender<ResizeRequest>, req: ResizeRequest) -> Result<(), SubmitError> {
+        let timeout = match req.deadline {
+            Some(d) => {
+                let budget = d.saturating_duration_since(Instant::now());
+                if budget.is_zero() {
+                    return Err(SubmitError::DeadlineExceeded);
+                }
+                self.0.min(budget)
+            }
+            None => self.0,
+        };
+        match tx.send_timeout(req, timeout) {
+            Ok(()) => Ok(()),
+            Err(SendTimeoutError::Timeout(r)) => {
+                // Which limit did we hit: the policy's, or the request's?
+                if r.is_expired(Instant::now()) {
+                    Err(SubmitError::DeadlineExceeded)
+                } else {
+                    Err(SubmitError::Saturated)
+                }
+            }
+            Err(SendTimeoutError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "block"
+    }
+}
+
+/// QoS-aware admission: under pressure, `Batch`-class requests are
+/// rejected immediately (shed first) while `Interactive` requests may
+/// still wait up to the timeout for space.
+#[derive(Debug)]
+pub struct ShedBatchFirst(pub Duration);
+
+impl Default for ShedBatchFirst {
+    fn default() -> Self {
+        ShedBatchFirst(Duration::from_secs(5))
+    }
+}
+
+impl AdmissionPolicy for ShedBatchFirst {
+    fn admit(&self, tx: &Sender<ResizeRequest>, req: ResizeRequest) -> Result<(), SubmitError> {
+        match req.priority {
+            Priority::Batch => RejectWhenFull.admit(tx, req),
+            Priority::Interactive => BlockWithTimeout(self.0).admit(tx, req),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "shed-batch"
+    }
+}
+
+/// Resolve an admission policy by CLI/config name. `timeout` feeds the
+/// blocking variants.
+pub fn admission_by_name(name: &str, timeout: Duration) -> Result<Box<dyn AdmissionPolicy>> {
+    match name {
+        "reject" | "reject-when-full" => Ok(Box::new(RejectWhenFull)),
+        "block" | "block-with-timeout" => Ok(Box::new(BlockWithTimeout(timeout))),
+        "shed-batch" | "shed-batch-first" => Ok(Box::new(ShedBatchFirst(timeout))),
+        other => bail!(
+            "unknown admission policy '{other}' (expected one of: reject, block, shed-batch)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, RequestKey, Ticket};
+    use crate::exec::bounded;
+    use crate::image::{generate, Interpolator};
+    use std::time::Instant;
+
+    fn req(priority: Priority) -> ResizeRequest {
+        let img = generate::gradient(16, 16);
+        let (_t, tx) = Ticket::new(0);
+        let mut r = ResizeRequest::bare(
+            0,
+            RequestKey::of(Interpolator::Bilinear, &img, 2),
+            img,
+            tx,
+        );
+        r.priority = priority;
+        r
+    }
+
+    #[test]
+    fn reject_when_full_fails_fast() {
+        let (tx, _rx) = bounded(1);
+        assert!(RejectWhenFull.admit(&tx, req(Priority::Interactive)).is_ok());
+        let t0 = Instant::now();
+        assert_eq!(
+            RejectWhenFull.admit(&tx, req(Priority::Interactive)),
+            Err(SubmitError::Saturated)
+        );
+        assert!(t0.elapsed() < Duration::from_millis(50), "must not block");
+    }
+
+    #[test]
+    fn block_with_timeout_waits_for_space() {
+        let (tx, rx) = bounded(1);
+        tx.send(req(Priority::Interactive)).unwrap();
+        let policy = BlockWithTimeout(Duration::from_secs(2));
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            rx.recv().ok();
+            rx // keep the receiver alive until the admit resolves
+        });
+        let t0 = Instant::now();
+        assert!(policy.admit(&tx, req(Priority::Interactive)).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(20), "waited for space");
+        drop(drainer.join().unwrap());
+    }
+
+    #[test]
+    fn block_with_timeout_saturates_eventually() {
+        let (tx, _rx) = bounded(1);
+        tx.send(req(Priority::Interactive)).unwrap();
+        let policy = BlockWithTimeout(Duration::from_millis(20));
+        assert_eq!(
+            policy.admit(&tx, req(Priority::Interactive)),
+            Err(SubmitError::Saturated)
+        );
+    }
+
+    #[test]
+    fn shed_batch_first_rejects_batch_but_blocks_interactive() {
+        let (tx, rx) = bounded(1);
+        tx.send(req(Priority::Interactive)).unwrap();
+        let policy = ShedBatchFirst(Duration::from_secs(2));
+        // batch traffic sheds immediately under pressure
+        let t0 = Instant::now();
+        assert_eq!(
+            policy.admit(&tx, req(Priority::Batch)),
+            Err(SubmitError::Saturated)
+        );
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        // interactive traffic waits for the drain
+        let drainer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            rx.recv().ok();
+            rx
+        });
+        assert!(policy.admit(&tx, req(Priority::Interactive)).is_ok());
+        drop(drainer.join().unwrap());
+    }
+
+    #[test]
+    fn blocking_wait_is_capped_by_the_request_deadline() {
+        let (tx, _rx) = bounded(1);
+        tx.send(req(Priority::Interactive)).unwrap();
+        // Policy allows 5s, but the request only has ~20ms of budget:
+        // admission must give up at the budget, not the policy timeout,
+        // and name the deadline as the reason.
+        let mut doomed = req(Priority::Interactive);
+        doomed.deadline = Some(Instant::now() + Duration::from_millis(20));
+        let policy = BlockWithTimeout(Duration::from_secs(5));
+        let t0 = Instant::now();
+        assert_eq!(
+            policy.admit(&tx, doomed),
+            Err(SubmitError::DeadlineExceeded)
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "must not block past the request budget"
+        );
+        // an already-expired budget fails without waiting at all
+        let mut dead = req(Priority::Batch);
+        dead.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let policy = ShedBatchFirst(Duration::from_secs(5));
+        let t0 = Instant::now();
+        assert!(policy.admit(&tx, dead).is_err());
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn disconnected_reports_shutdown() {
+        let (tx, rx) = bounded(1);
+        drop(rx);
+        assert_eq!(
+            RejectWhenFull.admit(&tx, req(Priority::Interactive)),
+            Err(SubmitError::ShuttingDown)
+        );
+        assert_eq!(
+            BlockWithTimeout(Duration::from_millis(5)).admit(&tx, req(Priority::Batch)),
+            Err(SubmitError::ShuttingDown)
+        );
+    }
+
+    #[test]
+    fn by_name_resolves_and_rejects() {
+        let t = Duration::from_millis(10);
+        for (name, want) in [("reject", "reject"), ("block", "block"), ("shed-batch", "shed-batch")]
+        {
+            assert_eq!(admission_by_name(name, t).unwrap().name(), want);
+        }
+        let err = admission_by_name("drop-everything", t).unwrap_err().to_string();
+        assert!(err.contains("unknown admission policy"), "{err}");
+        assert!(err.contains("shed-batch"), "must name alternatives: {err}");
+    }
+
+    #[test]
+    fn request_builder_feeds_policy_priority() {
+        // Request -> ResizeRequest priority propagation is exercised at
+        // the service layer; here just pin the builder default.
+        let img = generate::gradient(8, 8);
+        assert_eq!(
+            Request::new(Interpolator::Bilinear, img, 2).priority,
+            Priority::Interactive
+        );
+    }
+}

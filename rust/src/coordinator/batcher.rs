@@ -17,6 +17,15 @@ pub struct Batch {
     pub requests: Vec<ResizeRequest>,
 }
 
+/// Why [`BatcherState::sweep`] removed a pending request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The caller's ticket cancelled it before batch pickup.
+    Cancelled,
+    /// Its latency budget expired before execution.
+    DeadlineExceeded,
+}
+
 /// Pure batching state machine.
 pub struct BatcherState {
     batch_max: usize,
@@ -69,6 +78,34 @@ impl BatcherState {
             .collect()
     }
 
+    /// Remove pending requests that are cancelled or past their
+    /// deadline, returning them with the reason. The batcher thread
+    /// calls this every poll so a cancelled or expired request never
+    /// reaches a worker; the server replies to each with the matching
+    /// error.
+    pub fn sweep(&mut self, now: Instant) -> Vec<(ResizeRequest, Shed)> {
+        let mut shed = Vec::new();
+        for reqs in self.pending.values_mut() {
+            let mut i = 0;
+            while i < reqs.len() {
+                let cancelled = reqs[i].is_cancelled();
+                let expired = reqs[i].is_expired(now);
+                if cancelled || expired {
+                    let reason = if cancelled {
+                        Shed::Cancelled
+                    } else {
+                        Shed::DeadlineExceeded
+                    };
+                    shed.push((reqs.remove(i), reason));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.pending.retain(|_, reqs| !reqs.is_empty());
+        shed
+    }
+
     /// Flush everything (shutdown).
     pub fn flush_all(&mut self) -> Vec<Batch> {
         self.pending
@@ -105,13 +142,12 @@ mod tests {
     fn req(scale: u32) -> ResizeRequest {
         let img = generate::gradient(16, 16);
         let (_t, tx) = Ticket::new(0);
-        ResizeRequest {
-            id: 0,
-            key: RequestKey::of(Interpolator::Bilinear, &img, scale),
-            image: img,
-            admitted: Instant::now(),
-            reply: tx,
-        }
+        ResizeRequest::bare(
+            0,
+            RequestKey::of(Interpolator::Bilinear, &img, scale),
+            img,
+            tx,
+        )
     }
 
     #[test]
@@ -156,6 +192,27 @@ mod tests {
         assert!(d <= Duration::from_millis(100));
         let far = Instant::now() + Duration::from_secs(1);
         assert_eq!(b.next_deadline(far).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sweep_removes_cancelled_and_expired() {
+        let mut b = BatcherState::new(100, Duration::from_secs(10));
+        let cancelled = req(2);
+        let token = cancelled.cancel.clone();
+        b.push(cancelled);
+        let mut expiring = req(2);
+        expiring.deadline = Some(Instant::now() + Duration::from_millis(1));
+        b.push(expiring);
+        b.push(req(4)); // healthy
+        assert!(b.sweep(Instant::now()).is_empty(), "nothing shed yet");
+        token.cancel();
+        let later = Instant::now() + Duration::from_millis(50);
+        let mut shed = b.sweep(later);
+        shed.sort_by_key(|(_, r)| *r == Shed::DeadlineExceeded);
+        assert_eq!(shed.len(), 2);
+        assert_eq!(shed[0].1, Shed::Cancelled);
+        assert_eq!(shed[1].1, Shed::DeadlineExceeded);
+        assert_eq!(b.pending_len(), 1, "healthy request survives the sweep");
     }
 
     #[test]

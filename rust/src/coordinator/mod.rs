@@ -1,41 +1,74 @@
-//! The serving coordinator (L3): an image-resize service in the style of
-//! an inference router — bounded admission queue with backpressure, a
-//! dynamic batcher (size + deadline), a worker pool executing AOT PJRT
-//! artifacts, per-request latency accounting, and graceful shutdown.
+//! The serving layer (L3): a **fleet-aware** image-resize service in the
+//! style of an inference router. A [`Service`] owns N device members —
+//! each with its own tuned-tile router, bounded admission queue, dynamic
+//! batcher (size + deadline), and worker pool — and schedules every
+//! typed [`Request`] onto one of them.
 //!
 //! Data flow:
 //!
 //! ```text
-//! submit() ──► admission queue (bounded) ──► batcher thread
-//!                                              │ groups by (kernel, src, scale),
-//!                                              │ flushes at batch_max or deadline
-//!                                              ▼
-//!                                        batch channel ──► worker pool ──► PJRT
-//!                                                              │
-//! Ticket::wait() ◄── per-request reply channel ◄───────────────┘
+//! submit(Request{kernel,image,scale,priority,deadline})
+//!    │
+//!    ▼
+//! Scheduler (round-robin | least-loaded | cost-eta) picks a device member
+//!    │
+//!    ▼
+//! AdmissionPolicy (reject | block | shed-batch) ──► member admission queue
+//!                                                        │
+//!            ┌───────────────────────────────────────────┤  (one per device)
+//!            ▼                                           ▼
+//!     member "gtx260"                             member "fermi"
+//!     batcher ── sheds cancelled/expired,         batcher ── …
+//!       │        groups by (kernel,src,scale),      │
+//!       │        flushes at batch_max or deadline   │
+//!       ▼                                           ▼
+//!     batch channel ──► worker pool ──► backend   batch channel ──► …
+//!       routed via the DEVICE'S OWN tuned tile (TilePolicy::PerDevice)
+//!            │
+//! Ticket::wait()/try_wait()/cancel() ◄── per-request reply channel
 //! ```
 //!
-//! The paper's tiling result enters through the router: artifact variants
-//! are keyed by Pallas tile, and [`router::Router`] resolves which
-//! variant to prefer through a [`router::TilePolicy`]:
+//! The paper's tiling result enters through each member's router:
+//! artifact variants are keyed by Pallas tile, and [`router::Router`]
+//! resolves which variant a device prefers through a
+//! [`router::TilePolicy`]:
 //!
 //! * `TilePolicy::Fixed(tile)` — pin one tile (benchmark overrides);
-//! * `TilePolicy::PerDevice(outcome)` — route each serving device to its
+//! * `TilePolicy::PerDevice(outcome)` — route each fleet member to its
 //!   own tuned tile from a [`crate::autotuner::TuningOutcome`], falling
 //!   back to the outcome's portable (min-max regret) pick for devices
-//!   the tuner has not seen — re-tune, rebuild the router, done;
+//!   the tuner has not seen — re-tune, rebuild the service, done. This
+//!   is how "an optimized tiling strategy on one GPU model is not always
+//!   a good solution ... on other GPU models" becomes an operational
+//!   knob: a heterogeneous fleet with per-device tiles beats any single
+//!   fixed tile on aggregate sim cost (see `examples/fleet_serving.rs`);
 //! * `TilePolicy::PortableFallback` — no tuned preference; the
 //!   backend-optimal variant order (largest Pallas tile first on the
 //!   CPU PJRT backend).
+//!
+//! QoS: requests carry a [`Priority`] class (`Interactive` / `Batch`)
+//! and an optional deadline. Expired requests are shed *before* they
+//! reach a worker (`SubmitError::DeadlineExceeded` at submit when the
+//! budget is already zero); [`Ticket::cancel`] sheds a queued request
+//! before batch pickup. Per-class latency histograms live in
+//! [`ServingStats`].
 
+pub mod admission;
 pub mod batcher;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod stats;
 pub mod worker;
 
-pub use request::{RequestKey, ResizeRequest, Ticket};
+pub use admission::{
+    admission_by_name, AdmissionPolicy, BlockWithTimeout, RejectWhenFull, ShedBatchFirst,
+};
+pub use request::{CancelToken, Priority, Request, RequestKey, ResizeRequest, Ticket};
 pub use router::{Router, TilePolicy};
-pub use server::{Coordinator, SubmitError};
+pub use scheduler::{
+    scheduler_by_name, CostMeter, CostModelEta, DeviceSnapshot, LeastLoaded, RoundRobin, Scheduler,
+};
+pub use server::{MemberView, Service, ServiceBuilder, SubmitError};
 pub use stats::ServingStats;

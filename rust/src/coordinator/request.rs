@@ -1,9 +1,46 @@
-//! Request/response types for the resize service.
+//! Request/response types for the resize service: the typed [`Request`]
+//! builder callers submit, the internal [`ResizeRequest`] that rides the
+//! pipeline, and the caller's [`Ticket`] handle (waitable, pollable,
+//! cancellable).
 
 use crate::image::{Image, Interpolator};
 use anyhow::Result;
-use std::sync::mpsc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// QoS class of a request. `Interactive` requests are the latency-
+/// sensitive traffic; `Batch` requests are throughput work the admission
+/// layer may shed first under pressure (see
+/// [`ShedBatchFirst`](super::admission::ShedBatchFirst)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-sensitive; admitted preferentially.
+    Interactive,
+    /// Throughput work; first to be shed under overload.
+    Batch,
+}
+
+impl Priority {
+    /// Both classes, in index order.
+    pub const ALL: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+
+    /// Dense index used by per-class stats arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Label used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
 
 /// The batching key: requests sharing it can ride the same artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -24,15 +61,121 @@ impl RequestKey {
     }
 }
 
-/// An in-flight resize request.
+/// A typed resize request: what to do, how urgent it is, and how long it
+/// is worth doing. Build one with [`Request::new`] and submit it through
+/// [`Service::submit`](super::Service::submit).
+///
+/// ```no_run
+/// # use tilekit::coordinator::{Priority, Request};
+/// # use tilekit::image::{generate, Interpolator};
+/// let req = Request::new(Interpolator::Bilinear, generate::gradient(64, 64), 2)
+///     .priority(Priority::Batch)
+///     .deadline(std::time::Duration::from_millis(50));
+/// ```
+pub struct Request {
+    pub kernel: Interpolator,
+    pub image: Image<f32>,
+    pub scale: u32,
+    pub priority: Priority,
+    /// Latency budget from submission; `None` = no deadline. A request
+    /// whose budget expires before a worker picks it up is shed with a
+    /// deadline error instead of occupying an executor.
+    pub deadline: Option<Duration>,
+}
+
+impl Request {
+    /// A request with default QoS (`Interactive`, no deadline).
+    pub fn new(kernel: Interpolator, image: Image<f32>, scale: u32) -> Request {
+        Request {
+            kernel,
+            image,
+            scale,
+            priority: Priority::Interactive,
+            deadline: None,
+        }
+    }
+
+    /// Set the QoS class.
+    pub fn priority(mut self, p: Priority) -> Request {
+        self.priority = p;
+        self
+    }
+
+    /// Set the latency budget. `Duration::ZERO` fails fast at submit
+    /// with [`SubmitError::DeadlineExceeded`](super::SubmitError).
+    pub fn deadline(mut self, budget: Duration) -> Request {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// The batching/routing key of this request.
+    pub fn key(&self) -> RequestKey {
+        RequestKey::of(self.kernel, &self.image, self.scale)
+    }
+}
+
+/// Shared cancellation flag between a [`Ticket`] and its in-flight
+/// [`ResizeRequest`]. Cancellation is cooperative: the batcher and the
+/// worker check it before (not during) execution.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// An in-flight resize request (pipeline-internal).
 pub struct ResizeRequest {
     pub id: u64,
     pub key: RequestKey,
     pub image: Image<f32>,
+    pub priority: Priority,
+    /// Absolute expiry instant, if the caller set a budget.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation flag shared with the caller's ticket.
+    pub cancel: CancelToken,
     /// Admission timestamp (queue latency accounting).
     pub admitted: Instant,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Image<f32>>>,
+}
+
+impl ResizeRequest {
+    /// Build a bare request for direct pipeline driving (tests, benches):
+    /// interactive, no deadline, fresh cancel token.
+    pub fn bare(
+        id: u64,
+        key: RequestKey,
+        image: Image<f32>,
+        reply: mpsc::Sender<Result<Image<f32>>>,
+    ) -> ResizeRequest {
+        ResizeRequest {
+            id,
+            key,
+            image,
+            priority: Priority::Interactive,
+            deadline: None,
+            cancel: CancelToken::default(),
+            admitted: Instant::now(),
+            reply,
+        }
+    }
+
+    /// Has this request been cancelled by its ticket?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Has the latency budget expired as of `now`?
+    pub fn is_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// The caller's handle to a pending request.
@@ -40,14 +183,55 @@ pub struct ResizeRequest {
 pub struct Ticket {
     pub id: u64,
     rx: mpsc::Receiver<Result<Image<f32>>>,
+    cancel: CancelToken,
+    /// Shared with the service's member label — no per-submit String
+    /// allocation on the hot path.
+    device: Option<Arc<str>>,
 }
 
 impl Ticket {
     /// Create a ticket + its reply sender. Public so external harnesses
     /// (benches, property tests) can drive `worker::run_batch` directly.
     pub fn new(id: u64) -> (Ticket, mpsc::Sender<Result<Image<f32>>>) {
+        Self::for_device(id, CancelToken::default(), None)
+    }
+
+    /// Create a ticket bound to a cancel token and (optionally) the
+    /// serving device the scheduler picked.
+    pub fn for_device(
+        id: u64,
+        cancel: CancelToken,
+        device: Option<Arc<str>>,
+    ) -> (Ticket, mpsc::Sender<Result<Image<f32>>>) {
         let (tx, rx) = mpsc::channel();
-        (Ticket { id, rx }, tx)
+        (
+            Ticket {
+                id,
+                rx,
+                cancel,
+                device,
+            },
+            tx,
+        )
+    }
+
+    /// The device this request was scheduled onto (`None` for tickets
+    /// built outside a [`Service`](super::Service)).
+    pub fn device_id(&self) -> Option<&str> {
+        self.device.as_deref()
+    }
+
+    /// The cancellation token this ticket controls (the service clones
+    /// it into the in-flight request).
+    pub(crate) fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Request cancellation. Cooperative: a request already executing
+    /// runs to completion; one still queued is shed before it reaches a
+    /// worker and its `wait` returns a cancellation error.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
     }
 
     /// Block until the response arrives.
@@ -55,20 +239,25 @@ impl Ticket {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(anyhow::anyhow!(
-                "request {} dropped: coordinator shut down",
+                "request {} dropped: service shut down",
                 self.id
             )),
         }
     }
 
+    /// Non-blocking poll; `Ok(None)` while still pending.
+    pub fn try_wait(&self) -> Result<Option<Image<f32>>> {
+        self.wait_timeout(Duration::ZERO)
+    }
+
     /// Wait with a timeout; `Ok(None)` on timeout.
-    pub fn wait_timeout(&self, d: std::time::Duration) -> Result<Option<Image<f32>>> {
+    pub fn wait_timeout(&self, d: Duration) -> Result<Option<Image<f32>>> {
         match self.rx.recv_timeout(d) {
             Ok(Ok(img)) => Ok(Some(img)),
             Ok(Err(e)) => Err(e),
             Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
             Err(mpsc::RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!(
-                "request {} dropped: coordinator shut down",
+                "request {} dropped: service shut down",
                 self.id
             )),
         }
@@ -89,6 +278,30 @@ mod tests {
     }
 
     #[test]
+    fn request_builder_defaults_and_overrides() {
+        let img = generate::gradient(16, 16);
+        let r = Request::new(Interpolator::Bilinear, img.clone(), 2);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert!(r.deadline.is_none());
+        assert_eq!(r.key(), RequestKey::of(Interpolator::Bilinear, &img, 2));
+        let r = r
+            .priority(Priority::Batch)
+            .deadline(Duration::from_millis(5));
+        assert_eq!(r.priority, Priority::Batch);
+        assert_eq!(r.deadline, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn priority_indices_dense() {
+        assert_eq!(Priority::ALL.len(), 2);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::Interactive.label(), "interactive");
+        assert_eq!(Priority::Batch.label(), "batch");
+    }
+
+    #[test]
     fn ticket_round_trip() {
         let (ticket, tx) = Ticket::new(7);
         tx.send(Ok(generate::gradient(4, 4))).unwrap();
@@ -105,11 +318,52 @@ mod tests {
     }
 
     #[test]
-    fn ticket_timeout() {
-        let (ticket, _tx) = Ticket::new(1);
+    fn ticket_timeout_and_try_wait() {
+        let (ticket, tx) = Ticket::new(1);
         let r = ticket
             .wait_timeout(std::time::Duration::from_millis(10))
             .unwrap();
         assert!(r.is_none());
+        assert!(ticket.try_wait().unwrap().is_none());
+        tx.send(Ok(generate::gradient(4, 4))).unwrap();
+        assert!(ticket.try_wait().unwrap().is_some());
+    }
+
+    #[test]
+    fn cancel_token_reaches_request() {
+        let token = CancelToken::default();
+        let (ticket, tx) = Ticket::for_device(3, token.clone(), Some("gtx260".into()));
+        assert_eq!(ticket.device_id(), Some("gtx260"));
+        let img = generate::gradient(8, 8);
+        let req = ResizeRequest {
+            id: 3,
+            key: RequestKey::of(Interpolator::Bilinear, &img, 2),
+            image: img,
+            priority: Priority::Interactive,
+            deadline: None,
+            cancel: token,
+            admitted: Instant::now(),
+            reply: tx,
+        };
+        assert!(!req.is_cancelled());
+        ticket.cancel();
+        assert!(req.is_cancelled());
+    }
+
+    #[test]
+    fn expiry_is_deadline_relative() {
+        let img = generate::gradient(8, 8);
+        let (_t, tx) = Ticket::new(0);
+        let mut req = ResizeRequest::bare(
+            0,
+            RequestKey::of(Interpolator::Bilinear, &img, 2),
+            img,
+            tx,
+        );
+        let now = Instant::now();
+        assert!(!req.is_expired(now), "no deadline never expires");
+        req.deadline = Some(now + Duration::from_millis(10));
+        assert!(!req.is_expired(now));
+        assert!(req.is_expired(now + Duration::from_millis(11)));
     }
 }

@@ -46,6 +46,8 @@ pub struct Router {
     /// Resolved preferred Pallas tile (e.g. the autotuner's portable
     /// 32×4, or a device's tuned best under `TilePolicy::PerDevice`).
     pub tile_pref: Option<TileDim>,
+    /// The device this router was resolved for (`None` = no identity).
+    device_id: Option<String>,
     /// The policy this router was built from.
     policy: TilePolicy,
     /// Precomputed key → candidate entries (sorted by preference).
@@ -83,6 +85,7 @@ impl Router {
         }
         Router {
             tile_pref,
+            device_id: device_id.map(str::to_string),
             policy,
             table,
         }
@@ -91,6 +94,11 @@ impl Router {
     /// The policy this router was built from.
     pub fn policy(&self) -> &TilePolicy {
         &self.policy
+    }
+
+    /// The device identity this router resolved its tile for.
+    pub fn device_id(&self) -> Option<&str> {
+        self.device_id.as_deref()
     }
 
     /// Keys this router can serve.
@@ -227,6 +235,7 @@ mod tests {
         let policy = TilePolicy::PerDevice(outcome.clone());
         let ra = Router::for_device(&manifest(), policy.clone(), Some("gtx260"));
         assert_eq!(ra.tile_pref, Some(TileDim::new(32, 4)));
+        assert_eq!(ra.device_id(), Some("gtx260"));
         assert_eq!(ra.route(&key(), 4).unwrap().name, "bl_s2_b4_t32x4");
         let rb = Router::for_device(&manifest(), policy.clone(), Some("8800gts"));
         assert_eq!(rb.tile_pref, Some(TileDim::new(8, 8)));

@@ -1,0 +1,287 @@
+//! Device scheduling: which fleet member serves the next request.
+//!
+//! The [`Service`](super::Service) snapshots every member's state into a
+//! [`DeviceSnapshot`] slice and asks the configured [`Scheduler`] to pick
+//! one. Members that cannot route the request's key (`supports == false`)
+//! must never be picked — every implementation filters on it, and the
+//! service double-checks before admitting.
+//!
+//! Three built-ins cover the obvious operating points:
+//!
+//! * [`RoundRobin`] — fair rotation; the baseline.
+//! * [`LeastLoaded`] — pick the member with the fewest unanswered
+//!   requests (queue + in-flight).
+//! * [`CostModelEta`] — pick the member with the smallest estimated
+//!   completion time `(load + 1) × cost_ms`, where `cost_ms` is the
+//!   [`CostModel`](crate::autotuner::CostModel) (by default the timing
+//!   simulator) estimate of serving this key on that device *through the
+//!   tile its router prefers* — so a device whose tuned tile is fast for
+//!   this shape attracts proportionally more traffic.
+
+use super::request::RequestKey;
+use crate::autotuner::CostModel;
+use crate::device::DeviceDescriptor;
+use crate::runtime::ArtifactEntry;
+use crate::sim::Launch;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One fleet member's state at scheduling time.
+#[derive(Debug, Clone)]
+pub struct DeviceSnapshot<'a> {
+    /// Index into the service's member list.
+    pub index: usize,
+    /// Device id (or a synthetic label for anonymous members).
+    pub device_id: &'a str,
+    /// Can this member's router serve the request key?
+    pub supports: bool,
+    /// Requests admitted to this member and not yet answered — this
+    /// already includes everything still sitting in its admission
+    /// queue, so it IS the member's total backlog.
+    pub inflight: u64,
+    /// Cost-model estimate (ms) of one request of this key on this
+    /// member's preferred tile variant; `None` when no estimate exists.
+    pub cost_ms: Option<f64>,
+}
+
+impl DeviceSnapshot<'_> {
+    /// Total unanswered load on this member.
+    pub fn load(&self) -> u64 {
+        self.inflight
+    }
+}
+
+/// Picks the serving device for one request.
+pub trait Scheduler: Send + Sync {
+    /// Return the `index` of a member with `supports == true`, or `None`
+    /// when no member can serve the key.
+    fn pick(&self, key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize>;
+
+    /// Label for reports and `tilekit serve` output.
+    fn name(&self) -> &'static str;
+}
+
+/// Fair rotation over supporting members.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl Scheduler for RoundRobin {
+    fn pick(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize> {
+        if fleet.is_empty() {
+            return None;
+        }
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        (0..fleet.len())
+            .map(|i| &fleet[(start + i) % fleet.len()])
+            .find(|s| s.supports)
+            .map(|s| s.index)
+    }
+
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+}
+
+/// Pick the supporting member with the least unanswered load (ties break
+/// toward the lower index, keeping the choice deterministic).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl Scheduler for LeastLoaded {
+    fn pick(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize> {
+        fleet
+            .iter()
+            .filter(|s| s.supports)
+            .min_by_key(|s| (s.load(), s.index))
+            .map(|s| s.index)
+    }
+
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+}
+
+/// Pick the member with the smallest estimated completion time
+/// `(load + 1) × cost_ms`. Members without a cost estimate rank last
+/// (but are still eligible — a fleet mixing simulated and opaque
+/// backends degrades to least-loaded among the opaque ones).
+#[derive(Debug, Default)]
+pub struct CostModelEta;
+
+impl Scheduler for CostModelEta {
+    fn pick(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize> {
+        fleet
+            .iter()
+            .filter(|s| s.supports)
+            .min_by(|a, b| {
+                let eta = |s: &DeviceSnapshot| {
+                    s.cost_ms
+                        .map(|c| (s.load() as f64 + 1.0) * c)
+                        .unwrap_or(f64::INFINITY)
+                };
+                eta(a)
+                    .total_cmp(&eta(b))
+                    .then_with(|| a.load().cmp(&b.load()))
+                    .then_with(|| a.index.cmp(&b.index))
+            })
+            .map(|s| s.index)
+    }
+
+    fn name(&self) -> &'static str {
+        "cost-eta"
+    }
+}
+
+/// Resolve a scheduler by CLI/config name.
+pub fn scheduler_by_name(name: &str) -> Result<Box<dyn Scheduler>> {
+    match name {
+        "round-robin" | "rr" => Ok(Box::new(RoundRobin::default())),
+        "least-loaded" | "ll" => Ok(Box::new(LeastLoaded)),
+        "cost-eta" | "eta" => Ok(Box::new(CostModelEta)),
+        other => bail!(
+            "unknown scheduler '{other}' (expected one of: round-robin, least-loaded, cost-eta)"
+        ),
+    }
+}
+
+/// Per-device cost oracle: estimates (via a [`CostModel`], by default the
+/// timing simulator) how long one request takes through a given artifact
+/// variant on this device. The service uses it to build the
+/// [`CostModelEta`] estimate table; workers use it to meter the
+/// aggregate sim cost a simulated fleet accumulates.
+pub struct CostMeter {
+    device: DeviceDescriptor,
+    model: Arc<dyn CostModel + Send + Sync>,
+}
+
+impl CostMeter {
+    pub fn new(device: DeviceDescriptor, model: Arc<dyn CostModel + Send + Sync>) -> CostMeter {
+        CostMeter { device, model }
+    }
+
+    /// The device this meter prices for.
+    pub fn device(&self) -> &DeviceDescriptor {
+        &self.device
+    }
+
+    /// Estimated time (ms) of ONE request through `entry` on this
+    /// device: the sim cost of the entry's tile at the entry's shape.
+    pub fn ms_of(&self, entry: &ArtifactEntry) -> f64 {
+        let launch = Launch {
+            kernel: entry.kernel,
+            tile: entry.tile,
+            // ArtifactEntry.src is (h, w); Launch wants w/h.
+            src_w: entry.src.1,
+            src_h: entry.src.0,
+            scale: entry.scale,
+        };
+        self.model.evaluate(&launch, &self.device).ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::SimCostModel;
+    use crate::device::find_device;
+    use crate::image::Interpolator;
+    use crate::tiling::TileDim;
+
+    fn key() -> RequestKey {
+        RequestKey {
+            kernel: Interpolator::Bilinear,
+            src: (64, 64),
+            scale: 2,
+        }
+    }
+
+    fn snap(index: usize, supports: bool, inflight: u64, cost_ms: Option<f64>) -> DeviceSnapshot<'static> {
+        DeviceSnapshot {
+            index,
+            device_id: "d",
+            supports,
+            inflight,
+            cost_ms,
+        }
+    }
+
+    #[test]
+    fn round_robin_rotates_over_supporting() {
+        let rr = RoundRobin::default();
+        let fleet = [snap(0, true, 0, None), snap(1, false, 0, None), snap(2, true, 0, None)];
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(&key(), &fleet).unwrap()).collect();
+        // starts rotate 0,1,2,3; member 1 never serves, the scan lands on
+        // the next supporting member each time
+        assert_eq!(picks, vec![0, 2, 2, 0], "skips the unsupporting member");
+        assert!(picks.iter().all(|&i| i != 1));
+        assert!(rr.pick(&key(), &[snap(0, false, 0, None)]).is_none());
+        assert!(rr.pick(&key(), &[]).is_none());
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let ll = LeastLoaded;
+        let fleet = [snap(0, true, 5, None), snap(1, true, 2, None), snap(2, false, 0, None)];
+        assert_eq!(ll.pick(&key(), &fleet), Some(1));
+        // ties break toward the lower index, deterministically
+        let fleet = [snap(0, true, 3, None), snap(1, true, 3, None)];
+        assert_eq!(ll.pick(&key(), &fleet), Some(0));
+    }
+
+    #[test]
+    fn cost_eta_weighs_load_by_device_speed() {
+        let eta = CostModelEta;
+        // device 0 is 3x slower per request; with equal load the faster
+        // device wins...
+        let fleet = [snap(0, true, 0, Some(3.0)), snap(1, true, 0, Some(1.0))];
+        assert_eq!(eta.pick(&key(), &fleet), Some(1));
+        // ...until its backlog makes the slow device the earlier finisher.
+        let fleet = [snap(0, true, 0, Some(3.0)), snap(1, true, 5, Some(1.0))];
+        assert_eq!(eta.pick(&key(), &fleet), Some(0));
+        // members without estimates lose to members with them
+        let fleet = [snap(0, true, 0, None), snap(1, true, 9, Some(1.0))];
+        assert_eq!(eta.pick(&key(), &fleet), Some(1));
+        // but are still eligible when nothing has an estimate
+        let fleet = [snap(0, true, 4, None), snap(1, true, 2, None)];
+        assert_eq!(eta.pick(&key(), &fleet), Some(1));
+    }
+
+    #[test]
+    fn by_name_resolves_and_rejects() {
+        for (name, want) in [
+            ("round-robin", "round-robin"),
+            ("least-loaded", "least-loaded"),
+            ("cost-eta", "cost-eta"),
+            ("eta", "cost-eta"),
+        ] {
+            assert_eq!(scheduler_by_name(name).unwrap().name(), want);
+        }
+        let err = scheduler_by_name("random").unwrap_err().to_string();
+        assert!(err.contains("unknown scheduler 'random'"), "{err}");
+        assert!(err.contains("least-loaded"), "must name alternatives: {err}");
+    }
+
+    #[test]
+    fn cost_meter_prices_tiles_differently_per_device() {
+        let entry = |tile: TileDim| ArtifactEntry {
+            name: format!("t{tile}"),
+            kernel: Interpolator::Bilinear,
+            src: (64, 64),
+            scale: 2,
+            batch: 1,
+            tile,
+            path: "x".into(),
+        };
+        let gtx = CostMeter::new(find_device("gtx260").unwrap(), Arc::new(SimCostModel));
+        let fermi = CostMeter::new(find_device("fermi").unwrap(), Arc::new(SimCostModel));
+        let wide = entry(TileDim::new(16, 8));
+        let tall = entry(TileDim::new(32, 16));
+        // The cross-device flip the fleet acceptance test relies on:
+        // gtx260 prefers 16x8, fermi prefers 32x16 at this shape.
+        assert!(gtx.ms_of(&wide) < gtx.ms_of(&tall));
+        assert!(fermi.ms_of(&tall) < fermi.ms_of(&wide));
+    }
+}

@@ -1,27 +1,76 @@
-//! The coordinator façade: wires the admission queue, batcher thread,
-//! and worker pool together; owns graceful shutdown.
+//! The service façade: a fleet of device members — each with its own
+//! router (tuned tile), admission queue, batcher thread, and worker
+//! pool — behind one typed submit path. A [`Scheduler`] picks the member
+//! per request; an [`AdmissionPolicy`] decides what a full queue means.
+//!
+//! Build one with [`ServiceBuilder`]:
+//!
+//! ```no_run
+//! # use std::sync::Arc;
+//! # use tilekit::config::ServingConfig;
+//! # use tilekit::coordinator::{LeastLoaded, Request, ServiceBuilder, TilePolicy};
+//! # use tilekit::device::find_device;
+//! # use tilekit::image::{generate, Interpolator};
+//! # use tilekit::runtime::{Manifest, MockEngine};
+//! # let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+//! # let outcome = tilekit::autotuner::TuningSession::sim().run()?;
+//! let svc = ServiceBuilder::new(&ServingConfig::default(), &manifest)
+//!     .device(
+//!         find_device("gtx260").unwrap(),
+//!         Arc::new(MockEngine::new()),
+//!         TilePolicy::PerDevice(outcome.clone()),
+//!     )
+//!     .device(
+//!         find_device("fermi").unwrap(),
+//!         Arc::new(MockEngine::new()),
+//!         TilePolicy::PerDevice(outcome),
+//!     )
+//!     .scheduler(LeastLoaded)
+//!     .build()?;
+//! let ticket = svc.submit(Request::new(
+//!     Interpolator::Bilinear,
+//!     generate::gradient(64, 64),
+//!     2,
+//! ))?;
+//! let _img = ticket.wait()?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
-use super::batcher::{Batch, BatcherState};
-use super::request::{RequestKey, ResizeRequest, Ticket};
-use super::router::Router;
+use super::admission::{admission_by_name, AdmissionPolicy};
+use super::batcher::{Batch, BatcherState, Shed};
+use super::request::{Request, RequestKey, ResizeRequest, Ticket};
+use super::router::{Router, TilePolicy};
+use super::scheduler::{scheduler_by_name, CostMeter, DeviceSnapshot, Scheduler};
 use super::stats::{IdGen, ServingStats};
 use super::worker::spawn_workers;
+use crate::autotuner::{CostModel, SimCostModel};
 use crate::config::ServingConfig;
-use crate::exec::{bounded, Sender, TrySendError};
-use crate::image::{Image, Interpolator};
-use crate::runtime::ResizeBackend;
+use crate::device::DeviceDescriptor;
+use crate::exec::{bounded, Sender};
+use crate::runtime::{Manifest, ResizeBackend};
+use crate::tiling::TileDim;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+/// Cap on the batcher's poll interval while requests are pending, so
+/// cancellations and expired deadlines are shed promptly even when the
+/// batch deadline is long.
+const SHED_POLL: Duration = Duration::from_millis(5);
+
 /// Why a submission was not admitted.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// Admission queue full — retry later (backpressure).
+    /// Admission queue full (or the admission timeout elapsed) — retry
+    /// later (backpressure).
     Saturated,
-    /// No artifact can serve this (kernel, size, scale).
+    /// No member's artifact set can serve this (kernel, size, scale).
     Unsupported,
-    /// Coordinator is shutting down.
+    /// The request's latency budget is already spent.
+    DeadlineExceeded,
+    /// Service is shutting down.
     ShuttingDown,
 }
 
@@ -29,175 +78,504 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Saturated => write!(f, "admission queue saturated"),
-            SubmitError::Unsupported => write!(f, "no artifact serves this request shape"),
-            SubmitError::ShuttingDown => write!(f, "coordinator shutting down"),
+            SubmitError::Unsupported => write!(f, "no device serves this request shape"),
+            SubmitError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            SubmitError::ShuttingDown => write!(f, "service shutting down"),
         }
     }
 }
 impl std::error::Error for SubmitError {}
 
-/// The running serving system.
-pub struct Coordinator {
-    admit_tx: Option<Sender<ResizeRequest>>,
+/// One registered fleet member before startup.
+struct MemberSpec {
+    device: Option<DeviceDescriptor>,
+    backend: Arc<dyn ResizeBackend>,
+    policy: TilePolicy,
+    manifest: Option<Manifest>,
+}
+
+/// A running fleet member: its own router, admission queue, batcher, and
+/// worker pool.
+struct Member {
+    /// Shared with every ticket scheduled onto this member.
+    label: Arc<str>,
+    device: Option<DeviceDescriptor>,
     router: Arc<Router>,
     stats: Arc<ServingStats>,
-    ids: IdGen,
+    /// Cost-model estimate (ms/request) per supported key, for the
+    /// scheduler's ETA computation. Empty for anonymous members.
+    cost: HashMap<RequestKey, f64>,
+    admit_tx: Option<Sender<ResizeRequest>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
-impl Coordinator {
-    /// Start the pipeline: 1 batcher thread + `cfg.workers` executor
-    /// threads over `backend`.
-    pub fn start(
-        cfg: &ServingConfig,
-        router: Router,
-        backend: Arc<dyn ResizeBackend>,
-    ) -> Coordinator {
-        let stats = Arc::new(ServingStats::new());
-        let router = Arc::new(router);
-        let (admit_tx, admit_rx) = bounded::<ResizeRequest>(cfg.queue_cap);
-        let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_cap.max(4));
+/// Read-only view of one member for reporting (`tilekit serve`'s
+/// per-device breakdown, tests).
+pub struct MemberView<'a> {
+    /// Device id, or a synthetic `devN` label for anonymous members.
+    pub label: &'a str,
+    /// The device descriptor, when the member has an identity.
+    pub device: Option<&'a DeviceDescriptor>,
+    /// The tile this member's router prefers.
+    pub tile_pref: Option<TileDim>,
+    /// This member's serving stats.
+    pub stats: &'a Arc<ServingStats>,
+    /// This member's routing table.
+    pub router: &'a Router,
+}
 
-        // Batcher thread: drain admissions, group, flush on size/deadline.
-        let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
-        let batch_max = cfg.batch_max;
-        let batcher = {
-            std::thread::Builder::new()
-                .name("tilekit-batcher".into())
-                .spawn(move || {
-                    let mut state = BatcherState::new(batch_max, deadline);
-                    loop {
-                        let timeout = state
-                            .next_deadline(Instant::now())
-                            .unwrap_or(Duration::from_millis(50));
-                        match admit_rx.recv_timeout(timeout) {
-                            Ok(Some(req)) => {
-                                if let Some(batch) = state.push(req) {
-                                    if batch_tx.send(batch).is_err() {
-                                        break;
-                                    }
+/// Builder for a [`Service`]. Register one or more members, then
+/// [`build`](ServiceBuilder::build).
+pub struct ServiceBuilder {
+    cfg: ServingConfig,
+    manifest: Manifest,
+    members: Vec<MemberSpec>,
+    scheduler: Option<Box<dyn Scheduler>>,
+    admission: Option<Box<dyn AdmissionPolicy>>,
+    cost_model: Arc<dyn CostModel + Send + Sync>,
+}
+
+impl ServiceBuilder {
+    /// Start a builder over a shared artifact manifest. The config's
+    /// `scheduler` / `admission` names supply the defaults (overridable
+    /// with [`scheduler`](Self::scheduler) / [`admission`](Self::admission)).
+    pub fn new(cfg: &ServingConfig, manifest: &Manifest) -> ServiceBuilder {
+        ServiceBuilder {
+            cfg: cfg.clone(),
+            manifest: manifest.clone(),
+            members: Vec::new(),
+            scheduler: None,
+            admission: None,
+            cost_model: Arc::new(SimCostModel),
+        }
+    }
+
+    /// Register a device member: its descriptor (identity + sim
+    /// parameters), the backend executing its batches, and the tile
+    /// policy its router resolves through (`TilePolicy::PerDevice`
+    /// routes it to its tuned tile).
+    pub fn device(
+        mut self,
+        device: DeviceDescriptor,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+    ) -> ServiceBuilder {
+        self.members.push(MemberSpec {
+            device: Some(device),
+            backend,
+            policy,
+            manifest: None,
+        });
+        self
+    }
+
+    /// Register a device member serving its own manifest instead of the
+    /// shared one (heterogeneous artifact sets).
+    pub fn device_with_manifest(
+        mut self,
+        device: DeviceDescriptor,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+        manifest: Manifest,
+    ) -> ServiceBuilder {
+        self.members.push(MemberSpec {
+            device: Some(device),
+            backend,
+            policy,
+            manifest: Some(manifest),
+        });
+        self
+    }
+
+    /// Register an anonymous single-backend member (no device identity;
+    /// no per-device tuning or cost estimates). This is the classic
+    /// one-backend deployment.
+    pub fn backend(
+        mut self,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+    ) -> ServiceBuilder {
+        self.members.push(MemberSpec {
+            device: None,
+            backend,
+            policy,
+            manifest: None,
+        });
+        self
+    }
+
+    /// Override the scheduler (default: the config's `scheduler` name).
+    pub fn scheduler(mut self, s: impl Scheduler + 'static) -> ServiceBuilder {
+        self.scheduler = Some(Box::new(s));
+        self
+    }
+
+    /// Override the admission policy (default: the config's `admission`
+    /// name with its `admission_timeout_ms`).
+    pub fn admission(mut self, a: impl AdmissionPolicy + 'static) -> ServiceBuilder {
+        self.admission = Some(Box::new(a));
+        self
+    }
+
+    /// Replace the cost model behind ETA scheduling and sim-cost
+    /// metering (default: the timing simulator).
+    pub fn cost_model(mut self, m: impl CostModel + Send + Sync + 'static) -> ServiceBuilder {
+        self.cost_model = Arc::new(m);
+        self
+    }
+
+    /// Validate the config and start every member's pipeline.
+    pub fn build(self) -> Result<Service> {
+        self.cfg
+            .validate()
+            .context("invalid serving configuration")?;
+        if self.members.is_empty() {
+            bail!("service needs at least one device member");
+        }
+        let scheduler = match self.scheduler {
+            Some(s) => s,
+            None => scheduler_by_name(&self.cfg.scheduler)?,
+        };
+        let admission = match self.admission {
+            Some(a) => a,
+            None => admission_by_name(
+                &self.cfg.admission,
+                Duration::from_secs_f64(self.cfg.admission_timeout_ms / 1e3),
+            )?,
+        };
+        let mut members = Vec::with_capacity(self.members.len());
+        for (i, spec) in self.members.into_iter().enumerate() {
+            let manifest = spec.manifest.as_ref().unwrap_or(&self.manifest);
+            let label: Arc<str> = spec
+                .device
+                .as_ref()
+                .map(|d| d.id.clone())
+                .unwrap_or_else(|| format!("dev{i}"))
+                .into();
+            let device_id = spec.device.as_ref().map(|d| d.id.clone());
+            let router = Arc::new(Router::for_device(
+                manifest,
+                spec.policy,
+                device_id.as_deref(),
+            ));
+            let meter = spec
+                .device
+                .clone()
+                .map(|d| Arc::new(CostMeter::new(d, Arc::clone(&self.cost_model))));
+            // ETA table: the sim estimate of one request per supported
+            // key, through the variant this member's router prefers.
+            let mut cost = HashMap::new();
+            if let Some(m) = &meter {
+                for key in router.keys() {
+                    if let Ok(entry) = router.route(&key, 1) {
+                        let ms = m.ms_of(entry);
+                        if ms.is_finite() {
+                            cost.insert(key, ms);
+                        }
+                    }
+                }
+            }
+            members.push(start_member(
+                &self.cfg,
+                label,
+                spec.device,
+                router,
+                spec.backend,
+                meter,
+                cost,
+            ));
+        }
+        Ok(Service {
+            members,
+            scheduler,
+            admission,
+            local: Arc::new(ServingStats::new()),
+            ids: IdGen::default(),
+        })
+    }
+}
+
+/// Start one member's pipeline: admission queue → batcher thread →
+/// worker pool (the old single-backend coordinator, one per device).
+fn start_member(
+    cfg: &ServingConfig,
+    label: Arc<str>,
+    device: Option<DeviceDescriptor>,
+    router: Arc<Router>,
+    backend: Arc<dyn ResizeBackend>,
+    meter: Option<Arc<CostMeter>>,
+    cost: HashMap<RequestKey, f64>,
+) -> Member {
+    let stats = Arc::new(ServingStats::new());
+    let (admit_tx, admit_rx) = bounded::<ResizeRequest>(cfg.queue_cap);
+    let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_cap.max(4));
+
+    // Batcher thread: drain admissions, group, shed cancelled/expired,
+    // flush on size/deadline.
+    let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
+    let batch_max = cfg.batch_max;
+    let batcher = {
+        let stats = Arc::clone(&stats);
+        std::thread::Builder::new()
+            .name(format!("tilekit-batcher-{label}"))
+            .spawn(move || {
+                let mut state = BatcherState::new(batch_max, deadline);
+                loop {
+                    let timeout = match state.next_deadline(Instant::now()) {
+                        // While requests are pending, poll fast enough to
+                        // shed cancellations/deadlines promptly.
+                        Some(d) => d.min(SHED_POLL),
+                        None => Duration::from_millis(50),
+                    };
+                    match admit_rx.recv_timeout(timeout) {
+                        Ok(Some(req)) => {
+                            if let Some(batch) = state.push(req) {
+                                if batch_tx.send(batch).is_err() {
+                                    break;
                                 }
                             }
-                            Ok(None) => {} // timeout: fall through to expiry
-                            Err(_) => break, // admissions closed: shutdown
                         }
-                        for batch in state.flush_expired(Instant::now()) {
-                            if batch_tx.send(batch).is_err() {
-                                return;
+                        Ok(None) => {} // timeout: fall through to expiry
+                        Err(_) => break, // admissions closed: shutdown
+                    }
+                    for (req, reason) in state.sweep(Instant::now()) {
+                        let (counter, msg) = match reason {
+                            Shed::Cancelled => (&stats.cancelled, "cancelled"),
+                            Shed::DeadlineExceeded => {
+                                (&stats.shed, "deadline exceeded before execution")
                             }
+                        };
+                        counter.inc();
+                        let _ = req
+                            .reply
+                            .send(Err(anyhow::anyhow!("request {} {msg}", req.id)));
+                    }
+                    for batch in state.flush_expired(Instant::now()) {
+                        if batch_tx.send(batch).is_err() {
+                            return;
                         }
                     }
-                    // Shutdown: flush everything still pending.
-                    for batch in state.flush_all() {
-                        let _ = batch_tx.send(batch);
-                    }
-                })
-                .expect("spawn batcher")
-        };
+                }
+                // Shutdown: flush everything still pending.
+                for batch in state.flush_all() {
+                    let _ = batch_tx.send(batch);
+                }
+            })
+            .expect("spawn batcher")
+    };
 
-        let workers = spawn_workers(
-            cfg.workers,
-            batch_rx,
-            Arc::clone(&router),
-            backend,
-            Arc::clone(&stats),
-        );
+    let workers = spawn_workers(
+        cfg.workers,
+        batch_rx,
+        Arc::clone(&router),
+        backend,
+        Arc::clone(&stats),
+        meter,
+    );
 
-        Coordinator {
-            admit_tx: Some(admit_tx),
-            router,
-            stats,
-            ids: IdGen::default(),
-            batcher: Some(batcher),
-            workers,
-        }
+    Member {
+        label,
+        device,
+        router,
+        stats,
+        cost,
+        admit_tx: Some(admit_tx),
+        batcher: Some(batcher),
+        workers,
+    }
+}
+
+/// The running fleet-aware serving system.
+pub struct Service {
+    members: Vec<Member>,
+    scheduler: Box<dyn Scheduler>,
+    admission: Box<dyn AdmissionPolicy>,
+    /// Submit-side counters (unsupported rejections, fail-fast deadline
+    /// sheds) that belong to no single member.
+    local: Arc<ServingStats>,
+    ids: IdGen,
+}
+
+impl Service {
+    /// Convenience: a single-member service over one backend (the old
+    /// `Coordinator::start` deployment shape).
+    pub fn single(
+        cfg: &ServingConfig,
+        manifest: &Manifest,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+    ) -> Result<Service> {
+        ServiceBuilder::new(cfg, manifest)
+            .backend(backend, policy)
+            .build()
     }
 
-    /// Serving statistics handle.
-    pub fn stats(&self) -> Arc<ServingStats> {
-        Arc::clone(&self.stats)
-    }
-
-    /// The routing table in use.
-    pub fn router(&self) -> &Router {
-        &self.router
-    }
-
-    /// Submit a resize request. Non-blocking: `Saturated` signals
-    /// backpressure.
-    pub fn submit(
-        &self,
-        kernel: Interpolator,
-        image: Image<f32>,
-        scale: u32,
-    ) -> Result<Ticket, SubmitError> {
-        let key = RequestKey::of(kernel, &image, scale);
-        if !self.router.supports(&key) {
-            self.stats.rejected.inc();
+    /// Submit a typed request. The scheduler picks the member, the
+    /// admission policy decides what a full queue means.
+    pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        let key = req.key();
+        let now = Instant::now();
+        let snaps: Vec<DeviceSnapshot> = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(index, m)| DeviceSnapshot {
+                index,
+                device_id: &m.label,
+                supports: m.router.supports(&key),
+                // inflight() = admitted - answered, which already covers
+                // requests still sitting in the admission queue.
+                inflight: m.stats.inflight(),
+                cost_ms: m.cost.get(&key).copied(),
+            })
+            .collect();
+        // Unserveable beats expired: a request nobody can route is
+        // Unsupported no matter what its budget says.
+        if !snaps.iter().any(|s| s.supports) {
+            self.local.rejected.inc();
             return Err(SubmitError::Unsupported);
         }
-        let tx = self.admit_tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
+        let deadline = match req.deadline {
+            Some(budget) if budget.is_zero() => {
+                // Fail fast instead of occupying a queue slot.
+                self.local.shed.inc();
+                return Err(SubmitError::DeadlineExceeded);
+            }
+            Some(budget) => Some(now + budget),
+            None => None,
+        };
+        let Some(index) = self.scheduler.pick(&key, &snaps) else {
+            self.local.rejected.inc();
+            return Err(SubmitError::Unsupported);
+        };
+        let member = &self.members[index];
+        debug_assert!(
+            member.router.supports(&key),
+            "scheduler picked a member that cannot route the key"
+        );
+        let tx = member.admit_tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
         let id = self.ids.next();
-        let (ticket, reply) = Ticket::new(id);
-        let req = ResizeRequest {
+        let (ticket, reply) =
+            Ticket::for_device(id, Default::default(), Some(member.label.clone()));
+        let rr = ResizeRequest {
             id,
             key,
-            image,
-            admitted: Instant::now(),
+            image: req.image,
+            priority: req.priority,
+            deadline,
+            // The ticket and the pipeline share the same token.
+            cancel: ticket.cancel_token(),
+            admitted: now,
             reply,
         };
-        match tx.try_send(req) {
+        match self.admission.admit(tx, rr) {
             Ok(()) => {
-                self.stats.admitted.inc();
+                member.stats.admitted.inc();
                 Ok(ticket)
             }
-            Err(TrySendError::Full(_)) => {
-                self.stats.rejected.inc();
-                Err(SubmitError::Saturated)
-            }
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::ShuttingDown),
-        }
-    }
-
-    /// Blocking submit: waits for queue space instead of failing.
-    pub fn submit_blocking(
-        &self,
-        kernel: Interpolator,
-        image: Image<f32>,
-        scale: u32,
-    ) -> Result<Ticket, SubmitError> {
-        loop {
-            match self.submit(kernel, image.clone(), scale) {
-                Err(SubmitError::Saturated) => {
-                    std::thread::sleep(Duration::from_micros(200));
+            Err(e) => {
+                // Only backpressure counts as a member rejection; a
+                // budget that ran out while blocked is a shed — recorded
+                // service-side, NOT on the member, because the request
+                // was never admitted and member shed/admitted counters
+                // must stay balanced for inflight(). A shutdown race is
+                // neither.
+                match e {
+                    SubmitError::Saturated => member.stats.rejected.inc(),
+                    SubmitError::DeadlineExceeded => self.local.shed.inc(),
+                    _ => {}
                 }
-                other => return other,
+                Err(e)
             }
         }
     }
 
-    /// Graceful shutdown: stop admissions, drain the pipeline, join all
-    /// threads.
-    pub fn shutdown(mut self) -> Arc<ServingStats> {
+    /// The union of keys any member can serve, sorted.
+    pub fn keys(&self) -> Vec<RequestKey> {
+        let mut ks: Vec<RequestKey> = self
+            .members
+            .iter()
+            .flat_map(|m| m.router.keys())
+            .collect();
+        ks.sort();
+        ks.dedup();
+        ks
+    }
+
+    /// Number of fleet members.
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Read-only views of every member, for per-device reporting.
+    pub fn members(&self) -> Vec<MemberView<'_>> {
+        self.members
+            .iter()
+            .map(|m| MemberView {
+                label: &m.label,
+                device: m.device.as_ref(),
+                tile_pref: m.router.tile_pref,
+                stats: &m.stats,
+                router: &m.router,
+            })
+            .collect()
+    }
+
+    /// The scheduler in use.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// The admission policy in use.
+    pub fn admission_name(&self) -> &'static str {
+        self.admission.name()
+    }
+
+    /// Merged fleet-wide stats snapshot (counters + histograms summed
+    /// over members; live stats keep updating after the call).
+    pub fn stats(&self) -> ServingStats {
+        let total = ServingStats::new();
+        total.merge_from(&self.local);
+        for m in &self.members {
+            total.merge_from(&m.stats);
+        }
+        total
+    }
+
+    /// Reset every member's stats (e.g. after a warmup phase).
+    pub fn reset_stats(&self) {
+        self.local.reset();
+        for m in &self.members {
+            m.stats.reset();
+        }
+    }
+
+    /// Graceful shutdown: stop admissions, drain every member's
+    /// pipeline, join all threads. Returns the final merged stats.
+    pub fn shutdown(mut self) -> ServingStats {
         self.shutdown_inner();
-        Arc::clone(&self.stats)
+        self.stats()
     }
 
     fn shutdown_inner(&mut self) {
-        self.admit_tx.take(); // closes admissions → batcher exits → workers exit
-        if let Some(b) = self.batcher.take() {
-            let _ = b.join();
+        for m in &mut self.members {
+            m.admit_tx.take(); // closes admissions → batcher exits → workers exit
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        for m in &mut self.members {
+            if let Some(b) = m.batcher.take() {
+                let _ = b.join();
+            }
+            for w in m.workers.drain(..) {
+                let _ = w.join();
+            }
         }
     }
 }
 
-impl Drop for Coordinator {
+impl Drop for Service {
     fn drop(&mut self) {
-        if self.admit_tx.is_some() {
+        if self.members.iter().any(|m| m.admit_tx.is_some()) {
             self.shutdown_inner();
         }
     }
@@ -206,8 +584,11 @@ impl Drop for Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::image::generate;
-    use crate::runtime::{Manifest, MockEngine};
+    use crate::coordinator::admission::{BlockWithTimeout, RejectWhenFull};
+    use crate::coordinator::request::Priority;
+    use crate::coordinator::scheduler::RoundRobin;
+    use crate::image::{generate, Interpolator};
+    use crate::runtime::MockEngine;
     use std::path::PathBuf;
 
     fn manifest() -> Manifest {
@@ -232,64 +613,70 @@ mod tests {
             batch_max: 4,
             batch_deadline_ms: 2.0,
             queue_cap: 64,
-            artifacts_dir: ".".into(),
+            ..ServingConfig::default()
         }
     }
 
-    fn start(backend: Arc<dyn ResizeBackend>) -> Coordinator {
+    fn start(backend: Arc<dyn ResizeBackend>) -> Service {
         let m = manifest();
-        let router = Router::new(&m, super::super::TilePolicy::PortableFallback);
-        Coordinator::start(&cfg(), router, backend)
+        ServiceBuilder::new(&cfg(), &m)
+            .backend(backend, TilePolicy::PortableFallback)
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap()
+    }
+
+    fn req(kernel: Interpolator, img: crate::image::Image<f32>, scale: u32) -> Request {
+        Request::new(kernel, img, scale)
     }
 
     #[test]
     fn end_to_end_requests_complete_correctly() {
-        let co = start(Arc::new(MockEngine::new()));
+        let svc = start(Arc::new(MockEngine::new()));
         let img = generate::test_scene(16, 16, 9);
         let want = crate::image::bilinear(&img, 2);
         let tickets: Vec<_> = (0..20)
-            .map(|_| {
-                co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
-                    .unwrap()
-            })
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
             .collect();
         for t in tickets {
             let out = t.wait().unwrap();
             assert_eq!(out.width(), 32);
             assert!(out.max_abs_diff(&want) < 1e-6);
         }
-        let stats = co.shutdown();
+        let stats = svc.shutdown();
         assert_eq!(stats.completed.get(), 20);
         assert_eq!(stats.failed.get(), 0);
         assert!(stats.batches.get() <= 20);
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(
+            stats.latency_by_class[Priority::Interactive.index()].count(),
+            20
+        );
     }
 
     #[test]
     fn unsupported_shape_rejected_fast() {
-        let co = start(Arc::new(MockEngine::new()));
+        let svc = start(Arc::new(MockEngine::new()));
         let img = generate::gradient(9, 9);
-        match co.submit(Interpolator::Bilinear, img, 2) {
+        match svc.submit(req(Interpolator::Bilinear, img, 2)) {
             Err(SubmitError::Unsupported) => {}
             other => panic!("expected Unsupported, got {other:?}"),
         }
         let img16 = generate::gradient(16, 16);
         assert!(matches!(
-            co.submit(Interpolator::Bicubic, img16, 2),
+            svc.submit(req(Interpolator::Bicubic, img16, 2)),
             Err(SubmitError::Unsupported)
         ));
+        let stats = svc.shutdown();
+        assert_eq!(stats.rejected.get(), 2);
     }
 
     #[test]
     fn mixed_kernels_route_independently() {
-        let co = start(Arc::new(MockEngine::new()));
+        let svc = start(Arc::new(MockEngine::new()));
         let img = generate::test_scene(16, 16, 2);
-        let t1 = co
-            .submit_blocking(Interpolator::Bilinear, img.clone(), 2)
-            .unwrap();
-        let t2 = co
-            .submit_blocking(Interpolator::Nearest, img.clone(), 4)
-            .unwrap();
+        let t1 = svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap();
+        let t2 = svc.submit(req(Interpolator::Nearest, img.clone(), 4)).unwrap();
         assert_eq!(t1.wait().unwrap().width(), 32);
         assert_eq!(t2.wait().unwrap().width(), 64);
     }
@@ -297,44 +684,59 @@ mod tests {
     #[test]
     fn deadline_flushes_partial_batches() {
         // One request with batch_max 4: only the deadline can flush it.
-        let co = start(Arc::new(MockEngine::new()));
+        let svc = start(Arc::new(MockEngine::new()));
         let img = generate::test_scene(16, 16, 4);
-        let t = co
-            .submit(Interpolator::Bilinear, img, 2)
-            .expect("admitted");
+        let t = svc.submit(req(Interpolator::Bilinear, img, 2)).expect("admitted");
         let out = t.wait().unwrap();
         assert_eq!(out.height(), 32);
     }
 
     #[test]
+    fn zero_deadline_fails_fast() {
+        let svc = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 4);
+        let r = req(Interpolator::Bilinear, img, 2).deadline(Duration::ZERO);
+        assert!(matches!(
+            svc.submit(r),
+            Err(SubmitError::DeadlineExceeded)
+        ));
+        let stats = svc.shutdown();
+        assert_eq!(stats.shed.get(), 1);
+        assert_eq!(stats.completed.get(), 0);
+    }
+
+    #[test]
     fn backend_failures_reported_per_request() {
-        let co = start(Arc::new(MockEngine::failing_every(1)));
+        let svc = start(Arc::new(MockEngine::failing_every(1)));
         let img = generate::test_scene(16, 16, 5);
-        let t = co.submit_blocking(Interpolator::Bilinear, img, 2).unwrap();
+        let t = svc.submit(req(Interpolator::Bilinear, img, 2)).unwrap();
         assert!(t.wait().is_err());
-        let stats = co.shutdown();
+        let stats = svc.shutdown();
         assert_eq!(stats.failed.get(), 1);
     }
 
     #[test]
     fn backpressure_saturates() {
-        // Slow backend + tiny queue: eventually Saturated.
+        // Slow backend + tiny queue + non-blocking admission: Saturated.
         let slow = MockEngine::with_delay(Duration::from_millis(30));
         let m = manifest();
-        let router = Router::new(&m, super::super::TilePolicy::PortableFallback);
         let small = ServingConfig {
             workers: 1,
             batch_max: 1,
             batch_deadline_ms: 0.1,
             queue_cap: 2,
-            artifacts_dir: ".".into(),
+            ..ServingConfig::default()
         };
-        let co = Coordinator::start(&small, router, Arc::new(slow));
+        let svc = ServiceBuilder::new(&small, &m)
+            .backend(Arc::new(slow), TilePolicy::PortableFallback)
+            .admission(RejectWhenFull)
+            .build()
+            .unwrap();
         let img = generate::test_scene(16, 16, 6);
         let mut saturated = false;
         let mut tickets = Vec::new();
         for _ in 0..64 {
-            match co.submit(Interpolator::Bilinear, img.clone(), 2) {
+            match svc.submit(req(Interpolator::Bilinear, img.clone(), 2)) {
                 Ok(t) => tickets.push(t),
                 Err(SubmitError::Saturated) => {
                     saturated = true;
@@ -347,24 +749,78 @@ mod tests {
         for t in tickets {
             let _ = t.wait();
         }
-        let stats = co.shutdown();
+        let stats = svc.shutdown();
         assert!(stats.rejected.get() >= 1);
     }
 
     #[test]
     fn shutdown_drains_pending() {
-        let co = start(Arc::new(MockEngine::new()));
+        let svc = start(Arc::new(MockEngine::new()));
         let img = generate::test_scene(16, 16, 7);
         let tickets: Vec<_> = (0..10)
-            .map(|_| {
-                co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
-                    .unwrap()
-            })
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
             .collect();
-        let stats = co.shutdown(); // must drain, not drop
+        let stats = svc.shutdown(); // must drain, not drop
         assert_eq!(stats.completed.get() + stats.failed.get(), 10);
         for t in tickets {
             let _ = t.wait(); // all replies delivered
         }
+    }
+
+    #[test]
+    fn two_member_fleet_round_robin_spreads_load() {
+        let m = manifest();
+        let svc = ServiceBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        assert_eq!(svc.member_count(), 2);
+        let img = generate::test_scene(16, 16, 8);
+        let tickets: Vec<_> = (0..12)
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+            .collect();
+        let mut per_dev: HashMap<String, usize> = HashMap::new();
+        for t in &tickets {
+            *per_dev
+                .entry(t.device_id().unwrap().to_string())
+                .or_default() += 1;
+        }
+        assert_eq!(per_dev.get("gtx260"), Some(&6));
+        assert_eq!(per_dev.get("fermi"), Some(&6));
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let views_completed: u64 = svc.members().iter().map(|v| v.stats.completed.get()).sum();
+        assert_eq!(views_completed, 12);
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed.get(), 12);
+        assert!(stats.sim_cost_ns.get() > 0, "named members meter sim cost");
+    }
+
+    #[test]
+    fn builder_rejects_bad_config_and_empty_fleet() {
+        let m = manifest();
+        let bad = ServingConfig {
+            workers: 0,
+            ..ServingConfig::default()
+        };
+        let err = ServiceBuilder::new(&bad, &m)
+            .backend(Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid serving configuration"), "{err}");
+        assert!(ServiceBuilder::new(&cfg(), &m).build().is_err(), "no members");
     }
 }

@@ -1,20 +1,30 @@
-//! Serving statistics: request/batch counters and latency histograms,
-//! shared (via `Arc`) between the pipeline stages and the caller.
+//! Serving statistics: request/batch counters, latency histograms (both
+//! aggregate and per [`Priority`] class), and per-device simulated-cost
+//! accounting, shared (via `Arc`) between the pipeline stages and the
+//! caller. A fleet [`Service`](super::Service) keeps one `ServingStats`
+//! per device member and merges them for totals.
 
+use super::request::Priority;
 use crate::metrics::{Counter, Histogram};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Aggregated serving metrics.
 #[derive(Debug, Default)]
 pub struct ServingStats {
     /// Requests admitted into the queue.
     pub admitted: Counter,
-    /// Requests rejected by backpressure.
+    /// Requests rejected by backpressure or lack of a route.
     pub rejected: Counter,
     /// Requests completed successfully.
     pub completed: Counter,
     /// Requests failed (backend error).
     pub failed: Counter,
+    /// Requests shed after admission because their deadline expired
+    /// before execution.
+    pub shed: Counter,
+    /// Requests cancelled by their ticket before execution.
+    pub cancelled: Counter,
     /// Batches executed.
     pub batches: Counter,
     /// Sum of batch sizes (mean batch size = batched / batches).
@@ -25,6 +35,21 @@ pub struct ServingStats {
     pub queue_wait: Histogram,
     /// Pure execution time per batch.
     pub exec_time: Histogram,
+    /// End-to-end latency split by priority class (indexed by
+    /// [`Priority::index`]).
+    pub latency_by_class: [Histogram; 2],
+    /// Queue wait split by priority class.
+    pub queue_by_class: [Histogram; 2],
+    /// Accumulated simulated device-time of executed requests, in
+    /// nanoseconds — the "aggregate sim cost" a simulated fleet is
+    /// judged on (each request costs the sim time of the tile variant
+    /// its device routed it to).
+    pub sim_cost_ns: Counter,
+    /// Metered requests whose cost estimate was non-finite (e.g. an
+    /// unlaunchable tile) and therefore contributed NOTHING to
+    /// `sim_cost_ns` — a non-zero value means the aggregate undercounts
+    /// and must not be compared.
+    pub unpriced: Counter,
 }
 
 impl ServingStats {
@@ -39,11 +64,82 @@ impl ServingStats {
         self.rejected.reset();
         self.completed.reset();
         self.failed.reset();
+        self.shed.reset();
+        self.cancelled.reset();
         self.batches.reset();
         self.batched.reset();
         self.latency.reset();
         self.queue_wait.reset();
         self.exec_time.reset();
+        for h in &self.latency_by_class {
+            h.reset();
+        }
+        for h in &self.queue_by_class {
+            h.reset();
+        }
+        self.sim_cost_ns.reset();
+        self.unpriced.reset();
+    }
+
+    /// Add `other`'s counters and histogram contents into `self`
+    /// (fleet aggregation; `other` is left untouched).
+    pub fn merge_from(&self, other: &ServingStats) {
+        self.admitted.add(other.admitted.get());
+        self.rejected.add(other.rejected.get());
+        self.completed.add(other.completed.get());
+        self.failed.add(other.failed.get());
+        self.shed.add(other.shed.get());
+        self.cancelled.add(other.cancelled.get());
+        self.batches.add(other.batches.get());
+        self.batched.add(other.batched.get());
+        self.latency.merge_from(&other.latency);
+        self.queue_wait.merge_from(&other.queue_wait);
+        self.exec_time.merge_from(&other.exec_time);
+        for (mine, theirs) in self.latency_by_class.iter().zip(&other.latency_by_class) {
+            mine.merge_from(theirs);
+        }
+        for (mine, theirs) in self.queue_by_class.iter().zip(&other.queue_by_class) {
+            mine.merge_from(theirs);
+        }
+        self.sim_cost_ns.add(other.sim_cost_ns.get());
+        self.unpriced.add(other.unpriced.get());
+    }
+
+    /// Record the queue wait of one request about to execute.
+    pub fn record_queue_wait(&self, priority: Priority, wait: Duration) {
+        self.queue_wait.record(wait);
+        self.queue_by_class[priority.index()].record(wait);
+    }
+
+    /// Record the end-to-end latency of one answered request.
+    pub fn record_latency(&self, priority: Priority, latency: Duration) {
+        self.latency.record(latency);
+        self.latency_by_class[priority.index()].record(latency);
+    }
+
+    /// Record the simulated device-time of one executed request. A
+    /// non-finite or negative estimate (unlaunchable tile) cannot be
+    /// summed; it is counted in `unpriced` so consumers know the
+    /// aggregate is incomplete.
+    pub fn record_sim_cost_ms(&self, ms: f64) {
+        if ms.is_finite() && ms >= 0.0 {
+            self.sim_cost_ns.add((ms * 1e6) as u64);
+        } else {
+            self.unpriced.inc();
+        }
+    }
+
+    /// Accumulated simulated cost in milliseconds.
+    pub fn sim_cost_ms(&self) -> f64 {
+        self.sim_cost_ns.get() as f64 / 1e6
+    }
+
+    /// Requests admitted but not yet answered — the scheduler's load
+    /// signal for this device.
+    pub fn inflight(&self) -> u64 {
+        self.admitted.get().saturating_sub(
+            self.completed.get() + self.failed.get() + self.shed.get() + self.cancelled.get(),
+        )
     }
 
     /// Mean batch size so far (0 when no batches).
@@ -59,15 +155,43 @@ impl ServingStats {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "admitted={} rejected={} completed={} failed={} batches={} mean_batch={:.2} | latency {}",
+            "admitted={} rejected={} completed={} failed={} shed={} cancelled={} \
+             batches={} mean_batch={:.2} | latency {}",
             self.admitted.get(),
             self.rejected.get(),
             self.completed.get(),
             self.failed.get(),
+            self.shed.get(),
+            self.cancelled.get(),
             self.batches.get(),
             self.mean_batch(),
             self.latency.summary(),
         )
+    }
+
+    /// Per-priority-class latency report (p50/p95/p99), one line per
+    /// class — what `tilekit serve` prints.
+    pub fn class_summary(&self) -> String {
+        Priority::ALL
+            .iter()
+            .map(|p| {
+                let lat = &self.latency_by_class[p.index()];
+                let q = &self.queue_by_class[p.index()];
+                format!(
+                    "{:<11} n={} queue p50={:.0}us p95={:.0}us p99={:.0}us | \
+                     e2e p50={:.0}us p95={:.0}us p99={:.0}us",
+                    p.label(),
+                    lat.count(),
+                    q.percentile_us(50.0),
+                    q.percentile_us(95.0),
+                    q.percentile_us(99.0),
+                    lat.percentile_us(50.0),
+                    lat.percentile_us(95.0),
+                    lat.percentile_us(99.0),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
     }
 }
 
@@ -106,6 +230,65 @@ mod tests {
     fn summary_contains_counts() {
         let s = ServingStats::new();
         s.admitted.inc();
+        s.shed.inc();
         assert!(s.summary().contains("admitted=1"));
+        assert!(s.summary().contains("shed=1"));
+    }
+
+    #[test]
+    fn class_recording_lands_in_the_right_bucket() {
+        let s = ServingStats::new();
+        s.record_latency(Priority::Interactive, Duration::from_micros(100));
+        s.record_latency(Priority::Batch, Duration::from_micros(200));
+        s.record_latency(Priority::Batch, Duration::from_micros(300));
+        assert_eq!(s.latency.count(), 3);
+        assert_eq!(s.latency_by_class[Priority::Interactive.index()].count(), 1);
+        assert_eq!(s.latency_by_class[Priority::Batch.index()].count(), 2);
+        let report = s.class_summary();
+        assert!(report.contains("interactive"));
+        assert!(report.contains("batch"));
+    }
+
+    #[test]
+    fn inflight_accounts_all_outcomes() {
+        let s = ServingStats::new();
+        s.admitted.add(10);
+        s.completed.add(4);
+        s.failed.add(1);
+        s.shed.add(2);
+        s.cancelled.add(1);
+        assert_eq!(s.inflight(), 2);
+    }
+
+    #[test]
+    fn sim_cost_accumulates_in_ns_and_flags_unpriced() {
+        let s = ServingStats::new();
+        s.record_sim_cost_ms(0.0033);
+        s.record_sim_cost_ms(0.0014);
+        s.record_sim_cost_ms(f64::INFINITY); // unsummable
+        s.record_sim_cost_ms(f64::NAN); // unsummable
+        assert_eq!(s.sim_cost_ns.get(), 3300 + 1400);
+        assert!((s.sim_cost_ms() - 0.0047).abs() < 1e-9);
+        assert_eq!(s.unpriced.get(), 2, "unsummable costs must be flagged");
+    }
+
+    #[test]
+    fn merge_sums_counters_and_histograms() {
+        let a = ServingStats::new();
+        let b = ServingStats::new();
+        a.admitted.add(3);
+        b.admitted.add(4);
+        b.shed.add(1);
+        a.record_latency(Priority::Interactive, Duration::from_micros(50));
+        b.record_latency(Priority::Batch, Duration::from_micros(70));
+        b.record_sim_cost_ms(1.0);
+        a.merge_from(&b);
+        assert_eq!(a.admitted.get(), 7);
+        assert_eq!(a.shed.get(), 1);
+        assert_eq!(a.latency.count(), 2);
+        assert_eq!(a.latency_by_class[1].count(), 1);
+        assert_eq!(a.sim_cost_ns.get(), 1_000_000);
+        // source untouched
+        assert_eq!(b.admitted.get(), 4);
     }
 }

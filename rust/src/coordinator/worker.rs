@@ -1,10 +1,13 @@
-//! The worker stage: a pool of threads pulling flushed batches, routing
-//! them to an artifact, splitting oversize groups to the artifact's
+//! The worker stage: a pool of threads pulling flushed batches, shedding
+//! cancelled/expired requests before they cost anything, routing the
+//! rest to an artifact, splitting oversize groups to the artifact's
 //! static batch, executing through the [`ResizeBackend`], and replying
-//! per request.
+//! per request. When a [`CostMeter`] is attached (simulated fleets) the
+//! executed requests' sim cost accumulates into the stats.
 
 use super::batcher::Batch;
 use super::router::Router;
+use super::scheduler::CostMeter;
 use super::stats::ServingStats;
 use crate::exec::Receiver;
 use crate::runtime::ResizeBackend;
@@ -19,6 +22,7 @@ pub fn spawn_workers(
     router: Arc<Router>,
     backend: Arc<dyn ResizeBackend>,
     stats: Arc<ServingStats>,
+    meter: Option<Arc<CostMeter>>,
 ) -> Vec<JoinHandle<()>> {
     (0..n.max(1))
         .map(|i| {
@@ -26,6 +30,7 @@ pub fn spawn_workers(
             let router = Arc::clone(&router);
             let backend = Arc::clone(&backend);
             let stats = Arc::clone(&stats);
+            let meter = meter.clone();
             std::thread::Builder::new()
                 .name(format!("tilekit-exec-{i}"))
                 .spawn(move || {
@@ -35,7 +40,7 @@ pub fn spawn_workers(
                         eprintln!("worker {i}: backend warmup failed: {e:#}");
                     }
                     while let Ok(batch) = rx.recv() {
-                        run_batch(batch, &router, backend.as_ref(), &stats);
+                        run_batch(batch, &router, backend.as_ref(), &stats, meter.as_deref());
                     }
                 })
                 .expect("spawn worker")
@@ -51,9 +56,29 @@ pub fn run_batch(
     router: &Router,
     backend: &dyn ResizeBackend,
     stats: &ServingStats,
+    meter: Option<&CostMeter>,
 ) {
     let key = batch.key;
-    let mut requests = batch.requests;
+    // Shed requests that no longer need (cancelled) or can no longer
+    // meet (expired deadline) execution — BEFORE they reach the backend.
+    let now = Instant::now();
+    let mut requests = Vec::with_capacity(batch.requests.len());
+    for r in batch.requests {
+        if r.is_cancelled() {
+            stats.cancelled.inc();
+            let _ = r
+                .reply
+                .send(Err(anyhow::anyhow!("request {} cancelled", r.id)));
+        } else if r.is_expired(now) {
+            stats.shed.inc();
+            let _ = r.reply.send(Err(anyhow::anyhow!(
+                "request {} deadline exceeded before execution",
+                r.id
+            )));
+        } else {
+            requests.push(r);
+        }
+    }
     while !requests.is_empty() {
         let entry = match router.route(&key, requests.len()) {
             Ok(e) => e,
@@ -73,21 +98,26 @@ pub fn run_batch(
 
         let exec_start = Instant::now();
         for r in &chunk {
-            stats
-                .queue_wait
-                .record(exec_start.duration_since(r.admitted));
+            stats.record_queue_wait(r.priority, exec_start.duration_since(r.admitted));
         }
         let result = backend.run_batch(entry, &images);
         stats.exec_time.record(exec_start.elapsed());
         stats.batches.inc();
         stats.batched.add(chunk.len() as u64);
+        if let Some(m) = meter {
+            // Per-request sim cost of the variant this device routed to.
+            let ms = m.ms_of(entry);
+            for _ in &chunk {
+                stats.record_sim_cost_ms(ms);
+            }
+        }
 
         match result {
             Ok(outputs) => {
                 debug_assert_eq!(outputs.len(), chunk.len());
                 for (r, out) in chunk.into_iter().zip(outputs) {
                     stats.completed.inc();
-                    stats.latency.record(r.admitted.elapsed());
+                    stats.record_latency(r.priority, r.admitted.elapsed());
                     let _ = r.reply.send(Ok(out));
                 }
             }
@@ -95,7 +125,7 @@ pub fn run_batch(
                 let msg = err.to_string();
                 for r in chunk {
                     stats.failed.inc();
-                    stats.latency.record(r.admitted.elapsed());
+                    stats.record_latency(r.priority, r.admitted.elapsed());
                     let _ = r.reply.send(Err(anyhow::anyhow!("{msg}")));
                 }
             }
@@ -106,11 +136,14 @@ pub fn run_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{RequestKey, ResizeRequest, Ticket};
+    use crate::autotuner::SimCostModel;
+    use crate::coordinator::request::{Priority, RequestKey, ResizeRequest, Ticket};
     use crate::coordinator::TilePolicy;
+    use crate::device::find_device;
     use crate::image::{generate, Interpolator};
     use crate::runtime::{Manifest, MockEngine};
     use std::path::PathBuf;
+    use std::time::Duration;
 
     fn manifest() -> Manifest {
         Manifest::parse(
@@ -136,13 +169,7 @@ mod tests {
             .map(|i| {
                 let (t, tx) = Ticket::new(i as u64);
                 tickets.push(t);
-                ResizeRequest {
-                    id: i as u64,
-                    key,
-                    image: img.clone(),
-                    admitted: Instant::now(),
-                    reply: tx,
-                }
+                ResizeRequest::bare(i as u64, key, img.clone(), tx)
             })
             .collect();
         (Batch { key, requests }, tickets)
@@ -154,7 +181,7 @@ mod tests {
         let backend = MockEngine::new();
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(3);
-        run_batch(batch, &router, &backend, &stats);
+        run_batch(batch, &router, &backend, &stats, None);
         for t in tickets {
             let out = t.wait().unwrap();
             assert_eq!(out.width(), 32);
@@ -162,6 +189,11 @@ mod tests {
         assert_eq!(stats.completed.get(), 3);
         assert_eq!(stats.batches.get(), 1);
         assert_eq!(stats.mean_batch(), 3.0);
+        assert_eq!(
+            stats.latency_by_class[Priority::Interactive.index()].count(),
+            3,
+            "bare requests are interactive-class"
+        );
     }
 
     #[test]
@@ -170,7 +202,7 @@ mod tests {
         let backend = MockEngine::new();
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(10); // max artifact batch = 4
-        run_batch(batch, &router, &backend, &stats);
+        run_batch(batch, &router, &backend, &stats, None);
         for t in tickets {
             t.wait().unwrap();
         }
@@ -184,7 +216,7 @@ mod tests {
         let backend = MockEngine::failing_every(1); // every batch fails
         let stats = ServingStats::new();
         let (batch, tickets) = make_batch(2);
-        run_batch(batch, &router, &backend, &stats);
+        run_batch(batch, &router, &backend, &stats, None);
         for t in tickets {
             assert!(t.wait().is_err());
         }
@@ -202,16 +234,56 @@ mod tests {
         let (t, tx) = Ticket::new(0);
         let batch = Batch {
             key,
-            requests: vec![ResizeRequest {
-                id: 0,
-                key,
-                image: img,
-                admitted: Instant::now(),
-                reply: tx,
-            }],
+            requests: vec![ResizeRequest::bare(0, key, img, tx)],
         };
-        run_batch(batch, &router, &backend, &stats);
+        run_batch(batch, &router, &backend, &stats, None);
         assert!(t.wait().is_err());
         assert_eq!(stats.failed.get(), 1);
+    }
+
+    #[test]
+    fn cancelled_and_expired_requests_never_reach_the_backend() {
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
+        let backend = MockEngine::new();
+        let stats = ServingStats::new();
+        let (mut batch, tickets) = make_batch(3);
+        // request 0: cancelled; request 1: expired; request 2: healthy
+        batch.requests[0].cancel.cancel();
+        batch.requests[1].deadline = Some(Instant::now() - Duration::from_millis(1));
+        run_batch(batch, &router, &backend, &stats, None);
+        let mut it = tickets.into_iter();
+        let t0 = it.next().unwrap();
+        let t1 = it.next().unwrap();
+        let t2 = it.next().unwrap();
+        assert!(t0.wait().unwrap_err().to_string().contains("cancelled"));
+        assert!(t1.wait().unwrap_err().to_string().contains("deadline"));
+        assert!(t2.wait().is_ok());
+        assert_eq!(stats.cancelled.get(), 1);
+        assert_eq!(stats.shed.get(), 1);
+        assert_eq!(stats.completed.get(), 1);
+        assert_eq!(
+            backend.executed.get(),
+            1,
+            "only the healthy request executes"
+        );
+    }
+
+    #[test]
+    fn meter_accumulates_sim_cost_per_request() {
+        let router = Router::new(&manifest(), TilePolicy::PortableFallback);
+        let backend = MockEngine::new();
+        let stats = ServingStats::new();
+        let meter = CostMeter::new(
+            find_device("gtx260").unwrap(),
+            std::sync::Arc::new(SimCostModel),
+        );
+        let (batch, tickets) = make_batch(4);
+        run_batch(batch, &router, &backend, &stats, Some(&meter));
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        assert!(stats.sim_cost_ns.get() > 0, "metered run records cost");
+        // 4 requests through one variant: cost divides evenly
+        assert_eq!(stats.sim_cost_ns.get() % 4, 0);
     }
 }

@@ -43,6 +43,15 @@ pub enum TrySendError<T> {
     Disconnected(T),
 }
 
+/// Error returned by `send_timeout`.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendTimeoutError<T> {
+    /// Queue stayed at capacity for the whole timeout.
+    Timeout(T),
+    /// All receivers dropped.
+    Disconnected(T),
+}
+
 /// Error returned by `recv` when the queue is empty and all senders are
 /// gone.
 #[derive(Debug, PartialEq, Eq)]
@@ -79,6 +88,32 @@ impl<T> Sender<T> {
                 return Ok(());
             }
             st = self.0.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking send with a deadline: waits for queue space at most `d`,
+    /// parked on the `not_full` condvar (no sleep/poll loop). `Timeout`
+    /// is the backpressure signal; the value is handed back in the error
+    /// so callers can retry or shed it.
+    pub fn send_timeout(&self, v: T, d: Duration) -> Result<(), SendTimeoutError<T>> {
+        let deadline = std::time::Instant::now() + d;
+        let mut st = self.0.q.lock().unwrap();
+        loop {
+            if st.receivers == 0 {
+                return Err(SendTimeoutError::Disconnected(v));
+            }
+            if st.buf.len() < self.0.cap {
+                st.buf.push_back(v);
+                drop(st);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(SendTimeoutError::Timeout(v));
+            }
+            let (guard, _res) = self.0.not_full.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
         }
     }
 
@@ -300,6 +335,39 @@ mod tests {
             .collect();
         all.sort_unstable();
         assert_eq!(all, (0..n_producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn send_timeout_times_out_when_full() {
+        let (tx, _rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t0 = std::time::Instant::now();
+        match tx.send_timeout(2, Duration::from_millis(20)) {
+            Err(SendTimeoutError::Timeout(2)) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn send_timeout_wakes_on_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send_timeout(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 0);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn send_timeout_disconnected() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert!(matches!(
+            tx.send_timeout(7, Duration::from_millis(5)),
+            Err(SendTimeoutError::Disconnected(7))
+        ));
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod channel;
 pub mod pool;
 
-pub use channel::{bounded, Receiver, RecvError, SendError, Sender, TrySendError};
+pub use channel::{bounded, Receiver, RecvError, SendError, SendTimeoutError, Sender, TrySendError};
 pub use pool::ThreadPool;

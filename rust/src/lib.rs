@@ -19,9 +19,15 @@
 //!   (exhaustive / coordinate descent / persistent-cache decorator), a
 //!   [`TuningSession`](autotuner::TuningSession) builder producing
 //!   serializable [`TuningOutcome`](autotuner::TuningOutcome)s, and
-//!   portable (worst-case-GPU) selection — plus an image-resize serving
-//!   system ([`coordinator`]) whose router consumes those outcomes
-//!   through a [`TilePolicy`](coordinator::TilePolicy) and executes
+//!   portable (worst-case-GPU) selection — plus a **fleet-aware**
+//!   image-resize serving system ([`coordinator`]): a
+//!   [`Service`](coordinator::Service) of device members whose routers
+//!   consume tuning outcomes through a
+//!   [`TilePolicy`](coordinator::TilePolicy) (each device serves through
+//!   its own tuned tile), scheduled per typed
+//!   [`Request`](coordinator::Request) by a pluggable
+//!   [`Scheduler`](coordinator::Scheduler) under a pluggable
+//!   [`AdmissionPolicy`](coordinator::AdmissionPolicy), executing
 //!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
 //! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
 //! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels

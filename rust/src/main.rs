@@ -22,7 +22,7 @@ use tilekit::autotuner::{strategy_by_name, SearchStrategy, SimCostModel, TuningS
 use tilekit::bench::figures;
 use tilekit::cli::Args;
 use tilekit::config::Config;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{Priority, Request, ServiceBuilder, SubmitError, TilePolicy};
 use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
@@ -35,7 +35,7 @@ use tilekit::util::text::fmt_ms;
 const VALUE_FLAGS: &[&str] = &[
     "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
     "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
-    "output", "seed", "strategy", "cache",
+    "output", "seed", "strategy", "cache", "scheduler", "policy",
 ];
 
 fn main() {
@@ -101,7 +101,12 @@ COMMANDS
   resize <in.pgm> <out.pgm> --scale N [--kernel bilinear] [--artifacts dir] [--mock]
                                         run a real resize through an AOT artifact
   serve [--requests N] [--workers N] [--artifacts dir] [--mock] [--tile WxH]
-                                        serving demo: batched requests + stats
+        [--devices a,b] [--scheduler s] [--policy p]
+                                        serving demo: batched requests + stats.
+                                        --devices starts a simulated fleet with
+                                        per-device tuned tiles; --scheduler is
+                                        round-robin|least-loaded|cost-eta;
+                                        --policy is reject|block|shed-batch
   artifacts [--artifacts dir] [--verify]
                                         list AOT artifacts with HLO stats;
                                         --verify compiles + checks numerics
@@ -596,6 +601,24 @@ fn cmd_artifacts(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// The manifest group (kernel, src, scale) with the most tile variants —
+/// the shape worth tuning the fleet on — plus its candidate tiles.
+fn fleet_tuning_target(m: &Manifest) -> (Interpolator, (u32, u32), u32, Vec<TileDim>) {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(Interpolator, (u32, u32), u32), Vec<TileDim>> = BTreeMap::new();
+    for e in &m.entries {
+        let tiles = groups.entry((e.kernel, e.src, e.scale)).or_default();
+        if !tiles.contains(&e.tile) {
+            tiles.push(e.tile);
+        }
+    }
+    let ((kernel, src, scale), tiles) = groups
+        .into_iter()
+        .max_by_key(|(_, tiles)| tiles.len())
+        .expect("manifest has entries");
+    (kernel, src, scale, tiles)
+}
+
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let n_requests: usize = args.get_parsed_or("requests", 64)?;
     let mut serving = cfg.serving.clone();
@@ -605,49 +628,176 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     if let Some(b) = args.get_parsed::<usize>("batch-max")? {
         serving.batch_max = b;
     }
-    let (backend, manifest) = backend_from_args(args, cfg)?;
-    // PortableFallback => largest-tile (CPU-optimal) variant preference; a
-    // GPU deployment would pass TilePolicy::PerDevice with a tuning
-    // outcome, or pin one tile with --tile (see EXPERIMENTS.md §Perf).
-    let policy = match args.get("tile") {
-        Some(t) => TilePolicy::Fixed(t.parse().map_err(|e: String| anyhow!(e))?),
-        None => TilePolicy::PortableFallback,
+    if let Some(s) = args.get("scheduler") {
+        serving.scheduler = s.to_string();
+    }
+    // Admission precedence: --policy, else the config's admission
+    // verbatim (default "reject" — under overload the demo records
+    // rejections instead of blocking; pass --policy block for the old
+    // submit_blocking behavior).
+    if let Some(p) = args.get("policy") {
+        serving.admission = p.to_string();
+    }
+
+    let mock = args.has("mock");
+    let dir = args.get_or("artifacts", &serving.artifacts_dir);
+    let manifest = match Manifest::load(Path::new(dir)) {
+        Ok(m) => m,
+        Err(e) if mock => {
+            eprintln!("note: no artifacts in '{dir}' ({e:#}); using the built-in demo manifest");
+            Manifest::fleet_demo()
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))
+        }
     };
-    let router = Router::new(&manifest, policy);
-    let keys = router.keys();
-    if keys.is_empty() {
+    if manifest.entries.is_empty() {
         bail!("manifest has no artifacts");
     }
+    let make_backend = || -> Arc<dyn ResizeBackend> {
+        if mock {
+            Arc::new(MockEngine::new())
+        } else {
+            Arc::new(EngineHandle::new(manifest.clone()))
+        }
+    };
+    let fixed: Option<TileDim> = match args.get("tile") {
+        Some(t) => Some(t.parse().map_err(|e: String| anyhow!(e))?),
+        None => None,
+    };
+
+    // Fleet members: --devices overrides the config's serving.devices;
+    // empty = one anonymous single-backend member.
+    let device_ids: Vec<String> = {
+        let list = args.get_list("devices");
+        if list.is_empty() {
+            serving.devices.clone()
+        } else {
+            list
+        }
+    };
+    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    if device_ids.is_empty() {
+        let policy = match fixed {
+            Some(t) => TilePolicy::Fixed(t),
+            // Largest-tile (CPU-optimal) variant preference; a fleet
+            // deployment gets TilePolicy::PerDevice below.
+            None => TilePolicy::PortableFallback,
+        };
+        builder = builder.backend(make_backend(), policy);
+    } else {
+        let devices: Vec<DeviceDescriptor> = device_ids
+            .iter()
+            .map(|id| cfg.device(id).cloned())
+            .collect::<Result<_>>()?;
+        let policy = match fixed {
+            Some(t) => TilePolicy::Fixed(t),
+            None => {
+                // Tune the fleet on the manifest's richest shape so each
+                // device routes through its own best tile.
+                let (kernel, src, scale, tiles) = fleet_tuning_target(&manifest);
+                let outcome = TuningSession::new(SimCostModel)
+                    .devices(devices.clone())
+                    .kernel(kernel)
+                    .scale(scale)
+                    .src((src.1, src.0)) // entry src is (h, w)
+                    .tiles(tiles)
+                    .run()?;
+                println!(
+                    "fleet tuning ({} {}x{} s{scale}): {}",
+                    kernel.label(),
+                    src.1,
+                    src.0,
+                    outcome
+                        .per_device
+                        .iter()
+                        .map(|d| format!("{} -> {}", d.device_id, d.best))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                TilePolicy::PerDevice(outcome)
+            }
+        };
+        for d in devices {
+            builder = builder.device(d, make_backend(), policy.clone());
+        }
+    }
+    let svc = builder.build()?;
+    let keys = svc.keys();
+    if keys.is_empty() {
+        bail!("no member can serve any manifest shape");
+    }
     println!(
-        "serving demo: {} requests over {} artifact shapes, {} workers, batch_max {}",
+        "serving demo: {} requests over {} artifact shapes, {} member(s), {} workers each, \
+         batch_max {}, scheduler {}, admission {}",
         n_requests,
         keys.len(),
+        svc.member_count(),
         serving.workers,
-        serving.batch_max
+        serving.batch_max,
+        svc.scheduler_name(),
+        svc.admission_name(),
     );
-    let co = Coordinator::start(&serving, router, backend);
+
     let seed: u64 = args.get_parsed_or("seed", 42)?;
     let mut rng = tilekit::util::Pcg32::seeded(seed);
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n_requests);
-    for _ in 0..n_requests {
+    let mut rejected = 0usize;
+    for i in 0..n_requests {
         let key = *rng.pick(&keys);
         let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, rng.next_u64());
-        let t = co
-            .submit_blocking(key.kernel, img, key.scale)
-            .map_err(|e| anyhow!("{e}"))?;
-        tickets.push(t);
+        // A quarter of the demo traffic is batch-class, so the QoS
+        // histograms and shed-batch policy have something to act on.
+        let priority = if i % 4 == 3 {
+            Priority::Batch
+        } else {
+            Priority::Interactive
+        };
+        match svc.submit(Request::new(key.kernel, img, key.scale).priority(priority)) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::Saturated) => rejected += 1,
+            Err(e) => return Err(anyhow!("{e}")),
+        }
     }
     let mut ok = 0usize;
-    for t in tickets {
-        if t.wait().is_ok() {
-            ok += 1;
+    for t in &tickets {
+        loop {
+            match t.wait_timeout(std::time::Duration::from_secs(30)) {
+                Ok(Some(_)) => {
+                    ok += 1;
+                    break;
+                }
+                Ok(None) => continue,
+                Err(_) => break,
+            }
         }
     }
     let wall = t0.elapsed();
-    let stats = co.shutdown();
+
+    // Per-device breakdown BEFORE shutdown consumes the service.
+    let mut breakdown = tilekit::util::text::Table::new(vec![
+        "device", "tile", "admitted", "completed", "shed", "batches", "mean batch", "p50 us",
+        "p99 us", "sim cost ms",
+    ]);
+    for v in svc.members() {
+        let s = v.stats;
+        breakdown.row(vec![
+            v.label.to_string(),
+            v.tile_pref.map(|t| t.label()).unwrap_or_else(|| "-".into()),
+            s.admitted.get().to_string(),
+            s.completed.get().to_string(),
+            (s.shed.get() + s.cancelled.get()).to_string(),
+            s.batches.get().to_string(),
+            format!("{:.2}", s.mean_batch()),
+            format!("{:.0}", s.latency.percentile_us(50.0)),
+            format!("{:.0}", s.latency.percentile_us(99.0)),
+            format!("{:.3}", s.sim_cost_ms()),
+        ]);
+    }
+    let stats = svc.shutdown();
     println!(
-        "\ncompleted {ok}/{n_requests} in {:.1} ms",
+        "\ncompleted {ok}/{n_requests} ({rejected} rejected) in {:.1} ms",
         wall.as_secs_f64() * 1e3
     );
     println!(
@@ -655,5 +805,8 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         n_requests as f64 / wall.as_secs_f64(),
         stats.summary()
     );
+    println!("\nper-device breakdown:");
+    print!("{}", breakdown.render());
+    println!("\nper-priority latency:\n{}", stats.class_summary());
     Ok(())
 }

@@ -99,6 +99,23 @@ impl Histogram {
         self.max_us()
     }
 
+    /// Add every sample of `other` into this histogram (bucket-wise).
+    /// Used to aggregate per-device serving histograms into fleet totals.
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us
+            .fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
     /// Reset all buckets and counters (e.g. after a warmup phase).
     pub fn reset(&self) {
         for b in &self.buckets {
@@ -178,6 +195,24 @@ mod tests {
             hd.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn merge_combines_counts_and_max() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [10.0, 20.0] {
+            a.record_us(v);
+        }
+        for v in [30.0, 4000.0] {
+            b.record_us(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max_us(), 4000.0);
+        assert!((a.mean_us() - (10.0 + 20.0 + 30.0 + 4000.0) / 4.0).abs() < 1.0);
+        // b unchanged
+        assert_eq!(b.count(), 2);
     }
 
     #[test]

@@ -126,6 +126,34 @@ impl Manifest {
         })
     }
 
+    /// The built-in fleet demo manifest: one bilinear 64x64/s2 shape
+    /// compiled (notionally) at the two tile variants whose preference
+    /// flips between GPU models in the simulator — 16x8 (best on cc1.3
+    /// segmented coalescing, e.g. GTX 260) vs 32x16 (best on cc2.0's
+    /// cached-warp Fermi). Shared by `tilekit serve --mock` (when no
+    /// artifacts exist), `examples/fleet_serving.rs`, and the fleet
+    /// acceptance tests, so their tile assertions stay in lockstep.
+    /// Mock-only: the HLO paths do not exist.
+    pub fn fleet_demo() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1,
+              "artifacts": [
+                {"name": "bl_s2_b1_t16x8", "kernel": "bilinear", "src": [64, 64],
+                 "scale": 2, "batch": 1, "tile": [8, 16], "path": "x"},
+                {"name": "bl_s2_b4_t16x8", "kernel": "bilinear", "src": [64, 64],
+                 "scale": 2, "batch": 4, "tile": [8, 16], "path": "x"},
+                {"name": "bl_s2_b1_t32x16", "kernel": "bilinear", "src": [64, 64],
+                 "scale": 2, "batch": 1, "tile": [16, 32], "path": "x"},
+                {"name": "bl_s2_b4_t32x16", "kernel": "bilinear", "src": [64, 64],
+                 "scale": 2, "batch": 4, "tile": [16, 32], "path": "x"}
+              ]
+            }"#,
+            PathBuf::from("."),
+        )
+        .expect("builtin fleet demo manifest parses")
+    }
+
     /// Absolute path of an entry's HLO file.
     pub fn hlo_path(&self, e: &ArtifactEntry) -> PathBuf {
         self.dir.join(&e.path)

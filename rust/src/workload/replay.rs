@@ -1,13 +1,14 @@
-//! Open-loop trace replay against a running [`Coordinator`].
+//! Open-loop trace replay against a running [`Service`].
 //!
 //! The replayer sleeps until each event's timestamp, submits without
 //! blocking (backpressure rejections are *recorded*, not retried — an
-//! open-loop driver must not let the system push back on the load), and
-//! a collector thread gathers completions. The outcome separates
-//! offered vs achieved load, which is what a serving evaluation needs.
+//! open-loop driver must not let the system push back on the load; run
+//! the service with the `RejectWhenFull` admission policy), and a
+//! collector thread gathers completions. The outcome separates offered
+//! vs achieved load, which is what a serving evaluation needs.
 
 use super::trace::Trace;
-use crate::coordinator::{Coordinator, SubmitError, Ticket};
+use crate::coordinator::{Request, Service, SubmitError, Ticket};
 use crate::image::generate;
 use crate::metrics::Histogram;
 use std::time::{Duration, Instant};
@@ -47,9 +48,9 @@ impl ReplayOutcome {
     }
 }
 
-/// Replay `trace` against `co`. Blocks until every submitted request has
-/// resolved.
-pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
+/// Replay `trace` against `svc`. Blocks until every submitted request
+/// has resolved.
+pub fn replay(svc: &Service, trace: &Trace) -> ReplayOutcome {
     // Pre-generate every input OUTSIDE the timed loop: synthesizing a
     // 128x128 test scene costs milliseconds, which would otherwise make
     // the driver lag the trace and corrupt the latency measurement.
@@ -69,7 +70,7 @@ pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
         std::thread::spawn(move || {
             let mut completed = 0usize;
             let mut failed = 0usize;
-            // Tickets arrive in submit order; wait_timeout polling keeps
+            // Tickets arrive in submit order; try_wait polling keeps
             // the recording close to actual completion even when an
             // earlier ticket is still in flight.
             let mut inflight: Vec<(Instant, Ticket)> = Vec::new();
@@ -86,18 +87,16 @@ pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
                         inflight.push(item);
                     }
                 }
-                inflight.retain(|(due, ticket)| {
-                    match ticket.wait_timeout(Duration::ZERO) {
-                        Ok(None) => true, // still pending
-                        Ok(Some(_)) => {
-                            completed += 1;
-                            latency.record(due.elapsed());
-                            false
-                        }
-                        Err(_) => {
-                            failed += 1;
-                            false
-                        }
+                inflight.retain(|(due, ticket)| match ticket.try_wait() {
+                    Ok(None) => true, // still pending
+                    Ok(Some(_)) => {
+                        completed += 1;
+                        latency.record(due.elapsed());
+                        false
+                    }
+                    Err(_) => {
+                        failed += 1;
+                        false
                     }
                 });
                 if !open && !inflight.is_empty() {
@@ -119,11 +118,13 @@ pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
         } else {
             max_lag = max_lag.max((now - due).as_micros() as u64);
         }
-        match co.submit(ev.key.kernel, img, ev.key.scale) {
+        match svc.submit(Request::new(ev.key.kernel, img, ev.key.scale)) {
             Ok(ticket) => {
                 let _ = done_tx.send((due, ticket));
             }
-            Err(SubmitError::Saturated) | Err(SubmitError::Unsupported) => rejected += 1,
+            Err(SubmitError::Saturated)
+            | Err(SubmitError::Unsupported)
+            | Err(SubmitError::DeadlineExceeded) => rejected += 1,
             Err(SubmitError::ShuttingDown) => break,
         }
     }
@@ -145,12 +146,12 @@ pub fn replay(co: &Coordinator, trace: &Trace) -> ReplayOutcome {
 mod tests {
     use super::*;
     use crate::config::ServingConfig;
-    use crate::coordinator::{RequestKey, Router, TilePolicy};
+    use crate::coordinator::{RejectWhenFull, RequestKey, ServiceBuilder, TilePolicy};
     use crate::runtime::{Manifest, MockEngine};
     use crate::workload::trace::Arrival;
     use std::sync::Arc;
 
-    fn setup(queue_cap: usize, delay_ms: u64) -> (Coordinator, Vec<RequestKey>) {
+    fn setup(queue_cap: usize, delay_ms: u64) -> (Service, Vec<RequestKey>) {
         let manifest = Manifest::parse(
             r#"{
               "version": 1,
@@ -162,8 +163,6 @@ mod tests {
             std::path::PathBuf::from("."),
         )
         .unwrap();
-        let router = Router::new(&manifest, TilePolicy::PortableFallback);
-        let keys = router.keys();
         let backend: Arc<dyn crate::runtime::ResizeBackend> = if delay_ms > 0 {
             Arc::new(MockEngine::with_delay(Duration::from_millis(delay_ms)))
         } else {
@@ -174,41 +173,47 @@ mod tests {
             batch_max: 4,
             batch_deadline_ms: 0.5,
             queue_cap,
-            artifacts_dir: ".".into(),
+            ..ServingConfig::default()
         };
-        (Coordinator::start(&cfg, router, backend), keys)
+        let svc = ServiceBuilder::new(&cfg, &manifest)
+            .backend(backend, TilePolicy::PortableFallback)
+            .admission(RejectWhenFull)
+            .build()
+            .unwrap();
+        let keys = svc.keys();
+        (svc, keys)
     }
 
     #[test]
     fn replay_completes_everything_at_modest_load() {
-        let (co, keys) = setup(256, 0);
+        let (svc, keys) = setup(256, 0);
         let trace = Trace::generate(&keys, 60, Arrival::Uniform { rate: 5000.0 }, 1);
-        let out = replay(&co, &trace);
+        let out = replay(&svc, &trace);
         assert_eq!(out.completed, 60);
         assert_eq!(out.failed + out.rejected, 0);
         assert!(out.latency.count() == 60);
-        co.shutdown();
+        svc.shutdown();
     }
 
     #[test]
     fn overload_gets_rejected_not_stuck() {
-        // 1ms per batch, queue of 4, offered way over capacity: the
+        // 2ms per batch, queue of 4, offered way over capacity: the
         // open-loop driver must record rejections and still terminate.
-        let (co, keys) = setup(4, 2);
+        let (svc, keys) = setup(4, 2);
         let trace = Trace::generate(&keys, 80, Arrival::Immediate, 2);
-        let out = replay(&co, &trace);
+        let out = replay(&svc, &trace);
         assert_eq!(out.offered, 80);
         assert!(out.rejected > 0, "backpressure should reject under overload");
         assert_eq!(out.completed + out.failed + out.rejected, 80);
-        co.shutdown();
+        svc.shutdown();
     }
 
     #[test]
     fn outcome_summary_renders() {
-        let (co, keys) = setup(64, 0);
+        let (svc, keys) = setup(64, 0);
         let trace = Trace::generate(&keys, 5, Arrival::Immediate, 3);
-        let out = replay(&co, &trace);
+        let out = replay(&svc, &trace);
         assert!(out.summary().contains("completed=5"));
-        co.shutdown();
+        svc.shutdown();
     }
 }

@@ -186,6 +186,69 @@ fn tune_descent_with_cache_round_trips() {
 }
 
 #[test]
+fn serve_mock_single_backend_runs() {
+    if binary().is_none() {
+        return;
+    }
+    // --mock falls back to the built-in demo manifest when no artifacts
+    // exist, so this works in a clean checkout.
+    let (out, err, ok) = run(&["serve", "--mock", "--requests", "16"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("completed 16/16"), "{out}");
+    assert!(out.contains("per-device breakdown"), "{out}");
+    assert!(out.contains("per-priority latency"), "{out}");
+    assert!(out.contains("interactive") && out.contains("batch"), "{out}");
+}
+
+#[test]
+fn serve_mock_fleet_routes_per_device_tiles() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, err, ok) = run(&[
+        "serve",
+        "--mock",
+        "--requests",
+        "24",
+        "--devices",
+        "gtx260,fermi",
+        "--scheduler",
+        "least-loaded",
+        "--policy",
+        "shed-batch",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("2 member(s)"), "{out}");
+    assert!(out.contains("least-loaded") && out.contains("shed-batch"), "{out}");
+    // the fleet tunes each device to its own tile before serving
+    assert!(out.contains("fleet tuning"), "{out}");
+    assert!(out.contains("gtx260") && out.contains("fermi"), "{out}");
+    // With the built-in demo manifest the tuned tiles flip between the
+    // models; a real artifacts/ dir may tune differently, so only pin
+    // the flip when the fallback manifest was in play.
+    let artifacts = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+    if !artifacts.exists() {
+        assert!(out.contains("gtx260 -> 16x8"), "{out}");
+        assert!(out.contains("fermi -> 32x16"), "{out}");
+    }
+}
+
+#[test]
+fn serve_rejects_unknown_scheduler_and_policy() {
+    if binary().is_none() {
+        return;
+    }
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--devices", "gtx260", "--scheduler", "random",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("unknown scheduler 'random'"), "{err}");
+    let (_, err, ok) = run(&["serve", "--mock", "--policy", "yolo"]);
+    assert!(!ok);
+    assert!(err.contains("unknown admission policy 'yolo'"), "{err}");
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     if binary().is_none() {
         return;

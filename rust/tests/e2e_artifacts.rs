@@ -8,8 +8,9 @@
 
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Duration;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
 use tilekit::image::{generate, Image, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Engine, Manifest, ResizeBackend};
@@ -111,23 +112,27 @@ fn tile_variants_agree_numerically() {
 }
 
 #[test]
-fn coordinator_serves_real_artifacts_end_to_end() {
+fn service_serves_real_artifacts_end_to_end() {
     let Some(m) = manifest() else { return };
-    let router = Router::new(&m, TilePolicy::Fixed("32x4".parse().unwrap()));
-    let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m));
+    let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m.clone()));
     let cfg = ServingConfig {
         workers: 2,
         batch_max: 4,
         batch_deadline_ms: 2.0,
         queue_cap: 64,
         artifacts_dir: "artifacts".into(),
+        ..ServingConfig::default()
     };
-    let co = Coordinator::start(&cfg, router, backend);
+    let svc = ServiceBuilder::new(&cfg, &m)
+        .backend(backend, TilePolicy::Fixed("32x4".parse().unwrap()))
+        .admission(BlockWithTimeout(Duration::from_secs(60)))
+        .build()
+        .expect("service starts");
     let img = generate::test_scene(64, 64, 11);
     let want = reference(Interpolator::Bilinear, &img, 2);
     let tickets: Vec<_> = (0..12)
         .map(|_| {
-            co.submit_blocking(Interpolator::Bilinear, img.clone(), 2)
+            svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
                 .expect("admitted")
         })
         .collect();
@@ -136,7 +141,7 @@ fn coordinator_serves_real_artifacts_end_to_end() {
         assert_eq!(out.width(), 128);
         assert!(out.max_abs_diff(&want) < 2e-5);
     }
-    let stats = co.shutdown();
+    let stats = svc.shutdown();
     assert_eq!(stats.completed.get(), 12);
     assert_eq!(stats.failed.get(), 0);
     assert!(

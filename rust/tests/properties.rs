@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use tilekit::codec::json::Json;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{Coordinator, Router, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
 use tilekit::device::{builtin_devices, ComputeCapability};
 use tilekit::image::{generate, Interpolator};
 use tilekit::prop::{forall, prop_assert, prop_close};
@@ -268,11 +268,14 @@ fn prop_coordinator_conserves_requests() {
             batch_max: g.usize(1, 6),
             batch_deadline_ms: 0.5,
             queue_cap: 128,
-            artifacts_dir: ".".into(),
+            ..ServingConfig::default()
         };
-        let router = Router::new(&manifest, TilePolicy::PortableFallback);
         let backend = Arc::new(MockEngine::failing_every(fail_every));
-        let co = Coordinator::start(&cfg, router, backend);
+        let svc = ServiceBuilder::new(&cfg, &manifest)
+            .backend(backend, TilePolicy::PortableFallback)
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .map_err(|e| format!("service start: {e}"))?;
         let n = g.usize(1, 60);
         let img = generate::test_scene(16, 16, 3);
         let mut tickets = Vec::new();
@@ -282,7 +285,7 @@ fn prop_coordinator_conserves_requests() {
                 (Interpolator::Bilinear, 4),
                 (Interpolator::Nearest, 2),
             ]);
-            match co.submit_blocking(kernel, img.clone(), scale) {
+            match svc.submit(Request::new(kernel, img.clone(), scale)) {
                 Ok(t) => tickets.push(t),
                 Err(e) => return Err(format!("unexpected submit error: {e}")),
             }
@@ -295,7 +298,7 @@ fn prop_coordinator_conserves_requests() {
                 Ok(None) => return Err("request timed out".into()),
             }
         }
-        let stats = co.shutdown();
+        let stats = svc.shutdown();
         prop_assert(answered == n, format!("answered {answered} of {n}"))?;
         prop_assert(
             stats.completed.get() + stats.failed.get() == n as u64,
