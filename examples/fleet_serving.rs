@@ -38,9 +38,13 @@ fn serve_once(
 ) -> anyhow::Result<(f64, Vec<(String, String, u64, f64)>)> {
     let cfg = ServingConfig {
         workers: 2,
-        batch_max: 4,
+        batch_max: Some(4),
         batch_deadline_ms: 0.5,
         queue_cap: 512,
+        // This is the STATIC per-device-tile demo: keep the policy
+        // comparison free of work-stealing (see examples/adaptive_fleet.rs
+        // for the adaptive win).
+        work_stealing: false,
         ..ServingConfig::default()
     };
     let svc = ServiceBuilder::new(&cfg, manifest)

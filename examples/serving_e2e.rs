@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = ServingConfig {
         workers: 2,
-        batch_max: 4,
+        batch_max: Some(4),
         batch_deadline_ms: 1.5,
         queue_cap: 256,
         artifacts_dir: "artifacts".into(),
@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         n_requests,
         keys.len(),
         cfg.workers,
-        cfg.batch_max
+        cfg.batch_max.expect("pinned above")
     );
     let t0 = Instant::now();
     let tickets: Vec<_> = workload

@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         ] {
             let cfg = ServingConfig {
                 workers: 2,
-                batch_max: 4,
+                batch_max: Some(4),
                 batch_deadline_ms: 1.0,
                 queue_cap: 64,
                 artifacts_dir: "artifacts".into(),

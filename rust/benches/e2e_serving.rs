@@ -59,7 +59,7 @@ fn main() {
     for (batch_max, workers) in [(1usize, 1usize), (1, 2), (4, 1), (4, 2), (8, 2)] {
         let cfg = ServingConfig {
             workers,
-            batch_max,
+            batch_max: Some(batch_max),
             batch_deadline_ms: 1.0,
             queue_cap: 512,
             artifacts_dir: "artifacts".into(),

@@ -9,7 +9,8 @@
 //! append, exactly the re-runnable workflow the paper's "not always a
 //! good solution ... on other GPU models" finding demands.
 
-use super::outcome::{arr_field, str_field, u64_field, DeviceTuning};
+use super::outcome::{arr_field, str_field, u64_field, DeviceTuning, TuningOutcome};
+use super::portable::portable_over;
 use crate::codec::json::Json;
 use crate::image::Interpolator;
 use crate::tiling::TileDim;
@@ -139,6 +140,44 @@ impl TuningDb {
                 tuning,
             },
         );
+    }
+
+    /// Assemble a routable [`TuningOutcome`] for `device_ids` from the
+    /// stored tunings of one (kernel, scale, src, strategy, tile-set)
+    /// key — the bridge from a refreshed cache to
+    /// [`Service::retune`](crate::coordinator::Service::retune): reload
+    /// the db, call `outcome_for`, hand the outcome to `retune` and the
+    /// member hot-swaps to the new winner. Returns `None` when any of
+    /// the requested devices has no stored tuning (a partial fleet
+    /// outcome would silently fall back to the portable tile for the
+    /// missing members, hiding the staleness this API exists to fix).
+    pub fn outcome_for(
+        &self,
+        kernel: Interpolator,
+        scale: u32,
+        src: (u32, u32),
+        strategy: &str,
+        tiles_fp: &str,
+        device_ids: &[&str],
+    ) -> Option<TuningOutcome> {
+        let per_device: Vec<DeviceTuning> = device_ids
+            .iter()
+            .map(|id| {
+                self.get(id, kernel, scale, src, strategy, tiles_fp)
+                    .cloned()
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let evaluations = per_device.iter().map(|d| d.evaluations).sum();
+        let portable = portable_over(&per_device);
+        Some(TuningOutcome {
+            kernel,
+            scale,
+            src,
+            strategy: strategy.to_string(),
+            evaluations,
+            per_device,
+            portable,
+        })
     }
 
     /// Number of stored tunings.
@@ -316,6 +355,57 @@ mod tests {
         assert!(db
             .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "exhaustive", &fp)
             .is_some());
+    }
+
+    #[test]
+    fn outcome_for_assembles_fleet_outcomes() {
+        let mut db = TuningDb::in_memory();
+        let fp = fp();
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "exhaustive",
+            &fp,
+            tuning("gtx260"),
+        );
+        // Missing member -> None (a partial outcome would hide staleness).
+        assert!(db
+            .outcome_for(
+                Interpolator::Bilinear,
+                8,
+                (800, 800),
+                "exhaustive",
+                &fp,
+                &["gtx260", "8800gts"]
+            )
+            .is_none());
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "exhaustive",
+            &fp,
+            tuning("8800gts"),
+        );
+        let outcome = db
+            .outcome_for(
+                Interpolator::Bilinear,
+                8,
+                (800, 800),
+                "exhaustive",
+                &fp,
+                &["gtx260", "8800gts"],
+            )
+            .unwrap();
+        assert_eq!(outcome.per_device.len(), 2);
+        assert_eq!(outcome.best_for("gtx260"), Some(TileDim::new(32, 4)));
+        assert_eq!(outcome.evaluations, 4);
+        assert!(outcome.portable_tile().is_some());
+        // Wrong key axes still miss.
+        assert!(db
+            .outcome_for(Interpolator::Nearest, 8, (800, 800), "exhaustive", &fp, &["gtx260"])
+            .is_none());
     }
 
     #[test]

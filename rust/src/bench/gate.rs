@@ -1,0 +1,373 @@
+//! The bench-regression gate behind `tilekit bench` and CI's `bench`
+//! job: a fixed smoke suite of hot-path micro-benchmarks, a JSON report
+//! (`BENCH_PR.json` / the committed `BENCH_BASELINE.json`), and the
+//! >N% regression comparison that fails the build.
+//!
+//! Wall-clock µs do not transfer between machines, so the gate compares
+//! **normalized** scores: each bench's mean divided by the mean of a
+//! fixed pure-CPU calibration workload measured in the same run. The
+//! ratio cancels most of the machine-speed difference; raw µs are still
+//! recorded for human trend-reading.
+//!
+//! A baseline marked `"provisional": true` (committed from a machine
+//! that could not measure, to start the perf trajectory) is compared
+//! and reported but never fails the gate; refresh it on a real machine
+//! with `tilekit bench --update-baseline` and commit the result.
+
+use super::harness::Bench;
+use crate::codec::json::Json;
+use crate::coordinator::batcher::BatcherState;
+use crate::coordinator::request::{Priority, RequestKey, ResizeRequest, Ticket};
+use crate::coordinator::stealing::select_steals;
+use crate::device::paper_pair;
+use crate::exec::bounded;
+use crate::image::{generate, Interpolator};
+use crate::sim::{simulate, Launch};
+use crate::tiling::occupancy::{occupancy, KernelResources};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Name of the machine-speed calibration workload every report carries.
+pub const CALIBRATION: &str = "calibration: integer spin";
+
+/// One benched hot path in a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Mean wall time per iteration (µs) on the measuring machine.
+    pub mean_us: f64,
+    /// `mean_us` divided by the calibration workload's mean — the
+    /// machine-portable score the gate compares.
+    pub normalized: f64,
+}
+
+/// A full bench report (the JSON artifact).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub version: u64,
+    /// True when the numbers were not measured where they claim to
+    /// apply; a provisional baseline reports but never fails the gate.
+    pub provisional: bool,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    /// Look up a record by bench name.
+    pub fn record(&self, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("mean_us", r.mean_us)
+                    .set("normalized", r.normalized)
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1u64)
+            .set("provisional", self.provisional)
+            .set("records", Json::Arr(records))
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchReport> {
+        match j.get("version").and_then(Json::as_u64) {
+            Some(1) => {}
+            Some(v) => bail!("unsupported bench report version {v}"),
+            None => bail!("bench report missing 'version'"),
+        }
+        let provisional = j.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bench report missing 'records'"))?
+            .iter()
+            .map(|r| -> Result<BenchRecord> {
+                Ok(BenchRecord {
+                    name: r
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("record missing 'name'"))?
+                        .to_string(),
+                    mean_us: r
+                        .get("mean_us")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("record missing 'mean_us'"))?,
+                    normalized: r
+                        .get("normalized")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("record missing 'normalized'"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchReport {
+            version: 1,
+            provisional,
+            records,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing bench report {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {}", path.display()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+            .with_context(|| format!("in bench report {}", path.display()))
+    }
+}
+
+/// The measurement profile of the gate: fast enough for CI smoke, long
+/// enough to average out scheduler noise.
+pub fn gate_profile() -> Bench {
+    Bench {
+        warmup: Duration::from_millis(50),
+        samples: 10,
+        sample_target: Duration::from_millis(10),
+    }
+}
+
+/// Run the fixed smoke suite and build a report. Prints one line per
+/// bench as it runs.
+pub fn smoke_suite(b: &Bench) -> BenchReport {
+    let (gtx, gts) = paper_pair();
+    let mut measurements = Vec::new();
+
+    let calib = b.report(CALIBRATION, || {
+        let mut x: u64 = 0x9E37_79B9_7F4A_7C15;
+        for i in 0..4096u64 {
+            x = x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(i);
+        }
+        x
+    });
+    let calib_us = calib.mean_us().max(f64::MIN_POSITIVE);
+    measurements.push(calib);
+
+    let launch = Launch::paper(Interpolator::Bilinear, "32x4".parse().unwrap(), 8);
+    measurements.push(b.report("simulate: one launch (gtx260, s8)", || {
+        simulate(&launch, &gtx, None)
+    }));
+    measurements.push(b.report("simulate: one launch (8800gts, s8)", || {
+        simulate(&launch, &gts, None)
+    }));
+
+    let t32x16 = "32x16".parse().unwrap();
+    measurements.push(b.report("occupancy(32x16)", || {
+        occupancy(t32x16, &KernelResources::BILINEAR, &gtx.cc)
+    }));
+
+    measurements.push(b.report("channel send+recv (cap 64)", || {
+        let (tx, rx) = bounded(64);
+        for i in 0..32u32 {
+            tx.send(i).unwrap();
+        }
+        let mut s = 0u32;
+        for _ in 0..32 {
+            s += rx.recv().unwrap();
+        }
+        s
+    }));
+
+    let img = generate::gradient(16, 16);
+    let key = RequestKey::of(Interpolator::Bilinear, &img, 2);
+    measurements.push(b.report("batcher push+flush (batch 8)", || {
+        let mut state = BatcherState::new(8, Duration::from_millis(1));
+        for i in 0..8u64 {
+            let (_t, tx) = Ticket::new(i);
+            if state.push(ResizeRequest::bare(i, key, img.clone(), tx)).is_some() {
+                return 1usize;
+            }
+        }
+        0usize
+    }));
+
+    // The work-stealing selection over a deep mixed queue — the new
+    // fleet hot path this PR adds to the trajectory.
+    let key4 = RequestKey::of(Interpolator::Bilinear, &img, 4);
+    let queue: VecDeque<ResizeRequest> = (0..64u64)
+        .map(|i| {
+            let (_t, tx) = Ticket::new(i);
+            let mut r =
+                ResizeRequest::bare(i, if i % 3 == 0 { key4 } else { key }, img.clone(), tx);
+            if i % 2 == 0 {
+                r.priority = Priority::Batch;
+            }
+            r
+        })
+        .collect();
+    let now = Instant::now();
+    measurements.push(b.report("steal select (64-deep queue)", || {
+        select_steals(&queue, |k| k.scale == 2, now, 8)
+    }));
+
+    BenchReport {
+        version: 1,
+        provisional: false,
+        records: measurements
+            .into_iter()
+            .map(|m| BenchRecord {
+                name: m.name.clone(),
+                normalized: m.mean_us() / calib_us,
+                mean_us: m.mean_us(),
+            })
+            .collect(),
+    }
+}
+
+/// Outcome of comparing a PR report against the baseline.
+#[derive(Debug)]
+pub struct GateResult {
+    /// One human-readable line per compared bench.
+    pub lines: Vec<String>,
+    /// Benches over the threshold (or missing from the current run).
+    pub failures: Vec<String>,
+    /// The baseline was provisional: report, but never fail.
+    pub provisional_baseline: bool,
+}
+
+impl GateResult {
+    /// Does the gate pass?
+    pub fn passed(&self) -> bool {
+        self.provisional_baseline || self.failures.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` on normalized scores; a bench
+/// whose score grew by more than `max_regress_pct` percent (or that
+/// disappeared) is a failure. The calibration workload itself is not
+/// gated (it defines the scale).
+pub fn compare(baseline: &BenchReport, current: &BenchReport, max_regress_pct: f64) -> GateResult {
+    let mut lines = Vec::new();
+    let mut failures = Vec::new();
+    for base in &baseline.records {
+        if base.name == CALIBRATION {
+            continue;
+        }
+        let Some(cur) = current.record(&base.name) else {
+            failures.push(format!("'{}' missing from the current run", base.name));
+            continue;
+        };
+        if base.normalized <= 0.0 || !base.normalized.is_finite() || !cur.normalized.is_finite() {
+            lines.push(format!("{:<44} unreadable scores; skipped", base.name));
+            continue;
+        }
+        let delta_pct = (cur.normalized / base.normalized - 1.0) * 100.0;
+        let verdict = if delta_pct > max_regress_pct {
+            failures.push(format!(
+                "'{}' regressed {delta_pct:+.1}% (limit {max_regress_pct:.0}%)",
+                base.name
+            ));
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        lines.push(format!(
+            "{:<44} base {:>8.3} now {:>8.3} ({delta_pct:+6.1}%) {verdict}",
+            base.name, base.normalized, cur.normalized
+        ));
+    }
+    for cur in &current.records {
+        if cur.name != CALIBRATION && baseline.record(&cur.name).is_none() {
+            lines.push(format!("{:<44} new bench (no baseline)", cur.name));
+        }
+    }
+    GateResult {
+        lines,
+        failures,
+        provisional_baseline: baseline.provisional,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(provisional: bool, scores: &[(&str, f64)]) -> BenchReport {
+        let mut records = vec![BenchRecord {
+            name: CALIBRATION.to_string(),
+            mean_us: 10.0,
+            normalized: 1.0,
+        }];
+        records.extend(scores.iter().map(|(name, norm)| BenchRecord {
+            name: name.to_string(),
+            mean_us: norm * 10.0,
+            normalized: *norm,
+        }));
+        BenchReport {
+            version: 1,
+            provisional,
+            records,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = report(true, &[("simulate", 3.5), ("channel", 0.8)]);
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert!(BenchReport::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(
+            BenchReport::from_json(&Json::parse(r#"{"version": 9, "records": []}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn gate_passes_within_threshold_and_fails_beyond() {
+        let base = report(false, &[("simulate", 1.0), ("channel", 2.0)]);
+        let ok = report(false, &[("simulate", 1.10), ("channel", 1.5)]);
+        let g = compare(&base, &ok, 15.0);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert_eq!(g.lines.len(), 2);
+
+        let bad = report(false, &[("simulate", 1.20), ("channel", 2.0)]);
+        let g = compare(&base, &bad, 15.0);
+        assert!(!g.passed());
+        assert_eq!(g.failures.len(), 1);
+        assert!(g.failures[0].contains("simulate"), "{:?}", g.failures);
+    }
+
+    #[test]
+    fn gate_fails_on_disappeared_bench_and_notes_new_ones() {
+        let base = report(false, &[("simulate", 1.0)]);
+        let cur = report(false, &[("brand-new", 1.0)]);
+        let g = compare(&base, &cur, 15.0);
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("missing"));
+        assert!(g.lines.iter().any(|l| l.contains("new bench")));
+    }
+
+    #[test]
+    fn provisional_baseline_reports_but_never_fails() {
+        let base = report(true, &[("simulate", 1.0)]);
+        let awful = report(false, &[("simulate", 50.0)]);
+        let g = compare(&base, &awful, 15.0);
+        assert!(g.passed(), "provisional baselines must not fail the gate");
+        assert_eq!(g.failures.len(), 1, "the regression is still reported");
+    }
+
+    #[test]
+    fn smoke_suite_produces_normalized_records() {
+        let fast = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 2,
+            sample_target: Duration::from_millis(1),
+        };
+        let r = smoke_suite(&fast);
+        assert!(!r.provisional);
+        assert!(r.records.len() >= 6);
+        assert!(r.record(CALIBRATION).is_some());
+        assert!((r.record(CALIBRATION).unwrap().normalized - 1.0).abs() < 1e-9);
+        assert!(r.records.iter().all(|x| x.mean_us > 0.0 && x.normalized > 0.0));
+        assert!(r.record("steal select (64-deep queue)").is_some());
+    }
+}

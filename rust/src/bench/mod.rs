@@ -1,8 +1,11 @@
 //! Benchmark support: a measurement harness (the offline environment has
-//! no criterion) and the renderers that regenerate the paper's tables and
-//! figures as text/CSV.
+//! no criterion), the renderers that regenerate the paper's tables and
+//! figures as text/CSV, and the CI bench-regression gate behind
+//! `tilekit bench`.
 
 pub mod figures;
+pub mod gate;
 pub mod harness;
 
+pub use gate::{compare, smoke_suite, BenchReport, GateResult};
 pub use harness::{Bench, Measurement};

@@ -45,8 +45,11 @@ impl Default for SweepConfig {
 pub struct ServingConfig {
     /// Worker threads executing artifacts (per device member).
     pub workers: usize,
-    /// Max requests folded into one batch.
-    pub batch_max: usize,
+    /// Max requests folded into one batch. `None` (the default) derives
+    /// each member's cap from its compute capability — see
+    /// [`batch_max_for`](ServingConfig::batch_max_for); `Some(n)` pins
+    /// every member to `n` (the `--batch-max` override).
+    pub batch_max: Option<usize>,
     /// Batching deadline: a partial batch is flushed after this long.
     pub batch_deadline_ms: f64,
     /// Bounded queue capacity per member (backpressure beyond this).
@@ -64,13 +67,20 @@ pub struct ServingConfig {
     pub admission: String,
     /// Wait budget (ms) for the blocking admission policies.
     pub admission_timeout_ms: f64,
+    /// Work-stealing between fleet members: when a member's queue runs
+    /// hot, idle members pull compatible pending requests and serve
+    /// them through their own tuned tiles.
+    pub work_stealing: bool,
+    /// Minimum backlog (queued requests) on a member before peers steal
+    /// from it.
+    pub steal_threshold: usize,
 }
 
 impl Default for ServingConfig {
     fn default() -> Self {
         ServingConfig {
             workers: 2,
-            batch_max: 8,
+            batch_max: None,
             batch_deadline_ms: 2.0,
             queue_cap: 256,
             artifacts_dir: "artifacts".into(),
@@ -78,18 +88,51 @@ impl Default for ServingConfig {
             scheduler: "round-robin".into(),
             admission: "reject".into(),
             admission_timeout_ms: 5000.0,
+            work_stealing: true,
+            steal_threshold: 4,
         }
     }
 }
 
 impl ServingConfig {
+    /// The dynamic-batch cap for one fleet member: the explicit
+    /// `batch_max` override when set, else derived from the member's
+    /// compute capability — an architecture with more resident threads
+    /// per SM amortizes launch overhead over bigger batches, so a
+    /// Fermi-class (cc2.x) part batches 16, a cc1.2/1.3 part 8, and a
+    /// cc1.0/1.1 part 4. Members with no device identity use the
+    /// classic single-backend default
+    /// ([`ANON_BATCH_MAX`](crate::coordinator::ANON_BATCH_MAX)).
+    ///
+    /// Derived caps are clamped to `queue_cap` so the size-triggered
+    /// batch flush stays reachable on tiny queues (an *explicit*
+    /// `batch_max` over `queue_cap` is rejected by
+    /// [`validate`](Self::validate) instead).
+    pub fn batch_max_for(&self, device: Option<&DeviceDescriptor>) -> usize {
+        if let Some(b) = self.batch_max {
+            return b;
+        }
+        let derived = match device {
+            None => crate::coordinator::ANON_BATCH_MAX,
+            // Monotone in capability: anything newer than Fermi batches
+            // at least as big (hand-built descriptors may carry cc > 2.0
+            // even though the registry tops out there).
+            Some(d) => match (d.cc.major, d.cc.minor) {
+                (major, _) if major >= 2 => 16,
+                (1, 2) | (1, 3) => 8,
+                _ => 4,
+            },
+        };
+        derived.min(self.queue_cap.max(1))
+    }
+
     /// Field-level validation, called from config load and again at
     /// `Service` startup (builders can be fed hand-made configs).
     pub fn validate(&self) -> Result<()> {
         if self.workers == 0 {
             bail!("serving.workers must be >= 1 (got 0)");
         }
-        if self.batch_max == 0 {
+        if self.batch_max == Some(0) {
             bail!("serving.batch_max must be >= 1 (got 0)");
         }
         if self.queue_cap == 0 {
@@ -107,12 +150,17 @@ impl ServingConfig {
                 self.admission_timeout_ms
             );
         }
-        if self.queue_cap < self.batch_max {
-            bail!(
-                "serving.queue_cap ({}) must be >= serving.batch_max ({})",
-                self.queue_cap,
-                self.batch_max
-            );
+        if let Some(b) = self.batch_max {
+            if self.queue_cap < b {
+                bail!(
+                    "serving.queue_cap ({}) must be >= serving.batch_max ({})",
+                    self.queue_cap,
+                    b
+                );
+            }
+        }
+        if self.steal_threshold == 0 {
+            bail!("serving.steal_threshold must be >= 1 (got 0)");
         }
         Ok(())
     }
@@ -182,7 +230,7 @@ impl Config {
                 cfg.serving.workers = as_usize(v).context("serving.workers")?;
             }
             if let Some(v) = t.get("batch_max") {
-                cfg.serving.batch_max = as_usize(v).context("serving.batch_max")?;
+                cfg.serving.batch_max = Some(as_usize(v).context("serving.batch_max")?);
             }
             if let Some(v) = t.get("batch_deadline_ms") {
                 cfg.serving.batch_deadline_ms = v
@@ -217,6 +265,15 @@ impl Config {
                 cfg.serving.admission_timeout_ms = v
                     .as_float()
                     .ok_or_else(|| anyhow!("serving.admission_timeout_ms must be a number"))?;
+            }
+            if let Some(v) = t.get("work_stealing") {
+                cfg.serving.work_stealing = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("serving.work_stealing must be a boolean"))?;
+            }
+            if let Some(v) = t.get("steal_threshold") {
+                cfg.serving.steal_threshold =
+                    as_usize(v).context("serving.steal_threshold")?;
             }
         }
 
@@ -331,14 +388,18 @@ kernel = "bilinear"
 
 [serving]
 workers = 2                # per device member
-batch_max = 8
+# batch_max = 8            # omit to derive per member from its compute
+                           # capability (cc2.x: 16, cc1.2/1.3: 8, cc1.0/1.1: 4)
 batch_deadline_ms = 2.0
 queue_cap = 256
 artifacts_dir = "artifacts"
 # devices = ["gtx260", "fermi"]  # fleet members; empty = one anonymous backend
 scheduler = "round-robin"  # round-robin | least-loaded | cost-eta
+                           # (cost-eta also declines deadlines no member can meet)
 admission = "reject"       # reject | block | shed-batch
 admission_timeout_ms = 5000.0
+work_stealing = true       # idle members steal from hot peers' queues
+steal_threshold = 4        # min victim backlog before stealing kicks in
 
 # Custom GPUs (merged over the registry by id):
 # [[device]]
@@ -365,7 +426,52 @@ mod tests {
     fn example_config_parses() {
         let cfg = Config::from_toml_str(EXAMPLE_CONFIG).unwrap();
         assert_eq!(cfg.sweep.scales, vec![2, 4, 6, 8, 10]);
-        assert_eq!(cfg.serving.batch_max, 8);
+        assert_eq!(cfg.serving.batch_max, None, "derived per member by default");
+        assert!(cfg.serving.work_stealing);
+        assert_eq!(cfg.serving.steal_threshold, 4);
+    }
+
+    #[test]
+    fn batch_max_derives_from_compute_capability() {
+        let cfg = ServingConfig::default();
+        let fermi = crate::device::find_device("fermi").unwrap();
+        let gtx260 = crate::device::find_device("gtx260").unwrap(); // cc1.3
+        let g80 = crate::device::find_device("8800gts").unwrap(); // cc1.0
+        assert_eq!(cfg.batch_max_for(Some(&fermi)), 16);
+        assert_eq!(cfg.batch_max_for(Some(&gtx260)), 8);
+        assert_eq!(cfg.batch_max_for(Some(&g80)), 4);
+        assert_eq!(
+            cfg.batch_max_for(None),
+            crate::coordinator::ANON_BATCH_MAX,
+            "anonymous members keep the classic default"
+        );
+        // The override pins every member.
+        let pinned = ServingConfig {
+            batch_max: Some(3),
+            ..ServingConfig::default()
+        };
+        assert_eq!(pinned.batch_max_for(Some(&fermi)), 3);
+        assert_eq!(pinned.batch_max_for(None), 3);
+        // Derived caps clamp to the queue so size-triggered flushes
+        // stay reachable (explicit overrides are validated instead).
+        let tiny = ServingConfig {
+            queue_cap: 8,
+            ..ServingConfig::default()
+        };
+        assert_eq!(tiny.batch_max_for(Some(&fermi)), 8);
+        tiny.validate().unwrap();
+    }
+
+    #[test]
+    fn stealing_fields_parse_and_validate() {
+        let cfg = Config::from_toml_str(
+            "[serving]\nwork_stealing = false\nsteal_threshold = 9\n",
+        )
+        .unwrap();
+        assert!(!cfg.serving.work_stealing);
+        assert_eq!(cfg.serving.steal_threshold, 9);
+        assert!(Config::from_toml_str("[serving]\nsteal_threshold = 0\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nwork_stealing = 7\n").is_err());
     }
 
     #[test]
@@ -437,10 +543,17 @@ global_mem_mib = 64
             ),
             (
                 ServingConfig {
-                    batch_max: 0,
+                    batch_max: Some(0),
                     ..base.clone()
                 },
                 "serving.batch_max",
+            ),
+            (
+                ServingConfig {
+                    steal_threshold: 0,
+                    ..base.clone()
+                },
+                "serving.steal_threshold",
             ),
             (
                 ServingConfig {

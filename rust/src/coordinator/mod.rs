@@ -49,9 +49,22 @@
 //! QoS: requests carry a [`Priority`] class (`Interactive` / `Batch`)
 //! and an optional deadline. Expired requests are shed *before* they
 //! reach a worker (`SubmitError::DeadlineExceeded` at submit when the
-//! budget is already zero); [`Ticket::cancel`] sheds a queued request
-//! before batch pickup. Per-class latency histograms live in
+//! budget is already zero); a deadline-aware scheduler (`cost-eta`)
+//! additionally declines budgets no member's queue-depth-aware ETA can
+//! meet (`SubmitError::Infeasible`); [`Ticket::cancel`] sheds a queued
+//! request before batch pickup. Per-class latency histograms live in
 //! [`ServingStats`].
+//!
+//! The runtime is **adaptive** under skewed traffic:
+//!
+//! * work-stealing — an idle member's batcher pulls compatible pending
+//!   requests from a hot peer's admission queue and serves them through
+//!   its *own* tuned tile ([`stealing`], `ServingStats::{steals,stolen}`);
+//! * per-member `batch_max` — each member's dynamic-batch cap derives
+//!   from its compute capability (a Fermi-class part batches bigger
+//!   than a cc1.0 one) unless `ServingConfig::batch_max` overrides it;
+//! * tuned-tile invalidation — [`Service::retune`] hot-swaps a member's
+//!   router when a tuning refresh changes the winner, without draining.
 
 pub mod admission;
 pub mod batcher;
@@ -60,15 +73,18 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod stats;
+pub mod stealing;
 pub mod worker;
 
 pub use admission::{
     admission_by_name, AdmissionPolicy, BlockWithTimeout, RejectWhenFull, ShedBatchFirst,
 };
 pub use request::{CancelToken, Priority, Request, RequestKey, ResizeRequest, Ticket};
-pub use router::{Router, TilePolicy};
+pub use router::{Router, SharedRouter, TilePolicy};
 pub use scheduler::{
-    scheduler_by_name, CostMeter, CostModelEta, DeviceSnapshot, LeastLoaded, RoundRobin, Scheduler,
+    scheduler_by_name, Biased, CostMeter, CostModelEta, DeviceSnapshot, LeastLoaded, RoundRobin,
+    Scheduler,
 };
-pub use server::{MemberView, Service, ServiceBuilder, SubmitError};
+pub use server::{MemberView, Service, ServiceBuilder, SubmitError, ANON_BATCH_MAX};
 pub use stats::ServingStats;
+pub use stealing::{select_steals, StealPolicy};

@@ -8,6 +8,13 @@ use crate::runtime::{ArtifactEntry, Manifest};
 use crate::tiling::TileDim;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// A hot-swappable router handle shared between a member's submit path,
+/// batcher, and workers. [`Service::retune`](super::Service::retune)
+/// replaces the inner `Arc<Router>` while the pipeline keeps serving;
+/// readers snapshot the current router per operation.
+pub type SharedRouter = Arc<RwLock<Arc<Router>>>;
 
 /// How the router chooses among tile variants of the same artifact shape.
 #[derive(Debug, Clone)]
@@ -89,6 +96,11 @@ impl Router {
             policy,
             table,
         }
+    }
+
+    /// Wrap this router in a hot-swappable [`SharedRouter`] handle.
+    pub fn into_shared(self) -> SharedRouter {
+        Arc::new(RwLock::new(Arc::new(self)))
     }
 
     /// The policy this router was built from.

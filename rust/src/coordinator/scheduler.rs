@@ -12,11 +12,13 @@
 //! * [`LeastLoaded`] — pick the member with the fewest unanswered
 //!   requests (queue + in-flight).
 //! * [`CostModelEta`] — pick the member with the smallest estimated
-//!   completion time `(load + 1) × cost_ms`, where `cost_ms` is the
-//!   [`CostModel`](crate::autotuner::CostModel) (by default the timing
-//!   simulator) estimate of serving this key on that device *through the
-//!   tile its router prefers* — so a device whose tuned tile is fast for
-//!   this shape attracts proportionally more traffic.
+//!   completion time `(load / slots + 1) × cost_ms`, where `cost_ms` is
+//!   the [`CostModel`](crate::autotuner::CostModel) (by default the
+//!   timing simulator) estimate of serving this key on that device
+//!   *through the tile its router prefers*, and `slots` is how many
+//!   requests the member executes concurrently (workers × batch cap) —
+//!   so a device whose tuned tile is fast for this shape attracts
+//!   proportionally more traffic.
 
 use super::request::RequestKey;
 use crate::autotuner::CostModel;
@@ -43,6 +45,9 @@ pub struct DeviceSnapshot<'a> {
     /// Cost-model estimate (ms) of one request of this key on this
     /// member's preferred tile variant; `None` when no estimate exists.
     pub cost_ms: Option<f64>,
+    /// Requests this member executes concurrently (worker threads ×
+    /// dynamic batch cap); divides the backlog in ETA estimates.
+    pub slots: u64,
 }
 
 impl DeviceSnapshot<'_> {
@@ -57,6 +62,17 @@ pub trait Scheduler: Send + Sync {
     /// Return the `index` of a member with `supports == true`, or `None`
     /// when no member can serve the key.
     fn pick(&self, key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize>;
+
+    /// Queue-depth-aware estimate (ms) of the soonest ANY supporting
+    /// member could answer one request of `key`, or `None` when this
+    /// scheduler has no cost information. The service uses it for
+    /// deadline-aware admission: a request whose budget is below this
+    /// floor is declined up front with
+    /// [`SubmitError::Infeasible`](super::SubmitError) instead of being
+    /// accepted and shed later. Default: no estimate (never declines).
+    fn min_eta_ms(&self, _key: &RequestKey, _fleet: &[DeviceSnapshot]) -> Option<f64> {
+        None
+    }
 
     /// Label for reports and `tilekit serve` output.
     fn name(&self) -> &'static str;
@@ -105,11 +121,23 @@ impl Scheduler for LeastLoaded {
 }
 
 /// Pick the member with the smallest estimated completion time
-/// `(load + 1) × cost_ms`. Members without a cost estimate rank last
-/// (but are still eligible — a fleet mixing simulated and opaque
+/// `(load / slots + 1) × cost_ms`. Members without a cost estimate rank
+/// last (but are still eligible — a fleet mixing simulated and opaque
 /// backends degrades to least-loaded among the opaque ones).
 #[derive(Debug, Default)]
 pub struct CostModelEta;
+
+/// Estimated completion time (ms) of one more request on this member:
+/// its backlog divided by its execution parallelism, plus the new
+/// request itself, each at the member's per-request cost. `None` when
+/// the member has no cost estimate. The parallelism division matters
+/// most for the *absolute* infeasibility floor ([`Scheduler::min_eta_ms`]):
+/// a serial estimate would wrongly decline deadlines a multi-worker
+/// member can in fact meet.
+fn eta_ms(s: &DeviceSnapshot) -> Option<f64> {
+    let slots = s.slots.max(1) as f64;
+    s.cost_ms.map(|c| (s.load() as f64 / slots + 1.0) * c)
+}
 
 impl Scheduler for CostModelEta {
     fn pick(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize> {
@@ -117,11 +145,7 @@ impl Scheduler for CostModelEta {
             .iter()
             .filter(|s| s.supports)
             .min_by(|a, b| {
-                let eta = |s: &DeviceSnapshot| {
-                    s.cost_ms
-                        .map(|c| (s.load() as f64 + 1.0) * c)
-                        .unwrap_or(f64::INFINITY)
-                };
+                let eta = |s: &DeviceSnapshot| eta_ms(s).unwrap_or(f64::INFINITY);
                 eta(a)
                     .total_cmp(&eta(b))
                     .then_with(|| a.load().cmp(&b.load()))
@@ -130,8 +154,68 @@ impl Scheduler for CostModelEta {
             .map(|s| s.index)
     }
 
+    /// The deadline-aware floor: the best queue-depth-aware ETA any
+    /// supporting member offers. `None` when no supporting member has a
+    /// cost estimate (an opaque fleet cannot prove a budget infeasible).
+    fn min_eta_ms(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<f64> {
+        fleet
+            .iter()
+            .filter(|s| s.supports)
+            .filter_map(eta_ms)
+            .filter(|eta| eta.is_finite())
+            .min_by(f64::total_cmp)
+    }
+
     fn name(&self) -> &'static str {
         "cost-eta"
+    }
+}
+
+/// Deterministically route `percent`% of traffic to one member (`hot`),
+/// spreading the rest round-robin over the other supporting members.
+/// Not a production scheduler: it reproduces the skewed / hot-spot
+/// routing that the work-stealing tests and the adaptive-fleet demo
+/// need, while staying deterministic.
+#[derive(Debug)]
+pub struct Biased {
+    hot: usize,
+    percent: usize,
+    count: AtomicUsize,
+}
+
+impl Biased {
+    /// Send `percent`% (0..=100) of requests to member index `hot`.
+    pub fn new(hot: usize, percent: usize) -> Biased {
+        assert!(percent <= 100, "percent must be 0..=100");
+        Biased {
+            hot,
+            percent,
+            count: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Scheduler for Biased {
+    fn pick(&self, _key: &RequestKey, fleet: &[DeviceSnapshot]) -> Option<usize> {
+        let n = self.count.fetch_add(1, Ordering::Relaxed);
+        let hot = fleet.iter().find(|s| s.index == self.hot && s.supports);
+        if let Some(h) = hot {
+            if n % 100 < self.percent {
+                return Some(h.index);
+            }
+        }
+        let others: Vec<&DeviceSnapshot> = fleet
+            .iter()
+            .filter(|s| s.supports && s.index != self.hot)
+            .collect();
+        if others.is_empty() {
+            return hot.map(|h| h.index);
+        }
+        Some(others[n % others.len()].index)
+    }
+
+    fn name(&self) -> &'static str {
+        "biased"
     }
 }
 
@@ -205,6 +289,8 @@ mod tests {
             supports,
             inflight,
             cost_ms,
+            // Serial member: (load + 1) × cost, the simplest ETA shape.
+            slots: 1,
         }
     }
 
@@ -247,6 +333,47 @@ mod tests {
         // but are still eligible when nothing has an estimate
         let fleet = [snap(0, true, 4, None), snap(1, true, 2, None)];
         assert_eq!(eta.pick(&key(), &fleet), Some(1));
+    }
+
+    #[test]
+    fn min_eta_is_queue_depth_aware() {
+        let eta = CostModelEta;
+        // Idle fast member: floor = 1 * 1.0.
+        let fleet = [snap(0, true, 0, Some(3.0)), snap(1, true, 0, Some(1.0))];
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), Some(1.0));
+        // Backlog raises the floor: (5+1)*1 vs (0+1)*3 -> 3.0.
+        let fleet = [snap(0, true, 0, Some(3.0)), snap(1, true, 5, Some(1.0))];
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), Some(3.0));
+        // Unsupporting members don't count.
+        let fleet = [snap(0, false, 0, Some(0.1)), snap(1, true, 0, Some(2.0))];
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), Some(2.0));
+        // Execution parallelism divides the backlog: 8 queued on a
+        // 4-slot member is only two waves ahead of the new request.
+        let mut wide = snap(0, true, 8, Some(1.0));
+        wide.slots = 4;
+        assert_eq!(eta.min_eta_ms(&key(), &[wide]), Some(3.0));
+        // No estimates -> no floor (cannot prove infeasibility)...
+        let fleet = [snap(0, true, 9, None)];
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), None);
+        // ...and schedulers without cost information never offer one.
+        assert_eq!(LeastLoaded.min_eta_ms(&key(), &fleet), None);
+        assert_eq!(RoundRobin::default().min_eta_ms(&key(), &fleet), None);
+    }
+
+    #[test]
+    fn biased_skews_deterministically() {
+        let b = Biased::new(0, 80);
+        let fleet = [snap(0, true, 0, None), snap(1, true, 0, None)];
+        let picks: Vec<usize> = (0..100).map(|_| b.pick(&key(), &fleet).unwrap()).collect();
+        let hot = picks.iter().filter(|&&i| i == 0).count();
+        assert_eq!(hot, 80, "exactly 80% of 100 picks hit the hot member");
+        // When the hot member cannot serve the key, traffic spills over.
+        let b = Biased::new(0, 100);
+        let fleet = [snap(0, false, 0, None), snap(1, true, 0, None)];
+        assert_eq!(b.pick(&key(), &fleet), Some(1));
+        // Nobody supports -> None.
+        let fleet = [snap(0, false, 0, None), snap(1, false, 0, None)];
+        assert_eq!(b.pick(&key(), &fleet), None);
     }
 
     #[test]

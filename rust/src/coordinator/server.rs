@@ -39,19 +39,20 @@
 use super::admission::{admission_by_name, AdmissionPolicy};
 use super::batcher::{Batch, BatcherState, Shed};
 use super::request::{Request, RequestKey, ResizeRequest, Ticket};
-use super::router::{Router, TilePolicy};
+use super::router::{Router, SharedRouter, TilePolicy};
 use super::scheduler::{scheduler_by_name, CostMeter, DeviceSnapshot, Scheduler};
 use super::stats::{IdGen, ServingStats};
+use super::stealing::{select_steals, StealPolicy};
 use super::worker::spawn_workers;
-use crate::autotuner::{CostModel, SimCostModel};
+use crate::autotuner::{CostModel, SimCostModel, TuningOutcome};
 use crate::config::ServingConfig;
 use crate::device::DeviceDescriptor;
-use crate::exec::{bounded, Sender};
+use crate::exec::{bounded, Receiver, Sender};
 use crate::runtime::{Manifest, ResizeBackend};
 use crate::tiling::TileDim;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -59,6 +60,15 @@ use std::time::{Duration, Instant};
 /// cancellations and expired deadlines are shed promptly even when the
 /// batch deadline is long.
 const SHED_POLL: Duration = Duration::from_millis(5);
+
+/// Idle-poll interval of a batcher that may steal, used only while a
+/// peer is actually over the steal threshold — a quiet fleet stays on
+/// the slow 50ms idle tick.
+const STEAL_POLL: Duration = Duration::from_millis(2);
+
+/// Dynamic-batch cap for members with no device identity and no
+/// explicit `batch_max` override (the classic single-backend default).
+pub const ANON_BATCH_MAX: usize = 8;
 
 /// Why a submission was not admitted.
 #[derive(Debug, PartialEq, Eq)]
@@ -70,6 +80,10 @@ pub enum SubmitError {
     Unsupported,
     /// The request's latency budget is already spent.
     DeadlineExceeded,
+    /// The deadline budget is below the best queue-depth-aware ETA any
+    /// member offers: no device can meet it, so the service declines up
+    /// front instead of accepting work it would shed later.
+    Infeasible,
     /// Service is shutting down.
     ShuttingDown,
 }
@@ -80,6 +94,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Saturated => write!(f, "admission queue saturated"),
             SubmitError::Unsupported => write!(f, "no device serves this request shape"),
             SubmitError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            SubmitError::Infeasible => {
+                write!(f, "no device can meet the deadline budget at current load")
+            }
             SubmitError::ShuttingDown => write!(f, "service shutting down"),
         }
     }
@@ -100,11 +117,25 @@ struct Member {
     /// Shared with every ticket scheduled onto this member.
     label: Arc<str>,
     device: Option<DeviceDescriptor>,
-    router: Arc<Router>,
+    /// Hot-swappable routing table ([`Service::retune`] replaces the
+    /// inner router while the pipeline keeps serving).
+    router: SharedRouter,
+    /// The manifest the router routes over, kept (shared, not copied)
+    /// for retune rebuilds.
+    manifest: Arc<Manifest>,
     stats: Arc<ServingStats>,
+    /// Sim-cost oracle for this device (None for anonymous members).
+    meter: Option<Arc<CostMeter>>,
     /// Cost-model estimate (ms/request) per supported key, for the
-    /// scheduler's ETA computation. Empty for anonymous members.
-    cost: HashMap<RequestKey, f64>,
+    /// scheduler's ETA computation; refreshed by retune. Empty for
+    /// anonymous members.
+    cost: Arc<RwLock<HashMap<RequestKey, f64>>>,
+    /// This member's dynamic-batch cap (capability-derived unless the
+    /// config overrides it).
+    batch_max: usize,
+    /// Requests this member executes concurrently (workers × batch
+    /// cap); the scheduler's ETA estimates divide the backlog by it.
+    slots: u64,
     admit_tx: Option<Sender<ResizeRequest>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -117,12 +148,50 @@ pub struct MemberView<'a> {
     pub label: &'a str,
     /// The device descriptor, when the member has an identity.
     pub device: Option<&'a DeviceDescriptor>,
-    /// The tile this member's router prefers.
+    /// The tile this member's router currently prefers.
     pub tile_pref: Option<TileDim>,
+    /// The member's dynamic-batch cap (capability-derived unless the
+    /// config overrides it).
+    pub batch_max: usize,
     /// This member's serving stats.
     pub stats: &'a Arc<ServingStats>,
-    /// This member's routing table.
-    pub router: &'a Router,
+    /// Snapshot of this member's current routing table (a retune after
+    /// this call is not reflected).
+    pub router: Arc<Router>,
+}
+
+/// A peer's steal surface, shared with every other member's batcher: the
+/// peer's admission queue (to take work from) and its stats (to record
+/// the transfer on the victim side).
+struct StealPeer {
+    queue: Receiver<ResizeRequest>,
+    stats: Arc<ServingStats>,
+}
+
+/// Everything a member's batcher thread needs beyond its own queues.
+struct BatcherConfig {
+    batch_max: usize,
+    deadline: Duration,
+    /// `Some` when this member may steal from `peers` while idle.
+    steal: Option<StealPolicy>,
+    peers: Vec<StealPeer>,
+}
+
+/// The scheduler's ETA table: the cost-model estimate (ms) of ONE
+/// request per supported key, through the variant `router` prefers.
+fn cost_table(router: &Router, meter: Option<&CostMeter>) -> HashMap<RequestKey, f64> {
+    let mut cost = HashMap::new();
+    if let Some(m) = meter {
+        for key in router.keys() {
+            if let Ok(entry) = router.route(&key, 1) {
+                let ms = m.ms_of(entry);
+                if ms.is_finite() {
+                    cost.insert(key, ms);
+                }
+            }
+        }
+    }
+    cost
 }
 
 /// Builder for a [`Service`]. Register one or more members, then
@@ -244,9 +313,16 @@ impl ServiceBuilder {
                 Duration::from_secs_f64(self.cfg.admission_timeout_ms / 1e3),
             )?,
         };
-        let mut members = Vec::with_capacity(self.members.len());
+        // Phase 1: resolve every member's identity, router, cost table,
+        // batch cap, and admission queue — so phase 2 can hand each
+        // batcher a view of its peers' queues for work-stealing.
+        let shared_manifest = Arc::new(self.manifest);
+        let mut seeds = Vec::with_capacity(self.members.len());
         for (i, spec) in self.members.into_iter().enumerate() {
-            let manifest = spec.manifest.as_ref().unwrap_or(&self.manifest);
+            let manifest = spec
+                .manifest
+                .map(Arc::new)
+                .unwrap_or_else(|| Arc::clone(&shared_manifest));
             let label: Arc<str> = spec
                 .device
                 .as_ref()
@@ -254,38 +330,52 @@ impl ServiceBuilder {
                 .unwrap_or_else(|| format!("dev{i}"))
                 .into();
             let device_id = spec.device.as_ref().map(|d| d.id.clone());
-            let router = Arc::new(Router::for_device(
-                manifest,
-                spec.policy,
-                device_id.as_deref(),
-            ));
+            let router = Router::for_device(&manifest, spec.policy, device_id.as_deref());
             let meter = spec
                 .device
                 .clone()
                 .map(|d| Arc::new(CostMeter::new(d, Arc::clone(&self.cost_model))));
-            // ETA table: the sim estimate of one request per supported
-            // key, through the variant this member's router prefers.
-            let mut cost = HashMap::new();
-            if let Some(m) = &meter {
-                for key in router.keys() {
-                    if let Ok(entry) = router.route(&key, 1) {
-                        let ms = m.ms_of(entry);
-                        if ms.is_finite() {
-                            cost.insert(key, ms);
-                        }
-                    }
-                }
-            }
-            members.push(start_member(
-                &self.cfg,
+            let cost = cost_table(&router, meter.as_deref());
+            let batch_max = self.cfg.batch_max_for(spec.device.as_ref());
+            let (admit_tx, admit_rx) = bounded::<ResizeRequest>(self.cfg.queue_cap);
+            seeds.push(MemberSeed {
                 label,
-                spec.device,
-                router,
-                spec.backend,
+                device: spec.device,
+                manifest,
+                router: router.into_shared(),
+                backend: spec.backend,
                 meter,
-                cost,
-            ));
+                cost: Arc::new(RwLock::new(cost)),
+                stats: Arc::new(ServingStats::new()),
+                batch_max,
+                admit_tx,
+                admit_rx,
+            });
         }
+        // Phase 2: wire each member to its peers and start the
+        // pipelines. A single-member fleet has nobody to steal from.
+        let steal_enabled = self.cfg.work_stealing && seeds.len() > 1;
+        let peer_views: Vec<Vec<StealPeer>> = (0..seeds.len())
+            .map(|i| {
+                if !steal_enabled {
+                    return Vec::new();
+                }
+                seeds
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| *j != i)
+                    .map(|(_, s)| StealPeer {
+                        queue: s.admit_rx.clone(),
+                        stats: Arc::clone(&s.stats),
+                    })
+                    .collect()
+            })
+            .collect();
+        let members = seeds
+            .into_iter()
+            .zip(peer_views)
+            .map(|(seed, peers)| start_member(&self.cfg, seed, peers))
+            .collect();
         Ok(Service {
             members,
             scheduler,
@@ -296,72 +386,57 @@ impl ServiceBuilder {
     }
 }
 
-/// Start one member's pipeline: admission queue → batcher thread →
-/// worker pool (the old single-backend coordinator, one per device).
-fn start_member(
-    cfg: &ServingConfig,
+/// One member after phase-1 resolution, before its threads start.
+struct MemberSeed {
     label: Arc<str>,
     device: Option<DeviceDescriptor>,
-    router: Arc<Router>,
+    manifest: Arc<Manifest>,
+    router: SharedRouter,
     backend: Arc<dyn ResizeBackend>,
     meter: Option<Arc<CostMeter>>,
-    cost: HashMap<RequestKey, f64>,
-) -> Member {
-    let stats = Arc::new(ServingStats::new());
-    let (admit_tx, admit_rx) = bounded::<ResizeRequest>(cfg.queue_cap);
+    cost: Arc<RwLock<HashMap<RequestKey, f64>>>,
+    stats: Arc<ServingStats>,
+    batch_max: usize,
+    admit_tx: Sender<ResizeRequest>,
+    admit_rx: Receiver<ResizeRequest>,
+}
+
+/// Start one member's pipeline: admission queue → batcher thread →
+/// worker pool (the old single-backend coordinator, one per device).
+/// The batcher doubles as the member's work-stealing thief: whenever it
+/// goes idle it may pull compatible pending requests from a hot peer.
+fn start_member(cfg: &ServingConfig, seed: MemberSeed, peers: Vec<StealPeer>) -> Member {
+    let MemberSeed {
+        label,
+        device,
+        manifest,
+        router,
+        backend,
+        meter,
+        cost,
+        stats,
+        batch_max,
+        admit_tx,
+        admit_rx,
+    } = seed;
     let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_cap.max(4));
 
-    // Batcher thread: drain admissions, group, shed cancelled/expired,
-    // flush on size/deadline.
-    let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
-    let batch_max = cfg.batch_max;
+    let bcfg = BatcherConfig {
+        batch_max,
+        deadline: Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3),
+        steal: (!peers.is_empty()).then_some(StealPolicy {
+            min_victim_backlog: cfg.steal_threshold,
+            // Steal at most one batch's worth per attempt.
+            max_per_attempt: batch_max,
+        }),
+        peers,
+    };
     let batcher = {
         let stats = Arc::clone(&stats);
+        let router = Arc::clone(&router);
         std::thread::Builder::new()
             .name(format!("tilekit-batcher-{label}"))
-            .spawn(move || {
-                let mut state = BatcherState::new(batch_max, deadline);
-                loop {
-                    let timeout = match state.next_deadline(Instant::now()) {
-                        // While requests are pending, poll fast enough to
-                        // shed cancellations/deadlines promptly.
-                        Some(d) => d.min(SHED_POLL),
-                        None => Duration::from_millis(50),
-                    };
-                    match admit_rx.recv_timeout(timeout) {
-                        Ok(Some(req)) => {
-                            if let Some(batch) = state.push(req) {
-                                if batch_tx.send(batch).is_err() {
-                                    break;
-                                }
-                            }
-                        }
-                        Ok(None) => {} // timeout: fall through to expiry
-                        Err(_) => break, // admissions closed: shutdown
-                    }
-                    for (req, reason) in state.sweep(Instant::now()) {
-                        let (counter, msg) = match reason {
-                            Shed::Cancelled => (&stats.cancelled, "cancelled"),
-                            Shed::DeadlineExceeded => {
-                                (&stats.shed, "deadline exceeded before execution")
-                            }
-                        };
-                        counter.inc();
-                        let _ = req
-                            .reply
-                            .send(Err(anyhow::anyhow!("request {} {msg}", req.id)));
-                    }
-                    for batch in state.flush_expired(Instant::now()) {
-                        if batch_tx.send(batch).is_err() {
-                            return;
-                        }
-                    }
-                }
-                // Shutdown: flush everything still pending.
-                for batch in state.flush_all() {
-                    let _ = batch_tx.send(batch);
-                }
-            })
+            .spawn(move || run_batcher(bcfg, admit_rx, batch_tx, stats, router))
             .expect("spawn batcher")
     };
 
@@ -371,19 +446,153 @@ fn start_member(
         Arc::clone(&router),
         backend,
         Arc::clone(&stats),
-        meter,
+        meter.clone(),
     );
 
     Member {
         label,
         device,
         router,
+        manifest,
         stats,
+        meter,
         cost,
+        batch_max,
+        slots: (cfg.workers.max(1) * batch_max) as u64,
         admit_tx: Some(admit_tx),
         batcher: Some(batcher),
         workers,
     }
+}
+
+/// The batcher thread body: drain admissions, group, shed
+/// cancelled/expired, flush on size/deadline — and, when idle with
+/// peers configured, steal compatible pending work from the hottest
+/// peer queue over the threshold.
+fn run_batcher(
+    cfg: BatcherConfig,
+    admit_rx: Receiver<ResizeRequest>,
+    batch_tx: Sender<Batch>,
+    stats: Arc<ServingStats>,
+    router: SharedRouter,
+) {
+    let mut state = BatcherState::new(cfg.batch_max, cfg.deadline);
+    // Adaptive idle poll: 50ms while the fleet is quiet, dropping to
+    // STEAL_POLL only while some peer sits at/over the steal threshold
+    // (re-checked on every idle tick).
+    let mut peers_hot = false;
+    loop {
+        let timeout = match state.next_deadline(Instant::now()) {
+            // While requests are pending, poll fast enough to shed
+            // cancellations/deadlines promptly.
+            Some(d) => d.min(SHED_POLL),
+            None if peers_hot => STEAL_POLL,
+            None => Duration::from_millis(50),
+        };
+        match admit_rx.recv_timeout(timeout) {
+            Ok(Some(req)) => {
+                if let Some(batch) = state.push(req) {
+                    if batch_tx.send(batch).is_err() {
+                        return; // workers gone
+                    }
+                }
+            }
+            Ok(None) => {
+                // Timed out with an empty queue. If nothing is pending
+                // locally either, this member is idle — try to steal.
+                // Paced by our own unanswered backlog (under two
+                // batches' worth): a thief must not hoard work faster
+                // than it executes, only keep its own pipeline fed.
+                // While the pacing gate blocks, the fast tick persists
+                // on purpose: it is the pacing poll, bounded by our own
+                // workers' drain time (a batch or two), and dropping to
+                // the slow tick there would cap the steady-state steal
+                // rate at one attempt per 50ms.
+                if let Some(policy) = &cfg.steal {
+                    peers_hot = cfg
+                        .peers
+                        .iter()
+                        .any(|p| p.queue.len() >= policy.min_victim_backlog);
+                    if peers_hot
+                        && state.pending_len() == 0
+                        && stats.inflight() < 2 * cfg.batch_max as u64
+                    {
+                        let (stole, batches) =
+                            steal_from_peers(policy, &cfg.peers, &router, &stats, &mut state);
+                        for batch in batches {
+                            if batch_tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                        // A deep peer whose work we cannot route (or
+                        // that is all cancelled/expired) yields nothing;
+                        // drop back to the slow idle tick instead of
+                        // re-scanning its queue every STEAL_POLL.
+                        if stole == 0 {
+                            peers_hot = false;
+                        }
+                    }
+                }
+            }
+            Err(_) => break, // admissions closed: shutdown
+        }
+        for (req, reason) in state.sweep(Instant::now()) {
+            let (counter, msg) = match reason {
+                Shed::Cancelled => (&stats.cancelled, "cancelled"),
+                Shed::DeadlineExceeded => (&stats.shed, "deadline exceeded before execution"),
+            };
+            counter.inc();
+            let _ = req
+                .reply
+                .send(Err(anyhow::anyhow!("request {} {msg}", req.id)));
+        }
+        for batch in state.flush_expired(Instant::now()) {
+            if batch_tx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+    // Shutdown: flush everything still pending.
+    for batch in state.flush_all() {
+        let _ = batch_tx.send(batch);
+    }
+}
+
+/// One steal attempt by an idle member: pick the deepest peer queue at
+/// or over the backlog threshold, take a compatible slice of its newest
+/// requests (see [`select_steals`] for the invariants), account the
+/// ownership transfer on both sides, and push the loot into the thief's
+/// batcher state. Returns how many requests were stolen and any batches
+/// the loot filled.
+fn steal_from_peers(
+    policy: &StealPolicy,
+    peers: &[StealPeer],
+    router: &SharedRouter,
+    stats: &ServingStats,
+    state: &mut BatcherState,
+) -> (usize, Vec<Batch>) {
+    let Some(victim) = peers
+        .iter()
+        .filter(|p| p.queue.len() >= policy.min_victim_backlog)
+        .max_by_key(|p| p.queue.len())
+    else {
+        return (0, Vec::new());
+    };
+    let current = Arc::clone(&router.read().expect("router lock"));
+    let now = Instant::now();
+    let loot = victim.queue.steal_by(|q| {
+        select_steals(q, |key| current.supports(key), now, policy.max_per_attempt)
+    });
+    let stole = loot.len();
+    let mut batches = Vec::new();
+    for req in loot {
+        victim.stats.stolen.inc();
+        stats.steals.inc();
+        if let Some(batch) = state.push(req) {
+            batches.push(batch);
+        }
+    }
+    (stole, batches)
 }
 
 /// The running fleet-aware serving system.
@@ -412,7 +621,9 @@ impl Service {
     }
 
     /// Submit a typed request. The scheduler picks the member, the
-    /// admission policy decides what a full queue means.
+    /// admission policy decides what a full queue means — and, when the
+    /// scheduler can price the request, a deadline budget below the best
+    /// queue-depth-aware ETA is declined as [`SubmitError::Infeasible`].
     pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
         let key = req.key();
         let now = Instant::now();
@@ -423,11 +634,13 @@ impl Service {
             .map(|(index, m)| DeviceSnapshot {
                 index,
                 device_id: &m.label,
-                supports: m.router.supports(&key),
-                // inflight() = admitted - answered, which already covers
-                // requests still sitting in the admission queue.
+                supports: m.router.read().unwrap().supports(&key),
+                // inflight() = owned - answered, which already covers
+                // requests still sitting in the admission queue (and
+                // accounts for work stolen to/from this member).
                 inflight: m.stats.inflight(),
-                cost_ms: m.cost.get(&key).copied(),
+                cost_ms: m.cost.read().unwrap().get(&key).copied(),
+                slots: m.slots,
             })
             .collect();
         // Unserveable beats expired: a request nobody can route is
@@ -442,7 +655,18 @@ impl Service {
                 self.local.shed.inc();
                 return Err(SubmitError::DeadlineExceeded);
             }
-            Some(budget) => Some(now + budget),
+            Some(budget) => {
+                // Deadline-aware admission: decline a budget no member's
+                // queue-depth-aware ETA can meet, instead of accepting
+                // work the pipeline would shed later.
+                if let Some(eta_ms) = self.scheduler.min_eta_ms(&key, &snaps) {
+                    if eta_ms.is_finite() && eta_ms / 1e3 > budget.as_secs_f64() {
+                        self.local.infeasible.inc();
+                        return Err(SubmitError::Infeasible);
+                    }
+                }
+                Some(now + budget)
+            }
             None => None,
         };
         let Some(index) = self.scheduler.pick(&key, &snaps) else {
@@ -451,7 +675,7 @@ impl Service {
         };
         let member = &self.members[index];
         debug_assert!(
-            member.router.supports(&key),
+            member.router.read().unwrap().supports(&key),
             "scheduler picked a member that cannot route the key"
         );
         let tx = member.admit_tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
@@ -469,12 +693,16 @@ impl Service {
             admitted: now,
             reply,
         };
+        // Count the admission BEFORE the enqueue: the moment the request
+        // is in the queue an idle peer may steal (and even answer) it,
+        // and the victim's accounting must never observe a stolen
+        // request that was not yet admitted. A failed enqueue rolls the
+        // optimistic count back.
+        member.stats.admitted.inc();
         match self.admission.admit(tx, rr) {
-            Ok(()) => {
-                member.stats.admitted.inc();
-                Ok(ticket)
-            }
+            Ok(()) => Ok(ticket),
             Err(e) => {
+                member.stats.admitted.sub(1);
                 // Only backpressure counts as a member rejection; a
                 // budget that ran out while blocked is a shed — recorded
                 // service-side, NOT on the member, because the request
@@ -496,11 +724,45 @@ impl Service {
         let mut ks: Vec<RequestKey> = self
             .members
             .iter()
-            .flat_map(|m| m.router.keys())
+            .flat_map(|m| m.router.read().unwrap().keys())
             .collect();
         ks.sort();
         ks.dedup();
         ks
+    }
+
+    /// Hot-swap a device's tuned tile after a tuning refresh (e.g. a
+    /// [`TuningDb`](crate::autotuner::TuningDb) cache update) changed
+    /// the winner: rebuild the router of **every** member with this
+    /// device id (a fleet may run several identical GPUs) under
+    /// `TilePolicy::PerDevice(outcome)` and refresh the scheduler's ETA
+    /// tables, **without draining the fleet** — batches already picked
+    /// up keep the router they started with; the next batch routes
+    /// through the new tile. Returns the new preferred tile.
+    pub fn retune(&self, device_id: &str, outcome: &TuningOutcome) -> Result<Option<TileDim>> {
+        let mut tile = None;
+        let mut found = false;
+        for member in self.members.iter().filter(|m| &*m.label == device_id) {
+            found = true;
+            let identity = member.device.as_ref().map(|d| d.id.as_str());
+            let next = Arc::new(Router::for_device(
+                &member.manifest,
+                TilePolicy::PerDevice(outcome.clone()),
+                identity,
+            ));
+            let cost = cost_table(&next, member.meter.as_deref());
+            // Cost table first: a scheduler snapshot between the two
+            // writes sees a (new-cost, old-router) pair, which only
+            // mis-prices one pick — both maps cover the same key set.
+            *member.cost.write().unwrap() = cost;
+            tile = next.tile_pref;
+            *member.router.write().unwrap() = next;
+            member.stats.retunes.inc();
+        }
+        if !found {
+            bail!("no fleet member '{device_id}'");
+        }
+        Ok(tile)
     }
 
     /// Number of fleet members.
@@ -512,12 +774,16 @@ impl Service {
     pub fn members(&self) -> Vec<MemberView<'_>> {
         self.members
             .iter()
-            .map(|m| MemberView {
-                label: &m.label,
-                device: m.device.as_ref(),
-                tile_pref: m.router.tile_pref,
-                stats: &m.stats,
-                router: &m.router,
+            .map(|m| {
+                let router = Arc::clone(&m.router.read().unwrap());
+                MemberView {
+                    label: &m.label,
+                    device: m.device.as_ref(),
+                    tile_pref: router.tile_pref,
+                    batch_max: m.batch_max,
+                    stats: &m.stats,
+                    router,
+                }
             })
             .collect()
     }
@@ -610,7 +876,7 @@ mod tests {
     fn cfg() -> ServingConfig {
         ServingConfig {
             workers: 2,
-            batch_max: 4,
+            batch_max: Some(4),
             batch_deadline_ms: 2.0,
             queue_cap: 64,
             ..ServingConfig::default()
@@ -722,7 +988,7 @@ mod tests {
         let m = manifest();
         let small = ServingConfig {
             workers: 1,
-            batch_max: 1,
+            batch_max: Some(1),
             batch_deadline_ms: 0.1,
             queue_cap: 2,
             ..ServingConfig::default()
@@ -806,6 +1072,168 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.completed.get(), 12);
         assert!(stats.sim_cost_ns.get() > 0, "named members meter sim cost");
+    }
+
+    #[test]
+    fn per_member_batch_max_derives_from_capability() {
+        let m = manifest();
+        let auto = ServingConfig {
+            workers: 1,
+            batch_max: None,
+            ..ServingConfig::default()
+        };
+        let svc = ServiceBuilder::new(&auto, &m)
+            .device(
+                crate::device::find_device("8800gts").unwrap(), // cc1.0
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(), // cc2.0
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .backend(Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
+            .build()
+            .unwrap();
+        let caps: Vec<usize> = svc.members().iter().map(|v| v.batch_max).collect();
+        assert_eq!(caps, vec![4, 16, crate::coordinator::ANON_BATCH_MAX]);
+        svc.shutdown();
+        // The override pins everyone.
+        let pinned = ServingConfig {
+            workers: 1,
+            batch_max: Some(2),
+            ..ServingConfig::default()
+        };
+        let svc = ServiceBuilder::new(&pinned, &m)
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .build()
+            .unwrap();
+        assert_eq!(svc.members()[0].batch_max, 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn infeasible_deadline_declined_by_cost_eta_only() {
+        use crate::coordinator::scheduler::CostModelEta;
+        let m = manifest();
+        let build = |cost_eta: bool| {
+            let b = ServiceBuilder::new(&cfg(), &m).device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            );
+            let b = if cost_eta {
+                b.scheduler(CostModelEta)
+            } else {
+                b.scheduler(RoundRobin::default())
+            };
+            b.admission(BlockWithTimeout(Duration::from_secs(10)))
+                .build()
+                .unwrap()
+        };
+        // cost-eta knows the per-request sim cost: a 1ns budget is
+        // provably unmeetable and is declined up front.
+        let svc = build(true);
+        let img = generate::test_scene(16, 16, 11);
+        let r = req(Interpolator::Bilinear, img.clone(), 2).deadline(Duration::from_nanos(1));
+        assert!(matches!(svc.submit(r), Err(SubmitError::Infeasible)));
+        // ...while an unpriced request and a generous budget still flow.
+        let ok = svc
+            .submit(req(Interpolator::Bilinear, img.clone(), 2).deadline(Duration::from_secs(5)))
+            .unwrap();
+        ok.wait().unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(stats.infeasible.get(), 1);
+        assert_eq!(stats.shed.get(), 0, "declined, not shed");
+        // round-robin has no cost information: the same doomed budget is
+        // admitted and shed later by the pipeline instead.
+        let svc = build(false);
+        let r = req(Interpolator::Bilinear, img, 2).deadline(Duration::from_nanos(1));
+        match svc.submit(r) {
+            Ok(t) => {
+                let _ = t.wait();
+            }
+            Err(SubmitError::DeadlineExceeded) => {}
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.infeasible.get(), 0);
+    }
+
+    #[test]
+    fn retune_hot_swaps_tile_without_draining() {
+        use crate::autotuner::{portable_over, DeviceTuning, TunedPoint};
+        let fast = |tile: TileDim, other: TileDim| {
+            let dt = DeviceTuning::from_points(
+                "gtx260".to_string(),
+                vec![
+                    TunedPoint { tile, ms: 1.0 },
+                    TunedPoint {
+                        tile: other,
+                        ms: 2.0,
+                    },
+                ],
+                2,
+            )
+            .unwrap();
+            let per_device = vec![dt];
+            TuningOutcome {
+                kernel: Interpolator::Bilinear,
+                scale: 2,
+                src: (16, 16),
+                strategy: "test".to_string(),
+                evaluations: 2,
+                portable: portable_over(&per_device),
+                per_device,
+            }
+        };
+        let m = Manifest::parse(
+            r#"{
+              "version": 1,
+              "artifacts": [
+                {"name": "a", "kernel": "bilinear", "src": [16, 16],
+                 "scale": 2, "batch": 4, "tile": [4, 32], "path": "x"},
+                {"name": "b", "kernel": "bilinear", "src": [16, 16],
+                 "scale": 2, "batch": 4, "tile": [8, 8], "path": "x"}
+              ]
+            }"#,
+            PathBuf::from("."),
+        )
+        .unwrap();
+        let t32x4 = TileDim::new(32, 4);
+        let t8x8 = TileDim::new(8, 8);
+        let svc = ServiceBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PerDevice(fast(t32x4, t8x8)),
+            )
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        assert_eq!(svc.members()[0].tile_pref, Some(t32x4));
+        let img = generate::test_scene(16, 16, 12);
+        // Keep traffic flowing across the swap: no drain, no rebuild.
+        let before = svc
+            .submit(req(Interpolator::Bilinear, img.clone(), 2))
+            .unwrap();
+        let tile = svc.retune("gtx260", &fast(t8x8, t32x4)).unwrap();
+        assert_eq!(tile, Some(t8x8));
+        assert_eq!(svc.members()[0].tile_pref, Some(t8x8));
+        let after = svc
+            .submit(req(Interpolator::Bilinear, img, 2))
+            .unwrap();
+        before.wait().unwrap();
+        after.wait().unwrap();
+        assert!(svc.retune("ghost", &fast(t8x8, t32x4)).is_err());
+        let stats = svc.shutdown();
+        assert_eq!(stats.retunes.get(), 1);
+        assert_eq!(stats.completed.get(), 2);
     }
 
     #[test]

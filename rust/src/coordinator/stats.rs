@@ -25,6 +25,19 @@ pub struct ServingStats {
     pub shed: Counter,
     /// Requests cancelled by their ticket before execution.
     pub cancelled: Counter,
+    /// Requests this member stole from a hot peer's admission queue
+    /// (thief side: executed here, through this member's own router).
+    pub steals: Counter,
+    /// Requests stolen away from this member's admission queue by an
+    /// idle peer (victim side).
+    pub stolen: Counter,
+    /// Requests declined at submit because no member's queue-aware ETA
+    /// fit the deadline budget (`SubmitError::Infeasible`) — recorded
+    /// service-side, like the submit-path shed counter.
+    pub infeasible: Counter,
+    /// Tuned-tile hot swaps applied to this member
+    /// ([`Service::retune`](super::Service::retune)).
+    pub retunes: Counter,
     /// Batches executed.
     pub batches: Counter,
     /// Sum of batch sizes (mean batch size = batched / batches).
@@ -66,6 +79,10 @@ impl ServingStats {
         self.failed.reset();
         self.shed.reset();
         self.cancelled.reset();
+        self.steals.reset();
+        self.stolen.reset();
+        self.infeasible.reset();
+        self.retunes.reset();
         self.batches.reset();
         self.batched.reset();
         self.latency.reset();
@@ -90,6 +107,10 @@ impl ServingStats {
         self.failed.add(other.failed.get());
         self.shed.add(other.shed.get());
         self.cancelled.add(other.cancelled.get());
+        self.steals.add(other.steals.get());
+        self.stolen.add(other.stolen.get());
+        self.infeasible.add(other.infeasible.get());
+        self.retunes.add(other.retunes.get());
         self.batches.add(other.batches.get());
         self.batched.add(other.batched.get());
         self.latency.merge_from(&other.latency);
@@ -134,11 +155,17 @@ impl ServingStats {
         self.sim_cost_ns.get() as f64 / 1e6
     }
 
-    /// Requests admitted but not yet answered — the scheduler's load
-    /// signal for this device.
+    /// Requests owned by this member and not yet answered — the
+    /// scheduler's load signal for this device. Work-stealing moves
+    /// ownership: a stolen request leaves the victim's backlog
+    /// (`stolen`) and joins the thief's (`steals`).
     pub fn inflight(&self) -> u64 {
-        self.admitted.get().saturating_sub(
-            self.completed.get() + self.failed.get() + self.shed.get() + self.cancelled.get(),
+        (self.admitted.get() + self.steals.get()).saturating_sub(
+            self.completed.get()
+                + self.failed.get()
+                + self.shed.get()
+                + self.cancelled.get()
+                + self.stolen.get(),
         )
     }
 
@@ -156,13 +183,16 @@ impl ServingStats {
     pub fn summary(&self) -> String {
         format!(
             "admitted={} rejected={} completed={} failed={} shed={} cancelled={} \
-             batches={} mean_batch={:.2} | latency {}",
+             steals={} stolen={} infeasible={} batches={} mean_batch={:.2} | latency {}",
             self.admitted.get(),
             self.rejected.get(),
             self.completed.get(),
             self.failed.get(),
             self.shed.get(),
             self.cancelled.get(),
+            self.steals.get(),
+            self.stolen.get(),
+            self.infeasible.get(),
             self.batches.get(),
             self.mean_batch(),
             self.latency.summary(),
@@ -258,6 +288,29 @@ mod tests {
         s.shed.add(2);
         s.cancelled.add(1);
         assert_eq!(s.inflight(), 2);
+    }
+
+    #[test]
+    fn inflight_tracks_stolen_ownership() {
+        // Victim: admitted 10, lost 3 to a thief, answered 7 -> drained.
+        let victim = ServingStats::new();
+        victim.admitted.add(10);
+        victim.stolen.add(3);
+        victim.completed.add(7);
+        assert_eq!(victim.inflight(), 0);
+        // Thief: stole 3, completed 2 -> owns 1.
+        let thief = ServingStats::new();
+        thief.steals.add(3);
+        thief.completed.add(2);
+        assert_eq!(thief.inflight(), 1);
+        // Fleet-wide the merged view still balances: 10 admitted + 3
+        // stolen in, 9 answered + 3 stolen away -> 1 in flight.
+        let total = ServingStats::new();
+        total.merge_from(&victim);
+        total.merge_from(&thief);
+        assert_eq!(total.inflight(), 1);
+        assert_eq!(total.steals.get(), 3);
+        assert_eq!(total.stolen.get(), 3);
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Work-stealing policy: when one fleet member's admission queue runs
+//! hot while another sits idle, the idle member (the *thief*) pulls
+//! compatible pending requests out of the hot member's (the *victim's*)
+//! queue and serves them through its **own** tuned-tile router — the
+//! adaptive complement to per-device tuning under skewed traffic.
+//!
+//! The *selection* is a pure function ([`select_steals`]) over a
+//! snapshot of the victim's queue, so its invariants are
+//! property-testable without threads (see `rust/tests/properties.rs`);
+//! the batcher thread applies it through
+//! [`Receiver::steal_by`](crate::exec::Receiver::steal_by), which
+//! removes the selected items atomically under the queue lock.
+//!
+//! Invariants the selection guarantees:
+//!
+//! 1. only requests the thief's router can serve are taken;
+//! 2. cancelled and deadline-expired requests are never taken (they
+//!    stay put for the victim's sweep to shed with the right error);
+//! 3. priority ordering is respected: `Batch`-class work is stolen
+//!    before `Interactive`-class work — an interactive request moves
+//!    only when every stealable batch request moves with it;
+//! 4. newest-first, at most half the victim's backlog per attempt — the
+//!    victim keeps the oldest requests it is already about to batch.
+
+use super::request::{Priority, RequestKey, ResizeRequest};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// When and how much to steal.
+#[derive(Debug, Clone, Copy)]
+pub struct StealPolicy {
+    /// Minimum victim backlog (queued requests) before stealing is
+    /// worthwhile; below this the victim drains faster on its own.
+    pub min_victim_backlog: usize,
+    /// Cap on requests taken per steal attempt.
+    pub max_per_attempt: usize,
+}
+
+impl Default for StealPolicy {
+    fn default() -> Self {
+        StealPolicy {
+            min_victim_backlog: 4,
+            max_per_attempt: 8,
+        }
+    }
+}
+
+/// Pick which of the victim's queued requests an idle thief should
+/// steal. Returns indices into `queue` (0 = oldest); see the module
+/// docs for the invariants. `supports` is the thief's own routing
+/// predicate — a stolen request is re-routed through the thief's
+/// tuned tile, so the thief must be able to serve its key.
+pub fn select_steals(
+    queue: &VecDeque<ResizeRequest>,
+    supports: impl Fn(&RequestKey) -> bool,
+    now: Instant,
+    max: usize,
+) -> Vec<usize> {
+    let budget = max.min(queue.len() / 2);
+    if budget == 0 {
+        return Vec::new();
+    }
+    let stealable =
+        |r: &ResizeRequest| !r.is_cancelled() && !r.is_expired(now) && supports(&r.key);
+    let mut picked = Vec::with_capacity(budget);
+    // Two passes — batch-class work first — walking from the back
+    // (newest) of the queue.
+    for class in [Priority::Batch, Priority::Interactive] {
+        for i in (0..queue.len()).rev() {
+            if picked.len() >= budget {
+                return picked;
+            }
+            if queue[i].priority == class && stealable(&queue[i]) {
+                picked.push(i);
+            }
+        }
+    }
+    picked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Ticket;
+    use crate::image::{generate, Interpolator};
+    use std::time::Duration;
+
+    fn req(scale: u32, priority: Priority) -> ResizeRequest {
+        let img = generate::gradient(16, 16);
+        let (_t, tx) = Ticket::new(0);
+        let mut r = ResizeRequest::bare(
+            0,
+            RequestKey::of(Interpolator::Bilinear, &img, scale),
+            img,
+            tx,
+        );
+        r.priority = priority;
+        r
+    }
+
+    #[test]
+    fn steals_at_most_half_newest_first() {
+        let q: VecDeque<ResizeRequest> =
+            (0..6).map(|_| req(2, Priority::Interactive)).collect();
+        let picked = select_steals(&q, |_| true, Instant::now(), 100);
+        assert_eq!(picked, vec![5, 4, 3], "newest half, back first");
+        let capped = select_steals(&q, |_| true, Instant::now(), 2);
+        assert_eq!(capped.len(), 2);
+    }
+
+    #[test]
+    fn empty_and_singleton_queues_yield_nothing() {
+        let empty = VecDeque::new();
+        assert!(select_steals(&empty, |_| true, Instant::now(), 8).is_empty());
+        let one: VecDeque<ResizeRequest> = [req(2, Priority::Batch)].into_iter().collect();
+        assert!(select_steals(&one, |_| true, Instant::now(), 8).is_empty());
+    }
+
+    #[test]
+    fn batch_class_is_stolen_before_interactive() {
+        // Oldest->newest: I B I B. Budget 2 must take both batch
+        // requests (indices 3 and 1), not the newer interactive at 2.
+        let q: VecDeque<ResizeRequest> = [
+            req(2, Priority::Interactive),
+            req(2, Priority::Batch),
+            req(2, Priority::Interactive),
+            req(2, Priority::Batch),
+        ]
+        .into_iter()
+        .collect();
+        let picked = select_steals(&q, |_| true, Instant::now(), 2);
+        assert_eq!(picked, vec![3, 1]);
+    }
+
+    #[test]
+    fn skips_unsupported_cancelled_and_expired() {
+        let mut q: VecDeque<ResizeRequest> = VecDeque::new();
+        q.push_back(req(2, Priority::Batch)); // healthy
+        q.push_back(req(4, Priority::Batch)); // thief cannot route scale 4
+        let cancelled = req(2, Priority::Batch);
+        cancelled.cancel.cancel();
+        q.push_back(cancelled);
+        let mut expired = req(2, Priority::Batch);
+        expired.deadline = Some(Instant::now() - Duration::from_millis(1));
+        q.push_back(expired);
+        let picked = select_steals(&q, |k| k.scale == 2, Instant::now(), 8);
+        assert_eq!(picked, vec![0], "only the healthy routable request");
+    }
+}

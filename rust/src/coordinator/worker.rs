@@ -6,7 +6,7 @@
 //! executed requests' sim cost accumulates into the stats.
 
 use super::batcher::Batch;
-use super::router::Router;
+use super::router::{Router, SharedRouter};
 use super::scheduler::CostMeter;
 use super::stats::ServingStats;
 use crate::exec::Receiver;
@@ -16,10 +16,12 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Spawn `n` workers draining `rx`. They exit when the channel closes.
+/// The router is snapshotted per batch: a retune hot-swap applies to
+/// the next batch without draining the pool.
 pub fn spawn_workers(
     n: usize,
     rx: Receiver<Batch>,
-    router: Arc<Router>,
+    router: SharedRouter,
     backend: Arc<dyn ResizeBackend>,
     stats: Arc<ServingStats>,
     meter: Option<Arc<CostMeter>>,
@@ -40,7 +42,8 @@ pub fn spawn_workers(
                         eprintln!("worker {i}: backend warmup failed: {e:#}");
                     }
                     while let Ok(batch) = rx.recv() {
-                        run_batch(batch, &router, backend.as_ref(), &stats, meter.as_deref());
+                        let current = Arc::clone(&router.read().expect("router lock"));
+                        run_batch(batch, &current, backend.as_ref(), &stats, meter.as_deref());
                     }
                 })
                 .expect("spawn worker")

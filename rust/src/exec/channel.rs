@@ -185,6 +185,33 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Remove and return selected items from anywhere in the queue
+    /// (work-stealing). `select` sees a snapshot of the queued items
+    /// (index 0 = oldest) and returns the indices to take; out-of-range
+    /// and duplicate indices are ignored. The relative order of the
+    /// remaining items is preserved, and removals free capacity (the
+    /// `not_full` waiters are woken). Returned items are oldest-first.
+    pub fn steal_by(&self, select: impl FnOnce(&VecDeque<T>) -> Vec<usize>) -> Vec<T> {
+        let mut st = self.0.q.lock().unwrap();
+        let mut idx = select(&st.buf);
+        idx.retain(|&i| i < st.buf.len());
+        idx.sort_unstable();
+        idx.dedup();
+        let mut stolen = Vec::with_capacity(idx.len());
+        for &i in idx.iter().rev() {
+            if let Some(v) = st.buf.remove(i) {
+                stolen.push(v);
+            }
+        }
+        stolen.reverse();
+        let freed = !stolen.is_empty();
+        drop(st);
+        if freed {
+            self.0.not_full.notify_all();
+        }
+        stolen
+    }
+
     /// Drain everything currently queued without blocking.
     pub fn drain_now(&self) -> Vec<T> {
         let mut st = self.0.q.lock().unwrap();
@@ -375,6 +402,41 @@ mod tests {
         let (_tx, rx) = bounded::<u32>(1);
         let got = rx.recv_timeout(Duration::from_millis(10)).unwrap();
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn steal_by_removes_selected_and_frees_capacity() {
+        let (tx, rx) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        // Steal the two even items; bogus/duplicate indices are ignored.
+        let stolen = rx.steal_by(|q| {
+            let mut idx: Vec<usize> =
+                (0..q.len()).filter(|&i| q[i] % 2 == 0).collect();
+            idx.push(99); // out of range
+            idx.push(idx[0]); // duplicate
+            idx
+        });
+        assert_eq!(stolen, vec![0, 2]);
+        // Remaining order preserved, and the freed slots accept sends.
+        tx.try_send(4).unwrap();
+        tx.try_send(5).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 3);
+        assert_eq!(rx.recv().unwrap(), 4);
+        assert_eq!(rx.recv().unwrap(), 5);
+    }
+
+    #[test]
+    fn steal_by_wakes_blocked_sender() {
+        let (tx, rx) = bounded(1);
+        tx.send(0).unwrap();
+        let h = thread::spawn(move || tx.send(1));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.steal_by(|_| vec![0]), vec![0]);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
     }
 
     #[test]

@@ -35,7 +35,7 @@ use tilekit::util::text::fmt_ms;
 const VALUE_FLAGS: &[&str] = &[
     "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
     "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
-    "output", "seed", "strategy", "cache", "scheduler", "policy",
+    "output", "seed", "strategy", "cache", "scheduler", "policy", "baseline", "max-regress",
 ];
 
 fn main() {
@@ -66,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("autotune") => cmd_autotune(args, &cfg),
         Some("resize") => cmd_resize(args, &cfg),
         Some("serve") => cmd_serve(args, &cfg),
+        Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(args, &cfg),
         Some("init-config") => {
             let path = args.get_or("out", "tilekit.toml");
@@ -101,12 +102,24 @@ COMMANDS
   resize <in.pgm> <out.pgm> --scale N [--kernel bilinear] [--artifacts dir] [--mock]
                                         run a real resize through an AOT artifact
   serve [--requests N] [--workers N] [--artifacts dir] [--mock] [--tile WxH]
+        [--tiles t1,t2] [--batch-max N] [--no-steal]
         [--devices a,b] [--scheduler s] [--policy p]
                                         serving demo: batched requests + stats.
                                         --devices starts a simulated fleet with
                                         per-device tuned tiles; --scheduler is
-                                        round-robin|least-loaded|cost-eta;
-                                        --policy is reject|block|shed-batch
+                                        round-robin|least-loaded|cost-eta
+                                        (cost-eta declines infeasible deadlines);
+                                        --policy is reject|block|shed-batch;
+                                        --tiles restricts the tile set (and the
+                                        --mock demo manifest) to these variants;
+                                        --batch-max overrides the per-member
+                                        capability-derived batch cap; --no-steal
+                                        disables work-stealing between members
+  bench [--out f.json] [--baseline f.json] [--max-regress PCT]
+        [--update-baseline] [--full]    hot-path smoke benchmarks; with
+                                        --baseline, fails on >PCT% regression
+                                        of calibration-normalized scores
+                                        (see 'tilekit bench --help')
   artifacts [--artifacts dir] [--verify]
                                         list AOT artifacts with HLO stats;
                                         --verify compiles + checks numerics
@@ -546,6 +559,86 @@ fn cmd_resize(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+const BENCH_HELP: &str = r#"tilekit bench — hot-path smoke benchmarks + the CI regression gate
+
+USAGE: tilekit bench [flags]
+
+FLAGS
+  --json               also print the report JSON to stdout
+  --out FILE           write the report JSON (CI uploads BENCH_PR.json)
+  --baseline FILE      compare against a baseline report; exits non-zero
+                       when any bench's normalized score regressed more
+                       than the threshold. A baseline marked
+                       "provisional": true reports but never fails.
+  --max-regress PCT    regression threshold in percent (default 15)
+  --update-baseline    measure and overwrite the --baseline file
+                       (default BENCH_BASELINE.json) with a fresh,
+                       non-provisional baseline
+  --full               slower full measurement profile (more samples)
+
+Scores are normalized by an in-run integer-spin calibration workload,
+so they transfer across machines far better than raw wall-clock us.
+"#;
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.has("help") {
+        print!("{BENCH_HELP}");
+        return Ok(());
+    }
+    let full = args.has("full");
+    let profile = if full {
+        tilekit::bench::Bench::default()
+    } else {
+        tilekit::bench::gate::gate_profile()
+    };
+    println!(
+        "tilekit bench — smoke suite ({} profile):\n",
+        if full { "full" } else { "gate" }
+    );
+    let report = tilekit::bench::smoke_suite(&profile);
+    if args.has("json") {
+        println!("\n{}", report.to_json().pretty());
+    }
+    if let Some(out) = args.get("out") {
+        report.save(Path::new(out))?;
+        println!("\nwrote report {out}");
+    }
+    if args.has("update-baseline") {
+        // Refresh the baseline from this run; comparing it against
+        // itself would be meaningless, so the gate is skipped.
+        let path = args.get_or("baseline", "BENCH_BASELINE.json");
+        report.save(Path::new(path))?;
+        println!("\nwrote baseline {path}");
+        return Ok(());
+    }
+    if let Some(basepath) = args.get("baseline") {
+        let baseline = tilekit::bench::BenchReport::load(Path::new(basepath))?;
+        let max: f64 = args.get_parsed_or("max-regress", 15.0)?;
+        let gate = tilekit::bench::compare(&baseline, &report, max);
+        println!("\nregression gate vs {basepath} (limit {max:.0}%):");
+        for line in &gate.lines {
+            println!("  {line}");
+        }
+        if gate.provisional_baseline {
+            println!(
+                "note: baseline is PROVISIONAL — reporting only; refresh it with \
+                 `tilekit bench --update-baseline` on a measuring machine"
+            );
+            if !gate.failures.is_empty() {
+                println!("would have failed: {}", gate.failures.join("; "));
+            }
+        } else if !gate.failures.is_empty() {
+            bail!(
+                "bench regression gate failed:\n  {}",
+                gate.failures.join("\n  ")
+            );
+        } else {
+            println!("gate passed: no bench regressed more than {max:.0}%");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args, cfg: &Config) -> Result<()> {
     let dir = args.get_or("artifacts", &cfg.serving.artifacts_dir);
     let manifest = Manifest::load(Path::new(dir))
@@ -626,7 +719,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         serving.workers = w;
     }
     if let Some(b) = args.get_parsed::<usize>("batch-max")? {
-        serving.batch_max = b;
+        serving.batch_max = Some(b);
+    }
+    if args.has("no-steal") {
+        serving.work_stealing = false;
     }
     if let Some(s) = args.get("scheduler") {
         serving.scheduler = s.to_string();
@@ -639,18 +735,56 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         serving.admission = p.to_string();
     }
 
+    // --tiles WxH,WxH restricts the tile set: the demo manifest is
+    // generated over exactly these tiles, and loaded artifact sets are
+    // filtered to them — so a demo's tile list is visible on the command
+    // line instead of baked into `Manifest::fleet_demo`.
+    let tile_set: Option<Vec<TileDim>> = match args.get("tiles") {
+        None => None,
+        Some(_) => {
+            let tiles = args
+                .get_list("tiles")
+                .iter()
+                .map(|s| s.parse::<TileDim>().map_err(|e: String| anyhow!("--tiles: {e}")))
+                .collect::<Result<Vec<_>>>()?;
+            if tiles.is_empty() {
+                bail!("--tiles needs at least one WxH entry");
+            }
+            let mut dedup = tiles.clone();
+            dedup.sort_by_key(|t| (t.x, t.y));
+            dedup.dedup();
+            if dedup.len() != tiles.len() {
+                bail!("--tiles has duplicate entries");
+            }
+            Some(tiles)
+        }
+    };
+
     let mock = args.has("mock");
     let dir = args.get_or("artifacts", &serving.artifacts_dir);
-    let manifest = match Manifest::load(Path::new(dir)) {
+    let mut manifest = match Manifest::load(Path::new(dir)) {
         Ok(m) => m,
         Err(e) if mock => {
             eprintln!("note: no artifacts in '{dir}' ({e:#}); using the built-in demo manifest");
-            Manifest::fleet_demo()
+            match &tile_set {
+                Some(tiles) => Manifest::fleet_demo_with_tiles(tiles)?,
+                None => Manifest::fleet_demo(),
+            }
         }
         Err(e) => {
             return Err(e).with_context(|| format!("loading artifacts from '{dir}' (run `make artifacts`?)"))
         }
     };
+    if let Some(tiles) = &tile_set {
+        let before = manifest.entries.len();
+        manifest.retain_tiles(tiles);
+        if manifest.entries.is_empty() {
+            bail!(
+                "--tiles {} matches none of the {before} artifacts",
+                tiles.iter().map(|t| t.label()).collect::<Vec<_>>().join(",")
+            );
+        }
+    }
     if manifest.entries.is_empty() {
         bail!("manifest has no artifacts");
     }
@@ -727,16 +861,25 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     if keys.is_empty() {
         bail!("no member can serve any manifest shape");
     }
+    let batch_max_label = match serving.batch_max {
+        Some(b) => b.to_string(),
+        None => "auto (per compute capability)".to_string(),
+    };
     println!(
         "serving demo: {} requests over {} artifact shapes, {} member(s), {} workers each, \
-         batch_max {}, scheduler {}, admission {}",
+         batch_max {}, scheduler {}, admission {}, stealing {}",
         n_requests,
         keys.len(),
         svc.member_count(),
         serving.workers,
-        serving.batch_max,
+        batch_max_label,
         svc.scheduler_name(),
         svc.admission_name(),
+        if serving.work_stealing && svc.member_count() > 1 {
+            "on"
+        } else {
+            "off"
+        },
     );
 
     let seed: u64 = args.get_parsed_or("seed", 42)?;
@@ -777,17 +920,31 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 
     // Per-device breakdown BEFORE shutdown consumes the service.
     let mut breakdown = tilekit::util::text::Table::new(vec![
-        "device", "tile", "admitted", "completed", "shed", "batches", "mean batch", "p50 us",
-        "p99 us", "sim cost ms",
+        "device",
+        "tile",
+        "batch max",
+        "admitted",
+        "completed",
+        "shed",
+        "steals",
+        "stolen",
+        "batches",
+        "mean batch",
+        "p50 us",
+        "p99 us",
+        "sim cost ms",
     ]);
     for v in svc.members() {
         let s = v.stats;
         breakdown.row(vec![
             v.label.to_string(),
             v.tile_pref.map(|t| t.label()).unwrap_or_else(|| "-".into()),
+            v.batch_max.to_string(),
             s.admitted.get().to_string(),
             s.completed.get().to_string(),
             (s.shed.get() + s.cancelled.get()).to_string(),
+            s.steals.get().to_string(),
+            s.stolen.get().to_string(),
             s.batches.get().to_string(),
             format!("{:.2}", s.mean_batch()),
             format!("{:.0}", s.latency.percentile_us(50.0)),

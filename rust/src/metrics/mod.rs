@@ -21,6 +21,11 @@ impl Counter {
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
+    /// Undo a previous `add` (e.g. an optimistic admission count rolled
+    /// back when the enqueue fails). Callers must have added `n` first.
+    pub fn sub(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -51,5 +56,13 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn counter_sub_rolls_back_adds() {
+        let c = Counter::new();
+        c.add(3);
+        c.sub(1);
+        assert_eq!(c.get(), 2);
     }
 }

@@ -133,25 +133,52 @@ impl Manifest {
     /// cached-warp Fermi). Shared by `tilekit serve --mock` (when no
     /// artifacts exist), `examples/fleet_serving.rs`, and the fleet
     /// acceptance tests, so their tile assertions stay in lockstep.
+    /// `tilekit serve --mock --tiles` swaps the tile list via
+    /// [`fleet_demo_with_tiles`](Manifest::fleet_demo_with_tiles).
     /// Mock-only: the HLO paths do not exist.
     pub fn fleet_demo() -> Manifest {
-        Manifest::parse(
-            r#"{
-              "version": 1,
-              "artifacts": [
-                {"name": "bl_s2_b1_t16x8", "kernel": "bilinear", "src": [64, 64],
-                 "scale": 2, "batch": 1, "tile": [8, 16], "path": "x"},
-                {"name": "bl_s2_b4_t16x8", "kernel": "bilinear", "src": [64, 64],
-                 "scale": 2, "batch": 4, "tile": [8, 16], "path": "x"},
-                {"name": "bl_s2_b1_t32x16", "kernel": "bilinear", "src": [64, 64],
-                 "scale": 2, "batch": 1, "tile": [16, 32], "path": "x"},
-                {"name": "bl_s2_b4_t32x16", "kernel": "bilinear", "src": [64, 64],
-                 "scale": 2, "batch": 4, "tile": [16, 32], "path": "x"}
-              ]
-            }"#,
-            PathBuf::from("."),
-        )
-        .expect("builtin fleet demo manifest parses")
+        Self::fleet_demo_with_tiles(&[TileDim::new(16, 8), TileDim::new(32, 16)])
+            .expect("builtin fleet demo tile set is valid")
+    }
+
+    /// The fleet demo manifest over an explicit tile set: one bilinear
+    /// 64x64/s2 shape, each tile "compiled" at static batch 1 and 4.
+    /// Errors on an empty or duplicated tile list, so demos fail loudly
+    /// instead of silently depending on a baked-in set.
+    pub fn fleet_demo_with_tiles(tiles: &[TileDim]) -> Result<Manifest> {
+        if tiles.is_empty() {
+            bail!("fleet demo needs at least one tile");
+        }
+        let mut seen: Vec<TileDim> = Vec::new();
+        let mut entries = Vec::with_capacity(tiles.len() * 2);
+        for &tile in tiles {
+            if seen.contains(&tile) {
+                bail!("duplicate tile {tile} in fleet demo tile set");
+            }
+            seen.push(tile);
+            for batch in [1u32, 4] {
+                entries.push(ArtifactEntry {
+                    name: format!("bl_s2_b{batch}_t{tile}"),
+                    kernel: Interpolator::Bilinear,
+                    src: (64, 64),
+                    scale: 2,
+                    batch,
+                    tile,
+                    path: "x".into(),
+                });
+            }
+        }
+        Ok(Manifest {
+            version: 1,
+            entries,
+            dir: PathBuf::from("."),
+        })
+    }
+
+    /// Drop every entry whose tile is not in `tiles` (the `--tiles`
+    /// restriction applied to a loaded artifact set).
+    pub fn retain_tiles(&mut self, tiles: &[TileDim]) {
+        self.entries.retain(|e| tiles.contains(&e.tile));
     }
 
     /// Absolute path of an entry's HLO file.
@@ -252,6 +279,35 @@ mod tests {
     fn shapes_deduped() {
         let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
         assert_eq!(m.shapes().len(), 2);
+    }
+
+    #[test]
+    fn fleet_demo_with_tiles_generates_and_validates() {
+        // The default demo is the two-tile instance of the generator.
+        let demo = Manifest::fleet_demo();
+        assert_eq!(demo.entries.len(), 4);
+        assert!(demo.entries.iter().any(|e| e.name == "bl_s2_b4_t16x8"));
+        assert!(demo.entries.iter().any(|e| e.name == "bl_s2_b1_t32x16"));
+        // Custom tile sets generate batch-1 and batch-4 variants each.
+        let custom =
+            Manifest::fleet_demo_with_tiles(&[TileDim::new(32, 4), TileDim::new(8, 8)]).unwrap();
+        assert_eq!(custom.entries.len(), 4);
+        assert!(custom.entries.iter().all(|e| e.scale == 2 && e.src == (64, 64)));
+        // Empty and duplicated tile lists fail loudly.
+        assert!(Manifest::fleet_demo_with_tiles(&[]).is_err());
+        assert!(
+            Manifest::fleet_demo_with_tiles(&[TileDim::new(8, 8), TileDim::new(8, 8)]).is_err()
+        );
+    }
+
+    #[test]
+    fn retain_tiles_filters_entries() {
+        let mut m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        m.retain_tiles(&[TileDim::new(32, 4)]);
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.entries.iter().all(|e| e.tile == TileDim::new(32, 4)));
+        m.retain_tiles(&[TileDim::new(2, 2)]);
+        assert!(m.entries.is_empty());
     }
 
     #[test]

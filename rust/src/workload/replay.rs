@@ -124,7 +124,8 @@ pub fn replay(svc: &Service, trace: &Trace) -> ReplayOutcome {
             }
             Err(SubmitError::Saturated)
             | Err(SubmitError::Unsupported)
-            | Err(SubmitError::DeadlineExceeded) => rejected += 1,
+            | Err(SubmitError::DeadlineExceeded)
+            | Err(SubmitError::Infeasible) => rejected += 1,
             Err(SubmitError::ShuttingDown) => break,
         }
     }
@@ -170,7 +171,7 @@ mod tests {
         };
         let cfg = ServingConfig {
             workers: 2,
-            batch_max: 4,
+            batch_max: Some(4),
             batch_deadline_ms: 0.5,
             queue_cap,
             ..ServingConfig::default()

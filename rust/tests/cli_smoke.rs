@@ -40,7 +40,7 @@ fn help_lists_commands() {
     }
     let (out, _, ok) = run(&["help"]);
     assert!(ok);
-    for cmd in ["devices", "occupancy", "sweep", "simulate", "autotune", "serve"] {
+    for cmd in ["devices", "occupancy", "sweep", "simulate", "autotune", "serve", "bench"] {
         assert!(out.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -324,5 +324,86 @@ fn resize_file_round_trip_if_artifacts() {
     assert!(ok, "stderr: {err}\nstdout: {out}");
     let result = std::fs::read(&dst).unwrap();
     assert!(result.starts_with(b"P5\n128 128\n255\n"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_mock_accepts_and_validates_tiles_flag() {
+    if binary().is_none() {
+        return;
+    }
+    // A custom tile set replaces the baked-in demo list; force the demo
+    // manifest with a non-existent artifacts dir so the assertion holds
+    // even when artifacts/ is built.
+    let (out, err, ok) = run(&[
+        "serve", "--mock", "--requests", "12", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--tiles", "16x8,32x16",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("fleet tuning"), "{out}");
+    assert!(out.contains("16x8") && out.contains("32x16"), "{out}");
+    // Malformed, empty-matching, and duplicate tile lists fail loudly.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--tiles", "banana",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--tiles"), "{err}");
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--tiles", "8x8,8x8",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("duplicate"), "{err}");
+}
+
+#[test]
+fn serve_mock_batch_max_and_no_steal_flags() {
+    if binary().is_none() {
+        return;
+    }
+    // Default: per-member capability-derived caps, stealing on.
+    let (out, err, ok) = run(&[
+        "serve", "--mock", "--requests", "12", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("auto (per compute capability)"), "{out}");
+    assert!(out.contains("stealing on"), "{out}");
+    // Override pins the cap and --no-steal switches stealing off.
+    let (out, err, ok) = run(&[
+        "serve", "--mock", "--requests", "12", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--batch-max", "2", "--no-steal",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("batch_max 2"), "{out}");
+    assert!(out.contains("stealing off"), "{out}");
+}
+
+#[test]
+fn bench_gate_runs_against_committed_baseline() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_bench");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pr = dir.join("BENCH_PR.json");
+    let pr_s = pr.to_str().unwrap().to_string();
+    // The committed baseline is what CI gates against; the smoke run
+    // must produce a comparable report and write the artifact.
+    let (out, err, ok) = run(&[
+        "bench", "--out", &pr_s, "--baseline", "BENCH_BASELINE.json",
+    ]);
+    assert!(ok, "stderr: {err}\nstdout: {out}");
+    assert!(out.contains("regression gate"), "{out}");
+    assert!(out.contains("calibration"), "{out}");
+    let written = std::fs::read_to_string(&pr).unwrap();
+    assert!(written.contains("\"records\""), "{written}");
+    assert!(written.contains("steal select"), "{written}");
+    // --update-baseline writes a non-provisional baseline.
+    let base = dir.join("BENCH_BASE.json");
+    let base_s = base.to_str().unwrap().to_string();
+    let (_, err, ok) = run(&["bench", "--update-baseline", "--baseline", &base_s]);
+    assert!(ok, "stderr: {err}");
+    let written = std::fs::read_to_string(&base).unwrap();
+    assert!(written.contains("\"provisional\": false"), "{written}");
     std::fs::remove_dir_all(&dir).ok();
 }

@@ -117,7 +117,7 @@ fn service_serves_real_artifacts_end_to_end() {
     let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(m.clone()));
     let cfg = ServingConfig {
         workers: 2,
-        batch_max: 4,
+        batch_max: Some(4),
         batch_deadline_ms: 2.0,
         queue_cap: 64,
         artifacts_dir: "artifacts".into(),

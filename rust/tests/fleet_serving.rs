@@ -7,10 +7,12 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
-use tilekit::autotuner::{SimCostModel, TuningSession};
+use tilekit::autotuner::{
+    DeviceTuning, SimCostModel, TunedPoint, TuningDb, TuningSession,
+};
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    BlockWithTimeout, Priority, RejectWhenFull, Request, RequestKey, RoundRobin, Service,
+    Biased, BlockWithTimeout, Priority, RejectWhenFull, Request, RequestKey, RoundRobin, Service,
     ServiceBuilder, SubmitError, TilePolicy,
 };
 use tilekit::device::{find_device, DeviceDescriptor};
@@ -50,7 +52,7 @@ fn pair() -> (DeviceDescriptor, DeviceDescriptor) {
 fn cfg() -> ServingConfig {
     ServingConfig {
         workers: 2,
-        batch_max: 4,
+        batch_max: Some(4),
         batch_deadline_ms: 0.5,
         queue_cap: 512,
         ..ServingConfig::default()
@@ -77,7 +79,7 @@ fn deadline_expiry_sheds_before_execution() {
     let slow: Arc<MockEngine> = Arc::clone(&backend);
     let config = ServingConfig {
         workers: 1,
-        batch_max: 1,
+        batch_max: Some(1),
         batch_deadline_ms: 0.1,
         queue_cap: 64,
         ..ServingConfig::default()
@@ -138,7 +140,7 @@ fn cancel_before_batch_pickup_never_reaches_a_worker() {
     let engine: Arc<MockEngine> = Arc::clone(&backend);
     let config = ServingConfig {
         workers: 1,
-        batch_max: 4,
+        batch_max: Some(4),
         batch_deadline_ms: 10_000.0,
         queue_cap: 64,
         ..ServingConfig::default()
@@ -280,7 +282,13 @@ fn every_admitted_request_lands_on_a_supporting_device() {
 fn aggregate_sim_cost(policy: TilePolicy, trace: &Trace) -> f64 {
     let (gtx, fermi) = pair();
     let manifest = fleet_manifest();
-    let svc = ServiceBuilder::new(&cfg(), &manifest)
+    // The PR 2 static fleet: no stealing, so the policy comparison is
+    // exactly "which tile does each device route through".
+    let config = ServingConfig {
+        work_stealing: false,
+        ..cfg()
+    };
+    let svc = ServiceBuilder::new(&config, &manifest)
         .device(gtx, Arc::new(MockEngine::new()), policy.clone())
         .device(fermi, Arc::new(MockEngine::new()), policy)
         .scheduler(RoundRobin::default())
@@ -344,4 +352,176 @@ fn per_device_tiles_beat_best_single_fixed_tile_on_a_2_device_fleet() {
         "per-device tiles ({per_device:.4} ms) must beat the best fixed tile \
          ({best_fixed:.4} ms; all fixed: {fixed:?})"
     );
+}
+
+// ------------------------------------------------ the adaptive fleet --
+
+/// THE acceptance criterion of this PR: under a skewed replay trace
+/// (>=70% of requests initially routed to one member), the adaptive
+/// fleet — work-stealing on, so idle capacity pulls queued work out of
+/// the hot member and serves it through its own tuned tile — beats the
+/// PR 2 static fleet on BOTH aggregate sim cost and interactive p99.
+#[test]
+fn adaptive_fleet_beats_static_fleet_on_skewed_trace() {
+    let (gtx, fermi) = pair();
+    let tiles = [TileDim::new(16, 8), TileDim::new(32, 16)];
+    let outcome = TuningSession::new(SimCostModel)
+        .devices([gtx.clone(), fermi.clone()])
+        .kernel(Interpolator::Bilinear)
+        .scale(2)
+        .src((64, 64))
+        .tiles(tiles)
+        .run()
+        .unwrap();
+    // Hot-spot the device whose tuned tile simulates MORE expensive:
+    // stolen overflow then executes on the cheaper device, so the
+    // adaptive win shows up in aggregate sim cost as well as latency.
+    let ms_of = |id: &str| outcome.device(id).unwrap().best_ms;
+    assert_ne!(
+        ms_of("gtx260"),
+        ms_of("fermi"),
+        "fleet must be heterogeneous for the comparison to mean anything"
+    );
+    let hot = if ms_of("gtx260") >= ms_of("fermi") { 0 } else { 1 };
+
+    let n = 160;
+    let trace = Trace::generate(&[bilinear_key()], n, Arrival::Immediate, 77);
+    let run = |stealing: bool| {
+        let config = ServingConfig {
+            workers: 1,
+            batch_max: Some(2),
+            batch_deadline_ms: 0.2,
+            queue_cap: 512,
+            work_stealing: stealing,
+            steal_threshold: 2,
+            ..ServingConfig::default()
+        };
+        let delay = Duration::from_millis(2);
+        let svc = ServiceBuilder::new(&config, &fleet_manifest())
+            .device(
+                gtx.clone(),
+                Arc::new(MockEngine::with_delay(delay)),
+                TilePolicy::PerDevice(outcome.clone()),
+            )
+            .device(
+                fermi.clone(),
+                Arc::new(MockEngine::with_delay(delay)),
+                TilePolicy::PerDevice(outcome.clone()),
+            )
+            // 85% of submissions land on the hot member: the skew the
+            // static fleet cannot escape.
+            .scheduler(Biased::new(hot, 85))
+            .admission(BlockWithTimeout(Duration::from_secs(30)))
+            .build()
+            .unwrap();
+        let out = replay(&svc, &trace);
+        assert_eq!(out.completed, n, "replay must complete everything: {}", out.summary());
+        let admitted_hot = svc.members()[hot].stats.admitted.get();
+        assert!(
+            admitted_hot as f64 >= 0.7 * n as f64,
+            "trace must be skewed (hot member admitted {admitted_hot}/{n})"
+        );
+        let stats = svc.shutdown();
+        assert_eq!(stats.unpriced.get(), 0, "aggregate must be comparable");
+        (
+            stats.sim_cost_ms(),
+            stats.latency_by_class[Priority::Interactive.index()].percentile_us(99.0),
+            stats.steals.get(),
+            stats.stolen.get(),
+        )
+    };
+
+    let (static_cost, static_p99, static_steals, _) = run(false);
+    let (adaptive_cost, adaptive_p99, adaptive_steals, adaptive_stolen) = run(true);
+
+    assert_eq!(static_steals, 0, "the static fleet must not steal");
+    assert!(adaptive_steals > 0, "the adaptive fleet must actually steal");
+    assert_eq!(
+        adaptive_steals, adaptive_stolen,
+        "every theft is accounted on both sides"
+    );
+    assert!(
+        adaptive_cost < static_cost,
+        "adaptive fleet must beat the static fleet on aggregate sim cost: \
+         adaptive {adaptive_cost:.4} ms vs static {static_cost:.4} ms \
+         ({adaptive_steals} steals)"
+    );
+    assert!(
+        adaptive_p99 < static_p99,
+        "adaptive fleet must beat the static fleet on interactive p99: \
+         adaptive {adaptive_p99:.0} us vs static {static_p99:.0} us"
+    );
+}
+
+// ------------------------------------------------- tuned-tile refresh --
+
+/// A `TuningDb` refresh changed a member's winner: `TuningDb::outcome_for`
+/// assembles the fresh fleet outcome and `Service::retune` hot-swaps the
+/// member's router without draining the fleet.
+#[test]
+fn tuning_db_refresh_drives_retune() {
+    let t16x8 = TileDim::new(16, 8);
+    let t32x16 = TileDim::new(32, 16);
+    let tuning = |id: &str, best: TileDim, other: TileDim| {
+        DeviceTuning::from_points(
+            id.to_string(),
+            vec![
+                TunedPoint { tile: best, ms: 1.0 },
+                TunedPoint { tile: other, ms: 2.0 },
+            ],
+            2,
+        )
+        .unwrap()
+    };
+    let fp = TuningDb::tiles_fingerprint(&[t16x8, t32x16]);
+    let key = (Interpolator::Bilinear, 2u32, (64u32, 64u32));
+
+    // Yesterday's cache: both devices prefer 16x8.
+    let mut db = TuningDb::in_memory();
+    db.insert(key.0, key.1, key.2, "exhaustive", &fp, tuning("gtx260", t16x8, t32x16));
+    db.insert(key.0, key.1, key.2, "exhaustive", &fp, tuning("fermi", t16x8, t32x16));
+    let stale = db
+        .outcome_for(key.0, key.1, key.2, "exhaustive", &fp, &["gtx260", "fermi"])
+        .unwrap();
+
+    let (gtx, fermi) = pair();
+    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+        .device(gtx, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale.clone()))
+        .device(fermi, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale))
+        .admission(BlockWithTimeout(Duration::from_secs(10)))
+        .build()
+        .unwrap();
+    assert!(svc.members().iter().all(|v| v.tile_pref == Some(t16x8)));
+
+    // The refresh flips fermi's winner to 32x16. Retune only fermi —
+    // traffic keeps flowing through both members across the swap.
+    db.insert(key.0, key.1, key.2, "exhaustive", &fp, tuning("fermi", t32x16, t16x8));
+    let fresh = db
+        .outcome_for(key.0, key.1, key.2, "exhaustive", &fp, &["gtx260", "fermi"])
+        .unwrap();
+    let img = generate::test_scene(64, 64, 21);
+    let before = svc
+        .submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+        .unwrap();
+    assert_eq!(svc.retune("fermi", &fresh).unwrap(), Some(t32x16));
+    let after = svc
+        .submit(Request::new(Interpolator::Bilinear, img, 2))
+        .unwrap();
+    before.wait().unwrap();
+    after.wait().unwrap();
+
+    let views = svc.members();
+    let tile_of = |label: &str| {
+        views
+            .iter()
+            .find(|v| v.label == label)
+            .map(|v| v.tile_pref)
+            .unwrap()
+    };
+    assert_eq!(tile_of("gtx260"), Some(t16x8), "untouched member keeps its tile");
+    assert_eq!(tile_of("fermi"), Some(t32x16), "retuned member hot-swapped");
+    drop(views);
+    let stats = svc.shutdown();
+    assert_eq!(stats.retunes.get(), 1);
+    assert_eq!(stats.completed.get(), 2);
 }

@@ -265,7 +265,7 @@ fn prop_coordinator_conserves_requests() {
         let fail_every = *g.choose(&[0u64, 2, 3]);
         let cfg = ServingConfig {
             workers: g.usize(1, 4),
-            batch_max: g.usize(1, 6),
+            batch_max: Some(g.usize(1, 6)),
             batch_deadline_ms: 0.5,
             queue_cap: 128,
             ..ServingConfig::default()
@@ -307,6 +307,168 @@ fn prop_coordinator_conserves_requests() {
                 stats.completed.get(),
                 stats.failed.get()
             ),
+        )
+    });
+}
+
+#[test]
+fn prop_work_stealing_selection_invariants() {
+    // The pure steal-selection policy (applied under the queue lock by
+    // Receiver::steal_by) must (1) take only requests the thief can
+    // route, (2) never take cancelled or deadline-expired requests,
+    // (3) respect priority ordering — an Interactive request moves only
+    // if every stealable Batch request moves too — and (4) leave the
+    // victim at least half its backlog.
+    use std::collections::VecDeque;
+    use std::sync::mpsc;
+    use std::time::Instant;
+    use tilekit::coordinator::stealing::select_steals;
+    use tilekit::coordinator::{Priority, RequestKey, ResizeRequest};
+
+    forall("steal selection invariants", 300, |g| {
+        let now = Instant::now();
+        let n = g.usize(0, 12);
+        let img = generate::gradient(8, 8);
+        let mut queue: VecDeque<ResizeRequest> = VecDeque::new();
+        for i in 0..n {
+            let scale = *g.choose(&[2u32, 4]);
+            // Selection never replies, so the receiver can drop.
+            let (tx, _rx) = mpsc::channel();
+            let mut r = ResizeRequest::bare(
+                i as u64,
+                RequestKey::of(Interpolator::Bilinear, &img, scale),
+                img.clone(),
+                tx,
+            );
+            if g.bool() {
+                r.priority = Priority::Batch;
+            }
+            if g.u32(0, 9) == 0 {
+                r.cancel.cancel();
+            }
+            if g.u32(0, 9) == 0 {
+                r.deadline = Some(now - Duration::from_millis(1));
+            }
+            queue.push_back(r);
+        }
+        let max = g.usize(0, 10);
+        // The thief only routes scale-2 work.
+        let supports = |k: &RequestKey| k.scale == 2;
+        let picked = select_steals(&queue, supports, now, max);
+
+        // Indices valid and unique.
+        let mut uniq = picked.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        prop_assert(uniq.len() == picked.len(), "duplicate indices")?;
+        prop_assert(
+            picked.iter().all(|&i| i < queue.len()),
+            "index out of range",
+        )?;
+        // (4) budget: at most max, at most half the queue.
+        prop_assert(
+            picked.len() <= max.min(queue.len() / 2),
+            format!("stole {} of {} (max {max})", picked.len(), queue.len()),
+        )?;
+        let stealable = |r: &ResizeRequest| {
+            !r.is_cancelled() && !r.is_expired(now) && supports(&r.key)
+        };
+        for &i in &picked {
+            let r = &queue[i];
+            // (1) + (2)
+            prop_assert(supports(&r.key), format!("unroutable steal at {i}"))?;
+            prop_assert(!r.is_cancelled(), format!("stole cancelled at {i}"))?;
+            prop_assert(!r.is_expired(now), format!("stole expired at {i}"))?;
+        }
+        // (3) priority ordering: if any Interactive request was picked,
+        // every stealable Batch request must have been picked too.
+        let picked_interactive = picked
+            .iter()
+            .any(|&i| queue[i].priority == Priority::Interactive);
+        if picked_interactive {
+            for (i, r) in queue.iter().enumerate() {
+                if r.priority == Priority::Batch && stealable(r) {
+                    prop_assert(
+                        picked.contains(&i),
+                        format!("interactive stolen while batch {i} left behind"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serving_stats_merge_is_associative() {
+    // Fleet aggregation folds per-member stats (including the new
+    // steal/shed/infeasible counters) in arbitrary order; merge_from
+    // must be associative so (a+b)+c == a+(b+c) for every counter and
+    // histogram count.
+    use tilekit::coordinator::{Priority, ServingStats};
+
+    fn random_stats(g: &mut tilekit::prop::Gen) -> ServingStats {
+        let s = ServingStats::new();
+        s.admitted.add(g.usize(0, 50) as u64);
+        s.rejected.add(g.usize(0, 10) as u64);
+        s.completed.add(g.usize(0, 50) as u64);
+        s.failed.add(g.usize(0, 5) as u64);
+        s.shed.add(g.usize(0, 5) as u64);
+        s.cancelled.add(g.usize(0, 5) as u64);
+        s.steals.add(g.usize(0, 20) as u64);
+        s.stolen.add(g.usize(0, 20) as u64);
+        s.infeasible.add(g.usize(0, 5) as u64);
+        s.retunes.add(g.usize(0, 3) as u64);
+        s.batches.add(g.usize(0, 20) as u64);
+        s.batched.add(g.usize(0, 60) as u64);
+        for _ in 0..g.usize(0, 4) {
+            s.record_latency(
+                *g.choose(&[Priority::Interactive, Priority::Batch]),
+                Duration::from_micros(g.usize(1, 5000) as u64),
+            );
+        }
+        s.record_sim_cost_ms(g.f64(0.0, 2.0));
+        s
+    }
+
+    fn merged(x: &ServingStats, y: &ServingStats) -> ServingStats {
+        let out = ServingStats::new();
+        out.merge_from(x);
+        out.merge_from(y);
+        out
+    }
+
+    forall("merge_from associativity", 100, |g| {
+        let a = random_stats(g);
+        let b = random_stats(g);
+        let c = random_stats(g);
+        let left = merged(&merged(&a, &b), &c);
+        let right = merged(&a, &merged(&b, &c));
+        let counters = |s: &ServingStats| {
+            vec![
+                s.admitted.get(),
+                s.rejected.get(),
+                s.completed.get(),
+                s.failed.get(),
+                s.shed.get(),
+                s.cancelled.get(),
+                s.steals.get(),
+                s.stolen.get(),
+                s.infeasible.get(),
+                s.retunes.get(),
+                s.batches.get(),
+                s.batched.get(),
+                s.sim_cost_ns.get(),
+                s.unpriced.get(),
+                s.latency.count(),
+                s.latency_by_class[0].count(),
+                s.latency_by_class[1].count(),
+                s.inflight(),
+            ]
+        };
+        prop_assert(
+            counters(&left) == counters(&right),
+            format!("{:?} != {:?}", counters(&left), counters(&right)),
         )
     });
 }
