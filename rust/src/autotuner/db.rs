@@ -59,26 +59,38 @@ impl TuningDb {
         if path.exists() {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading tuning cache {}", path.display()))?;
-            let j = Json::parse(&text)
-                .map_err(|e| anyhow!("{e}"))
-                .with_context(|| format!("parsing tuning cache {}", path.display()))?;
-            db.entries = Self::entries_from_json(&j)
-                .with_context(|| format!("in tuning cache {}", path.display()))?;
+            db.entries = Self::from_json_str(&text)
+                .with_context(|| format!("in tuning cache {}", path.display()))?
+                .entries;
         }
         Ok(db)
     }
 
+    /// Parse a database from JSON text, unbacked by a file
+    /// ([`persist`](Self::persist) is a no-op). The
+    /// [`RetuneDaemon`](crate::coordinator::RetuneDaemon) uses this to
+    /// parse the bytes it already read for change detection, instead of
+    /// re-reading the file.
+    pub fn from_json_str(text: &str) -> Result<TuningDb> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Ok(TuningDb {
+            path: None,
+            entries: Self::entries_from_json(&j)?,
+        })
+    }
+
     /// Stable fingerprint of a candidate tile set (FNV-1a over the
-    /// ordered labels): results searched over different candidate sets
-    /// must not be served for one another.
+    /// SORTED labels — the key is about the set, so the order the tiles
+    /// were listed in must not matter): results searched over different
+    /// candidate sets must not be served for one another.
     pub fn tiles_fingerprint(tiles: &[TileDim]) -> String {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for t in tiles {
-            for b in t.label().bytes().chain([b';']) {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x0000_0100_0000_01b3);
-            }
-        }
+        let mut labels: Vec<String> = tiles.iter().map(|t| t.label()).collect();
+        labels.sort();
+        let h = crate::util::fnv1a64(
+            labels
+                .iter()
+                .flat_map(|l| l.bytes().chain([b';'])),
+        );
         format!("{h:016x}")
     }
 
@@ -145,9 +157,11 @@ impl TuningDb {
     /// Assemble a routable [`TuningOutcome`] for `device_ids` from the
     /// stored tunings of one (kernel, scale, src, strategy, tile-set)
     /// key — the bridge from a refreshed cache to
-    /// [`Service::retune`](crate::coordinator::Service::retune): reload
-    /// the db, call `outcome_for`, hand the outcome to `retune` and the
-    /// member hot-swaps to the new winner. Returns `None` when any of
+    /// [`FleetController::retune`](crate::coordinator::FleetController::retune):
+    /// reload the db, call `outcome_for`, hand the outcome to `retune`
+    /// and the member hot-swaps to the new winner (the
+    /// [`RetuneDaemon`](crate::coordinator::RetuneDaemon) automates
+    /// exactly this). Returns `None` when any of
     /// the requested devices has no stored tuning (a partial fleet
     /// outcome would silently fall back to the portable tile for the
     /// missing members, hiding the staleness this API exists to fix).
@@ -355,6 +369,32 @@ mod tests {
         assert!(db
             .get("gtx260", Interpolator::Bilinear, 8, (800, 800), "exhaustive", &fp)
             .is_some());
+    }
+
+    #[test]
+    fn tiles_fingerprint_is_order_insensitive_but_set_sensitive() {
+        let a = TuningDb::tiles_fingerprint(&[TileDim::new(32, 4), TileDim::new(8, 8)]);
+        let b = TuningDb::tiles_fingerprint(&[TileDim::new(8, 8), TileDim::new(32, 4)]);
+        assert_eq!(a, b, "two listings of the same set share one key");
+        let c = TuningDb::tiles_fingerprint(&[TileDim::new(8, 8)]);
+        assert_ne!(a, c, "different sets stay distinct");
+    }
+
+    #[test]
+    fn from_json_str_parses_unbacked() {
+        let mut db = TuningDb::in_memory();
+        db.insert(
+            Interpolator::Bilinear,
+            8,
+            (800, 800),
+            "exhaustive",
+            &fp(),
+            tuning("gtx260"),
+        );
+        let back = TuningDb::from_json_str(&db.to_json().pretty()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert!(back.path().is_none());
+        assert!(TuningDb::from_json_str("not json").is_err());
     }
 
     #[test]

@@ -199,6 +199,52 @@ impl TuningOutcome {
         self.portable.as_ref().map(|c| c.worst_regret)
     }
 
+    /// A copy of this outcome with `device_id`'s cost curve reversed
+    /// (each point's time mirrored across the min/max midpoint), so the
+    /// device's tuned winner provably moves — the deterministic
+    /// stand-in for "a re-tuning run under changed external conditions
+    /// found a new best" used by retune demos and tests. The portable
+    /// pick is recomputed over the flipped curves. `None` when the
+    /// device is absent from the outcome or has no launchable points.
+    pub fn with_flipped_winner(&self, device_id: &str) -> Option<TuningOutcome> {
+        if self.device(device_id).is_none() {
+            return None;
+        }
+        let per_device: Vec<DeviceTuning> = self
+            .per_device
+            .iter()
+            .map(|dt| {
+                if dt.device_id != device_id {
+                    return Some(dt.clone());
+                }
+                // Mirror only the launchable points; a non-finite time
+                // marks an unlaunchable tile and stays unlaunchable.
+                let finite = || dt.points.iter().map(|p| p.ms).filter(|m| m.is_finite());
+                let lo = finite().fold(f64::INFINITY, f64::min);
+                let hi = finite().fold(f64::NEG_INFINITY, f64::max);
+                let points: Vec<TunedPoint> = dt
+                    .points
+                    .iter()
+                    .map(|p| TunedPoint {
+                        tile: p.tile,
+                        ms: if p.ms.is_finite() { (lo + hi) - p.ms } else { p.ms },
+                    })
+                    .collect();
+                DeviceTuning::from_points(dt.device_id.clone(), points, dt.evaluations)
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let portable = super::portable::portable_over(&per_device);
+        Some(TuningOutcome {
+            kernel: self.kernel,
+            scale: self.scale,
+            src: self.src,
+            strategy: format!("{}-flipped", self.strategy),
+            evaluations: self.evaluations,
+            per_device,
+            portable,
+        })
+    }
+
     /// Serialize to a versioned JSON document.
     pub fn to_json(&self) -> Json {
         let devices: Vec<Json> = self.per_device.iter().map(|d| d.to_json()).collect();
@@ -358,6 +404,34 @@ mod tests {
             },
         ];
         DeviceTuning::from_points(id.to_string(), points, 3).unwrap()
+    }
+
+    #[test]
+    fn with_flipped_winner_reverses_one_device_curve() {
+        let per_device = vec![sample_tuning("gtx260", 0.0), sample_tuning("fermi", 0.5)];
+        let outcome = TuningOutcome {
+            kernel: Interpolator::Bilinear,
+            scale: 2,
+            src: (64, 64),
+            strategy: "test".to_string(),
+            evaluations: 6,
+            portable: super::super::portable::portable_over(&per_device),
+            per_device,
+        };
+        assert_eq!(outcome.best_for("gtx260"), Some(TileDim::new(32, 4)));
+        let flipped = outcome.with_flipped_winner("gtx260").unwrap();
+        // The mirrored curve makes the old loser the new winner...
+        assert_eq!(flipped.best_for("gtx260"), Some(TileDim::new(8, 8)));
+        // ...the unlaunchable point stays unlaunchable, the other
+        // device is untouched, and the strategy records the flip.
+        assert_eq!(
+            flipped.device("gtx260").unwrap().time_of(TileDim::new(32, 16)),
+            None
+        );
+        assert_eq!(flipped.best_for("fermi"), outcome.best_for("fermi"));
+        assert!(flipped.strategy.ends_with("-flipped"));
+        // Absent devices flip to nothing.
+        assert!(outcome.with_flipped_winner("ghost").is_none());
     }
 
     #[test]

@@ -74,6 +74,10 @@ pub struct ServingConfig {
     /// Minimum backlog (queued requests) on a member before peers steal
     /// from it.
     pub steal_threshold: usize,
+    /// Poll interval (ms) of the tuning-database watcher behind
+    /// `tilekit serve --watch-db` (the
+    /// [`RetuneDaemon`](crate::coordinator::RetuneDaemon)).
+    pub retune_poll_ms: f64,
 }
 
 impl Default for ServingConfig {
@@ -90,6 +94,7 @@ impl Default for ServingConfig {
             admission_timeout_ms: 5000.0,
             work_stealing: true,
             steal_threshold: 4,
+            retune_poll_ms: 200.0,
         }
     }
 }
@@ -161,6 +166,12 @@ impl ServingConfig {
         }
         if self.steal_threshold == 0 {
             bail!("serving.steal_threshold must be >= 1 (got 0)");
+        }
+        if self.retune_poll_ms.is_nan() || self.retune_poll_ms <= 0.0 {
+            bail!(
+                "serving.retune_poll_ms must be > 0 (got {})",
+                self.retune_poll_ms
+            );
         }
         Ok(())
     }
@@ -274,6 +285,11 @@ impl Config {
             if let Some(v) = t.get("steal_threshold") {
                 cfg.serving.steal_threshold =
                     as_usize(v).context("serving.steal_threshold")?;
+            }
+            if let Some(v) = t.get("retune_poll_ms") {
+                cfg.serving.retune_poll_ms = v
+                    .as_float()
+                    .ok_or_else(|| anyhow!("serving.retune_poll_ms must be a number"))?;
             }
         }
 
@@ -400,6 +416,7 @@ admission = "reject"       # reject | block | shed-batch
 admission_timeout_ms = 5000.0
 work_stealing = true       # idle members steal from hot peers' queues
 steal_threshold = 4        # min victim backlog before stealing kicks in
+retune_poll_ms = 200.0     # tuning-db watcher poll for `serve --watch-db`
 
 # Custom GPUs (merged over the registry by id):
 # [[device]]
@@ -472,6 +489,19 @@ mod tests {
         assert_eq!(cfg.serving.steal_threshold, 9);
         assert!(Config::from_toml_str("[serving]\nsteal_threshold = 0\n").is_err());
         assert!(Config::from_toml_str("[serving]\nwork_stealing = 7\n").is_err());
+    }
+
+    #[test]
+    fn retune_poll_parses_and_validates() {
+        let cfg = Config::from_toml_str("[serving]\nretune_poll_ms = 50.0\n").unwrap();
+        assert_eq!(cfg.serving.retune_poll_ms, 50.0);
+        assert_eq!(
+            ServingConfig::default().retune_poll_ms,
+            200.0,
+            "default poll"
+        );
+        assert!(Config::from_toml_str("[serving]\nretune_poll_ms = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nretune_poll_ms = -5.0\n").is_err());
     }
 
     #[test]
@@ -582,6 +612,13 @@ global_mem_mib = 64
                     ..base.clone()
                 },
                 "serving.admission_timeout_ms",
+            ),
+            (
+                ServingConfig {
+                    retune_poll_ms: 0.0,
+                    ..base.clone()
+                },
+                "serving.retune_poll_ms",
             ),
         ];
         for (cfg, needle) in cases {

@@ -1,0 +1,362 @@
+//! The background retune daemon: watches a [`TuningDb`] file and drives
+//! the fleet's control plane when it changes.
+//!
+//! The paper's finding — a tile tuned for one GPU model degrades on
+//! another "especially when some external conditions were changed" —
+//! means tuning is an ongoing process, not a build-time decision. The
+//! operational loop this module closes:
+//!
+//! 1. a re-tuning run (e.g. `tilekit tune --cache tuning_cache.json`)
+//!    refreshes the persistent tuning database;
+//! 2. the daemon notices the file changed (content fingerprint, not just
+//!    mtime — coarse filesystem timestamps must not hide a rewrite);
+//! 3. it assembles a fresh fleet outcome with [`TuningDb::outcome_for`]
+//!    and issues [`FleetController::retune`] for every member whose
+//!    winner actually moved — a hot swap, no fleet drain.
+//!
+//! Exposed on the CLI as `tilekit serve --watch-db <path>`.
+
+use super::server::FleetController;
+use crate::autotuner::TuningDb;
+use crate::image::Interpolator;
+use crate::metrics::Counter;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Which tuning-database key the daemon watches: the serving shape plus
+/// the two facts that make cache entries non-interchangeable (strategy
+/// and candidate tile set — see [`TuningDb::key`]).
+#[derive(Debug, Clone)]
+pub struct RetuneSpec {
+    pub kernel: Interpolator,
+    pub scale: u32,
+    /// Source size, in the same orientation the tuning runs were keyed
+    /// with (a `TuningSession`'s `src`).
+    pub src: (u32, u32),
+    /// Strategy name the cache entries were produced by.
+    pub strategy: String,
+    /// Candidate-tile-set fingerprint ([`TuningDb::tiles_fingerprint`]).
+    pub tiles_fp: String,
+}
+
+/// Live counters of one daemon's activity.
+#[derive(Debug, Default)]
+pub struct RetuneDaemonStats {
+    /// Poll ticks that looked at the file.
+    pub polls: Counter,
+    /// Distinct file contents observed (including the first sighting).
+    pub refreshes: Counter,
+    /// `retune` commands issued (members whose winner moved).
+    pub applied: Counter,
+    /// Refreshes that could not be applied (unreadable/incomplete db).
+    pub errors: Counter,
+}
+
+/// A cheap content fingerprint ([`crate::util::fnv1a64`]): refresh
+/// detection must survive filesystems with coarse mtime granularity and
+/// same-length rewrites.
+fn fingerprint(bytes: &[u8]) -> u64 {
+    crate::util::fnv1a64(bytes.iter().copied())
+}
+
+/// One refresh: reload `db`, assemble the fleet outcome for the watched
+/// key, and retune every member whose current preferred tile differs
+/// from the refreshed winner. Returns how many members were retuned.
+/// Errors when the db has no complete outcome for the fleet's devices
+/// (a partial outcome would silently hide staleness).
+pub fn apply_refresh(
+    controller: &FleetController,
+    db: &TuningDb,
+    spec: &RetuneSpec,
+) -> anyhow::Result<usize> {
+    let topo = controller.topology();
+    let labels: Vec<Arc<str>> = {
+        let mut seen: Vec<Arc<str>> = Vec::new();
+        for m in topo.members.iter().filter(|m| m.device.is_some()) {
+            if !seen.contains(&m.label) {
+                seen.push(Arc::clone(&m.label));
+            }
+        }
+        seen
+    };
+    if labels.is_empty() {
+        anyhow::bail!("fleet has no device members to retune");
+    }
+    let ids: Vec<&str> = labels.iter().map(|l| &**l).collect();
+    let outcome = db
+        .outcome_for(
+            spec.kernel,
+            spec.scale,
+            spec.src,
+            &spec.strategy,
+            &spec.tiles_fp,
+            &ids,
+        )
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "tuning db has no complete outcome for devices {ids:?} at the watched key"
+            )
+        })?;
+    let mut applied = 0;
+    for label in &labels {
+        let fresh = outcome.best_for(label).or_else(|| outcome.portable_tile());
+        // Labels are not unique (a fleet may run several identical
+        // GPUs): retune when ANY member under this label is off the
+        // fresh winner — retune itself rebuilds every one of them.
+        let stale = topo
+            .members
+            .iter()
+            .filter(|m| m.label == *label)
+            .any(|m| m.tile_pref != fresh);
+        if stale {
+            controller.retune(label, &outcome)?;
+            applied += 1;
+        }
+    }
+    Ok(applied)
+}
+
+/// The background watcher. Spawn with [`RetuneDaemon::spawn`]; the
+/// thread exits on [`stop`](RetuneDaemon::stop), when dropped, or when
+/// the watched fleet shuts down.
+pub struct RetuneDaemon {
+    stop: Arc<AtomicBool>,
+    stats: Arc<RetuneDaemonStats>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RetuneDaemon {
+    /// Start watching `path` every `poll`, driving `controller` on
+    /// change. A missing file is not an error — the daemon waits for it
+    /// to appear (the first successful read counts as a refresh).
+    pub fn spawn(
+        controller: FleetController,
+        path: PathBuf,
+        spec: RetuneSpec,
+        poll: Duration,
+    ) -> RetuneDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(RetuneDaemonStats::default());
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let stats = Arc::clone(&stats);
+            std::thread::Builder::new()
+                .name("tilekit-retune-daemon".into())
+                .spawn(move || run_daemon(controller, &path, &spec, poll, &stop, &stats))
+                .expect("spawn retune daemon")
+        };
+        RetuneDaemon {
+            stop,
+            stats,
+            handle: Some(handle),
+        }
+    }
+
+    /// The daemon's live activity counters.
+    pub fn stats(&self) -> &Arc<RetuneDaemonStats> {
+        &self.stats
+    }
+
+    /// Stop the watcher and join its thread.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RetuneDaemon {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn run_daemon(
+    controller: FleetController,
+    path: &Path,
+    spec: &RetuneSpec,
+    poll: Duration,
+    stop: &AtomicBool,
+    stats: &RetuneDaemonStats,
+) {
+    // Sleep in short slices so stop() returns promptly even with a
+    // long poll interval.
+    let slice = poll.min(Duration::from_millis(50)).max(Duration::from_millis(1));
+    // `applied_state`: the (content fingerprint, topology epoch) pair
+    // the db was last successfully applied against. Re-applying when
+    // the EPOCH moved (not just the file) reconciles members added
+    // after the last refresh, whose build-time policy may disagree with
+    // the db. `seen_fp` tracks the last content attempted, so each
+    // distinct file state is counted once in `refreshes`/`errors`; a
+    // refresh whose apply failed transiently (e.g. the fleet briefly
+    // held a member the db has no entry for) keeps retrying every poll
+    // until it applies or the file changes again.
+    let mut applied_state: Option<(u64, u64)> = None;
+    let mut seen_fp: Option<u64> = None;
+    let mut since_poll = poll; // poll immediately on startup
+    while !stop.load(Ordering::Acquire) && !controller.is_closed() {
+        if since_poll < poll {
+            std::thread::sleep(slice);
+            since_poll += slice;
+            continue;
+        }
+        since_poll = Duration::ZERO;
+        stats.polls.inc();
+        let Ok(bytes) = std::fs::read(path) else {
+            continue; // missing/unreadable: keep waiting
+        };
+        let fp = fingerprint(&bytes);
+        // The epoch is read BEFORE applying: a membership change racing
+        // the apply leaves `applied_state` stale, so the next poll
+        // re-applies and converges.
+        let epoch = controller.epoch();
+        if applied_state == Some((fp, epoch)) {
+            continue;
+        }
+        let fresh_content = seen_fp != Some(fp);
+        if fresh_content {
+            seen_fp = Some(fp);
+            stats.refreshes.inc();
+        }
+        // Parse the bytes already read for change detection — one read
+        // per poll, and the applied content is exactly the content the
+        // fingerprint describes (no read-read race).
+        match TuningDb::from_json_str(&String::from_utf8_lossy(&bytes))
+            .and_then(|db| apply_refresh(&controller, &db, spec))
+        {
+            Ok(applied) => {
+                stats.applied.add(applied as u64);
+                applied_state = Some((fp, epoch));
+            }
+            Err(_) => {
+                if fresh_content {
+                    stats.errors.inc();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::{DeviceTuning, TunedPoint};
+    use crate::config::ServingConfig;
+    use crate::coordinator::{FleetBuilder, TilePolicy};
+    use crate::runtime::{Manifest, MockEngine};
+    use crate::tiling::TileDim;
+
+    fn tuning(id: &str, best: TileDim, other: TileDim) -> DeviceTuning {
+        DeviceTuning::from_points(
+            id.to_string(),
+            vec![
+                TunedPoint { tile: best, ms: 1.0 },
+                TunedPoint { tile: other, ms: 2.0 },
+            ],
+            2,
+        )
+        .unwrap()
+    }
+
+    fn spec(fp: &str) -> RetuneSpec {
+        RetuneSpec {
+            kernel: Interpolator::Bilinear,
+            scale: 2,
+            src: (64, 64),
+            strategy: "exhaustive".to_string(),
+            tiles_fp: fp.to_string(),
+        }
+    }
+
+    #[test]
+    fn apply_refresh_retunes_only_moved_winners() {
+        let t16x8 = TileDim::new(16, 8);
+        let t32x16 = TileDim::new(32, 16);
+        let fp = TuningDb::tiles_fingerprint(&[t16x8, t32x16]);
+        let mut db = TuningDb::in_memory();
+        db.insert(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            tuning("gtx260", t16x8, t32x16),
+        );
+        db.insert(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            tuning("fermi", t16x8, t32x16),
+        );
+        let stale = db
+            .outcome_for(
+                Interpolator::Bilinear,
+                2,
+                (64, 64),
+                "exhaustive",
+                &fp,
+                &["gtx260", "fermi"],
+            )
+            .unwrap();
+        let cfg = ServingConfig {
+            workers: 1,
+            batch_max: Some(4),
+            ..ServingConfig::default()
+        };
+        let fleet = FleetBuilder::new(&cfg, &Manifest::fleet_demo())
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PerDevice(stale.clone()),
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PerDevice(stale),
+            )
+            .build()
+            .unwrap();
+        let ctl = fleet.controller();
+        // Same winners -> nothing to apply.
+        assert_eq!(apply_refresh(&ctl, &db, &spec(&fp)).unwrap(), 0);
+        // Flip fermi's winner -> exactly one member retunes.
+        db.insert(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            tuning("fermi", t32x16, t16x8),
+        );
+        assert_eq!(apply_refresh(&ctl, &db, &spec(&fp)).unwrap(), 1);
+        let views = fleet.members();
+        let tile_of = |label: &str| {
+            views
+                .iter()
+                .find(|v| &*v.label == label)
+                .and_then(|v| v.tile_pref)
+        };
+        assert_eq!(tile_of("gtx260"), Some(t16x8));
+        assert_eq!(tile_of("fermi"), Some(t32x16));
+        // An incomplete db (wrong key) errors instead of half-applying.
+        assert!(apply_refresh(&ctl, &db, &spec("deadbeef")).is_err());
+        let stats = fleet.shutdown();
+        assert_eq!(stats.retunes.get(), 1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_contents() {
+        assert_ne!(fingerprint(b"abc"), fingerprint(b"abd"));
+        assert_eq!(fingerprint(b"abc"), fingerprint(b"abc"));
+    }
+}

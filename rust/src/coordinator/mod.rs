@@ -1,8 +1,27 @@
 //! The serving layer (L3): a **fleet-aware** image-resize service in the
-//! style of an inference router. A [`Service`] owns N device members —
-//! each with its own tuned-tile router, bounded admission queue, dynamic
-//! batcher (size + deadline), and worker pool — and schedules every
-//! typed [`Request`] onto one of them.
+//! style of an inference router, split into two typed planes:
+//!
+//! * the **data plane** — a [`Fleet`] of N device members, each with its
+//!   own tuned-tile router, bounded admission queue, dynamic batcher
+//!   (size + deadline), and worker pool; every typed [`Request`] is
+//!   scheduled onto one of them via [`Fleet::submit`];
+//! * the **control plane** — a [`FleetController`] carrying lifecycle
+//!   and reconfiguration commands against the *live* fleet:
+//!   [`add_member`](FleetController::add_member) /
+//!   [`remove_member`](FleetController::remove_member) (with
+//!   [`DrainMode`] semantics) / [`drain`](FleetController::drain) /
+//!   [`retune`](FleetController::retune) /
+//!   [`set_scheduler`](FleetController::set_scheduler) /
+//!   [`set_admission`](FleetController::set_admission) /
+//!   [`set_steal_config`](FleetController::set_steal_config), plus an
+//!   epoch-stamped [`topology`](FleetController::topology) snapshot.
+//!
+//! Membership lives in a versioned registry (epoch-stamped `Arc`
+//! snapshots); schedulers, batchers, and thieves read it per decision,
+//! so elastic membership is race-free by construction. The
+//! [`daemon::RetuneDaemon`] closes the loop from a refreshed
+//! [`TuningDb`](crate::autotuner::TuningDb) file back into
+//! `FleetController::retune` (`tilekit serve --watch-db`).
 //!
 //! Data flow:
 //!
@@ -63,11 +82,13 @@
 //! * per-member `batch_max` — each member's dynamic-batch cap derives
 //!   from its compute capability (a Fermi-class part batches bigger
 //!   than a cc1.0 one) unless `ServingConfig::batch_max` overrides it;
-//! * tuned-tile invalidation — [`Service::retune`] hot-swaps a member's
-//!   router when a tuning refresh changes the winner, without draining.
+//! * tuned-tile invalidation — [`FleetController::retune`] hot-swaps a
+//!   member's router when a tuning refresh changes the winner, without
+//!   draining.
 
 pub mod admission;
 pub mod batcher;
+pub mod daemon;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -79,12 +100,16 @@ pub mod worker;
 pub use admission::{
     admission_by_name, AdmissionPolicy, BlockWithTimeout, RejectWhenFull, ShedBatchFirst,
 };
+pub use daemon::{RetuneDaemon, RetuneDaemonStats, RetuneSpec};
 pub use request::{CancelToken, Priority, Request, RequestKey, ResizeRequest, Ticket};
 pub use router::{Router, SharedRouter, TilePolicy};
 pub use scheduler::{
-    scheduler_by_name, Biased, CostMeter, CostModelEta, DeviceSnapshot, LeastLoaded, RoundRobin,
-    Scheduler,
+    scheduler_by_name, steal_discount, Biased, CostMeter, CostModelEta, DeviceSnapshot,
+    LeastLoaded, RoundRobin, Scheduler,
 };
-pub use server::{MemberView, Service, ServiceBuilder, SubmitError, ANON_BATCH_MAX};
+pub use server::{
+    DrainMode, Fleet, FleetBuilder, FleetController, MemberView, Service, ServiceBuilder,
+    SubmitError, TopologyView, ANON_BATCH_MAX,
+};
 pub use stats::ServingStats;
 pub use stealing::{select_steals, StealPolicy};

@@ -63,7 +63,7 @@ impl RequestKey {
 
 /// A typed resize request: what to do, how urgent it is, and how long it
 /// is worth doing. Build one with [`Request::new`] and submit it through
-/// [`Service::submit`](super::Service::submit).
+/// [`Fleet::submit`](super::Fleet::submit).
 ///
 /// ```no_run
 /// # use tilekit::coordinator::{Priority, Request};
@@ -216,7 +216,7 @@ impl Ticket {
     }
 
     /// The device this request was scheduled onto (`None` for tickets
-    /// built outside a [`Service`](super::Service)).
+    /// built outside a [`Fleet`](super::Fleet)).
     pub fn device_id(&self) -> Option<&str> {
         self.device.as_deref()
     }

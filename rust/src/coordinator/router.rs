@@ -11,8 +11,9 @@ use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
 
 /// A hot-swappable router handle shared between a member's submit path,
-/// batcher, and workers. [`Service::retune`](super::Service::retune)
-/// replaces the inner `Arc<Router>` while the pipeline keeps serving;
+/// batcher, and workers.
+/// [`FleetController::retune`](super::FleetController::retune) replaces
+/// the inner `Arc<Router>` while the pipeline keeps serving;
 /// readers snapshot the current router per operation.
 pub type SharedRouter = Arc<RwLock<Arc<Router>>>;
 

@@ -1,6 +1,6 @@
 //! Device scheduling: which fleet member serves the next request.
 //!
-//! The [`Service`](super::Service) snapshots every member's state into a
+//! The [`Fleet`](super::Fleet) snapshots every member's state into a
 //! [`DeviceSnapshot`] slice and asks the configured [`Scheduler`] to pick
 //! one. Members that cannot route the request's key (`supports == false`)
 //! must never be picked — every implementation filters on it, and the
@@ -48,6 +48,14 @@ pub struct DeviceSnapshot<'a> {
     /// Requests this member executes concurrently (worker threads ×
     /// dynamic batch cap); divides the backlog in ETA estimates.
     pub slots: u64,
+    /// Requests currently waiting in this member's admission queue —
+    /// the slice of `inflight` a thief can actually take from.
+    pub queued: u64,
+    /// True when fleet-level work-stealing is on and this member's
+    /// queued backlog has reached the steal threshold: idle peers will
+    /// pull work out of its queue, so ETA estimates may discount its
+    /// backlog by the peers' idle capacity (see [`steal_discount`]).
+    pub stealable: bool,
 }
 
 impl DeviceSnapshot<'_> {
@@ -127,16 +135,51 @@ impl Scheduler for LeastLoaded {
 #[derive(Debug, Default)]
 pub struct CostModelEta;
 
+/// The steal-aware backlog discount: how many of this member's queued
+/// requests its peers' idle capacity is about to drain. A hot member
+/// whose backlog already crossed the steal threshold (`stealable`) will
+/// be relieved by idle thieves, so pricing its full backlog into the ETA
+/// over-penalizes it and the scheduler keeps dog-piling the idle
+/// members instead. The discount is bounded twice:
+///
+/// * by this member's **fair share of the peers' idle capacity** — the
+///   sum over supporting peers of `slots - load` (a busy peer steals
+///   nothing), divided by how many members are currently stealable:
+///   several hot queues compete for the same thieves, and crediting
+///   each with the full idle pool would under-price all of them at
+///   once;
+/// * by **half this member's queued backlog** — thieves take from the
+///   admission queue only, never from work already executing, and the
+///   steal policy never takes more than half a victim's queue per
+///   attempt (see [`select_steals`](super::stealing::select_steals)).
+///
+/// Zero when the member is not `stealable` (stealing off, backlog under
+/// the threshold, or a single-member fleet).
+pub fn steal_discount(s: &DeviceSnapshot, fleet: &[DeviceSnapshot]) -> u64 {
+    if !s.stealable {
+        return 0;
+    }
+    let idle: u64 = fleet
+        .iter()
+        .filter(|p| p.index != s.index && p.supports)
+        .map(|p| p.slots.saturating_sub(p.load()))
+        .sum();
+    let victims = fleet.iter().filter(|p| p.stealable).count().max(1) as u64;
+    (idle / victims).min(s.queued / 2)
+}
+
 /// Estimated completion time (ms) of one more request on this member:
-/// its backlog divided by its execution parallelism, plus the new
-/// request itself, each at the member's per-request cost. `None` when
-/// the member has no cost estimate. The parallelism division matters
-/// most for the *absolute* infeasibility floor ([`Scheduler::min_eta_ms`]):
-/// a serial estimate would wrongly decline deadlines a multi-worker
-/// member can in fact meet.
-fn eta_ms(s: &DeviceSnapshot) -> Option<f64> {
+/// its backlog — discounted by what peers' stealing will drain
+/// ([`steal_discount`]) — divided by its execution parallelism, plus the
+/// new request itself, each at the member's per-request cost. `None`
+/// when the member has no cost estimate. The parallelism division
+/// matters most for the *absolute* infeasibility floor
+/// ([`Scheduler::min_eta_ms`]): a serial estimate would wrongly decline
+/// deadlines a multi-worker member can in fact meet.
+fn eta_ms(s: &DeviceSnapshot, fleet: &[DeviceSnapshot]) -> Option<f64> {
     let slots = s.slots.max(1) as f64;
-    s.cost_ms.map(|c| (s.load() as f64 / slots + 1.0) * c)
+    let load = s.load().saturating_sub(steal_discount(s, fleet)) as f64;
+    s.cost_ms.map(|c| (load / slots + 1.0) * c)
 }
 
 impl Scheduler for CostModelEta {
@@ -145,7 +188,7 @@ impl Scheduler for CostModelEta {
             .iter()
             .filter(|s| s.supports)
             .min_by(|a, b| {
-                let eta = |s: &DeviceSnapshot| eta_ms(s).unwrap_or(f64::INFINITY);
+                let eta = |s: &DeviceSnapshot| eta_ms(s, fleet).unwrap_or(f64::INFINITY);
                 eta(a)
                     .total_cmp(&eta(b))
                     .then_with(|| a.load().cmp(&b.load()))
@@ -161,7 +204,7 @@ impl Scheduler for CostModelEta {
         fleet
             .iter()
             .filter(|s| s.supports)
-            .filter_map(eta_ms)
+            .filter_map(|s| eta_ms(s, fleet))
             .filter(|eta| eta.is_finite())
             .min_by(f64::total_cmp)
     }
@@ -282,7 +325,12 @@ mod tests {
         }
     }
 
-    fn snap(index: usize, supports: bool, inflight: u64, cost_ms: Option<f64>) -> DeviceSnapshot<'static> {
+    fn snap(
+        index: usize,
+        supports: bool,
+        inflight: u64,
+        cost_ms: Option<f64>,
+    ) -> DeviceSnapshot<'static> {
         DeviceSnapshot {
             index,
             device_id: "d",
@@ -290,7 +338,10 @@ mod tests {
             inflight,
             cost_ms,
             // Serial member: (load + 1) × cost, the simplest ETA shape.
+            // Tests treat the whole backlog as still queued.
             slots: 1,
+            queued: inflight,
+            stealable: false,
         }
     }
 
@@ -358,6 +409,95 @@ mod tests {
         // ...and schedulers without cost information never offer one.
         assert_eq!(LeastLoaded.min_eta_ms(&key(), &fleet), None);
         assert_eq!(RoundRobin::default().min_eta_ms(&key(), &fleet), None);
+    }
+
+    #[test]
+    fn steal_discount_math() {
+        // Not stealable -> no discount, whatever the peers look like.
+        let fleet = [snap(0, true, 10, Some(1.0)), snap(1, true, 0, Some(1.0))];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 0);
+        // Stealable: discounted by the peers' idle capacity...
+        let mut hot = snap(0, true, 10, Some(1.0));
+        hot.stealable = true;
+        let mut idle_peer = snap(1, true, 1, Some(1.0));
+        idle_peer.slots = 4; // 3 idle slots
+        let fleet = [hot.clone(), idle_peer];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 3);
+        // ...capped at half the hot member's own backlog (the steal
+        // policy never takes more than half a victim's queue)...
+        let mut wide_peer = snap(1, true, 0, Some(1.0));
+        wide_peer.slots = 100;
+        let fleet = [hot.clone(), wide_peer];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 5);
+        // ...a saturated peer contributes nothing...
+        let busy_peer = snap(1, true, 9, Some(1.0)); // slots 1, load 9
+        let fleet = [hot.clone(), busy_peer];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 0);
+        // ...a peer that cannot route the key cannot steal it...
+        let mut blind_peer = snap(1, false, 0, Some(1.0));
+        blind_peer.slots = 100;
+        let fleet = [hot, blind_peer];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 0);
+        // ...only the QUEUED slice is stealable: 24 in flight but just
+        // 4 still queued caps the discount at 4/2, however much idle
+        // capacity the peers have...
+        let mut executing = snap(0, true, 24, Some(1.0));
+        executing.stealable = true;
+        executing.queued = 4;
+        let mut wide = snap(1, true, 0, Some(1.0));
+        wide.slots = 100;
+        let fleet = [executing, wide];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 2);
+        // ...and concurrent victims split the idle pool instead of each
+        // claiming all of it: two stealable hot members + one peer with
+        // 6 idle slots -> 3 each, never 6 + 6 from 6.
+        let mut hot_a = snap(0, true, 10, Some(1.0));
+        hot_a.stealable = true;
+        let mut hot_b = snap(1, true, 10, Some(1.0));
+        hot_b.stealable = true;
+        let mut helper = snap(2, true, 0, Some(1.0));
+        helper.slots = 6;
+        let fleet = [hot_a, hot_b, helper];
+        assert_eq!(steal_discount(&fleet[0], &fleet), 3);
+        assert_eq!(steal_discount(&fleet[1], &fleet), 3);
+    }
+
+    #[test]
+    fn cost_eta_discounts_stealable_backlog() {
+        let eta = CostModelEta;
+        // Without the discount the idle-but-3x-slower device 1 wins:
+        // (8+1)*1.0 = 9.0 vs (0+1)*3.0 = 3.0.
+        let fleet = [snap(0, true, 8, Some(1.0)), snap(1, true, 0, Some(3.0))];
+        assert_eq!(eta.pick(&key(), &fleet), Some(1));
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), Some(3.0));
+        // Mark the hot member stealable with an idle peer (8 slots):
+        // discount = min(8 idle, 8/2) = 4, so the hot member prices at
+        // (8-4+1)*1.0 = 5.0 — better than its raw 9.0 but still behind
+        // the idle member's 3.0, so the pick and the floor hold.
+        let mut hot = snap(0, true, 8, Some(1.0));
+        hot.stealable = true;
+        let mut peer = snap(1, true, 0, Some(3.0));
+        peer.slots = 8;
+        let fleet = [hot, peer];
+        assert_eq!(
+            eta.min_eta_ms(&key(), &fleet),
+            Some(3.0),
+            "floor is still the idle member"
+        );
+        // With a cheap enough discounted ETA the hot member is picked
+        // again instead of dog-piling the slow idle peer: discounted
+        // (8 - 4 + 1) * 0.5 = 2.5 < 3.0.
+        let mut hot = snap(0, true, 8, Some(0.5));
+        hot.stealable = true;
+        let mut peer = snap(1, true, 0, Some(3.0));
+        peer.slots = 8;
+        let fleet = [hot.clone(), peer.clone()];
+        assert_eq!(eta.pick(&key(), &fleet), Some(0));
+        assert_eq!(eta.min_eta_ms(&key(), &fleet), Some(2.5));
+        // The same fleet with stealing off keeps the old (over-)penalty.
+        hot.stealable = false;
+        let fleet = [hot, peer];
+        assert_eq!(eta.pick(&key(), &fleet), Some(1));
     }
 
     #[test]

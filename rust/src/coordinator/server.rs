@@ -1,40 +1,60 @@
-//! The service façade: a fleet of device members — each with its own
-//! router (tuned tile), admission queue, batcher thread, and worker
-//! pool — behind one typed submit path. A [`Scheduler`] picks the member
-//! per request; an [`AdmissionPolicy`] decides what a full queue means.
+//! The serving system, split into two typed planes:
 //!
-//! Build one with [`ServiceBuilder`]:
+//! * **data plane** — [`Fleet::submit`]: the typed `Request`/`Ticket`
+//!   path. A [`Scheduler`] picks the member per request, an
+//!   [`AdmissionPolicy`] decides what a full queue means.
+//! * **control plane** — [`FleetController`]: lifecycle and
+//!   reconfiguration commands against a *live* fleet — add/remove/drain
+//!   members, retune a member's tile after a tuning refresh, swap the
+//!   scheduler/admission policy, tune the work-stealing knobs — all
+//!   without restarting workers.
+//!
+//! Membership lives behind a versioned registry: an epoch-stamped
+//! topology snapshot behind an `Arc<RwLock<Arc<_>>>` (the same
+//! pattern as [`SharedRouter`]). Schedulers, batchers, and thieves read
+//! the current snapshot per decision, so membership changes are
+//! race-free by construction — a submit that raced a removal either sees
+//! the old snapshot (and the drained member answers or hands the work to
+//! the pipeline that is still flushing) or the new one.
+//!
+//! Build one with [`FleetBuilder`]:
 //!
 //! ```no_run
 //! # use std::sync::Arc;
 //! # use tilekit::config::ServingConfig;
-//! # use tilekit::coordinator::{LeastLoaded, Request, ServiceBuilder, TilePolicy};
+//! # use tilekit::coordinator::{DrainMode, FleetBuilder, LeastLoaded, Request, TilePolicy};
 //! # use tilekit::device::find_device;
 //! # use tilekit::image::{generate, Interpolator};
 //! # use tilekit::runtime::{Manifest, MockEngine};
 //! # let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
 //! # let outcome = tilekit::autotuner::TuningSession::sim().run()?;
-//! let svc = ServiceBuilder::new(&ServingConfig::default(), &manifest)
+//! let fleet = FleetBuilder::new(&ServingConfig::default(), &manifest)
 //!     .device(
 //!         find_device("gtx260").unwrap(),
 //!         Arc::new(MockEngine::new()),
 //!         TilePolicy::PerDevice(outcome.clone()),
 //!     )
-//!     .device(
-//!         find_device("fermi").unwrap(),
-//!         Arc::new(MockEngine::new()),
-//!         TilePolicy::PerDevice(outcome),
-//!     )
 //!     .scheduler(LeastLoaded)
 //!     .build()?;
-//! let ticket = svc.submit(Request::new(
+//! let ticket = fleet.submit(Request::new(
 //!     Interpolator::Bilinear,
 //!     generate::gradient(64, 64),
 //!     2,
 //! ))?;
 //! let _img = ticket.wait()?;
+//! // Reconfigure the live fleet through its control plane:
+//! let ctl = fleet.controller();
+//! ctl.add_member(
+//!     find_device("fermi").unwrap(),
+//!     Arc::new(MockEngine::new()),
+//!     TilePolicy::PerDevice(outcome),
+//! )?;
+//! ctl.remove_member("gtx260", DrainMode::Graceful)?;
 //! # Ok::<(), anyhow::Error>(())
 //! ```
+//!
+//! `Service` and `ServiceBuilder` remain as aliases of [`Fleet`] and
+//! [`FleetBuilder`] for existing callers.
 
 use super::admission::{admission_by_name, AdmissionPolicy};
 use super::batcher::{Batch, BatcherState, Shed};
@@ -52,7 +72,8 @@ use crate::runtime::{Manifest, ResizeBackend};
 use crate::tiling::TileDim;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -84,7 +105,9 @@ pub enum SubmitError {
     /// member offers: no device can meet it, so the service declines up
     /// front instead of accepting work it would shed later.
     Infeasible,
-    /// Service is shutting down.
+    /// Service is shutting down (or the scheduled member was removed
+    /// while this submission was in flight — retry; the next snapshot
+    /// routes around it).
     ShuttingDown,
 }
 
@@ -103,6 +126,24 @@ impl std::fmt::Display for SubmitError {
 }
 impl std::error::Error for SubmitError {}
 
+/// How [`FleetController::remove_member`] disposes of a member's queued
+/// work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainMode {
+    /// Stop admissions, then let the member's pipeline serve everything
+    /// already queued before its threads are joined: every in-flight
+    /// [`Ticket`] still resolves with its real result.
+    Graceful,
+    /// Stop admissions and shed the member's **admission queue**
+    /// immediately: tickets still waiting there resolve with a "member
+    /// removed" error (counted as `failed`). Requests already past the
+    /// queue — grouped in the batcher's pending buffer or executing on
+    /// a worker — run to completion (cooperative shedding: nothing is
+    /// interrupted mid-flight), so callers must not assume Immediate
+    /// cancels all unfinished work.
+    Immediate,
+}
+
 /// One registered fleet member before startup.
 struct MemberSpec {
     device: Option<DeviceDescriptor>,
@@ -111,14 +152,25 @@ struct MemberSpec {
     manifest: Option<Manifest>,
 }
 
+/// Pipeline threads of one member, joined on removal/shutdown.
+#[derive(Default)]
+struct MemberThreads {
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
 /// A running fleet member: its own router, admission queue, batcher, and
-/// worker pool.
+/// worker pool. Members are shared (`Arc`) between topology snapshots,
+/// so mutable lifecycle state lives behind atomics/locks.
 struct Member {
+    /// Registry id, unique across the fleet's lifetime (labels are not:
+    /// a fleet may run several identical GPUs).
+    id: u64,
     /// Shared with every ticket scheduled onto this member.
     label: Arc<str>,
     device: Option<DeviceDescriptor>,
-    /// Hot-swappable routing table ([`Service::retune`] replaces the
-    /// inner router while the pipeline keeps serving).
+    /// Hot-swappable routing table ([`FleetController::retune`] replaces
+    /// the inner router while the pipeline keeps serving).
     router: SharedRouter,
     /// The manifest the router routes over, kept (shared, not copied)
     /// for retune rebuilds.
@@ -136,45 +188,132 @@ struct Member {
     /// Requests this member executes concurrently (workers × batch
     /// cap); the scheduler's ETA estimates divide the backlog by it.
     slots: u64,
-    admit_tx: Option<Sender<ResizeRequest>>,
-    batcher: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    /// Taken on drain/remove/shutdown; `submit` clones the sender under
+    /// the lock and admits outside it.
+    admit_tx: Mutex<Option<Sender<ResizeRequest>>>,
+    /// The member's queue, kept as the peers' steal surface and for
+    /// `DrainMode::Immediate` shedding.
+    admit_rx: Receiver<ResizeRequest>,
+    /// Set by `drain`/`remove_member`: the scheduler stops picking this
+    /// member (stale snapshots included), while peers may still steal
+    /// from — and its own pipeline still serves — its queue.
+    draining: AtomicBool,
+    threads: Mutex<MemberThreads>,
+}
+
+impl Member {
+    fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    fn join_threads(&self) {
+        let mut t = self.threads.lock().unwrap();
+        if let Some(b) = t.batcher.take() {
+            let _ = b.join();
+        }
+        for w in t.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// One epoch-stamped membership snapshot. Readers (`submit`, batchers,
+/// thieves, [`FleetController::topology`]) clone the `Arc` and work on a
+/// consistent view; writers publish a new snapshot with `epoch + 1`.
+struct Topology {
+    epoch: u64,
+    members: Vec<Arc<Member>>,
+}
+
+/// The versioned membership registry handle shared by the fleet, its
+/// controllers, and every member's batcher thread.
+type SharedTopology = Arc<RwLock<Arc<Topology>>>;
+
+/// Live work-stealing knobs, read per decision by batchers and the
+/// submit-path snapshot builder; swapped by
+/// [`FleetController::set_steal_config`].
+struct StealRuntime {
+    enabled: AtomicBool,
+    threshold: AtomicUsize,
+}
+
+impl StealRuntime {
+    fn new(enabled: bool, threshold: usize) -> StealRuntime {
+        StealRuntime {
+            enabled: AtomicBool::new(enabled),
+            threshold: AtomicUsize::new(threshold.max(1)),
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    fn threshold(&self) -> usize {
+        self.threshold.load(Ordering::Acquire)
+    }
 }
 
 /// Read-only view of one member for reporting (`tilekit serve`'s
-/// per-device breakdown, tests).
-pub struct MemberView<'a> {
+/// per-device breakdown, `tilekit fleet topology`, tests). Owns `Arc`s
+/// into the snapshot, so it stays valid across membership changes.
+pub struct MemberView {
+    /// Registry id (unique; labels may repeat).
+    pub id: u64,
     /// Device id, or a synthetic `devN` label for anonymous members.
-    pub label: &'a str,
+    pub label: Arc<str>,
     /// The device descriptor, when the member has an identity.
-    pub device: Option<&'a DeviceDescriptor>,
+    pub device: Option<DeviceDescriptor>,
     /// The tile this member's router currently prefers.
     pub tile_pref: Option<TileDim>,
     /// The member's dynamic-batch cap (capability-derived unless the
     /// config overrides it).
     pub batch_max: usize,
+    /// True once [`FleetController::drain`] (or a removal in progress)
+    /// stopped new work from being scheduled onto this member.
+    pub draining: bool,
     /// This member's serving stats.
-    pub stats: &'a Arc<ServingStats>,
+    pub stats: Arc<ServingStats>,
     /// Snapshot of this member's current routing table (a retune after
     /// this call is not reflected).
     pub router: Arc<Router>,
 }
 
-/// A peer's steal surface, shared with every other member's batcher: the
-/// peer's admission queue (to take work from) and its stats (to record
-/// the transfer on the victim side).
-struct StealPeer {
-    queue: Receiver<ResizeRequest>,
-    stats: Arc<ServingStats>,
+impl MemberView {
+    fn of(m: &Arc<Member>) -> MemberView {
+        let router = Arc::clone(&m.router.read().unwrap());
+        MemberView {
+            id: m.id,
+            label: Arc::clone(&m.label),
+            device: m.device.clone(),
+            tile_pref: router.tile_pref,
+            batch_max: m.batch_max,
+            draining: m.is_draining(),
+            stats: Arc::clone(&m.stats),
+            router,
+        }
+    }
 }
 
-/// Everything a member's batcher thread needs beyond its own queues.
-struct BatcherConfig {
+/// An epoch-stamped, read-only snapshot of the fleet's membership —
+/// [`FleetController::topology`]'s introspection surface.
+pub struct TopologyView {
+    /// Monotone version of the membership; bumps on every add, remove,
+    /// and drain.
+    pub epoch: u64,
+    /// All members, draining ones included.
+    pub members: Vec<MemberView>,
+}
+
+/// Everything a member's batcher thread needs beyond its own queues: its
+/// identity, and per-decision handles onto the registry and the live
+/// steal knobs.
+struct BatcherCtx {
+    self_id: u64,
     batch_max: usize,
     deadline: Duration,
-    /// `Some` when this member may steal from `peers` while idle.
-    steal: Option<StealPolicy>,
-    peers: Vec<StealPeer>,
+    topology: SharedTopology,
+    steal: Arc<StealRuntime>,
 }
 
 /// The scheduler's ETA table: the cost-model estimate (ms) of ONE
@@ -194,9 +333,9 @@ fn cost_table(router: &Router, meter: Option<&CostMeter>) -> HashMap<RequestKey,
     cost
 }
 
-/// Builder for a [`Service`]. Register one or more members, then
-/// [`build`](ServiceBuilder::build).
-pub struct ServiceBuilder {
+/// Builder for a [`Fleet`]. Register one or more members, then
+/// [`build`](FleetBuilder::build). (`ServiceBuilder` is an alias.)
+pub struct FleetBuilder {
     cfg: ServingConfig,
     manifest: Manifest,
     members: Vec<MemberSpec>,
@@ -205,12 +344,15 @@ pub struct ServiceBuilder {
     cost_model: Arc<dyn CostModel + Send + Sync>,
 }
 
-impl ServiceBuilder {
+/// Compatibility alias for the pre-control-plane name.
+pub type ServiceBuilder = FleetBuilder;
+
+impl FleetBuilder {
     /// Start a builder over a shared artifact manifest. The config's
     /// `scheduler` / `admission` names supply the defaults (overridable
     /// with [`scheduler`](Self::scheduler) / [`admission`](Self::admission)).
-    pub fn new(cfg: &ServingConfig, manifest: &Manifest) -> ServiceBuilder {
-        ServiceBuilder {
+    pub fn new(cfg: &ServingConfig, manifest: &Manifest) -> FleetBuilder {
+        FleetBuilder {
             cfg: cfg.clone(),
             manifest: manifest.clone(),
             members: Vec::new(),
@@ -229,7 +371,7 @@ impl ServiceBuilder {
         device: DeviceDescriptor,
         backend: Arc<dyn ResizeBackend>,
         policy: TilePolicy,
-    ) -> ServiceBuilder {
+    ) -> FleetBuilder {
         self.members.push(MemberSpec {
             device: Some(device),
             backend,
@@ -247,7 +389,7 @@ impl ServiceBuilder {
         backend: Arc<dyn ResizeBackend>,
         policy: TilePolicy,
         manifest: Manifest,
-    ) -> ServiceBuilder {
+    ) -> FleetBuilder {
         self.members.push(MemberSpec {
             device: Some(device),
             backend,
@@ -264,7 +406,7 @@ impl ServiceBuilder {
         mut self,
         backend: Arc<dyn ResizeBackend>,
         policy: TilePolicy,
-    ) -> ServiceBuilder {
+    ) -> FleetBuilder {
         self.members.push(MemberSpec {
             device: None,
             backend,
@@ -275,208 +417,182 @@ impl ServiceBuilder {
     }
 
     /// Override the scheduler (default: the config's `scheduler` name).
-    pub fn scheduler(mut self, s: impl Scheduler + 'static) -> ServiceBuilder {
+    pub fn scheduler(mut self, s: impl Scheduler + 'static) -> FleetBuilder {
         self.scheduler = Some(Box::new(s));
         self
     }
 
     /// Override the admission policy (default: the config's `admission`
     /// name with its `admission_timeout_ms`).
-    pub fn admission(mut self, a: impl AdmissionPolicy + 'static) -> ServiceBuilder {
+    pub fn admission(mut self, a: impl AdmissionPolicy + 'static) -> FleetBuilder {
         self.admission = Some(Box::new(a));
         self
     }
 
     /// Replace the cost model behind ETA scheduling and sim-cost
     /// metering (default: the timing simulator).
-    pub fn cost_model(mut self, m: impl CostModel + Send + Sync + 'static) -> ServiceBuilder {
+    pub fn cost_model(mut self, m: impl CostModel + Send + Sync + 'static) -> FleetBuilder {
         self.cost_model = Arc::new(m);
         self
     }
 
     /// Validate the config and start every member's pipeline.
-    pub fn build(self) -> Result<Service> {
+    pub fn build(self) -> Result<Fleet> {
         self.cfg
             .validate()
             .context("invalid serving configuration")?;
         if self.members.is_empty() {
             bail!("service needs at least one device member");
         }
-        let scheduler = match self.scheduler {
-            Some(s) => s,
-            None => scheduler_by_name(&self.cfg.scheduler)?,
+        let scheduler: Arc<dyn Scheduler> = match self.scheduler {
+            Some(s) => Arc::from(s),
+            None => Arc::from(scheduler_by_name(&self.cfg.scheduler)?),
         };
-        let admission = match self.admission {
-            Some(a) => a,
-            None => admission_by_name(
+        let admission: Arc<dyn AdmissionPolicy> = match self.admission {
+            Some(a) => Arc::from(a),
+            None => Arc::from(admission_by_name(
                 &self.cfg.admission,
                 Duration::from_secs_f64(self.cfg.admission_timeout_ms / 1e3),
-            )?,
+            )?),
         };
-        // Phase 1: resolve every member's identity, router, cost table,
-        // batch cap, and admission queue — so phase 2 can hand each
-        // batcher a view of its peers' queues for work-stealing.
-        let shared_manifest = Arc::new(self.manifest);
-        let mut seeds = Vec::with_capacity(self.members.len());
-        for (i, spec) in self.members.into_iter().enumerate() {
-            let manifest = spec
-                .manifest
-                .map(Arc::new)
-                .unwrap_or_else(|| Arc::clone(&shared_manifest));
-            let label: Arc<str> = spec
-                .device
-                .as_ref()
-                .map(|d| d.id.clone())
-                .unwrap_or_else(|| format!("dev{i}"))
-                .into();
-            let device_id = spec.device.as_ref().map(|d| d.id.clone());
-            let router = Router::for_device(&manifest, spec.policy, device_id.as_deref());
-            let meter = spec
-                .device
-                .clone()
-                .map(|d| Arc::new(CostMeter::new(d, Arc::clone(&self.cost_model))));
-            let cost = cost_table(&router, meter.as_deref());
-            let batch_max = self.cfg.batch_max_for(spec.device.as_ref());
-            let (admit_tx, admit_rx) = bounded::<ResizeRequest>(self.cfg.queue_cap);
-            seeds.push(MemberSeed {
-                label,
-                device: spec.device,
-                manifest,
-                router: router.into_shared(),
-                backend: spec.backend,
-                meter,
-                cost: Arc::new(RwLock::new(cost)),
-                stats: Arc::new(ServingStats::new()),
-                batch_max,
-                admit_tx,
-                admit_rx,
-            });
-        }
-        // Phase 2: wire each member to its peers and start the
-        // pipelines. A single-member fleet has nobody to steal from.
-        let steal_enabled = self.cfg.work_stealing && seeds.len() > 1;
-        let peer_views: Vec<Vec<StealPeer>> = (0..seeds.len())
-            .map(|i| {
-                if !steal_enabled {
-                    return Vec::new();
-                }
-                seeds
-                    .iter()
-                    .enumerate()
-                    .filter(|(j, _)| *j != i)
-                    .map(|(_, s)| StealPeer {
-                        queue: s.admit_rx.clone(),
-                        stats: Arc::clone(&s.stats),
-                    })
-                    .collect()
-            })
-            .collect();
-        let members = seeds
-            .into_iter()
-            .zip(peer_views)
-            .map(|(seed, peers)| start_member(&self.cfg, seed, peers))
-            .collect();
-        Ok(Service {
-            members,
-            scheduler,
-            admission,
+        let steal = Arc::new(StealRuntime::new(
+            self.cfg.work_stealing,
+            self.cfg.steal_threshold,
+        ));
+        let inner = Arc::new(FleetInner {
+            cfg: self.cfg,
+            manifest: Arc::new(self.manifest),
+            cost_model: self.cost_model,
+            topology: Arc::new(RwLock::new(Arc::new(Topology {
+                epoch: 0,
+                members: Vec::new(),
+            }))),
+            next_member: AtomicU64::new(0),
+            scheduler: RwLock::new(scheduler),
+            admission: RwLock::new(admission),
+            steal,
             local: Arc::new(ServingStats::new()),
+            retiring: Mutex::new(Vec::new()),
+            retired: ServingStats::new(),
             ids: IdGen::default(),
-        })
+            closed: AtomicBool::new(false),
+        });
+        for spec in self.members {
+            register_member(&inner, spec)?;
+        }
+        Ok(Fleet { inner })
     }
 }
 
-/// One member after phase-1 resolution, before its threads start.
-struct MemberSeed {
-    label: Arc<str>,
-    device: Option<DeviceDescriptor>,
-    manifest: Arc<Manifest>,
-    router: SharedRouter,
-    backend: Arc<dyn ResizeBackend>,
-    meter: Option<Arc<CostMeter>>,
-    cost: Arc<RwLock<HashMap<RequestKey, f64>>>,
-    stats: Arc<ServingStats>,
-    batch_max: usize,
-    admit_tx: Sender<ResizeRequest>,
-    admit_rx: Receiver<ResizeRequest>,
-}
+/// Resolve a member spec, start its pipeline (admission queue → batcher
+/// thread → worker pool), and publish it into the registry under a new
+/// epoch. The batcher doubles as the member's work-stealing thief: it
+/// reads the topology per idle tick, so membership changes reach it
+/// without a restart. Returns the member's registry id.
+///
+/// Publication re-checks `closed` under the topology write lock, so an
+/// `add_member` racing a shutdown either lands in the snapshot the
+/// shutdown joins, or is torn down here — never leaked.
+fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
+    let manifest = spec
+        .manifest
+        .map(Arc::new)
+        .unwrap_or_else(|| Arc::clone(&inner.manifest));
+    let id = inner.next_member.fetch_add(1, Ordering::Relaxed);
+    let label: Arc<str> = spec
+        .device
+        .as_ref()
+        .map(|d| d.id.clone())
+        .unwrap_or_else(|| format!("dev{id}"))
+        .into();
+    let device_id = spec.device.as_ref().map(|d| d.id.clone());
+    let router = Router::for_device(&manifest, spec.policy, device_id.as_deref());
+    let meter = spec
+        .device
+        .clone()
+        .map(|d| Arc::new(CostMeter::new(d, Arc::clone(&inner.cost_model))));
+    let cost = cost_table(&router, meter.as_deref());
+    let batch_max = inner.cfg.batch_max_for(spec.device.as_ref());
+    let (admit_tx, admit_rx) = bounded::<ResizeRequest>(inner.cfg.queue_cap);
+    let router = router.into_shared();
+    let stats = Arc::new(ServingStats::new());
 
-/// Start one member's pipeline: admission queue → batcher thread →
-/// worker pool (the old single-backend coordinator, one per device).
-/// The batcher doubles as the member's work-stealing thief: whenever it
-/// goes idle it may pull compatible pending requests from a hot peer.
-fn start_member(cfg: &ServingConfig, seed: MemberSeed, peers: Vec<StealPeer>) -> Member {
-    let MemberSeed {
-        label,
-        device,
-        manifest,
-        router,
-        backend,
-        meter,
-        cost,
-        stats,
+    let (batch_tx, batch_rx) = bounded::<Batch>(inner.cfg.queue_cap.max(4));
+    let ctx = BatcherCtx {
+        self_id: id,
         batch_max,
-        admit_tx,
-        admit_rx,
-    } = seed;
-    let (batch_tx, batch_rx) = bounded::<Batch>(cfg.queue_cap.max(4));
-
-    let bcfg = BatcherConfig {
-        batch_max,
-        deadline: Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3),
-        steal: (!peers.is_empty()).then_some(StealPolicy {
-            min_victim_backlog: cfg.steal_threshold,
-            // Steal at most one batch's worth per attempt.
-            max_per_attempt: batch_max,
-        }),
-        peers,
+        deadline: Duration::from_secs_f64(inner.cfg.batch_deadline_ms / 1e3),
+        topology: Arc::clone(&inner.topology),
+        steal: Arc::clone(&inner.steal),
     };
     let batcher = {
         let stats = Arc::clone(&stats);
         let router = Arc::clone(&router);
+        let admit_rx = admit_rx.clone();
         std::thread::Builder::new()
             .name(format!("tilekit-batcher-{label}"))
-            .spawn(move || run_batcher(bcfg, admit_rx, batch_tx, stats, router))
+            .spawn(move || run_batcher(ctx, admit_rx, batch_tx, stats, router))
             .expect("spawn batcher")
     };
-
     let workers = spawn_workers(
-        cfg.workers,
+        inner.cfg.workers,
         batch_rx,
         Arc::clone(&router),
-        backend,
+        spec.backend,
         Arc::clone(&stats),
         meter.clone(),
     );
 
-    Member {
+    let member = Arc::new(Member {
+        id,
         label,
-        device,
+        device: spec.device,
         router,
         manifest,
         stats,
         meter,
-        cost,
+        cost: Arc::new(RwLock::new(cost)),
         batch_max,
-        slots: (cfg.workers.max(1) * batch_max) as u64,
-        admit_tx: Some(admit_tx),
-        batcher: Some(batcher),
-        workers,
+        slots: (inner.cfg.workers.max(1) * batch_max) as u64,
+        admit_tx: Mutex::new(Some(admit_tx)),
+        admit_rx,
+        draining: AtomicBool::new(false),
+        threads: Mutex::new(MemberThreads {
+            batcher: Some(batcher),
+            workers,
+        }),
+    });
+    let mut guard = inner.topology.write().unwrap();
+    if inner.is_closed() {
+        // Shutdown ran between the caller's open-check and our publish:
+        // the member is not in the snapshot shutdown joined, so tear its
+        // pipeline down here instead of leaking the threads.
+        drop(guard);
+        member.admit_tx.lock().unwrap().take();
+        member.join_threads();
+        bail!("fleet is shut down");
     }
+    let mut members = guard.members.clone();
+    members.push(member);
+    *guard = Arc::new(Topology {
+        epoch: guard.epoch + 1,
+        members,
+    });
+    Ok(id)
 }
 
 /// The batcher thread body: drain admissions, group, shed
-/// cancelled/expired, flush on size/deadline — and, when idle with
-/// peers configured, steal compatible pending work from the hottest
+/// cancelled/expired, flush on size/deadline — and, when idle, read the
+/// current topology and steal compatible pending work from the hottest
 /// peer queue over the threshold.
 fn run_batcher(
-    cfg: BatcherConfig,
+    ctx: BatcherCtx,
     admit_rx: Receiver<ResizeRequest>,
     batch_tx: Sender<Batch>,
     stats: Arc<ServingStats>,
     router: SharedRouter,
 ) {
-    let mut state = BatcherState::new(cfg.batch_max, cfg.deadline);
+    let mut state = BatcherState::new(ctx.batch_max, ctx.deadline);
     // Adaptive idle poll: 50ms while the fleet is quiet, dropping to
     // STEAL_POLL only while some peer sits at/over the steal threshold
     // (re-checked on every idle tick).
@@ -508,17 +624,36 @@ fn run_batcher(
                 // workers' drain time (a batch or two), and dropping to
                 // the slow tick there would cap the steady-state steal
                 // rate at one attempt per 50ms.
-                if let Some(policy) = &cfg.steal {
-                    peers_hot = cfg
-                        .peers
+                peers_hot = false;
+                if ctx.steal.enabled() {
+                    let threshold = ctx.steal.threshold();
+                    let topo = Arc::clone(&ctx.topology.read().unwrap());
+                    // A draining member (or one already removed from the
+                    // registry) must not pull NEW work onto itself — it
+                    // only finishes what it already owns.
+                    let self_draining =
+                        match topo.members.iter().find(|m| m.id == ctx.self_id) {
+                            Some(me) => me.is_draining(),
+                            None => true,
+                        };
+                    let peers: Vec<&Arc<Member>> = topo
+                        .members
                         .iter()
-                        .any(|p| p.queue.len() >= policy.min_victim_backlog);
+                        .filter(|m| m.id != ctx.self_id)
+                        .collect();
+                    peers_hot = !self_draining
+                        && peers.iter().any(|p| p.admit_rx.len() >= threshold);
                     if peers_hot
                         && state.pending_len() == 0
-                        && stats.inflight() < 2 * cfg.batch_max as u64
+                        && stats.inflight() < 2 * ctx.batch_max as u64
                     {
+                        let policy = StealPolicy {
+                            min_victim_backlog: threshold,
+                            // Steal at most one batch's worth per attempt.
+                            max_per_attempt: ctx.batch_max,
+                        };
                         let (stole, batches) =
-                            steal_from_peers(policy, &cfg.peers, &router, &stats, &mut state);
+                            steal_from_peers(&policy, &peers, &router, &stats, &mut state);
                         for batch in batches {
                             if batch_tx.send(batch).is_err() {
                                 return;
@@ -566,21 +701,21 @@ fn run_batcher(
 /// the loot filled.
 fn steal_from_peers(
     policy: &StealPolicy,
-    peers: &[StealPeer],
+    peers: &[&Arc<Member>],
     router: &SharedRouter,
     stats: &ServingStats,
     state: &mut BatcherState,
 ) -> (usize, Vec<Batch>) {
     let Some(victim) = peers
         .iter()
-        .filter(|p| p.queue.len() >= policy.min_victim_backlog)
-        .max_by_key(|p| p.queue.len())
+        .filter(|p| p.admit_rx.len() >= policy.min_victim_backlog)
+        .max_by_key(|p| p.admit_rx.len())
     else {
         return (0, Vec::new());
     };
     let current = Arc::clone(&router.read().expect("router lock"));
     let now = Instant::now();
-    let loot = victim.queue.steal_by(|q| {
+    let loot = victim.admit_rx.steal_by(|q| {
         select_steals(q, |key| current.supports(key), now, policy.max_per_attempt)
     });
     let stole = loot.len();
@@ -595,18 +730,91 @@ fn steal_from_peers(
     (stole, batches)
 }
 
-/// The running fleet-aware serving system.
-pub struct Service {
-    members: Vec<Member>,
-    scheduler: Box<dyn Scheduler>,
-    admission: Box<dyn AdmissionPolicy>,
+/// Shared state behind both planes: the data plane ([`Fleet`]) and any
+/// number of control-plane handles ([`FleetController`]).
+struct FleetInner {
+    cfg: ServingConfig,
+    manifest: Arc<Manifest>,
+    cost_model: Arc<dyn CostModel + Send + Sync>,
+    topology: SharedTopology,
+    next_member: AtomicU64,
+    scheduler: RwLock<Arc<dyn Scheduler>>,
+    admission: RwLock<Arc<dyn AdmissionPolicy>>,
+    steal: Arc<StealRuntime>,
     /// Submit-side counters (unsupported rejections, fail-fast deadline
     /// sheds) that belong to no single member.
     local: Arc<ServingStats>,
+    /// Members mid-removal: out of the topology but not yet folded into
+    /// `retired`, kept visible to [`FleetInner::merged_stats`] so fleet
+    /// totals never dip during the drain window. The same lock guards
+    /// `retired`, making the hand-off atomic for readers.
+    retiring: Mutex<Vec<Arc<Member>>>,
+    /// Final stats of removed members, merged in after their threads
+    /// joined, so fleet totals survive membership churn.
+    retired: ServingStats,
     ids: IdGen,
+    closed: AtomicBool,
 }
 
-impl Service {
+impl FleetInner {
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+    }
+
+    fn snapshot(&self) -> Arc<Topology> {
+        Arc::clone(&self.topology.read().unwrap())
+    }
+
+    /// Idempotent full shutdown: stop admissions on every member, then
+    /// join all pipelines.
+    fn shutdown(&self) {
+        if self.closed.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        let topo = self.snapshot();
+        for m in &topo.members {
+            // Closing admissions: batcher exits, then workers exit.
+            m.admit_tx.lock().unwrap().take();
+        }
+        for m in &topo.members {
+            m.join_threads();
+        }
+    }
+
+    /// Merged fleet-wide stats: submit-side + retired + retiring + live
+    /// members. The topology read lock is held across both reads (lock
+    /// order: topology → retiring, matching every writer), so a member
+    /// mid-removal is counted in exactly one of topology/retiring/
+    /// retired — fleet totals never dip or double-count during churn.
+    fn merged_stats(&self) -> ServingStats {
+        let total = ServingStats::new();
+        total.merge_from(&self.local);
+        let topo = self.topology.read().unwrap();
+        {
+            let retiring = self.retiring.lock().unwrap();
+            total.merge_from(&self.retired);
+            for m in retiring.iter() {
+                total.merge_from(&m.stats);
+            }
+        }
+        for m in &topo.members {
+            total.merge_from(&m.stats);
+        }
+        total
+    }
+}
+
+/// The data plane: the running fleet-aware serving system. Submit typed
+/// requests; reconfigure it live through [`Fleet::controller`].
+/// (`Service` is an alias.)
+pub struct Fleet {
+    inner: Arc<FleetInner>,
+}
+
+/// Compatibility alias for the pre-control-plane name.
+pub type Service = Fleet;
+
+impl Fleet {
     /// Convenience: a single-member service over one backend (the old
     /// `Coordinator::start` deployment shape).
     pub fn single(
@@ -614,54 +822,87 @@ impl Service {
         manifest: &Manifest,
         backend: Arc<dyn ResizeBackend>,
         policy: TilePolicy,
-    ) -> Result<Service> {
-        ServiceBuilder::new(cfg, manifest)
+    ) -> Result<Fleet> {
+        FleetBuilder::new(cfg, manifest)
             .backend(backend, policy)
             .build()
     }
 
-    /// Submit a typed request. The scheduler picks the member, the
-    /// admission policy decides what a full queue means — and, when the
-    /// scheduler can price the request, a deadline budget below the best
-    /// queue-depth-aware ETA is declined as [`SubmitError::Infeasible`].
+    /// A control-plane handle onto this fleet. Cheap to clone; stays
+    /// valid (but starts erroring) after the fleet shuts down.
+    pub fn controller(&self) -> FleetController {
+        FleetController {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Submit a typed request. The scheduler picks the member over the
+    /// current topology snapshot, the admission policy decides what a
+    /// full queue means — and, when the scheduler can price the request,
+    /// a deadline budget below the best queue-depth-aware ETA is
+    /// declined as [`SubmitError::Infeasible`].
     pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
+        if self.inner.is_closed() {
+            return Err(SubmitError::ShuttingDown);
+        }
         let key = req.key();
         let now = Instant::now();
-        let snaps: Vec<DeviceSnapshot> = self
-            .members
+        let topo = self.inner.snapshot();
+        // Draining members take no new work; stale snapshots observe the
+        // same flag, so a racing removal cannot be scheduled onto.
+        let live: Vec<&Arc<Member>> = topo.members.iter().filter(|m| !m.is_draining()).collect();
+        if live.is_empty() {
+            // Every member is draining or removed. That is not an
+            // unsupported shape — it is a temporarily unschedulable
+            // fleet (an add_member may follow), so report the retryable
+            // error instead of Unsupported.
+            return Err(SubmitError::ShuttingDown);
+        }
+        let steal_on = self.inner.steal.enabled() && live.len() > 1;
+        let threshold = self.inner.steal.threshold();
+        let snaps: Vec<DeviceSnapshot> = live
             .iter()
             .enumerate()
-            .map(|(index, m)| DeviceSnapshot {
-                index,
-                device_id: &m.label,
-                supports: m.router.read().unwrap().supports(&key),
-                // inflight() = owned - answered, which already covers
-                // requests still sitting in the admission queue (and
-                // accounts for work stolen to/from this member).
-                inflight: m.stats.inflight(),
-                cost_ms: m.cost.read().unwrap().get(&key).copied(),
-                slots: m.slots,
+            .map(|(index, m)| {
+                let queued = m.admit_rx.len() as u64;
+                DeviceSnapshot {
+                    index,
+                    device_id: &m.label,
+                    supports: m.router.read().unwrap().supports(&key),
+                    // inflight() = owned - answered, which already covers
+                    // requests still sitting in the admission queue (and
+                    // accounts for work stolen to/from this member).
+                    inflight: m.stats.inflight(),
+                    cost_ms: m.cost.read().unwrap().get(&key).copied(),
+                    slots: m.slots,
+                    queued,
+                    // Peers' idle capacity will drain a backlog the steal
+                    // threshold already exposes — let the scheduler
+                    // discount it (see scheduler::steal_discount).
+                    stealable: steal_on && queued >= threshold as u64,
+                }
             })
             .collect();
         // Unserveable beats expired: a request nobody can route is
         // Unsupported no matter what its budget says.
         if !snaps.iter().any(|s| s.supports) {
-            self.local.rejected.inc();
+            self.inner.local.rejected.inc();
             return Err(SubmitError::Unsupported);
         }
+        let scheduler = Arc::clone(&self.inner.scheduler.read().unwrap());
         let deadline = match req.deadline {
             Some(budget) if budget.is_zero() => {
                 // Fail fast instead of occupying a queue slot.
-                self.local.shed.inc();
+                self.inner.local.shed.inc();
                 return Err(SubmitError::DeadlineExceeded);
             }
             Some(budget) => {
                 // Deadline-aware admission: decline a budget no member's
                 // queue-depth-aware ETA can meet, instead of accepting
                 // work the pipeline would shed later.
-                if let Some(eta_ms) = self.scheduler.min_eta_ms(&key, &snaps) {
+                if let Some(eta_ms) = scheduler.min_eta_ms(&key, &snaps) {
                     if eta_ms.is_finite() && eta_ms / 1e3 > budget.as_secs_f64() {
-                        self.local.infeasible.inc();
+                        self.inner.local.infeasible.inc();
                         return Err(SubmitError::Infeasible);
                     }
                 }
@@ -669,17 +910,24 @@ impl Service {
             }
             None => None,
         };
-        let Some(index) = self.scheduler.pick(&key, &snaps) else {
-            self.local.rejected.inc();
+        let Some(index) = scheduler.pick(&key, &snaps) else {
+            self.inner.local.rejected.inc();
             return Err(SubmitError::Unsupported);
         };
-        let member = &self.members[index];
+        let member = live[index];
         debug_assert!(
             member.router.read().unwrap().supports(&key),
             "scheduler picked a member that cannot route the key"
         );
-        let tx = member.admit_tx.as_ref().ok_or(SubmitError::ShuttingDown)?;
-        let id = self.ids.next();
+        // Clone the sender under the lock, admit outside it: blocking
+        // admission must never hold a member lock, and the clone keeps
+        // the channel open (so the batcher still sees this request) even
+        // if a removal races the enqueue.
+        let Some(tx) = member.admit_tx.lock().unwrap().clone() else {
+            return Err(SubmitError::ShuttingDown);
+        };
+        let admission = Arc::clone(&self.inner.admission.read().unwrap());
+        let id = self.inner.ids.next();
         let (ticket, reply) =
             Ticket::for_device(id, Default::default(), Some(member.label.clone()));
         let rr = ResizeRequest {
@@ -699,7 +947,7 @@ impl Service {
         // request that was not yet admitted. A failed enqueue rolls the
         // optimistic count back.
         member.stats.admitted.inc();
-        match self.admission.admit(tx, rr) {
+        match admission.admit(&tx, rr) {
             Ok(()) => Ok(ticket),
             Err(e) => {
                 member.stats.admitted.sub(1);
@@ -711,7 +959,7 @@ impl Service {
                 // neither.
                 match e {
                     SubmitError::Saturated => member.stats.rejected.inc(),
-                    SubmitError::DeadlineExceeded => self.local.shed.inc(),
+                    SubmitError::DeadlineExceeded => self.inner.local.shed.inc(),
                     _ => {}
                 }
                 Err(e)
@@ -722,6 +970,8 @@ impl Service {
     /// The union of keys any member can serve, sorted.
     pub fn keys(&self) -> Vec<RequestKey> {
         let mut ks: Vec<RequestKey> = self
+            .inner
+            .snapshot()
             .members
             .iter()
             .flat_map(|m| m.router.read().unwrap().keys())
@@ -729,6 +979,235 @@ impl Service {
         ks.sort();
         ks.dedup();
         ks
+    }
+
+    /// Number of fleet members (draining ones included).
+    pub fn member_count(&self) -> usize {
+        self.inner.snapshot().members.len()
+    }
+
+    /// Read-only views of every member, for per-device reporting.
+    pub fn members(&self) -> Vec<MemberView> {
+        self.inner
+            .snapshot()
+            .members
+            .iter()
+            .map(MemberView::of)
+            .collect()
+    }
+
+    /// The scheduler in use.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.inner.scheduler.read().unwrap().name()
+    }
+
+    /// The admission policy in use.
+    pub fn admission_name(&self) -> &'static str {
+        self.inner.admission.read().unwrap().name()
+    }
+
+    /// Merged fleet-wide stats snapshot (counters + histograms summed
+    /// over submit-side, removed, and live members; live stats keep
+    /// updating after the call).
+    pub fn stats(&self) -> ServingStats {
+        self.inner.merged_stats()
+    }
+
+    /// Reset every member's stats (e.g. after a warmup phase), including
+    /// the retained stats of removed members and of members mid-removal
+    /// (whose final counters would otherwise be folded into the totals
+    /// after the reset).
+    pub fn reset_stats(&self) {
+        self.inner.local.reset();
+        let topo = self.inner.topology.read().unwrap();
+        {
+            let retiring = self.inner.retiring.lock().unwrap();
+            self.inner.retired.reset();
+            for m in retiring.iter() {
+                m.stats.reset();
+            }
+        }
+        for m in &topo.members {
+            m.stats.reset();
+        }
+    }
+
+    /// Graceful shutdown: stop admissions, drain every member's
+    /// pipeline, join all threads. Returns the final merged stats.
+    pub fn shutdown(self) -> ServingStats {
+        self.inner.shutdown();
+        self.inner.merged_stats()
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.inner.shutdown();
+    }
+}
+
+/// The typed control plane: lifecycle and reconfiguration commands
+/// against a live [`Fleet`], applicable without restarting workers.
+/// Obtain one with [`Fleet::controller`]; clones share the same fleet.
+///
+/// Every mutation publishes a new epoch-stamped topology snapshot (or
+/// swaps an `Arc`'d policy), so concurrent submits and batcher decisions
+/// observe either the old or the new configuration, never a torn one.
+#[derive(Clone)]
+pub struct FleetController {
+    inner: Arc<FleetInner>,
+}
+
+impl FleetController {
+    fn ensure_open(&self) -> Result<()> {
+        if self.inner.is_closed() {
+            bail!("fleet is shut down");
+        }
+        Ok(())
+    }
+
+    /// Add a device member to the live fleet: the scheduler sees it on
+    /// the next submit, and peers' batchers on their next idle tick.
+    /// Returns the member's registry id.
+    pub fn add_member(
+        &self,
+        device: DeviceDescriptor,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+    ) -> Result<u64> {
+        self.ensure_open()?;
+        register_member(
+            &self.inner,
+            MemberSpec {
+                device: Some(device),
+                backend,
+                policy,
+                manifest: None,
+            },
+        )
+    }
+
+    /// Add a device member serving its own manifest (heterogeneous
+    /// artifact sets).
+    pub fn add_member_with_manifest(
+        &self,
+        device: DeviceDescriptor,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+        manifest: Manifest,
+    ) -> Result<u64> {
+        self.ensure_open()?;
+        register_member(
+            &self.inner,
+            MemberSpec {
+                device: Some(device),
+                backend,
+                policy,
+                manifest: Some(manifest),
+            },
+        )
+    }
+
+    /// Add an anonymous single-backend member (no device identity).
+    pub fn add_backend(
+        &self,
+        backend: Arc<dyn ResizeBackend>,
+        policy: TilePolicy,
+    ) -> Result<u64> {
+        self.ensure_open()?;
+        register_member(
+            &self.inner,
+            MemberSpec {
+                device: None,
+                backend,
+                policy,
+                manifest: None,
+            },
+        )
+    }
+
+    /// Remove every member labeled `device_id` from the live fleet.
+    /// The members leave the topology immediately (no new work is
+    /// scheduled onto them, stale snapshots included); their queued work
+    /// is disposed of per [`DrainMode`], their threads are joined, and
+    /// their final stats are retained in the fleet totals.
+    pub fn remove_member(&self, device_id: &str, mode: DrainMode) -> Result<()> {
+        self.ensure_open()?;
+        let removed: Vec<Arc<Member>> = {
+            let mut guard = self.inner.topology.write().unwrap();
+            let (gone, keep): (Vec<_>, Vec<_>) = guard
+                .members
+                .iter()
+                .cloned()
+                .partition(|m| &*m.label == device_id);
+            if gone.is_empty() {
+                bail!("no fleet member '{device_id}'");
+            }
+            // Hand the members to the retiring list under the SAME
+            // topology write lock that unpublishes them, so stats
+            // readers (topology read → retiring, same order) see each
+            // member in exactly one place.
+            self.inner
+                .retiring
+                .lock()
+                .unwrap()
+                .extend(gone.iter().cloned());
+            *guard = Arc::new(Topology {
+                epoch: guard.epoch + 1,
+                members: keep,
+            });
+            gone
+        };
+        for m in &removed {
+            m.draining.store(true, Ordering::Release);
+            // Closing the member's sender lets its batcher drain the
+            // queue and exit; transient submit-side clones from stale
+            // snapshots keep their admitted requests visible to the
+            // batcher until they resolve, so nothing is lost.
+            m.admit_tx.lock().unwrap().take();
+            if mode == DrainMode::Immediate {
+                for req in m.admit_rx.drain_now() {
+                    m.stats.failed.inc();
+                    let _ = req.reply.send(Err(anyhow::anyhow!(
+                        "request {} dropped: member '{device_id}' removed",
+                        req.id
+                    )));
+                }
+            }
+        }
+        for m in &removed {
+            m.join_threads();
+            // Counters are final once the pipeline joined; fold them
+            // into the retained totals and drop the retiring entry in
+            // one critical section so readers never see both or neither.
+            let mut retiring = self.inner.retiring.lock().unwrap();
+            self.inner.retired.merge_from(&m.stats);
+            retiring.retain(|r| r.id != m.id);
+        }
+        Ok(())
+    }
+
+    /// Stop scheduling new work onto every member labeled `device_id`
+    /// while keeping it in the fleet: its pipeline (and its peers'
+    /// thieves) drain what it already holds. A later
+    /// [`remove_member`](Self::remove_member) completes the retirement.
+    pub fn drain(&self, device_id: &str) -> Result<()> {
+        self.ensure_open()?;
+        let mut guard = self.inner.topology.write().unwrap();
+        let mut found = false;
+        for m in guard.members.iter().filter(|m| &*m.label == device_id) {
+            found = true;
+            m.draining.store(true, Ordering::Release);
+        }
+        if !found {
+            bail!("no fleet member '{device_id}'");
+        }
+        // Publish the flag under a new epoch so observers see the change.
+        *guard = Arc::new(Topology {
+            epoch: guard.epoch + 1,
+            members: guard.members.clone(),
+        });
+        Ok(())
     }
 
     /// Hot-swap a device's tuned tile after a tuning refresh (e.g. a
@@ -740,9 +1219,11 @@ impl Service {
     /// up keep the router they started with; the next batch routes
     /// through the new tile. Returns the new preferred tile.
     pub fn retune(&self, device_id: &str, outcome: &TuningOutcome) -> Result<Option<TileDim>> {
+        self.ensure_open()?;
+        let topo = self.inner.snapshot();
         let mut tile = None;
         let mut found = false;
-        for member in self.members.iter().filter(|m| &*m.label == device_id) {
+        for member in topo.members.iter().filter(|m| &*m.label == device_id) {
             found = true;
             let identity = member.device.as_ref().map(|d| d.id.as_str());
             let next = Arc::new(Router::for_device(
@@ -765,85 +1246,70 @@ impl Service {
         Ok(tile)
     }
 
-    /// Number of fleet members.
-    pub fn member_count(&self) -> usize {
-        self.members.len()
+    /// Swap the scheduler for all subsequent submits.
+    pub fn set_scheduler(&self, s: impl Scheduler + 'static) -> Result<()> {
+        self.ensure_open()?;
+        *self.inner.scheduler.write().unwrap() = Arc::new(s);
+        Ok(())
     }
 
-    /// Read-only views of every member, for per-device reporting.
-    pub fn members(&self) -> Vec<MemberView<'_>> {
-        self.members
-            .iter()
-            .map(|m| {
-                let router = Arc::clone(&m.router.read().unwrap());
-                MemberView {
-                    label: &m.label,
-                    device: m.device.as_ref(),
-                    tile_pref: router.tile_pref,
-                    batch_max: m.batch_max,
-                    stats: &m.stats,
-                    router,
-                }
-            })
-            .collect()
+    /// Swap the scheduler by its CLI/config name.
+    pub fn set_scheduler_by_name(&self, name: &str) -> Result<()> {
+        self.ensure_open()?;
+        let s: Arc<dyn Scheduler> = Arc::from(scheduler_by_name(name)?);
+        *self.inner.scheduler.write().unwrap() = s;
+        Ok(())
     }
 
-    /// The scheduler in use.
-    pub fn scheduler_name(&self) -> &'static str {
-        self.scheduler.name()
+    /// Swap the admission policy for all subsequent submits.
+    pub fn set_admission(&self, a: impl AdmissionPolicy + 'static) -> Result<()> {
+        self.ensure_open()?;
+        *self.inner.admission.write().unwrap() = Arc::new(a);
+        Ok(())
     }
 
-    /// The admission policy in use.
-    pub fn admission_name(&self) -> &'static str {
-        self.admission.name()
+    /// Swap the admission policy by its CLI/config name; `timeout` feeds
+    /// the blocking variants.
+    pub fn set_admission_by_name(&self, name: &str, timeout: Duration) -> Result<()> {
+        self.ensure_open()?;
+        let a: Arc<dyn AdmissionPolicy> = Arc::from(admission_by_name(name, timeout)?);
+        *self.inner.admission.write().unwrap() = a;
+        Ok(())
     }
 
-    /// Merged fleet-wide stats snapshot (counters + histograms summed
-    /// over members; live stats keep updating after the call).
-    pub fn stats(&self) -> ServingStats {
-        let total = ServingStats::new();
-        total.merge_from(&self.local);
-        for m in &self.members {
-            total.merge_from(&m.stats);
+    /// Reconfigure work-stealing on the live fleet: batchers read these
+    /// knobs per idle tick, the submit path per request.
+    pub fn set_steal_config(&self, enabled: bool, threshold: usize) -> Result<()> {
+        self.ensure_open()?;
+        if threshold == 0 {
+            bail!("steal threshold must be >= 1 (got 0)");
         }
-        total
+        self.inner
+            .steal
+            .threshold
+            .store(threshold, Ordering::Release);
+        self.inner.steal.enabled.store(enabled, Ordering::Release);
+        Ok(())
     }
 
-    /// Reset every member's stats (e.g. after a warmup phase).
-    pub fn reset_stats(&self) {
-        self.local.reset();
-        for m in &self.members {
-            m.stats.reset();
-        }
-    }
-
-    /// Graceful shutdown: stop admissions, drain every member's
-    /// pipeline, join all threads. Returns the final merged stats.
-    pub fn shutdown(mut self) -> ServingStats {
-        self.shutdown_inner();
-        self.stats()
-    }
-
-    fn shutdown_inner(&mut self) {
-        for m in &mut self.members {
-            m.admit_tx.take(); // closes admissions → batcher exits → workers exit
-        }
-        for m in &mut self.members {
-            if let Some(b) = m.batcher.take() {
-                let _ = b.join();
-            }
-            for w in m.workers.drain(..) {
-                let _ = w.join();
-            }
+    /// An epoch-stamped snapshot of the current membership.
+    pub fn topology(&self) -> TopologyView {
+        let topo = self.inner.snapshot();
+        TopologyView {
+            epoch: topo.epoch,
+            members: topo.members.iter().map(MemberView::of).collect(),
         }
     }
-}
 
-impl Drop for Service {
-    fn drop(&mut self) {
-        if self.members.iter().any(|m| m.admit_tx.is_some()) {
-            self.shutdown_inner();
-        }
+    /// Current membership epoch (bumps on add/remove/drain).
+    pub fn epoch(&self) -> u64 {
+        self.inner.snapshot().epoch
+    }
+
+    /// Has the fleet shut down? (Control commands error afterwards;
+    /// background daemons use this to exit.)
+    pub fn is_closed(&self) -> bool {
+        self.inner.is_closed()
     }
 }
 
@@ -852,7 +1318,7 @@ mod tests {
     use super::*;
     use crate::coordinator::admission::{BlockWithTimeout, RejectWhenFull};
     use crate::coordinator::request::Priority;
-    use crate::coordinator::scheduler::RoundRobin;
+    use crate::coordinator::scheduler::{LeastLoaded, RoundRobin};
     use crate::image::{generate, Interpolator};
     use crate::runtime::MockEngine;
     use std::path::PathBuf;
@@ -883,9 +1349,9 @@ mod tests {
         }
     }
 
-    fn start(backend: Arc<dyn ResizeBackend>) -> Service {
+    fn start(backend: Arc<dyn ResizeBackend>) -> Fleet {
         let m = manifest();
-        ServiceBuilder::new(&cfg(), &m)
+        FleetBuilder::new(&cfg(), &m)
             .backend(backend, TilePolicy::PortableFallback)
             .admission(BlockWithTimeout(Duration::from_secs(10)))
             .build()
@@ -993,7 +1459,7 @@ mod tests {
             queue_cap: 2,
             ..ServingConfig::default()
         };
-        let svc = ServiceBuilder::new(&small, &m)
+        let svc = FleetBuilder::new(&small, &m)
             .backend(Arc::new(slow), TilePolicy::PortableFallback)
             .admission(RejectWhenFull)
             .build()
@@ -1036,7 +1502,7 @@ mod tests {
     #[test]
     fn two_member_fleet_round_robin_spreads_load() {
         let m = manifest();
-        let svc = ServiceBuilder::new(&cfg(), &m)
+        let svc = FleetBuilder::new(&cfg(), &m)
             .device(
                 crate::device::find_device("gtx260").unwrap(),
                 Arc::new(MockEngine::new()),
@@ -1082,7 +1548,7 @@ mod tests {
             batch_max: None,
             ..ServingConfig::default()
         };
-        let svc = ServiceBuilder::new(&auto, &m)
+        let svc = FleetBuilder::new(&auto, &m)
             .device(
                 crate::device::find_device("8800gts").unwrap(), // cc1.0
                 Arc::new(MockEngine::new()),
@@ -1105,7 +1571,7 @@ mod tests {
             batch_max: Some(2),
             ..ServingConfig::default()
         };
-        let svc = ServiceBuilder::new(&pinned, &m)
+        let svc = FleetBuilder::new(&pinned, &m)
             .device(
                 crate::device::find_device("fermi").unwrap(),
                 Arc::new(MockEngine::new()),
@@ -1122,7 +1588,7 @@ mod tests {
         use crate::coordinator::scheduler::CostModelEta;
         let m = manifest();
         let build = |cost_eta: bool| {
-            let b = ServiceBuilder::new(&cfg(), &m).device(
+            let b = FleetBuilder::new(&cfg(), &m).device(
                 crate::device::find_device("gtx260").unwrap(),
                 Arc::new(MockEngine::new()),
                 TilePolicy::PortableFallback,
@@ -1207,7 +1673,7 @@ mod tests {
         .unwrap();
         let t32x4 = TileDim::new(32, 4);
         let t8x8 = TileDim::new(8, 8);
-        let svc = ServiceBuilder::new(&cfg(), &m)
+        let svc = FleetBuilder::new(&cfg(), &m)
             .device(
                 crate::device::find_device("gtx260").unwrap(),
                 Arc::new(MockEngine::new()),
@@ -1216,13 +1682,14 @@ mod tests {
             .admission(BlockWithTimeout(Duration::from_secs(10)))
             .build()
             .unwrap();
+        let ctl = svc.controller();
         assert_eq!(svc.members()[0].tile_pref, Some(t32x4));
         let img = generate::test_scene(16, 16, 12);
         // Keep traffic flowing across the swap: no drain, no rebuild.
         let before = svc
             .submit(req(Interpolator::Bilinear, img.clone(), 2))
             .unwrap();
-        let tile = svc.retune("gtx260", &fast(t8x8, t32x4)).unwrap();
+        let tile = ctl.retune("gtx260", &fast(t8x8, t32x4)).unwrap();
         assert_eq!(tile, Some(t8x8));
         assert_eq!(svc.members()[0].tile_pref, Some(t8x8));
         let after = svc
@@ -1230,10 +1697,13 @@ mod tests {
             .unwrap();
         before.wait().unwrap();
         after.wait().unwrap();
-        assert!(svc.retune("ghost", &fast(t8x8, t32x4)).is_err());
+        assert!(ctl.retune("ghost", &fast(t8x8, t32x4)).is_err());
         let stats = svc.shutdown();
         assert_eq!(stats.retunes.get(), 1);
         assert_eq!(stats.completed.get(), 2);
+        // Control commands error once the fleet is gone.
+        assert!(ctl.retune("gtx260", &fast(t8x8, t32x4)).is_err());
+        assert!(ctl.is_closed());
     }
 
     #[test]
@@ -1243,12 +1713,256 @@ mod tests {
             workers: 0,
             ..ServingConfig::default()
         };
-        let err = ServiceBuilder::new(&bad, &m)
+        let err = FleetBuilder::new(&bad, &m)
             .backend(Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
             .build()
             .unwrap_err()
             .to_string();
         assert!(err.contains("invalid serving configuration"), "{err}");
-        assert!(ServiceBuilder::new(&cfg(), &m).build().is_err(), "no members");
+        assert!(FleetBuilder::new(&cfg(), &m).build().is_err(), "no members");
+    }
+
+    // ------------------------------------------------- control plane --
+
+    #[test]
+    fn add_member_joins_the_live_fleet() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let epoch0 = ctl.epoch();
+        assert_eq!(svc.member_count(), 1);
+        let img = generate::test_scene(16, 16, 31);
+        svc.submit(req(Interpolator::Bilinear, img.clone(), 2))
+            .unwrap()
+            .wait()
+            .unwrap();
+        ctl.add_member(
+            crate::device::find_device("fermi").unwrap(),
+            Arc::new(MockEngine::new()),
+            TilePolicy::PortableFallback,
+        )
+        .unwrap();
+        assert_eq!(svc.member_count(), 2);
+        assert!(ctl.epoch() > epoch0, "membership change bumps the epoch");
+        // Round-robin now spreads across both members.
+        let tickets: Vec<_> = (0..8)
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+            .collect();
+        let mut devs: Vec<&str> = tickets.iter().filter_map(|t| t.device_id()).collect();
+        devs.sort();
+        devs.dedup();
+        assert_eq!(devs, vec!["fermi", "gtx260"]);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed.get(), 9);
+    }
+
+    #[test]
+    fn remove_member_graceful_completes_queued_work() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let img = generate::test_scene(16, 16, 32);
+        let tickets: Vec<_> = (0..10)
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+            .collect();
+        ctl.remove_member("fermi", DrainMode::Graceful).unwrap();
+        assert_eq!(svc.member_count(), 1);
+        assert!(ctl.remove_member("fermi", DrainMode::Graceful).is_err());
+        for t in tickets {
+            t.wait().unwrap(); // nothing lost across the epoch flip
+        }
+        // New work still flows, all onto the survivor.
+        let t = svc.submit(req(Interpolator::Bilinear, img, 2)).unwrap();
+        assert_eq!(t.device_id(), Some("gtx260"));
+        t.wait().unwrap();
+        let stats = svc.shutdown();
+        assert_eq!(
+            stats.completed.get(),
+            11,
+            "removed member's stats are retained in fleet totals"
+        );
+        assert_eq!(stats.failed.get(), 0);
+    }
+
+    #[test]
+    fn remove_member_immediate_sheds_queued_work() {
+        let m = manifest();
+        let slow = ServingConfig {
+            workers: 1,
+            batch_max: Some(1),
+            batch_deadline_ms: 0.1,
+            queue_cap: 64,
+            work_stealing: false,
+            ..ServingConfig::default()
+        };
+        let svc = FleetBuilder::new(&slow, &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::with_delay(Duration::from_millis(20))),
+                TilePolicy::PortableFallback,
+            )
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let img = generate::test_scene(16, 16, 33);
+        let tickets: Vec<_> = (0..8)
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+            .collect();
+        ctl.remove_member("gtx260", DrainMode::Immediate).unwrap();
+        let mut answered = 0;
+        for t in tickets {
+            match t.wait() {
+                Ok(_) => answered += 1,
+                Err(e) => {
+                    answered += 1;
+                    let msg = e.to_string();
+                    assert!(
+                        msg.contains("removed") || msg.contains("shut down"),
+                        "unexpected error: {msg}"
+                    );
+                }
+            }
+        }
+        assert_eq!(answered, 8, "every ticket resolves, none hang");
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed.get() + stats.failed.get(), 8);
+    }
+
+    #[test]
+    fn drain_stops_new_work_but_keeps_member() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let epoch0 = ctl.epoch();
+        ctl.drain("gtx260").unwrap();
+        assert!(ctl.drain("ghost").is_err());
+        assert!(ctl.epoch() > epoch0);
+        let topo = ctl.topology();
+        assert_eq!(topo.members.len(), 2, "drained member stays registered");
+        assert!(topo.members.iter().any(|v| &*v.label == "gtx260" && v.draining));
+        let img = generate::test_scene(16, 16, 34);
+        for _ in 0..6 {
+            let t = svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap();
+            assert_eq!(t.device_id(), Some("fermi"), "drained member takes no new work");
+            t.wait().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn set_scheduler_and_admission_swap_live() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        assert_eq!(svc.scheduler_name(), "round-robin");
+        ctl.set_scheduler(LeastLoaded).unwrap();
+        assert_eq!(svc.scheduler_name(), "least-loaded");
+        ctl.set_scheduler_by_name("cost-eta").unwrap();
+        assert_eq!(svc.scheduler_name(), "cost-eta");
+        assert!(ctl.set_scheduler_by_name("nope").is_err());
+        ctl.set_admission_by_name("reject", Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(svc.admission_name(), "reject");
+        ctl.set_admission(BlockWithTimeout(Duration::from_secs(1)))
+            .unwrap();
+        assert_eq!(svc.admission_name(), "block");
+        // The swapped-in scheduler serves traffic.
+        let img = generate::test_scene(16, 16, 35);
+        svc.submit(req(Interpolator::Bilinear, img, 2))
+            .unwrap()
+            .wait()
+            .unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn set_steal_config_validates_and_applies() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .backend(Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        assert!(ctl.set_steal_config(true, 0).is_err());
+        ctl.set_steal_config(false, 7).unwrap();
+        ctl.set_steal_config(true, 2).unwrap();
+        svc.shutdown();
+        assert!(ctl.set_steal_config(true, 2).is_err(), "closed fleet");
+    }
+
+    #[test]
+    fn topology_reports_epoch_and_members() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .backend(Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let topo = ctl.topology();
+        assert_eq!(topo.epoch, 2, "one epoch per registered member");
+        assert_eq!(topo.members.len(), 2);
+        assert_eq!(&*topo.members[0].label, "gtx260");
+        assert!(
+            topo.members[1].label.starts_with("dev"),
+            "anonymous members get a devN label"
+        );
+        assert_ne!(topo.members[0].id, topo.members[1].id);
+        assert!(topo.members.iter().all(|v| !v.draining));
+        svc.shutdown();
     }
 }

@@ -1,7 +1,7 @@
 //! Serving statistics: request/batch counters, latency histograms (both
 //! aggregate and per [`Priority`] class), and per-device simulated-cost
 //! accounting, shared (via `Arc`) between the pipeline stages and the
-//! caller. A fleet [`Service`](super::Service) keeps one `ServingStats`
+//! caller. A [`Fleet`](super::Fleet) keeps one `ServingStats`
 //! per device member and merges them for totals.
 
 use super::request::Priority;
@@ -36,7 +36,7 @@ pub struct ServingStats {
     /// service-side, like the submit-path shed counter.
     pub infeasible: Counter,
     /// Tuned-tile hot swaps applied to this member
-    /// ([`Service::retune`](super::Service::retune)).
+    /// ([`FleetController::retune`](super::FleetController::retune)).
     pub retunes: Counter,
     /// Batches executed.
     pub batches: Counter,

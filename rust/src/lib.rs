@@ -20,14 +20,18 @@
 //!   [`TuningSession`](autotuner::TuningSession) builder producing
 //!   serializable [`TuningOutcome`](autotuner::TuningOutcome)s, and
 //!   portable (worst-case-GPU) selection — plus a **fleet-aware**
-//!   image-resize serving system ([`coordinator`]): a
-//!   [`Service`](coordinator::Service) of device members whose routers
-//!   consume tuning outcomes through a
-//!   [`TilePolicy`](coordinator::TilePolicy) (each device serves through
-//!   its own tuned tile), scheduled per typed
+//!   image-resize serving system ([`coordinator`]), split into a data
+//!   plane (a [`Fleet`](coordinator::Fleet) of device members whose
+//!   routers consume tuning outcomes through a
+//!   [`TilePolicy`](coordinator::TilePolicy) — each device serves
+//!   through its own tuned tile — scheduled per typed
 //!   [`Request`](coordinator::Request) by a pluggable
 //!   [`Scheduler`](coordinator::Scheduler) under a pluggable
-//!   [`AdmissionPolicy`](coordinator::AdmissionPolicy), executing
+//!   [`AdmissionPolicy`](coordinator::AdmissionPolicy)) and a typed
+//!   control plane (a [`FleetController`](coordinator::FleetController)
+//!   for elastic membership, live reconfiguration, and tuned-tile hot
+//!   swaps, driven in the background by the
+//!   [`RetuneDaemon`](coordinator::RetuneDaemon)), executing
 //!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
 //! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
 //! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels

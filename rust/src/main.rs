@@ -10,6 +10,9 @@
 //!   autotune     best-tile + portable (min-max regret) selection
 //!   resize       resize a PGM/PPM file through an AOT artifact
 //!   serve        run the serving demo workload and print stats
+//!                (--watch-db adds the background retune daemon)
+//!   fleet        drive the typed control plane (topology/drain/retune)
+//!                against a live demo fleet
 //!   init-config  write an example tilekit.toml
 //!
 //! Run `tilekit help` for the full flag list, or `tilekit tune --help` /
@@ -22,7 +25,10 @@ use tilekit::autotuner::{strategy_by_name, SearchStrategy, SimCostModel, TuningS
 use tilekit::bench::figures;
 use tilekit::cli::Args;
 use tilekit::config::Config;
-use tilekit::coordinator::{Priority, Request, ServiceBuilder, SubmitError, TilePolicy};
+use tilekit::coordinator::{
+    FleetController, Priority, Request, RetuneDaemon, RetuneSpec, ServiceBuilder, SubmitError,
+    TilePolicy,
+};
 use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
@@ -36,6 +42,7 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
     "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
     "output", "seed", "strategy", "cache", "scheduler", "policy", "baseline", "max-regress",
+    "watch-db", "watch-poll-ms", "watch-strategy",
 ];
 
 fn main() {
@@ -66,6 +73,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("autotune") => cmd_autotune(args, &cfg),
         Some("resize") => cmd_resize(args, &cfg),
         Some("serve") => cmd_serve(args, &cfg),
+        Some("fleet") => cmd_fleet(args, &cfg),
         Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(args, &cfg),
         Some("init-config") => {
@@ -94,8 +102,9 @@ COMMANDS
                                         (see 'tilekit sweep --help')
   simulate [--fig4|--extreme] [--device id --tile WxH --scale N]
                                         memory-model / straggler experiments
-  tune [--strategy s] [--cache f] [--scale N] [--devices a,b,c|all]
-       [--tiles t1,t2] [--out f.json]   tuning session: per-device best +
+  tune [--strategy s] [--cache f] [--scale N] [--src WxH]
+       [--devices a,b,c|all] [--tiles t1,t2] [--out f.json]
+                                        tuning session: per-device best +
                                         portable pick (see 'tilekit tune --help')
   autotune [--scale N] [--devices a,b,c]
                                         best & portable tile selection
@@ -104,6 +113,7 @@ COMMANDS
   serve [--requests N] [--workers N] [--artifacts dir] [--mock] [--tile WxH]
         [--tiles t1,t2] [--batch-max N] [--no-steal]
         [--devices a,b] [--scheduler s] [--policy p]
+        [--watch-db f.json] [--watch-poll-ms N] [--watch-strategy s]
                                         serving demo: batched requests + stats.
                                         --devices starts a simulated fleet with
                                         per-device tuned tiles; --scheduler is
@@ -114,7 +124,19 @@ COMMANDS
                                         --mock demo manifest) to these variants;
                                         --batch-max overrides the per-member
                                         capability-derived batch cap; --no-steal
-                                        disables work-stealing between members
+                                        disables work-stealing between members;
+                                        --watch-db runs a RetuneDaemon that
+                                        hot-swaps tuned tiles when the tuning
+                                        database file changes (fleet only;
+                                        --watch-strategy names the strategy
+                                        key the refresh runs write, default
+                                        exhaustive)
+  fleet <topology|drain|retune> [--devices a,b] [--device id] [--requests N]
+                                        drive the typed control plane against a
+                                        live demo fleet: print the epoch-stamped
+                                        topology, drain a member under load, or
+                                        hot-swap a member's tuned tile
+                                        (see 'tilekit fleet --help')
   bench [--out f.json] [--baseline f.json] [--max-regress PCT]
         [--update-baseline] [--full]    hot-path smoke benchmarks; with
                                         --baseline, fails on >PCT% regression
@@ -322,8 +344,15 @@ FLAGS
   --devices a,b,c|all  device ids to tune (default: config sweep.devices;
                        'all' = every configured device)
   --scale N            upscaling factor (default 8)
+  --src WxH            source image size (default: config sweep.src,
+                       800x800). Cache entries are keyed by it — when
+                       refreshing a cache a `serve --watch-db` fleet
+                       watches, tune at the SERVED shape (the mock fleet
+                       demo serves 64x64 at scale 2)
   --kernel k           nearest | bilinear | bicubic (default bilinear)
-  --tiles t1,t2,...    explicit candidate tiles (default: the paper sweep set)
+  --tiles t1,t2,...    explicit candidate tiles (default: the paper sweep
+                       set; the cache key fingerprints the SET, order
+                       does not matter)
   --out FILE           save the full TuningOutcome as JSON
 
 Prints each device's tuned best tile and the portable (min-max regret)
@@ -334,6 +363,25 @@ fn strategy_from_args(args: &Args) -> Result<Box<dyn SearchStrategy>> {
     let name = args.get_or("strategy", "exhaustive");
     let cache = args.get("cache").map(Path::new);
     strategy_by_name(name, cache)
+}
+
+/// Parse a `--src WxH` source-size flag.
+fn parse_src(s: &str) -> Result<(u32, u32)> {
+    let (w, h) = s
+        .split_once('x')
+        .ok_or_else(|| anyhow!("--src must be WxH (e.g. 64x64), got '{s}'"))?;
+    let w: u32 = w
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("--src width '{w}' is not a number"))?;
+    let h: u32 = h
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("--src height '{h}' is not a number"))?;
+    if w == 0 || h == 0 {
+        bail!("--src must be positive, got {w}x{h}");
+    }
+    Ok((w, h))
 }
 
 fn cmd_tune(args: &Args, cfg: &Config) -> Result<()> {
@@ -366,17 +414,27 @@ fn cmd_tune(args: &Args, cfg: &Config) -> Result<()> {
         None if cfg.sweep.tiles.is_empty() => paper_sweep_tiles(),
         None => cfg.sweep.tiles.clone(),
     };
+    // --src retargets the tuned shape (default: the config's sweep
+    // source). Cache entries are keyed by it, so a refresh meant for a
+    // serving fleet must tune at the SERVED shape (e.g. --src 64x64 for
+    // the mock fleet demo behind `serve --watch-db`).
+    let src: (u32, u32) = match args.get("src") {
+        Some(s) => parse_src(s)?,
+        None => cfg.sweep.src,
+    };
     let outcome = TuningSession::new(SimCostModel)
         .devices(devices)
         .kernel(kernel)
         .scale(scale)
-        .src(cfg.sweep.src)
+        .src(src)
         .tiles(tiles)
         .strategy(strategy_from_args(args)?)
         .run()?;
     println!(
-        "Tuning — {} at scale {scale} over {:?} via '{}' ({} evaluations):\n",
+        "Tuning — {} {}x{} at scale {scale} over {:?} via '{}' ({} evaluations):\n",
         kernel.label(),
+        src.0,
+        src.1,
         ids,
         outcome.strategy,
         outcome.evaluations
@@ -810,6 +868,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             list
         }
     };
+    // Set when the fleet serves per-device tuned tiles: the key the
+    // --watch-db daemon watches in the tuning database.
+    let mut watch_spec: Option<RetuneSpec> = None;
     let mut builder = ServiceBuilder::new(&serving, &manifest);
     if device_ids.is_empty() {
         let policy = match fixed {
@@ -835,8 +896,22 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                     .kernel(kernel)
                     .scale(scale)
                     .src((src.1, src.0)) // entry src is (h, w)
-                    .tiles(tiles)
+                    .tiles(tiles.clone())
                     .run()?;
+                // The same key a `tilekit tune --cache` refresh writes:
+                // the daemon watches it for new winners. The cache keys
+                // entries by the strategy that produced them, so
+                // --watch-strategy must name the strategy the refresh
+                // runs use (`cached` stores under its inner strategy's
+                // name — the default `tune --cache` flow writes
+                // "exhaustive" entries).
+                watch_spec = Some(RetuneSpec {
+                    kernel,
+                    scale,
+                    src: (src.1, src.0),
+                    strategy: args.get_or("watch-strategy", "exhaustive").to_string(),
+                    tiles_fp: tilekit::autotuner::TuningDb::tiles_fingerprint(&tiles),
+                });
                 println!(
                     "fleet tuning ({} {}x{} s{scale}): {}",
                     kernel.label(),
@@ -861,6 +936,32 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     if keys.is_empty() {
         bail!("no member can serve any manifest shape");
     }
+    // --watch-db: a RetuneDaemon polls the tuning database and drives
+    // the control plane when a refresh flips a member's winner.
+    let daemon = match args.get("watch-db") {
+        None => None,
+        Some(db_path) => {
+            let spec = watch_spec.ok_or_else(|| {
+                anyhow!(
+                    "--watch-db needs a tuned device fleet: pass --devices and drop --tile"
+                )
+            })?;
+            let poll_ms: f64 = args.get_parsed_or("watch-poll-ms", serving.retune_poll_ms)?;
+            if poll_ms.is_nan() || poll_ms <= 0.0 {
+                bail!("--watch-poll-ms must be > 0 (got {poll_ms})");
+            }
+            println!(
+                "watching tuning db {db_path} (poll {poll_ms:.0} ms): a refresh hot-swaps \
+                 tuned tiles through the control plane, no fleet drain"
+            );
+            Some(RetuneDaemon::spawn(
+                svc.controller(),
+                std::path::PathBuf::from(db_path),
+                spec,
+                std::time::Duration::from_secs_f64(poll_ms / 1e3),
+            ))
+        }
+    };
     let batch_max_label = match serving.batch_max {
         Some(b) => b.to_string(),
         None => "auto (per compute capability)".to_string(),
@@ -952,6 +1053,17 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             format!("{:.3}", s.sim_cost_ms()),
         ]);
     }
+    if let Some(d) = daemon {
+        let s = d.stats();
+        println!(
+            "\nretune daemon: polls={} refreshes={} retunes applied={} errors={}",
+            s.polls.get(),
+            s.refreshes.get(),
+            s.applied.get(),
+            s.errors.get()
+        );
+        d.stop();
+    }
     let stats = svc.shutdown();
     println!(
         "\ncompleted {ok}/{n_requests} ({rejected} rejected) in {:.1} ms",
@@ -965,5 +1077,204 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     println!("\nper-device breakdown:");
     print!("{}", breakdown.render());
     println!("\nper-priority latency:\n{}", stats.class_summary());
+    Ok(())
+}
+
+const FLEET_HELP: &str = r#"tilekit fleet — drive the typed control plane against a live demo fleet
+
+USAGE: tilekit fleet <topology|drain|retune> [flags]
+
+ACTIONS
+  topology             serve a short mock workload, then print the
+                       epoch-stamped membership snapshot
+  drain                mark one member draining mid-load: the scheduler
+                       stops picking it, in-flight work still completes
+  retune               hot-swap one member's tuned tile mid-load through
+                       FleetController::retune (no fleet drain)
+
+FLAGS
+  --devices a,b        fleet member device ids (default gtx260,fermi)
+  --device id          the member drain/retune targets (default: the
+                       first fleet device)
+  --requests N         demo workload size (default 24)
+
+The demo fleet runs in-process over the built-in mock manifest: each
+command builds the fleet, applies the control-plane operation while
+requests are in flight, and prints the topology before and after. The
+same operations are available programmatically via Fleet::controller().
+"#;
+
+/// Print one epoch-stamped topology snapshot.
+fn print_topology(ctl: &FleetController) {
+    let topo = ctl.topology();
+    println!("topology epoch {}:", topo.epoch);
+    let mut t = tilekit::util::text::Table::new(vec![
+        "id", "member", "tile", "batch max", "draining", "admitted", "completed", "steals",
+        "stolen",
+    ]);
+    for m in &topo.members {
+        t.row(vec![
+            m.id.to_string(),
+            m.label.to_string(),
+            m.tile_pref.map(|x| x.label()).unwrap_or_else(|| "-".into()),
+            m.batch_max.to_string(),
+            if m.draining { "yes" } else { "no" }.to_string(),
+            m.stats.admitted.get().to_string(),
+            m.stats.completed.get().to_string(),
+            m.stats.steals.get().to_string(),
+            m.stats.stolen.get().to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("help") {
+        print!("{FLEET_HELP}");
+        return Ok(());
+    }
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: tilekit fleet <topology|drain|retune> [flags]"))?;
+    if !matches!(action, "topology" | "drain" | "retune") {
+        bail!("unknown fleet action '{action}' (expected one of: topology, drain, retune)");
+    }
+    let n_requests: usize = args.get_parsed_or("requests", 24)?;
+    let device_ids: Vec<String> = {
+        let list = args.get_list("devices");
+        if list.is_empty() {
+            vec!["gtx260".into(), "fermi".into()]
+        } else {
+            list
+        }
+    };
+    let devices: Vec<DeviceDescriptor> = device_ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+    let target = args
+        .get("device")
+        .unwrap_or(device_ids[0].as_str())
+        .to_string();
+    if !device_ids.contains(&target) {
+        bail!("--device '{target}' is not in the fleet {device_ids:?}");
+    }
+    if action == "drain" && device_ids.len() < 2 {
+        bail!("the drain demo needs at least two fleet members (--devices a,b)");
+    }
+
+    // The in-process demo fleet: the built-in mock manifest, each device
+    // routed through its own tuned tile.
+    let manifest = Manifest::fleet_demo();
+    let (kernel, src, scale, tiles) = fleet_tuning_target(&manifest);
+    let outcome = TuningSession::new(SimCostModel)
+        .devices(devices.clone())
+        .kernel(kernel)
+        .scale(scale)
+        .src((src.1, src.0))
+        .tiles(tiles)
+        .run()?;
+    let serving = tilekit::config::ServingConfig {
+        workers: 2,
+        batch_max: Some(4),
+        batch_deadline_ms: 0.5,
+        queue_cap: 1024,
+        ..cfg.serving.clone()
+    };
+    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    for d in devices {
+        builder = builder.device(
+            d,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome.clone()),
+        );
+    }
+    let svc = builder
+        .admission(tilekit::coordinator::BlockWithTimeout(
+            std::time::Duration::from_secs(30),
+        ))
+        .build()?;
+    let ctl = svc.controller();
+    println!(
+        "demo fleet: {} member(s), mock backends, per-device tuned tiles\n",
+        svc.member_count()
+    );
+    print_topology(&ctl);
+
+    let keys = svc.keys();
+    let mut rng = tilekit::util::Pcg32::seeded(7);
+    let mut submit_wave = |n: usize| -> Result<Vec<tilekit::coordinator::Ticket>> {
+        (0..n)
+            .map(|_| {
+                let key = *rng.pick(&keys);
+                let img = generate::test_scene(
+                    key.src.1 as usize,
+                    key.src.0 as usize,
+                    rng.next_u64(),
+                );
+                svc.submit(Request::new(key.kernel, img, key.scale))
+                    .map_err(|e| anyhow!("{e}"))
+            })
+            .collect()
+    };
+
+    let first = submit_wave(n_requests / 2)?;
+    match action {
+        "topology" => {}
+        "drain" => {
+            println!("\n=> drain('{target}') with {} requests in flight", first.len());
+            ctl.drain(&target)?;
+        }
+        "retune" => {
+            let before = outcome
+                .best_for(&target)
+                .map(|t| t.label())
+                .unwrap_or_else(|| "-".into());
+            let flipped = outcome
+                .with_flipped_winner(&target)
+                .ok_or_else(|| anyhow!("no launchable point to flip for '{target}'"))?;
+            let after = ctl.retune(&target, &flipped)?;
+            println!(
+                "\n=> retune('{target}'): tile {before} -> {} with {} requests in flight \
+                 (no drain; epoch unchanged — retune is not a membership change)",
+                after.map(|t| t.label()).unwrap_or_else(|| "-".into()),
+                first.len()
+            );
+        }
+        _ => unreachable!("validated above"),
+    }
+    let second = submit_wave(n_requests - n_requests / 2)?;
+    if action == "drain" {
+        // Everything submitted after the drain must route around the
+        // draining member.
+        for t in &second {
+            if t.device_id() == Some(target.as_str()) {
+                bail!("post-drain request was scheduled onto draining member '{target}'");
+            }
+        }
+    }
+    let mut completed = 0usize;
+    for t in first.into_iter().chain(second) {
+        t.wait()?;
+        completed += 1;
+    }
+    println!("\ncompleted {completed}/{n_requests}; final state:\n");
+    print_topology(&ctl);
+    if action == "drain" {
+        let drained_new: u64 = ctl
+            .topology()
+            .members
+            .iter()
+            .filter(|m| &*m.label == target.as_str())
+            .map(|m| m.stats.admitted.get())
+            .sum();
+        println!(
+            "\n'{target}' admitted {drained_new} requests total; everything submitted after \
+             the drain routed to its peers, and nothing in flight was lost"
+        );
+    }
+    svc.shutdown();
     Ok(())
 }

@@ -1,5 +1,6 @@
 //! Small shared utilities: a deterministic PRNG, descriptive statistics,
-//! and text-formatting helpers used by the bench harness and reports.
+//! text-formatting helpers used by the bench harness and reports, and a
+//! shared content hash.
 
 pub mod pcg;
 pub mod stats;
@@ -7,3 +8,27 @@ pub mod text;
 
 pub use pcg::Pcg32;
 pub use stats::Summary;
+
+/// FNV-1a over a byte stream: the stable 64-bit content fingerprint
+/// shared by the tuning cache's tile-set keys and the retune daemon's
+/// file-change detection. Not cryptographic — change detection and
+/// cache keying only.
+pub fn fnv1a64(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    #[test]
+    fn fnv1a64_is_stable_and_content_sensitive() {
+        assert_eq!(super::fnv1a64(*b"abc"), super::fnv1a64(*b"abc"));
+        assert_ne!(super::fnv1a64(*b"abc"), super::fnv1a64(*b"abd"));
+        // The canonical FNV-1a empty-input offset basis.
+        assert_eq!(super::fnv1a64([]), 0xcbf2_9ce4_8422_2325);
+    }
+}

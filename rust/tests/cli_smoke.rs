@@ -407,3 +407,110 @@ fn bench_gate_runs_against_committed_baseline() {
     assert!(written.contains("\"provisional\": false"), "{written}");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn fleet_topology_prints_epoch_stamped_snapshot() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, err, ok) = run(&["fleet", "topology", "--requests", "12"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("topology epoch"), "{out}");
+    assert!(out.contains("gtx260") && out.contains("fermi"), "{out}");
+    assert!(out.contains("completed 12/12"), "{out}");
+    // Action and flag validation fail loudly.
+    let (_, err, ok) = run(&["fleet", "explode"]);
+    assert!(!ok);
+    assert!(err.contains("unknown fleet action 'explode'"), "{err}");
+    let (_, err, ok) = run(&["fleet"]);
+    assert!(!ok);
+    assert!(err.contains("usage: tilekit fleet"), "{err}");
+    let (out, _, ok) = run(&["fleet", "--help"]);
+    assert!(ok);
+    for needle in ["topology", "drain", "retune", "--devices", "--device"] {
+        assert!(out.contains(needle), "fleet --help missing '{needle}':\n{out}");
+    }
+}
+
+#[test]
+fn fleet_drain_and_retune_drive_the_control_plane() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, err, ok) = run(&["fleet", "drain", "--device", "fermi", "--requests", "12"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("drain('fermi')"), "{out}");
+    assert!(out.contains("yes"), "draining column must flip: {out}");
+    assert!(out.contains("completed 12/12"), "{out}");
+    let (out, err, ok) = run(&["fleet", "retune", "--device", "gtx260", "--requests", "12"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("retune('gtx260')"), "{out}");
+    assert!(out.contains("completed 12/12"), "{out}");
+    // A target outside the fleet is rejected.
+    let (_, err, ok) = run(&["fleet", "drain", "--device", "ghost"]);
+    assert!(!ok);
+    assert!(err.contains("not in the fleet"), "{err}");
+}
+
+#[test]
+fn serve_watch_db_flag_validates_and_runs() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_watch_db");
+    std::fs::create_dir_all(&dir).unwrap();
+    let db = dir.join("tuning_cache.json");
+    let db_s = db.to_str().unwrap().to_string();
+    // No device fleet -> the daemon has nothing to retune.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--watch-db", &db_s,
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--watch-db"), "{err}");
+    // A fixed tile pins every member: nothing tuned to watch either.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--devices", "gtx260,fermi",
+        "--tile", "16x8", "--watch-db", &db_s,
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--watch-db"), "{err}");
+    // A bad poll interval is rejected.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--devices", "gtx260,fermi",
+        "--watch-db", &db_s, "--watch-poll-ms", "0",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--watch-poll-ms"), "{err}");
+    // The happy path: the daemon runs alongside the demo (the missing db
+    // file is fine — it waits for one to appear) and reports activity.
+    let (out, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir", "--devices", "gtx260,fermi",
+        "--requests", "8", "--watch-db", &db_s,
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("watching tuning db"), "{out}");
+    assert!(out.contains("retune daemon:"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tune_src_flag_retargets_the_tuned_shape() {
+    if binary().is_none() {
+        return;
+    }
+    // The shape a `serve --watch-db` fleet serves: tune must be able to
+    // key cache entries at it, or refreshes never match the daemon.
+    let (out, err, ok) = run(&[
+        "tune", "--devices", "gtx260,fermi", "--scale", "2", "--src", "64x64",
+        "--tiles", "16x8,32x16",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("64x64"), "tuned shape must be reported: {out}");
+    assert!(out.contains("gtx260") && out.contains("fermi"), "{out}");
+    let (_, err, ok) = run(&["tune", "--src", "banana"]);
+    assert!(!ok);
+    assert!(err.contains("--src"), "{err}");
+    let (_, err, ok) = run(&["tune", "--src", "0x64"]);
+    assert!(!ok);
+    assert!(err.contains("--src"), "{err}");
+}

@@ -12,8 +12,9 @@ use tilekit::autotuner::{
 };
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    Biased, BlockWithTimeout, Priority, RejectWhenFull, Request, RequestKey, RoundRobin, Service,
-    ServiceBuilder, SubmitError, TilePolicy,
+    Biased, BlockWithTimeout, CostModelEta, DrainMode, Priority, RejectWhenFull, Request,
+    RequestKey, RetuneDaemon, RetuneSpec, RoundRobin, Service, ServiceBuilder, SubmitError,
+    TilePolicy,
 };
 use tilekit::device::{find_device, DeviceDescriptor};
 use tilekit::image::{generate, Interpolator};
@@ -503,7 +504,10 @@ fn tuning_db_refresh_drives_retune() {
     let before = svc
         .submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
         .unwrap();
-    assert_eq!(svc.retune("fermi", &fresh).unwrap(), Some(t32x16));
+    assert_eq!(
+        svc.controller().retune("fermi", &fresh).unwrap(),
+        Some(t32x16)
+    );
     let after = svc
         .submit(Request::new(Interpolator::Bilinear, img, 2))
         .unwrap();
@@ -514,7 +518,7 @@ fn tuning_db_refresh_drives_retune() {
     let tile_of = |label: &str| {
         views
             .iter()
-            .find(|v| v.label == label)
+            .find(|v| &*v.label == label)
             .map(|v| v.tile_pref)
             .unwrap()
     };
@@ -524,4 +528,309 @@ fn tuning_db_refresh_drives_retune() {
     let stats = svc.shutdown();
     assert_eq!(stats.retunes.get(), 1);
     assert_eq!(stats.completed.get(), 2);
+}
+
+// ------------------------------------------------- elastic membership --
+
+/// THE elastic acceptance criterion: a 1-member fleet serves under
+/// load; `FleetController::add_member` brings a second tuned device in
+/// live; aggregate sim cost improves vs staying single-member, and no
+/// submission errors and no ticket is lost across the epoch flip.
+#[test]
+fn live_add_member_improves_cost_without_losing_a_ticket() {
+    let (gtx, fermi) = pair();
+    let tiles = [TileDim::new(16, 8), TileDim::new(32, 16)];
+    let outcome = TuningSession::new(SimCostModel)
+        .devices([gtx.clone(), fermi.clone()])
+        .kernel(Interpolator::Bilinear)
+        .scale(2)
+        .src((64, 64))
+        .tiles(tiles)
+        .run()
+        .unwrap();
+    // Start on the device whose tuned tile simulates MORE expensive, so
+    // the live joiner is a strict improvement the scheduler can exploit.
+    let ms_of = |id: &str| outcome.device(id).unwrap().best_ms;
+    assert_ne!(ms_of("gtx260"), ms_of("fermi"));
+    let (solo, joiner) = if ms_of("gtx260") >= ms_of("fermi") {
+        (gtx, fermi)
+    } else {
+        (fermi, gtx)
+    };
+
+    let n1 = 40usize;
+    let n2 = 80usize;
+    let run = |elastic: bool| {
+        let config = ServingConfig {
+            workers: 1,
+            batch_max: Some(2),
+            batch_deadline_ms: 0.2,
+            queue_cap: 512,
+            work_stealing: false, // isolate the scheduler's contribution
+            ..ServingConfig::default()
+        };
+        let svc = ServiceBuilder::new(&config, &fleet_manifest())
+            .device(
+                solo.clone(),
+                Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
+                TilePolicy::PerDevice(outcome.clone()),
+            )
+            .scheduler(CostModelEta)
+            .admission(BlockWithTimeout(Duration::from_secs(30)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let epoch0 = ctl.epoch();
+        let img = generate::test_scene(64, 64, 41);
+        let mut tickets = Vec::with_capacity(n1 + n2);
+        for i in 0..n1 {
+            tickets.push(
+                svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+                    .unwrap_or_else(|e| panic!("wave-1 submit {i} failed: {e}")),
+            );
+        }
+        if elastic {
+            // The transition under load: wave-1 work is still in flight.
+            ctl.add_member(
+                joiner.clone(),
+                Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
+                TilePolicy::PerDevice(outcome.clone()),
+            )
+            .unwrap();
+            assert_eq!(svc.member_count(), 2);
+            assert!(ctl.epoch() > epoch0, "add bumps the membership epoch");
+        }
+        for i in 0..n2 {
+            tickets.push(
+                svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+                    .unwrap_or_else(|e| panic!("wave-2 submit {i} failed: {e}")),
+            );
+        }
+        for (i, t) in tickets.into_iter().enumerate() {
+            t.wait()
+                .unwrap_or_else(|e| panic!("ticket {i} lost across the transition: {e}"));
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.completed.get(), (n1 + n2) as u64, "nothing lost");
+        assert_eq!(stats.failed.get() + stats.shed.get() + stats.cancelled.get(), 0);
+        assert_eq!(stats.unpriced.get(), 0, "aggregate must be comparable");
+        stats.sim_cost_ms()
+    };
+
+    let solo_cost = run(false);
+    let elastic_cost = run(true);
+    assert!(
+        elastic_cost < solo_cost,
+        "adding a tuned member live must improve aggregate sim cost: \
+         elastic {elastic_cost:.4} ms vs solo {solo_cost:.4} ms"
+    );
+}
+
+/// Satellite: in-flight tickets issued before `remove_member(Graceful)`
+/// still complete; nothing is lost or double-executed across the epoch
+/// flip, and the removed member's stats survive in the fleet totals.
+#[test]
+fn graceful_remove_under_load_completes_every_ticket() {
+    let (gtx, fermi) = pair();
+    let config = ServingConfig {
+        workers: 1,
+        batch_max: Some(2),
+        batch_deadline_ms: 0.2,
+        queue_cap: 512,
+        steal_threshold: 2,
+        ..ServingConfig::default()
+    };
+    let n = 40usize;
+    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        .device(
+            gtx,
+            Arc::new(MockEngine::with_delay(Duration::from_millis(2))),
+            TilePolicy::PortableFallback,
+        )
+        .device(
+            fermi,
+            Arc::new(MockEngine::with_delay(Duration::from_millis(2))),
+            TilePolicy::PortableFallback,
+        )
+        .scheduler(RoundRobin::default())
+        .admission(BlockWithTimeout(Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let ctl = svc.controller();
+    let img = generate::test_scene(64, 64, 42);
+    let tickets: Vec<_> = (0..n)
+        .map(|i| {
+            svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+                .unwrap_or_else(|e| panic!("submit {i} failed: {e}"))
+        })
+        .collect();
+    // Remove a member while roughly half the fleet's work is queued on
+    // it. Graceful: its pipeline drains everything it owns first.
+    ctl.remove_member("fermi", DrainMode::Graceful).unwrap();
+    assert_eq!(svc.member_count(), 1);
+    for (i, t) in tickets.into_iter().enumerate() {
+        t.wait()
+            .unwrap_or_else(|e| panic!("ticket {i} lost by graceful removal: {e}"));
+    }
+    // The fleet keeps serving after the removal, on the survivor only.
+    let t = svc
+        .submit(Request::new(Interpolator::Bilinear, img, 2))
+        .unwrap();
+    assert_eq!(t.device_id(), Some("gtx260"));
+    t.wait().unwrap();
+    let stats = svc.shutdown();
+    // Exactly n+1 completions fleet-wide: a double-executed request
+    // would overshoot, a lost one undershoot; removed-member stats are
+    // retained in the merged totals.
+    assert_eq!(stats.completed.get(), (n + 1) as u64);
+    assert_eq!(stats.failed.get(), 0);
+    assert_eq!(
+        stats.admitted.get() + stats.steals.get(),
+        stats.completed.get() + stats.stolen.get(),
+        "ownership accounting balances across the epoch flip"
+    );
+}
+
+// ------------------------------------------------- the retune daemon --
+
+/// THE daemon acceptance criterion: a `TuningDb` file refresh hot-swaps
+/// a member's winner (retunes counter increments) with no fleet drain.
+#[test]
+fn retune_daemon_applies_tuning_db_file_refresh() {
+    let t16x8 = TileDim::new(16, 8);
+    let t32x16 = TileDim::new(32, 16);
+    let tuning = |id: &str, best: TileDim, other: TileDim| {
+        DeviceTuning::from_points(
+            id.to_string(),
+            vec![
+                TunedPoint { tile: best, ms: 1.0 },
+                TunedPoint { tile: other, ms: 2.0 },
+            ],
+            2,
+        )
+        .unwrap()
+    };
+    let fp = TuningDb::tiles_fingerprint(&[t16x8, t32x16]);
+    let dir = std::env::temp_dir().join("tilekit_retune_daemon_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tuning_cache.json");
+    std::fs::remove_file(&path).ok();
+
+    // Yesterday's cache on disk: both devices prefer 16x8.
+    let mut db = TuningDb::open(&path).unwrap();
+    let stale_gtx = tuning("gtx260", t16x8, t32x16);
+    let stale_fermi = tuning("fermi", t16x8, t32x16);
+    db.insert(Interpolator::Bilinear, 2, (64, 64), "exhaustive", &fp, stale_gtx);
+    db.insert(Interpolator::Bilinear, 2, (64, 64), "exhaustive", &fp, stale_fermi);
+    db.persist().unwrap();
+    let stale = db
+        .outcome_for(Interpolator::Bilinear, 2, (64, 64), "exhaustive", &fp, &["gtx260", "fermi"])
+        .unwrap();
+
+    let (gtx, fermi) = pair();
+    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+        .device(gtx, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale.clone()))
+        .device(fermi, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale))
+        .admission(BlockWithTimeout(Duration::from_secs(10)))
+        .build()
+        .unwrap();
+    assert!(svc.members().iter().all(|v| v.tile_pref == Some(t16x8)));
+    let daemon = RetuneDaemon::spawn(
+        svc.controller(),
+        path.clone(),
+        RetuneSpec {
+            kernel: Interpolator::Bilinear,
+            scale: 2,
+            src: (64, 64),
+            strategy: "exhaustive".to_string(),
+            tiles_fp: fp.clone(),
+        },
+        Duration::from_millis(10),
+    );
+    // First sighting of the file matches the running winners: a refresh
+    // is observed but nothing needs retuning.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while daemon.stats().refreshes.get() == 0 {
+        assert!(std::time::Instant::now() < deadline, "daemon never read the db");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(daemon.stats().applied.get(), 0);
+
+    // The re-tuning run: fermi's winner flips on disk.
+    let fresh_fermi = tuning("fermi", t32x16, t16x8);
+    db.insert(Interpolator::Bilinear, 2, (64, 64), "exhaustive", &fp, fresh_fermi);
+    db.persist().unwrap();
+    while daemon.stats().applied.get() == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "daemon never applied the refreshed winner"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The hot swap happened with no fleet drain: both members serve.
+    let img = generate::test_scene(64, 64, 43);
+    let tickets: Vec<_> = (0..8)
+        .map(|_| svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+        .collect();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let views = svc.members();
+    let tile_of = |label: &str| {
+        views
+            .iter()
+            .find(|v| &*v.label == label)
+            .and_then(|v| v.tile_pref)
+    };
+    assert_eq!(tile_of("fermi"), Some(t32x16), "winner hot-swapped");
+    assert_eq!(tile_of("gtx260"), Some(t16x8), "unmoved winner untouched");
+    daemon.stop();
+    drop(views);
+    let stats = svc.shutdown();
+    assert_eq!(stats.retunes.get(), 1, "retunes counter increments");
+    assert_eq!(stats.completed.get(), 8);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Drain is the softer half of removal: the member stays registered and
+/// finishes what it holds, but the scheduler routes new work around it.
+#[test]
+fn drained_member_takes_no_new_work_but_finishes_old() {
+    let (gtx, fermi) = pair();
+    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+        .device(
+            gtx,
+            Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
+            TilePolicy::PortableFallback,
+        )
+        .device(
+            fermi,
+            Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
+            TilePolicy::PortableFallback,
+        )
+        .scheduler(RoundRobin::default())
+        .admission(BlockWithTimeout(Duration::from_secs(30)))
+        .build()
+        .unwrap();
+    let ctl = svc.controller();
+    let img = generate::test_scene(64, 64, 44);
+    let before: Vec<_> = (0..12)
+        .map(|_| svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+        .collect();
+    ctl.drain("fermi").unwrap();
+    let topo = ctl.topology();
+    assert!(topo.members.iter().any(|m| &*m.label == "fermi" && m.draining));
+    for _ in 0..12 {
+        let t = svc
+            .submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+            .unwrap();
+        assert_eq!(t.device_id(), Some("gtx260"), "drained member must not be picked");
+        t.wait().unwrap();
+    }
+    for t in before {
+        t.wait().unwrap();
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.completed.get(), 24);
+    assert_eq!(stats.failed.get(), 0);
 }
