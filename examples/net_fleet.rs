@@ -1,0 +1,176 @@
+//! OUT-OF-PROCESS FLEET DEMO — the `net` subsystem end to end, without
+//! leaving one process: two fleet shards behind `NetServer`s on
+//! loopback TCP, a consistent-hash `FrontTier` routing by request
+//! shape, and a mid-run drain+remove of the shard that owns the demo
+//! shape — with zero lost tickets.
+//!
+//! Phases:
+//!
+//! 1. **bind** — two 2-member mock fleets (GTX 260 + Fermi each, tuned
+//!    per device) go on ephemeral loopback ports.
+//! 2. **route** — the front tier hashes the demo shape (bilinear
+//!    64x64, scale 2) onto one owner shard; every request with the
+//!    same shape lands there.
+//! 3. **failover** — with half the workload in flight, every member of
+//!    the owner shard is drained and removed through the *remote*
+//!    control plane; one health poll later the same shape routes to
+//!    the survivor.
+//! 4. **settle** — all tickets (including those owed by the removed
+//!    members) resolve; the merged fleet-of-fleets stats count both
+//!    shards.
+//!
+//! The multi-process version of this flow is `make -C rust net-demo`
+//! (real `tilekit serve --listen` processes + `tilekit front`).
+//!
+//! Run: `cargo run --release --example net_fleet`
+
+use std::sync::Arc;
+use tilekit::autotuner::{SimCostModel, TuningSession};
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{DrainMode, Fleet, FleetBuilder, Request, RequestKey, TilePolicy};
+use tilekit::device::{find_device, DeviceDescriptor};
+use tilekit::image::{generate, Interpolator};
+use tilekit::net::{
+    BackendFactory, FrontTier, FrontTierConfig, ListenAddr, NetServer, NetServerConfig,
+};
+use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
+use tilekit::tiling::TileDim;
+
+fn shard_fleet() -> anyhow::Result<Arc<Fleet>> {
+    let manifest = Manifest::fleet_demo();
+    let gtx = find_device("gtx260").expect("builtin");
+    let fermi = find_device("fermi").expect("builtin");
+    let outcome = TuningSession::new(SimCostModel)
+        .devices([gtx.clone(), fermi.clone()])
+        .kernel(Interpolator::Bilinear)
+        .scale(2)
+        .src((64, 64))
+        .tiles([TileDim::new(16, 8), TileDim::new(32, 16)])
+        .run()?;
+    let cfg = ServingConfig {
+        workers: 2,
+        batch_max: Some(4),
+        batch_deadline_ms: 0.5,
+        queue_cap: 1024,
+        ..ServingConfig::default()
+    };
+    let fleet = FleetBuilder::new(&cfg, &manifest)
+        .device(
+            gtx,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome.clone()),
+        )
+        .device(
+            fermi,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome),
+        )
+        .build()?;
+    Ok(Arc::new(fleet))
+}
+
+fn main() -> anyhow::Result<()> {
+    // Phase 1: two shards on ephemeral loopback ports.
+    let factory: BackendFactory =
+        Arc::new(|_d: &DeviceDescriptor| Arc::new(MockEngine::new()) as Arc<dyn ResizeBackend>);
+    let mut servers = Vec::new();
+    for _ in 0..2 {
+        let fleet = shard_fleet()?;
+        let server = NetServer::bind(
+            &ListenAddr::Tcp("127.0.0.1:0".into()),
+            fleet,
+            Arc::clone(&factory),
+            NetServerConfig::default(),
+        )?;
+        println!("shard listening on {}", server.local_addr());
+        servers.push(server);
+    }
+    let addrs: Vec<ListenAddr> = servers.iter().map(|s| s.local_addr().clone()).collect();
+
+    // Phase 2: the front tier routes the demo shape to one owner.
+    let tier = FrontTier::connect(
+        &addrs,
+        FrontTierConfig {
+            health_poll: None, // we drive polls by hand below
+            ..FrontTierConfig::default()
+        },
+    )
+    .map_err(|e| anyhow::anyhow!("front tier connect: {e}"))?;
+    let probe = generate::test_scene(64, 64, 0);
+    let key = RequestKey::of(Interpolator::Bilinear, &probe, 2);
+    let owner = tier.route_for(&key).expect("two live shards");
+    println!(
+        "\ndemo shape bilinear 64x64 s2 hashes to shard {owner} ({})",
+        addrs[owner]
+    );
+
+    const N: usize = 32;
+    let mut tickets = Vec::new();
+    for i in 0..N / 2 {
+        let (shard, t) = tier
+            .submit(&Request::new(
+                Interpolator::Bilinear,
+                generate::test_scene(64, 64, i as u64),
+                2,
+            ))
+            .map_err(|e| anyhow::anyhow!("submit: {e}"))?;
+        assert_eq!(shard, owner);
+        tickets.push(t);
+    }
+    println!("submitted {} tickets to the owner shard", N / 2);
+
+    // Phase 3: drain + remove the owner's members over the wire.
+    let victim = tier.client(owner);
+    let topo = victim
+        .topology()
+        .map_err(|e| anyhow::anyhow!("topology: {e}"))?;
+    for m in &topo.members {
+        victim
+            .drain(&m.label)
+            .map_err(|e| anyhow::anyhow!("drain: {e}"))?;
+    }
+    for m in &topo.members {
+        victim
+            .remove_member(&m.label, DrainMode::Graceful)
+            .map_err(|e| anyhow::anyhow!("remove: {e}"))?;
+    }
+    tier.poll_once();
+    println!(
+        "drained + removed shard {owner}'s members; shape now routes to shard {}",
+        tier.route_for(&key).expect("survivor is live")
+    );
+
+    for i in 0..N / 2 {
+        let (shard, t) = tier
+            .submit(&Request::new(
+                Interpolator::Bilinear,
+                generate::test_scene(64, 64, 1000 + i as u64),
+                2,
+            ))
+            .map_err(|e| anyhow::anyhow!("submit after drain: {e}"))?;
+        assert_ne!(shard, owner, "post-drain traffic must reroute");
+        tickets.push(t);
+    }
+
+    // Phase 4: every ticket resolves — including those the removed
+    // members still owed when the drain started.
+    let mut done = 0;
+    for t in tickets {
+        t.wait().map_err(|e| anyhow::anyhow!("wait: {e}"))?;
+        done += 1;
+    }
+    println!("\ncompleted {done}/{N} (zero lost tickets)");
+    for v in tier.shard_views() {
+        println!(
+            "  {} — alive {}, draining {}, epoch {}",
+            v.addr, v.alive, v.draining, v.epoch
+        );
+    }
+    println!("\nmerged stats: {}", tier.merged_stats().summary());
+
+    tier.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+    Ok(())
+}

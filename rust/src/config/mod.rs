@@ -78,6 +78,10 @@ pub struct ServingConfig {
     /// `tilekit serve --watch-db` (the
     /// [`RetuneDaemon`](crate::coordinator::RetuneDaemon)).
     pub retune_poll_ms: f64,
+    /// Default listen address for `tilekit serve --listen` when the
+    /// flag gives no address: `host:port` or `unix:/path.sock`. `None`
+    /// keeps `serve` in its in-process demo mode.
+    pub listen: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -95,6 +99,7 @@ impl Default for ServingConfig {
             work_stealing: true,
             steal_threshold: 4,
             retune_poll_ms: 200.0,
+            listen: None,
         }
     }
 }
@@ -173,7 +178,104 @@ impl ServingConfig {
                 self.retune_poll_ms
             );
         }
+        if let Some(addr) = &self.listen {
+            crate::net::ListenAddr::parse(addr)
+                .with_context(|| format!("serving.listen = \"{addr}\""))?;
+        }
         Ok(())
+    }
+}
+
+/// Wire-protocol parameters (`[net]`), shared by `serve --listen`,
+/// `fleet`/`submit --connect`, and `front --shards`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Client-side TCP connect timeout (ms).
+    pub connect_timeout_ms: f64,
+    /// Server-side socket read timeout (ms) — also the poll tick for
+    /// shutdown/idle checks.
+    pub read_timeout_ms: f64,
+    /// Server closes a connection idle (no complete frame) this long (ms).
+    pub idle_timeout_ms: f64,
+    /// How long a client call may wait for its response (ms); must
+    /// exceed the server's 5 s per-call `wait` cap.
+    pub response_timeout_ms: f64,
+    /// Concurrent connection cap per server.
+    pub max_conns: usize,
+    /// Per-line (frame) byte cap, in KiB.
+    pub max_line_kib: usize,
+    /// Front-tier health poll cadence (ms).
+    pub health_poll_ms: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            connect_timeout_ms: 2000.0,
+            read_timeout_ms: 250.0,
+            idle_timeout_ms: 30_000.0,
+            response_timeout_ms: 10_000.0,
+            max_conns: 64,
+            max_line_kib: 8192,
+            health_poll_ms: 200.0,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("net.connect_timeout_ms", self.connect_timeout_ms),
+            ("net.read_timeout_ms", self.read_timeout_ms),
+            ("net.idle_timeout_ms", self.idle_timeout_ms),
+            ("net.response_timeout_ms", self.response_timeout_ms),
+            ("net.health_poll_ms", self.health_poll_ms),
+        ] {
+            if v.is_nan() || v <= 0.0 {
+                bail!("{name} must be > 0 (got {v})");
+            }
+        }
+        if self.idle_timeout_ms < self.read_timeout_ms {
+            bail!(
+                "net.idle_timeout_ms ({}) must be >= net.read_timeout_ms ({})",
+                self.idle_timeout_ms,
+                self.read_timeout_ms
+            );
+        }
+        if self.response_timeout_ms <= 5000.0 {
+            bail!(
+                "net.response_timeout_ms ({}) must exceed the server's 5000 ms per-call wait cap",
+                self.response_timeout_ms
+            );
+        }
+        if self.max_conns == 0 {
+            bail!("net.max_conns must be >= 1 (got 0)");
+        }
+        if self.max_line_kib == 0 {
+            bail!("net.max_line_kib must be >= 1 (got 0)");
+        }
+        Ok(())
+    }
+
+    /// Materialize the server-side knobs.
+    pub fn server_config(&self) -> crate::net::NetServerConfig {
+        crate::net::NetServerConfig {
+            max_conns: self.max_conns,
+            read_timeout: std::time::Duration::from_secs_f64(self.read_timeout_ms / 1e3),
+            idle_timeout: std::time::Duration::from_secs_f64(self.idle_timeout_ms / 1e3),
+            max_line_bytes: self.max_line_kib * 1024,
+            drain_timeout: std::time::Duration::from_secs(10),
+        }
+    }
+
+    /// Materialize the client-side knobs.
+    pub fn client_config(&self) -> crate::net::NetClientConfig {
+        crate::net::NetClientConfig {
+            connect_timeout: std::time::Duration::from_secs_f64(self.connect_timeout_ms / 1e3),
+            response_timeout: std::time::Duration::from_secs_f64(self.response_timeout_ms / 1e3),
+            max_line_bytes: self.max_line_kib * 1024,
+            wait_poll: std::time::Duration::from_secs(2),
+        }
     }
 }
 
@@ -182,6 +284,7 @@ impl ServingConfig {
 pub struct Config {
     pub sweep: SweepConfig,
     pub serving: ServingConfig,
+    pub net: NetConfig,
     /// Builtin devices plus any `[[device]]` entries (by id; custom
     /// entries with a builtin id override it).
     pub devices: Vec<DeviceDescriptor>,
@@ -193,6 +296,7 @@ impl Config {
         Config {
             sweep: SweepConfig::default(),
             serving: ServingConfig::default(),
+            net: NetConfig::default(),
             devices: builtin_devices(),
         }
     }
@@ -291,6 +395,35 @@ impl Config {
                     .as_float()
                     .ok_or_else(|| anyhow!("serving.retune_poll_ms must be a number"))?;
             }
+            if let Some(v) = t.get("listen") {
+                cfg.serving.listen = Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("serving.listen must be a string"))?
+                        .to_string(),
+                );
+            }
+        }
+
+        if let Some(t) = doc.table("net") {
+            let float = |key: &str, slot: &mut f64| -> Result<()> {
+                if let Some(v) = t.get(key) {
+                    *slot = v
+                        .as_float()
+                        .ok_or_else(|| anyhow!("net.{key} must be a number"))?;
+                }
+                Ok(())
+            };
+            float("connect_timeout_ms", &mut cfg.net.connect_timeout_ms)?;
+            float("read_timeout_ms", &mut cfg.net.read_timeout_ms)?;
+            float("idle_timeout_ms", &mut cfg.net.idle_timeout_ms)?;
+            float("response_timeout_ms", &mut cfg.net.response_timeout_ms)?;
+            float("health_poll_ms", &mut cfg.net.health_poll_ms)?;
+            if let Some(v) = t.get("max_conns") {
+                cfg.net.max_conns = as_usize(v).context("net.max_conns")?;
+            }
+            if let Some(v) = t.get("max_line_kib") {
+                cfg.net.max_line_kib = as_usize(v).context("net.max_line_kib")?;
+            }
         }
 
         if let Some(devs) = doc.arrays.get("device") {
@@ -331,6 +464,7 @@ impl Config {
             }
         }
         self.serving.validate()?;
+        self.net.validate()?;
         // Fail at load time on a name no scheduler/policy will accept,
         // not at service startup.
         crate::coordinator::scheduler_by_name(&self.serving.scheduler)?;
@@ -417,6 +551,17 @@ admission_timeout_ms = 5000.0
 work_stealing = true       # idle members steal from hot peers' queues
 steal_threshold = 4        # min victim backlog before stealing kicks in
 retune_poll_ms = 200.0     # tuning-db watcher poll for `serve --watch-db`
+# listen = "127.0.0.1:7441"     # default addr for `serve --listen`
+# listen = "unix:/tmp/tk.sock"  # ...or a Unix socket
+
+[net]                      # wire protocol (serve --listen / --connect / front)
+connect_timeout_ms = 2000.0
+read_timeout_ms = 250.0        # server poll tick for idle/shutdown checks
+idle_timeout_ms = 30000.0      # server drops connections idle this long
+response_timeout_ms = 10000.0  # client per-call budget (> 5000 ms wait cap)
+max_conns = 64                 # per-server concurrent connection cap
+max_line_kib = 8192            # frame size bound (one JSON line)
+health_poll_ms = 200.0         # front tier topology/health poll cadence
 
 # Custom GPUs (merged over the registry by id):
 # [[device]]
@@ -639,6 +784,63 @@ global_mem_mib = 64
         assert_eq!(cfg.serving.scheduler, "cost-eta");
         assert_eq!(cfg.serving.admission, "shed-batch");
         assert_eq!(cfg.serving.admission_timeout_ms, 250.0);
+    }
+
+    #[test]
+    fn listen_key_parses_and_validates() {
+        let cfg =
+            Config::from_toml_str("[serving]\nlisten = \"127.0.0.1:7441\"\n").unwrap();
+        assert_eq!(cfg.serving.listen.as_deref(), Some("127.0.0.1:7441"));
+        let cfg = Config::from_toml_str("[serving]\nlisten = \"unix:/tmp/tk.sock\"\n").unwrap();
+        assert_eq!(cfg.serving.listen.as_deref(), Some("unix:/tmp/tk.sock"));
+        assert_eq!(ServingConfig::default().listen, None, "off by default");
+        assert!(Config::from_toml_str("[serving]\nlisten = \"noport\"\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nlisten = \"host:yes\"\n").is_err());
+        assert!(Config::from_toml_str("[serving]\nlisten = 7441\n").is_err());
+    }
+
+    #[test]
+    fn net_table_parses_and_validates() {
+        let cfg = Config::from_toml_str(
+            "[net]\nmax_conns = 8\nread_timeout_ms = 100.0\nidle_timeout_ms = 5000.0\n\
+             response_timeout_ms = 6000.0\nmax_line_kib = 64\nhealth_poll_ms = 50.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.max_conns, 8);
+        assert_eq!(cfg.net.read_timeout_ms, 100.0);
+        assert_eq!(cfg.net.idle_timeout_ms, 5000.0);
+        assert_eq!(cfg.net.max_line_kib, 64);
+        assert_eq!(cfg.net.health_poll_ms, 50.0);
+        // defaults survive partial override
+        assert_eq!(cfg.net.connect_timeout_ms, 2000.0);
+        NetConfig::default().validate().unwrap();
+        assert!(Config::from_toml_str("[net]\nmax_conns = 0\n").is_err());
+        assert!(Config::from_toml_str("[net]\nmax_line_kib = 0\n").is_err());
+        assert!(Config::from_toml_str("[net]\nread_timeout_ms = 0.0\n").is_err());
+        // idle must cover at least one read tick
+        assert!(Config::from_toml_str(
+            "[net]\nread_timeout_ms = 500.0\nidle_timeout_ms = 100.0\n"
+        )
+        .is_err());
+        // client budget must outlast the server's wait cap
+        assert!(Config::from_toml_str("[net]\nresponse_timeout_ms = 1000.0\n").is_err());
+    }
+
+    #[test]
+    fn net_config_materializes_server_and_client_knobs() {
+        let net = NetConfig {
+            max_conns: 3,
+            max_line_kib: 2,
+            read_timeout_ms: 100.0,
+            ..NetConfig::default()
+        };
+        let s = net.server_config();
+        assert_eq!(s.max_conns, 3);
+        assert_eq!(s.max_line_bytes, 2048);
+        assert_eq!(s.read_timeout, std::time::Duration::from_millis(100));
+        let c = net.client_config();
+        assert_eq!(c.max_line_bytes, 2048);
+        assert_eq!(c.connect_timeout, std::time::Duration::from_secs(2));
     }
 
     #[test]

@@ -33,6 +33,12 @@
 //!   swaps, driven in the background by the
 //!   [`RetuneDaemon`](coordinator::RetuneDaemon)), executing
 //!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
+//!   The whole fleet is also reachable **out of process** via [`net`]:
+//!   a line-delimited JSON wire protocol served by
+//!   [`NetServer`](net::NetServer) (`tilekit serve --listen`), consumed
+//!   by the blocking [`FleetClient`](net::FleetClient), and scaled out
+//!   by a consistent-hash [`FrontTier`](net::FrontTier) over N fleet
+//!   processes (`tilekit front --shards`).
 //! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
 //! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels
 //!   whose `BlockSpec` output tile plays the role of the CUDA block shape.
@@ -74,6 +80,7 @@ pub mod device;
 pub mod exec;
 pub mod image;
 pub mod metrics;
+pub mod net;
 pub mod prop;
 pub mod runtime;
 pub mod sim;

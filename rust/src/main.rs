@@ -42,7 +42,9 @@ const VALUE_FLAGS: &[&str] = &[
     "config", "device", "devices", "tile", "tiles", "scale", "scales", "kernel", "src",
     "artifacts", "out", "requests", "workers", "batch-max", "straggler-speed", "input",
     "output", "seed", "strategy", "cache", "scheduler", "policy", "baseline", "max-regress",
-    "watch-db", "watch-poll-ms", "watch-strategy",
+    "watch-db", "watch-poll-ms", "watch-strategy", "listen", "listen-for-ms", "connect",
+    "shards", "outcome", "deadline-ms", "priority", "mode", "steal", "steal-threshold",
+    "timeout-ms",
 ];
 
 fn main() {
@@ -74,6 +76,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("resize") => cmd_resize(args, &cfg),
         Some("serve") => cmd_serve(args, &cfg),
         Some("fleet") => cmd_fleet(args, &cfg),
+        Some("submit") => cmd_submit(args, &cfg),
+        Some("front") => cmd_front(args, &cfg),
         Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(args, &cfg),
         Some("init-config") => {
@@ -114,7 +118,13 @@ COMMANDS
         [--tiles t1,t2] [--batch-max N] [--no-steal]
         [--devices a,b] [--scheduler s] [--policy p]
         [--watch-db f.json] [--watch-poll-ms N] [--watch-strategy s]
+        [--listen host:port|unix:/p.sock] [--listen-for-ms N]
                                         serving demo: batched requests + stats.
+                                        --listen serves the fleet over the wire
+                                        protocol instead of running the demo
+                                        workload (port 0 = ephemeral; prints
+                                        the bound address; --listen-for-ms
+                                        bounds the lifetime, default forever);
                                         --devices starts a simulated fleet with
                                         per-device tuned tiles; --scheduler is
                                         round-robin|least-loaded|cost-eta
@@ -132,11 +142,24 @@ COMMANDS
                                         key the refresh runs write, default
                                         exhaustive)
   fleet <topology|drain|retune> [--devices a,b] [--device id] [--requests N]
-                                        drive the typed control plane against a
-                                        live demo fleet: print the epoch-stamped
-                                        topology, drain a member under load, or
-                                        hot-swap a member's tuned tile
+        [--connect addr ...]            drive the typed control plane against a
+                                        live demo fleet — or, with --connect,
+                                        against a remote `serve --listen` fleet
+                                        (more actions: stats, add-member,
+                                        remove-member, set-scheduler,
+                                        set-admission, set-steal)
                                         (see 'tilekit fleet --help')
+  submit --connect addr [--kernel k] [--src WxH] [--scale N] [--requests N]
+         [--priority interactive|batch] [--deadline-ms N] [--seed N]
+                                        submit requests to a remote fleet over
+                                        the wire and wait for the results
+  front --shards a:p1,b:p2 [--requests N] [--drain-owner] [--seed N]
+                                        consistent-hash front tier over N fleet
+                                        servers: shape-stable routing, health
+                                        polling, merged fleet-of-fleets stats;
+                                        --drain-owner drains+removes the shard
+                                        owning the demo shape mid-run to prove
+                                        zero-loss failover
   bench [--out f.json] [--baseline f.json] [--max-regress PCT]
         [--update-baseline] [--full]    hot-path smoke benchmarks; with
                                         --baseline, fails on >PCT% regression
@@ -962,6 +985,81 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             ))
         }
     };
+    // --listen (or a configured serving.listen) swaps the demo workload
+    // for the wire protocol: the same fleet, served to remote clients.
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| serving.listen.clone());
+    if let Some(addr_s) = listen {
+        let addr = tilekit::net::ListenAddr::parse(&addr_s)
+            .with_context(|| format!("--listen '{addr_s}'"))?;
+        let factory: tilekit::net::BackendFactory = {
+            let manifest = manifest.clone();
+            Arc::new(move |_d: &DeviceDescriptor| -> Arc<dyn ResizeBackend> {
+                if mock {
+                    Arc::new(MockEngine::new())
+                } else {
+                    Arc::new(EngineHandle::new(manifest.clone()))
+                }
+            })
+        };
+        let fleet = Arc::new(svc);
+        let server = tilekit::net::NetServer::bind(
+            &addr,
+            Arc::clone(&fleet),
+            factory,
+            cfg.net.server_config(),
+        )?;
+        println!(
+            "listening on {} ({} member(s), scheduler {}, admission {})",
+            server.local_addr(),
+            fleet.member_count(),
+            fleet.scheduler_name(),
+            fleet.admission_name(),
+        );
+        // The loopback smoke test reads the bound address from a piped
+        // stdout; without the flush it sits in the pipe buffer.
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        match args.get_parsed::<f64>("listen-for-ms")? {
+            Some(ms) => {
+                if ms.is_nan() || ms < 0.0 {
+                    bail!("--listen-for-ms must be >= 0 (got {ms})");
+                }
+                std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+            }
+            None => loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            },
+        }
+        server.shutdown();
+        if let Some(d) = daemon {
+            d.stop();
+        }
+        println!("served: {}", fleet.stats().summary());
+        // Reclaim the fleet for a clean worker join; connection threads
+        // release their handles shortly after server shutdown.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        let mut fleet = fleet;
+        loop {
+            match Arc::try_unwrap(fleet) {
+                Ok(f) => {
+                    f.shutdown();
+                    break;
+                }
+                Err(arc) => {
+                    if std::time::Instant::now() > deadline {
+                        break; // process exit reaps the threads
+                    }
+                    fleet = arc;
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+            }
+        }
+        return Ok(());
+    }
+
     let batch_max_label = match serving.batch_max {
         Some(b) => b.to_string(),
         None => "auto (per compute capability)".to_string(),
@@ -1082,9 +1180,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 
 const FLEET_HELP: &str = r#"tilekit fleet — drive the typed control plane against a live demo fleet
 
-USAGE: tilekit fleet <topology|drain|retune> [flags]
+USAGE: tilekit fleet <action> [flags]
+       tilekit fleet --connect host:port|unix:/p.sock <action> [flags]
 
-ACTIONS
+ACTIONS (in-process demo)
   topology             serve a short mock workload, then print the
                        epoch-stamped membership snapshot
   drain                mark one member draining mid-load: the scheduler
@@ -1092,16 +1191,39 @@ ACTIONS
   retune               hot-swap one member's tuned tile mid-load through
                        FleetController::retune (no fleet drain)
 
+ACTIONS (remote, with --connect against a `serve --listen` fleet)
+  topology             print the remote epoch-stamped topology
+  stats                print the remote fleet's serving stats
+  drain --device id    stop admissions to a remote member
+  retune --device id [--outcome f.json]
+                       hot-swap a remote member's tuned tile: sends the
+                       TuningOutcome from --outcome, or recomputes the
+                       mock-demo outcome with the winner flipped
+  add-member --device id [--tile WxH]
+                       grow the remote fleet with a registry device
+                       (fixed tile, else the portable fallback)
+  remove-member --device id [--mode graceful|immediate]
+                       shrink the remote fleet
+  set-scheduler --scheduler s
+                       swap the remote scheduler (round-robin |
+                       least-loaded | cost-eta)
+  set-admission --policy p [--timeout-ms N]
+                       swap the remote admission policy
+  set-steal --steal on|off [--steal-threshold N]
+                       reconfigure remote work stealing
+
 FLAGS
-  --devices a,b        fleet member device ids (default gtx260,fermi)
-  --device id          the member drain/retune targets (default: the
+  --connect addr       drive a remote fleet instead of the in-process demo
+  --devices a,b        (demo) fleet member device ids (default gtx260,fermi)
+  --device id          the member the action targets (demo default: the
                        first fleet device)
-  --requests N         demo workload size (default 24)
+  --requests N         (demo) workload size (default 24)
 
 The demo fleet runs in-process over the built-in mock manifest: each
 command builds the fleet, applies the control-plane operation while
 requests are in flight, and prints the topology before and after. The
-same operations are available programmatically via Fleet::controller().
+same operations are available programmatically via Fleet::controller(),
+or remotely via net::FleetClient — which is exactly what --connect uses.
 "#;
 
 /// Print one epoch-stamped topology snapshot.
@@ -1132,6 +1254,9 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
     if args.has("help") {
         print!("{FLEET_HELP}");
         return Ok(());
+    }
+    if let Some(addr) = args.get("connect") {
+        return cmd_fleet_remote(args, cfg, addr);
     }
     let action = args
         .positional
@@ -1276,5 +1401,355 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     svc.shutdown();
+    Ok(())
+}
+
+fn print_remote_topology(topo: &tilekit::net::TopologyDesc) {
+    println!("topology epoch {}:", topo.epoch);
+    let mut t = tilekit::util::text::Table::new(vec![
+        "id", "member", "device", "tile", "batch max", "draining", "admitted", "completed",
+        "inflight",
+    ]);
+    for m in &topo.members {
+        t.row(vec![
+            m.id.to_string(),
+            m.label.clone(),
+            m.device.clone().unwrap_or_else(|| "-".into()),
+            m.tile.map(|x| x.label()).unwrap_or_else(|| "-".into()),
+            m.batch_max.to_string(),
+            if m.draining { "yes" } else { "no" }.to_string(),
+            m.admitted.to_string(),
+            m.completed.to_string(),
+            m.inflight.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+/// `tilekit fleet --connect <addr> <action>`: the same control-plane verbs
+/// as the in-process demo, but spoken over the wire to a `serve --listen`
+/// fleet — plus the membership/reconfiguration verbs that only make sense
+/// against a long-lived remote process.
+fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
+    use tilekit::coordinator::DrainMode;
+    use tilekit::net::{FleetClient, ListenAddr};
+
+    let action = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow!(
+            "usage: tilekit fleet --connect <addr> <topology|stats|drain|retune|\
+             add-member|remove-member|set-scheduler|set-admission|set-steal> [flags]"
+        )
+    })?;
+    let addr = ListenAddr::parse(addr)?;
+    let client = FleetClient::connect_with(&addr, cfg.net.client_config())
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let need_device = || -> Result<&str> {
+        args.get("device")
+            .ok_or_else(|| anyhow!("'{action}' needs --device <registry id>"))
+    };
+    match action {
+        "topology" => {
+            let topo = client.topology().map_err(|e| anyhow!("{e}"))?;
+            print_remote_topology(&topo);
+        }
+        "stats" => {
+            let stats = client.stats().map_err(|e| anyhow!("{e}"))?;
+            println!("{}", stats.summary());
+        }
+        "drain" => {
+            let device = need_device()?;
+            let epoch = client.drain(device).map_err(|e| anyhow!("{e}"))?;
+            println!("drain('{device}') acknowledged at epoch {epoch}");
+        }
+        "retune" => {
+            let device = need_device()?;
+            let outcome = match args.get("outcome") {
+                Some(path) => tilekit::autotuner::TuningOutcome::load(Path::new(path))?,
+                None => {
+                    // No database given: recompute the mock-demo outcome with
+                    // the winner flipped, so the swap is visible against a
+                    // fleet started from the same built-in manifest.
+                    let manifest = Manifest::fleet_demo();
+                    let (kernel, src, scale, tiles) = fleet_tuning_target(&manifest);
+                    let base = TuningSession::new(SimCostModel)
+                        .devices(vec![cfg.device(device)?.clone()])
+                        .kernel(kernel)
+                        .scale(scale)
+                        .src((src.1, src.0))
+                        .tiles(tiles)
+                        .run()?;
+                    base.with_flipped_winner(device)
+                        .ok_or_else(|| anyhow!("no launchable point to flip for '{device}'"))?
+                }
+            };
+            let tile = client.retune(device, &outcome).map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "retune('{device}'): remote tile now {}",
+                tile.map(|t| t.label()).unwrap_or_else(|| "-".into())
+            );
+        }
+        "add-member" => {
+            let device = need_device()?;
+            let policy = match args.get("tile") {
+                Some(t) => TilePolicy::Fixed(t.parse().map_err(|e: String| anyhow!(e))?),
+                None => TilePolicy::PortableFallback,
+            };
+            let (member, epoch) = client
+                .add_member(device, &policy)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("added '{device}' as member {member}; epoch {epoch}");
+        }
+        "remove-member" => {
+            let device = need_device()?;
+            let mode = match args.get_or("mode", "graceful") {
+                "graceful" => DrainMode::Graceful,
+                "immediate" => DrainMode::Immediate,
+                other => bail!("unknown --mode '{other}' (graceful|immediate)"),
+            };
+            let epoch = client
+                .remove_member(device, mode)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("removed '{device}'; epoch {epoch}");
+        }
+        "set-scheduler" => {
+            let name = args
+                .get("scheduler")
+                .ok_or_else(|| anyhow!("set-scheduler needs --scheduler <name>"))?;
+            client.set_scheduler(name).map_err(|e| anyhow!("{e}"))?;
+            println!("scheduler set to '{name}'");
+        }
+        "set-admission" => {
+            let name = args
+                .get("policy")
+                .ok_or_else(|| anyhow!("set-admission needs --policy <name>"))?;
+            let timeout_ms: u64 = args.get_parsed_or("timeout-ms", 50)?;
+            client
+                .set_admission(name, std::time::Duration::from_millis(timeout_ms))
+                .map_err(|e| anyhow!("{e}"))?;
+            println!("admission set to '{name}' (timeout {timeout_ms} ms)");
+        }
+        "set-steal" => {
+            let enabled = match args.get_or("steal", "on") {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                other => bail!("unknown --steal '{other}' (on|off)"),
+            };
+            let threshold: usize = args.get_parsed_or("steal-threshold", 2)?;
+            client
+                .set_steal_config(enabled, threshold)
+                .map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "work stealing {} (threshold {threshold})",
+                if enabled { "enabled" } else { "disabled" }
+            );
+        }
+        other => bail!(
+            "unknown remote fleet action '{other}' (expected one of: topology, stats, \
+             drain, retune, add-member, remove-member, set-scheduler, set-admission, \
+             set-steal)"
+        ),
+    }
+    Ok(())
+}
+
+const SUBMIT_HELP: &str = r#"tilekit submit — send resize requests to a remote fleet over the wire
+
+USAGE: tilekit submit --connect host:port|unix:/p.sock [flags]
+
+FLAGS
+  --connect addr       the `serve --listen` fleet to talk to (required)
+  --kernel k           nearest | bilinear | bicubic (default bilinear)
+  --src WxH            source image size (default 64x64)
+  --scale N            integer upscale factor (default 2)
+  --requests N         how many requests to submit (default 1)
+  --priority p         interactive | batch (default interactive)
+  --deadline-ms N      per-request deadline (cost-eta scheduler declines
+                       infeasible ones with a typed error)
+  --seed N             test-scene seed (default 7)
+
+Each request carries a generated test scene; the command submits them
+all, then waits for every ticket and prints the serving device and the
+end-to-end wire latency per request.
+"#;
+
+fn cmd_submit(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("help") {
+        print!("{SUBMIT_HELP}");
+        return Ok(());
+    }
+    use tilekit::net::{FleetClient, ListenAddr};
+    let addr_s = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("submit needs --connect <host:port|unix:/path.sock>"))?;
+    let addr = ListenAddr::parse(addr_s)?;
+    let kernel = parse_kernel(args)?;
+    let (w, h) = parse_src(args.get_or("src", "64x64"))?;
+    let scale: u32 = args.get_parsed_or("scale", 2)?;
+    let n_requests: usize = args.get_parsed_or("requests", 1)?;
+    let seed: u64 = args.get_parsed_or("seed", 7)?;
+    let priority = match args.get_or("priority", "interactive") {
+        "interactive" => Priority::Interactive,
+        "batch" => Priority::Batch,
+        other => bail!("unknown --priority '{other}' (interactive|batch)"),
+    };
+    let deadline_ms: Option<u64> = args.get_parsed("deadline-ms")?;
+
+    let client = FleetClient::connect_with(&addr, cfg.net.client_config())
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    println!(
+        "submitting {n_requests} {} {w}x{h} s{scale} request(s) to {addr}",
+        kernel.label()
+    );
+    let mut tickets = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let img = generate::test_scene(w as usize, h as usize, seed + i as u64);
+        let mut req = Request::new(kernel, img, scale).priority(priority);
+        if let Some(ms) = deadline_ms {
+            req = req.deadline(std::time::Duration::from_millis(ms));
+        }
+        let started = std::time::Instant::now();
+        let ticket = client.submit(&req).map_err(|e| anyhow!("submit: {e}"))?;
+        tickets.push((ticket, started));
+    }
+    for (i, (ticket, started)) in tickets.into_iter().enumerate() {
+        let device = ticket.device_id().map(str::to_string);
+        let img = ticket.wait().map_err(|e| anyhow!("wait: {e}"))?;
+        println!(
+            "  #{i}: {}x{} from {} in {}",
+            img.width(),
+            img.height(),
+            device.as_deref().unwrap_or("<scheduler's choice>"),
+            fmt_ms(started.elapsed().as_secs_f64() * 1e3),
+        );
+    }
+    Ok(())
+}
+
+const FRONT_HELP: &str = r#"tilekit front — consistent-hash front tier over N fleet servers
+
+USAGE: tilekit front --shards addr1,addr2[,...] [flags]
+
+FLAGS
+  --shards a,b         the `serve --listen` shard addresses (required;
+                       every shard must be reachable at startup)
+  --requests N         demo workload size (default 32)
+  --drain-owner        halfway through, drain + remove every member of
+                       the shard that owns the demo shape, re-poll, and
+                       keep submitting — proves shape-stable rerouting
+                       with zero lost tickets
+  --seed N             test-scene seed (default 7)
+
+Routing is a consistent hash of the request *shape* (kernel, source
+size, scale), so equal shapes always land on the same live shard. The
+demo submits the built-in fleet manifest's tuning shape and finishes by
+printing per-shard health and the merged fleet-of-fleets stats.
+"#;
+
+fn cmd_front(args: &Args, cfg: &Config) -> Result<()> {
+    if args.has("help") {
+        print!("{FRONT_HELP}");
+        return Ok(());
+    }
+    use tilekit::coordinator::RequestKey;
+    use tilekit::net::{FrontTier, FrontTierConfig, ListenAddr};
+    let shard_list = args.get_list("shards");
+    if shard_list.is_empty() {
+        bail!("front needs --shards addr1,addr2[,...]");
+    }
+    let addrs: Vec<ListenAddr> = shard_list
+        .iter()
+        .map(|s| ListenAddr::parse(s))
+        .collect::<Result<_>>()?;
+    let n_requests: usize = args.get_parsed_or("requests", 32)?;
+    let seed: u64 = args.get_parsed_or("seed", 7)?;
+
+    let tier_cfg = FrontTierConfig {
+        health_poll: Some(std::time::Duration::from_secs_f64(
+            cfg.net.health_poll_ms / 1e3,
+        )),
+        client: cfg.net.client_config(),
+    };
+    let tier = FrontTier::connect(&addrs, tier_cfg).map_err(|e| anyhow!("{e}"))?;
+    println!("front tier over {} shard(s):", tier.len());
+    for v in tier.shard_views() {
+        println!(
+            "  {} — alive {}, draining {}, epoch {}",
+            v.addr, v.alive, v.draining, v.epoch
+        );
+    }
+
+    // The demo traffic reuses the built-in fleet manifest's tuning shape,
+    // so every request hashes to one owner shard — which is exactly what
+    // makes --drain-owner a real failover test rather than a lucky miss.
+    let manifest = Manifest::fleet_demo();
+    let (kernel, src, scale, _) = fleet_tuning_target(&manifest);
+    let probe = generate::test_scene(src.1 as usize, src.0 as usize, seed);
+    let key = RequestKey::of(kernel, &probe, scale);
+    let owner = tier
+        .route_for(&key)
+        .ok_or_else(|| anyhow!("no live shard for the demo shape"))?;
+    println!(
+        "\ndemo shape {} {}x{} s{scale} routes to shard {owner} ({})",
+        kernel.label(),
+        src.1,
+        src.0,
+        tier.shard_views()[owner].addr
+    );
+
+    let drain_at = if args.has("drain-owner") {
+        Some(n_requests / 2)
+    } else {
+        None
+    };
+    let mut tickets = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        if drain_at == Some(i) {
+            let client = tier.client(owner);
+            let topo = client.topology().map_err(|e| anyhow!("{e}"))?;
+            println!(
+                "\n=> drain + remove shard {owner}'s member(s) with {i} ticket(s) in flight"
+            );
+            for m in &topo.members {
+                client.drain(&m.label).map_err(|e| anyhow!("drain: {e}"))?;
+            }
+            for m in &topo.members {
+                client
+                    .remove_member(&m.label, tilekit::coordinator::DrainMode::Graceful)
+                    .map_err(|e| anyhow!("remove: {e}"))?;
+            }
+            tier.poll_once();
+            let views = tier.shard_views();
+            println!(
+                "   shard {owner} now draining={} at epoch {}; traffic reroutes",
+                views[owner].draining, views[owner].epoch
+            );
+        }
+        let img = generate::test_scene(src.1 as usize, src.0 as usize, seed + i as u64);
+        let (shard, ticket) = tier
+            .submit(&Request::new(kernel, img, scale))
+            .map_err(|e| anyhow!("submit #{i}: {e}"))?;
+        tickets.push((shard, ticket));
+    }
+
+    let mut per_shard = vec![0usize; tier.len()];
+    let mut completed = 0usize;
+    for (shard, ticket) in tickets {
+        ticket.wait().map_err(|e| anyhow!("wait: {e}"))?;
+        per_shard[shard] += 1;
+        completed += 1;
+    }
+    println!("\ncompleted {completed}/{n_requests} (zero lost tickets)");
+    for (i, n) in per_shard.iter().enumerate() {
+        println!("  shard {i}: {n} request(s) served");
+    }
+    println!("\nper-shard health:");
+    for v in tier.shard_views() {
+        println!(
+            "  {} — alive {}, draining {}, epoch {}",
+            v.addr, v.alive, v.draining, v.epoch
+        );
+    }
+    println!("\nmerged fleet-of-fleets stats:\n{}", tier.merged_stats().summary());
+    tier.shutdown();
     Ok(())
 }

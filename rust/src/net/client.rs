@@ -1,0 +1,477 @@
+//! The remote caller's side of the wire protocol.
+//!
+//! [`FleetClient`] is a blocking client whose surface mirrors the
+//! in-process API: `submit(...)?.wait()?` on the data plane, and the
+//! full [`FleetController`](crate::coordinator::FleetController) verb
+//! set on the control plane. One client = one connection; the client is
+//! `Clone` (clones share the connection) and keeps exactly one call
+//! outstanding at a time, so responses always arrive in call order.
+//!
+//! Errors stay typed end to end: a remote
+//! [`SubmitError`](crate::coordinator::SubmitError) comes back as
+//! [`ClientError::Submit`] carrying the same variant the in-process
+//! caller would have matched on.
+
+use super::protocol::{
+    self, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError, WireStats,
+};
+use super::server::ListenAddr;
+use crate::autotuner::TuningOutcome;
+use crate::codec::json::Json;
+use crate::coordinator::{DrainMode, Request, SubmitError, TilePolicy};
+use crate::image::Image;
+use crate::tiling::TileDim;
+use std::fmt;
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Client-side knobs; defaults match
+/// [`NetConfig`](crate::config::NetConfig).
+#[derive(Debug, Clone)]
+pub struct NetClientConfig {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// How long one call may wait for its response before the
+    /// connection is declared dead. Must exceed the server's per-call
+    /// `wait` cap (5 s).
+    pub response_timeout: Duration,
+    /// Per-line byte cap for responses.
+    pub max_line_bytes: usize,
+    /// `timeout_ms` sent with each remote `wait` poll.
+    pub wait_poll: Duration,
+}
+
+impl Default for NetClientConfig {
+    fn default() -> NetClientConfig {
+        NetClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            response_timeout: Duration::from_secs(10),
+            max_line_bytes: protocol::DEFAULT_MAX_LINE_BYTES,
+            wait_poll: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Why a remote call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The fleet refused the submit — same typed backpressure as
+    /// in-process.
+    Submit(SubmitError),
+    /// The server returned a non-submit error frame (not-found, failed,
+    /// internal, ...).
+    Remote(WireError),
+    /// This end could not decode what the server sent.
+    Protocol(ProtocolError),
+    /// The connection itself failed.
+    Transport(String),
+}
+
+impl ClientError {
+    /// The typed [`SubmitError`], when this error is one.
+    pub fn submit_error(&self) -> Option<SubmitError> {
+        match self {
+            ClientError::Submit(e) => Some(*e),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Submit(e) => write!(f, "fleet refused submit: {e}"),
+            ClientError::Remote(e) => write!(f, "remote error: {e}"),
+            ClientError::Protocol(e) => write!(f, "protocol error: {e}"),
+            ClientError::Transport(m) => write!(f, "transport error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+enum NetStream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl NetStream {
+    fn connect(addr: &ListenAddr, cfg: &NetClientConfig) -> Result<NetStream, ClientError> {
+        match addr {
+            ListenAddr::Tcp(a) => {
+                let sa = a
+                    .to_socket_addrs()
+                    .map_err(|e| ClientError::Transport(format!("resolving {a}: {e}")))?
+                    .next()
+                    .ok_or_else(|| {
+                        ClientError::Transport(format!("{a} resolved to no address"))
+                    })?;
+                let s = TcpStream::connect_timeout(&sa, cfg.connect_timeout)
+                    .map_err(|e| ClientError::Transport(format!("connecting {a}: {e}")))?;
+                s.set_nodelay(true).ok();
+                Ok(NetStream::Tcp(s))
+            }
+            ListenAddr::Unix(p) => {
+                let s = UnixStream::connect(p).map_err(|e| {
+                    ClientError::Transport(format!("connecting {}: {e}", p.display()))
+                })?;
+                Ok(NetStream::Unix(s))
+            }
+        }
+    }
+
+    fn try_clone(&self) -> std::io::Result<NetStream> {
+        match self {
+            NetStream::Tcp(s) => s.try_clone().map(NetStream::Tcp),
+            NetStream::Unix(s) => s.try_clone().map(NetStream::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, t: Duration) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(Some(t)),
+            NetStream::Unix(s) => s.set_read_timeout(Some(t)),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+struct Conn {
+    reader: BufReader<NetStream>,
+    writer: NetStream,
+    next_id: u64,
+}
+
+/// A blocking remote handle to a [`Fleet`](crate::coordinator::Fleet)
+/// served by a [`NetServer`](super::NetServer). Cheap to clone; clones
+/// share one connection and serialize their calls.
+#[derive(Clone)]
+pub struct FleetClient {
+    conn: Arc<Mutex<Conn>>,
+    cfg: Arc<NetClientConfig>,
+    addr: Arc<ListenAddr>,
+}
+
+impl FleetClient {
+    /// Connect with default [`NetClientConfig`].
+    pub fn connect(addr: &ListenAddr) -> Result<FleetClient, ClientError> {
+        FleetClient::connect_with(addr, NetClientConfig::default())
+    }
+
+    pub fn connect_with(
+        addr: &ListenAddr,
+        cfg: NetClientConfig,
+    ) -> Result<FleetClient, ClientError> {
+        let stream = NetStream::connect(addr, &cfg)?;
+        stream
+            .set_read_timeout(cfg.response_timeout)
+            .map_err(|e| ClientError::Transport(e.to_string()))?;
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| ClientError::Transport(e.to_string()))?,
+        );
+        Ok(FleetClient {
+            conn: Arc::new(Mutex::new(Conn {
+                reader,
+                writer: stream,
+                next_id: 1,
+            })),
+            cfg: Arc::new(cfg),
+            addr: Arc::new(addr.clone()),
+        })
+    }
+
+    /// The address this client connected to.
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    /// One request/response exchange. Holding the lock across both
+    /// halves is what guarantees in-order, one-outstanding framing.
+    fn call(&self, verb: Verb, payload: Json) -> Result<Json, ClientError> {
+        let mut conn = self
+            .conn
+            .lock()
+            .map_err(|_| ClientError::Transport("client connection poisoned".into()))?;
+        let id = conn.next_id;
+        conn.next_id += 1;
+        let line = RequestFrame::new(id, verb, payload).to_line();
+        conn.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| conn.writer.flush())
+            .map_err(|e| ClientError::Transport(format!("send failed: {e}")))?;
+        let resp_line = match protocol::read_frame_line(&mut conn.reader, self.cfg.max_line_bytes)
+        {
+            Ok(Some(l)) => l,
+            Ok(None) => {
+                return Err(ClientError::Transport("server closed the connection".into()))
+            }
+            Err(ProtocolError::Timeout) => {
+                return Err(ClientError::Transport(format!(
+                    "no response within {:?}",
+                    self.cfg.response_timeout
+                )))
+            }
+            Err(e) => return Err(ClientError::Protocol(e)),
+        };
+        let resp = ResponseFrame::parse(&resp_line).map_err(ClientError::Protocol)?;
+        if resp.id != id {
+            // id 0 is the server's out-of-band channel for framing
+            // errors; anything else means the stream is out of sync.
+            return match resp.body {
+                Err(e) => Err(ClientError::Remote(e)),
+                Ok(_) => Err(ClientError::Transport(format!(
+                    "response id {} does not match call id {id}",
+                    resp.id
+                ))),
+            };
+        }
+        match resp.body {
+            Ok(body) => Ok(body),
+            Err(wire) => match wire.to_submit() {
+                Some(se) => Err(ClientError::Submit(se)),
+                None => Err(ClientError::Remote(wire)),
+            },
+        }
+    }
+
+    // ------------------------------------------------- data plane --
+
+    /// Submit a request to the remote fleet. Mirrors
+    /// [`Fleet::submit`](crate::coordinator::Fleet::submit): a refusal
+    /// is a typed [`SubmitError`] via [`ClientError::Submit`].
+    pub fn submit(&self, req: &Request) -> Result<RemoteTicket, ClientError> {
+        let body = self.call(Verb::Submit, protocol::encode_submit(req))?;
+        let id = body
+            .get("ticket")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad_body("submit response missing 'ticket'"))?;
+        Ok(RemoteTicket {
+            id,
+            device: body
+                .get("device")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            client: self.clone(),
+        })
+    }
+
+    // ---------------------------------------------- control plane --
+
+    /// Epoch-stamped remote topology snapshot.
+    pub fn topology(&self) -> Result<TopologyDesc, ClientError> {
+        let body = self.call(Verb::Topology, Json::obj())?;
+        TopologyDesc::from_json(&body).map_err(ClientError::Protocol)
+    }
+
+    /// Current topology epoch.
+    pub fn epoch(&self) -> Result<u64, ClientError> {
+        Ok(self.topology()?.epoch)
+    }
+
+    /// Remote fleet-wide [`WireStats`].
+    pub fn stats(&self) -> Result<WireStats, ClientError> {
+        let body = self.call(Verb::Stats, Json::obj())?;
+        WireStats::from_json(&body).map_err(ClientError::Protocol)
+    }
+
+    /// Add a registry device to the remote fleet; returns
+    /// `(member id, new epoch)`.
+    pub fn add_member(
+        &self,
+        device: &str,
+        policy: &TilePolicy,
+    ) -> Result<(u64, u64), ClientError> {
+        let body = self.call(
+            Verb::AddMember,
+            Json::obj()
+                .set("device", device)
+                .set("policy", protocol::encode_policy(policy)),
+        )?;
+        let member = body
+            .get("member")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad_body("add_member response missing 'member'"))?;
+        let epoch = body
+            .get("epoch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad_body("add_member response missing 'epoch'"))?;
+        Ok((member, epoch))
+    }
+
+    /// Remove a member; returns the new epoch.
+    pub fn remove_member(&self, device: &str, mode: DrainMode) -> Result<u64, ClientError> {
+        let body = self.call(
+            Verb::RemoveMember,
+            Json::obj()
+                .set("device", device)
+                .set("mode", protocol::drain_mode_name(mode)),
+        )?;
+        body.get("epoch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad_body("remove_member response missing 'epoch'"))
+    }
+
+    /// Stop admissions to a member without removing it; returns the new
+    /// epoch.
+    pub fn drain(&self, device: &str) -> Result<u64, ClientError> {
+        let body = self.call(Verb::Drain, Json::obj().set("device", device))?;
+        body.get("epoch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| bad_body("drain response missing 'epoch'"))
+    }
+
+    /// Hot-swap a member's tuned tile from a fresh outcome; returns the
+    /// tile now in effect (None if the outcome had no tile for it).
+    pub fn retune(
+        &self,
+        device: &str,
+        outcome: &TuningOutcome,
+    ) -> Result<Option<TileDim>, ClientError> {
+        let body = self.call(
+            Verb::Retune,
+            Json::obj()
+                .set("device", device)
+                .set("outcome", outcome.to_json()),
+        )?;
+        match body.get("tile") {
+            None | Some(Json::Null) => Ok(None),
+            Some(t) => {
+                let s = t
+                    .as_str()
+                    .ok_or_else(|| bad_body("retune response 'tile' must be a string"))?;
+                s.parse::<TileDim>()
+                    .map(Some)
+                    .map_err(|e: String| bad_body(format!("retune response tile: {e}")))
+            }
+        }
+    }
+
+    /// Swap the remote scheduler by registry name.
+    pub fn set_scheduler(&self, name: &str) -> Result<(), ClientError> {
+        self.call(Verb::SetScheduler, Json::obj().set("name", name))?;
+        Ok(())
+    }
+
+    /// Swap the remote admission policy by registry name.
+    pub fn set_admission(&self, name: &str, timeout: Duration) -> Result<(), ClientError> {
+        self.call(
+            Verb::SetAdmission,
+            Json::obj()
+                .set("name", name)
+                .set("timeout_ms", timeout.as_secs_f64() * 1e3),
+        )?;
+        Ok(())
+    }
+
+    /// Reconfigure remote work stealing.
+    pub fn set_steal_config(&self, enabled: bool, threshold: usize) -> Result<(), ClientError> {
+        self.call(
+            Verb::SetStealConfig,
+            Json::obj().set("enabled", enabled).set("threshold", threshold),
+        )?;
+        Ok(())
+    }
+}
+
+fn bad_body(msg: impl Into<String>) -> ClientError {
+    ClientError::Protocol(ProtocolError::Malformed(msg.into()))
+}
+
+/// The remote analogue of [`Ticket`](crate::coordinator::Ticket): a
+/// stable server-side ticket id plus the connection to poll it on.
+pub struct RemoteTicket {
+    id: u64,
+    device: Option<String>,
+    client: FleetClient,
+}
+
+impl RemoteTicket {
+    /// Server-side ticket id (stable across the wire).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The device the scheduler picked at admission, when known.
+    pub fn device_id(&self) -> Option<&str> {
+        self.device.as_deref()
+    }
+
+    fn poll(&self, verb: Verb, budget: Option<Duration>) -> Result<Option<Image<f32>>, ClientError> {
+        let payload = Json::obj().set("ticket", self.id);
+        let payload = match budget {
+            Some(b) => payload.set("timeout_ms", b.as_secs_f64() * 1e3),
+            None => payload,
+        };
+        let body = self.client.call(verb, payload)?;
+        let done = body
+            .get("done")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| bad_body("wait response missing 'done'"))?;
+        if !done {
+            return Ok(None);
+        }
+        let img = body
+            .get("image")
+            .ok_or_else(|| bad_body("completed wait response missing 'image'"))?;
+        protocol::decode_image(img)
+            .map(Some)
+            .map_err(ClientError::Protocol)
+    }
+
+    /// Block until the result arrives (looping bounded server-side
+    /// polls), consuming the ticket — the remote mirror of
+    /// [`Ticket::wait`](crate::coordinator::Ticket::wait).
+    pub fn wait(self) -> Result<Image<f32>, ClientError> {
+        loop {
+            if let Some(img) = self.poll(Verb::Wait, Some(self.client.cfg.wait_poll))? {
+                return Ok(img);
+            }
+        }
+    }
+
+    /// One bounded wait; `Ok(None)` means not done yet (ticket stays
+    /// valid).
+    pub fn wait_timeout(&self, budget: Duration) -> Result<Option<Image<f32>>, ClientError> {
+        self.poll(Verb::Wait, Some(budget))
+    }
+
+    /// Non-blocking poll; `Ok(None)` means not done yet.
+    pub fn try_wait(&self) -> Result<Option<Image<f32>>, ClientError> {
+        self.poll(Verb::TryWait, None)
+    }
+
+    /// Request cancellation. The ticket still resolves (as cancelled) —
+    /// observe it via `wait`/`try_wait`.
+    pub fn cancel(&self) -> Result<(), ClientError> {
+        self.client.call(Verb::Cancel, Json::obj().set("ticket", self.id))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,33 @@
+//! Out-of-process fleet serving.
+//!
+//! Everything in [`coordinator`](crate::coordinator) is in-process: one
+//! binary owns the [`Fleet`](crate::coordinator::Fleet) and calls it
+//! through Rust. This module puts that fleet on a socket:
+//!
+//! * [`protocol`] — the versioned, line-delimited JSON wire format
+//!   (13 verbs spanning the data plane and the full controller surface,
+//!   typed error frames that round-trip
+//!   [`SubmitError`](crate::coordinator::SubmitError)).
+//! * [`server`] — [`NetServer`]: binds TCP or a Unix socket over a live
+//!   fleet (`tilekit serve --listen`), bounded accept loop,
+//!   per-connection reader/writer threads, idle/read timeouts, graceful
+//!   ticket-draining shutdown.
+//! * [`client`] — [`FleetClient`]: the same `submit(...)?.wait()?` and
+//!   controller surface, blocking, over the wire (`tilekit fleet
+//!   --connect`, `tilekit submit --connect`).
+//! * [`shard`] — [`FrontTier`]: consistent-hash routing by request
+//!   shape across N fleet servers with health-driven failover and
+//!   merged stats (`tilekit front --shards`).
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod shard;
+
+pub use client::{ClientError, FleetClient, NetClientConfig, RemoteTicket};
+pub use protocol::{
+    ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError, WireErrorKind,
+    WireStats, PROTOCOL_VERSION,
+};
+pub use server::{BackendFactory, ListenAddr, NetServer, NetServerConfig};
+pub use shard::{shape_hash, FrontTier, FrontTierConfig, Ring, ShardView};

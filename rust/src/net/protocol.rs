@@ -1,0 +1,1140 @@
+//! The wire protocol: versioned, line-delimited JSON frames over the
+//! serde-free [`crate::codec::json`] substrate.
+//!
+//! Every frame is one compact JSON object on one `\n`-terminated line.
+//! A request frame carries a caller-chosen id, a verb, and a payload;
+//! the response echoes the id with either an `ok` body or a typed `err`
+//! object. [`SubmitError`](crate::coordinator::SubmitError) round-trips
+//! losslessly through the error kinds, so a remote caller sees the same
+//! typed backpressure as an in-process one.
+//!
+//! ```text
+//! -> {"v":1,"id":7,"verb":"submit","payload":{"kernel":"bilinear",...}}
+//! <- {"v":1,"id":7,"ok":{"ticket":42,"device":"gtx260"}}
+//! <- {"v":1,"id":8,"err":{"kind":"saturated","msg":"admission queue saturated"}}
+//! ```
+//!
+//! Payload schemas per verb (request -> ok-response):
+//!
+//! | verb               | request payload                              | ok payload |
+//! |--------------------|----------------------------------------------|------------|
+//! | `submit`           | `{kernel, scale, priority?, deadline_ms?, image}` | `{ticket, device?}` |
+//! | `wait`             | `{ticket, timeout_ms?}`                      | `{done, image?}` |
+//! | `try_wait`         | `{ticket}`                                   | `{done, image?}` |
+//! | `cancel`           | `{ticket}`                                   | `{cancelled}` |
+//! | `topology`         | `{}`                                         | `{epoch, members:[...]}` |
+//! | `add_member`       | `{device, policy}`                           | `{member, epoch}` |
+//! | `remove_member`    | `{device, mode}`                             | `{epoch}` |
+//! | `drain`            | `{device}`                                   | `{epoch}` |
+//! | `retune`           | `{device, outcome}`                          | `{tile}` |
+//! | `set_scheduler`    | `{name}`                                     | `{ok}` |
+//! | `set_admission`    | `{name, timeout_ms?}`                        | `{ok}` |
+//! | `set_steal_config` | `{enabled, threshold}`                       | `{ok}` |
+//! | `stats`            | `{}`                                         | counters + latency |
+//!
+//! An image is `{"w":W,"h":H,"px":[row-major f32 ...]}`. A tile policy is
+//! `"portable"`, `{"fixed":"32x4"}`, or `{"per_device":<TuningOutcome>}`.
+//! Frame parsing never panics: malformed input, an oversized line, or a
+//! stream truncated mid-line all surface as a typed [`ProtocolError`].
+
+use crate::codec::json::Json;
+use crate::coordinator::{
+    DrainMode, Priority, Request, RequestKey, ServingStats, SubmitError, TilePolicy, TopologyView,
+};
+use crate::image::{Image, Interpolator};
+use crate::tiling::TileDim;
+use std::fmt;
+use std::io::BufRead;
+use std::time::Duration;
+
+/// Wire format version; bumped on incompatible frame changes. Both ends
+/// reject frames from a different major version with
+/// [`ProtocolError::Version`].
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default per-line byte cap. A 512x512 f32 image serializes to a few
+/// MiB of JSON, so the cap is generous — it bounds memory per
+/// connection, not normal payloads.
+pub const DEFAULT_MAX_LINE_BYTES: usize = 8 * 1024 * 1024;
+
+/// Every operation the wire protocol can carry: the data plane
+/// (`submit`/`wait`/`try_wait`/`cancel`) plus the full
+/// [`FleetController`](crate::coordinator::FleetController) surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verb {
+    Submit,
+    Wait,
+    TryWait,
+    Cancel,
+    Topology,
+    AddMember,
+    RemoveMember,
+    Drain,
+    Retune,
+    SetScheduler,
+    SetAdmission,
+    SetStealConfig,
+    Stats,
+}
+
+impl Verb {
+    pub const ALL: [Verb; 13] = [
+        Verb::Submit,
+        Verb::Wait,
+        Verb::TryWait,
+        Verb::Cancel,
+        Verb::Topology,
+        Verb::AddMember,
+        Verb::RemoveMember,
+        Verb::Drain,
+        Verb::Retune,
+        Verb::SetScheduler,
+        Verb::SetAdmission,
+        Verb::SetStealConfig,
+        Verb::Stats,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Verb::Submit => "submit",
+            Verb::Wait => "wait",
+            Verb::TryWait => "try_wait",
+            Verb::Cancel => "cancel",
+            Verb::Topology => "topology",
+            Verb::AddMember => "add_member",
+            Verb::RemoveMember => "remove_member",
+            Verb::Drain => "drain",
+            Verb::Retune => "retune",
+            Verb::SetScheduler => "set_scheduler",
+            Verb::SetAdmission => "set_admission",
+            Verb::SetStealConfig => "set_steal_config",
+            Verb::Stats => "stats",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Verb> {
+        Verb::ALL.iter().copied().find(|v| v.name() == s)
+    }
+}
+
+impl fmt::Display for Verb {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a frame could not be read or decoded. Typed so transports can
+/// tell a timeout (keep polling) from corruption (close the connection).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// Underlying transport error.
+    Io(String),
+    /// The socket read timed out with no bytes consumed — the caller
+    /// decides whether the connection is idle-dead or just quiet.
+    Timeout,
+    /// A line exceeded the configured byte cap.
+    Oversized { limit: usize },
+    /// The stream ended mid-line (peer died between bytes of a frame).
+    Truncated,
+    /// The line is not a valid frame (bad JSON, missing fields, unknown
+    /// verb or error kind).
+    Malformed(String),
+    /// The peer speaks a different protocol version.
+    Version { got: u64 },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::Io(e) => write!(f, "transport error: {e}"),
+            ProtocolError::Timeout => write!(f, "read timed out"),
+            ProtocolError::Oversized { limit } => {
+                write!(f, "frame exceeds the {limit}-byte line cap")
+            }
+            ProtocolError::Truncated => write!(f, "stream truncated mid-frame"),
+            ProtocolError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            ProtocolError::Version { got } => write!(
+                f,
+                "peer speaks protocol version {got}, this end speaks {PROTOCOL_VERSION}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtocolError {}
+
+fn malformed(msg: impl Into<String>) -> ProtocolError {
+    ProtocolError::Malformed(msg.into())
+}
+
+/// The typed error payload of a response frame. The five
+/// [`SubmitError`] variants map 1:1 onto the first five kinds, so
+/// backpressure semantics survive the wire; the rest describe
+/// server-side or protocol-level failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireErrorKind {
+    Saturated,
+    Unsupported,
+    DeadlineExceeded,
+    Infeasible,
+    ShuttingDown,
+    /// The named ticket/member does not exist on the server.
+    NotFound,
+    /// The peer sent a frame this end could not decode.
+    Protocol,
+    /// The request executed and failed (backend error, shed deadline).
+    Failed,
+    /// Unexpected server-side error.
+    Internal,
+}
+
+impl WireErrorKind {
+    pub const ALL: [WireErrorKind; 9] = [
+        WireErrorKind::Saturated,
+        WireErrorKind::Unsupported,
+        WireErrorKind::DeadlineExceeded,
+        WireErrorKind::Infeasible,
+        WireErrorKind::ShuttingDown,
+        WireErrorKind::NotFound,
+        WireErrorKind::Protocol,
+        WireErrorKind::Failed,
+        WireErrorKind::Internal,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireErrorKind::Saturated => "saturated",
+            WireErrorKind::Unsupported => "unsupported",
+            WireErrorKind::DeadlineExceeded => "deadline",
+            WireErrorKind::Infeasible => "infeasible",
+            WireErrorKind::ShuttingDown => "shutting-down",
+            WireErrorKind::NotFound => "not-found",
+            WireErrorKind::Protocol => "protocol",
+            WireErrorKind::Failed => "failed",
+            WireErrorKind::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WireErrorKind> {
+        WireErrorKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// A typed error frame body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub kind: WireErrorKind,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn new(kind: WireErrorKind, msg: impl Into<String>) -> WireError {
+        WireError {
+            kind,
+            msg: msg.into(),
+        }
+    }
+
+    /// Encode a [`SubmitError`] so the remote caller can reconstruct it.
+    pub fn from_submit(e: &SubmitError) -> WireError {
+        let kind = match e {
+            SubmitError::Saturated => WireErrorKind::Saturated,
+            SubmitError::Unsupported => WireErrorKind::Unsupported,
+            SubmitError::DeadlineExceeded => WireErrorKind::DeadlineExceeded,
+            SubmitError::Infeasible => WireErrorKind::Infeasible,
+            SubmitError::ShuttingDown => WireErrorKind::ShuttingDown,
+        };
+        WireError::new(kind, e.to_string())
+    }
+
+    /// The [`SubmitError`] this frame carries, when its kind is one of
+    /// the five submit-path kinds.
+    pub fn to_submit(&self) -> Option<SubmitError> {
+        match self.kind {
+            WireErrorKind::Saturated => Some(SubmitError::Saturated),
+            WireErrorKind::Unsupported => Some(SubmitError::Unsupported),
+            WireErrorKind::DeadlineExceeded => Some(SubmitError::DeadlineExceeded),
+            WireErrorKind::Infeasible => Some(SubmitError::Infeasible),
+            WireErrorKind::ShuttingDown => Some(SubmitError::ShuttingDown),
+            _ => None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("kind", self.kind.name())
+            .set("msg", self.msg.as_str())
+    }
+
+    fn from_json(j: &Json) -> Result<WireError, ProtocolError> {
+        let kind_s = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| malformed("error frame missing 'kind'"))?;
+        let kind = WireErrorKind::parse(kind_s)
+            .ok_or_else(|| malformed(format!("unknown error kind '{kind_s}'")))?;
+        let msg = j
+            .get("msg")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        Ok(WireError { kind, msg })
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.kind.name(), self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn check_version(j: &Json) -> Result<(), ProtocolError> {
+    match j.get("v").and_then(Json::as_u64) {
+        Some(PROTOCOL_VERSION) => Ok(()),
+        Some(got) => Err(ProtocolError::Version { got }),
+        None => Err(malformed("frame missing 'v'")),
+    }
+}
+
+/// A request frame: id + verb + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub verb: Verb,
+    pub payload: Json,
+}
+
+impl RequestFrame {
+    pub fn new(id: u64, verb: Verb, payload: Json) -> RequestFrame {
+        RequestFrame { id, verb, payload }
+    }
+
+    /// One compact `\n`-terminated wire line.
+    pub fn to_line(&self) -> String {
+        let mut s = Json::obj()
+            .set("v", PROTOCOL_VERSION)
+            .set("id", self.id)
+            .set("verb", self.verb.name())
+            .set("payload", self.payload.clone())
+            .to_string();
+        s.push('\n');
+        s
+    }
+
+    /// Parse one line (trailing newline optional).
+    pub fn parse(line: &str) -> Result<RequestFrame, ProtocolError> {
+        let j = Json::parse(line.trim_end_matches(['\r', '\n']))
+            .map_err(|e| malformed(e.to_string()))?;
+        check_version(&j)?;
+        let id = j
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| malformed("request frame missing 'id'"))?;
+        let verb_s = j
+            .get("verb")
+            .and_then(Json::as_str)
+            .ok_or_else(|| malformed("request frame missing 'verb'"))?;
+        let verb =
+            Verb::parse(verb_s).ok_or_else(|| malformed(format!("unknown verb '{verb_s}'")))?;
+        let payload = j.get("payload").cloned().unwrap_or_else(Json::obj);
+        Ok(RequestFrame { id, verb, payload })
+    }
+}
+
+/// A response frame: the request id plus an ok body or a typed error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub body: Result<Json, WireError>,
+}
+
+impl ResponseFrame {
+    pub fn ok(id: u64, body: Json) -> ResponseFrame {
+        ResponseFrame { id, body: Ok(body) }
+    }
+
+    pub fn err(id: u64, e: WireError) -> ResponseFrame {
+        ResponseFrame { id, body: Err(e) }
+    }
+
+    /// One compact `\n`-terminated wire line.
+    pub fn to_line(&self) -> String {
+        let j = Json::obj().set("v", PROTOCOL_VERSION).set("id", self.id);
+        let j = match &self.body {
+            Ok(body) => j.set("ok", body.clone()),
+            Err(e) => j.set("err", e.to_json()),
+        };
+        let mut s = j.to_string();
+        s.push('\n');
+        s
+    }
+
+    /// Parse one line (trailing newline optional).
+    pub fn parse(line: &str) -> Result<ResponseFrame, ProtocolError> {
+        let j = Json::parse(line.trim_end_matches(['\r', '\n']))
+            .map_err(|e| malformed(e.to_string()))?;
+        check_version(&j)?;
+        let id = j
+            .get("id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| malformed("response frame missing 'id'"))?;
+        match (j.get("ok"), j.get("err")) {
+            (Some(body), None) => Ok(ResponseFrame::ok(id, body.clone())),
+            (None, Some(e)) => Ok(ResponseFrame::err(id, WireError::from_json(e)?)),
+            _ => Err(malformed("response frame needs exactly one of 'ok'/'err'")),
+        }
+    }
+}
+
+/// Read one `\n`-terminated line, enforcing the byte cap. Returns
+/// `Ok(None)` on a clean EOF at a frame boundary; EOF mid-line is
+/// [`ProtocolError::Truncated`]; a zero-byte timeout is
+/// [`ProtocolError::Timeout`] so callers can keep the connection open.
+pub fn read_frame_line(
+    r: &mut impl BufRead,
+    max_bytes: usize,
+) -> Result<Option<String>, ProtocolError> {
+    let mut buf: Vec<u8> = Vec::new();
+    // A peer that sends half a frame and hangs must not pin the reader
+    // forever: after this many consecutive zero-byte read timeouts
+    // mid-line (~4 min at a 250 ms socket read timeout) the frame is
+    // declared truncated and the connection dies.
+    const MAX_MID_FRAME_STALLS: u32 = 1024;
+    let mut stalls = 0u32;
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if buf.is_empty() {
+                    return Err(ProtocolError::Timeout);
+                }
+                stalls += 1;
+                if stalls > MAX_MID_FRAME_STALLS {
+                    return Err(ProtocolError::Truncated);
+                }
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtocolError::Io(e.to_string())),
+        };
+        if chunk.is_empty() {
+            return if buf.is_empty() {
+                Ok(None)
+            } else {
+                Err(ProtocolError::Truncated)
+            };
+        }
+        let (take, done) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (chunk.len(), false),
+        };
+        if buf.len() + take > max_bytes {
+            // Drop what we can see of the runaway line; the caller
+            // closes the connection, so no need to resynchronize.
+            r.consume(take);
+            return Err(ProtocolError::Oversized { limit: max_bytes });
+        }
+        buf.extend_from_slice(&chunk[..take]);
+        r.consume(take);
+        stalls = 0;
+        if done {
+            let line = String::from_utf8(buf)
+                .map_err(|_| malformed("frame line is not valid UTF-8"))?;
+            return Ok(Some(line));
+        }
+    }
+}
+
+// --------------------------------------------------- payload codecs --
+
+/// Encode an image payload (`{"w":W,"h":H,"px":[...]}`; row-major,
+/// pitch dropped).
+pub fn encode_image(img: &Image<f32>) -> Json {
+    let px: Vec<Json> = img
+        .to_dense()
+        .into_iter()
+        .map(|p| Json::Num(p as f64))
+        .collect();
+    Json::obj()
+        .set("w", img.width())
+        .set("h", img.height())
+        .set("px", Json::Arr(px))
+}
+
+/// Decode what [`encode_image`] wrote.
+pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
+    let w = j
+        .get("w")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| malformed("image missing 'w'"))? as usize;
+    let h = j
+        .get("h")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| malformed("image missing 'h'"))? as usize;
+    if w == 0 || h == 0 {
+        return Err(malformed("image dims must be positive"));
+    }
+    let px = j
+        .get("px")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("image missing 'px'"))?;
+    if px.len() != w * h {
+        return Err(malformed(format!(
+            "image has {} pixels, expected {w}x{h}={}",
+            px.len(),
+            w * h
+        )));
+    }
+    let data = px
+        .iter()
+        .map(|p| p.as_f64().map(|f| f as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| malformed("image 'px' entries must be numbers"))?;
+    Ok(Image::from_vec(w, h, data))
+}
+
+/// Encode a submit request.
+pub fn encode_submit(req: &Request) -> Json {
+    let j = Json::obj()
+        .set("kernel", req.kernel.label())
+        .set("scale", req.scale)
+        .set("priority", req.priority.label())
+        .set("image", encode_image(&req.image));
+    match req.deadline {
+        Some(d) => j.set("deadline_ms", d.as_secs_f64() * 1e3),
+        None => j,
+    }
+}
+
+/// Decode what [`encode_submit`] wrote back into a [`Request`].
+pub fn decode_submit(j: &Json) -> Result<Request, ProtocolError> {
+    let kernel_s = j
+        .get("kernel")
+        .and_then(Json::as_str)
+        .ok_or_else(|| malformed("submit missing 'kernel'"))?;
+    let kernel = Interpolator::parse(kernel_s)
+        .ok_or_else(|| malformed(format!("unknown kernel '{kernel_s}'")))?;
+    let scale = j
+        .get("scale")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| malformed("submit missing 'scale'"))? as u32;
+    let image = decode_image(
+        j.get("image")
+            .ok_or_else(|| malformed("submit missing 'image'"))?,
+    )?;
+    let mut req = Request::new(kernel, image, scale);
+    if let Some(p) = j.get("priority").and_then(Json::as_str) {
+        req = req.priority(parse_priority(p)?);
+    }
+    if let Some(ms) = j.get("deadline_ms").and_then(Json::as_f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return Err(malformed(format!("bad deadline_ms {ms}")));
+        }
+        req = req.deadline(Duration::from_secs_f64(ms / 1e3));
+    }
+    Ok(req)
+}
+
+fn parse_priority(s: &str) -> Result<Priority, ProtocolError> {
+    Priority::ALL
+        .iter()
+        .copied()
+        .find(|p| p.label() == s)
+        .ok_or_else(|| malformed(format!("unknown priority '{s}'")))
+}
+
+/// Encode a routing key (`{"kernel":...,"src":[h,w],"scale":N}`).
+pub fn encode_key(key: &RequestKey) -> Json {
+    Json::obj()
+        .set("kernel", key.kernel.label())
+        .set("src", vec![key.src.0, key.src.1])
+        .set("scale", key.scale)
+}
+
+/// Encode a tile policy: `"portable"`, `{"fixed":"WxH"}`, or
+/// `{"per_device":<TuningOutcome>}`.
+pub fn encode_policy(p: &TilePolicy) -> Json {
+    match p {
+        TilePolicy::PortableFallback => Json::Str("portable".into()),
+        TilePolicy::Fixed(t) => Json::obj().set("fixed", t.label()),
+        TilePolicy::PerDevice(outcome) => Json::obj().set("per_device", outcome.to_json()),
+    }
+}
+
+/// Decode what [`encode_policy`] wrote.
+pub fn decode_policy(j: &Json) -> Result<TilePolicy, ProtocolError> {
+    if let Some(s) = j.as_str() {
+        return match s {
+            "portable" => Ok(TilePolicy::PortableFallback),
+            other => Err(malformed(format!("unknown policy '{other}'"))),
+        };
+    }
+    if let Some(t) = j.get("fixed") {
+        let label = t
+            .as_str()
+            .ok_or_else(|| malformed("'fixed' policy must name a WxH tile"))?;
+        let tile: TileDim = label
+            .parse()
+            .map_err(|e: String| malformed(format!("'fixed' policy: {e}")))?;
+        return Ok(TilePolicy::Fixed(tile));
+    }
+    if let Some(o) = j.get("per_device") {
+        let outcome = crate::autotuner::TuningOutcome::from_json(o)
+            .map_err(|e| malformed(format!("'per_device' policy: {e:#}")))?;
+        return Ok(TilePolicy::PerDevice(outcome));
+    }
+    Err(malformed(
+        "policy must be \"portable\", {\"fixed\":...}, or {\"per_device\":...}",
+    ))
+}
+
+/// Parse a drain mode name.
+pub fn parse_drain_mode(s: &str) -> Result<DrainMode, ProtocolError> {
+    match s {
+        "graceful" => Ok(DrainMode::Graceful),
+        "immediate" => Ok(DrainMode::Immediate),
+        other => Err(malformed(format!(
+            "unknown drain mode '{other}' (graceful|immediate)"
+        ))),
+    }
+}
+
+pub fn drain_mode_name(m: DrainMode) -> &'static str {
+    match m {
+        DrainMode::Graceful => "graceful",
+        DrainMode::Immediate => "immediate",
+    }
+}
+
+// ------------------------------------------------ topology snapshot --
+
+/// One fleet member as seen over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberDesc {
+    pub id: u64,
+    pub label: String,
+    /// Registry id of the member's device (`None` = anonymous backend).
+    pub device: Option<String>,
+    pub tile: Option<TileDim>,
+    pub batch_max: u64,
+    pub draining: bool,
+    pub admitted: u64,
+    pub completed: u64,
+    pub inflight: u64,
+}
+
+/// An epoch-stamped remote topology snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyDesc {
+    pub epoch: u64,
+    pub members: Vec<MemberDesc>,
+}
+
+impl TopologyDesc {
+    /// True when no member can accept new work (empty fleet or every
+    /// member draining) — the shard tier routes around such fleets.
+    pub fn is_draining(&self) -> bool {
+        self.members.iter().all(|m| m.draining)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let members: Vec<Json> = self
+            .members
+            .iter()
+            .map(|m| {
+                let j = Json::obj()
+                    .set("id", m.id)
+                    .set("label", m.label.as_str())
+                    .set(
+                        "tile",
+                        match m.tile {
+                            Some(t) => Json::Str(t.label()),
+                            None => Json::Null,
+                        },
+                    )
+                    .set("batch_max", m.batch_max)
+                    .set("draining", m.draining)
+                    .set("admitted", m.admitted)
+                    .set("completed", m.completed)
+                    .set("inflight", m.inflight);
+                match &m.device {
+                    Some(d) => j.set("device", d.as_str()),
+                    None => j,
+                }
+            })
+            .collect();
+        Json::obj()
+            .set("epoch", self.epoch)
+            .set("members", Json::Arr(members))
+    }
+
+    pub fn from_json(j: &Json) -> Result<TopologyDesc, ProtocolError> {
+        let epoch = j
+            .get("epoch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| malformed("topology missing 'epoch'"))?;
+        let arr = j
+            .get("members")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| malformed("topology missing 'members'"))?;
+        let members = arr
+            .iter()
+            .map(|m| {
+                let field = |k: &str| {
+                    m.get(k)
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| malformed(format!("member missing '{k}'")))
+                };
+                let tile = match m.get("tile") {
+                    None | Some(Json::Null) => None,
+                    Some(t) => {
+                        let s = t
+                            .as_str()
+                            .ok_or_else(|| malformed("member 'tile' must be a string"))?;
+                        Some(
+                            s.parse::<TileDim>()
+                                .map_err(|e: String| malformed(format!("member tile: {e}")))?,
+                        )
+                    }
+                };
+                Ok(MemberDesc {
+                    id: field("id")?,
+                    label: m
+                        .get("label")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| malformed("member missing 'label'"))?
+                        .to_string(),
+                    device: m
+                        .get("device")
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
+                    tile,
+                    batch_max: field("batch_max")?,
+                    draining: m
+                        .get("draining")
+                        .and_then(Json::as_bool)
+                        .ok_or_else(|| malformed("member missing 'draining'"))?,
+                    admitted: field("admitted")?,
+                    completed: field("completed")?,
+                    inflight: field("inflight")?,
+                })
+            })
+            .collect::<Result<Vec<_>, ProtocolError>>()?;
+        Ok(TopologyDesc { epoch, members })
+    }
+}
+
+/// Snapshot a live [`TopologyView`] into its wire form.
+pub fn encode_topology(t: &TopologyView) -> Json {
+    TopologyDesc {
+        epoch: t.epoch,
+        members: t
+            .members
+            .iter()
+            .map(|m| MemberDesc {
+                id: m.id,
+                label: m.label.to_string(),
+                device: m.device.as_ref().map(|d| d.id.clone()),
+                tile: m.tile_pref,
+                batch_max: m.batch_max as u64,
+                draining: m.draining,
+                admitted: m.stats.admitted.get(),
+                completed: m.stats.completed.get(),
+                inflight: m.stats.inflight(),
+            })
+            .collect(),
+    }
+    .to_json()
+}
+
+// ------------------------------------------------------ stats frame --
+
+/// [`ServingStats`] flattened for the wire: every counter, plus the
+/// latency histogram reduced to count/mean/percentiles (histogram
+/// buckets do not cross the wire). `merge_from` sums counters and takes
+/// the conservative (max) percentile, giving the shard tier its
+/// fleet-of-fleets view.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WireStats {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub steals: u64,
+    pub stolen: u64,
+    pub infeasible: u64,
+    pub retunes: u64,
+    pub batches: u64,
+    pub batched: u64,
+    pub sim_cost_ns: u64,
+    pub unpriced: u64,
+    pub latency_count: u64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+}
+
+impl WireStats {
+    pub fn of(s: &ServingStats) -> WireStats {
+        WireStats {
+            admitted: s.admitted.get(),
+            rejected: s.rejected.get(),
+            completed: s.completed.get(),
+            failed: s.failed.get(),
+            shed: s.shed.get(),
+            cancelled: s.cancelled.get(),
+            steals: s.steals.get(),
+            stolen: s.stolen.get(),
+            infeasible: s.infeasible.get(),
+            retunes: s.retunes.get(),
+            batches: s.batches.get(),
+            batched: s.batched.get(),
+            sim_cost_ns: s.sim_cost_ns.get(),
+            unpriced: s.unpriced.get(),
+            latency_count: s.latency.count(),
+            latency_mean_us: s.latency.mean_us(),
+            latency_p50_us: s.latency.percentile_us(50.0),
+            latency_p99_us: s.latency.percentile_us(99.0),
+        }
+    }
+
+    /// Fold another fleet's stats into this one: counters add; the mean
+    /// is sample-weighted; percentiles take the max (a conservative
+    /// bound — true cross-fleet percentiles would need the buckets).
+    pub fn merge_from(&mut self, o: &WireStats) {
+        let n = self.latency_count + o.latency_count;
+        if n > 0 {
+            self.latency_mean_us = (self.latency_mean_us * self.latency_count as f64
+                + o.latency_mean_us * o.latency_count as f64)
+                / n as f64;
+        }
+        self.latency_count = n;
+        self.latency_p50_us = self.latency_p50_us.max(o.latency_p50_us);
+        self.latency_p99_us = self.latency_p99_us.max(o.latency_p99_us);
+        self.admitted += o.admitted;
+        self.rejected += o.rejected;
+        self.completed += o.completed;
+        self.failed += o.failed;
+        self.shed += o.shed;
+        self.cancelled += o.cancelled;
+        self.steals += o.steals;
+        self.stolen += o.stolen;
+        self.infeasible += o.infeasible;
+        self.retunes += o.retunes;
+        self.batches += o.batches;
+        self.batched += o.batched;
+        self.sim_cost_ns += o.sim_cost_ns;
+        self.unpriced += o.unpriced;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("admitted", self.admitted)
+            .set("rejected", self.rejected)
+            .set("completed", self.completed)
+            .set("failed", self.failed)
+            .set("shed", self.shed)
+            .set("cancelled", self.cancelled)
+            .set("steals", self.steals)
+            .set("stolen", self.stolen)
+            .set("infeasible", self.infeasible)
+            .set("retunes", self.retunes)
+            .set("batches", self.batches)
+            .set("batched", self.batched)
+            .set("sim_cost_ns", self.sim_cost_ns)
+            .set("unpriced", self.unpriced)
+            .set("latency_count", self.latency_count)
+            .set("latency_mean_us", self.latency_mean_us)
+            .set("latency_p50_us", self.latency_p50_us)
+            .set("latency_p99_us", self.latency_p99_us)
+    }
+
+    pub fn from_json(j: &Json) -> Result<WireStats, ProtocolError> {
+        let n = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| malformed(format!("stats missing '{k}'")))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| malformed(format!("stats missing '{k}'")))
+        };
+        Ok(WireStats {
+            admitted: n("admitted")?,
+            rejected: n("rejected")?,
+            completed: n("completed")?,
+            failed: n("failed")?,
+            shed: n("shed")?,
+            cancelled: n("cancelled")?,
+            steals: n("steals")?,
+            stolen: n("stolen")?,
+            infeasible: n("infeasible")?,
+            retunes: n("retunes")?,
+            batches: n("batches")?,
+            batched: n("batched")?,
+            sim_cost_ns: n("sim_cost_ns")?,
+            unpriced: n("unpriced")?,
+            latency_count: n("latency_count")?,
+            latency_mean_us: f("latency_mean_us")?,
+            latency_p50_us: f("latency_p50_us")?,
+            latency_p99_us: f("latency_p99_us")?,
+        })
+    }
+
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "admitted={} rejected={} completed={} failed={} shed={} cancelled={} \
+             latency n={} mean={:.0}us p50={:.0}us p99={:.0}us",
+            self.admitted,
+            self.rejected,
+            self.completed,
+            self.failed,
+            self.shed,
+            self.cancelled,
+            self.latency_count,
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p99_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::generate;
+    use std::io::BufReader;
+
+    #[test]
+    fn request_frame_round_trips_every_verb() {
+        for (i, verb) in Verb::ALL.into_iter().enumerate() {
+            let f = RequestFrame::new(i as u64, verb, Json::obj().set("x", 1u64));
+            let line = f.to_line();
+            assert!(line.ends_with('\n'));
+            assert_eq!(RequestFrame::parse(&line).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn error_frame_round_trips_every_kind() {
+        for (i, kind) in WireErrorKind::ALL.into_iter().enumerate() {
+            let f = ResponseFrame::err(i as u64, WireError::new(kind, "boom"));
+            assert_eq!(ResponseFrame::parse(&f.to_line()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn submit_error_round_trips() {
+        for e in [
+            SubmitError::Saturated,
+            SubmitError::Unsupported,
+            SubmitError::DeadlineExceeded,
+            SubmitError::Infeasible,
+            SubmitError::ShuttingDown,
+        ] {
+            let msg = e.to_string();
+            let w = WireError::from_submit(&e);
+            assert_eq!(w.msg, msg);
+            assert_eq!(w.to_submit(), Some(e));
+        }
+        assert_eq!(
+            WireError::new(WireErrorKind::Failed, "x").to_submit(),
+            None
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let line = "{\"v\":2,\"id\":1,\"verb\":\"stats\",\"payload\":{}}";
+        assert_eq!(
+            RequestFrame::parse(line),
+            Err(ProtocolError::Version { got: 2 })
+        );
+    }
+
+    #[test]
+    fn malformed_frames_error_not_panic() {
+        for bad in [
+            "",
+            "{",
+            "[1,2]",
+            "{\"v\":1}",
+            "{\"v\":1,\"id\":1}",
+            "{\"v\":1,\"id\":1,\"verb\":\"warp\"}",
+            "{\"v\":1,\"id\":-3,\"verb\":\"stats\"}",
+        ] {
+            assert!(
+                matches!(
+                    RequestFrame::parse(bad),
+                    Err(ProtocolError::Malformed(_))
+                ),
+                "{bad:?} should be malformed"
+            );
+        }
+        assert!(ResponseFrame::parse("{\"v\":1,\"id\":1}").is_err());
+        assert!(ResponseFrame::parse(
+            "{\"v\":1,\"id\":1,\"ok\":{},\"err\":{\"kind\":\"failed\"}}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn oversized_line_is_typed() {
+        let long = format!("{}\n", "x".repeat(64));
+        let mut r = BufReader::new(long.as_bytes());
+        assert_eq!(
+            read_frame_line(&mut r, 16),
+            Err(ProtocolError::Oversized { limit: 16 })
+        );
+    }
+
+    #[test]
+    fn truncated_stream_is_typed() {
+        let mut r = BufReader::new(&b"{\"v\":1,\"id\":1"[..]);
+        assert_eq!(read_frame_line(&mut r, 1024), Err(ProtocolError::Truncated));
+        let mut empty = BufReader::new(&b""[..]);
+        assert_eq!(read_frame_line(&mut empty, 1024), Ok(None));
+    }
+
+    #[test]
+    fn frame_reader_splits_lines() {
+        let two = "{\"v\":1,\"id\":1,\"verb\":\"stats\",\"payload\":{}}\n\
+                   {\"v\":1,\"id\":2,\"verb\":\"topology\",\"payload\":{}}\n";
+        let mut r = BufReader::new(two.as_bytes());
+        let a = read_frame_line(&mut r, 4096).unwrap().unwrap();
+        assert_eq!(RequestFrame::parse(&a).unwrap().id, 1);
+        let b = read_frame_line(&mut r, 4096).unwrap().unwrap();
+        assert_eq!(RequestFrame::parse(&b).unwrap().verb, Verb::Topology);
+        assert_eq!(read_frame_line(&mut r, 4096), Ok(None));
+    }
+
+    #[test]
+    fn image_round_trips_exactly() {
+        let img = generate::test_scene(13, 7, 42);
+        let j = encode_image(&img);
+        let back = decode_image(&j).unwrap();
+        assert_eq!(back.width(), 13);
+        assert_eq!(back.height(), 7);
+        assert_eq!(img.max_abs_diff(&back), 0.0, "f32 pixels must be exact");
+    }
+
+    #[test]
+    fn image_rejects_bad_payloads() {
+        assert!(decode_image(&Json::obj()).is_err());
+        let short = Json::obj()
+            .set("w", 2u64)
+            .set("h", 2u64)
+            .set("px", vec![1.0f64]);
+        assert!(decode_image(&short).is_err());
+        let zero = Json::obj().set("w", 0u64).set("h", 2u64).set(
+            "px",
+            Vec::<f64>::new(),
+        );
+        assert!(decode_image(&zero).is_err());
+    }
+
+    #[test]
+    fn submit_round_trips_qos() {
+        let req = Request::new(Interpolator::Bilinear, generate::gradient(8, 8), 2)
+            .priority(Priority::Batch)
+            .deadline(Duration::from_millis(250));
+        let j = encode_submit(&req);
+        let back = decode_submit(&j).unwrap();
+        assert_eq!(back.kernel, Interpolator::Bilinear);
+        assert_eq!(back.scale, 2);
+        assert_eq!(back.priority, Priority::Batch);
+        assert_eq!(back.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(back.key(), req.key());
+        // defaults apply when QoS fields are absent
+        let bare = decode_submit(
+            &Json::obj()
+                .set("kernel", "nearest")
+                .set("scale", 3u64)
+                .set("image", encode_image(&generate::gradient(4, 4))),
+        )
+        .unwrap();
+        assert_eq!(bare.priority, Priority::Interactive);
+        assert_eq!(bare.deadline, None);
+    }
+
+    #[test]
+    fn policy_round_trips() {
+        let p = decode_policy(&encode_policy(&TilePolicy::PortableFallback)).unwrap();
+        assert!(matches!(p, TilePolicy::PortableFallback));
+        let p = decode_policy(&encode_policy(&TilePolicy::Fixed(TileDim::new(32, 4)))).unwrap();
+        match p {
+            TilePolicy::Fixed(t) => assert_eq!(t, TileDim::new(32, 4)),
+            other => panic!("expected fixed, got {other:?}"),
+        }
+        assert!(decode_policy(&Json::Str("yolo".into())).is_err());
+        assert!(decode_policy(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn topology_round_trips() {
+        let t = TopologyDesc {
+            epoch: 9,
+            members: vec![
+                MemberDesc {
+                    id: 0,
+                    label: "gtx260".into(),
+                    device: Some("gtx260".into()),
+                    tile: Some(TileDim::new(16, 8)),
+                    batch_max: 8,
+                    draining: false,
+                    admitted: 10,
+                    completed: 9,
+                    inflight: 1,
+                },
+                MemberDesc {
+                    id: 1,
+                    label: "dev1".into(),
+                    device: None,
+                    tile: None,
+                    batch_max: 4,
+                    draining: true,
+                    admitted: 0,
+                    completed: 0,
+                    inflight: 0,
+                },
+            ],
+        };
+        let back = TopologyDesc::from_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        assert!(!back.is_draining());
+        let all_draining = TopologyDesc {
+            epoch: 1,
+            members: vec![MemberDesc {
+                draining: true,
+                ..t.members[1].clone()
+            }],
+        };
+        assert!(all_draining.is_draining());
+    }
+
+    #[test]
+    fn stats_round_trip_and_merge() {
+        let s = ServingStats::new();
+        s.admitted.add(5);
+        s.completed.add(4);
+        s.record_latency(Priority::Interactive, Duration::from_micros(100));
+        let w = WireStats::of(&s);
+        let back = WireStats::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        let mut merged = back.clone();
+        merged.merge_from(&w);
+        assert_eq!(merged.admitted, 10);
+        assert_eq!(merged.completed, 8);
+        assert_eq!(merged.latency_count, 2);
+        assert!(merged.summary().contains("admitted=10"));
+    }
+}

@@ -1,0 +1,743 @@
+//! The serving side of the wire protocol: `tilekit serve --listen`.
+//!
+//! [`NetServer::bind`] attaches a listener (TCP or Unix socket) to a
+//! live [`Fleet`] and serves the full protocol — the data plane
+//! (`submit`/`wait`/`try_wait`/`cancel`) against the fleet and every
+//! control-plane verb against its [`FleetController`].
+//!
+//! Threading model: one accept-loop thread polls a nonblocking listener
+//! under a connection cap; each accepted connection gets a **reader**
+//! thread (parses frames, executes verbs) and a **writer** thread
+//! (serializes responses from a channel), so a slow client write never
+//! stalls verb execution. Because the [`FleetClient`](super::FleetClient)
+//! keeps one outstanding call per connection, `wait` is served inline
+//! with a bounded per-call timeout — the client re-polls, and responses
+//! stay in order.
+//!
+//! Shutdown is graceful: new submits are refused with
+//! [`SubmitError::ShuttingDown`], the listener stops accepting, and the
+//! server waits (bounded by `drain_timeout`) for every ticket handed to
+//! a remote caller to resolve before connections are torn down.
+
+use super::protocol::{
+    self, encode_topology, read_frame_line, ProtocolError, RequestFrame, ResponseFrame, Verb,
+    WireError, WireErrorKind, WireStats, DEFAULT_MAX_LINE_BYTES,
+};
+use crate::codec::json::Json;
+use crate::coordinator::{Fleet, FleetController, SubmitError, Ticket};
+use crate::device::DeviceDescriptor;
+use crate::runtime::ResizeBackend;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Where a server listens or a client connects: `host:port` TCP, or
+/// `unix:/path/to.sock`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ListenAddr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    /// Parse and validate an address string. TCP addresses must be
+    /// `host:port` with a numeric port; Unix sockets use a `unix:`
+    /// prefix followed by a non-empty path.
+    pub fn parse(s: &str) -> Result<ListenAddr> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err(anyhow!("unix socket address needs a path after 'unix:'"));
+            }
+            return Ok(ListenAddr::Unix(PathBuf::from(path)));
+        }
+        let (host, port) = s
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow!("TCP listen address must be host:port, got '{s}'"))?;
+        if host.is_empty() {
+            return Err(anyhow!("TCP listen address '{s}' has an empty host"));
+        }
+        port.parse::<u16>()
+            .map_err(|_| anyhow!("'{port}' is not a valid TCP port (0-65535)"))?;
+        Ok(ListenAddr::Tcp(s.to_string()))
+    }
+}
+
+impl fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ListenAddr::Tcp(a) => f.write_str(a),
+            ListenAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Builds a backend for a device joining the fleet via a remote
+/// `add_member` — the server cannot receive a live backend over the
+/// wire, so the operator supplies the recipe at bind time (e.g. "mock
+/// engine over this manifest").
+pub type BackendFactory = Arc<dyn Fn(&DeviceDescriptor) -> Arc<dyn ResizeBackend> + Send + Sync>;
+
+/// Tunables for a [`NetServer`]; defaults come from
+/// [`NetConfig`](crate::config::NetConfig).
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Concurrent connection cap; excess connections get a typed error
+    /// frame and are closed.
+    pub max_conns: usize,
+    /// Socket read timeout — the reader's poll tick for shutdown/idle
+    /// checks.
+    pub read_timeout: Duration,
+    /// Close a connection with no complete frame for this long.
+    pub idle_timeout: Duration,
+    /// Per-line byte cap (frame size bound).
+    pub max_line_bytes: usize,
+    /// How long graceful shutdown waits for outstanding remote tickets.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> NetServerConfig {
+        NetServerConfig {
+            max_conns: 64,
+            read_timeout: Duration::from_millis(250),
+            idle_timeout: Duration::from_secs(30),
+            max_line_bytes: DEFAULT_MAX_LINE_BYTES,
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener, PathBuf),
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn split(&self, read_timeout: Duration) -> std::io::Result<(Stream, Stream)> {
+        match self {
+            Stream::Tcp(s) => {
+                s.set_read_timeout(Some(read_timeout))?;
+                Ok((Stream::Tcp(s.try_clone()?), Stream::Tcp(s.try_clone()?)))
+            }
+            Stream::Unix(s) => {
+                s.set_read_timeout(Some(read_timeout))?;
+                Ok((Stream::Unix(s.try_clone()?), Stream::Unix(s.try_clone()?)))
+            }
+        }
+    }
+
+    fn shutdown_both(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl std::io::Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+struct ServerShared {
+    fleet: Arc<Fleet>,
+    controller: FleetController,
+    backends: BackendFactory,
+    cfg: NetServerConfig,
+    /// Set by [`NetServer::shutdown`]: refuse submits, stop accepting.
+    closed: AtomicBool,
+    /// Tickets handed to remote callers that have not resolved yet.
+    open_tickets: AtomicU64,
+    conns: AtomicUsize,
+}
+
+/// A fleet bound to a socket, serving the wire protocol until
+/// [`shutdown`](NetServer::shutdown).
+pub struct NetServer {
+    shared: Arc<ServerShared>,
+    accept: Option<thread::JoinHandle<()>>,
+    local: ListenAddr,
+    /// Unix socket path to unlink on shutdown.
+    sock_path: Option<PathBuf>,
+}
+
+impl NetServer {
+    /// Bind `addr` and start serving `fleet`. For TCP, port `0` picks an
+    /// ephemeral port — read the resolved address back from
+    /// [`local_addr`](NetServer::local_addr). A stale Unix socket file
+    /// from a dead server is replaced.
+    pub fn bind(
+        addr: &ListenAddr,
+        fleet: Arc<Fleet>,
+        backends: BackendFactory,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        let (listener, local, sock_path) = match addr {
+            ListenAddr::Tcp(a) => {
+                let l = TcpListener::bind(a.as_str())
+                    .with_context(|| format!("binding tcp listener on {a}"))?;
+                let resolved = l
+                    .local_addr()
+                    .map(|sa| sa.to_string())
+                    .unwrap_or_else(|_| a.clone());
+                (Listener::Tcp(l), ListenAddr::Tcp(resolved), None)
+            }
+            ListenAddr::Unix(p) => {
+                // Connect-probe a pre-existing socket: refuse to replace
+                // a live server, but clean up after a dead one.
+                if p.exists() {
+                    if UnixStream::connect(p).is_ok() {
+                        return Err(anyhow!(
+                            "unix socket {} already has a listening server",
+                            p.display()
+                        ));
+                    }
+                    std::fs::remove_file(p)
+                        .with_context(|| format!("removing stale socket {}", p.display()))?;
+                }
+                let l = UnixListener::bind(p)
+                    .with_context(|| format!("binding unix listener on {}", p.display()))?;
+                (
+                    Listener::Unix(l, p.clone()),
+                    ListenAddr::Unix(p.clone()),
+                    Some(p.clone()),
+                )
+            }
+        };
+        match &listener {
+            Listener::Tcp(l) => l.set_nonblocking(true)?,
+            Listener::Unix(l, _) => l.set_nonblocking(true)?,
+        }
+        let shared = Arc::new(ServerShared {
+            controller: fleet.controller(),
+            fleet,
+            backends,
+            cfg,
+            closed: AtomicBool::new(false),
+            open_tickets: AtomicU64::new(0),
+            conns: AtomicUsize::new(0),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .context("spawning accept loop")?
+        };
+        Ok(NetServer {
+            shared,
+            accept: Some(accept),
+            local: local.clone(),
+            sock_path,
+        })
+    }
+
+    /// The bound address — for TCP this has the real port even when the
+    /// caller asked for `:0`.
+    pub fn local_addr(&self) -> &ListenAddr {
+        &self.local
+    }
+
+    /// Tickets handed to remote callers that have not resolved yet.
+    pub fn open_tickets(&self) -> u64 {
+        self.shared.open_tickets.load(Ordering::SeqCst)
+    }
+
+    /// Live connections.
+    pub fn connections(&self) -> usize {
+        self.shared.conns.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: refuse new submits, stop accepting, wait
+    /// (bounded by `drain_timeout`) for outstanding remote tickets to
+    /// resolve, then tear down connections. The fleet itself is NOT shut
+    /// down — the caller still owns its `Arc<Fleet>`.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.shared.closed.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let drain_deadline = Instant::now() + self.shared.cfg.drain_timeout;
+        while self.shared.open_tickets.load(Ordering::SeqCst) > 0
+            && Instant::now() < drain_deadline
+        {
+            thread::sleep(Duration::from_millis(5));
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Readers notice `closed` at their next read-timeout tick.
+        let conn_deadline =
+            Instant::now() + self.shared.cfg.read_timeout * 4 + Duration::from_secs(1);
+        while self.shared.conns.load(Ordering::SeqCst) > 0 && Instant::now() < conn_deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        if let Some(p) = self.sock_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: Listener, shared: Arc<ServerShared>) {
+    loop {
+        if shared.closed.load(Ordering::SeqCst) {
+            return;
+        }
+        let accepted = match &listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                if shared.conns.load(Ordering::SeqCst) >= shared.cfg.max_conns {
+                    refuse_connection(stream, shared.cfg.max_conns);
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::SeqCst);
+                let shared = Arc::clone(&shared);
+                let spawned = thread::Builder::new()
+                    .name("net-conn".into())
+                    .spawn(move || {
+                        serve_connection(stream, &shared);
+                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    shared.conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                // Listener died under us; stop accepting. Existing
+                // connections keep running until shutdown.
+                return;
+            }
+        }
+    }
+}
+
+/// Over-cap connection: best-effort typed error frame, then close.
+fn refuse_connection(mut stream: Stream, cap: usize) {
+    let frame = ResponseFrame::err(
+        0,
+        WireError::new(
+            WireErrorKind::Saturated,
+            format!("server connection limit ({cap}) reached"),
+        ),
+    );
+    let _ = stream.write_all(frame.to_line().as_bytes());
+    let _ = stream.flush();
+    stream.shutdown_both();
+}
+
+/// Per-connection reader: parse frames, execute verbs, push responses
+/// to the writer thread. Owns the connection's outstanding tickets.
+fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
+    let (read_half, write_half) = match stream.split(shared.cfg.read_timeout) {
+        Ok(halves) => halves,
+        Err(_) => {
+            stream.shutdown_both();
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer = thread::Builder::new()
+        .name("net-write".into())
+        .spawn(move || writer_loop(write_half, rx));
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => {
+            stream.shutdown_both();
+            return;
+        }
+    };
+
+    let mut reader = BufReader::new(read_half);
+    let mut tickets: HashMap<u64, Ticket> = HashMap::new();
+    let mut last_activity = Instant::now();
+    loop {
+        if shared.closed.load(Ordering::SeqCst) && tickets.is_empty() {
+            break;
+        }
+        let line = match read_frame_line(&mut reader, shared.cfg.max_line_bytes) {
+            Ok(Some(line)) => line,
+            Ok(None) => break,
+            Err(ProtocolError::Timeout) => {
+                if last_activity.elapsed() > shared.cfg.idle_timeout {
+                    break;
+                }
+                continue;
+            }
+            Err(e @ (ProtocolError::Oversized { .. } | ProtocolError::Truncated)) => {
+                let _ = tx.send(
+                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
+                        .to_line(),
+                );
+                break;
+            }
+            Err(_) => break,
+        };
+        last_activity = Instant::now();
+        let frame = match RequestFrame::parse(&line) {
+            Ok(f) => f,
+            Err(e @ ProtocolError::Version { .. }) => {
+                let _ = tx.send(
+                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
+                        .to_line(),
+                );
+                break;
+            }
+            Err(e) => {
+                // One bad frame does not corrupt line framing; report it
+                // and keep the connection.
+                let _ = tx.send(
+                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
+                        .to_line(),
+                );
+                continue;
+            }
+        };
+        let response = dispatch(shared, &mut tickets, frame);
+        if tx.send(response.to_line()).is_err() {
+            break;
+        }
+    }
+    // Any tickets the client never collected: count them resolved so
+    // graceful shutdown is not held hostage by a vanished client.
+    let abandoned = tickets.len() as u64;
+    if abandoned > 0 {
+        shared.open_tickets.fetch_sub(abandoned, Ordering::SeqCst);
+    }
+    drop(tickets);
+    drop(tx); // writer drains then exits
+    let _ = writer.join();
+    stream.shutdown_both();
+}
+
+fn writer_loop(mut w: Stream, rx: mpsc::Receiver<String>) {
+    while let Ok(line) = rx.recv() {
+        if w.write_all(line.as_bytes()).is_err() || w.flush().is_err() {
+            return;
+        }
+    }
+}
+
+fn ok(id: u64, body: Json) -> ResponseFrame {
+    ResponseFrame::ok(id, body)
+}
+
+fn err(id: u64, kind: WireErrorKind, msg: impl Into<String>) -> ResponseFrame {
+    ResponseFrame::err(id, WireError::new(kind, msg))
+}
+
+/// Execute one verb against the fleet/controller.
+fn dispatch(
+    shared: &Arc<ServerShared>,
+    tickets: &mut HashMap<u64, Ticket>,
+    frame: RequestFrame,
+) -> ResponseFrame {
+    let id = frame.id;
+    let p = &frame.payload;
+    match frame.verb {
+        Verb::Submit => {
+            if shared.closed.load(Ordering::SeqCst) {
+                return ResponseFrame::err(
+                    id,
+                    WireError::from_submit(&SubmitError::ShuttingDown),
+                );
+            }
+            let req = match protocol::decode_submit(p) {
+                Ok(r) => r,
+                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+            };
+            match shared.fleet.submit(req) {
+                Ok(ticket) => {
+                    shared.open_tickets.fetch_add(1, Ordering::SeqCst);
+                    let body = Json::obj().set("ticket", ticket.id);
+                    let body = match ticket.device_id() {
+                        Some(d) => body.set("device", d),
+                        None => body,
+                    };
+                    tickets.insert(ticket.id, ticket);
+                    ok(id, body)
+                }
+                Err(e) => ResponseFrame::err(id, WireError::from_submit(&e)),
+            }
+        }
+        Verb::Wait => {
+            let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
+                return err(id, WireErrorKind::Protocol, "wait missing 'ticket'");
+            };
+            // Per-call budget, capped so one call never outlives the
+            // idle timeout; the client loops until done.
+            let budget_ms = p
+                .get("timeout_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(1000.0)
+                .clamp(0.0, 5000.0);
+            let Some(ticket) = tickets.remove(&tid) else {
+                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+            };
+            let deadline = Instant::now() + Duration::from_secs_f64(budget_ms / 1e3);
+            loop {
+                let left = deadline.saturating_duration_since(Instant::now());
+                let step = left.min(Duration::from_millis(100));
+                match ticket.wait_timeout(step) {
+                    Ok(Some(img)) => {
+                        shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
+                        return ok(
+                            id,
+                            Json::obj()
+                                .set("done", true)
+                                .set("image", protocol::encode_image(&img)),
+                        );
+                    }
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            tickets.insert(tid, ticket);
+                            return ok(id, Json::obj().set("done", false));
+                        }
+                    }
+                    Err(e) => {
+                        shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
+                        return err(id, WireErrorKind::Failed, format!("{e:#}"));
+                    }
+                }
+            }
+        }
+        Verb::TryWait => {
+            let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
+                return err(id, WireErrorKind::Protocol, "try_wait missing 'ticket'");
+            };
+            let Some(ticket) = tickets.get(&tid) else {
+                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+            };
+            match ticket.try_wait() {
+                Ok(Some(img)) => {
+                    let body = Json::obj()
+                        .set("done", true)
+                        .set("image", protocol::encode_image(&img));
+                    tickets.remove(&tid);
+                    shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
+                    ok(id, body)
+                }
+                Ok(None) => ok(id, Json::obj().set("done", false)),
+                Err(e) => {
+                    tickets.remove(&tid);
+                    shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
+                    err(id, WireErrorKind::Failed, format!("{e:#}"))
+                }
+            }
+        }
+        Verb::Cancel => {
+            let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
+                return err(id, WireErrorKind::Protocol, "cancel missing 'ticket'");
+            };
+            let Some(ticket) = tickets.get(&tid) else {
+                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+            };
+            ticket.cancel();
+            // The ticket stays registered: a later wait/try_wait
+            // observes the cancelled resolution and settles the count.
+            ok(id, Json::obj().set("cancelled", true))
+        }
+        Verb::Topology => ok(id, encode_topology(&shared.controller.topology())),
+        Verb::AddMember => {
+            let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "add_member missing 'device'");
+            };
+            let Some(desc) = crate::device::find_device(dev_id) else {
+                return err(
+                    id,
+                    WireErrorKind::NotFound,
+                    format!("no device '{dev_id}' in the registry"),
+                );
+            };
+            let policy = match p.get("policy") {
+                Some(pp) => match protocol::decode_policy(pp) {
+                    Ok(pol) => pol,
+                    Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                },
+                None => crate::coordinator::TilePolicy::PortableFallback,
+            };
+            let backend = (shared.backends)(&desc);
+            match shared.controller.add_member(desc, backend, policy) {
+                Ok(member) => ok(
+                    id,
+                    Json::obj()
+                        .set("member", member)
+                        .set("epoch", shared.controller.epoch()),
+                ),
+                Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
+            }
+        }
+        Verb::RemoveMember => {
+            let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "remove_member missing 'device'");
+            };
+            let mode = match p.get("mode").and_then(Json::as_str) {
+                None => crate::coordinator::DrainMode::Graceful,
+                Some(m) => match protocol::parse_drain_mode(m) {
+                    Ok(m) => m,
+                    Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                },
+            };
+            match shared.controller.remove_member(dev_id, mode) {
+                Ok(()) => ok(id, Json::obj().set("epoch", shared.controller.epoch())),
+                Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
+            }
+        }
+        Verb::Drain => {
+            let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "drain missing 'device'");
+            };
+            match shared.controller.drain(dev_id) {
+                Ok(()) => ok(id, Json::obj().set("epoch", shared.controller.epoch())),
+                Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
+            }
+        }
+        Verb::Retune => {
+            let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "retune missing 'device'");
+            };
+            let Some(oj) = p.get("outcome") else {
+                return err(id, WireErrorKind::Protocol, "retune missing 'outcome'");
+            };
+            let outcome = match crate::autotuner::TuningOutcome::from_json(oj) {
+                Ok(o) => o,
+                Err(e) => return err(id, WireErrorKind::Protocol, format!("{e:#}")),
+            };
+            match shared.controller.retune(dev_id, &outcome) {
+                Ok(tile) => ok(
+                    id,
+                    Json::obj().set(
+                        "tile",
+                        match tile {
+                            Some(t) => Json::Str(t.label()),
+                            None => Json::Null,
+                        },
+                    ),
+                ),
+                Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
+            }
+        }
+        Verb::SetScheduler => {
+            let Some(name) = p.get("name").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "set_scheduler missing 'name'");
+            };
+            match shared.controller.set_scheduler_by_name(name) {
+                Ok(()) => ok(id, Json::obj().set("ok", true)),
+                Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
+            }
+        }
+        Verb::SetAdmission => {
+            let Some(name) = p.get("name").and_then(Json::as_str) else {
+                return err(id, WireErrorKind::Protocol, "set_admission missing 'name'");
+            };
+            let timeout_ms = p.get("timeout_ms").and_then(Json::as_f64).unwrap_or(50.0);
+            if !timeout_ms.is_finite() || timeout_ms < 0.0 {
+                return err(id, WireErrorKind::Protocol, "bad 'timeout_ms'");
+            }
+            let timeout = Duration::from_secs_f64(timeout_ms / 1e3);
+            match shared.controller.set_admission_by_name(name, timeout) {
+                Ok(()) => ok(id, Json::obj().set("ok", true)),
+                Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
+            }
+        }
+        Verb::SetStealConfig => {
+            let Some(enabled) = p.get("enabled").and_then(Json::as_bool) else {
+                return err(
+                    id,
+                    WireErrorKind::Protocol,
+                    "set_steal_config missing 'enabled'",
+                );
+            };
+            let Some(threshold) = p.get("threshold").and_then(Json::as_u64) else {
+                return err(
+                    id,
+                    WireErrorKind::Protocol,
+                    "set_steal_config missing 'threshold'",
+                );
+            };
+            match shared
+                .controller
+                .set_steal_config(enabled, threshold as usize)
+            {
+                Ok(()) => ok(id, Json::obj().set("ok", true)),
+                Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
+            }
+        }
+        Verb::Stats => ok(id, WireStats::of(&shared.fleet.stats()).to_json()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_addr_parses_and_displays() {
+        assert_eq!(
+            ListenAddr::parse("127.0.0.1:7441").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:7441".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/tilekit.sock").unwrap(),
+            ListenAddr::Unix(PathBuf::from("/tmp/tilekit.sock"))
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/x.sock").unwrap().to_string(),
+            "unix:/tmp/x.sock"
+        );
+        assert_eq!(
+            ListenAddr::parse("[::1]:0").unwrap().to_string(),
+            "[::1]:0"
+        );
+        for bad in ["", "noport", ":7441", "host:", "host:notaport", "host:99999", "unix:"] {
+            assert!(ListenAddr::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+}

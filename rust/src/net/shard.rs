@@ -1,0 +1,379 @@
+//! The front tier: one process fanning requests out over N fleet
+//! servers ("shards") — `tilekit front --shards a:port,b:port`.
+//!
+//! Routing is a consistent-hash ring over **request shape**
+//! ([`RequestKey`]: interpolator, source dims, scale), so every request
+//! for the same shape lands on the same shard — keeping that shard's
+//! batcher full of identical work, which is exactly what the tuned-tile
+//! pipelines want. Each shard contributes `VNODES` virtual nodes, so
+//! removing one shard only remaps its own arc of the ring.
+//!
+//! Health is the shard's own control plane: the tier polls each shard's
+//! `topology()` — a shard is routable while it answers and has at least
+//! one non-draining member. Dead or draining shards are routed around
+//! by walking the ring to the next live one, and a submit that hits a
+//! just-died shard retries on the survivor, so a drain loses zero
+//! tickets. [`merged_stats`](FrontTier::merged_stats) folds every
+//! shard's [`WireStats`] into one fleet-of-fleets view.
+
+use super::client::{ClientError, FleetClient, NetClientConfig, RemoteTicket};
+use super::protocol::WireStats;
+use super::server::ListenAddr;
+use crate::coordinator::{Request, RequestKey};
+use crate::util::fnv1a64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Virtual nodes per shard on the hash ring.
+pub const VNODES: usize = 64;
+
+/// Stable 64-bit fingerprint of a request shape — the ring key.
+pub fn shape_hash(key: &RequestKey) -> u64 {
+    let mut bytes: Vec<u8> = Vec::with_capacity(24);
+    bytes.extend_from_slice(key.kernel.label().as_bytes());
+    bytes.push(0);
+    bytes.extend_from_slice(&key.src.0.to_le_bytes());
+    bytes.extend_from_slice(&key.src.1.to_le_bytes());
+    bytes.extend_from_slice(&key.scale.to_le_bytes());
+    fnv1a64(bytes)
+}
+
+/// The pure routing core: a sorted vnode ring mapping hashes to shard
+/// indices, independent of any live connection (unit-testable).
+pub struct Ring {
+    /// `(vnode hash, shard index)`, sorted by hash.
+    entries: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    /// Build the ring from one stable label per shard (the address
+    /// string) — same labels, same ring, on every tier instance.
+    pub fn new(labels: &[String], vnodes: usize) -> Ring {
+        let mut entries: Vec<(u64, usize)> = Vec::with_capacity(labels.len() * vnodes);
+        for (i, label) in labels.iter().enumerate() {
+            for v in 0..vnodes {
+                let key = format!("{label}#{v}");
+                entries.push((fnv1a64(key.into_bytes()), i));
+            }
+        }
+        entries.sort_unstable();
+        Ring { entries }
+    }
+
+    /// The shard owning `hash`, skipping shards `live` rejects. Walks
+    /// clockwise from the owning vnode, so the same hash maps to the
+    /// same shard until that shard dies — and deterministically fails
+    /// over to its ring successor when it does.
+    pub fn route(&self, hash: u64, live: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let start = self.entries.partition_point(|&(h, _)| h < hash);
+        for off in 0..self.entries.len() {
+            let (_, shard) = self.entries[(start + off) % self.entries.len()];
+            if live(shard) {
+                return Some(shard);
+            }
+        }
+        None
+    }
+}
+
+struct ShardState {
+    addr: ListenAddr,
+    client: FleetClient,
+    alive: AtomicBool,
+    draining: AtomicBool,
+    epoch: AtomicU64,
+}
+
+/// One shard's health as the tier currently sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardView {
+    pub addr: String,
+    pub alive: bool,
+    pub draining: bool,
+    pub epoch: u64,
+}
+
+/// Tunables for a [`FrontTier`].
+#[derive(Debug, Clone)]
+pub struct FrontTierConfig {
+    /// Background health-poll cadence; `None` = no thread, the caller
+    /// drives [`poll_once`](FrontTier::poll_once) (tests do this for
+    /// determinism).
+    pub health_poll: Option<Duration>,
+    /// Per-shard client settings.
+    pub client: NetClientConfig,
+}
+
+impl Default for FrontTierConfig {
+    fn default() -> FrontTierConfig {
+        FrontTierConfig {
+            health_poll: Some(Duration::from_millis(200)),
+            client: NetClientConfig::default(),
+        }
+    }
+}
+
+/// A consistent-hash front tier over N fleet servers.
+pub struct FrontTier {
+    shards: Arc<Vec<ShardState>>,
+    ring: Ring,
+    stop: Arc<AtomicBool>,
+    poller: Option<thread::JoinHandle<()>>,
+}
+
+impl FrontTier {
+    /// Connect to every shard and build the ring. All shards must be
+    /// reachable at startup; afterwards the tier tolerates deaths.
+    pub fn connect(addrs: &[ListenAddr], cfg: FrontTierConfig) -> Result<FrontTier, ClientError> {
+        if addrs.is_empty() {
+            return Err(ClientError::Transport("front tier needs at least one shard".into()));
+        }
+        let mut shards = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let client = FleetClient::connect_with(addr, cfg.client.clone())?;
+            shards.push(ShardState {
+                addr: addr.clone(),
+                client,
+                alive: AtomicBool::new(true),
+                draining: AtomicBool::new(false),
+                epoch: AtomicU64::new(0),
+            });
+        }
+        let labels: Vec<String> = addrs.iter().map(|a| a.to_string()).collect();
+        let shards = Arc::new(shards);
+        let stop = Arc::new(AtomicBool::new(false));
+        let tier = FrontTier {
+            ring: Ring::new(&labels, VNODES),
+            poller: match cfg.health_poll {
+                None => None,
+                Some(period) => {
+                    let shards = Arc::clone(&shards);
+                    let stop = Arc::clone(&stop);
+                    Some(
+                        thread::Builder::new()
+                            .name("front-health".into())
+                            .spawn(move || {
+                                while !stop.load(Ordering::SeqCst) {
+                                    poll_all(&shards);
+                                    thread::sleep(period);
+                                }
+                            })
+                            .map_err(|e| ClientError::Transport(e.to_string()))?,
+                    )
+                }
+            },
+            shards,
+            stop,
+        };
+        tier.poll_once();
+        Ok(tier)
+    }
+
+    /// One synchronous health sweep over every shard.
+    pub fn poll_once(&self) {
+        poll_all(&self.shards);
+    }
+
+    fn routable(&self, i: usize) -> bool {
+        self.shards[i].alive.load(Ordering::SeqCst)
+            && !self.shards[i].draining.load(Ordering::SeqCst)
+    }
+
+    /// The live shard that owns this request shape.
+    pub fn route_for(&self, key: &RequestKey) -> Option<usize> {
+        self.ring.route(shape_hash(key), |i| self.routable(i))
+    }
+
+    /// Submit through the owning shard; fails over (marking the shard
+    /// dead) if that shard's transport is gone. Returns the shard index
+    /// actually used alongside the ticket.
+    pub fn submit(&self, req: &Request) -> Result<(usize, RemoteTicket), ClientError> {
+        let hash = shape_hash(&req.key());
+        for _ in 0..self.shards.len() {
+            let Some(i) = self.ring.route(hash, |i| self.routable(i)) else {
+                break;
+            };
+            match self.shards[i].client.submit(req) {
+                Ok(t) => return Ok((i, t)),
+                // The shard vanished between health polls: mark it and
+                // let the ring fail over.
+                Err(ClientError::Transport(_)) | Err(ClientError::Protocol(_)) => {
+                    self.shards[i].alive.store(false, Ordering::SeqCst);
+                }
+                // Typed refusals (saturated, shutting down, ...) come
+                // from a *live* shard — propagate, don't reroute, so
+                // backpressure still means something.
+                Err(e) => return Err(e),
+            }
+        }
+        Err(ClientError::Transport("no live shard for this request shape".into()))
+    }
+
+    /// Shard count.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Direct client handle to shard `i` (control-plane pass-through:
+    /// drain, retune, remove_member against one shard).
+    pub fn client(&self, i: usize) -> &FleetClient {
+        &self.shards[i].client
+    }
+
+    /// Current health snapshot, one entry per shard.
+    pub fn shard_views(&self) -> Vec<ShardView> {
+        self.shards
+            .iter()
+            .map(|s| ShardView {
+                addr: s.addr.to_string(),
+                alive: s.alive.load(Ordering::SeqCst),
+                draining: s.draining.load(Ordering::SeqCst),
+                epoch: s.epoch.load(Ordering::SeqCst),
+            })
+            .collect()
+    }
+
+    /// Fold every live shard's stats into one fleet-of-fleets view.
+    pub fn merged_stats(&self) -> WireStats {
+        let mut merged = WireStats::default();
+        for s in self.shards.iter() {
+            if !s.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            if let Ok(stats) = s.client.stats() {
+                merged.merge_from(&stats);
+            }
+        }
+        merged
+    }
+
+    /// Stop the health poller.
+    pub fn shutdown(mut self) {
+        self.stop_poller();
+    }
+
+    fn stop_poller(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.poller.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FrontTier {
+    fn drop(&mut self) {
+        self.stop_poller();
+    }
+}
+
+fn poll_all(shards: &[ShardState]) {
+    for s in shards {
+        match s.client.topology() {
+            Ok(t) => {
+                s.epoch.store(t.epoch, Ordering::SeqCst);
+                s.draining.store(t.is_draining(), Ordering::SeqCst);
+                s.alive.store(true, Ordering::SeqCst);
+            }
+            Err(_) => s.alive.store(false, Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RequestKey;
+    use crate::image::Interpolator;
+
+    fn ring3() -> (Ring, Vec<String>) {
+        let labels: Vec<String> = ["127.0.0.1:7441", "127.0.0.1:7442", "127.0.0.1:7443"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        (Ring::new(&labels, VNODES), labels)
+    }
+
+    #[test]
+    fn routing_is_stable_and_total() {
+        let (ring, _) = ring3();
+        for scale in 1..50u32 {
+            let key = RequestKey {
+                kernel: Interpolator::Bilinear,
+                src: (64, 64),
+                scale,
+            };
+            let a = ring.route(shape_hash(&key), |_| true).unwrap();
+            let b = ring.route(shape_hash(&key), |_| true).unwrap();
+            assert_eq!(a, b, "same shape must route to the same shard");
+            assert!(a < 3);
+        }
+    }
+
+    #[test]
+    fn ring_spreads_shapes_across_shards() {
+        let (ring, _) = ring3();
+        let mut hit = [false; 3];
+        for scale in 1..200u32 {
+            for kernel in [Interpolator::Nearest, Interpolator::Bilinear, Interpolator::Bicubic] {
+                let key = RequestKey { kernel, src: (64, 64), scale };
+                hit[ring.route(shape_hash(&key), |_| true).unwrap()] = true;
+            }
+        }
+        assert_eq!(hit, [true; 3], "600 shapes should touch every shard");
+    }
+
+    #[test]
+    fn dead_shard_fails_over_deterministically_and_recovers() {
+        let (ring, _) = ring3();
+        let key = RequestKey {
+            kernel: Interpolator::Bilinear,
+            src: (128, 96),
+            scale: 2,
+        };
+        let h = shape_hash(&key);
+        let owner = ring.route(h, |_| true).unwrap();
+        let fail1 = ring.route(h, |i| i != owner).unwrap();
+        assert_ne!(fail1, owner);
+        // Failover is itself stable...
+        assert_eq!(ring.route(h, |i| i != owner).unwrap(), fail1);
+        // ...and the owner gets its arc back when it returns.
+        assert_eq!(ring.route(h, |_| true).unwrap(), owner);
+        // All shards down: nothing to route to.
+        assert_eq!(ring.route(h, |_| false), None);
+    }
+
+    #[test]
+    fn empty_ring_routes_nowhere() {
+        let ring = Ring::new(&[], VNODES);
+        assert_eq!(ring.route(7, |_| true), None);
+    }
+
+    #[test]
+    fn shape_hash_separates_components() {
+        let base = RequestKey {
+            kernel: Interpolator::Bilinear,
+            src: (64, 64),
+            scale: 2,
+        };
+        let h = shape_hash(&base);
+        assert_eq!(h, shape_hash(&base));
+        assert_ne!(h, shape_hash(&RequestKey { scale: 3, ..base }));
+        assert_ne!(h, shape_hash(&RequestKey { src: (64, 32), ..base }));
+        assert_ne!(
+            h,
+            shape_hash(&RequestKey {
+                kernel: Interpolator::Nearest,
+                ..base
+            })
+        );
+    }
+}

@@ -514,3 +514,78 @@ fn tune_src_flag_retargets_the_tuned_shape() {
     assert!(!ok);
     assert!(err.contains("--src"), "{err}");
 }
+
+#[test]
+fn serve_listen_flag_validation() {
+    if binary().is_none() {
+        return;
+    }
+    // Bad addresses are rejected before any socket is opened.
+    for bad in ["noport", "host:", ":7441", "host:notaport", "host:99999", "unix:"] {
+        let (_, err, ok) = run(&[
+            "serve", "--mock", "--artifacts", "no-such-dir", "--listen", bad,
+        ]);
+        assert!(!ok, "--listen {bad} must fail");
+        assert!(err.contains("--listen"), "--listen {bad}: {err}");
+    }
+    // A negative lifetime is rejected too.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--listen", "127.0.0.1:0", "--listen-for-ms", "-5",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--listen-for-ms"), "{err}");
+}
+
+#[test]
+fn serve_listen_loopback_smoke() {
+    use std::io::BufRead;
+    use tilekit::net::{FleetClient, ListenAddr};
+
+    if binary().is_none() {
+        return;
+    }
+    // Spawn a mock fleet on an ephemeral port and read the bound
+    // address off its stdout.
+    let bin = binary().unwrap();
+    let mut child = Command::new(bin)
+        .args([
+            "serve", "--mock", "--artifacts", "no-such-dir",
+            "--devices", "gtx260,fermi",
+            "--listen", "127.0.0.1:0", "--listen-for-ms", "30000",
+        ])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn tilekit serve --listen");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read server stdout");
+        assert!(n > 0, "server exited before printing the bound address");
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            let token = rest.split_whitespace().next().unwrap().to_string();
+            break ListenAddr::parse(&token).expect("printed address parses");
+        }
+    };
+
+    // One client round trip: a submit and a topology fetch.
+    let client = FleetClient::connect(&addr).expect("loopback connect");
+    let img = tilekit::image::generate::test_scene(64, 64, 5);
+    let req = tilekit::coordinator::Request::new(tilekit::image::Interpolator::Bilinear, img, 2);
+    let out = client
+        .submit(&req)
+        .expect("remote submit")
+        .wait()
+        .expect("remote wait");
+    assert_eq!(out.width(), 128);
+    assert_eq!(out.height(), 128);
+    let topo = client.topology().expect("remote topology");
+    assert_eq!(topo.members.len(), 2, "{topo:?}");
+    drop(client);
+
+    child.kill().ok();
+    child.wait().ok();
+}

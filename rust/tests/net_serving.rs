@@ -1,0 +1,437 @@
+//! Integration tests for the out-of-process serving subsystem (`net`):
+//! the PR's acceptance criteria.
+//!
+//! * A loopback client submit over TCP **and** over a Unix socket returns
+//!   bit-identical results to an in-process submit against an identical
+//!   fleet (the wire format round-trips `f32` pixels exactly).
+//! * Every `FleetController` verb works remotely, including an epoch bump
+//!   observed after `add_member`, and typed refusals (`Unsupported`)
+//!   survive the wire.
+//! * A 2-shard front tier keeps serving with **zero lost tickets** while
+//!   one shard is drained and its members removed mid-run.
+//! * Shape-hash routing is stable: equal request shapes always land on
+//!   the same shard.
+
+use std::sync::Arc;
+use std::time::Duration;
+use tilekit::autotuner::{SimCostModel, TuningOutcome, TuningSession};
+use tilekit::config::ServingConfig;
+use tilekit::coordinator::{
+    DrainMode, Fleet, Request, RequestKey, ServiceBuilder, SubmitError, TilePolicy,
+};
+use tilekit::device::{find_device, DeviceDescriptor};
+use tilekit::image::{generate, Interpolator};
+use tilekit::net::{
+    BackendFactory, ClientError, FleetClient, FrontTier, FrontTierConfig, ListenAddr,
+    NetServer, NetServerConfig,
+};
+use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
+use tilekit::tiling::TileDim;
+
+fn serving_cfg() -> ServingConfig {
+    ServingConfig {
+        workers: 2,
+        batch_max: Some(4),
+        batch_deadline_ms: 0.5,
+        queue_cap: 512,
+        ..ServingConfig::default()
+    }
+}
+
+fn demo_outcome(devices: &[DeviceDescriptor]) -> TuningOutcome {
+    let manifest = Manifest::fleet_demo();
+    TuningSession::new(SimCostModel)
+        .devices(devices.to_vec())
+        .kernel(Interpolator::Bilinear)
+        .scale(2)
+        .src((64, 64))
+        .tiles(vec![TileDim::new(16, 8), TileDim::new(32, 16)])
+        .run()
+        .unwrap_or_else(|e| panic!("tuning the demo manifest failed: {e} ({manifest:?})"))
+}
+
+/// A 2-member mock fleet over the built-in demo manifest, each device
+/// routed through its own tuned tile — the same shape `serve --listen
+/// --mock --devices gtx260,fermi` builds.
+fn demo_fleet() -> Arc<Fleet> {
+    let gtx = find_device("gtx260").unwrap();
+    let fermi = find_device("fermi").unwrap();
+    let outcome = demo_outcome(&[gtx.clone(), fermi.clone()]);
+    let manifest = Manifest::fleet_demo();
+    let svc = ServiceBuilder::new(&serving_cfg(), &manifest)
+        .device(
+            gtx,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome.clone()),
+        )
+        .device(
+            fermi,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome),
+        )
+        .build()
+        .unwrap();
+    Arc::new(svc)
+}
+
+fn mock_factory() -> BackendFactory {
+    Arc::new(|_d: &DeviceDescriptor| Arc::new(MockEngine::new()) as Arc<dyn ResizeBackend>)
+}
+
+fn server_cfg() -> NetServerConfig {
+    NetServerConfig {
+        read_timeout: Duration::from_millis(25),
+        idle_timeout: Duration::from_secs(10),
+        drain_timeout: Duration::from_secs(5),
+        ..NetServerConfig::default()
+    }
+}
+
+fn tcp_server(fleet: Arc<Fleet>) -> NetServer {
+    NetServer::bind(
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        fleet,
+        mock_factory(),
+        server_cfg(),
+    )
+    .expect("bind ephemeral TCP")
+}
+
+fn demo_request(seed: u64) -> Request {
+    let img = generate::test_scene(64, 64, seed);
+    Request::new(Interpolator::Bilinear, img, 2)
+}
+
+// ------------------------------------------------- loopback equivalence --
+
+#[test]
+fn tcp_loopback_submit_matches_in_process() {
+    // Reference: an identical fleet, driven in-process.
+    let reference = demo_fleet();
+    let expected = reference
+        .submit(demo_request(42))
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    let fleet = demo_fleet();
+    let server = tcp_server(Arc::clone(&fleet));
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+
+    let ticket = client.submit(&demo_request(42)).unwrap();
+    assert!(ticket.device_id().is_some(), "mock fleet names its members");
+    let got = ticket.wait().unwrap();
+
+    assert_eq!(got.width(), expected.width());
+    assert_eq!(got.height(), expected.height());
+    assert_eq!(
+        got.max_abs_diff(&expected),
+        0.0,
+        "the wire must round-trip f32 pixels exactly"
+    );
+
+    drop(client);
+    server.shutdown();
+    let stats = reference.stats();
+    assert_eq!(stats.completed.get(), 1);
+    if let Ok(f) = Arc::try_unwrap(reference) {
+        f.shutdown();
+    }
+}
+
+#[test]
+fn unix_socket_loopback_matches_in_process() {
+    let reference = demo_fleet();
+    let expected = reference
+        .submit(demo_request(7))
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    let sock = std::env::temp_dir().join(format!(
+        "tilekit-net-test-{}.sock",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&sock);
+    let addr = ListenAddr::Unix(sock.clone());
+    let fleet = demo_fleet();
+    let server =
+        NetServer::bind(&addr, Arc::clone(&fleet), mock_factory(), server_cfg()).unwrap();
+
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+    let got = client.submit(&demo_request(7)).unwrap().wait().unwrap();
+    assert_eq!(got.max_abs_diff(&expected), 0.0);
+
+    drop(client);
+    server.shutdown();
+    assert!(
+        !sock.exists(),
+        "shutdown must unlink the Unix socket file"
+    );
+    if let Ok(f) = Arc::try_unwrap(reference) {
+        f.shutdown();
+    }
+}
+
+#[test]
+fn typed_refusals_survive_the_wire() {
+    // The demo manifest has no bicubic artifact: an in-process submit
+    // refuses with SubmitError::Unsupported, and the remote client must
+    // see exactly the same typed error, not a string or a panic.
+    let fleet = demo_fleet();
+    let server = tcp_server(Arc::clone(&fleet));
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+
+    let img = generate::test_scene(64, 64, 3);
+    let err = client
+        .submit(&Request::new(Interpolator::Bicubic, img, 2))
+        .unwrap_err();
+    assert_eq!(
+        err.submit_error(),
+        Some(SubmitError::Unsupported),
+        "got: {err}"
+    );
+
+    drop(client);
+    server.shutdown();
+}
+
+// ------------------------------------------------- remote control plane --
+
+#[test]
+fn every_controller_verb_works_remotely() {
+    let fleet = demo_fleet();
+    let server = tcp_server(Arc::clone(&fleet));
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+
+    // topology + epoch
+    let before = client.topology().unwrap();
+    assert_eq!(before.members.len(), 2);
+    assert_eq!(client.epoch().unwrap(), before.epoch);
+
+    // add_member: a registry device joins and the epoch bumps.
+    let (member_id, epoch_after_add) = client
+        .add_member("8800gts", &TilePolicy::Fixed(TileDim::new(16, 8)))
+        .unwrap();
+    assert!(
+        epoch_after_add > before.epoch,
+        "add_member must bump the topology epoch ({} -> {epoch_after_add})",
+        before.epoch
+    );
+    let topo = client.topology().unwrap();
+    assert_eq!(topo.members.len(), 3);
+    let added = topo
+        .members
+        .iter()
+        .find(|m| m.id == member_id)
+        .expect("the new member appears in the remote topology");
+    assert_eq!(added.device.as_deref(), Some("8800gts"));
+    assert_eq!(added.tile, Some(TileDim::new(16, 8)));
+
+    // The grown fleet still serves.
+    client.submit(&demo_request(11)).unwrap().wait().unwrap();
+
+    // retune: hot-swap gtx260's tile through the wire; the flipped
+    // outcome must change the preferred tile (that's what "flipped"
+    // means), with no epoch change.
+    let outcome = demo_outcome(&[find_device("gtx260").unwrap()]);
+    let tuned = outcome.best_for("gtx260").unwrap();
+    let flipped = outcome.with_flipped_winner("gtx260").unwrap();
+    let epoch_before_retune = client.epoch().unwrap();
+    let swapped = client.retune("gtx260", &flipped).unwrap().unwrap();
+    assert_ne!(swapped, tuned, "retune must install the flipped winner");
+    assert_eq!(
+        client.epoch().unwrap(),
+        epoch_before_retune,
+        "retune is not a membership change"
+    );
+
+    // Scheduler / admission / stealing reconfiguration.
+    client.set_scheduler("least-loaded").unwrap();
+    client
+        .set_admission("block", Duration::from_millis(250))
+        .unwrap();
+    client.set_steal_config(false, 4).unwrap();
+    assert!(matches!(
+        client.set_scheduler("no-such-scheduler").unwrap_err(),
+        ClientError::Remote(_)
+    ));
+
+    // drain + remove_member: epoch bumps again, membership shrinks.
+    client.drain("8800gts").unwrap();
+    let drained = client.topology().unwrap();
+    assert!(
+        drained
+            .members
+            .iter()
+            .find(|m| m.id == member_id)
+            .unwrap()
+            .draining
+    );
+    let epoch_after_remove = client.remove_member("8800gts", DrainMode::Graceful).unwrap();
+    assert!(epoch_after_remove > epoch_after_add);
+    assert_eq!(client.topology().unwrap().members.len(), 2);
+
+    // stats: the wire summary reflects the served request.
+    let stats = client.stats().unwrap();
+    assert!(stats.completed >= 1, "remote stats: {stats:?}");
+
+    // Unknown member -> typed remote error, not a dead connection.
+    assert!(client.drain("nope").is_err());
+    // ... and the connection still works afterwards.
+    client.submit(&demo_request(12)).unwrap().wait().unwrap();
+
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn cancel_and_try_wait_work_remotely() {
+    let fleet = demo_fleet();
+    let server = tcp_server(Arc::clone(&fleet));
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+
+    let ticket = client.submit(&demo_request(21)).unwrap();
+    // The mock backend is fast: poll until the result is ready.
+    let mut got = None;
+    for _ in 0..200 {
+        if let Some(img) = ticket.try_wait().unwrap() {
+            got = Some(img);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(got.is_some(), "try_wait never observed the mock result");
+
+    // cancel on an already-resolved ticket is an acknowledged no-op; on
+    // a fresh one it resolves the ticket with a cancellation. Either
+    // way the verb must round-trip without killing the connection.
+    let t2 = client.submit(&demo_request(22)).unwrap();
+    t2.cancel().unwrap();
+    client.submit(&demo_request(23)).unwrap().wait().unwrap();
+
+    drop(client);
+    server.shutdown();
+}
+
+// ------------------------------------------------------- the front tier --
+
+#[test]
+fn front_tier_survives_drain_and_remove_with_zero_lost_tickets() {
+    let fleet_a = demo_fleet();
+    let fleet_b = demo_fleet();
+    let server_a = tcp_server(Arc::clone(&fleet_a));
+    let server_b = tcp_server(Arc::clone(&fleet_b));
+    let addrs = vec![
+        server_a.local_addr().clone(),
+        server_b.local_addr().clone(),
+    ];
+
+    // Manual health polling: deterministic tests, no background thread.
+    let tier = FrontTier::connect(
+        &addrs,
+        FrontTierConfig {
+            health_poll: None,
+            ..FrontTierConfig::default()
+        },
+    )
+    .unwrap();
+
+    // All demo traffic shares one shape, so one shard owns it all.
+    let probe = generate::test_scene(64, 64, 0);
+    let key = RequestKey::of(Interpolator::Bilinear, &probe, 2);
+    let owner = tier.route_for(&key).expect("both shards are live");
+    let other = 1 - owner;
+
+    const N: usize = 16;
+    let mut tickets = Vec::new();
+    for i in 0..N / 2 {
+        let (shard, t) = tier.submit(&demo_request(100 + i as u64)).unwrap();
+        assert_eq!(shard, owner, "same shape must route to the owner shard");
+        tickets.push((shard, t));
+    }
+
+    // Drain + remove every member of the owner shard mid-run.
+    let victim = tier.client(owner);
+    let topo = victim.topology().unwrap();
+    for m in &topo.members {
+        victim.drain(&m.label).unwrap();
+    }
+    for m in &topo.members {
+        victim.remove_member(&m.label, DrainMode::Graceful).unwrap();
+    }
+    tier.poll_once();
+    let views = tier.shard_views();
+    assert!(
+        !views[owner].alive || views[owner].draining,
+        "the drained shard must stop being routable: {views:?}"
+    );
+
+    // The same shape now lands on the surviving shard.
+    for i in 0..N / 2 {
+        let (shard, t) = tier.submit(&demo_request(200 + i as u64)).unwrap();
+        assert_eq!(shard, other, "post-drain traffic must reroute");
+        tickets.push((shard, t));
+    }
+
+    // Zero lost tickets: every submit — including those issued to the
+    // now-removed members before the drain — resolves with a result.
+    let mut completed = 0;
+    for (_, t) in tickets {
+        t.wait().unwrap();
+        completed += 1;
+    }
+    assert_eq!(completed, N);
+
+    let merged = tier.merged_stats();
+    assert!(
+        merged.completed >= N as u64,
+        "merged stats must count both shards: {merged:?}"
+    );
+
+    tier.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+}
+
+#[test]
+fn shape_hash_routing_is_stable_across_polls_and_clients() {
+    let fleet_a = demo_fleet();
+    let fleet_b = demo_fleet();
+    let server_a = tcp_server(Arc::clone(&fleet_a));
+    let server_b = tcp_server(Arc::clone(&fleet_b));
+    let addrs = vec![
+        server_a.local_addr().clone(),
+        server_b.local_addr().clone(),
+    ];
+    let tier = FrontTier::connect(
+        &addrs,
+        FrontTierConfig {
+            health_poll: None,
+            ..FrontTierConfig::default()
+        },
+    )
+    .unwrap();
+
+    let probe = generate::test_scene(64, 64, 0);
+    let key = RequestKey::of(Interpolator::Bilinear, &probe, 2);
+    let first = tier.route_for(&key).unwrap();
+    for _ in 0..10 {
+        tier.poll_once();
+        assert_eq!(
+            tier.route_for(&key),
+            Some(first),
+            "routing must not flap while membership is stable"
+        );
+    }
+    // ... and actual submits agree with route_for.
+    for i in 0..4 {
+        let (shard, t) = tier.submit(&demo_request(300 + i)).unwrap();
+        assert_eq!(shard, first);
+        t.wait().unwrap();
+    }
+
+    tier.shutdown();
+    server_a.shutdown();
+    server_b.shutdown();
+}

@@ -472,3 +472,250 @@ fn prop_serving_stats_merge_is_associative() {
         )
     });
 }
+
+// ------------------------------------------------- net wire protocol --
+
+/// Random JSON payloads for frame round-trips (depth-bounded).
+fn gen_payload(g: &mut tilekit::prop::Gen, depth: u32) -> Json {
+    match if depth == 0 { g.usize(0, 3) } else { g.usize(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.f64(-1e9, 1e9) * 1e3).round() / 1e3),
+        3 => Json::Str(
+            (0..g.usize(0, 10))
+                .map(|_| *g.choose(&['a', '"', '\\', '\n', '{', '}', 'ß', '😀']))
+                .collect(),
+        ),
+        4 => Json::Arr(
+            (0..g.usize(0, 3))
+                .map(|_| gen_payload(g, depth - 1))
+                .collect(),
+        ),
+        _ => {
+            let mut obj = Json::obj();
+            for i in 0..g.usize(0, 3) {
+                obj = obj.set(&format!("k{i}"), gen_payload(g, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+#[test]
+fn prop_net_request_frames_round_trip() {
+    use tilekit::net::{RequestFrame, Verb};
+
+    forall("request frame round trip", 400, |g| {
+        let verb = *g.choose(&Verb::ALL);
+        // Wire ids travel as JSON numbers: exact up to 2^53.
+        let id = g.usize(0, 1 << 53) as u64;
+        let frame = RequestFrame::new(id, verb, gen_payload(g, 3));
+        let line = frame.to_line();
+        prop_assert(line.ends_with('\n'), "frame line must be newline-terminated")?;
+        prop_assert(
+            !line[..line.len() - 1].contains('\n'),
+            "frame body must be a single line (embedded newlines escaped)",
+        )?;
+        let back = RequestFrame::parse(&line).map_err(|e| e.to_string())?;
+        prop_assert(back == frame, format!("round trip differs via {line}"))
+    });
+}
+
+#[test]
+fn prop_net_response_frames_round_trip() {
+    use tilekit::net::{ResponseFrame, WireError, WireErrorKind};
+
+    forall("response frame round trip", 400, |g| {
+        let id = g.usize(0, 1 << 53) as u64;
+        let frame = if g.bool() {
+            ResponseFrame::ok(id, gen_payload(g, 3))
+        } else {
+            let kind = *g.choose(&WireErrorKind::ALL);
+            let msg: String = (0..g.usize(0, 16))
+                .map(|_| *g.choose(&['e', ' ', '"', '\\', 'ø', ':', '0']))
+                .collect();
+            ResponseFrame::err(id, WireError::new(kind, msg))
+        };
+        let line = frame.to_line();
+        prop_assert(line.ends_with('\n'), "newline-terminated")?;
+        let back = ResponseFrame::parse(&line).map_err(|e| e.to_string())?;
+        prop_assert(back == frame, format!("round trip differs via {line}"))
+    });
+}
+
+#[test]
+fn prop_net_submit_payload_round_trips_exactly() {
+    use tilekit::coordinator::Priority;
+    use tilekit::net::protocol::{decode_submit, encode_submit};
+
+    forall("submit payload round trip", 150, |g| {
+        let w = g.usize(1, 24);
+        let h = g.usize(1, 24);
+        let img = generate::test_scene(w, h, g.u32(0, 10_000) as u64);
+        let kernel = *g.choose(&[
+            Interpolator::Nearest,
+            Interpolator::Bilinear,
+            Interpolator::Bicubic,
+        ]);
+        let mut req = Request::new(kernel, img, g.u32(1, 8));
+        if g.bool() {
+            req = req.priority(Priority::Batch);
+        }
+        if g.bool() {
+            req = req.deadline(Duration::from_millis(g.usize(0, 60_000) as u64));
+        }
+        let back = decode_submit(&encode_submit(&req)).map_err(|e| e.to_string())?;
+        prop_assert(back.kernel == req.kernel, "kernel differs")?;
+        prop_assert(back.scale == req.scale, "scale differs")?;
+        prop_assert(back.priority == req.priority, "priority differs")?;
+        prop_assert(back.deadline == req.deadline, "deadline differs")?;
+        prop_assert(
+            back.image.width() == req.image.width()
+                && back.image.height() == req.image.height(),
+            "dims differ",
+        )?;
+        prop_assert(
+            back.image.max_abs_diff(&req.image) == 0.0,
+            "f32 pixels must survive the wire bit-exactly",
+        )
+    });
+}
+
+#[test]
+fn prop_net_malformed_input_yields_typed_errors_not_panics() {
+    use tilekit::net::{RequestFrame, ResponseFrame, Verb};
+
+    forall("malformed frames", 600, |g| {
+        // Arbitrary garbage: parse must return, never panic.
+        let garbage: String = (0..g.usize(0, 40))
+            .map(|_| {
+                *g.choose(&[
+                    '{', '}', '[', ']', '"', ':', ',', 'v', '1', '\\', 'n', ' ', '\u{7}', 'ß',
+                ])
+            })
+            .collect();
+        let _ = RequestFrame::parse(&garbage);
+        let _ = ResponseFrame::parse(&garbage);
+
+        // A valid frame truncated at a random byte boundary must parse
+        // as a typed Malformed error or (rarely) still be valid JSON —
+        // but never panic and never mis-parse into a *different* frame.
+        let frame = RequestFrame::new(g.usize(0, 1 << 30) as u64, *g.choose(&Verb::ALL), {
+            let mut o = Json::obj();
+            for i in 0..g.usize(0, 3) {
+                o = o.set(&format!("f{i}"), gen_payload(g, 1));
+            }
+            o
+        });
+        let line = frame.to_line();
+        let mut cut = g.usize(0, line.len());
+        while !line.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        match RequestFrame::parse(&line[..cut]) {
+            Ok(parsed) => prop_assert(
+                parsed == frame,
+                format!("truncation at {cut} invented a different frame"),
+            )?,
+            Err(e) => {
+                let msg = e.to_string();
+                prop_assert(!msg.is_empty(), "typed error must describe itself")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_read_frame_line_enforces_caps_without_panicking() {
+    use std::io::Cursor;
+    use tilekit::net::protocol::read_frame_line;
+    use tilekit::net::ProtocolError;
+
+    forall("read_frame_line caps", 300, |g| {
+        let max = g.usize(4, 64);
+        let n = g.usize(0, 128);
+        let body: String = (0..n).map(|_| *g.choose(&['x', 'y', '{', '"'])).collect();
+
+        // Newline-terminated: under the cap it reads back exactly;
+        // over the cap it is a typed Oversized error.
+        let mut r = Cursor::new(format!("{body}\n"));
+        match read_frame_line(&mut r, max) {
+            Ok(Some(line)) if body.len() + 1 <= max => {
+                prop_assert(line == format!("{body}\n"), "line mangled")?;
+            }
+            Ok(Some(_)) => return Err("oversized line was not rejected".into()),
+            Err(ProtocolError::Oversized { limit }) => {
+                prop_assert(limit == max, "wrong limit reported")?;
+                prop_assert(body.len() + 1 > max, "under-cap line rejected")?;
+            }
+            other => return Err(format!("unexpected: {other:?}")),
+        }
+
+        // EOF mid-line is Truncated; EOF at a boundary is a clean None.
+        let mut r = Cursor::new(body.clone());
+        match read_frame_line(&mut r, usize::MAX) {
+            Ok(None) => prop_assert(body.is_empty(), "clean EOF on a partial line")?,
+            Err(ProtocolError::Truncated) => {
+                prop_assert(!body.is_empty(), "Truncated on empty input")?;
+            }
+            other => return Err(format!("unexpected: {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_topology_and_stats_round_trip() {
+    use tilekit::net::{TopologyDesc, WireStats};
+
+    forall("topology/stats round trip", 200, |g| {
+        let n = g.usize(0, 5);
+        let members = (0..n)
+            .map(|i| tilekit::net::protocol::MemberDesc {
+                id: i as u64,
+                label: format!("m{i}"),
+                device: if g.bool() { Some(format!("dev{i}")) } else { None },
+                tile: if g.bool() {
+                    Some(TileDim::new(g.pow2(0, 6), g.pow2(0, 6)))
+                } else {
+                    None
+                },
+                batch_max: g.usize(1, 64) as u64,
+                draining: g.bool(),
+                admitted: g.usize(0, 1000) as u64,
+                completed: g.usize(0, 1000) as u64,
+                inflight: g.usize(0, 64) as u64,
+            })
+            .collect();
+        let topo = TopologyDesc {
+            epoch: g.usize(0, 1 << 40) as u64,
+            members,
+        };
+        let back = TopologyDesc::from_json(&topo.to_json()).map_err(|e| e.to_string())?;
+        prop_assert(back == topo, "topology round trip differs")?;
+
+        let stats = WireStats {
+            admitted: g.usize(0, 9999) as u64,
+            rejected: g.usize(0, 99) as u64,
+            completed: g.usize(0, 9999) as u64,
+            failed: g.usize(0, 99) as u64,
+            shed: g.usize(0, 99) as u64,
+            cancelled: g.usize(0, 99) as u64,
+            steals: g.usize(0, 99) as u64,
+            stolen: g.usize(0, 99) as u64,
+            infeasible: g.usize(0, 99) as u64,
+            retunes: g.usize(0, 9) as u64,
+            batches: g.usize(0, 999) as u64,
+            batched: g.usize(0, 9999) as u64,
+            sim_cost_ns: g.usize(0, 1 << 40) as u64,
+            unpriced: g.usize(0, 99) as u64,
+            latency_count: g.usize(0, 9999) as u64,
+            latency_mean_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
+            latency_p50_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
+            latency_p99_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
+        };
+        let back = WireStats::from_json(&stats.to_json()).map_err(|e| e.to_string())?;
+        prop_assert(back == stats, "stats round trip differs")
+    });
+}
