@@ -11,6 +11,12 @@
 //! [`SubmitError`](crate::coordinator::SubmitError) comes back as
 //! [`ClientError::Submit`] carrying the same variant the in-process
 //! caller would have matched on.
+//!
+//! A response timeout (or any framing failure) **poisons** the shared
+//! connection: the late response can no longer be told apart from the
+//! next call's answer, so every subsequent call fails fast with a
+//! "connection is dead" transport error until
+//! [`FleetClient::reconnect`] dials a fresh connection in place.
 
 use super::protocol::{
     self, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError, WireStats,
@@ -136,6 +142,13 @@ impl NetStream {
             NetStream::Unix(s) => s.set_read_timeout(Some(t)),
         }
     }
+
+    fn shutdown_both(&self) {
+        let _ = match self {
+            NetStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            NetStream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
 }
 
 impl Read for NetStream {
@@ -166,6 +179,25 @@ struct Conn {
     reader: BufReader<NetStream>,
     writer: NetStream,
     next_id: u64,
+    /// Why this connection can no longer be trusted (response timeout,
+    /// framing failure, id desync). Once set, every call fails fast
+    /// with a clear error instead of reading a stale in-flight response
+    /// as if it answered the new request; [`FleetClient::reconnect`]
+    /// clears it by dialing fresh.
+    dead: Option<String>,
+}
+
+impl Conn {
+    /// Mark the connection dead and tear the socket down (so the server
+    /// notices and any late response is discarded by the kernel, not
+    /// misread by a later call).
+    fn poison(&mut self, why: String) -> ClientError {
+        if self.dead.is_none() {
+            self.dead = Some(why.clone());
+        }
+        self.writer.shutdown_both();
+        ClientError::Transport(why)
+    }
 }
 
 /// A blocking remote handle to a [`Fleet`](crate::coordinator::Fleet)
@@ -202,6 +234,7 @@ impl FleetClient {
                 reader,
                 writer: stream,
                 next_id: 1,
+                dead: None,
             })),
             cfg: Arc::new(cfg),
             addr: Arc::new(addr.clone()),
@@ -215,31 +248,49 @@ impl FleetClient {
 
     /// One request/response exchange. Holding the lock across both
     /// halves is what guarantees in-order, one-outstanding framing.
+    ///
+    /// A failure that leaves the stream untrustworthy — response
+    /// timeout (the late response would answer the *next* call),
+    /// transport/framing breakage, or an id desync — poisons the shared
+    /// connection: every later call fails fast with a "connection is
+    /// dead" transport error until [`reconnect`](FleetClient::reconnect).
     fn call(&self, verb: Verb, payload: Json) -> Result<Json, ClientError> {
         let mut conn = self
             .conn
             .lock()
             .map_err(|_| ClientError::Transport("client connection poisoned".into()))?;
+        if let Some(why) = &conn.dead {
+            return Err(ClientError::Transport(format!(
+                "connection to {} is dead ({why}); reconnect to retry",
+                self.addr
+            )));
+        }
         let id = conn.next_id;
         conn.next_id += 1;
         let line = RequestFrame::new(id, verb, payload).to_line();
-        conn.writer
+        if let Err(e) = conn
+            .writer
             .write_all(line.as_bytes())
             .and_then(|_| conn.writer.flush())
-            .map_err(|e| ClientError::Transport(format!("send failed: {e}")))?;
+        {
+            return Err(conn.poison(format!("send failed: {e}")));
+        }
         let resp_line = match protocol::read_frame_line(&mut conn.reader, self.cfg.max_line_bytes)
         {
             Ok(Some(l)) => l,
-            Ok(None) => {
-                return Err(ClientError::Transport("server closed the connection".into()))
-            }
+            Ok(None) => return Err(conn.poison("server closed the connection".into())),
             Err(ProtocolError::Timeout) => {
-                return Err(ClientError::Transport(format!(
+                return Err(conn.poison(format!(
                     "no response within {:?}",
                     self.cfg.response_timeout
                 )))
             }
-            Err(e) => return Err(ClientError::Protocol(e)),
+            Err(e) => {
+                // Oversized/truncated/io all leave the line framing
+                // unrecoverable mid-stream.
+                conn.poison(e.to_string());
+                return Err(ClientError::Protocol(e));
+            }
         };
         let resp = ResponseFrame::parse(&resp_line).map_err(ClientError::Protocol)?;
         if resp.id != id {
@@ -247,7 +298,7 @@ impl FleetClient {
             // errors; anything else means the stream is out of sync.
             return match resp.body {
                 Err(e) => Err(ClientError::Remote(e)),
-                Ok(_) => Err(ClientError::Transport(format!(
+                Ok(_) => Err(conn.poison(format!(
                     "response id {} does not match call id {id}",
                     resp.id
                 ))),
@@ -260,6 +311,42 @@ impl FleetClient {
                 None => Err(ClientError::Remote(wire)),
             },
         }
+    }
+
+    /// Whether the shared connection has been declared dead — poisoned
+    /// by a response timeout, a framing failure, or an id desync.
+    pub fn is_dead(&self) -> bool {
+        self.conn.lock().map(|c| c.dead.is_some()).unwrap_or(true)
+    }
+
+    /// Replace a dead (or live) connection with a freshly dialed one,
+    /// shared by all clones of this client. Server-side tickets from
+    /// the old connection are settled by the server when it notices the
+    /// close, so outstanding [`RemoteTicket`]s will report not-found.
+    pub fn reconnect(&self) -> Result<(), ClientError> {
+        let stream = NetStream::connect(&self.addr, &self.cfg)?;
+        stream
+            .set_read_timeout(self.cfg.response_timeout)
+            .map_err(|e| ClientError::Transport(e.to_string()))?;
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| ClientError::Transport(e.to_string()))?,
+        );
+        let mut conn = self
+            .conn
+            .lock()
+            .map_err(|_| ClientError::Transport("client connection poisoned".into()))?;
+        conn.writer.shutdown_both();
+        // Ids keep counting up, so frames from the two connection
+        // generations can never be confused.
+        *conn = Conn {
+            reader,
+            writer: stream,
+            next_id: conn.next_id,
+            dead: None,
+        };
+        Ok(())
     }
 
     // ------------------------------------------------- data plane --

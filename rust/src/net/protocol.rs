@@ -57,6 +57,30 @@ pub const PROTOCOL_VERSION: u64 = 1;
 /// connection, not normal payloads.
 pub const DEFAULT_MAX_LINE_BYTES: usize = 8 * 1024 * 1024;
 
+/// Hard cap on decoded image pixel count (8192x8192). Every pixel costs
+/// at least two bytes on the wire, so no frame under any sane line cap
+/// can legitimately carry more; it also keeps wrap-prone `w*h`
+/// arithmetic (e.g. `2^32 x 2^32`) from ever reaching [`Image`]
+/// construction.
+pub const MAX_IMAGE_PIXELS: u64 = 1 << 26;
+
+/// Largest millisecond duration accepted off the wire (~31.7 years).
+/// `Duration::from_secs_f64` panics on values that overflow a
+/// `Duration`, so anything bigger is treated as a malformed frame, not
+/// a real timeout.
+pub const MAX_DURATION_MS: f64 = 1e12;
+
+/// Decode a wire `*_ms` field into a [`Duration`], rejecting NaN,
+/// infinities, negatives, and magnitudes past [`MAX_DURATION_MS`] —
+/// the values `Duration::from_secs_f64` would panic on. Untrusted input
+/// must come through here rather than calling `from_secs_f64` directly.
+pub fn duration_from_ms(ms: f64, field: &str) -> Result<Duration, ProtocolError> {
+    if !ms.is_finite() || !(0.0..=MAX_DURATION_MS).contains(&ms) {
+        return Err(malformed(format!("bad {field} {ms}")));
+    }
+    Ok(Duration::from_secs_f64(ms / 1e3))
+}
+
 /// Every operation the wire protocol can carry: the data plane
 /// (`submit`/`wait`/`try_wait`/`cancel`) plus the full
 /// [`FleetController`](crate::coordinator::FleetController) surface.
@@ -471,23 +495,30 @@ pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
     let w = j
         .get("w")
         .and_then(Json::as_u64)
-        .ok_or_else(|| malformed("image missing 'w'"))? as usize;
+        .ok_or_else(|| malformed("image missing 'w'"))?;
     let h = j
         .get("h")
         .and_then(Json::as_u64)
-        .ok_or_else(|| malformed("image missing 'h'"))? as usize;
+        .ok_or_else(|| malformed("image missing 'h'"))?;
     if w == 0 || h == 0 {
         return Err(malformed("image dims must be positive"));
     }
+    let total = w
+        .checked_mul(h)
+        .filter(|&n| n <= MAX_IMAGE_PIXELS)
+        .ok_or_else(|| {
+            malformed(format!(
+                "image dims {w}x{h} exceed the {MAX_IMAGE_PIXELS}-pixel cap"
+            ))
+        })?;
     let px = j
         .get("px")
         .and_then(Json::as_arr)
         .ok_or_else(|| malformed("image missing 'px'"))?;
-    if px.len() != w * h {
+    if px.len() as u64 != total {
         return Err(malformed(format!(
-            "image has {} pixels, expected {w}x{h}={}",
+            "image has {} pixels, expected {w}x{h}={total}",
             px.len(),
-            w * h
         )));
     }
     let data = px
@@ -495,7 +526,7 @@ pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
         .map(|p| p.as_f64().map(|f| f as f32))
         .collect::<Option<Vec<f32>>>()
         .ok_or_else(|| malformed("image 'px' entries must be numbers"))?;
-    Ok(Image::from_vec(w, h, data))
+    Ok(Image::from_vec(w as usize, h as usize, data))
 }
 
 /// Encode a submit request.
@@ -519,10 +550,12 @@ pub fn decode_submit(j: &Json) -> Result<Request, ProtocolError> {
         .ok_or_else(|| malformed("submit missing 'kernel'"))?;
     let kernel = Interpolator::parse(kernel_s)
         .ok_or_else(|| malformed(format!("unknown kernel '{kernel_s}'")))?;
-    let scale = j
+    let scale64 = j
         .get("scale")
         .and_then(Json::as_u64)
-        .ok_or_else(|| malformed("submit missing 'scale'"))? as u32;
+        .ok_or_else(|| malformed("submit missing 'scale'"))?;
+    let scale = u32::try_from(scale64)
+        .map_err(|_| malformed(format!("scale {scale64} does not fit in u32")))?;
     let image = decode_image(
         j.get("image")
             .ok_or_else(|| malformed("submit missing 'image'"))?,
@@ -532,10 +565,7 @@ pub fn decode_submit(j: &Json) -> Result<Request, ProtocolError> {
         req = req.priority(parse_priority(p)?);
     }
     if let Some(ms) = j.get("deadline_ms").and_then(Json::as_f64) {
-        if !ms.is_finite() || ms < 0.0 {
-            return Err(malformed(format!("bad deadline_ms {ms}")));
-        }
-        req = req.deadline(Duration::from_secs_f64(ms / 1e3));
+        req = req.deadline(duration_from_ms(ms, "deadline_ms")?);
     }
     Ok(req)
 }
@@ -1040,6 +1070,75 @@ mod tests {
             Vec::<f64>::new(),
         );
         assert!(decode_image(&zero).is_err());
+    }
+
+    #[test]
+    fn image_rejects_overflowing_dims() {
+        // w*h wraps to 0 in u64 — must not pass the px.len() check.
+        let wrap = Json::obj()
+            .set("w", 4294967296.0)
+            .set("h", 4294967296.0)
+            .set("px", Vec::<f64>::new());
+        assert!(matches!(
+            decode_image(&wrap),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // A finite product past the pixel cap is rejected even with a
+        // matching (hypothetical) px array.
+        let huge = Json::obj()
+            .set("w", (MAX_IMAGE_PIXELS + 1) as f64)
+            .set("h", 1u64)
+            .set("px", Vec::<f64>::new());
+        assert!(matches!(
+            decode_image(&huge),
+            Err(ProtocolError::Malformed(_))
+        ));
+        // Dims past u64 saturate through as_u64 and still overflow out.
+        let sat = Json::obj()
+            .set("w", 1e300)
+            .set("h", 1e300)
+            .set("px", Vec::<f64>::new());
+        assert!(decode_image(&sat).is_err());
+    }
+
+    #[test]
+    fn submit_rejects_hostile_qos_fields() {
+        let base = || {
+            Json::obj()
+                .set("kernel", "nearest")
+                .set("scale", 2u64)
+                .set("image", encode_image(&generate::gradient(4, 4)))
+        };
+        // A huge finite deadline must be a typed error, not a
+        // Duration::from_secs_f64 panic.
+        for bad_ms in [1e300, MAX_DURATION_MS * 2.0, -1.0, f64::INFINITY, f64::NAN] {
+            let j = base().set("deadline_ms", bad_ms);
+            assert!(
+                matches!(decode_submit(&j), Err(ProtocolError::Malformed(_))),
+                "deadline_ms {bad_ms} should be rejected"
+            );
+        }
+        // scale that does not fit u32 is rejected, never truncated.
+        let j = base().set("scale", 4294967298.0);
+        assert!(matches!(
+            decode_submit(&j),
+            Err(ProtocolError::Malformed(_))
+        ));
+        let j = base().set("scale", 1e300);
+        assert!(decode_submit(&j).is_err());
+    }
+
+    #[test]
+    fn duration_from_ms_bounds() {
+        assert_eq!(
+            duration_from_ms(250.0, "t").unwrap(),
+            Duration::from_millis(250)
+        );
+        assert_eq!(duration_from_ms(0.0, "t").unwrap(), Duration::ZERO);
+        assert!(duration_from_ms(MAX_DURATION_MS, "t").is_ok());
+        for bad in [-0.5, f64::NAN, f64::INFINITY, MAX_DURATION_MS + 1.0, 1e300] {
+            assert!(duration_from_ms(bad, "t").is_err(), "{bad} should fail");
+        }
     }
 
     #[test]

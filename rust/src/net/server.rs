@@ -335,16 +335,14 @@ fn accept_loop(listener: Listener, shared: Arc<ServerShared>) {
                     continue;
                 }
                 shared.conns.fetch_add(1, Ordering::SeqCst);
-                let shared = Arc::clone(&shared);
-                let spawned = thread::Builder::new()
+                let guard = ConnGuard(Arc::clone(&shared));
+                // If the spawn fails, the closure (and the guard inside
+                // it) is dropped right here, settling the count.
+                let _ = thread::Builder::new()
                     .name("net-conn".into())
                     .spawn(move || {
-                        serve_connection(stream, &shared);
-                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                        serve_connection(stream, &guard.0);
                     });
-                if spawned.is_err() {
-                    shared.conns.fetch_sub(1, Ordering::SeqCst);
-                }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(5));
@@ -355,6 +353,36 @@ fn accept_loop(listener: Listener, shared: Arc<ServerShared>) {
                 // connections keep running until shutdown.
                 return;
             }
+        }
+    }
+}
+
+/// Decrements the live-connection count when dropped — including when
+/// the connection thread unwinds from a panic — so a crashed connection
+/// can never wedge the accept loop's `max_conns` budget or stall
+/// shutdown's connection drain.
+struct ConnGuard(Arc<ServerShared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A connection's outstanding tickets. On drop — clean exit or panic
+/// unwinding — tickets the client never collected are subtracted from
+/// the server-wide open-ticket count, so graceful shutdown is not held
+/// hostage by a vanished (or crashed) connection.
+struct TicketLedger<'a> {
+    shared: &'a Arc<ServerShared>,
+    tickets: HashMap<u64, Ticket>,
+}
+
+impl Drop for TicketLedger<'_> {
+    fn drop(&mut self) {
+        let abandoned = self.tickets.len() as u64;
+        if abandoned > 0 {
+            self.shared.open_tickets.fetch_sub(abandoned, Ordering::SeqCst);
         }
     }
 }
@@ -396,10 +424,13 @@ fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
     };
 
     let mut reader = BufReader::new(read_half);
-    let mut tickets: HashMap<u64, Ticket> = HashMap::new();
+    let mut ledger = TicketLedger {
+        shared,
+        tickets: HashMap::new(),
+    };
     let mut last_activity = Instant::now();
     loop {
-        if shared.closed.load(Ordering::SeqCst) && tickets.is_empty() {
+        if shared.closed.load(Ordering::SeqCst) && ledger.tickets.is_empty() {
             break;
         }
         let line = match read_frame_line(&mut reader, shared.cfg.max_line_bytes) {
@@ -440,18 +471,13 @@ fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
                 continue;
             }
         };
-        let response = dispatch(shared, &mut tickets, frame);
+        let response = dispatch(shared, &mut ledger.tickets, frame);
         if tx.send(response.to_line()).is_err() {
             break;
         }
     }
-    // Any tickets the client never collected: count them resolved so
-    // graceful shutdown is not held hostage by a vanished client.
-    let abandoned = tickets.len() as u64;
-    if abandoned > 0 {
-        shared.open_tickets.fetch_sub(abandoned, Ordering::SeqCst);
-    }
-    drop(tickets);
+    // Settles any tickets the client never collected via its Drop.
+    drop(ledger);
     drop(tx); // writer drains then exits
     let _ = writer.join();
     stream.shutdown_both();
@@ -512,10 +538,12 @@ fn dispatch(
                 return err(id, WireErrorKind::Protocol, "wait missing 'ticket'");
             };
             // Per-call budget, capped so one call never outlives the
-            // idle timeout; the client loops until done.
+            // idle timeout; the client loops until done. NaN (which
+            // clamp passes through) falls back to the default.
             let budget_ms = p
                 .get("timeout_ms")
                 .and_then(Json::as_f64)
+                .filter(|ms| ms.is_finite())
                 .unwrap_or(1000.0)
                 .clamp(0.0, 5000.0);
             let Some(ticket) = tickets.remove(&tid) else {
@@ -678,10 +706,10 @@ fn dispatch(
                 return err(id, WireErrorKind::Protocol, "set_admission missing 'name'");
             };
             let timeout_ms = p.get("timeout_ms").and_then(Json::as_f64).unwrap_or(50.0);
-            if !timeout_ms.is_finite() || timeout_ms < 0.0 {
-                return err(id, WireErrorKind::Protocol, "bad 'timeout_ms'");
-            }
-            let timeout = Duration::from_secs_f64(timeout_ms / 1e3);
+            let timeout = match protocol::duration_from_ms(timeout_ms, "timeout_ms") {
+                Ok(t) => t,
+                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+            };
             match shared.controller.set_admission_by_name(name, timeout) {
                 Ok(()) => ok(id, Json::obj().set("ok", true)),
                 Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),

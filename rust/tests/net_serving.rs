@@ -23,7 +23,7 @@ use tilekit::device::{find_device, DeviceDescriptor};
 use tilekit::image::{generate, Interpolator};
 use tilekit::net::{
     BackendFactory, ClientError, FleetClient, FrontTier, FrontTierConfig, ListenAddr,
-    NetServer, NetServerConfig,
+    NetClientConfig, NetServer, NetServerConfig,
 };
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
 use tilekit::tiling::TileDim;
@@ -434,4 +434,110 @@ fn shape_hash_routing_is_stable_across_polls_and_clients() {
     tier.shutdown();
     server_a.shutdown();
     server_b.shutdown();
+}
+
+// ------------------------------------------------------- hostile input --
+
+#[test]
+fn hostile_submit_frames_get_typed_errors_and_server_survives() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let fleet = demo_fleet();
+    let server = tcp_server(Arc::clone(&fleet));
+    let ListenAddr::Tcp(addr) = server.local_addr().clone() else {
+        unreachable!("tcp_server binds TCP");
+    };
+
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+
+    // Each of these used to panic the per-connection reader thread
+    // (Duration overflow, u64 dim-product wrap) or silently truncate
+    // (oversized scale). All must come back as typed protocol errors
+    // on a connection that stays usable.
+    let hostiles = [
+        r#"{"kernel":"bilinear","scale":2,"deadline_ms":1e300,"image":{"w":1,"h":1,"px":[0]}}"#,
+        r#"{"kernel":"bilinear","scale":4294967298,"image":{"w":1,"h":1,"px":[0]}}"#,
+        r#"{"kernel":"bilinear","scale":2,"image":{"w":4294967296,"h":4294967296,"px":[]}}"#,
+    ];
+    for (i, payload) in hostiles.iter().enumerate() {
+        let id = i as u64 + 1;
+        let frame = format!("{{\"v\":1,\"id\":{id},\"verb\":\"submit\",\"payload\":{payload}}}\n");
+        raw.write_all(frame.as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("\"err\"") && line.contains("protocol"),
+            "hostile frame {id} should yield a typed protocol error, got: {line}"
+        );
+    }
+
+    // The same connection — and the server as a whole — still serves.
+    raw.write_all(b"{\"v\":1,\"id\":9,\"verb\":\"topology\",\"payload\":{}}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\""), "topology after hostiles failed: {line}");
+    drop(reader);
+    drop(raw);
+
+    let client = FleetClient::connect(server.local_addr()).unwrap();
+    let img = client.submit(&demo_request(7)).unwrap().wait().unwrap();
+    assert_eq!(img.width(), 128, "server must keep serving after hostile frames");
+
+    drop(client);
+    server.shutdown();
+}
+
+#[test]
+fn client_fails_fast_after_response_timeout_until_reconnect() {
+    // A server-shaped black hole: accepts, reads, never responds.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = ListenAddr::Tcp(listener.local_addr().unwrap().to_string());
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut c) = conn else { break };
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 1024];
+                while matches!(std::io::Read::read(&mut c, &mut buf), Ok(n) if n > 0) {}
+            });
+        }
+    });
+
+    let client = FleetClient::connect_with(
+        &addr,
+        NetClientConfig {
+            response_timeout: Duration::from_millis(100),
+            ..NetClientConfig::default()
+        },
+    )
+    .unwrap();
+
+    // First call times out and poisons the shared connection.
+    let err = client.topology().unwrap_err();
+    assert!(
+        matches!(err, ClientError::Transport(_)),
+        "want timeout transport error, got {err}"
+    );
+    assert!(client.is_dead(), "timeout must poison the connection");
+
+    // Later calls fail fast with a clear "dead" error instead of
+    // reading the (potentially late) previous response as their own.
+    let t0 = std::time::Instant::now();
+    let err = client.topology().unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_millis(90),
+        "a dead connection must fail fast, waited {:?}",
+        t0.elapsed()
+    );
+    assert!(err.to_string().contains("dead"), "want 'dead' in: {err}");
+
+    // Reconnect dials a fresh connection: usable again (and it times
+    // out again against this silent server — a real new exchange).
+    client.reconnect().unwrap();
+    assert!(!client.is_dead());
+    let err = client.topology().unwrap_err();
+    assert!(matches!(err, ClientError::Transport(_)), "{err}");
+    assert!(client.is_dead(), "second timeout poisons again");
 }
