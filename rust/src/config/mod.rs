@@ -186,6 +186,96 @@ impl ServingConfig {
     }
 }
 
+/// Autoscaler parameters (`[autoscaler]`): the closed-loop capacity
+/// controller behind `tilekit serve --autoscale` (see
+/// [`Autoscaler`](crate::coordinator::Autoscaler)). Watermarks are
+/// per-member queue depth (queued requests ÷ live members).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Start the control loop armed. `serve --autoscale` implies it.
+    pub enabled: bool,
+    /// Standby device ids (registry/config ids) the loop may engage,
+    /// in order; must be disjoint from `serving.devices` (scale-down
+    /// removes by label).
+    pub standby_devices: Vec<String>,
+    /// Scale down only while per-member queue depth < this.
+    pub low_queue: f64,
+    /// Scale up once per-member queue depth > this.
+    pub high_queue: f64,
+    /// Optional scale-up trigger on interactive p99 (ms); 0 = off (the
+    /// served histograms are cumulative, so a past burst would pin the
+    /// signal).
+    pub high_p99_ms: f64,
+    /// Hold this long after any scale action (hysteresis in time).
+    pub cooldown_ms: f64,
+    /// Sampling interval of the control loop.
+    pub poll_ms: f64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig {
+            enabled: false,
+            standby_devices: Vec::new(),
+            low_queue: 1.0,
+            high_queue: 8.0,
+            high_p99_ms: 0.0,
+            cooldown_ms: 1000.0,
+            poll_ms: 100.0,
+        }
+    }
+}
+
+impl AutoscalerConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.poll_ms.is_nan() || self.poll_ms <= 0.0 {
+            bail!("autoscaler.poll_ms must be > 0 (got {})", self.poll_ms);
+        }
+        if self.cooldown_ms.is_nan() || self.cooldown_ms < 0.0 {
+            bail!(
+                "autoscaler.cooldown_ms must be >= 0 (got {})",
+                self.cooldown_ms
+            );
+        }
+        if self.high_p99_ms.is_nan() || self.high_p99_ms < 0.0 {
+            bail!(
+                "autoscaler.high_p99_ms must be >= 0 (got {})",
+                self.high_p99_ms
+            );
+        }
+        if !self.low_queue.is_finite() || !self.high_queue.is_finite() || self.low_queue < 0.0 {
+            bail!("autoscaler watermarks must be finite and non-negative");
+        }
+        if self.low_queue >= self.high_queue {
+            bail!(
+                "autoscaler.low_queue ({}) must be < autoscaler.high_queue ({})",
+                self.low_queue,
+                self.high_queue
+            );
+        }
+        for (i, id) in self.standby_devices.iter().enumerate() {
+            if self.standby_devices[..i].contains(id) {
+                bail!("autoscaler.standby_devices lists '{id}' twice");
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the control-loop options (member bounds are derived
+    /// at spawn from the fleet and the pool).
+    pub fn opts(&self) -> crate::coordinator::AutoscalerOpts {
+        let poll = self.poll_ms.max(1.0);
+        crate::coordinator::AutoscalerOpts {
+            poll: std::time::Duration::from_secs_f64(poll / 1e3),
+            low_queue: self.low_queue,
+            high_queue: self.high_queue,
+            high_p99_us: (self.high_p99_ms * 1e3) as u64,
+            cooldown_ticks: (self.cooldown_ms / poll).ceil() as u32,
+            start_disabled: !self.enabled,
+        }
+    }
+}
+
 /// Wire-protocol parameters (`[net]`), shared by `serve --listen`,
 /// `fleet`/`submit --connect`, and `front --shards`.
 #[derive(Debug, Clone, PartialEq)]
@@ -284,6 +374,7 @@ impl NetConfig {
 pub struct Config {
     pub sweep: SweepConfig,
     pub serving: ServingConfig,
+    pub autoscaler: AutoscalerConfig,
     pub net: NetConfig,
     /// Builtin devices plus any `[[device]]` entries (by id; custom
     /// entries with a builtin id override it).
@@ -296,6 +387,7 @@ impl Config {
         Config {
             sweep: SweepConfig::default(),
             serving: ServingConfig::default(),
+            autoscaler: AutoscalerConfig::default(),
             net: NetConfig::default(),
             devices: builtin_devices(),
         }
@@ -404,6 +496,31 @@ impl Config {
             }
         }
 
+        if let Some(t) = doc.table("autoscaler") {
+            if let Some(v) = t.get("enabled") {
+                cfg.autoscaler.enabled = v
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("autoscaler.enabled must be a boolean"))?;
+            }
+            if let Some(v) = t.get("standby_devices") {
+                cfg.autoscaler.standby_devices =
+                    str_list(v).context("autoscaler.standby_devices")?;
+            }
+            let float = |key: &str, slot: &mut f64| -> Result<()> {
+                if let Some(v) = t.get(key) {
+                    *slot = v
+                        .as_float()
+                        .ok_or_else(|| anyhow!("autoscaler.{key} must be a number"))?;
+                }
+                Ok(())
+            };
+            float("low_queue", &mut cfg.autoscaler.low_queue)?;
+            float("high_queue", &mut cfg.autoscaler.high_queue)?;
+            float("high_p99_ms", &mut cfg.autoscaler.high_p99_ms)?;
+            float("cooldown_ms", &mut cfg.autoscaler.cooldown_ms)?;
+            float("poll_ms", &mut cfg.autoscaler.poll_ms)?;
+        }
+
         if let Some(t) = doc.table("net") {
             let float = |key: &str, slot: &mut f64| -> Result<()> {
                 if let Some(v) = t.get(key) {
@@ -463,7 +580,21 @@ impl Config {
                 bail!("serving.devices references unknown device '{id}'");
             }
         }
+        for id in &self.autoscaler.standby_devices {
+            if !self.devices.iter().any(|d| &d.id == id) {
+                bail!("autoscaler.standby_devices references unknown device '{id}'");
+            }
+            // Scale-down removes by label: a standby id colliding with
+            // a serving member would take the base fleet down with the
+            // burst capacity.
+            if self.serving.devices.contains(id) {
+                bail!(
+                    "autoscaler.standby_devices entry '{id}' is already in serving.devices"
+                );
+            }
+        }
         self.serving.validate()?;
+        self.autoscaler.validate()?;
         self.net.validate()?;
         // Fail at load time on a name no scheduler/policy will accept,
         // not at service startup.
@@ -554,6 +685,16 @@ retune_poll_ms = 200.0     # tuning-db watcher poll for `serve --watch-db`
 # listen = "127.0.0.1:7441"     # default addr for `serve --listen`
 # listen = "unix:/tmp/tk.sock"  # ...or a Unix socket
 
+[autoscaler]               # closed-loop capacity control (`serve --autoscale`)
+enabled = false            # --autoscale arms it even when false here
+# standby_devices = ["fermi"]  # pool the loop may engage; disjoint from
+                               # serving.devices (scale-down removes by label)
+low_queue = 1.0            # scale down while queued/members < low
+high_queue = 8.0           # scale up once queued/members > high
+high_p99_ms = 0.0          # optional p99 scale-up trigger; 0 = off
+cooldown_ms = 1000.0       # hold after any scale action (no flapping)
+poll_ms = 100.0            # control-loop sampling interval
+
 [net]                      # wire protocol (serve --listen / --connect / front)
 connect_timeout_ms = 2000.0
 read_timeout_ms = 250.0        # server poll tick for idle/shutdown checks
@@ -591,6 +732,8 @@ mod tests {
         assert_eq!(cfg.serving.batch_max, None, "derived per member by default");
         assert!(cfg.serving.work_stealing);
         assert_eq!(cfg.serving.steal_threshold, 4);
+        assert!(!cfg.autoscaler.enabled, "example ships with the loop off");
+        assert_eq!(cfg.autoscaler, AutoscalerConfig::default());
     }
 
     #[test]
@@ -797,6 +940,56 @@ global_mem_mib = 64
         assert!(Config::from_toml_str("[serving]\nlisten = \"noport\"\n").is_err());
         assert!(Config::from_toml_str("[serving]\nlisten = \"host:yes\"\n").is_err());
         assert!(Config::from_toml_str("[serving]\nlisten = 7441\n").is_err());
+    }
+
+    #[test]
+    fn autoscaler_table_parses_and_validates() {
+        let cfg = Config::from_toml_str(
+            "[autoscaler]\nenabled = true\nstandby_devices = [\"fermi\"]\n\
+             low_queue = 0.5\nhigh_queue = 6.0\ncooldown_ms = 400.0\npoll_ms = 20.0\n",
+        )
+        .unwrap();
+        assert!(cfg.autoscaler.enabled);
+        assert_eq!(cfg.autoscaler.standby_devices, vec!["fermi"]);
+        assert_eq!(cfg.autoscaler.low_queue, 0.5);
+        assert_eq!(cfg.autoscaler.high_queue, 6.0);
+        let opts = cfg.autoscaler.opts();
+        assert_eq!(opts.poll, std::time::Duration::from_millis(20));
+        assert_eq!(opts.cooldown_ticks, 20, "ceil(400 / 20)");
+        assert!(!opts.start_disabled);
+        // Defaults: off, empty pool, valid.
+        let d = AutoscalerConfig::default();
+        assert!(!d.enabled);
+        assert!(d.standby_devices.is_empty());
+        d.validate().unwrap();
+        // Rejections.
+        assert!(
+            Config::from_toml_str("[autoscaler]\nstandby_devices = [\"ghost\"]\n").is_err(),
+            "unknown standby device"
+        );
+        assert!(
+            Config::from_toml_str(
+                "[serving]\ndevices = [\"fermi\"]\n\n\
+                 [autoscaler]\nstandby_devices = [\"fermi\"]\n"
+            )
+            .is_err(),
+            "standby overlapping the serving fleet"
+        );
+        assert!(
+            Config::from_toml_str(
+                "[autoscaler]\nstandby_devices = [\"fermi\", \"fermi\"]\n"
+            )
+            .is_err(),
+            "duplicate standby entry"
+        );
+        assert!(
+            Config::from_toml_str("[autoscaler]\nlow_queue = 9.0\nhigh_queue = 2.0\n")
+                .is_err(),
+            "inverted watermark band"
+        );
+        assert!(Config::from_toml_str("[autoscaler]\npoll_ms = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[autoscaler]\ncooldown_ms = -1.0\n").is_err());
+        assert!(Config::from_toml_str("[autoscaler]\nenabled = 3\n").is_err());
     }
 
     #[test]

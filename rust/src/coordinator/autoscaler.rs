@@ -1,0 +1,911 @@
+//! The autoscaler: a closed-loop capacity controller over the fleet's
+//! control plane.
+//!
+//! PRs 4–6 made tuning adaptive to *hardware* (per-device tiles, the
+//! retune daemon); this module makes capacity adaptive to *load*. A
+//! background loop samples queue depth, shed/infeasible deltas, and the
+//! interactive p99 from [`ServingStats`], feeds them through a pure
+//! watermark policy ([`policy::decide`]) — high/low watermarks with
+//! hysteresis and a cooldown so it never flaps — and actuates via the
+//! live [`FleetController`]:
+//!
+//! * scale **up**: [`FleetController::add_member`] from a configured
+//!   standby-device pool ([`StandbyMember`]), each joining with its own
+//!   tuned-tile policy. Peers' batch-migration thieves (see
+//!   [`stealing`](super::stealing)) make the new member useful within
+//!   one batch window: it claims a victim's whole pending group instead
+//!   of waiting for the scheduler to route fresh traffic its way.
+//! * scale **down**: [`FleetController::drain`] then
+//!   [`FleetController::remove_member`] with [`DrainMode::Graceful`] —
+//!   every in-flight ticket still resolves; the member returns to the
+//!   standby pool for the next burst.
+//!
+//! The loop mirrors the [`RetuneDaemon`](super::RetuneDaemon) idiom:
+//! spawn/stop/Drop, sliced sleeps so `stop()` returns promptly, exit
+//! when the watched fleet shuts down. A cheap [`AutoscalerHandle`]
+//! exposes live knobs (enable/disable, watermarks, cooldown) and a
+//! [`AutoscalerView`] snapshot — the surface `tilekit fleet autoscaler`
+//! drives locally and over the wire.
+
+use super::server::{DrainMode, FleetController};
+use super::stats::ServingStats;
+use crate::coordinator::request::Priority;
+use crate::coordinator::router::TilePolicy;
+use crate::device::DeviceDescriptor;
+use crate::metrics::Counter;
+use crate::runtime::ResizeBackend;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// The pure scaling policy: watermarks, hysteresis, cooldown. No
+/// clocks, no threads, no I/O — every decision is a function of the
+/// config, the mutable [`PolicyState`], and one [`Sample`], so the
+/// no-flap and cooldown invariants are property-testable (see
+/// `rust/tests/properties.rs`).
+pub mod policy {
+    /// Watermark configuration. `low_queue`/`high_queue` are per-member
+    /// queue-depth watermarks (queued requests ÷ live members): the band
+    /// between them is the hysteresis dead zone where the controller
+    /// holds. `high_p99_us == 0` disables the latency trigger (the
+    /// served histograms are cumulative, so a past burst would otherwise
+    /// pin the signal high).
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    pub struct PolicyConfig {
+        /// Scale down only while queued/members < this.
+        pub low_queue: f64,
+        /// Scale up once queued/members > this.
+        pub high_queue: f64,
+        /// Optional scale-up trigger on interactive p99 (µs); 0 = off.
+        pub high_p99_us: u64,
+        /// Ticks to hold after any scale action (hysteresis in time).
+        pub cooldown_ticks: u32,
+        /// Never scale below this many members.
+        pub min_members: usize,
+        /// Never scale above this many members (min + standby pool).
+        pub max_members: usize,
+    }
+
+    impl Default for PolicyConfig {
+        fn default() -> PolicyConfig {
+            PolicyConfig {
+                low_queue: 1.0,
+                high_queue: 8.0,
+                high_p99_us: 0,
+                cooldown_ticks: 5,
+                min_members: 1,
+                max_members: 1,
+            }
+        }
+    }
+
+    /// One observation of the fleet, taken per poll tick. The deltas
+    /// are since the PREVIOUS tick (the caller differences the
+    /// cumulative counters), so a burst of sheds triggers exactly while
+    /// it happens, not forever after.
+    #[derive(Debug, Clone, Copy, Default)]
+    pub struct Sample {
+        /// Live (non-draining) members.
+        pub members: usize,
+        /// Requests waiting in admission queues, fleet-wide.
+        pub queued: u64,
+        /// Deadline sheds since the last tick.
+        pub shed_delta: u64,
+        /// Infeasible declines since the last tick.
+        pub infeasible_delta: u64,
+        /// Interactive-class end-to-end p99, µs (cumulative histogram).
+        pub interactive_p99_us: u64,
+    }
+
+    /// What the controller should do this tick.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Decision {
+        Hold,
+        /// Engage one standby member.
+        ScaleUp,
+        /// Drain + gracefully remove the most recently engaged member.
+        ScaleDown,
+    }
+
+    /// The policy's only memory: how many ticks of cooldown remain.
+    #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+    pub struct PolicyState {
+        pub cooldown: u32,
+    }
+
+    /// One policy step. Invariants (property-tested):
+    ///
+    /// * **no-flap**: while per-member pressure stays inside
+    ///   `[low_queue, high_queue]` and no sheds/infeasibles arrive (and
+    ///   the p99 trigger is quiet), the decision is always `Hold` — an
+    ///   oscillating-but-in-band metric stream never changes the target;
+    /// * **cooldown monotonicity**: after any non-`Hold` decision, the
+    ///   next `cooldown_ticks` calls return `Hold` regardless of input,
+    ///   so two scale actions are always ≥ `cooldown_ticks + 1` ticks
+    ///   apart;
+    /// * **clamping**: `ScaleUp` is never issued at `max_members`,
+    ///   `ScaleDown` never at (or below) `min_members`.
+    pub fn decide(cfg: &PolicyConfig, state: &mut PolicyState, s: &Sample) -> Decision {
+        if state.cooldown > 0 {
+            state.cooldown -= 1;
+            return Decision::Hold;
+        }
+        let pressure = s.queued as f64 / s.members.max(1) as f64;
+        // Sheds/infeasibles are direct evidence of undercapacity no
+        // matter what the queues look like (a short deep burst can shed
+        // without ever holding a deep steady-state queue).
+        let distress = s.shed_delta > 0 || s.infeasible_delta > 0;
+        let hot = pressure > cfg.high_queue
+            || distress
+            || (cfg.high_p99_us > 0 && s.interactive_p99_us > cfg.high_p99_us);
+        // The p99 trigger is deliberately absent from the scale-down
+        // side: the histogram is cumulative, so a past burst would pin
+        // it and strand capacity engaged forever. Idle is judged on
+        // live signals only.
+        let cold = pressure < cfg.low_queue && !distress;
+        if hot && s.members < cfg.max_members {
+            state.cooldown = cfg.cooldown_ticks;
+            return Decision::ScaleUp;
+        }
+        if cold && s.members > cfg.min_members {
+            state.cooldown = cfg.cooldown_ticks;
+            return Decision::ScaleDown;
+        }
+        Decision::Hold
+    }
+}
+
+use policy::{decide, Decision, PolicyConfig, PolicyState, Sample};
+
+/// One parked capacity unit: everything `add_member` needs to engage a
+/// device, held ready so scale-up is a control-plane call, not a
+/// provisioning workflow.
+pub struct StandbyMember {
+    pub device: DeviceDescriptor,
+    pub backend: Arc<dyn ResizeBackend>,
+    /// The tile policy the member's router resolves through when
+    /// engaged (`TilePolicy::PerDevice` routes it straight to its tuned
+    /// tile — the paper's point, applied at scale-up time).
+    pub policy: TilePolicy,
+}
+
+/// Live counters of one autoscaler's activity.
+#[derive(Debug, Default)]
+pub struct AutoscalerStats {
+    /// Control-loop ticks (including disabled ones).
+    pub ticks: Counter,
+    /// Members engaged from the standby pool.
+    pub scale_ups: Counter,
+    /// Members drained + removed back to the pool.
+    pub scale_downs: Counter,
+    /// Ticks that sampled and decided `Hold`.
+    pub holds: Counter,
+    /// Control-plane actuations that failed (the pool entry is
+    /// returned/kept, so the loop retries after the cooldown).
+    pub errors: Counter,
+}
+
+/// Knobs + mirrors shared between the control loop and its handles.
+/// Watermarks are stored as `f64` bit patterns so `set` applies
+/// atomically mid-tick.
+struct Shared {
+    enabled: AtomicBool,
+    low_bits: AtomicU64,
+    high_bits: AtomicU64,
+    high_p99_us: AtomicU64,
+    cooldown_ticks: AtomicU32,
+    poll_ms: u64,
+    min_members: usize,
+    max_members: usize,
+    /// Standby entries currently engaged (mirrored by the loop so
+    /// handles can report pool occupancy without touching the pool).
+    engaged: AtomicUsize,
+    stats: AutoscalerStats,
+}
+
+impl Shared {
+    fn low(&self) -> f64 {
+        f64::from_bits(self.low_bits.load(Ordering::Acquire))
+    }
+
+    fn high(&self) -> f64 {
+        f64::from_bits(self.high_bits.load(Ordering::Acquire))
+    }
+
+    fn policy_config(&self) -> PolicyConfig {
+        PolicyConfig {
+            low_queue: self.low(),
+            high_queue: self.high(),
+            high_p99_us: self.high_p99_us.load(Ordering::Acquire),
+            cooldown_ticks: self.cooldown_ticks.load(Ordering::Acquire),
+            min_members: self.min_members,
+            max_members: self.max_members,
+        }
+    }
+}
+
+/// Spawn-time options. `poll` is the sampling interval; the watermark
+/// fields seed [`policy::PolicyConfig`] (members bounds are derived:
+/// min = the fleet's size at spawn, max = min + standby pool).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscalerOpts {
+    pub poll: Duration,
+    pub low_queue: f64,
+    pub high_queue: f64,
+    pub high_p99_us: u64,
+    pub cooldown_ticks: u32,
+    /// Start disabled (`fleet autoscaler enable` arms it later).
+    pub start_disabled: bool,
+}
+
+impl Default for AutoscalerOpts {
+    fn default() -> AutoscalerOpts {
+        AutoscalerOpts {
+            poll: Duration::from_millis(100),
+            low_queue: 1.0,
+            high_queue: 8.0,
+            high_p99_us: 0,
+            cooldown_ticks: 5,
+            start_disabled: false,
+        }
+    }
+}
+
+/// A point-in-time snapshot of the controller for status displays and
+/// the wire protocol's `AutoscalerDesc` frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerView {
+    pub enabled: bool,
+    pub low_queue: f64,
+    pub high_queue: f64,
+    pub high_p99_us: u64,
+    pub cooldown_ticks: u32,
+    pub poll_ms: u64,
+    pub min_members: usize,
+    pub max_members: usize,
+    /// Standby entries currently parked (pool size − engaged).
+    pub standby_free: usize,
+    pub ticks: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub holds: u64,
+    pub errors: u64,
+}
+
+impl AutoscalerView {
+    /// One-line status for `tilekit fleet autoscaler status`.
+    pub fn summary(&self) -> String {
+        format!(
+            "autoscaler {} | members {}..={} standby_free={} | low={} high={} \
+             cooldown={} poll={}ms | ticks={} ups={} downs={} holds={} errors={}",
+            if self.enabled { "enabled" } else { "disabled" },
+            self.min_members,
+            self.max_members,
+            self.standby_free,
+            self.low_queue,
+            self.high_queue,
+            self.cooldown_ticks,
+            self.poll_ms,
+            self.ticks,
+            self.scale_ups,
+            self.scale_downs,
+            self.holds,
+            self.errors,
+        )
+    }
+}
+
+/// A partial reconfiguration, applied atomically by
+/// [`AutoscalerHandle::apply`] — the payload of the wire `set_autoscaler`
+/// verb and of `tilekit fleet autoscaler set`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AutoscalerUpdate {
+    pub enabled: Option<bool>,
+    pub low_queue: Option<f64>,
+    pub high_queue: Option<f64>,
+    pub high_p99_us: Option<u64>,
+    pub cooldown_ticks: Option<u32>,
+}
+
+impl AutoscalerUpdate {
+    pub fn is_empty(&self) -> bool {
+        *self == AutoscalerUpdate::default()
+    }
+}
+
+/// Cheap, clonable handle onto a running [`Autoscaler`]: live knobs and
+/// status snapshots, without owning the loop. The net server holds one
+/// to answer `autoscaler`/`set_autoscaler` frames.
+#[derive(Clone)]
+pub struct AutoscalerHandle {
+    shared: Arc<Shared>,
+}
+
+impl AutoscalerHandle {
+    /// Snapshot the controller's knobs and counters.
+    pub fn view(&self) -> AutoscalerView {
+        let s = &self.shared;
+        AutoscalerView {
+            enabled: s.enabled.load(Ordering::Acquire),
+            low_queue: s.low(),
+            high_queue: s.high(),
+            high_p99_us: s.high_p99_us.load(Ordering::Acquire),
+            cooldown_ticks: s.cooldown_ticks.load(Ordering::Acquire),
+            poll_ms: s.poll_ms,
+            min_members: s.min_members,
+            max_members: s.max_members,
+            standby_free: (s.max_members - s.min_members)
+                .saturating_sub(s.engaged.load(Ordering::Acquire)),
+            ticks: s.stats.ticks.get(),
+            scale_ups: s.stats.scale_ups.get(),
+            scale_downs: s.stats.scale_downs.get(),
+            holds: s.stats.holds.get(),
+            errors: s.stats.errors.get(),
+        }
+    }
+
+    /// Arm or pause the control loop (a paused loop keeps ticking but
+    /// never samples or actuates, so re-enabling starts from fresh
+    /// deltas).
+    pub fn set_enabled(&self, enabled: bool) {
+        self.shared.enabled.store(enabled, Ordering::Release);
+    }
+
+    /// Apply a partial reconfiguration after validating the RESULTING
+    /// knob set (so `set low=9` against `high=8` is rejected instead of
+    /// inverting the band).
+    pub fn apply(&self, update: &AutoscalerUpdate) -> anyhow::Result<()> {
+        let low = update.low_queue.unwrap_or_else(|| self.shared.low());
+        let high = update.high_queue.unwrap_or_else(|| self.shared.high());
+        if !low.is_finite() || !high.is_finite() || low < 0.0 {
+            anyhow::bail!("autoscaler watermarks must be finite and non-negative");
+        }
+        if low >= high {
+            anyhow::bail!("autoscaler low watermark must be < high (got {low} >= {high})");
+        }
+        self.shared.low_bits.store(low.to_bits(), Ordering::Release);
+        self.shared
+            .high_bits
+            .store(high.to_bits(), Ordering::Release);
+        if let Some(p99) = update.high_p99_us {
+            self.shared.high_p99_us.store(p99, Ordering::Release);
+        }
+        if let Some(cd) = update.cooldown_ticks {
+            self.shared.cooldown_ticks.store(cd, Ordering::Release);
+        }
+        if let Some(e) = update.enabled {
+            self.set_enabled(e);
+        }
+        Ok(())
+    }
+}
+
+/// The running control loop. Spawn with [`Autoscaler::spawn`]; the
+/// thread exits on [`stop`](Autoscaler::stop), on drop, or when the
+/// watched fleet shuts down.
+pub struct Autoscaler {
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Autoscaler {
+    /// Start the loop over `controller`, with `standby` as the capacity
+    /// pool. The fleet's CURRENT live-member count becomes the floor
+    /// (`min_members`); floor + pool size the ceiling. Standby labels
+    /// must not collide with serving members — `remove_member` removes
+    /// by label, so a collision would take the base fleet down with the
+    /// burst capacity (config validation enforces this for the CLI
+    /// path).
+    pub fn spawn(
+        controller: FleetController,
+        standby: Vec<StandbyMember>,
+        opts: AutoscalerOpts,
+    ) -> anyhow::Result<Autoscaler> {
+        if standby.is_empty() {
+            anyhow::bail!("autoscaler needs a non-empty standby pool");
+        }
+        if !opts.low_queue.is_finite() || !opts.high_queue.is_finite() || opts.low_queue < 0.0 {
+            anyhow::bail!("autoscaler watermarks must be finite and non-negative");
+        }
+        if opts.low_queue >= opts.high_queue {
+            anyhow::bail!(
+                "autoscaler low watermark must be < high (got {} >= {})",
+                opts.low_queue,
+                opts.high_queue
+            );
+        }
+        if opts.poll.is_zero() {
+            anyhow::bail!("autoscaler poll interval must be > 0");
+        }
+        let base = controller
+            .topology()
+            .members
+            .iter()
+            .filter(|m| !m.draining)
+            .count();
+        if base == 0 {
+            anyhow::bail!("autoscaler needs a fleet with at least one live member");
+        }
+        for sb in &standby {
+            if controller
+                .topology()
+                .members
+                .iter()
+                .any(|m| &*m.label == sb.device.id.as_str())
+            {
+                anyhow::bail!(
+                    "standby device '{}' is already a fleet member",
+                    sb.device.id
+                );
+            }
+        }
+        let shared = Arc::new(Shared {
+            enabled: AtomicBool::new(!opts.start_disabled),
+            low_bits: AtomicU64::new(opts.low_queue.to_bits()),
+            high_bits: AtomicU64::new(opts.high_queue.to_bits()),
+            high_p99_us: AtomicU64::new(opts.high_p99_us),
+            cooldown_ticks: AtomicU32::new(opts.cooldown_ticks),
+            poll_ms: opts.poll.as_millis() as u64,
+            min_members: base,
+            max_members: base + standby.len(),
+            engaged: AtomicUsize::new(0),
+            stats: AutoscalerStats::default(),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = Arc::clone(&stop);
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("tilekit-autoscaler".into())
+                .spawn(move || run_autoscaler(controller, standby, opts.poll, &stop, &shared))
+                .expect("spawn autoscaler")
+        };
+        Ok(Autoscaler {
+            stop,
+            shared,
+            handle: Some(handle),
+        })
+    }
+
+    /// A cheap handle for status/reconfiguration (e.g. to hand to the
+    /// net server).
+    pub fn handle(&self) -> AutoscalerHandle {
+        AutoscalerHandle {
+            shared: Arc::clone(&self.shared),
+        }
+    }
+
+    /// The loop's live activity counters.
+    pub fn stats(&self) -> &AutoscalerStats {
+        &self.shared.stats
+    }
+
+    /// Stop the loop and join its thread. Engaged standby members stay
+    /// in the fleet (stopping the controller must not shrink capacity
+    /// under live traffic).
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Autoscaler {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn run_autoscaler(
+    controller: FleetController,
+    mut standby: Vec<StandbyMember>,
+    poll: Duration,
+    stop: &AtomicBool,
+    shared: &Shared,
+) {
+    // Scale events belong to the fleet, not to any one member — they
+    // are recorded on the fleet-local stats so `Fleet::stats()` (and
+    // the wire's merged WireStats) carries them.
+    let fleet_stats: Arc<ServingStats> = controller.local_stats();
+    // Engaged pool entries, most recent last: scale-down pops the
+    // newest engagement (LIFO), so long-running base members are never
+    // the ones churned.
+    let mut engaged: Vec<StandbyMember> = Vec::new();
+    let mut pstate = PolicyState::default();
+    let mut last_shed = 0u64;
+    let mut last_infeasible = 0u64;
+    let mut primed = false;
+    // Sleep in short slices so stop() returns promptly even with a
+    // long poll interval.
+    let slice = poll.min(Duration::from_millis(50)).max(Duration::from_millis(1));
+    let mut since_poll = poll; // sample immediately on startup
+    while !stop.load(Ordering::Acquire) && !controller.is_closed() {
+        if since_poll < poll {
+            std::thread::sleep(slice);
+            since_poll += slice;
+            continue;
+        }
+        since_poll = Duration::ZERO;
+        shared.stats.ticks.inc();
+        if !shared.enabled.load(Ordering::Acquire) {
+            // Paused: forget the delta baseline so re-enabling does not
+            // interpret everything shed meanwhile as a fresh burst.
+            primed = false;
+            continue;
+        }
+        let topo = controller.topology();
+        let live: Vec<_> = topo.members.iter().filter(|m| !m.draining).collect();
+        let stats = controller.stats();
+        let shed = stats.shed.get();
+        let infeasible = stats.infeasible.get();
+        if !primed {
+            last_shed = shed;
+            last_infeasible = infeasible;
+            primed = true;
+            continue;
+        }
+        let sample = Sample {
+            members: live.len(),
+            queued: live.iter().map(|m| m.queued).sum(),
+            shed_delta: shed.saturating_sub(last_shed),
+            infeasible_delta: infeasible.saturating_sub(last_infeasible),
+            interactive_p99_us: stats.latency_by_class[Priority::Interactive.index()]
+                .percentile_us(99.0) as u64,
+        };
+        last_shed = shed;
+        last_infeasible = infeasible;
+        let cfg = shared.policy_config();
+        match decide(&cfg, &mut pstate, &sample) {
+            Decision::Hold => {
+                shared.stats.holds.inc();
+            }
+            Decision::ScaleUp => {
+                let Some(sb) = standby.pop() else {
+                    // Policy clamps at max_members, so an empty pool
+                    // here means an earlier actuation failed; count it
+                    // and keep holding.
+                    shared.stats.errors.inc();
+                    continue;
+                };
+                match controller.add_member(
+                    sb.device.clone(),
+                    Arc::clone(&sb.backend),
+                    sb.policy.clone(),
+                ) {
+                    Ok(_) => {
+                        engaged.push(sb);
+                        shared.engaged.store(engaged.len(), Ordering::Release);
+                        shared.stats.scale_ups.inc();
+                        fleet_stats.scale_ups.inc();
+                    }
+                    Err(_) => {
+                        standby.push(sb);
+                        shared.stats.errors.inc();
+                    }
+                }
+            }
+            Decision::ScaleDown => {
+                let Some(sb) = engaged.pop() else {
+                    shared.stats.errors.inc();
+                    continue;
+                };
+                let label = sb.device.id.clone();
+                // Graceful by construction: drain stops the scheduler
+                // picking it, remove lets its pipeline (and peer
+                // thieves) finish everything already owned — zero lost
+                // tickets across the scale event.
+                let res = controller
+                    .drain(&label)
+                    .and_then(|_| controller.remove_member(&label, DrainMode::Graceful));
+                match res {
+                    Ok(()) => {
+                        standby.push(sb);
+                        shared.engaged.store(engaged.len(), Ordering::Release);
+                        shared.stats.scale_downs.inc();
+                        fleet_stats.scale_downs.inc();
+                    }
+                    Err(_) => {
+                        engaged.push(sb);
+                        shared.stats.errors.inc();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::policy::*;
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::coordinator::{FleetBuilder, Request, TilePolicy};
+    use crate::device::find_device;
+    use crate::image::{generate, Interpolator};
+    use crate::runtime::{Manifest, MockEngine};
+    use std::time::Instant;
+
+    fn cfg() -> PolicyConfig {
+        PolicyConfig {
+            low_queue: 1.0,
+            high_queue: 4.0,
+            high_p99_us: 0,
+            cooldown_ticks: 3,
+            min_members: 1,
+            max_members: 3,
+        }
+    }
+
+    fn sample(members: usize, queued: u64) -> Sample {
+        Sample {
+            members,
+            queued,
+            ..Sample::default()
+        }
+    }
+
+    #[test]
+    fn scales_up_over_high_watermark_and_down_under_low() {
+        let c = cfg();
+        let mut st = PolicyState::default();
+        assert_eq!(decide(&c, &mut st, &sample(1, 5)), Decision::ScaleUp);
+        st = PolicyState::default();
+        assert_eq!(decide(&c, &mut st, &sample(2, 1)), Decision::ScaleDown);
+    }
+
+    #[test]
+    fn holds_inside_the_band_edges_included() {
+        let c = cfg();
+        let mut st = PolicyState::default();
+        // pressure exactly at the watermarks is the dead zone.
+        assert_eq!(decide(&c, &mut st, &sample(2, 8)), Decision::Hold); // 4.0
+        assert_eq!(decide(&c, &mut st, &sample(2, 2)), Decision::Hold); // 1.0
+        assert_eq!(st.cooldown, 0, "holds never start a cooldown");
+    }
+
+    #[test]
+    fn cooldown_blocks_decisions_then_releases() {
+        let c = cfg();
+        let mut st = PolicyState::default();
+        assert_eq!(decide(&c, &mut st, &sample(1, 100)), Decision::ScaleUp);
+        for _ in 0..c.cooldown_ticks {
+            assert_eq!(decide(&c, &mut st, &sample(2, 100)), Decision::Hold);
+        }
+        assert_eq!(decide(&c, &mut st, &sample(2, 100)), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn clamps_at_member_bounds() {
+        let c = cfg();
+        let mut st = PolicyState::default();
+        assert_eq!(
+            decide(&c, &mut st, &sample(c.max_members, 1000)),
+            Decision::Hold,
+            "no scale-up past the standby pool"
+        );
+        assert_eq!(
+            decide(&c, &mut st, &sample(c.min_members, 0)),
+            Decision::Hold,
+            "no scale-down below the base fleet"
+        );
+        assert_eq!(st.cooldown, 0, "clamped decisions start no cooldown");
+    }
+
+    #[test]
+    fn distress_triggers_scale_up_even_with_shallow_queues() {
+        let c = cfg();
+        let mut st = PolicyState::default();
+        let s = Sample {
+            members: 1,
+            queued: 0,
+            shed_delta: 2,
+            ..Sample::default()
+        };
+        assert_eq!(decide(&c, &mut st, &s), Decision::ScaleUp);
+        // ...and suppresses scale-down even under the low watermark.
+        st = PolicyState::default();
+        let s = Sample {
+            members: 3,
+            queued: 0,
+            infeasible_delta: 1,
+            ..Sample::default()
+        };
+        assert_ne!(decide(&c, &mut st, &s), Decision::ScaleDown);
+    }
+
+    #[test]
+    fn p99_trigger_respects_the_disable_sentinel() {
+        let mut c = cfg();
+        let mut st = PolicyState::default();
+        let slow = Sample {
+            members: 1,
+            queued: 0,
+            interactive_p99_us: 1_000_000,
+            ..Sample::default()
+        };
+        assert_eq!(
+            decide(&c, &mut st, &slow),
+            Decision::ScaleDown,
+            "p99 ignored while the trigger is 0 (idle queues win)"
+        );
+        c.high_p99_us = 10_000;
+        st = PolicyState::default();
+        assert_eq!(decide(&c, &mut st, &slow), Decision::ScaleUp);
+    }
+
+    #[test]
+    fn handle_apply_validates_the_resulting_band() {
+        let serving = ServingConfig {
+            workers: 1,
+            batch_max: Some(2),
+            ..ServingConfig::default()
+        };
+        let fleet = FleetBuilder::new(&serving, &Manifest::fleet_demo())
+            .device(
+                find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .build()
+            .unwrap();
+        let scaler = Autoscaler::spawn(
+            fleet.controller(),
+            vec![StandbyMember {
+                device: find_device("fermi").unwrap(),
+                backend: Arc::new(MockEngine::new()),
+                policy: TilePolicy::PortableFallback,
+            }],
+            AutoscalerOpts {
+                start_disabled: true,
+                ..AutoscalerOpts::default()
+            },
+        )
+        .unwrap();
+        let h = scaler.handle();
+        let v = h.view();
+        assert!(!v.enabled);
+        assert_eq!((v.min_members, v.max_members), (1, 2));
+        assert_eq!(v.standby_free, 1);
+        // Inverting the band is rejected; the knobs stay put.
+        assert!(h
+            .apply(&AutoscalerUpdate {
+                low_queue: Some(9.0),
+                ..AutoscalerUpdate::default()
+            })
+            .is_err());
+        assert_eq!(h.view().low_queue, v.low_queue);
+        h.apply(&AutoscalerUpdate {
+            enabled: Some(true),
+            low_queue: Some(0.5),
+            high_queue: Some(6.0),
+            cooldown_ticks: Some(9),
+            ..AutoscalerUpdate::default()
+        })
+        .unwrap();
+        let v = h.view();
+        assert!(v.enabled);
+        assert_eq!(v.low_queue, 0.5);
+        assert_eq!(v.high_queue, 6.0);
+        assert_eq!(v.cooldown_ticks, 9);
+        scaler.stop();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn spawn_rejects_bad_pools_and_bands() {
+        let serving = ServingConfig::default();
+        let fleet = FleetBuilder::new(&serving, &Manifest::fleet_demo())
+            .device(
+                find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .build()
+            .unwrap();
+        assert!(
+            Autoscaler::spawn(fleet.controller(), Vec::new(), AutoscalerOpts::default())
+                .is_err(),
+            "empty standby pool"
+        );
+        let dup = vec![StandbyMember {
+            device: find_device("gtx260").unwrap(),
+            backend: Arc::new(MockEngine::new()),
+            policy: TilePolicy::PortableFallback,
+        }];
+        assert!(
+            Autoscaler::spawn(fleet.controller(), dup, AutoscalerOpts::default()).is_err(),
+            "standby label colliding with a live member"
+        );
+        let pool = || {
+            vec![StandbyMember {
+                device: find_device("fermi").unwrap(),
+                backend: Arc::new(MockEngine::new()),
+                policy: TilePolicy::PortableFallback,
+            }]
+        };
+        assert!(
+            Autoscaler::spawn(
+                fleet.controller(),
+                pool(),
+                AutoscalerOpts {
+                    low_queue: 5.0,
+                    high_queue: 2.0,
+                    ..AutoscalerOpts::default()
+                }
+            )
+            .is_err(),
+            "inverted band"
+        );
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn scales_up_under_pressure_and_back_down_when_idle() {
+        let serving = ServingConfig {
+            workers: 1,
+            batch_max: Some(2),
+            queue_cap: 512,
+            ..ServingConfig::default()
+        };
+        let fleet = FleetBuilder::new(&serving, &Manifest::fleet_demo())
+            .device(
+                find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::with_delay(Duration::from_millis(2))),
+                TilePolicy::PortableFallback,
+            )
+            .build()
+            .unwrap();
+        let ctl = fleet.controller();
+        let scaler = Autoscaler::spawn(
+            ctl.clone(),
+            vec![StandbyMember {
+                device: find_device("fermi").unwrap(),
+                backend: Arc::new(MockEngine::with_delay(Duration::from_millis(2))),
+                policy: TilePolicy::PortableFallback,
+            }],
+            AutoscalerOpts {
+                poll: Duration::from_millis(2),
+                low_queue: 0.5,
+                high_queue: 3.0,
+                cooldown_ticks: 2,
+                ..AutoscalerOpts::default()
+            },
+        )
+        .unwrap();
+        let img = generate::gradient(64, 64);
+        let tickets: Vec<_> = (0..64)
+            .filter_map(|_| {
+                fleet
+                    .submit(Request::new(Interpolator::Bilinear, img.clone(), 2))
+                    .ok()
+            })
+            .collect();
+        assert!(!tickets.is_empty());
+        let wait_for = |pred: &dyn Fn() -> bool, what: &str| {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !pred() {
+                assert!(Instant::now() < deadline, "timed out waiting for {what}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        };
+        wait_for(&|| ctl.topology().members.len() == 2, "scale-up");
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        wait_for(&|| ctl.topology().members.len() == 1, "scale-down");
+        let view = scaler.handle().view();
+        assert!(view.scale_ups >= 1 && view.scale_downs >= 1);
+        assert_eq!(view.standby_free, 1, "pool entry returned after drain");
+        scaler.stop();
+        let stats = fleet.shutdown();
+        assert!(stats.scale_ups.get() >= 1, "mirrored into fleet stats");
+        assert!(stats.scale_downs.get() >= 1);
+    }
+}

@@ -131,6 +131,35 @@ impl BatcherState {
     pub fn pending_len(&self) -> usize {
         self.pending.values().map(Vec::len).sum()
     }
+
+    /// Snapshot of the pending table as migration candidates: one
+    /// [`MigrationGroup`](super::stealing::MigrationGroup) per key,
+    /// counting only live requests, in a deterministic (key-sorted)
+    /// order so [`select_batch_migration`]'s tie-break is stable. A
+    /// thief calls this under the victim's pending lock.
+    pub fn migration_groups(&self, now: Instant) -> Vec<super::stealing::MigrationGroup> {
+        let mut groups: Vec<_> = self
+            .pending
+            .iter()
+            .map(|(key, reqs)| super::stealing::MigrationGroup {
+                key: *key,
+                live: reqs
+                    .iter()
+                    .filter(|r| !r.is_cancelled() && !r.is_expired(now))
+                    .count(),
+            })
+            .collect();
+        groups.sort_by_key(|g| (g.key.kernel as u8, g.key.src, g.key.scale));
+        groups
+    }
+
+    /// Remove one whole pending group — the extraction half of a batch
+    /// migration. Returns every request under `key` (the caller splits
+    /// live from cancelled/expired so the dead ones are shed with the
+    /// victim's accounting, exactly like [`sweep`](Self::sweep)).
+    pub fn take_group(&mut self, key: &RequestKey) -> Vec<ResizeRequest> {
+        self.pending.remove(key).unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +242,37 @@ mod tests {
         assert_eq!(shed[0].1, Shed::Cancelled);
         assert_eq!(shed[1].1, Shed::DeadlineExceeded);
         assert_eq!(b.pending_len(), 1, "healthy request survives the sweep");
+    }
+
+    #[test]
+    fn migration_groups_count_live_only_and_take_group_empties_the_key() {
+        let mut b = BatcherState::new(100, Duration::from_secs(10));
+        b.push(req(2));
+        b.push(req(2));
+        let cancelled = req(2);
+        cancelled.cancel.cancel();
+        b.push(cancelled);
+        b.push(req(4));
+        let now = Instant::now();
+        let groups = b.migration_groups(now);
+        assert_eq!(groups.len(), 2);
+        let live_of = |scale| {
+            groups
+                .iter()
+                .find(|g| g.key.scale == scale)
+                .map(|g| g.live)
+                .unwrap()
+        };
+        assert_eq!(live_of(2), 2, "cancelled request must not count as live");
+        assert_eq!(live_of(4), 1);
+        // Deterministic order across calls (sorted, not HashMap order).
+        assert_eq!(b.migration_groups(now), groups);
+
+        let key2 = groups.iter().find(|g| g.key.scale == 2).unwrap().key;
+        let taken = b.take_group(&key2);
+        assert_eq!(taken.len(), 3, "extraction returns the WHOLE group");
+        assert_eq!(b.pending_len(), 1, "other groups untouched");
+        assert!(b.take_group(&key2).is_empty(), "second take finds nothing");
     }
 
     #[test]

@@ -79,6 +79,14 @@
 //! * work-stealing — an idle member's batcher pulls compatible pending
 //!   requests from a hot peer's admission queue and serves them through
 //!   its *own* tuned tile ([`stealing`], `ServingStats::{steals,stolen}`);
+//! * batch migration — when every queue is shallow but a peer's batcher
+//!   holds a deep pending group, an idle member claims the WHOLE group
+//!   ([`select_batch_migration`], `ServingStats::migrated_batches`), so
+//!   a freshly added member becomes useful within one batch window;
+//! * autoscaling — [`autoscaler::Autoscaler`] closes the capacity loop:
+//!   a pure watermark policy over [`ServingStats`] drives
+//!   `add_member`/`drain`/`remove_member` against a standby-device pool
+//!   (`tilekit serve --autoscale`);
 //! * per-member `batch_max` — each member's dynamic-batch cap derives
 //!   from its compute capability (a Fermi-class part batches bigger
 //!   than a cc1.0 one) unless `ServingConfig::batch_max` overrides it;
@@ -87,6 +95,7 @@
 //!   draining.
 
 pub mod admission;
+pub mod autoscaler;
 pub mod batcher;
 pub mod daemon;
 pub mod request;
@@ -100,6 +109,10 @@ pub mod worker;
 pub use admission::{
     admission_by_name, AdmissionPolicy, BlockWithTimeout, RejectWhenFull, ShedBatchFirst,
 };
+pub use autoscaler::{
+    Autoscaler, AutoscalerHandle, AutoscalerOpts, AutoscalerStats, AutoscalerUpdate,
+    AutoscalerView, StandbyMember,
+};
 pub use daemon::{RetuneDaemon, RetuneDaemonStats, RetuneSpec};
 pub use request::{CancelToken, Priority, Request, RequestKey, ResizeRequest, Ticket};
 pub use router::{Router, SharedRouter, TilePolicy};
@@ -112,4 +125,6 @@ pub use server::{
     SubmitError, TopologyView, ANON_BATCH_MAX,
 };
 pub use stats::ServingStats;
-pub use stealing::{select_steals, StealPolicy};
+pub use stealing::{
+    select_batch_migration, select_steals, MigrationGroup, StealPolicy, MIGRATE_MIN_LIVE,
+};

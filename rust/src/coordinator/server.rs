@@ -62,7 +62,9 @@ use super::request::{Request, RequestKey, ResizeRequest, Ticket};
 use super::router::{Router, SharedRouter, TilePolicy};
 use super::scheduler::{scheduler_by_name, CostMeter, DeviceSnapshot, Scheduler};
 use super::stats::{IdGen, ServingStats};
-use super::stealing::{select_steals, StealPolicy};
+use super::stealing::{
+    select_batch_migration, select_steals, StealPolicy, MIGRATE_MIN_LIVE,
+};
 use super::worker::spawn_workers;
 use crate::autotuner::{CostModel, SimCostModel, TuningOutcome};
 use crate::config::ServingConfig;
@@ -194,6 +196,12 @@ struct Member {
     /// The member's queue, kept as the peers' steal surface and for
     /// `DrainMode::Immediate` shedding.
     admit_rx: Receiver<ResizeRequest>,
+    /// The member's batching state, shared between its own batcher
+    /// thread and peer thieves: a thief may claim a whole pending group
+    /// (batch migration) so a freshly added member becomes useful
+    /// within one batch window. Locked per operation, never while a
+    /// second member's table is held.
+    pending: Arc<Mutex<BatcherState>>,
     /// Set by `drain`/`remove_member`: the scheduler stops picking this
     /// member (stale snapshots included), while peers may still steal
     /// from — and its own pipeline still serves — its queue.
@@ -204,6 +212,12 @@ struct Member {
 impl Member {
     fn is_draining(&self) -> bool {
         self.draining.load(Ordering::Acquire)
+    }
+
+    /// Requests grouped in the batcher's pending buffer right now — the
+    /// migration analogue of `admit_rx.len()`.
+    fn pending_len(&self) -> usize {
+        self.pending.lock().unwrap().pending_len()
     }
 
     fn join_threads(&self) {
@@ -269,6 +283,10 @@ pub struct MemberView {
     /// The member's dynamic-batch cap (capability-derived unless the
     /// config overrides it).
     pub batch_max: usize,
+    /// Requests waiting in this member's admission queue at snapshot
+    /// time — the queue-depth signal policy loops (the autoscaler)
+    /// sample.
+    pub queued: u64,
     /// True once [`FleetController::drain`] (or a removal in progress)
     /// stopped new work from being scheduled onto this member.
     pub draining: bool,
@@ -288,6 +306,7 @@ impl MemberView {
             device: m.device.clone(),
             tile_pref: router.tile_pref,
             batch_max: m.batch_max,
+            queued: m.admit_rx.len() as u64,
             draining: m.is_draining(),
             stats: Arc::clone(&m.stats),
             router,
@@ -311,7 +330,6 @@ pub struct TopologyView {
 struct BatcherCtx {
     self_id: u64,
     batch_max: usize,
-    deadline: Duration,
     topology: SharedTopology,
     steal: Arc<StealRuntime>,
 }
@@ -518,10 +536,16 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
     let stats = Arc::new(ServingStats::new());
 
     let (batch_tx, batch_rx) = bounded::<Batch>(inner.cfg.queue_cap.max(4));
+    // The batching state is shared (created BEFORE the batcher thread
+    // spawns, then stored on the Member): the thread owns its lifecycle,
+    // peer thieves lock it for whole-group batch migration.
+    let pending = Arc::new(Mutex::new(BatcherState::new(
+        batch_max,
+        Duration::from_secs_f64(inner.cfg.batch_deadline_ms / 1e3),
+    )));
     let ctx = BatcherCtx {
         self_id: id,
         batch_max,
-        deadline: Duration::from_secs_f64(inner.cfg.batch_deadline_ms / 1e3),
         topology: Arc::clone(&inner.topology),
         steal: Arc::clone(&inner.steal),
     };
@@ -529,9 +553,10 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
         let stats = Arc::clone(&stats);
         let router = Arc::clone(&router);
         let admit_rx = admit_rx.clone();
+        let pending = Arc::clone(&pending);
         std::thread::Builder::new()
             .name(format!("tilekit-batcher-{label}"))
-            .spawn(move || run_batcher(ctx, admit_rx, batch_tx, stats, router))
+            .spawn(move || run_batcher(ctx, admit_rx, batch_tx, stats, router, pending))
             .expect("spawn batcher")
     };
     let workers = spawn_workers(
@@ -556,6 +581,7 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
         slots: (inner.cfg.workers.max(1) * batch_max) as u64,
         admit_tx: Mutex::new(Some(admit_tx)),
         admit_rx,
+        pending,
         draining: AtomicBool::new(false),
         threads: Mutex::new(MemberThreads {
             batcher: Some(batcher),
@@ -584,21 +610,27 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
 /// The batcher thread body: drain admissions, group, shed
 /// cancelled/expired, flush on size/deadline — and, when idle, read the
 /// current topology and steal compatible pending work from the hottest
-/// peer queue over the threshold.
+/// peer queue over the threshold, or claim a whole pending group from
+/// the deepest peer's batcher (batch migration) when the queues are
+/// quiet but a pending table is not.
+///
+/// The batching state is the member's shared `pending` table; this
+/// thread locks it per operation (never across a blocking send), so
+/// peer thieves can migrate groups out between operations.
 fn run_batcher(
     ctx: BatcherCtx,
     admit_rx: Receiver<ResizeRequest>,
     batch_tx: Sender<Batch>,
     stats: Arc<ServingStats>,
     router: SharedRouter,
+    pending: Arc<Mutex<BatcherState>>,
 ) {
-    let mut state = BatcherState::new(ctx.batch_max, ctx.deadline);
     // Adaptive idle poll: 50ms while the fleet is quiet, dropping to
     // STEAL_POLL only while some peer sits at/over the steal threshold
     // (re-checked on every idle tick).
     let mut peers_hot = false;
     loop {
-        let timeout = match state.next_deadline(Instant::now()) {
+        let timeout = match pending.lock().unwrap().next_deadline(Instant::now()) {
             // While requests are pending, poll fast enough to shed
             // cancellations/deadlines promptly.
             Some(d) => d.min(SHED_POLL),
@@ -607,7 +639,8 @@ fn run_batcher(
         };
         match admit_rx.recv_timeout(timeout) {
             Ok(Some(req)) => {
-                if let Some(batch) = state.push(req) {
+                let full = pending.lock().unwrap().push(req);
+                if let Some(batch) = full {
                     if batch_tx.send(batch).is_err() {
                         return; // workers gone
                     }
@@ -641,10 +674,19 @@ fn run_batcher(
                         .iter()
                         .filter(|m| m.id != ctx.self_id)
                         .collect();
+                    // A peer is hot when its admission queue crosses the
+                    // steal threshold OR its pending table holds a
+                    // migratable group — the latter is how a fresh
+                    // member notices a batch worth claiming even though
+                    // every queue is shallow.
                     peers_hot = !self_draining
-                        && peers.iter().any(|p| p.admit_rx.len() >= threshold);
+                        && peers.iter().any(|p| {
+                            p.admit_rx.len() >= threshold
+                                || (!p.is_draining()
+                                    && p.pending_len() >= MIGRATE_MIN_LIVE.max(threshold))
+                        });
                     if peers_hot
-                        && state.pending_len() == 0
+                        && pending.lock().unwrap().pending_len() == 0
                         && stats.inflight() < 2 * ctx.batch_max as u64
                     {
                         let policy = StealPolicy {
@@ -652,8 +694,20 @@ fn run_batcher(
                             // Steal at most one batch's worth per attempt.
                             max_per_attempt: ctx.batch_max,
                         };
-                        let (stole, batches) =
-                            steal_from_peers(&policy, &peers, &router, &stats, &mut state);
+                        let (stole, mut batches) =
+                            steal_from_peers(&policy, &peers, &router, &stats, &pending);
+                        let mut moved = stole;
+                        if stole == 0 {
+                            // No queue to raid — claim a whole pending
+                            // group instead, so scale-up pays off inside
+                            // one batch window: the migrated requests
+                            // keep their original admission times, so
+                            // the deadline flush below fires promptly.
+                            let (migrated, more) =
+                                migrate_from_peers(&peers, &router, &stats, &pending);
+                            moved = migrated;
+                            batches.extend(more);
+                        }
                         for batch in batches {
                             if batch_tx.send(batch).is_err() {
                                 return;
@@ -663,7 +717,7 @@ fn run_batcher(
                         // that is all cancelled/expired) yields nothing;
                         // drop back to the slow idle tick instead of
                         // re-scanning its queue every STEAL_POLL.
-                        if stole == 0 {
+                        if moved == 0 {
                             peers_hot = false;
                         }
                     }
@@ -671,7 +725,8 @@ fn run_batcher(
             }
             Err(_) => break, // admissions closed: shutdown
         }
-        for (req, reason) in state.sweep(Instant::now()) {
+        let swept = pending.lock().unwrap().sweep(Instant::now());
+        for (req, reason) in swept {
             let (counter, msg) = match reason {
                 Shed::Cancelled => (&stats.cancelled, "cancelled"),
                 Shed::DeadlineExceeded => (&stats.shed, "deadline exceeded before execution"),
@@ -681,14 +736,16 @@ fn run_batcher(
                 .reply
                 .send(Err(anyhow::anyhow!("request {} {msg}", req.id)));
         }
-        for batch in state.flush_expired(Instant::now()) {
+        let expired = pending.lock().unwrap().flush_expired(Instant::now());
+        for batch in expired {
             if batch_tx.send(batch).is_err() {
                 return;
             }
         }
     }
     // Shutdown: flush everything still pending.
-    for batch in state.flush_all() {
+    let rest = pending.lock().unwrap().flush_all();
+    for batch in rest {
         let _ = batch_tx.send(batch);
     }
 }
@@ -704,7 +761,7 @@ fn steal_from_peers(
     peers: &[&Arc<Member>],
     router: &SharedRouter,
     stats: &ServingStats,
-    state: &mut BatcherState,
+    pending: &Mutex<BatcherState>,
 ) -> (usize, Vec<Batch>) {
     let Some(victim) = peers
         .iter()
@@ -723,11 +780,86 @@ fn steal_from_peers(
     for req in loot {
         victim.stats.stolen.inc();
         stats.steals.inc();
-        if let Some(batch) = state.push(req) {
+        if let Some(batch) = pending.lock().unwrap().push(req) {
             batches.push(batch);
         }
     }
     (stole, batches)
+}
+
+/// One whole-batch migration attempt by an idle member: scan the
+/// non-draining peers' pending tables (deepest first) for the fullest
+/// group the thief can route (see [`select_batch_migration`] for the
+/// invariants), extract it under the victim's lock, and re-home the
+/// live requests into the thief's own pending table — where they keep
+/// their original admission times, so the deadline flush batches them
+/// through the thief's tuned tile within one poll. Cancelled/expired
+/// requests found in the group are shed victim-side with the same
+/// accounting as the victim's own sweep.
+///
+/// Selection and extraction happen under ONE victim lock (the group
+/// cannot flush in between), and that lock is released before the
+/// thief's own table is taken — never two pending locks at once.
+fn migrate_from_peers(
+    peers: &[&Arc<Member>],
+    router: &SharedRouter,
+    stats: &ServingStats,
+    pending: &Mutex<BatcherState>,
+) -> (usize, Vec<Batch>) {
+    let current = Arc::clone(&router.read().expect("router lock"));
+    let now = Instant::now();
+    let mut ordered: Vec<&Arc<Member>> = peers
+        .iter()
+        .copied()
+        .filter(|p| !p.is_draining())
+        .collect();
+    ordered.sort_by_key(|p| std::cmp::Reverse(p.pending_len()));
+    for victim in ordered {
+        let taken = {
+            let mut table = victim.pending.lock().unwrap();
+            let groups = table.migration_groups(now);
+            let Some(i) = select_batch_migration(
+                &groups,
+                |key| current.supports(key),
+                victim.is_draining(),
+                MIGRATE_MIN_LIVE,
+            ) else {
+                continue;
+            };
+            table.take_group(&groups[i].key)
+        };
+        let mut migrated = 0;
+        let mut batches = Vec::new();
+        for req in taken {
+            let cancelled = req.is_cancelled();
+            if cancelled || req.is_expired(now) {
+                let (counter, msg) = if cancelled {
+                    (&victim.stats.cancelled, "cancelled")
+                } else {
+                    (&victim.stats.shed, "deadline exceeded before execution")
+                };
+                counter.inc();
+                let _ = req
+                    .reply
+                    .send(Err(anyhow::anyhow!("request {} {msg}", req.id)));
+                continue;
+            }
+            // Ownership transfer, accounted exactly like a queue steal
+            // (the victim admitted it, the thief answers it), plus the
+            // migration counter once per claimed group.
+            victim.stats.stolen.inc();
+            stats.steals.inc();
+            migrated += 1;
+            if let Some(batch) = pending.lock().unwrap().push(req) {
+                batches.push(batch);
+            }
+        }
+        if migrated > 0 {
+            stats.migrated_batches.inc();
+        }
+        return (migrated, batches);
+    }
+    (0, Vec::new())
 }
 
 /// Shared state behind both planes: the data plane ([`Fleet`]) and any
@@ -1304,6 +1436,20 @@ impl FleetController {
     /// Current membership epoch (bumps on add/remove/drain).
     pub fn epoch(&self) -> u64 {
         self.inner.snapshot().epoch
+    }
+
+    /// Merged fleet-wide stats snapshot — the same totals
+    /// [`Fleet::stats`] reports, exposed on the control plane so
+    /// background policy loops (the autoscaler) can sample load
+    /// without holding a data-plane handle.
+    pub fn stats(&self) -> ServingStats {
+        self.inner.merged_stats()
+    }
+
+    /// The submit-side stats the fleet records control-plane events on
+    /// (scale-ups/downs belong to the fleet, not to any one member).
+    pub(crate) fn local_stats(&self) -> Arc<ServingStats> {
+        Arc::clone(&self.inner.local)
     }
 
     /// Has the fleet shut down? (Control commands error afterwards;

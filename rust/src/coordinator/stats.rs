@@ -38,6 +38,17 @@ pub struct ServingStats {
     /// Tuned-tile hot swaps applied to this member
     /// ([`FleetController::retune`](super::FleetController::retune)).
     pub retunes: Counter,
+    /// Members added by the autoscaler's control loop
+    /// ([`Autoscaler`](super::Autoscaler); fleet-level, recorded on the
+    /// fleet-local stats, never on a member).
+    pub scale_ups: Counter,
+    /// Members drained and removed by the autoscaler's control loop
+    /// (fleet-level, like `scale_ups`).
+    pub scale_downs: Counter,
+    /// Whole pending batches this member claimed from a peer's batcher
+    /// (thief side; the individual requests are also counted in
+    /// `steals`/`stolen`, so `inflight` stays balanced).
+    pub migrated_batches: Counter,
     /// Batches executed.
     pub batches: Counter,
     /// Sum of batch sizes (mean batch size = batched / batches).
@@ -83,6 +94,9 @@ impl ServingStats {
         self.stolen.reset();
         self.infeasible.reset();
         self.retunes.reset();
+        self.scale_ups.reset();
+        self.scale_downs.reset();
+        self.migrated_batches.reset();
         self.batches.reset();
         self.batched.reset();
         self.latency.reset();
@@ -111,6 +125,9 @@ impl ServingStats {
         self.stolen.add(other.stolen.get());
         self.infeasible.add(other.infeasible.get());
         self.retunes.add(other.retunes.get());
+        self.scale_ups.add(other.scale_ups.get());
+        self.scale_downs.add(other.scale_downs.get());
+        self.migrated_batches.add(other.migrated_batches.get());
         self.batches.add(other.batches.get());
         self.batched.add(other.batched.get());
         self.latency.merge_from(&other.latency);
@@ -323,6 +340,29 @@ mod tests {
         assert_eq!(s.sim_cost_ns.get(), 3300 + 1400);
         assert!((s.sim_cost_ms() - 0.0047).abs() < 1e-9);
         assert_eq!(s.unpriced.get(), 2, "unsummable costs must be flagged");
+    }
+
+    #[test]
+    fn scale_and_migration_counters_merge_but_never_enter_inflight() {
+        let s = ServingStats::new();
+        s.admitted.add(4);
+        s.completed.add(4);
+        s.scale_ups.add(2);
+        s.scale_downs.add(1);
+        s.migrated_batches.add(3);
+        // Scale events and batch migrations are bookkeeping, not request
+        // ownership: the load signal must not move.
+        assert_eq!(s.inflight(), 0);
+        let total = ServingStats::new();
+        total.merge_from(&s);
+        total.merge_from(&s);
+        assert_eq!(total.scale_ups.get(), 4);
+        assert_eq!(total.scale_downs.get(), 2);
+        assert_eq!(total.migrated_batches.get(), 6);
+        total.reset();
+        assert_eq!(total.scale_ups.get(), 0);
+        assert_eq!(total.scale_downs.get(), 0);
+        assert_eq!(total.migrated_batches.get(), 0);
     }
 
     #[test]

@@ -45,6 +45,63 @@ impl Default for StealPolicy {
     }
 }
 
+/// Minimum number of live requests a pending group must hold before a
+/// whole-batch migration is worth the churn — a 1-request group moves
+/// nothing a plain queue steal wouldn't.
+pub const MIGRATE_MIN_LIVE: usize = 2;
+
+/// One pending group at a victim's batcher, as seen by a would-be
+/// migrating thief: the group key plus how many of its requests are
+/// still live (neither cancelled nor deadline-expired) at selection
+/// time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationGroup {
+    pub key: RequestKey,
+    pub live: usize,
+}
+
+/// Pick which of a victim's *pending batches* an idle thief should
+/// claim wholesale — the whole-group analogue of [`select_steals`],
+/// used when a freshly added member must become useful within one
+/// batch window instead of nibbling single queued requests.
+///
+/// Pure over a snapshot of the victim's pending table so its
+/// invariants are property-testable (see `rust/tests/properties.rs`):
+///
+/// 1. nothing is ever taken from a draining victim — its batcher is
+///    the one place that work is guaranteed to finish;
+/// 2. only groups the thief's router can serve are candidates;
+/// 3. cancelled and expired requests never count toward a group's
+///    worth (`live` excludes them by construction — the extraction
+///    path sheds them victim-side with the right error);
+/// 4. only groups with at least `min_live` live requests qualify, and
+///    the fullest such group wins (lowest index on ties), so migration
+///    fires once per batch window, not per request.
+///
+/// Returns the index of the winning group in `groups`, or `None`.
+pub fn select_batch_migration(
+    groups: &[MigrationGroup],
+    supports: impl Fn(&RequestKey) -> bool,
+    victim_draining: bool,
+    min_live: usize,
+) -> Option<usize> {
+    if victim_draining {
+        return None;
+    }
+    let floor = min_live.max(1);
+    let mut best: Option<usize> = None;
+    for (i, g) in groups.iter().enumerate() {
+        if g.live < floor || !supports(&g.key) {
+            continue;
+        }
+        match best {
+            Some(b) if groups[b].live >= g.live => {}
+            _ => best = Some(i),
+        }
+    }
+    best
+}
+
 /// Pick which of the victim's queued requests an idle thief should
 /// steal. Returns indices into `queue` (0 = oldest); see the module
 /// docs for the invariants. `supports` is the thief's own routing
@@ -130,6 +187,58 @@ mod tests {
         .collect();
         let picked = select_steals(&q, |_| true, Instant::now(), 2);
         assert_eq!(picked, vec![3, 1]);
+    }
+
+    #[test]
+    fn migration_picks_the_fullest_routable_group() {
+        let img = generate::gradient(16, 16);
+        let key = |scale| RequestKey::of(Interpolator::Bilinear, &img, scale);
+        let groups = [
+            MigrationGroup { key: key(2), live: 3 },
+            MigrationGroup { key: key(4), live: 6 }, // unroutable below
+            MigrationGroup { key: key(2), live: 5 },
+        ];
+        let pick = select_batch_migration(&groups, |k| k.scale == 2, false, MIGRATE_MIN_LIVE);
+        assert_eq!(pick, Some(2), "fullest routable group wins");
+        // First index wins ties.
+        let tied = [
+            MigrationGroup { key: key(2), live: 5 },
+            MigrationGroup { key: key(2), live: 5 },
+        ];
+        assert_eq!(
+            select_batch_migration(&tied, |_| true, false, MIGRATE_MIN_LIVE),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn migration_respects_drain_floor_and_routability() {
+        let img = generate::gradient(16, 16);
+        let g = [MigrationGroup {
+            key: RequestKey::of(Interpolator::Bilinear, &img, 2),
+            live: 4,
+        }];
+        assert_eq!(
+            select_batch_migration(&g, |_| true, true, MIGRATE_MIN_LIVE),
+            None,
+            "a draining victim is never migrated from"
+        );
+        assert_eq!(
+            select_batch_migration(&g, |_| false, false, MIGRATE_MIN_LIVE),
+            None,
+            "an unroutable group is never taken"
+        );
+        assert_eq!(
+            select_batch_migration(&g, |_| true, false, 5),
+            None,
+            "groups below the live floor are left to the victim"
+        );
+        // A zero floor still requires at least one live request.
+        let empty = [MigrationGroup {
+            key: RequestKey::of(Interpolator::Bilinear, &img, 2),
+            live: 0,
+        }];
+        assert_eq!(select_batch_migration(&empty, |_| true, false, 0), None);
     }
 
     #[test]

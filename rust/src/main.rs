@@ -26,8 +26,8 @@ use tilekit::bench::figures;
 use tilekit::cli::Args;
 use tilekit::config::Config;
 use tilekit::coordinator::{
-    FleetController, Priority, Request, RetuneDaemon, RetuneSpec, ServiceBuilder, SubmitError,
-    TilePolicy,
+    Autoscaler, AutoscalerUpdate, FleetController, Priority, Request, RetuneDaemon, RetuneSpec,
+    ServiceBuilder, StandbyMember, SubmitError, TilePolicy,
 };
 use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
@@ -44,7 +44,7 @@ const VALUE_FLAGS: &[&str] = &[
     "output", "seed", "strategy", "cache", "scheduler", "policy", "baseline", "max-regress",
     "watch-db", "watch-poll-ms", "watch-strategy", "listen", "listen-for-ms", "connect",
     "shards", "outcome", "deadline-ms", "priority", "mode", "steal", "steal-threshold",
-    "timeout-ms",
+    "timeout-ms", "standby-devices", "low", "high", "cooldown-ms",
 ];
 
 fn main() {
@@ -117,6 +117,7 @@ COMMANDS
   serve [--requests N] [--workers N] [--artifacts dir] [--mock] [--tile WxH]
         [--tiles t1,t2] [--batch-max N] [--no-steal]
         [--devices a,b] [--scheduler s] [--policy p]
+        [--autoscale] [--standby-devices c,d]
         [--watch-db f.json] [--watch-poll-ms N] [--watch-strategy s]
         [--listen host:port|unix:/p.sock] [--listen-for-ms N]
                                         serving demo: batched requests + stats.
@@ -140,14 +141,22 @@ COMMANDS
                                         database file changes (fleet only;
                                         --watch-strategy names the strategy
                                         key the refresh runs write, default
-                                        exhaustive)
-  fleet <topology|drain|retune> [--devices a,b] [--device id] [--requests N]
-        [--connect addr ...]            drive the typed control plane against a
+                                        exhaustive);
+                                        --autoscale closes the capacity loop:
+                                        a watermark policy over live stats
+                                        engages/parks --standby-devices (or
+                                        the [autoscaler] pool) through the
+                                        control plane (fleet only; knobs come
+                                        from the [autoscaler] config table)
+  fleet <topology|drain|retune|autoscaler> [--devices a,b] [--device id]
+        [--requests N] [--connect addr ...]
+                                        drive the typed control plane against a
                                         live demo fleet — or, with --connect,
                                         against a remote `serve --listen` fleet
                                         (more actions: stats, add-member,
                                         remove-member, set-scheduler,
-                                        set-admission, set-steal)
+                                        set-admission, set-steal,
+                                        autoscaler <status|enable|disable|set>)
                                         (see 'tilekit fleet --help')
   submit --connect addr [--kernel k] [--src WxH] [--scale N] [--requests N]
          [--priority interactive|batch] [--deadline-ms N] [--seed N]
@@ -891,9 +900,59 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             list
         }
     };
+    // --autoscale (or [autoscaler] enabled=true) closes the capacity
+    // loop: a background policy engages/parks standby members through
+    // the control plane. The pool comes from --standby-devices, else
+    // the config's [autoscaler] standby_devices.
+    let autoscale = args.has("autoscale") || cfg.autoscaler.enabled;
+    let standby_ids: Vec<String> = {
+        let list = args.get_list("standby-devices");
+        if list.is_empty() {
+            cfg.autoscaler.standby_devices.clone()
+        } else {
+            list
+        }
+    };
+    if !args.get_list("standby-devices").is_empty() && !autoscale {
+        bail!("--standby-devices needs --autoscale (or [autoscaler] enabled=true)");
+    }
+    if autoscale {
+        if device_ids.is_empty() {
+            bail!("--autoscale needs a device fleet: pass --devices a,b");
+        }
+        if standby_ids.is_empty() {
+            bail!(
+                "--autoscale needs a standby pool: pass --standby-devices c,d or set \
+                 [autoscaler] standby_devices in the config"
+            );
+        }
+        for (i, id) in standby_ids.iter().enumerate() {
+            // Scale-down removes by label, so a collision with a serving
+            // member would take the base fleet down with the burst
+            // capacity.
+            if device_ids.contains(id) {
+                bail!("standby device '{id}' is already a fleet member");
+            }
+            if standby_ids[..i].contains(id) {
+                bail!("--standby-devices lists '{id}' twice");
+            }
+        }
+    }
+    let standby_descs: Vec<DeviceDescriptor> = if autoscale {
+        standby_ids
+            .iter()
+            .map(|id| cfg.device(id).cloned())
+            .collect::<Result<_>>()?
+    } else {
+        Vec::new()
+    };
     // Set when the fleet serves per-device tuned tiles: the key the
     // --watch-db daemon watches in the tuning database.
     let mut watch_spec: Option<RetuneSpec> = None;
+    // The policy standby members resolve through when engaged — tuned
+    // alongside the base fleet so scale-up routes straight to the new
+    // member's best tile.
+    let mut standby_policy: Option<TilePolicy> = None;
     let mut builder = ServiceBuilder::new(&serving, &manifest);
     if device_ids.is_empty() {
         let policy = match fixed {
@@ -912,10 +971,14 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             Some(t) => TilePolicy::Fixed(t),
             None => {
                 // Tune the fleet on the manifest's richest shape so each
-                // device routes through its own best tile.
+                // device routes through its own best tile. Standby
+                // devices tune alongside: they serve the same shapes the
+                // moment the autoscaler engages them.
                 let (kernel, src, scale, tiles) = fleet_tuning_target(&manifest);
+                let mut tuned_devices = devices.clone();
+                tuned_devices.extend(standby_descs.iter().cloned());
                 let outcome = TuningSession::new(SimCostModel)
-                    .devices(devices.clone())
+                    .devices(tuned_devices)
                     .kernel(kernel)
                     .scale(scale)
                     .src((src.1, src.0)) // entry src is (h, w)
@@ -950,6 +1013,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 TilePolicy::PerDevice(outcome)
             }
         };
+        standby_policy = Some(policy.clone());
         for d in devices {
             builder = builder.device(d, make_backend(), policy.clone());
         }
@@ -959,6 +1023,30 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     if keys.is_empty() {
         bail!("no member can serve any manifest shape");
     }
+    // Start the capacity loop before any workload so the first burst
+    // already has the standby pool behind it.
+    let autoscaler = if autoscale {
+        let standby: Vec<StandbyMember> = standby_descs
+            .iter()
+            .map(|d| StandbyMember {
+                device: d.clone(),
+                backend: make_backend(),
+                policy: standby_policy
+                    .clone()
+                    .expect("autoscale requires a device fleet, validated above"),
+            })
+            .collect();
+        let mut opts = cfg.autoscaler.opts();
+        // Reaching this point means autoscaling was requested (flag or
+        // config table), so never start the loop parked just because the
+        // flag was given while the config says enabled = false.
+        opts.start_disabled = false;
+        let a = Autoscaler::spawn(svc.controller(), standby, opts)?;
+        println!("autoscaler: {}", a.handle().view().summary());
+        Some(a)
+    } else {
+        None
+    };
     // --watch-db: a RetuneDaemon polls the tuning database and drives
     // the control plane when a refresh flips a member's winner.
     let daemon = match args.get("watch-db") {
@@ -1005,10 +1093,11 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             })
         };
         let fleet = Arc::new(svc);
-        let server = tilekit::net::NetServer::bind(
+        let server = tilekit::net::NetServer::bind_with(
             &addr,
             Arc::clone(&fleet),
             factory,
+            autoscaler.as_ref().map(|a| a.handle()),
             cfg.net.server_config(),
         )?;
         println!(
@@ -1036,6 +1125,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         server.shutdown();
         if let Some(d) = daemon {
             d.stop();
+        }
+        if let Some(a) = autoscaler {
+            println!("autoscaler: {}", a.handle().view().summary());
+            a.stop();
         }
         println!("served: {}", fleet.stats().summary());
         // Reclaim the fleet for a clean worker join; connection threads
@@ -1162,6 +1255,10 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         );
         d.stop();
     }
+    if let Some(a) = autoscaler {
+        println!("\nautoscaler: {}", a.handle().view().summary());
+        a.stop();
+    }
     let stats = svc.shutdown();
     println!(
         "\ncompleted {ok}/{n_requests} ({rejected} rejected) in {:.1} ms",
@@ -1190,6 +1287,11 @@ ACTIONS (in-process demo)
                        stops picking it, in-flight work still completes
   retune               hot-swap one member's tuned tile mid-load through
                        FleetController::retune (no fleet drain)
+  autoscaler <status|enable|disable|set>
+                       spin up the demo fleet plus a standby pool
+                       (--standby-devices, default 8800gtx), spawn the
+                       capacity loop, and drive it through its live
+                       handle; `set` takes --low/--high/--cooldown-ms
 
 ACTIONS (remote, with --connect against a `serve --listen` fleet)
   topology             print the remote epoch-stamped topology
@@ -1211,6 +1313,11 @@ ACTIONS (remote, with --connect against a `serve --listen` fleet)
                        swap the remote admission policy
   set-steal --steal on|off [--steal-threshold N]
                        reconfigure remote work stealing
+  autoscaler <status|enable|disable|set>
+                       inspect or reconfigure the remote capacity loop
+                       (needs `serve --autoscale`); `set` takes
+                       --low/--high/--cooldown-ms and echoes the
+                       post-update state
 
 FLAGS
   --connect addr       drive a remote fleet instead of the in-process demo
@@ -1218,6 +1325,12 @@ FLAGS
   --device id          the member the action targets (demo default: the
                        first fleet device)
   --requests N         (demo) workload size (default 24)
+  --standby-devices c,d
+                       (autoscaler demo) the standby pool (default 8800gtx)
+  --low N / --high N   (autoscaler set) watermark band: per-member queue
+                       depth below/above which the loop parks/engages
+  --cooldown-ms N      (autoscaler set) hold after any scale action,
+                       converted to control-loop ticks at the loop's poll
 
 The demo fleet runs in-process over the built-in mock manifest: each
 command builds the fleet, applies the control-plane operation while
@@ -1262,9 +1375,17 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
         .positional
         .first()
         .map(String::as_str)
-        .ok_or_else(|| anyhow!("usage: tilekit fleet <topology|drain|retune> [flags]"))?;
+        .ok_or_else(|| {
+            anyhow!("usage: tilekit fleet <topology|drain|retune|autoscaler> [flags]")
+        })?;
+    if action == "autoscaler" {
+        return cmd_fleet_autoscaler_demo(args, cfg);
+    }
     if !matches!(action, "topology" | "drain" | "retune") {
-        bail!("unknown fleet action '{action}' (expected one of: topology, drain, retune)");
+        bail!(
+            "unknown fleet action '{action}' (expected one of: topology, drain, retune, \
+             autoscaler)"
+        );
     }
     let n_requests: usize = args.get_parsed_or("requests", 24)?;
     let device_ids: Vec<String> = {
@@ -1404,6 +1525,142 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Build an [`AutoscalerUpdate`] from `--low` / `--high` / `--cooldown-ms`.
+/// Cooldown converts to control-loop ticks at `poll_ms` — the loop's own
+/// sampling interval — so the handle (and the wire) never carry wall-clock.
+fn autoscaler_update_from_flags(args: &Args, poll_ms: f64) -> Result<AutoscalerUpdate> {
+    let update = AutoscalerUpdate {
+        enabled: None,
+        low_queue: args.get_parsed::<f64>("low")?,
+        high_queue: args.get_parsed::<f64>("high")?,
+        high_p99_us: None,
+        cooldown_ticks: match args.get_parsed::<f64>("cooldown-ms")? {
+            None => None,
+            Some(ms) => {
+                if ms.is_nan() || ms < 0.0 {
+                    bail!("--cooldown-ms must be >= 0 (got {ms})");
+                }
+                Some((ms / poll_ms.max(1.0)).ceil() as u32)
+            }
+        },
+    };
+    if update.is_empty() {
+        bail!("set needs at least one of --low, --high, --cooldown-ms");
+    }
+    Ok(update)
+}
+
+/// `tilekit fleet autoscaler <status|enable|disable|set>` without
+/// --connect: spin up the in-process demo fleet plus a standby pool,
+/// spawn the capacity loop, and drive the sub-action through the same
+/// [`AutoscalerHandle`](tilekit::coordinator::AutoscalerHandle) the net
+/// server answers `autoscaler`/`set_autoscaler` frames with.
+fn cmd_fleet_autoscaler_demo(args: &Args, cfg: &Config) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("status");
+    if !matches!(sub, "status" | "enable" | "disable" | "set") {
+        bail!(
+            "unknown autoscaler action '{sub}' (expected one of: status, enable, disable, set)"
+        );
+    }
+    let device_ids: Vec<String> = {
+        let list = args.get_list("devices");
+        if list.is_empty() {
+            vec!["gtx260".into(), "fermi".into()]
+        } else {
+            list
+        }
+    };
+    let standby_ids: Vec<String> = {
+        let list = args.get_list("standby-devices");
+        if list.is_empty() {
+            vec!["8800gtx".into()]
+        } else {
+            list
+        }
+    };
+    for id in &standby_ids {
+        if device_ids.contains(id) {
+            bail!("standby device '{id}' is already a fleet member");
+        }
+    }
+    let devices: Vec<DeviceDescriptor> = device_ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+    let standby_descs: Vec<DeviceDescriptor> = standby_ids
+        .iter()
+        .map(|id| cfg.device(id).cloned())
+        .collect::<Result<_>>()?;
+
+    let manifest = Manifest::fleet_demo();
+    let (kernel, src, scale, tiles) = fleet_tuning_target(&manifest);
+    let mut tuned = devices.clone();
+    tuned.extend(standby_descs.iter().cloned());
+    let outcome = TuningSession::new(SimCostModel)
+        .devices(tuned)
+        .kernel(kernel)
+        .scale(scale)
+        .src((src.1, src.0))
+        .tiles(tiles)
+        .run()?;
+    let serving = tilekit::config::ServingConfig {
+        workers: 2,
+        batch_max: Some(4),
+        batch_deadline_ms: 0.5,
+        queue_cap: 1024,
+        ..cfg.serving.clone()
+    };
+    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    for d in devices {
+        builder = builder.device(
+            d,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome.clone()),
+        );
+    }
+    let svc = builder.build()?;
+    let standby: Vec<StandbyMember> = standby_descs
+        .iter()
+        .map(|d| StandbyMember {
+            device: d.clone(),
+            backend: Arc::new(MockEngine::new()),
+            policy: TilePolicy::PerDevice(outcome.clone()),
+        })
+        .collect();
+    // The demo loop starts per the config table (parked by default), so
+    // `status` shows the resting state and `enable` has work to do.
+    let scaler = Autoscaler::spawn(svc.controller(), standby, cfg.autoscaler.opts())?;
+    let handle = scaler.handle();
+    println!(
+        "demo fleet: {} member(s) + {} standby, mock backends, per-device tuned tiles\n",
+        svc.member_count(),
+        standby_ids.len()
+    );
+    println!("before: {}", handle.view().summary());
+    match sub {
+        "status" => {}
+        "enable" => handle.apply(&AutoscalerUpdate {
+            enabled: Some(true),
+            ..Default::default()
+        })?,
+        "disable" => handle.apply(&AutoscalerUpdate {
+            enabled: Some(false),
+            ..Default::default()
+        })?,
+        "set" => {
+            let update = autoscaler_update_from_flags(args, cfg.autoscaler.poll_ms)?;
+            handle.apply(&update)?;
+        }
+        _ => unreachable!("validated above"),
+    }
+    if sub != "status" {
+        println!("after:  {}", handle.view().summary());
+    }
+    scaler.stop();
+    svc.shutdown();
+    Ok(())
+}
+
 fn print_remote_topology(topo: &tilekit::net::TopologyDesc) {
     println!("topology epoch {}:", topo.epoch);
     let mut t = tilekit::util::text::Table::new(vec![
@@ -1437,7 +1694,8 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
     let action = args.positional.first().map(String::as_str).ok_or_else(|| {
         anyhow!(
             "usage: tilekit fleet --connect <addr> <topology|stats|drain|retune|\
-             add-member|remove-member|set-scheduler|set-admission|set-steal> [flags]"
+             add-member|remove-member|set-scheduler|set-admission|set-steal|\
+             autoscaler> [flags]"
         )
     })?;
     let addr = ListenAddr::parse(addr)?;
@@ -1543,10 +1801,39 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                 if enabled { "enabled" } else { "disabled" }
             );
         }
+        "autoscaler" => {
+            let sub = args.positional.get(1).map(String::as_str).unwrap_or("status");
+            match sub {
+                "status" => {
+                    let desc = client.autoscaler().map_err(|e| anyhow!("{e}"))?;
+                    println!("{}", desc.summary());
+                }
+                "enable" | "disable" => {
+                    let update = AutoscalerUpdate {
+                        enabled: Some(sub == "enable"),
+                        ..Default::default()
+                    };
+                    let desc = client.set_autoscaler(&update).map_err(|e| anyhow!("{e}"))?;
+                    println!("{}", desc.summary());
+                }
+                "set" => {
+                    // The remote loop's own poll interval scales
+                    // --cooldown-ms into ticks.
+                    let poll_ms = client.autoscaler().map_err(|e| anyhow!("{e}"))?.poll_ms;
+                    let update = autoscaler_update_from_flags(args, poll_ms as f64)?;
+                    let desc = client.set_autoscaler(&update).map_err(|e| anyhow!("{e}"))?;
+                    println!("{}", desc.summary());
+                }
+                other => bail!(
+                    "unknown autoscaler action '{other}' (expected one of: status, \
+                     enable, disable, set)"
+                ),
+            }
+        }
         other => bail!(
             "unknown remote fleet action '{other}' (expected one of: topology, stats, \
              drain, retune, add-member, remove-member, set-scheduler, set-admission, \
-             set-steal)"
+             set-steal, autoscaler)"
         ),
     }
     Ok(())

@@ -19,12 +19,13 @@
 //! [`FleetClient::reconnect`] dials a fresh connection in place.
 
 use super::protocol::{
-    self, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError, WireStats,
+    self, AutoscalerDesc, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb,
+    WireError, WireStats,
 };
 use super::server::ListenAddr;
 use crate::autotuner::TuningOutcome;
 use crate::codec::json::Json;
-use crate::coordinator::{DrainMode, Request, SubmitError, TilePolicy};
+use crate::coordinator::{AutoscalerUpdate, DrainMode, Request, SubmitError, TilePolicy};
 use crate::image::Image;
 use crate::tiling::TileDim;
 use std::fmt;
@@ -485,6 +486,26 @@ impl FleetClient {
             Json::obj().set("enabled", enabled).set("threshold", threshold),
         )?;
         Ok(())
+    }
+
+    /// Snapshot the remote autoscaler's knobs and counters. A server
+    /// running without one answers not-found ([`ClientError::Remote`]
+    /// with kind `not-found`).
+    pub fn autoscaler(&self) -> Result<AutoscalerDesc, ClientError> {
+        let body = self.call(Verb::Autoscaler, Json::obj())?;
+        AutoscalerDesc::from_json(&body).map_err(ClientError::Protocol)
+    }
+
+    /// Apply a partial [`AutoscalerUpdate`] to the remote autoscaler;
+    /// returns the post-update state (no second round trip needed).
+    /// An invalid resulting band is a remote error, not a poisoned
+    /// connection.
+    pub fn set_autoscaler(&self, update: &AutoscalerUpdate) -> Result<AutoscalerDesc, ClientError> {
+        let body = self.call(
+            Verb::SetAutoscaler,
+            protocol::encode_autoscaler_update(update),
+        )?;
+        AutoscalerDesc::from_json(&body).map_err(ClientError::Protocol)
     }
 }
 

@@ -5,8 +5,8 @@
 //! through Rust. This module puts that fleet on a socket:
 //!
 //! * [`protocol`] — the versioned, line-delimited JSON wire format
-//!   (13 verbs spanning the data plane and the full controller surface,
-//!   typed error frames that round-trip
+//!   (15 verbs spanning the data plane, the full controller surface,
+//!   and the autoscaler, typed error frames that round-trip
 //!   [`SubmitError`](crate::coordinator::SubmitError)).
 //! * [`server`] — [`NetServer`]: binds TCP or a Unix socket over a live
 //!   fleet (`tilekit serve --listen`), bounded accept loop,
@@ -26,8 +26,8 @@ pub mod shard;
 
 pub use client::{ClientError, FleetClient, NetClientConfig, RemoteTicket};
 pub use protocol::{
-    ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError, WireErrorKind,
-    WireStats, PROTOCOL_VERSION,
+    AutoscalerDesc, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError,
+    WireErrorKind, WireStats, PROTOCOL_VERSION,
 };
 pub use server::{BackendFactory, ListenAddr, NetServer, NetServerConfig};
 pub use shard::{shape_hash, FrontTier, FrontTierConfig, Ring, ShardView};

@@ -31,6 +31,8 @@
 //! | `set_admission`    | `{name, timeout_ms?}`                        | `{ok}` |
 //! | `set_steal_config` | `{enabled, threshold}`                       | `{ok}` |
 //! | `stats`            | `{}`                                         | counters + latency |
+//! | `autoscaler`       | `{}`                                         | [`AutoscalerDesc`] |
+//! | `set_autoscaler`   | partial [`AutoscalerUpdate`] fields          | [`AutoscalerDesc`] |
 //!
 //! An image is `{"w":W,"h":H,"px":[row-major f32 ...]}`. A tile policy is
 //! `"portable"`, `{"fixed":"32x4"}`, or `{"per_device":<TuningOutcome>}`.
@@ -39,7 +41,8 @@
 
 use crate::codec::json::Json;
 use crate::coordinator::{
-    DrainMode, Priority, Request, RequestKey, ServingStats, SubmitError, TilePolicy, TopologyView,
+    AutoscalerUpdate, AutoscalerView, DrainMode, Priority, Request, RequestKey, ServingStats,
+    SubmitError, TilePolicy, TopologyView,
 };
 use crate::image::{Image, Interpolator};
 use crate::tiling::TileDim;
@@ -99,10 +102,12 @@ pub enum Verb {
     SetAdmission,
     SetStealConfig,
     Stats,
+    Autoscaler,
+    SetAutoscaler,
 }
 
 impl Verb {
-    pub const ALL: [Verb; 13] = [
+    pub const ALL: [Verb; 15] = [
         Verb::Submit,
         Verb::Wait,
         Verb::TryWait,
@@ -116,6 +121,8 @@ impl Verb {
         Verb::SetAdmission,
         Verb::SetStealConfig,
         Verb::Stats,
+        Verb::Autoscaler,
+        Verb::SetAutoscaler,
     ];
 
     pub fn name(self) -> &'static str {
@@ -133,6 +140,8 @@ impl Verb {
             Verb::SetAdmission => "set_admission",
             Verb::SetStealConfig => "set_steal_config",
             Verb::Stats => "stats",
+            Verb::Autoscaler => "autoscaler",
+            Verb::SetAutoscaler => "set_autoscaler",
         }
     }
 
@@ -801,6 +810,9 @@ pub struct WireStats {
     pub stolen: u64,
     pub infeasible: u64,
     pub retunes: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub migrated_batches: u64,
     pub batches: u64,
     pub batched: u64,
     pub sim_cost_ns: u64,
@@ -824,6 +836,9 @@ impl WireStats {
             stolen: s.stolen.get(),
             infeasible: s.infeasible.get(),
             retunes: s.retunes.get(),
+            scale_ups: s.scale_ups.get(),
+            scale_downs: s.scale_downs.get(),
+            migrated_batches: s.migrated_batches.get(),
             batches: s.batches.get(),
             batched: s.batched.get(),
             sim_cost_ns: s.sim_cost_ns.get(),
@@ -858,6 +873,9 @@ impl WireStats {
         self.stolen += o.stolen;
         self.infeasible += o.infeasible;
         self.retunes += o.retunes;
+        self.scale_ups += o.scale_ups;
+        self.scale_downs += o.scale_downs;
+        self.migrated_batches += o.migrated_batches;
         self.batches += o.batches;
         self.batched += o.batched;
         self.sim_cost_ns += o.sim_cost_ns;
@@ -876,6 +894,9 @@ impl WireStats {
             .set("stolen", self.stolen)
             .set("infeasible", self.infeasible)
             .set("retunes", self.retunes)
+            .set("scale_ups", self.scale_ups)
+            .set("scale_downs", self.scale_downs)
+            .set("migrated_batches", self.migrated_batches)
             .set("batches", self.batches)
             .set("batched", self.batched)
             .set("sim_cost_ns", self.sim_cost_ns)
@@ -908,6 +929,14 @@ impl WireStats {
             stolen: n("stolen")?,
             infeasible: n("infeasible")?,
             retunes: n("retunes")?,
+            // PR 7 additions: absent on frames from an older peer, so
+            // they default to 0 instead of failing the whole stats read.
+            scale_ups: j.get("scale_ups").and_then(Json::as_u64).unwrap_or(0),
+            scale_downs: j.get("scale_downs").and_then(Json::as_u64).unwrap_or(0),
+            migrated_batches: j
+                .get("migrated_batches")
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
             batches: n("batches")?,
             batched: n("batched")?,
             sim_cost_ns: n("sim_cost_ns")?,
@@ -936,6 +965,181 @@ impl WireStats {
             self.latency_p99_us,
         )
     }
+}
+
+// ------------------------------------------------- autoscaler frame --
+
+/// An [`AutoscalerView`] as seen over the wire: the `ok` payload of
+/// both the `autoscaler` and `set_autoscaler` verbs (the latter echoes
+/// the post-update state so the caller needs no second round trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscalerDesc {
+    pub enabled: bool,
+    pub low_queue: f64,
+    pub high_queue: f64,
+    pub high_p99_us: u64,
+    pub cooldown_ticks: u64,
+    pub poll_ms: u64,
+    pub min_members: u64,
+    pub max_members: u64,
+    pub standby_free: u64,
+    pub ticks: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub holds: u64,
+    pub errors: u64,
+}
+
+impl AutoscalerDesc {
+    pub fn of(v: &AutoscalerView) -> AutoscalerDesc {
+        AutoscalerDesc {
+            enabled: v.enabled,
+            low_queue: v.low_queue,
+            high_queue: v.high_queue,
+            high_p99_us: v.high_p99_us,
+            cooldown_ticks: v.cooldown_ticks as u64,
+            poll_ms: v.poll_ms,
+            min_members: v.min_members as u64,
+            max_members: v.max_members as u64,
+            standby_free: v.standby_free as u64,
+            ticks: v.ticks,
+            scale_ups: v.scale_ups,
+            scale_downs: v.scale_downs,
+            holds: v.holds,
+            errors: v.errors,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("enabled", self.enabled)
+            .set("low_queue", self.low_queue)
+            .set("high_queue", self.high_queue)
+            .set("high_p99_us", self.high_p99_us)
+            .set("cooldown_ticks", self.cooldown_ticks)
+            .set("poll_ms", self.poll_ms)
+            .set("min_members", self.min_members)
+            .set("max_members", self.max_members)
+            .set("standby_free", self.standby_free)
+            .set("ticks", self.ticks)
+            .set("scale_ups", self.scale_ups)
+            .set("scale_downs", self.scale_downs)
+            .set("holds", self.holds)
+            .set("errors", self.errors)
+    }
+
+    pub fn from_json(j: &Json) -> Result<AutoscalerDesc, ProtocolError> {
+        let n = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| malformed(format!("autoscaler missing '{k}'")))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| malformed(format!("autoscaler missing '{k}'")))
+        };
+        Ok(AutoscalerDesc {
+            enabled: j
+                .get("enabled")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| malformed("autoscaler missing 'enabled'"))?,
+            low_queue: f("low_queue")?,
+            high_queue: f("high_queue")?,
+            high_p99_us: n("high_p99_us")?,
+            cooldown_ticks: n("cooldown_ticks")?,
+            poll_ms: n("poll_ms")?,
+            min_members: n("min_members")?,
+            max_members: n("max_members")?,
+            standby_free: n("standby_free")?,
+            ticks: n("ticks")?,
+            scale_ups: n("scale_ups")?,
+            scale_downs: n("scale_downs")?,
+            holds: n("holds")?,
+            errors: n("errors")?,
+        })
+    }
+
+    /// One-line status, mirroring [`AutoscalerView::summary`].
+    pub fn summary(&self) -> String {
+        format!(
+            "autoscaler {} | members {}..={} standby_free={} | low={} high={} \
+             cooldown={} poll={}ms | ticks={} ups={} downs={} holds={} errors={}",
+            if self.enabled { "enabled" } else { "disabled" },
+            self.min_members,
+            self.max_members,
+            self.standby_free,
+            self.low_queue,
+            self.high_queue,
+            self.cooldown_ticks,
+            self.poll_ms,
+            self.ticks,
+            self.scale_ups,
+            self.scale_downs,
+            self.holds,
+            self.errors,
+        )
+    }
+}
+
+/// Encode a partial [`AutoscalerUpdate`] as the `set_autoscaler`
+/// request payload — only the fields being changed appear on the wire.
+pub fn encode_autoscaler_update(u: &AutoscalerUpdate) -> Json {
+    let mut j = Json::obj();
+    if let Some(e) = u.enabled {
+        j = j.set("enabled", e);
+    }
+    if let Some(v) = u.low_queue {
+        j = j.set("low_queue", v);
+    }
+    if let Some(v) = u.high_queue {
+        j = j.set("high_queue", v);
+    }
+    if let Some(v) = u.high_p99_us {
+        j = j.set("high_p99_us", v);
+    }
+    if let Some(v) = u.cooldown_ticks {
+        j = j.set("cooldown_ticks", v as u64);
+    }
+    j
+}
+
+/// Decode what [`encode_autoscaler_update`] wrote. Absent fields stay
+/// `None` (unchanged); present fields must have the right type.
+pub fn decode_autoscaler_update(j: &Json) -> Result<AutoscalerUpdate, ProtocolError> {
+    let mut u = AutoscalerUpdate::default();
+    if let Some(e) = j.get("enabled") {
+        u.enabled = Some(
+            e.as_bool()
+                .ok_or_else(|| malformed("'enabled' must be a bool"))?,
+        );
+    }
+    for (key, slot) in [
+        ("low_queue", &mut u.low_queue),
+        ("high_queue", &mut u.high_queue),
+    ] {
+        if let Some(v) = j.get(key) {
+            *slot = Some(
+                v.as_f64()
+                    .ok_or_else(|| malformed(format!("'{key}' must be a number")))?,
+            );
+        }
+    }
+    if let Some(v) = j.get("high_p99_us") {
+        u.high_p99_us = Some(
+            v.as_u64()
+                .ok_or_else(|| malformed("'high_p99_us' must be a non-negative integer"))?,
+        );
+    }
+    if let Some(v) = j.get("cooldown_ticks") {
+        let raw = v
+            .as_u64()
+            .ok_or_else(|| malformed("'cooldown_ticks' must be a non-negative integer"))?;
+        let ticks = u32::try_from(raw)
+            .map_err(|_| malformed(format!("cooldown_ticks {raw} does not fit in u32")))?;
+        u.cooldown_ticks = Some(ticks);
+    }
+    Ok(u)
 }
 
 #[cfg(test)]
@@ -1235,5 +1439,112 @@ mod tests {
         assert_eq!(merged.completed, 8);
         assert_eq!(merged.latency_count, 2);
         assert!(merged.summary().contains("admitted=10"));
+    }
+
+    #[test]
+    fn stats_carry_scale_and_migration_counters() {
+        let s = ServingStats::new();
+        s.scale_ups.add(3);
+        s.scale_downs.add(2);
+        s.migrated_batches.add(7);
+        let w = WireStats::of(&s);
+        let back = WireStats::from_json(&w.to_json()).unwrap();
+        assert_eq!(back, w);
+        let mut merged = back.clone();
+        merged.merge_from(&w);
+        assert_eq!(merged.scale_ups, 6);
+        assert_eq!(merged.scale_downs, 4);
+        assert_eq!(merged.migrated_batches, 14);
+    }
+
+    #[test]
+    fn stats_from_an_older_peer_default_the_new_counters() {
+        // A pre-autoscaler peer never writes the PR 7 counters; the
+        // frame must still decode, with those counters at zero.
+        let mut w = WireStats::of(&ServingStats::new());
+        w.admitted = 5;
+        w.scale_ups = 9;
+        let old = match w.to_json() {
+            Json::Obj(pairs) => Json::Obj(
+                pairs
+                    .into_iter()
+                    .filter(|(k, _)| {
+                        !matches!(
+                            k.as_str(),
+                            "scale_ups" | "scale_downs" | "migrated_batches"
+                        )
+                    })
+                    .collect(),
+            ),
+            other => other,
+        };
+        let back = WireStats::from_json(&old).unwrap();
+        assert_eq!(back.admitted, 5);
+        assert_eq!(back.scale_ups, 0);
+        assert_eq!(back.scale_downs, 0);
+        assert_eq!(back.migrated_batches, 0);
+    }
+
+    #[test]
+    fn autoscaler_desc_round_trips() {
+        let d = AutoscalerDesc {
+            enabled: true,
+            low_queue: 1.5,
+            high_queue: 8.0,
+            high_p99_us: 250_000,
+            cooldown_ticks: 5,
+            poll_ms: 100,
+            min_members: 1,
+            max_members: 3,
+            standby_free: 2,
+            ticks: 40,
+            scale_ups: 2,
+            scale_downs: 1,
+            holds: 37,
+            errors: 0,
+        };
+        let back = AutoscalerDesc::from_json(&d.to_json()).unwrap();
+        assert_eq!(back, d);
+        let s = back.summary();
+        assert!(s.contains("autoscaler enabled"), "{s}");
+        assert!(s.contains("members 1..=3"), "{s}");
+        assert!(AutoscalerDesc::from_json(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn autoscaler_update_round_trips_sparsely() {
+        // Full update survives.
+        let full = AutoscalerUpdate {
+            enabled: Some(false),
+            low_queue: Some(0.5),
+            high_queue: Some(12.0),
+            high_p99_us: Some(50_000),
+            cooldown_ticks: Some(9),
+        };
+        let j = encode_autoscaler_update(&full);
+        assert_eq!(decode_autoscaler_update(&j).unwrap(), full);
+        // Absent fields stay None; an empty payload is the empty update.
+        let sparse = AutoscalerUpdate {
+            high_queue: Some(4.0),
+            ..AutoscalerUpdate::default()
+        };
+        let back = decode_autoscaler_update(&encode_autoscaler_update(&sparse)).unwrap();
+        assert_eq!(back, sparse);
+        assert!(decode_autoscaler_update(&Json::obj()).unwrap().is_empty());
+        // Wrong types are typed errors, not panics or silent Nones.
+        for bad in [
+            Json::obj().set("enabled", 1u64),
+            Json::obj().set("low_queue", "fast"),
+            Json::obj().set("cooldown_ticks", -1.0),
+            Json::obj().set("cooldown_ticks", 4294967296.0),
+        ] {
+            assert!(
+                matches!(
+                    decode_autoscaler_update(&bad),
+                    Err(ProtocolError::Malformed(_))
+                ),
+                "{bad:?} should be malformed"
+            );
+        }
     }
 }

@@ -20,11 +20,11 @@
 //! a remote caller to resolve before connections are torn down.
 
 use super::protocol::{
-    self, encode_topology, read_frame_line, ProtocolError, RequestFrame, ResponseFrame, Verb,
-    WireError, WireErrorKind, WireStats, DEFAULT_MAX_LINE_BYTES,
+    self, encode_topology, read_frame_line, AutoscalerDesc, ProtocolError, RequestFrame,
+    ResponseFrame, Verb, WireError, WireErrorKind, WireStats, DEFAULT_MAX_LINE_BYTES,
 };
 use crate::codec::json::Json;
-use crate::coordinator::{Fleet, FleetController, SubmitError, Ticket};
+use crate::coordinator::{AutoscalerHandle, Fleet, FleetController, SubmitError, Ticket};
 use crate::device::DeviceDescriptor;
 use crate::runtime::ResizeBackend;
 use anyhow::{anyhow, Context, Result};
@@ -175,6 +175,9 @@ struct ServerShared {
     fleet: Arc<Fleet>,
     controller: FleetController,
     backends: BackendFactory,
+    /// Live autoscaler knobs, when `serve --autoscale` started one —
+    /// answers the `autoscaler`/`set_autoscaler` verbs.
+    autoscaler: Option<AutoscalerHandle>,
     cfg: NetServerConfig,
     /// Set by [`NetServer::shutdown`]: refuse submits, stop accepting.
     closed: AtomicBool,
@@ -202,6 +205,20 @@ impl NetServer {
         addr: &ListenAddr,
         fleet: Arc<Fleet>,
         backends: BackendFactory,
+        cfg: NetServerConfig,
+    ) -> Result<NetServer> {
+        NetServer::bind_with(addr, fleet, backends, None, cfg)
+    }
+
+    /// [`bind`](NetServer::bind), plus an optional [`AutoscalerHandle`]
+    /// so remote callers can inspect and reconfigure the capacity loop
+    /// (`tilekit fleet autoscaler ... --connect`). Without one, the
+    /// `autoscaler`/`set_autoscaler` verbs answer not-found.
+    pub fn bind_with(
+        addr: &ListenAddr,
+        fleet: Arc<Fleet>,
+        backends: BackendFactory,
+        autoscaler: Option<AutoscalerHandle>,
         cfg: NetServerConfig,
     ) -> Result<NetServer> {
         let (listener, local, sock_path) = match addr {
@@ -244,6 +261,7 @@ impl NetServer {
             controller: fleet.controller(),
             fleet,
             backends,
+            autoscaler,
             cfg,
             closed: AtomicBool::new(false),
             open_tickets: AtomicU64::new(0),
@@ -739,6 +757,23 @@ fn dispatch(
             }
         }
         Verb::Stats => ok(id, WireStats::of(&shared.fleet.stats()).to_json()),
+        Verb::Autoscaler => match &shared.autoscaler {
+            Some(h) => ok(id, AutoscalerDesc::of(&h.view()).to_json()),
+            None => err(id, WireErrorKind::NotFound, "no autoscaler running"),
+        },
+        Verb::SetAutoscaler => {
+            let Some(h) = &shared.autoscaler else {
+                return err(id, WireErrorKind::NotFound, "no autoscaler running");
+            };
+            let update = match protocol::decode_autoscaler_update(p) {
+                Ok(u) => u,
+                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+            };
+            match h.apply(&update) {
+                Ok(()) => ok(id, AutoscalerDesc::of(&h.view()).to_json()),
+                Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
+            }
+        }
     }
 }
 

@@ -75,14 +75,36 @@ impl Pcg32 {
         lo + self.below(hi - lo + 1)
     }
 
-    /// Uniform usize in `[lo, hi]` (inclusive). Panics if the span exceeds
-    /// `u32::MAX`, which no caller in this crate approaches.
+    /// Uniform in `[0, bound)` for 64-bit bounds — the wide analogue of
+    /// [`below`](Self::below), same Lemire multiply-shift rejection.
+    /// `bound` must be non-zero.
+    #[inline]
+    pub fn below_u64(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "below_u64(0) is meaningless");
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            let m = (r as u128) * (bound as u128);
+            if (m as u64) >= threshold {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive). Wide spans (property
+    /// tests draw epochs and nanosecond costs up to `1 << 40`) take the
+    /// 64-bit path; narrow spans keep the cheaper single-u32 draw.
     #[inline]
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         debug_assert!(lo <= hi);
         let span = (hi - lo) as u64;
-        assert!(span <= u32::MAX as u64);
-        lo + self.below(span as u32 + 1) as usize
+        if span < u32::MAX as u64 {
+            return lo + self.below(span as u32 + 1) as usize;
+        }
+        if span == u64::MAX {
+            return self.next_u64() as usize;
+        }
+        lo + self.below_u64(span + 1) as usize
     }
 
     /// Uniform f64 in `[0, 1)` with 53 bits of precision.
@@ -150,6 +172,28 @@ mod tests {
             seen[v as usize] = true;
         }
         assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn range_usize_handles_wide_spans() {
+        let mut g = Pcg32::seeded(11);
+        // Narrow span: inclusive bounds hold.
+        for _ in 0..200 {
+            let v = g.range_usize(3, 7);
+            assert!((3..=7).contains(&v));
+        }
+        // Spans past u32::MAX used to assert; now they sample uniformly.
+        let hi = 1usize << 40;
+        let mut above_u32 = false;
+        for _ in 0..64 {
+            let v = g.range_usize(0, hi);
+            assert!(v <= hi);
+            above_u32 |= v > u32::MAX as usize;
+        }
+        assert!(above_u32, "wide draws should reach past u32::MAX");
+        // The exact-boundary span routes through the wide path too.
+        let v = g.range_usize(0, u32::MAX as usize);
+        assert!(v <= u32::MAX as usize);
     }
 
     #[test]

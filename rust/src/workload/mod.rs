@@ -14,4 +14,4 @@ pub mod replay;
 pub mod trace;
 
 pub use replay::{replay, ReplayOutcome};
-pub use trace::{Arrival, Trace, TraceEvent};
+pub use trace::{Arrival, LoadPhase, Trace, TraceEvent};

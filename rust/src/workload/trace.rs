@@ -20,6 +20,15 @@ pub enum Arrival {
     Bursty { rate: f64, burst: u32 },
 }
 
+/// One phase of a time-varying load profile: Poisson arrivals at
+/// `rate` requests/second for `dur_us`. A phase with `rate = 0` is a
+/// silent gap (the clock still advances).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadPhase {
+    pub rate: f64,
+    pub dur_us: u64,
+}
+
 /// One trace event: a request shape arriving at `t_us` after start.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceEvent {
@@ -73,6 +82,72 @@ impl Trace {
             });
         }
         Trace { events }
+    }
+
+    /// Generate a trace whose arrival rate changes over time: one
+    /// Poisson process per [`LoadPhase`], on a single continuous clock
+    /// (phase boundaries advance the clock even when a phase generates
+    /// nothing). Deterministic in `seed`. This is the load shape fixed
+    /// capacity cannot be right for — the autoscaler's proving ground.
+    pub fn phased(keys: &[RequestKey], phases: &[LoadPhase], seed: u64) -> Trace {
+        assert!(!keys.is_empty(), "need at least one request shape");
+        let mut rng = Pcg32::new(seed, 0x7ACE);
+        let mut events = Vec::new();
+        let mut base_us = 0f64;
+        for ph in phases {
+            assert!(
+                ph.rate.is_finite() && ph.rate >= 0.0,
+                "phase rate must be finite and >= 0"
+            );
+            let end = base_us + ph.dur_us as f64;
+            if ph.rate > 0.0 {
+                let mut t = base_us;
+                loop {
+                    let u = rng.f64().max(1e-12);
+                    t += -u.ln() / ph.rate * 1e6;
+                    if t >= end {
+                        break;
+                    }
+                    events.push(TraceEvent {
+                        t_us: t as u64,
+                        key: *rng.pick(keys),
+                        seed: rng.next_u64() & ((1u64 << 53) - 1),
+                    });
+                }
+            }
+            base_us = end;
+        }
+        Trace { events }
+    }
+
+    /// A diurnal/burst profile: `cycles` alternations of a quiet phase
+    /// (`quiet_rate` rps) and a burst phase (`burst_rate` rps), each
+    /// `phase_us` long, ending on a trailing quiet phase so scale-down
+    /// is observable inside the trace window. Deterministic in `seed`.
+    pub fn diurnal(
+        keys: &[RequestKey],
+        quiet_rate: f64,
+        burst_rate: f64,
+        phase_us: u64,
+        cycles: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut phases = Vec::with_capacity(cycles * 2 + 1);
+        for _ in 0..cycles {
+            phases.push(LoadPhase {
+                rate: quiet_rate,
+                dur_us: phase_us,
+            });
+            phases.push(LoadPhase {
+                rate: burst_rate,
+                dur_us: phase_us,
+            });
+        }
+        phases.push(LoadPhase {
+            rate: quiet_rate,
+            dur_us: phase_us,
+        });
+        Self::phased(keys, &phases, seed)
     }
 
     /// Trace duration (arrival of the last event), µs.
@@ -215,6 +290,67 @@ mod tests {
         for chunk in t.events.chunks(3) {
             assert!(chunk.iter().all(|e| e.t_us == chunk[0].t_us));
         }
+    }
+
+    #[test]
+    fn phased_rates_track_their_phases() {
+        let phases = [
+            LoadPhase {
+                rate: 100.0,
+                dur_us: 1_000_000,
+            },
+            LoadPhase {
+                rate: 0.0,
+                dur_us: 500_000,
+            },
+            LoadPhase {
+                rate: 2000.0,
+                dur_us: 1_000_000,
+            },
+        ];
+        let t = Trace::phased(&keys(), &phases, 9);
+        assert_eq!(t, Trace::phased(&keys(), &phases, 9), "deterministic");
+        for w in t.events.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "one continuous clock");
+        }
+        let in_window = |lo: u64, hi: u64| {
+            t.events
+                .iter()
+                .filter(|e| e.t_us >= lo && e.t_us < hi)
+                .count()
+        };
+        let quiet = in_window(0, 1_000_000);
+        let gap = in_window(1_000_000, 1_500_000);
+        let burst = in_window(1_500_000, 2_500_000);
+        assert!((50..200).contains(&quiet), "quiet phase ~100 rps: {quiet}");
+        assert_eq!(gap, 0, "a zero-rate phase is silent");
+        assert!(
+            (1400..2800).contains(&burst),
+            "burst phase ~2000 rps: {burst}"
+        );
+        assert!(t.span_us() < 2_500_000, "no event past the last phase");
+    }
+
+    #[test]
+    fn diurnal_alternates_quiet_and_burst() {
+        let t = Trace::diurnal(&keys(), 50.0, 1500.0, 400_000, 2, 4);
+        // Phases: quiet burst quiet burst quiet, 400ms each.
+        let in_phase = |i: u64| {
+            t.events
+                .iter()
+                .filter(|e| e.t_us >= i * 400_000 && e.t_us < (i + 1) * 400_000)
+                .count()
+        };
+        for burst_phase in [1u64, 3] {
+            assert!(
+                in_phase(burst_phase) > 4 * in_phase(burst_phase - 1).max(1),
+                "burst phase {burst_phase} must dwarf its quiet predecessor"
+            );
+        }
+        assert!(
+            t.span_us() < 5 * 400_000,
+            "trailing quiet phase bounds the trace"
+        );
     }
 
     #[test]

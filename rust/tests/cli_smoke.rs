@@ -589,3 +589,157 @@ fn serve_listen_loopback_smoke() {
     child.kill().ok();
     child.wait().ok();
 }
+
+/// Spawn `tilekit serve --listen 127.0.0.1:0 <extra>` and return the
+/// child plus the bound address token read off its stdout.
+fn spawn_listener(extra: &[&str]) -> (std::process::Child, String) {
+    use std::io::BufRead;
+    let bin = binary().unwrap();
+    let mut args = vec![
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi",
+        "--listen", "127.0.0.1:0", "--listen-for-ms", "30000",
+    ];
+    args.extend_from_slice(extra);
+    let mut child = Command::new(bin)
+        .args(&args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn tilekit serve --listen");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read server stdout");
+        assert!(n > 0, "server exited before printing the bound address");
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest.split_whitespace().next().unwrap().to_string();
+        }
+    };
+    (child, addr)
+}
+
+#[test]
+fn serve_autoscale_flag_validation() {
+    if binary().is_none() {
+        return;
+    }
+    // A standby pool without the loop is a configuration mistake.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--standby-devices", "8800gtx",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("--standby-devices needs --autoscale"), "{err}");
+    // The loop needs a device fleet to scale...
+    let (_, err, ok) = run(&["serve", "--mock", "--artifacts", "no-such-dir", "--autoscale"]);
+    assert!(!ok);
+    assert!(err.contains("needs a device fleet"), "{err}");
+    // ...and a pool to scale with.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--autoscale",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("needs a standby pool"), "{err}");
+    // A standby id already serving, or listed twice, fails loudly.
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--autoscale", "--standby-devices", "fermi",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("already a fleet member"), "{err}");
+    let (_, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--autoscale",
+        "--standby-devices", "8800gtx,8800gtx",
+    ]);
+    assert!(!ok);
+    assert!(err.contains("twice"), "{err}");
+}
+
+#[test]
+fn serve_autoscale_demo_reports_the_loop() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, err, ok) = run(&[
+        "serve", "--mock", "--artifacts", "no-such-dir",
+        "--devices", "gtx260,fermi", "--autoscale", "--standby-devices", "8800gtx",
+        "--requests", "16",
+    ]);
+    assert!(ok, "stderr: {err}");
+    // The flag arms the loop (never parked) over a min..=max band of
+    // fleet size..fleet size + pool.
+    assert!(out.contains("autoscaler enabled"), "{out}");
+    assert!(out.contains("members 2..=3"), "{out}");
+    assert!(out.contains("completed 16/16"), "{out}");
+}
+
+#[test]
+fn fleet_autoscaler_demo_status_enable_set() {
+    if binary().is_none() {
+        return;
+    }
+    // Default action is `status`; the demo loop starts parked per the
+    // config table, with the default 8800gtx standby pool.
+    let (out, err, ok) = run(&["fleet", "autoscaler"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("demo fleet: 2 member(s) + 1 standby"), "{out}");
+    assert!(out.contains("before: autoscaler disabled"), "{out}");
+    assert!(out.contains("standby_free=1"), "{out}");
+    // `enable` arms it and echoes the post-update state.
+    let (out, err, ok) = run(&["fleet", "autoscaler", "enable"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("after:  autoscaler enabled"), "{out}");
+    // `set` retunes the band; --cooldown-ms converts against the
+    // config's poll (default 100ms -> 3 ticks).
+    let (out, err, ok) = run(&[
+        "fleet", "autoscaler", "set", "--low", "2", "--high", "9", "--cooldown-ms", "300",
+    ]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("low=2 high=9"), "{out}");
+    assert!(out.contains("cooldown=3"), "{out}");
+    // Validation: an empty `set`, an unknown action, a pool id that
+    // already serves.
+    let (_, err, ok) = run(&["fleet", "autoscaler", "set"]);
+    assert!(!ok);
+    assert!(err.contains("set needs at least one"), "{err}");
+    let (_, err, ok) = run(&["fleet", "autoscaler", "explode"]);
+    assert!(!ok);
+    assert!(err.contains("unknown autoscaler action 'explode'"), "{err}");
+    let (_, err, ok) = run(&["fleet", "autoscaler", "status", "--standby-devices", "fermi"]);
+    assert!(!ok);
+    assert!(err.contains("already a fleet member"), "{err}");
+}
+
+#[test]
+fn fleet_autoscaler_over_the_wire() {
+    if binary().is_none() {
+        return;
+    }
+    // A listener with the loop armed answers status/set/disable.
+    let (mut child, addr) = spawn_listener(&["--autoscale", "--standby-devices", "8800gtx"]);
+    let (out, err, ok) = run(&["fleet", "--connect", &addr, "autoscaler"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("autoscaler enabled"), "{out}");
+    assert!(out.contains("members 2..=3"), "{out}");
+    let (out, err, ok) = run(&["fleet", "--connect", &addr, "autoscaler", "set", "--high", "12"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("high=12"), "{out}");
+    let (out, err, ok) = run(&["fleet", "--connect", &addr, "autoscaler", "disable"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("autoscaler disabled"), "{out}");
+    child.kill().ok();
+    child.wait().ok();
+
+    // A listener WITHOUT the loop reports the typed not-found error.
+    let (mut child, addr) = spawn_listener(&[]);
+    let (_, err, ok) = run(&["fleet", "--connect", &addr, "autoscaler"]);
+    assert!(!ok);
+    assert!(err.contains("no autoscaler running"), "{err}");
+    child.kill().ok();
+    child.wait().ok();
+}

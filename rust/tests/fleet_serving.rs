@@ -12,15 +12,15 @@ use tilekit::autotuner::{
 };
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    Biased, BlockWithTimeout, CostModelEta, DrainMode, Priority, RejectWhenFull, Request,
-    RequestKey, RetuneDaemon, RetuneSpec, RoundRobin, Service, ServiceBuilder, SubmitError,
-    TilePolicy,
+    Autoscaler, AutoscalerOpts, Biased, BlockWithTimeout, CostModelEta, DrainMode, Priority,
+    RejectWhenFull, Request, RequestKey, RetuneDaemon, RetuneSpec, RoundRobin, Service,
+    ServiceBuilder, StandbyMember, SubmitError, TilePolicy,
 };
 use tilekit::device::{find_device, DeviceDescriptor};
 use tilekit::image::{generate, Interpolator};
 use tilekit::runtime::{Manifest, MockEngine};
 use tilekit::tiling::TileDim;
-use tilekit::workload::{replay, Arrival, Trace};
+use tilekit::workload::{replay, Arrival, LoadPhase, Trace};
 
 /// Serving manifest for the fleet tests: the shared fixture — one
 /// bilinear 64x64/s2 shape at the two tile variants (16x8, 32x16)
@@ -833,4 +833,218 @@ fn drained_member_takes_no_new_work_but_finishes_old() {
     let stats = svc.shutdown();
     assert_eq!(stats.completed.get(), 24);
     assert_eq!(stats.failed.get(), 0);
+}
+
+// ---------------------------------------------------------- autoscaler --
+
+/// A standby device the simulator prices ~`factor`x above `base`: same
+/// architecture (occupancy and tuning behave identically), clocks cut
+/// by `factor`, so per-launch sim ms scales up by ~`factor` across the
+/// compute, memory, and latency terms alike. Deterministic cost
+/// asymmetry without depending on registry specifics.
+fn surge_spare(base: &DeviceDescriptor, factor: f64) -> DeviceDescriptor {
+    let mut d = base.clone();
+    d.id = "spare".into();
+    d.name = "Surge Spare".into();
+    d.sp_clock_mhz /= factor;
+    d.mem_clock_mhz /= factor;
+    d
+}
+
+/// PR 7 acceptance: under a quiet-heavy burst trace, the autoscaled
+/// fleet beats EVERY fixed fleet size (1..=standby-pool max) on
+/// aggregate sim cost x interactive p99, with zero lost tickets across
+/// every scale event and both scale directions exercised.
+///
+/// The geometry that makes each leg decidable:
+/// * the burst (4400 rps) exceeds even the two-member throughput
+///   (~4000 rps at 1 ms mock batches of 2), so the autoscaled fleet and
+///   fixed-2 queue nearly identically through it (common-mode tail)
+///   while fixed-1 (~2000 rps) takes a catastrophic backlog;
+/// * the quiet phases dominate the event count, so fixed-2 pays the
+///   spare's ~20x launch premium on half of ALL traffic while the
+///   autoscaled fleet pays it only for the rush.
+#[test]
+fn autoscaled_fleet_beats_every_fixed_size_under_burst_trace() {
+    let manifest = fleet_manifest();
+    let base = find_device("fermi").unwrap();
+    let spare = surge_spare(&base, 20.0);
+    let outcome = TuningSession::new(SimCostModel)
+        .devices([base.clone(), spare.clone()])
+        .kernel(Interpolator::Bilinear)
+        .scale(2)
+        .src((64, 64))
+        .tiles([TileDim::new(16, 8), TileDim::new(32, 16)])
+        .run()
+        .unwrap();
+    let ms_of = |id: &str| outcome.device(id).unwrap().best_ms;
+    assert!(
+        ms_of("spare") > 3.0 * ms_of("fermi"),
+        "the spare must be decisively pricier per launch (got {} vs {})",
+        ms_of("spare"),
+        ms_of("fermi")
+    );
+
+    // 2.55s of traffic: 700 rps quiet, one 150ms burst at 4400 rps.
+    let keys = vec![bilinear_key()];
+    let phases = [
+        LoadPhase { rate: 700.0, dur_us: 1_200_000 },
+        LoadPhase { rate: 4400.0, dur_us: 150_000 },
+        LoadPhase { rate: 700.0, dur_us: 1_200_000 },
+    ];
+    let trace = Trace::phased(&keys, &phases, 7);
+
+    let config = ServingConfig {
+        workers: 1,
+        batch_max: Some(2),
+        batch_deadline_ms: 0.2,
+        queue_cap: 4096,
+        work_stealing: true,
+        steal_threshold: 2,
+        ..ServingConfig::default()
+    };
+    let delay = Duration::from_millis(1);
+
+    // Serve the identical trace; `standby` parks the spare behind the
+    // control loop instead of building it in. Returns (sim cost ms,
+    // interactive p99 us, scale_ups, scale_downs).
+    let run = |members: &[&DeviceDescriptor], standby: bool| -> (f64, f64, u64, u64) {
+        let mut builder = ServiceBuilder::new(&config, &manifest)
+            .scheduler(RoundRobin::default())
+            .admission(RejectWhenFull);
+        for d in members {
+            builder = builder.device(
+                (*d).clone(),
+                Arc::new(MockEngine::with_delay(delay)),
+                TilePolicy::PerDevice(outcome.clone()),
+            );
+        }
+        let svc = builder.build().unwrap();
+        let scaler = standby.then(|| {
+            Autoscaler::spawn(
+                svc.controller(),
+                vec![StandbyMember {
+                    device: spare.clone(),
+                    backend: Arc::new(MockEngine::with_delay(delay)),
+                    policy: TilePolicy::PerDevice(outcome.clone()),
+                }],
+                AutoscalerOpts {
+                    poll: Duration::from_millis(2),
+                    low_queue: 0.5,
+                    high_queue: 6.0,
+                    high_p99_us: 0,
+                    cooldown_ticks: 60,
+                    start_disabled: false,
+                },
+            )
+            .unwrap()
+        });
+        let out = replay(&svc, &trace);
+        if let Some(a) = scaler {
+            a.stop();
+        }
+        let stats = svc.shutdown();
+        // Zero lost tickets across every scale event: all requests the
+        // trace offered resolved successfully — none rejected, none
+        // failed, none dropped by an engage or a graceful retire.
+        assert_eq!(out.completed, out.offered, "lost work: {}", out.summary());
+        assert_eq!(out.failed, 0, "{}", out.summary());
+        assert_eq!(out.rejected, 0, "{}", out.summary());
+        assert_eq!(stats.unpriced.get(), 0, "costs must be comparable");
+        (
+            stats.sim_cost_ms(),
+            out.latency.percentile_us(99.0),
+            stats.scale_ups.get(),
+            stats.scale_downs.get(),
+        )
+    };
+
+    let (c1, p1, u1, d1) = run(&[&base], false);
+    let (c2, p2, u2, d2) = run(&[&base, &spare], false);
+    let (ca, pa, ups, downs) = run(&[&base], true);
+    assert_eq!((u1, d1, u2, d2), (0, 0, 0, 0), "fixed fleets never scale");
+    assert!(ups > 0, "the burst must engage the spare");
+    assert!(downs > 0, "the trailing quiet must park it again");
+
+    // Each individually winnable leg, then the product against every
+    // fixed size in the pool's range (1..=2).
+    assert!(
+        pa < p1,
+        "autoscaled p99 {pa:.0}us must beat melted fixed-1 {p1:.0}us"
+    );
+    assert!(
+        ca < c2,
+        "autoscaled sim cost {ca:.0}ms must beat always-on fixed-2 {c2:.0}ms"
+    );
+    for (k, (ck, pk)) in [(1, (c1, p1)), (2, (c2, p2))] {
+        assert!(
+            ca * pa < ck * pk,
+            "autoscaled cost x p99 {:.0} must beat fixed-{k} {:.0} \
+             (auto {ca:.0}ms x {pa:.0}us, fixed {ck:.0}ms x {pk:.0}us)",
+            ca * pa,
+            ck * pk
+        );
+    }
+}
+
+/// Cross-member batch migration, deterministically: a not-yet-full
+/// pending group (6 of 8, long flush deadline) sits on the only member;
+/// a freshly added idle member finds nothing to steal from the admit
+/// queue and re-homes the WHOLE group, counted once in
+/// `migrated_batches` and per-request in the steal counters. Every
+/// ticket completes.
+#[test]
+fn batch_migration_rehomes_pending_group_to_new_member() {
+    let (gtx, fermi) = pair();
+    let config = ServingConfig {
+        workers: 1,
+        batch_max: Some(8),
+        batch_deadline_ms: 150.0,
+        queue_cap: 64,
+        work_stealing: true,
+        steal_threshold: 2,
+        ..ServingConfig::default()
+    };
+    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        .device(
+            gtx,
+            Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
+            TilePolicy::PortableFallback,
+        )
+        .scheduler(RoundRobin::default())
+        .admission(RejectWhenFull)
+        .build()
+        .unwrap();
+    let img = generate::test_scene(64, 64, 9);
+    let tickets: Vec<_> = (0..6)
+        .map(|_| svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+        .collect();
+    // Let the sole member's batcher pull the admissions into its
+    // pending table: 6 < batch_max keeps the group parked against the
+    // 150ms flush deadline.
+    std::thread::sleep(Duration::from_millis(10));
+
+    // A new idle member joins mid-wait: its batcher steals first (the
+    // victim's admit queue is empty), then claims the whole pending
+    // group — requests keep their original admission times, so they
+    // flush through the thief's tile well inside the deadline.
+    svc.controller()
+        .add_member(fermi, Arc::new(MockEngine::new()), TilePolicy::PortableFallback)
+        .unwrap();
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.completed.get(), 6);
+    assert_eq!(stats.failed.get(), 0);
+    assert!(
+        stats.migrated_batches.get() >= 1,
+        "the pending group must migrate as a unit (migrated_batches {})",
+        stats.migrated_batches.get()
+    );
+    assert!(
+        stats.steals.get() >= 6,
+        "migration accounts each re-homed request as a steal (steals {})",
+        stats.steals.get()
+    );
 }

@@ -419,6 +419,9 @@ fn prop_serving_stats_merge_is_associative() {
         s.stolen.add(g.usize(0, 20) as u64);
         s.infeasible.add(g.usize(0, 5) as u64);
         s.retunes.add(g.usize(0, 3) as u64);
+        s.scale_ups.add(g.usize(0, 3) as u64);
+        s.scale_downs.add(g.usize(0, 3) as u64);
+        s.migrated_batches.add(g.usize(0, 5) as u64);
         s.batches.add(g.usize(0, 20) as u64);
         s.batched.add(g.usize(0, 60) as u64);
         for _ in 0..g.usize(0, 4) {
@@ -456,6 +459,9 @@ fn prop_serving_stats_merge_is_associative() {
                 s.stolen.get(),
                 s.infeasible.get(),
                 s.retunes.get(),
+                s.scale_ups.get(),
+                s.scale_downs.get(),
+                s.migrated_batches.get(),
                 s.batches.get(),
                 s.batched.get(),
                 s.sim_cost_ns.get(),
@@ -706,6 +712,9 @@ fn prop_net_topology_and_stats_round_trip() {
             stolen: g.usize(0, 99) as u64,
             infeasible: g.usize(0, 99) as u64,
             retunes: g.usize(0, 9) as u64,
+            scale_ups: g.usize(0, 9) as u64,
+            scale_downs: g.usize(0, 9) as u64,
+            migrated_batches: g.usize(0, 99) as u64,
             batches: g.usize(0, 999) as u64,
             batched: g.usize(0, 9999) as u64,
             sim_cost_ns: g.usize(0, 1 << 40) as u64,
@@ -717,5 +726,233 @@ fn prop_net_topology_and_stats_round_trip() {
         };
         let back = WireStats::from_json(&stats.to_json()).map_err(|e| e.to_string())?;
         prop_assert(back == stats, "stats round trip differs")
+    });
+}
+
+// ---------------------------------------------- autoscaler invariants --
+
+#[test]
+fn prop_autoscaler_policy_never_flaps_inside_the_band() {
+    // A metric stream that oscillates arbitrarily WITHIN the watermark
+    // band (and sheds nothing) must never change the target: every
+    // decision is Hold and no cooldown is ever started.
+    use tilekit::coordinator::autoscaler::policy::{
+        decide, Decision, PolicyConfig, PolicyState, Sample,
+    };
+
+    forall("no flap inside the band", 300, |g| {
+        let low = g.f64(0.0, 4.0);
+        // Band at least 1.5 wide per member, so an integer queue depth
+        // inside it always exists.
+        let high = low + g.f64(1.5, 6.0);
+        let cfg = PolicyConfig {
+            low_queue: low,
+            high_queue: high,
+            high_p99_us: if g.bool() { g.usize(1, 1_000_000) as u64 } else { 0 },
+            cooldown_ticks: g.usize(0, 8) as u32,
+            min_members: 1,
+            max_members: g.usize(2, 6),
+        };
+        let mut state = PolicyState::default();
+        for tick in 0..40 {
+            let members = g.usize(cfg.min_members, cfg.max_members);
+            // queued/members stays in [low, high] (edges included).
+            let q_min = (low * members as f64).ceil() as u64;
+            let q_max = (high * members as f64).floor() as u64;
+            let queued = g.usize(q_min as usize, q_max as usize) as u64;
+            let s = Sample {
+                members,
+                queued,
+                shed_delta: 0,
+                infeasible_delta: 0,
+                // The p99 trigger stays quiet (at or below threshold).
+                interactive_p99_us: if cfg.high_p99_us > 0 {
+                    g.usize(0, cfg.high_p99_us as usize) as u64
+                } else {
+                    g.usize(0, 1 << 30) as u64
+                },
+            };
+            let d = decide(&cfg, &mut state, &s);
+            prop_assert(
+                d == Decision::Hold,
+                format!("tick {tick}: in-band sample {s:?} produced {d:?}"),
+            )?;
+            prop_assert(state.cooldown == 0, "Hold must not start a cooldown")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autoscaler_cooldown_spaces_actions_and_clamps() {
+    // Under a fully adversarial metric stream: (1) two scale actions
+    // are always >= cooldown_ticks + 1 ticks apart; (2) ScaleUp is
+    // never issued at max_members, ScaleDown never at min_members.
+    use tilekit::coordinator::autoscaler::policy::{
+        decide, Decision, PolicyConfig, PolicyState, Sample,
+    };
+
+    forall("cooldown monotonicity", 300, |g| {
+        let low = g.f64(0.0, 4.0);
+        let cfg = PolicyConfig {
+            low_queue: low,
+            high_queue: low + g.f64(0.5, 8.0),
+            high_p99_us: if g.bool() { g.usize(1, 100_000) as u64 } else { 0 },
+            cooldown_ticks: g.usize(0, 6) as u32,
+            min_members: g.usize(1, 3),
+            max_members: g.usize(3, 8),
+        };
+        let mut state = PolicyState::default();
+        let mut last_action: Option<(u64, Decision)> = None;
+        for tick in 0..60u64 {
+            let s = Sample {
+                members: g.usize(0, cfg.max_members + 2),
+                queued: g.usize(0, 200) as u64,
+                shed_delta: g.usize(0, 3) as u64,
+                infeasible_delta: g.usize(0, 2) as u64,
+                interactive_p99_us: g.usize(0, 500_000) as u64,
+            };
+            let d = decide(&cfg, &mut state, &s);
+            match d {
+                Decision::Hold => {}
+                action => {
+                    if let Some((prev_tick, prev)) = last_action {
+                        let gap = tick - prev_tick;
+                        prop_assert(
+                            gap >= cfg.cooldown_ticks as u64 + 1,
+                            format!(
+                                "{prev:?}@{prev_tick} then {action:?}@{tick}: gap {gap} \
+                                 < cooldown {} + 1",
+                                cfg.cooldown_ticks
+                            ),
+                        )?;
+                    }
+                    if action == Decision::ScaleUp {
+                        prop_assert(s.members < cfg.max_members, "ScaleUp at max_members")?;
+                    } else {
+                        prop_assert(s.members > cfg.min_members, "ScaleDown at min_members")?;
+                    }
+                    last_action = Some((tick, action));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_migration_selection_invariants() {
+    // Against a random pending table with random cancellations and
+    // expiries: a draining victim is never robbed; a selected group is
+    // routable, meets the live floor, and is the fullest routable
+    // group; its live count excludes every cancelled/expired request.
+    use std::time::Instant;
+    use tilekit::coordinator::batcher::BatcherState;
+    use tilekit::coordinator::{
+        select_batch_migration, RequestKey, ResizeRequest, Ticket, MIGRATE_MIN_LIVE,
+    };
+
+    forall("migration selection", 200, |g| {
+        let img = generate::gradient(8, 8);
+        // batch_max high enough that pushes never flush a full batch.
+        let mut table = BatcherState::new(1000, Duration::from_secs(60));
+        let n_keys = g.usize(0, 5);
+        let mut expect_live = vec![0usize; n_keys];
+        let past = Instant::now();
+        for (k, live_slot) in expect_live.iter_mut().enumerate() {
+            for i in 0..g.usize(0, 6) {
+                let (_t, tx) = Ticket::new((k * 10 + i) as u64);
+                let mut r = ResizeRequest::bare(
+                    (k * 10 + i) as u64,
+                    RequestKey::of(Interpolator::Bilinear, &img, (k + 2) as u32),
+                    img.clone(),
+                    tx,
+                );
+                match g.usize(0, 2) {
+                    0 => r.cancel.cancel(),            // dead: cancelled
+                    1 => r.deadline = Some(past),      // dead: expired
+                    _ => *live_slot += 1,              // live
+                }
+                table.push(r);
+            }
+        }
+        let now = Instant::now();
+        let groups = table.migration_groups(now);
+        // Sorted by scale here (same kernel/src), so group i is key i+2.
+        for gr in &groups {
+            let k = (gr.key.scale - 2) as usize;
+            prop_assert(
+                gr.live == expect_live[k],
+                format!("group {k}: live {} != expected {}", gr.live, expect_live[k]),
+            )?;
+        }
+        // Random routability per group; drain kills every selection.
+        let routable: Vec<bool> = (0..groups.len()).map(|_| g.bool()).collect();
+        let supports = |key: &RequestKey| routable[(key.scale - 2) as usize];
+        prop_assert(
+            select_batch_migration(&groups, supports, true, MIGRATE_MIN_LIVE).is_none(),
+            "draining victim was robbed",
+        )?;
+        match select_batch_migration(&groups, supports, false, MIGRATE_MIN_LIVE) {
+            None => {
+                for (i, gr) in groups.iter().enumerate() {
+                    prop_assert(
+                        !routable[i] || gr.live < MIGRATE_MIN_LIVE,
+                        "eligible group was passed over",
+                    )?;
+                }
+            }
+            Some(i) => {
+                let win = &groups[i];
+                prop_assert(routable[i], "selected an unroutable group")?;
+                prop_assert(win.live >= MIGRATE_MIN_LIVE, "selected below the live floor")?;
+                for (j, gr) in groups.iter().enumerate() {
+                    if routable[j] {
+                        prop_assert(
+                            gr.live < win.live || (gr.live == win.live && j >= i),
+                            "not the fullest routable group (lowest index on ties)",
+                        )?;
+                    }
+                }
+                // Extraction takes the WHOLE group; the live ones in it
+                // match the advertised count.
+                let taken = table.take_group(&win.key);
+                let live_taken = taken
+                    .iter()
+                    .filter(|r| !r.is_cancelled() && !r.is_expired(now))
+                    .count();
+                prop_assert(
+                    live_taken == win.live,
+                    format!("took {live_taken} live, advertised {}", win.live),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_autoscaler_desc_round_trips() {
+    use tilekit::net::AutoscalerDesc;
+
+    forall("autoscaler desc round trip", 200, |g| {
+        let d = AutoscalerDesc {
+            enabled: g.bool(),
+            low_queue: (g.f64(0.0, 16.0) * 1e3).round() / 1e3,
+            high_queue: (g.f64(16.0, 64.0) * 1e3).round() / 1e3,
+            high_p99_us: g.usize(0, 1 << 30) as u64,
+            cooldown_ticks: g.usize(0, 1 << 16) as u64,
+            poll_ms: g.usize(1, 10_000) as u64,
+            min_members: g.usize(1, 8) as u64,
+            max_members: g.usize(8, 16) as u64,
+            standby_free: g.usize(0, 8) as u64,
+            ticks: g.usize(0, 1 << 40) as u64,
+            scale_ups: g.usize(0, 999) as u64,
+            scale_downs: g.usize(0, 999) as u64,
+            holds: g.usize(0, 1 << 40) as u64,
+            errors: g.usize(0, 99) as u64,
+        };
+        let back = AutoscalerDesc::from_json(&d.to_json()).map_err(|e| e.to_string())?;
+        prop_assert(back == d, "autoscaler desc round trip differs")
     });
 }
