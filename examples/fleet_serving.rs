@@ -71,7 +71,17 @@ fn serve_once(
             )
         })
         .collect();
+    // The lock-free submit fast path at work: after the first submit
+    // per thread pins the plan, the rest ride the cached snapshot.
+    let plan = svc.plan_metrics();
     let stats = svc.shutdown();
+    println!(
+        "  plan v{}: {} fast-path submits, {} refreshes, {} rebuilds",
+        plan.version, plan.fast_hits, plan.refreshes, plan.rebuilds
+    );
+    if let Some(line) = stats.submit_breakdown() {
+        println!("  {line}");
+    }
     Ok((stats.sim_cost_ms(), per_member))
 }
 

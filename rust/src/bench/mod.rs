@@ -6,6 +6,8 @@
 pub mod figures;
 pub mod gate;
 pub mod harness;
+pub mod serving;
 
 pub use gate::{compare, smoke_suite, BenchReport, GateResult};
 pub use harness::{Bench, Measurement};
+pub use serving::{serving_suite, ServingProfile};

@@ -1,0 +1,285 @@
+//! The open-loop serving benchmark behind `tilekit bench --serving`:
+//! proof for the lock-free submit hot path.
+//!
+//! Two phases against a live mock fleet over the built-in demo
+//! manifest:
+//!
+//! 1. **Closed-loop submit latency** — a tight submit loop (the queue is
+//!    drained between bursts so backpressure never pollutes the timing)
+//!    measuring the per-call cost of [`Fleet::submit`] itself: mean,
+//!    p50, p99.
+//! 2. **Open-loop serving** — a phased Poisson trace ([`Trace::phased`])
+//!    replayed by the open-loop driver ([`crate::workload::replay`]),
+//!    reporting end-to-end p99 latency and achieved throughput.
+//!
+//! Both phases land in `BENCH_PR.json` as normalized records behind the
+//! same >N% regression gate as the micro suite, so a future change that
+//! re-introduces a lock or an allocation on the submit path fails CI.
+
+use super::gate::BenchRecord;
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    Fleet, FleetBuilder, LeastLoaded, RejectWhenFull, Request, SubmitError, TilePolicy,
+};
+use crate::device::find_device;
+use crate::image::generate;
+use crate::metrics::Histogram;
+use crate::runtime::{Manifest, MockEngine, ResizeBackend};
+use crate::workload::{replay, LoadPhase, ReplayOutcome, Trace};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Built-in device ids the benched fleet draws members from, in join
+/// order.
+const BENCH_DEVICES: [&str; 4] = ["gtx260", "fermi", "8800gts", "gtx280"];
+
+/// Knobs of one serving-bench run. The CLI uses [`quick`](Self::quick)
+/// (CI smoke) or [`full`](Self::full); tests shrink further.
+#[derive(Debug, Clone)]
+pub struct ServingProfile {
+    /// Fleet size (clamped to the built-in device registry).
+    pub members: usize,
+    /// Closed-loop submits to time in phase 1.
+    pub submits: usize,
+    /// Open-loop load shape for phase 2.
+    pub phases: Vec<LoadPhase>,
+    /// Trace seed (the run is deterministic in it, wall-clock aside).
+    pub seed: u64,
+}
+
+impl ServingProfile {
+    /// CI smoke profile: 2 members, a short burst trace.
+    pub fn quick() -> ServingProfile {
+        ServingProfile {
+            members: 2,
+            submits: 2_000,
+            phases: vec![
+                LoadPhase {
+                    rate: 1_000.0,
+                    dur_us: 250_000,
+                },
+                LoadPhase {
+                    rate: 2_500.0,
+                    dur_us: 250_000,
+                },
+                LoadPhase {
+                    rate: 600.0,
+                    dur_us: 100_000,
+                },
+            ],
+            seed: 17,
+        }
+    }
+
+    /// The default profile: 4 members, a longer quiet→burst→quiet trace.
+    pub fn full() -> ServingProfile {
+        ServingProfile {
+            members: 4,
+            submits: 8_000,
+            phases: vec![
+                LoadPhase {
+                    rate: 1_200.0,
+                    dur_us: 600_000,
+                },
+                LoadPhase {
+                    rate: 3_000.0,
+                    dur_us: 600_000,
+                },
+                LoadPhase {
+                    rate: 600.0,
+                    dur_us: 300_000,
+                },
+            ],
+            seed: 17,
+        }
+    }
+}
+
+/// Build the benched fleet: `members` mock-backed members over the demo
+/// manifest, queue-depth-aware scheduling (so every submit reads every
+/// member's depth mirror — the snapshot hot path), and non-blocking
+/// admission (the open-loop driver must not be pushed back on).
+fn bench_fleet(members: usize) -> Result<Fleet> {
+    let n = members.clamp(1, BENCH_DEVICES.len());
+    let manifest = Manifest::fleet_demo();
+    let cfg = ServingConfig {
+        workers: 2,
+        batch_max: Some(8),
+        batch_deadline_ms: 0.2,
+        queue_cap: 256,
+        ..ServingConfig::default()
+    };
+    let mut b = FleetBuilder::new(&cfg, &manifest)
+        .scheduler(LeastLoaded)
+        .admission(RejectWhenFull);
+    for id in &BENCH_DEVICES[..n] {
+        let dev = find_device(id)
+            .unwrap_or_else(|| panic!("built-in device '{id}' missing from the registry"));
+        let backend: Arc<dyn ResizeBackend> = Arc::new(MockEngine::new());
+        b = b.device(dev, backend, TilePolicy::PortableFallback);
+    }
+    b.build()
+}
+
+/// Phase 1: time `submits` individual [`Fleet::submit`] calls. Input
+/// images are cloned OUTSIDE the timed window; the pending-ticket pile
+/// is drained every 128 admissions (and on any `Saturated`) so the
+/// queue never fills and the histogram measures the submit path, not
+/// backpressure.
+fn submit_phase(fleet: &Fleet, submits: usize) -> Result<Histogram> {
+    let keys = fleet.keys();
+    if keys.is_empty() {
+        bail!("bench fleet serves no request shapes");
+    }
+    let inputs: Vec<_> = keys
+        .iter()
+        .map(|k| {
+            (
+                *k,
+                generate::test_scene(k.src.1 as usize, k.src.0 as usize, 7),
+            )
+        })
+        .collect();
+    let hist = Histogram::new();
+    let mut pending = Vec::with_capacity(256);
+    let mut done = 0usize;
+    while done < submits {
+        let (key, img) = &inputs[done % inputs.len()];
+        let req = Request::new(key.kernel, img.clone(), key.scale);
+        let t0 = Instant::now();
+        match fleet.submit(req) {
+            Ok(t) => {
+                hist.record(t0.elapsed());
+                pending.push(t);
+                done += 1;
+            }
+            Err(SubmitError::Saturated) => {
+                // Non-blocking admission hit a full queue: let the
+                // pipeline catch up, untimed, and retry.
+                for t in pending.drain(..) {
+                    let _ = t.wait();
+                }
+            }
+            Err(e) => bail!("bench submit failed: {e}"),
+        }
+        if pending.len() >= 128 {
+            for t in pending.drain(..) {
+                let _ = t.wait();
+            }
+        }
+    }
+    for t in pending {
+        let _ = t.wait();
+    }
+    Ok(hist)
+}
+
+/// Phase 2: replay a phased Poisson trace open-loop and return the
+/// driver's outcome.
+fn open_loop_phase(fleet: &Fleet, profile: &ServingProfile) -> Result<ReplayOutcome> {
+    let keys = fleet.keys();
+    if keys.is_empty() {
+        bail!("bench fleet serves no request shapes");
+    }
+    let trace = Trace::phased(&keys, &profile.phases, profile.seed);
+    if trace.events.is_empty() {
+        bail!("serving profile generated an empty trace");
+    }
+    Ok(replay(fleet, &trace))
+}
+
+/// Run one serving-bench profile and return its gate records,
+/// normalized against `calib_us` (the calibration workload's mean from
+/// the same run). Prints one line per record plus the sampled
+/// submit-path breakdown.
+pub fn run_profile(calib_us: f64, profile: &ServingProfile) -> Result<Vec<BenchRecord>> {
+    let calib = calib_us.max(f64::MIN_POSITIVE);
+    let fleet = bench_fleet(profile.members)?;
+    let hist = submit_phase(&fleet, profile.submits)?;
+    let out = open_loop_phase(&fleet, profile)?;
+    if out.completed == 0 {
+        bail!("open-loop phase completed nothing: {}", out.summary());
+    }
+    println!("open-loop: {}", out.summary());
+    let stats = fleet.shutdown();
+    if let Some(line) = stats.submit_breakdown() {
+        println!("{line}");
+    }
+    let mut records = Vec::new();
+    let mut push = |name: &str, mean_us: f64| {
+        println!("{name:<44} {mean_us:>12.3} us");
+        records.push(BenchRecord {
+            name: name.to_string(),
+            mean_us,
+            normalized: mean_us / calib,
+        });
+    };
+    push("serving: submit us/op", hist.mean_us());
+    push("serving: submit p50", hist.percentile_us(50.0));
+    push("serving: submit p99", hist.percentile_us(99.0));
+    push("serving: open-loop e2e p99", out.latency.percentile_us(99.0));
+    // Lower-is-better throughput: µs of wall per completed request, so
+    // the regression gate's "grew by >N%" check applies unchanged.
+    push("serving: open-loop us/req", 1e6 / out.achieved_rps().max(1.0));
+    Ok(records)
+}
+
+/// The `tilekit bench --serving` entry point: run the quick (CI) or
+/// full profile.
+pub fn serving_suite(calib_us: f64, quick: bool) -> Result<Vec<BenchRecord>> {
+    let profile = if quick {
+        ServingProfile::quick()
+    } else {
+        ServingProfile::full()
+    };
+    run_profile(calib_us, &profile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_profile_produces_all_records() {
+        let tiny = ServingProfile {
+            members: 2,
+            submits: 64,
+            phases: vec![LoadPhase {
+                rate: 2_000.0,
+                dur_us: 50_000,
+            }],
+            seed: 3,
+        };
+        let recs = run_profile(10.0, &tiny).unwrap();
+        let names: Vec<&str> = recs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "serving: submit us/op",
+                "serving: submit p50",
+                "serving: submit p99",
+                "serving: open-loop e2e p99",
+                "serving: open-loop us/req",
+            ]
+        );
+        for r in &recs {
+            assert!(
+                r.mean_us.is_finite() && r.mean_us > 0.0,
+                "{}: {}",
+                r.name,
+                r.mean_us
+            );
+            assert!(r.normalized.is_finite() && r.normalized > 0.0);
+        }
+    }
+
+    #[test]
+    fn profiles_are_sane() {
+        for p in [ServingProfile::quick(), ServingProfile::full()] {
+            assert!(p.members >= 2 && p.members <= BENCH_DEVICES.len());
+            assert!(p.submits >= 1_000);
+            assert!(!p.phases.is_empty());
+        }
+    }
+}

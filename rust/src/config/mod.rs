@@ -78,6 +78,11 @@ pub struct ServingConfig {
     /// `tilekit serve --watch-db` (the
     /// [`RetuneDaemon`](crate::coordinator::RetuneDaemon)).
     pub retune_poll_ms: f64,
+    /// Sample every Nth submit into the submit-path time-breakdown
+    /// histograms (snapshot/schedule/admit phases; see
+    /// `ServingStats::submit_breakdown`). `0` disables sampling; the
+    /// unsampled submits stay timer-free on the fast path.
+    pub breakdown_sample: u64,
     /// Default listen address for `tilekit serve --listen` when the
     /// flag gives no address: `host:port` or `unix:/path.sock`. `None`
     /// keeps `serve` in its in-process demo mode.
@@ -99,6 +104,7 @@ impl Default for ServingConfig {
             work_stealing: true,
             steal_threshold: 4,
             retune_poll_ms: 200.0,
+            breakdown_sample: 16,
             listen: None,
         }
     }
@@ -487,6 +493,10 @@ impl Config {
                     .as_float()
                     .ok_or_else(|| anyhow!("serving.retune_poll_ms must be a number"))?;
             }
+            if let Some(v) = t.get("breakdown_sample") {
+                cfg.serving.breakdown_sample =
+                    as_usize(v).context("serving.breakdown_sample")? as u64;
+            }
             if let Some(v) = t.get("listen") {
                 cfg.serving.listen = Some(
                     v.as_str()
@@ -682,6 +692,8 @@ admission_timeout_ms = 5000.0
 work_stealing = true       # idle members steal from hot peers' queues
 steal_threshold = 4        # min victim backlog before stealing kicks in
 retune_poll_ms = 200.0     # tuning-db watcher poll for `serve --watch-db`
+breakdown_sample = 16      # time every Nth submit's snapshot/schedule/admit
+                           # phases (0 = off)
 # listen = "127.0.0.1:7441"     # default addr for `serve --listen`
 # listen = "unix:/tmp/tk.sock"  # ...or a Unix socket
 

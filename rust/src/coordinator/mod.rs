@@ -121,8 +121,8 @@ pub use scheduler::{
     LeastLoaded, RoundRobin, Scheduler,
 };
 pub use server::{
-    DrainMode, Fleet, FleetBuilder, FleetController, MemberView, Service, ServiceBuilder,
-    SubmitError, TopologyView, ANON_BATCH_MAX,
+    DrainMode, Fleet, FleetBuilder, FleetController, MemberView, PlanMetrics, Service,
+    ServiceBuilder, SubmitError, TopologyView, ANON_BATCH_MAX,
 };
 pub use stats::ServingStats;
 pub use stealing::{

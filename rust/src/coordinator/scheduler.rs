@@ -30,12 +30,17 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// One fleet member's state at scheduling time.
+///
+/// Owns no borrow into the fleet: `device_id` is a shared `Arc<str>`
+/// clone, so snapshot slices can live in reusable thread-local buffers
+/// across submits (the hot path refills one buffer instead of
+/// allocating a `Vec` per request).
 #[derive(Debug, Clone)]
-pub struct DeviceSnapshot<'a> {
+pub struct DeviceSnapshot {
     /// Index into the service's member list.
     pub index: usize,
     /// Device id (or a synthetic label for anonymous members).
-    pub device_id: &'a str,
+    pub device_id: Arc<str>,
     /// Can this member's router serve the request key?
     pub supports: bool,
     /// Requests admitted to this member and not yet answered — this
@@ -58,7 +63,7 @@ pub struct DeviceSnapshot<'a> {
     pub stealable: bool,
 }
 
-impl DeviceSnapshot<'_> {
+impl DeviceSnapshot {
     /// Total unanswered load on this member.
     pub fn load(&self) -> u64 {
         self.inflight
@@ -330,10 +335,10 @@ mod tests {
         supports: bool,
         inflight: u64,
         cost_ms: Option<f64>,
-    ) -> DeviceSnapshot<'static> {
+    ) -> DeviceSnapshot {
         DeviceSnapshot {
             index,
-            device_id: "d",
+            device_id: "d".into(),
             supports,
             inflight,
             cost_ms,

@@ -70,9 +70,11 @@ use crate::autotuner::{CostModel, SimCostModel, TuningOutcome};
 use crate::config::ServingConfig;
 use crate::device::DeviceDescriptor;
 use crate::exec::{bounded, Receiver, Sender};
+use crate::metrics::Counter;
 use crate::runtime::{Manifest, ResizeBackend};
 use crate::tiling::TileDim;
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -181,18 +183,24 @@ struct Member {
     /// Sim-cost oracle for this device (None for anonymous members).
     meter: Option<Arc<CostMeter>>,
     /// Cost-model estimate (ms/request) per supported key, for the
-    /// scheduler's ETA computation; refreshed by retune. Empty for
-    /// anonymous members.
-    cost: Arc<RwLock<HashMap<RequestKey, f64>>>,
+    /// scheduler's ETA computation. The table itself is immutable —
+    /// retune swaps in a freshly built `Arc` — so submit plans hold it
+    /// lock-free. Empty for anonymous members.
+    cost: RwLock<Arc<HashMap<RequestKey, f64>>>,
     /// This member's dynamic-batch cap (capability-derived unless the
     /// config overrides it).
     batch_max: usize,
     /// Requests this member executes concurrently (workers × batch
     /// cap); the scheduler's ETA estimates divide the backlog by it.
     slots: u64,
-    /// Taken on drain/remove/shutdown; `submit` clones the sender under
-    /// the lock and admits outside it.
-    admit_tx: Mutex<Option<Sender<ResizeRequest>>>,
+    /// The member's admission-queue sender, used lock-free by the
+    /// submit path (no per-submit clone, no mutex). Remove/shutdown
+    /// **close** the channel instead of dropping the sender: closure
+    /// works even while submit plans still hold this member, and a
+    /// post-close send fails typed (the admission policies map it to
+    /// [`SubmitError::ShuttingDown`]) instead of landing in a dead
+    /// queue.
+    admit_tx: Sender<ResizeRequest>,
     /// The member's queue, kept as the peers' steal surface and for
     /// `DrainMode::Immediate` shedding.
     admit_rx: Receiver<ResizeRequest>,
@@ -267,6 +275,88 @@ impl StealRuntime {
         self.threshold.load(Ordering::Acquire)
     }
 }
+
+/// One member's entry in a [`SubmitPlan`]: the member handle plus its
+/// router and cost table **frozen at plan-build time**. Submits read
+/// these without touching the member's `RwLock`s; a retune publishes a
+/// new plan instead of mutating this one.
+struct PlanMember {
+    member: Arc<Member>,
+    /// The member's routing table when the plan was built.
+    router: Arc<Router>,
+    /// The member's scheduler cost table (ms per supported key) when
+    /// the plan was built.
+    cost: Arc<HashMap<RequestKey, f64>>,
+}
+
+/// The immutable submit-path snapshot: everything [`Fleet::submit`]
+/// needs to route one request — the live (non-draining) members with
+/// their frozen routers and cost tables, the scheduler and admission
+/// policies, and the steal knobs — bundled behind one `Arc` and
+/// replaced atomically by the control plane
+/// ([`FleetInner::rebuild_plan`]) on every reconfiguration.
+struct SubmitPlan {
+    /// Monotone plan version. Independent of the topology epoch, which
+    /// tracks *membership* only: retunes and policy swaps bump the plan
+    /// version without touching the epoch.
+    version: u64,
+    members: Vec<PlanMember>,
+    scheduler: Arc<dyn Scheduler>,
+    admission: Arc<dyn AdmissionPolicy>,
+    /// Work-stealing enabled AND more than one plan member.
+    steal_on: bool,
+    steal_threshold: u64,
+}
+
+/// Counters instrumenting the submit fast path
+/// ([`Fleet::plan_metrics`]). The hot-path invariant — steady-state
+/// submit on an unchanged topology performs zero `RwLock`/`Mutex`
+/// acquisitions and zero heap allocations — is observable here: a run
+/// of submits bumps `fast_hits` only, while `refreshes` (plan `RwLock`
+/// reads), `rebuilds` (control-plane plan builds), and `buf_grows`
+/// (thread-local snapshot-buffer growth, the submit path's only
+/// allocation source beyond the ticket it hands back) stay flat.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanMetrics {
+    /// Current plan version.
+    pub version: u64,
+    /// Submits served from the thread-local plan after the single
+    /// atomic version check.
+    pub fast_hits: u64,
+    /// Submits that re-read the shared plan (the version moved, or a
+    /// thread's first submit against this fleet).
+    pub refreshes: u64,
+    /// Plan rebuilds performed by the control plane.
+    pub rebuilds: u64,
+    /// Snapshot-buffer capacity growths (heap allocations) on the
+    /// submit path.
+    pub buf_grows: u64,
+}
+
+/// Per-thread submit state: the cached plan — revalidated against the
+/// fleet's plan version by one atomic load per submit — and the
+/// reusable device-snapshot buffer. Keyed by a process-unique fleet id,
+/// NOT the `FleetInner` address: the allocator may hand a dropped
+/// fleet's address to a new one (ABA), while the id counter never
+/// repeats.
+struct SubmitTls {
+    fleet_id: u64,
+    version: u64,
+    plan: Option<Arc<SubmitPlan>>,
+    buf: Vec<DeviceSnapshot>,
+}
+
+thread_local! {
+    static SUBMIT_TLS: RefCell<SubmitTls> = RefCell::new(SubmitTls {
+        fleet_id: u64::MAX,
+        version: 0,
+        plan: None,
+        buf: Vec::new(),
+    });
+}
+
+/// Process-wide fleet-id allocator backing the thread-local cache key.
+static FLEET_IDS: AtomicU64 = AtomicU64::new(0);
 
 /// Read-only view of one member for reporting (`tilekit serve`'s
 /// per-device breakdown, `tilekit fleet topology`, tests). Owns `Arc`s
@@ -486,6 +576,22 @@ impl FleetBuilder {
                 members: Vec::new(),
             }))),
             next_member: AtomicU64::new(0),
+            fleet_id: FLEET_IDS.fetch_add(1, Ordering::Relaxed),
+            // Version-0 seed plan; each registration below republishes.
+            plan: RwLock::new(Arc::new(SubmitPlan {
+                version: 0,
+                members: Vec::new(),
+                scheduler: Arc::clone(&scheduler),
+                admission: Arc::clone(&admission),
+                steal_on: false,
+                steal_threshold: 1,
+            })),
+            plan_version: AtomicU64::new(0),
+            plan_fast_hits: Counter::default(),
+            plan_refreshes: Counter::default(),
+            plan_rebuilds: Counter::default(),
+            plan_buf_grows: Counter::default(),
+            submit_seq: AtomicU64::new(0),
             scheduler: RwLock::new(scheduler),
             admission: RwLock::new(admission),
             steal,
@@ -576,10 +682,10 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
         manifest,
         stats,
         meter,
-        cost: Arc::new(RwLock::new(cost)),
+        cost: RwLock::new(Arc::new(cost)),
         batch_max,
         slots: (inner.cfg.workers.max(1) * batch_max) as u64,
-        admit_tx: Mutex::new(Some(admit_tx)),
+        admit_tx,
         admit_rx,
         pending,
         draining: AtomicBool::new(false),
@@ -594,7 +700,7 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
         // the member is not in the snapshot shutdown joined, so tear its
         // pipeline down here instead of leaking the threads.
         drop(guard);
-        member.admit_tx.lock().unwrap().take();
+        member.admit_tx.close();
         member.join_threads();
         bail!("fleet is shut down");
     }
@@ -604,6 +710,11 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
         epoch: guard.epoch + 1,
         members,
     });
+    drop(guard);
+    // Republish the submit plan so the data plane routes to the new
+    // member (must run after the topology lock is released — the
+    // rebuild takes its own read lock).
+    inner.rebuild_plan();
     Ok(id)
 }
 
@@ -870,6 +981,22 @@ struct FleetInner {
     cost_model: Arc<dyn CostModel + Send + Sync>,
     topology: SharedTopology,
     next_member: AtomicU64,
+    /// Process-unique id keying the thread-local submit caches.
+    fleet_id: u64,
+    /// The current submit plan. Submitters touch this `RwLock` only
+    /// when `plan_version` moved; every control-plane mutation
+    /// republishes through [`rebuild_plan`](Self::rebuild_plan).
+    plan: RwLock<Arc<SubmitPlan>>,
+    /// Version of the published plan; the submit fast path's single
+    /// atomic load.
+    plan_version: AtomicU64,
+    plan_fast_hits: Counter,
+    plan_refreshes: Counter,
+    plan_rebuilds: Counter,
+    plan_buf_grows: Counter,
+    /// Submit sequence number driving breakdown sampling
+    /// (`cfg.breakdown_sample`).
+    submit_seq: AtomicU64,
     scheduler: RwLock<Arc<dyn Scheduler>>,
     admission: RwLock<Arc<dyn AdmissionPolicy>>,
     steal: Arc<StealRuntime>,
@@ -897,6 +1024,46 @@ impl FleetInner {
         Arc::clone(&self.topology.read().unwrap())
     }
 
+    /// Rebuild the immutable submit plan from the current topology and
+    /// policies and publish it under the next version. Called by every
+    /// control-plane mutation, after the mutation's own locks are
+    /// released — the rebuild takes the topology **read** lock, and the
+    /// `RwLock` is not reentrant. Rebuilds serialize on the plan write
+    /// lock; the version is stored (`Release`) while that lock is still
+    /// held, so a submitter that observes the new version always reads
+    /// a plan at least that fresh.
+    fn rebuild_plan(&self) {
+        let mut slot = self.plan.write().unwrap();
+        let members: Vec<PlanMember> = if self.is_closed() {
+            // Post-shutdown plan: empty, so thread-local caches drop
+            // their member references on their next submit attempt.
+            Vec::new()
+        } else {
+            let topo = self.topology.read().unwrap();
+            topo.members
+                .iter()
+                .filter(|m| !m.is_draining())
+                .map(|m| PlanMember {
+                    router: Arc::clone(&m.router.read().unwrap()),
+                    cost: Arc::clone(&m.cost.read().unwrap()),
+                    member: Arc::clone(m),
+                })
+                .collect()
+        };
+        let steal_on = self.steal.enabled() && members.len() > 1;
+        let version = self.plan_version.load(Ordering::Relaxed) + 1;
+        *slot = Arc::new(SubmitPlan {
+            version,
+            members,
+            scheduler: Arc::clone(&self.scheduler.read().unwrap()),
+            admission: Arc::clone(&self.admission.read().unwrap()),
+            steal_on,
+            steal_threshold: self.steal.threshold() as u64,
+        });
+        self.plan_rebuilds.inc();
+        self.plan_version.store(version, Ordering::Release);
+    }
+
     /// Idempotent full shutdown: stop admissions on every member, then
     /// join all pipelines.
     fn shutdown(&self) {
@@ -906,11 +1073,17 @@ impl FleetInner {
         let topo = self.snapshot();
         for m in &topo.members {
             // Closing admissions: batcher exits, then workers exit.
-            m.admit_tx.lock().unwrap().take();
+            // Close (not drop) fails the sends of submitters still on a
+            // stale plan instead of leaving their requests in a queue
+            // nobody drains.
+            m.admit_tx.close();
         }
         for m in &topo.members {
             m.join_threads();
         }
+        // Publish an empty plan so cached snapshots stop routing and
+        // drop their member references.
+        self.rebuild_plan();
     }
 
     /// Merged fleet-wide stats: submit-side + retired + retiring + live
@@ -933,6 +1106,146 @@ impl FleetInner {
             total.merge_from(&m.stats);
         }
         total
+    }
+
+    /// The submit body, routed over one immutable plan. Everything it
+    /// touches is either plan-frozen (routers, cost tables, policies),
+    /// atomic (stats counters, queue-depth mirrors, the id generator),
+    /// or caller-owned (the reusable snapshot buffer) — no
+    /// `RwLock`/`Mutex` and no allocation besides the ticket's reply
+    /// channel, which is the caller's deliverable. `t0` is the sampled
+    /// breakdown start time (None = this submit is unsampled).
+    fn submit_on_plan(
+        &self,
+        plan: &SubmitPlan,
+        buf: &mut Vec<DeviceSnapshot>,
+        req: Request,
+        t0: Option<Instant>,
+    ) -> Result<Ticket, SubmitError> {
+        if plan.members.is_empty() {
+            // Every member is draining or removed. That is not an
+            // unsupported shape — it is a temporarily unschedulable
+            // fleet (an add_member may follow), so report the retryable
+            // error instead of Unsupported.
+            return Err(SubmitError::ShuttingDown);
+        }
+        let key = req.key();
+        let now = Instant::now();
+        // Refill the thread-local snapshot buffer in place: steady
+        // state reuses its capacity (growth is counted — see
+        // [`PlanMetrics::buf_grows`]).
+        buf.clear();
+        if buf.capacity() < plan.members.len() {
+            self.plan_buf_grows.inc();
+            buf.reserve(plan.members.len());
+        }
+        for (index, pm) in plan.members.iter().enumerate() {
+            let m = &pm.member;
+            let queued = m.admit_rx.len() as u64;
+            buf.push(DeviceSnapshot {
+                index,
+                device_id: Arc::clone(&m.label),
+                supports: pm.router.supports(&key),
+                // inflight() = owned - answered, which already covers
+                // requests still sitting in the admission queue (and
+                // accounts for work stolen to/from this member).
+                inflight: m.stats.inflight(),
+                cost_ms: pm.cost.get(&key).copied(),
+                slots: m.slots,
+                queued,
+                // Peers' idle capacity will drain a backlog the steal
+                // threshold already exposes — let the scheduler
+                // discount it (see scheduler::steal_discount).
+                stealable: plan.steal_on && queued >= plan.steal_threshold,
+            });
+        }
+        let t1 = t0.map(|_| Instant::now());
+        // Unserveable beats expired: a request nobody can route is
+        // Unsupported no matter what its budget says.
+        if !buf.iter().any(|s| s.supports) {
+            self.local.rejected.inc();
+            return Err(SubmitError::Unsupported);
+        }
+        let deadline = match req.deadline {
+            Some(budget) if budget.is_zero() => {
+                // Fail fast instead of occupying a queue slot.
+                self.local.shed.inc();
+                return Err(SubmitError::DeadlineExceeded);
+            }
+            Some(budget) => {
+                // Deadline-aware admission: decline a budget no member's
+                // queue-depth-aware ETA can meet, instead of accepting
+                // work the pipeline would shed later.
+                if let Some(eta_ms) = plan.scheduler.min_eta_ms(&key, buf) {
+                    if eta_ms.is_finite() && eta_ms / 1e3 > budget.as_secs_f64() {
+                        self.local.infeasible.inc();
+                        return Err(SubmitError::Infeasible);
+                    }
+                }
+                Some(now + budget)
+            }
+            None => None,
+        };
+        let Some(index) = plan.scheduler.pick(&key, buf) else {
+            self.local.rejected.inc();
+            return Err(SubmitError::Unsupported);
+        };
+        // The invariant the old path re-locked the router to check:
+        // asserted against the snapshot's cached bit instead.
+        debug_assert!(
+            buf[index].supports,
+            "scheduler picked a member that cannot route the key"
+        );
+        let t2 = t0.map(|_| Instant::now());
+        let member = &plan.members[index].member;
+        let id = self.ids.next();
+        let (ticket, reply) =
+            Ticket::for_device(id, Default::default(), Some(Arc::clone(&member.label)));
+        let rr = ResizeRequest {
+            id,
+            key,
+            image: req.image,
+            priority: req.priority,
+            deadline,
+            // The ticket and the pipeline share the same token.
+            cancel: ticket.cancel_token(),
+            admitted: now,
+            reply,
+        };
+        // Count the admission BEFORE the enqueue: the moment the request
+        // is in the queue an idle peer may steal (and even answer) it,
+        // and the victim's accounting must never observe a stolen
+        // request that was not yet admitted. A failed enqueue rolls the
+        // optimistic count back.
+        member.stats.admitted.inc();
+        match plan.admission.admit(&member.admit_tx, rr) {
+            Ok(()) => {
+                if let (Some(a), Some(b), Some(c)) = (t0, t1, t2) {
+                    let done = Instant::now();
+                    self.local.submit_snapshot.record(b - a);
+                    self.local.submit_schedule.record(c - b);
+                    self.local.submit_admit.record(done - c);
+                }
+                Ok(ticket)
+            }
+            Err(e) => {
+                member.stats.admitted.sub(1);
+                // Only backpressure counts as a member rejection; a
+                // budget that ran out while blocked is a shed — recorded
+                // service-side, NOT on the member, because the request
+                // was never admitted and member shed/admitted counters
+                // must stay balanced for inflight(). A shutdown race —
+                // a plan that outlived its member's removal — is
+                // neither: the caller retries and the refreshed plan
+                // routes around it.
+                match e {
+                    SubmitError::Saturated => member.stats.rejected.inc(),
+                    SubmitError::DeadlineExceeded => self.local.shed.inc(),
+                    _ => {}
+                }
+                Err(e)
+            }
+        }
     }
 }
 
@@ -969,133 +1282,62 @@ impl Fleet {
     }
 
     /// Submit a typed request. The scheduler picks the member over the
-    /// current topology snapshot, the admission policy decides what a
+    /// current [`SubmitPlan`], the admission policy decides what a
     /// full queue means — and, when the scheduler can price the request,
     /// a deadline budget below the best queue-depth-aware ETA is
     /// declined as [`SubmitError::Infeasible`].
+    ///
+    /// Hot path: one `Relaxed` fetch-add (breakdown sampling), one
+    /// `Acquire` load of the plan version, then a routing pass over the
+    /// thread-cached plan. The topology `RwLock` is never touched; the
+    /// plan `RwLock` is read only when the version moved (a control-plane
+    /// mutation landed since this thread last submitted).
     pub fn submit(&self, req: Request) -> Result<Ticket, SubmitError> {
         if self.inner.is_closed() {
             return Err(SubmitError::ShuttingDown);
         }
-        let key = req.key();
-        let now = Instant::now();
-        let topo = self.inner.snapshot();
-        // Draining members take no new work; stale snapshots observe the
-        // same flag, so a racing removal cannot be scheduled onto.
-        let live: Vec<&Arc<Member>> = topo.members.iter().filter(|m| !m.is_draining()).collect();
-        if live.is_empty() {
-            // Every member is draining or removed. That is not an
-            // unsupported shape — it is a temporarily unschedulable
-            // fleet (an add_member may follow), so report the retryable
-            // error instead of Unsupported.
-            return Err(SubmitError::ShuttingDown);
-        }
-        let steal_on = self.inner.steal.enabled() && live.len() > 1;
-        let threshold = self.inner.steal.threshold();
-        let snaps: Vec<DeviceSnapshot> = live
-            .iter()
-            .enumerate()
-            .map(|(index, m)| {
-                let queued = m.admit_rx.len() as u64;
-                DeviceSnapshot {
-                    index,
-                    device_id: &m.label,
-                    supports: m.router.read().unwrap().supports(&key),
-                    // inflight() = owned - answered, which already covers
-                    // requests still sitting in the admission queue (and
-                    // accounts for work stolen to/from this member).
-                    inflight: m.stats.inflight(),
-                    cost_ms: m.cost.read().unwrap().get(&key).copied(),
-                    slots: m.slots,
-                    queued,
-                    // Peers' idle capacity will drain a backlog the steal
-                    // threshold already exposes — let the scheduler
-                    // discount it (see scheduler::steal_discount).
-                    stealable: steal_on && queued >= threshold as u64,
-                }
-            })
-            .collect();
-        // Unserveable beats expired: a request nobody can route is
-        // Unsupported no matter what its budget says.
-        if !snaps.iter().any(|s| s.supports) {
-            self.inner.local.rejected.inc();
-            return Err(SubmitError::Unsupported);
-        }
-        let scheduler = Arc::clone(&self.inner.scheduler.read().unwrap());
-        let deadline = match req.deadline {
-            Some(budget) if budget.is_zero() => {
-                // Fail fast instead of occupying a queue slot.
-                self.inner.local.shed.inc();
-                return Err(SubmitError::DeadlineExceeded);
+        SUBMIT_TLS.with(|cell| {
+            let mut tls = cell.borrow_mut();
+            // Destructure so the cached plan and the snapshot buffer
+            // borrow disjointly.
+            let SubmitTls {
+                fleet_id,
+                version,
+                plan: slot,
+                buf,
+            } = &mut *tls;
+            let inner = &*self.inner;
+            let sample = inner.cfg.breakdown_sample != 0
+                && inner.submit_seq.fetch_add(1, Ordering::Relaxed) % inner.cfg.breakdown_sample
+                    == 0;
+            let t0 = if sample { Some(Instant::now()) } else { None };
+            let current = inner.plan_version.load(Ordering::Acquire);
+            if *fleet_id != inner.fleet_id || *version != current || slot.is_none() {
+                // Version moved (or this thread last served a different
+                // fleet): refresh the cache from the shared slot.
+                let fresh = Arc::clone(&inner.plan.read().unwrap());
+                *fleet_id = inner.fleet_id;
+                *version = fresh.version;
+                *slot = Some(fresh);
+                inner.plan_refreshes.inc();
+            } else {
+                inner.plan_fast_hits.inc();
             }
-            Some(budget) => {
-                // Deadline-aware admission: decline a budget no member's
-                // queue-depth-aware ETA can meet, instead of accepting
-                // work the pipeline would shed later.
-                if let Some(eta_ms) = scheduler.min_eta_ms(&key, &snaps) {
-                    if eta_ms.is_finite() && eta_ms / 1e3 > budget.as_secs_f64() {
-                        self.inner.local.infeasible.inc();
-                        return Err(SubmitError::Infeasible);
-                    }
-                }
-                Some(now + budget)
-            }
-            None => None,
-        };
-        let Some(index) = scheduler.pick(&key, &snaps) else {
-            self.inner.local.rejected.inc();
-            return Err(SubmitError::Unsupported);
-        };
-        let member = live[index];
-        debug_assert!(
-            member.router.read().unwrap().supports(&key),
-            "scheduler picked a member that cannot route the key"
-        );
-        // Clone the sender under the lock, admit outside it: blocking
-        // admission must never hold a member lock, and the clone keeps
-        // the channel open (so the batcher still sees this request) even
-        // if a removal races the enqueue.
-        let Some(tx) = member.admit_tx.lock().unwrap().clone() else {
-            return Err(SubmitError::ShuttingDown);
-        };
-        let admission = Arc::clone(&self.inner.admission.read().unwrap());
-        let id = self.inner.ids.next();
-        let (ticket, reply) =
-            Ticket::for_device(id, Default::default(), Some(member.label.clone()));
-        let rr = ResizeRequest {
-            id,
-            key,
-            image: req.image,
-            priority: req.priority,
-            deadline,
-            // The ticket and the pipeline share the same token.
-            cancel: ticket.cancel_token(),
-            admitted: now,
-            reply,
-        };
-        // Count the admission BEFORE the enqueue: the moment the request
-        // is in the queue an idle peer may steal (and even answer) it,
-        // and the victim's accounting must never observe a stolen
-        // request that was not yet admitted. A failed enqueue rolls the
-        // optimistic count back.
-        member.stats.admitted.inc();
-        match admission.admit(&tx, rr) {
-            Ok(()) => Ok(ticket),
-            Err(e) => {
-                member.stats.admitted.sub(1);
-                // Only backpressure counts as a member rejection; a
-                // budget that ran out while blocked is a shed — recorded
-                // service-side, NOT on the member, because the request
-                // was never admitted and member shed/admitted counters
-                // must stay balanced for inflight(). A shutdown race is
-                // neither.
-                match e {
-                    SubmitError::Saturated => member.stats.rejected.inc(),
-                    SubmitError::DeadlineExceeded => self.inner.local.shed.inc(),
-                    _ => {}
-                }
-                Err(e)
-            }
+            let plan = slot.as_ref().expect("plan cached above");
+            inner.submit_on_plan(plan, buf, req, t0)
+        })
+    }
+
+    /// Live counters for the lock-free submit fast path. Test and
+    /// diagnostics hook: steady-state traffic should advance only
+    /// `fast_hits`.
+    pub fn plan_metrics(&self) -> PlanMetrics {
+        PlanMetrics {
+            version: self.inner.plan_version.load(Ordering::Acquire),
+            fast_hits: self.inner.plan_fast_hits.get(),
+            refreshes: self.inner.plan_refreshes.get(),
+            rebuilds: self.inner.plan_rebuilds.get(),
+            buf_grows: self.inner.plan_buf_grows.get(),
         }
     }
 
@@ -1290,13 +1532,17 @@ impl FleetController {
             });
             gone
         };
+        // Unpublish from the submit plan before closing the queues:
+        // refreshed submitters route around the member while stale plans
+        // fail typed (the closed channel) rather than losing work.
+        self.inner.rebuild_plan();
         for m in &removed {
             m.draining.store(true, Ordering::Release);
-            // Closing the member's sender lets its batcher drain the
-            // queue and exit; transient submit-side clones from stale
-            // snapshots keep their admitted requests visible to the
-            // batcher until they resolve, so nothing is lost.
-            m.admit_tx.lock().unwrap().take();
+            // Closing the member's channel lets its batcher drain the
+            // queue and exit; requests already admitted (including via
+            // stale plans) stay visible to the batcher until they
+            // resolve, so nothing is lost — only post-close sends fail.
+            m.admit_tx.close();
             if mode == DrainMode::Immediate {
                 for req in m.admit_rx.drain_now() {
                     m.stats.failed.inc();
@@ -1339,6 +1585,10 @@ impl FleetController {
             epoch: guard.epoch + 1,
             members: guard.members.clone(),
         });
+        // rebuild_plan takes the topology read lock — release ours first
+        // (the RwLock is not reentrant).
+        drop(guard);
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1367,7 +1617,7 @@ impl FleetController {
             // Cost table first: a scheduler snapshot between the two
             // writes sees a (new-cost, old-router) pair, which only
             // mis-prices one pick — both maps cover the same key set.
-            *member.cost.write().unwrap() = cost;
+            *member.cost.write().unwrap() = Arc::new(cost);
             tile = next.tile_pref;
             *member.router.write().unwrap() = next;
             member.stats.retunes.inc();
@@ -1375,6 +1625,9 @@ impl FleetController {
         if !found {
             bail!("no fleet member '{device_id}'");
         }
+        // Republish so submitters see the (router, cost) swap: once this
+        // returns, no refreshed submitter routes by the stale tile.
+        self.inner.rebuild_plan();
         Ok(tile)
     }
 
@@ -1382,6 +1635,7 @@ impl FleetController {
     pub fn set_scheduler(&self, s: impl Scheduler + 'static) -> Result<()> {
         self.ensure_open()?;
         *self.inner.scheduler.write().unwrap() = Arc::new(s);
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1390,6 +1644,7 @@ impl FleetController {
         self.ensure_open()?;
         let s: Arc<dyn Scheduler> = Arc::from(scheduler_by_name(name)?);
         *self.inner.scheduler.write().unwrap() = s;
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1397,6 +1652,7 @@ impl FleetController {
     pub fn set_admission(&self, a: impl AdmissionPolicy + 'static) -> Result<()> {
         self.ensure_open()?;
         *self.inner.admission.write().unwrap() = Arc::new(a);
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1406,6 +1662,7 @@ impl FleetController {
         self.ensure_open()?;
         let a: Arc<dyn AdmissionPolicy> = Arc::from(admission_by_name(name, timeout)?);
         *self.inner.admission.write().unwrap() = a;
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1421,6 +1678,7 @@ impl FleetController {
             .threshold
             .store(threshold, Ordering::Release);
         self.inner.steal.enabled.store(enabled, Ordering::Release);
+        self.inner.rebuild_plan();
         Ok(())
     }
 
@@ -1835,9 +2093,14 @@ mod tests {
         let before = svc
             .submit(req(Interpolator::Bilinear, img.clone(), 2))
             .unwrap();
+        let v_before = svc.plan_metrics().version;
         let tile = ctl.retune("gtx260", &fast(t8x8, t32x4)).unwrap();
         assert_eq!(tile, Some(t8x8));
         assert_eq!(svc.members()[0].tile_pref, Some(t8x8));
+        assert!(
+            svc.plan_metrics().version > v_before,
+            "retune republishes: once it returns, no submitter routes the stale tile"
+        );
         let after = svc
             .submit(req(Interpolator::Bilinear, img, 2))
             .unwrap();
@@ -2109,6 +2372,81 @@ mod tests {
         );
         assert_ne!(topo.members[0].id, topo.members[1].id);
         assert!(topo.members.iter().all(|v| !v.draining));
+        svc.shutdown();
+    }
+
+    // --------------------------------------------------- submit plan --
+
+    #[test]
+    fn steady_state_submit_is_lock_and_alloc_free_on_the_plan() {
+        // The acceptance criterion for the lock-free hot path, phrased
+        // over the plan instrumentation: after one warmup submit primes
+        // this thread's cache, N submits advance ONLY `fast_hits` —
+        // zero plan refreshes (the plan RwLock was never read), zero
+        // rebuilds, zero snapshot-buffer growth (no allocation).
+        let svc = start(Arc::new(MockEngine::new()));
+        let img = generate::test_scene(16, 16, 41);
+        svc.submit(req(Interpolator::Bilinear, img.clone(), 2))
+            .unwrap()
+            .wait()
+            .unwrap();
+        let m0 = svc.plan_metrics();
+        let tickets: Vec<_> = (0..100)
+            .map(|_| svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap())
+            .collect();
+        let m1 = svc.plan_metrics();
+        assert_eq!(m1.fast_hits, m0.fast_hits + 100, "every submit hit the cache");
+        assert_eq!(m1.refreshes, m0.refreshes, "plan RwLock untouched");
+        assert_eq!(m1.rebuilds, m0.rebuilds, "no control-plane churn");
+        assert_eq!(m1.buf_grows, m0.buf_grows, "snapshot buffer reused, no alloc");
+        assert_eq!(m1.version, m0.version);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn control_plane_mutations_republish_the_plan() {
+        let m = manifest();
+        let svc = FleetBuilder::new(&cfg(), &m)
+            .device(
+                crate::device::find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .device(
+                crate::device::find_device("fermi").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .scheduler(RoundRobin::default())
+            .admission(BlockWithTimeout(Duration::from_secs(10)))
+            .build()
+            .unwrap();
+        let ctl = svc.controller();
+        let v0 = svc.plan_metrics().version;
+        assert_eq!(v0, 2, "one rebuild per registered member");
+        ctl.set_scheduler(LeastLoaded).unwrap();
+        assert_eq!(svc.plan_metrics().version, v0 + 1);
+        ctl.set_admission_by_name("reject", Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(svc.plan_metrics().version, v0 + 2);
+        ctl.set_steal_config(true, 2).unwrap();
+        assert_eq!(svc.plan_metrics().version, v0 + 3);
+        // Drain republishes WITHOUT the drained member: the very next
+        // submit — same thread, no sleep — must route around it.
+        ctl.drain("gtx260").unwrap();
+        assert_eq!(svc.plan_metrics().version, v0 + 4);
+        let img = generate::test_scene(16, 16, 42);
+        let t = svc.submit(req(Interpolator::Bilinear, img.clone(), 2)).unwrap();
+        assert_eq!(t.device_id(), Some("fermi"), "drained member unpublished");
+        t.wait().unwrap();
+        ctl.remove_member("gtx260", DrainMode::Graceful).unwrap();
+        assert_eq!(svc.plan_metrics().version, v0 + 5);
+        let t = svc.submit(req(Interpolator::Bilinear, img, 2)).unwrap();
+        assert_eq!(t.device_id(), Some("fermi"));
+        t.wait().unwrap();
         svc.shutdown();
     }
 }

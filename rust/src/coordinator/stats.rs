@@ -64,6 +64,17 @@ pub struct ServingStats {
     pub latency_by_class: [Histogram; 2],
     /// Queue wait split by priority class.
     pub queue_by_class: [Histogram; 2],
+    /// Sampled submit-path time in the snapshot phase (refreshing the
+    /// plan pointer + refilling the device-snapshot buffer). Recorded on
+    /// the fleet-local stats every `serving.breakdown_sample`-th submit;
+    /// see [`ServingStats::submit_breakdown`].
+    pub submit_snapshot: Histogram,
+    /// Sampled submit-path time in the schedule phase (scheduler pick +
+    /// feasibility checks).
+    pub submit_schedule: Histogram,
+    /// Sampled submit-path time in the admit phase (ticket creation +
+    /// admission-policy enqueue).
+    pub submit_admit: Histogram,
     /// Accumulated simulated device-time of executed requests, in
     /// nanoseconds — the "aggregate sim cost" a simulated fleet is
     /// judged on (each request costs the sim time of the tile variant
@@ -108,6 +119,9 @@ impl ServingStats {
         for h in &self.queue_by_class {
             h.reset();
         }
+        self.submit_snapshot.reset();
+        self.submit_schedule.reset();
+        self.submit_admit.reset();
         self.sim_cost_ns.reset();
         self.unpriced.reset();
     }
@@ -139,6 +153,9 @@ impl ServingStats {
         for (mine, theirs) in self.queue_by_class.iter().zip(&other.queue_by_class) {
             mine.merge_from(theirs);
         }
+        self.submit_snapshot.merge_from(&other.submit_snapshot);
+        self.submit_schedule.merge_from(&other.submit_schedule);
+        self.submit_admit.merge_from(&other.submit_admit);
         self.sim_cost_ns.add(other.sim_cost_ns.get());
         self.unpriced.add(other.unpriced.get());
     }
@@ -214,6 +231,27 @@ impl ServingStats {
             self.mean_batch(),
             self.latency.summary(),
         )
+    }
+
+    /// One-line submit-path time breakdown (p50/p99 per phase) from the
+    /// sampled phase histograms, or `None` when no samples were taken
+    /// (sampling off, or no submits yet). What `tilekit serve` and the
+    /// serving bench print to show where the next submit-path
+    /// optimization should go.
+    pub fn submit_breakdown(&self) -> Option<String> {
+        if self.submit_snapshot.count() == 0 {
+            return None;
+        }
+        let pair = |h: &Histogram| {
+            format!("p50={:.1}us p99={:.1}us", h.percentile_us(50.0), h.percentile_us(99.0))
+        };
+        Some(format!(
+            "submit path (n={}): snapshot {} | schedule {} | admit {}",
+            self.submit_snapshot.count(),
+            pair(&self.submit_snapshot),
+            pair(&self.submit_schedule),
+            pair(&self.submit_admit),
+        ))
     }
 
     /// Per-priority-class latency report (p50/p95/p99), one line per
@@ -363,6 +401,27 @@ mod tests {
         assert_eq!(total.scale_ups.get(), 0);
         assert_eq!(total.scale_downs.get(), 0);
         assert_eq!(total.migrated_batches.get(), 0);
+    }
+
+    #[test]
+    fn submit_breakdown_reports_sampled_phases() {
+        let s = ServingStats::new();
+        assert!(s.submit_breakdown().is_none(), "no samples -> no report");
+        s.submit_snapshot.record_us(2.0);
+        s.submit_schedule.record_us(1.0);
+        s.submit_admit.record_us(5.0);
+        let line = s.submit_breakdown().unwrap();
+        assert!(line.contains("snapshot"), "{line}");
+        assert!(line.contains("schedule"), "{line}");
+        assert!(line.contains("admit"), "{line}");
+        assert!(line.contains("n=1"), "{line}");
+        // Breakdown histograms survive merge and vanish on reset.
+        let t = ServingStats::new();
+        t.merge_from(&s);
+        assert_eq!(t.submit_snapshot.count(), 1);
+        assert_eq!(t.submit_admit.count(), 1);
+        t.reset();
+        assert!(t.submit_breakdown().is_none());
     }
 
     #[test]

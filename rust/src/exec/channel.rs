@@ -8,6 +8,7 @@
 //! the coordinator's property tests.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -16,12 +17,28 @@ struct Shared<T> {
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
+    /// Mirror of `q.buf.len()`, maintained under the queue lock but
+    /// readable without it — `len()` is on the coordinator's lock-free
+    /// submit path (every member's queue depth is read per request).
+    depth: AtomicUsize,
+}
+
+impl<T> Shared<T> {
+    /// Publish the new queue depth; call while holding the queue lock
+    /// (all writers do, so the mirror never goes backwards in time).
+    fn sync_depth(&self, st: &State<T>) {
+        self.depth.store(st.buf.len(), Ordering::Release);
+    }
 }
 
 struct State<T> {
     buf: VecDeque<T>,
     senders: usize,
     receivers: usize,
+    /// Set by [`Sender::close`]: the channel refuses new sends even
+    /// while live `Sender` clones exist, and receivers drain what is
+    /// buffered and then see end-of-stream.
+    closed: bool,
 }
 
 /// Sending half. Cloning adds a producer.
@@ -65,24 +82,50 @@ pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
             buf: VecDeque::with_capacity(cap),
             senders: 1,
             receivers: 1,
+            closed: false,
         }),
         not_empty: Condvar::new(),
         not_full: Condvar::new(),
         cap,
+        depth: AtomicUsize::new(0),
     });
     (Sender(Arc::clone(&shared)), Receiver(shared))
 }
 
 impl<T> Sender<T> {
-    /// Blocking send; waits while full. Errors if all receivers dropped.
+    /// Close the channel for good: every subsequent send — from *any*
+    /// `Sender` clone, including ones stashed in snapshots elsewhere —
+    /// fails as disconnected, while receivers still drain whatever was
+    /// buffered before seeing end-of-stream. Idempotent. This is the
+    /// teardown primitive for owners that hand out sender clones they
+    /// cannot collect back (the fleet's immutable submit plans).
+    pub fn close(&self) {
+        let mut st = self.0.q.lock().unwrap();
+        if !st.closed {
+            st.closed = true;
+            drop(st);
+            self.0.not_empty.notify_all();
+            self.0.not_full.notify_all();
+        }
+    }
+
+    /// Whether [`close`](Self::close) has been called (racy; metrics
+    /// and assertions only).
+    pub fn is_closed(&self) -> bool {
+        self.0.q.lock().unwrap().closed
+    }
+
+    /// Blocking send; waits while full. Errors if all receivers dropped
+    /// or the channel was closed.
     pub fn send(&self, v: T) -> Result<(), SendError<T>> {
         let mut st = self.0.q.lock().unwrap();
         loop {
-            if st.receivers == 0 {
+            if st.receivers == 0 || st.closed {
                 return Err(SendError(v));
             }
             if st.buf.len() < self.0.cap {
                 st.buf.push_back(v);
+                self.0.sync_depth(&st);
                 drop(st);
                 self.0.not_empty.notify_one();
                 return Ok(());
@@ -99,11 +142,12 @@ impl<T> Sender<T> {
         let deadline = std::time::Instant::now() + d;
         let mut st = self.0.q.lock().unwrap();
         loop {
-            if st.receivers == 0 {
+            if st.receivers == 0 || st.closed {
                 return Err(SendTimeoutError::Disconnected(v));
             }
             if st.buf.len() < self.0.cap {
                 st.buf.push_back(v);
+                self.0.sync_depth(&st);
                 drop(st);
                 self.0.not_empty.notify_one();
                 return Ok(());
@@ -120,21 +164,23 @@ impl<T> Sender<T> {
     /// Non-blocking send: `Full` signals backpressure.
     pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
         let mut st = self.0.q.lock().unwrap();
-        if st.receivers == 0 {
+        if st.receivers == 0 || st.closed {
             return Err(TrySendError::Disconnected(v));
         }
         if st.buf.len() >= self.0.cap {
             return Err(TrySendError::Full(v));
         }
         st.buf.push_back(v);
+        self.0.sync_depth(&st);
         drop(st);
         self.0.not_empty.notify_one();
         Ok(())
     }
 
-    /// Current queue depth (racy; for metrics only).
+    /// Current queue depth (racy; for metrics only). Lock-free: reads
+    /// the depth mirror, never the queue mutex.
     pub fn len(&self) -> usize {
-        self.0.q.lock().unwrap().buf.len()
+        self.0.depth.load(Ordering::Acquire)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -148,11 +194,12 @@ impl<T> Receiver<T> {
         let mut st = self.0.q.lock().unwrap();
         loop {
             if let Some(v) = st.buf.pop_front() {
+                self.0.sync_depth(&st);
                 drop(st);
                 self.0.not_full.notify_one();
                 return Ok(v);
             }
-            if st.senders == 0 {
+            if st.senders == 0 || st.closed {
                 return Err(RecvError);
             }
             st = self.0.not_empty.wait(st).unwrap();
@@ -165,11 +212,12 @@ impl<T> Receiver<T> {
         let mut st = self.0.q.lock().unwrap();
         loop {
             if let Some(v) = st.buf.pop_front() {
+                self.0.sync_depth(&st);
                 drop(st);
                 self.0.not_full.notify_one();
                 return Ok(Some(v));
             }
-            if st.senders == 0 {
+            if st.senders == 0 || st.closed {
                 return Err(RecvError);
             }
             let now = std::time::Instant::now();
@@ -205,6 +253,7 @@ impl<T> Receiver<T> {
         }
         stolen.reverse();
         let freed = !stolen.is_empty();
+        self.0.sync_depth(&st);
         drop(st);
         if freed {
             self.0.not_full.notify_all();
@@ -216,13 +265,16 @@ impl<T> Receiver<T> {
     pub fn drain_now(&self) -> Vec<T> {
         let mut st = self.0.q.lock().unwrap();
         let out: Vec<T> = st.buf.drain(..).collect();
+        self.0.sync_depth(&st);
         drop(st);
         self.0.not_full.notify_all();
         out
     }
 
+    /// Current queue depth (racy; for metrics only). Lock-free, like
+    /// [`Sender::len`].
     pub fn len(&self) -> usize {
-        self.0.q.lock().unwrap().buf.len()
+        self.0.depth.load(Ordering::Acquire)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -437,6 +489,64 @@ mod tests {
         assert_eq!(rx.steal_by(|_| vec![0]), vec![0]);
         h.join().unwrap().unwrap();
         assert_eq!(rx.recv().unwrap(), 1);
+    }
+
+    #[test]
+    fn len_mirror_tracks_every_mutation() {
+        let (tx, rx) = bounded(8);
+        assert_eq!(tx.len(), 0);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(tx.len(), 5);
+        assert_eq!(rx.len(), 5);
+        rx.recv().unwrap();
+        assert_eq!(rx.len(), 4);
+        rx.steal_by(|_| vec![0, 1]);
+        assert_eq!(tx.len(), 2);
+        rx.drain_now();
+        assert_eq!(rx.len(), 0);
+        assert!(rx.is_empty() && tx.is_empty());
+    }
+
+    #[test]
+    fn close_fails_sends_from_every_clone() {
+        let (tx, rx) = bounded::<u32>(4);
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        tx.close();
+        tx.close(); // idempotent
+        assert!(tx.is_closed());
+        assert_eq!(tx.send(2), Err(SendError(2)));
+        assert!(matches!(tx2.try_send(3), Err(TrySendError::Disconnected(3))));
+        assert!(matches!(
+            tx2.send_timeout(4, Duration::from_millis(5)),
+            Err(SendTimeoutError::Disconnected(4))
+        ));
+        // Buffered items drain before end-of-stream.
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv(), Err(RecvError));
+        assert_eq!(rx.recv_timeout(Duration::from_millis(5)), Err(RecvError));
+    }
+
+    #[test]
+    fn close_wakes_blocked_receiver() {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = thread::spawn(move || rx.recv());
+        thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert_eq!(h.join().unwrap(), Err(RecvError));
+    }
+
+    #[test]
+    fn close_wakes_blocked_sender() {
+        let (tx, _rx) = bounded::<u32>(1);
+        tx.send(0).unwrap();
+        let tx2 = tx.clone();
+        let h = thread::spawn(move || tx2.send(1));
+        thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert_eq!(h.join().unwrap(), Err(SendError(1)));
     }
 
     #[test]

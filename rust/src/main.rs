@@ -665,6 +665,13 @@ FLAGS
                        (default BENCH_BASELINE.json) with a fresh,
                        non-provisional baseline
   --full               slower full measurement profile (more samples)
+  --serving            also run the open-loop serving benchmark: a mock
+                       fleet driven closed-loop (submit latency
+                       mean/p50/p99) and open-loop via a phased Poisson
+                       trace (e2e p99, us/req), appended to the report
+                       behind the same gate
+  --quick              with --serving: the small CI profile (2 members,
+                       short trace) instead of the 4-member default
 
 Scores are normalized by an in-run integer-spin calibration workload,
 so they transfer across machines far better than raw wall-clock us.
@@ -674,6 +681,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.has("help") {
         print!("{BENCH_HELP}");
         return Ok(());
+    }
+    if args.has("quick") && !args.has("serving") {
+        bail!("--quick only applies to the serving benchmark; add --serving");
     }
     let full = args.has("full");
     let profile = if full {
@@ -685,7 +695,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "tilekit bench — smoke suite ({} profile):\n",
         if full { "full" } else { "gate" }
     );
-    let report = tilekit::bench::smoke_suite(&profile);
+    let mut report = tilekit::bench::smoke_suite(&profile);
+    if args.has("serving") {
+        let quick = args.has("quick");
+        println!(
+            "\nserving benchmark ({} profile):\n",
+            if quick { "quick" } else { "full" }
+        );
+        let calib_us = report
+            .record(tilekit::bench::gate::CALIBRATION)
+            .map(|r| r.mean_us)
+            .unwrap_or(1.0);
+        let records = tilekit::bench::serving_suite(calib_us, quick)?;
+        report.records.extend(records);
+    }
     if args.has("json") {
         println!("\n{}", report.to_json().pretty());
     }
@@ -1272,6 +1295,9 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     println!("\nper-device breakdown:");
     print!("{}", breakdown.render());
     println!("\nper-priority latency:\n{}", stats.class_summary());
+    if let Some(line) = stats.submit_breakdown() {
+        println!("\n{line}");
+    }
     Ok(())
 }
 

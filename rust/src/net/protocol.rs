@@ -821,6 +821,12 @@ pub struct WireStats {
     pub latency_mean_us: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
+    /// Sampled submit-path breakdown timings (PR 8): how many submits
+    /// were sampled, and the p99 of each phase.
+    pub submit_samples: u64,
+    pub submit_snapshot_p99_us: f64,
+    pub submit_schedule_p99_us: f64,
+    pub submit_admit_p99_us: f64,
 }
 
 impl WireStats {
@@ -847,6 +853,10 @@ impl WireStats {
             latency_mean_us: s.latency.mean_us(),
             latency_p50_us: s.latency.percentile_us(50.0),
             latency_p99_us: s.latency.percentile_us(99.0),
+            submit_samples: s.submit_snapshot.count(),
+            submit_snapshot_p99_us: s.submit_snapshot.percentile_us(99.0),
+            submit_schedule_p99_us: s.submit_schedule.percentile_us(99.0),
+            submit_admit_p99_us: s.submit_admit.percentile_us(99.0),
         }
     }
 
@@ -863,6 +873,10 @@ impl WireStats {
         self.latency_count = n;
         self.latency_p50_us = self.latency_p50_us.max(o.latency_p50_us);
         self.latency_p99_us = self.latency_p99_us.max(o.latency_p99_us);
+        self.submit_samples += o.submit_samples;
+        self.submit_snapshot_p99_us = self.submit_snapshot_p99_us.max(o.submit_snapshot_p99_us);
+        self.submit_schedule_p99_us = self.submit_schedule_p99_us.max(o.submit_schedule_p99_us);
+        self.submit_admit_p99_us = self.submit_admit_p99_us.max(o.submit_admit_p99_us);
         self.admitted += o.admitted;
         self.rejected += o.rejected;
         self.completed += o.completed;
@@ -905,6 +919,10 @@ impl WireStats {
             .set("latency_mean_us", self.latency_mean_us)
             .set("latency_p50_us", self.latency_p50_us)
             .set("latency_p99_us", self.latency_p99_us)
+            .set("submit_samples", self.submit_samples)
+            .set("submit_snapshot_p99_us", self.submit_snapshot_p99_us)
+            .set("submit_schedule_p99_us", self.submit_schedule_p99_us)
+            .set("submit_admit_p99_us", self.submit_admit_p99_us)
     }
 
     pub fn from_json(j: &Json) -> Result<WireStats, ProtocolError> {
@@ -945,6 +963,20 @@ impl WireStats {
             latency_mean_us: f("latency_mean_us")?,
             latency_p50_us: f("latency_p50_us")?,
             latency_p99_us: f("latency_p99_us")?,
+            // PR 8 additions: same older-peer tolerance as above.
+            submit_samples: j.get("submit_samples").and_then(Json::as_u64).unwrap_or(0),
+            submit_snapshot_p99_us: j
+                .get("submit_snapshot_p99_us")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            submit_schedule_p99_us: j
+                .get("submit_schedule_p99_us")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            submit_admit_p99_us: j
+                .get("submit_admit_p99_us")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
         })
     }
 

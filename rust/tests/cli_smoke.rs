@@ -409,6 +409,67 @@ fn bench_gate_runs_against_committed_baseline() {
 }
 
 #[test]
+fn bench_serving_quick_reports_and_gates() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_bench_serving");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pr = dir.join("BENCH_PR.json");
+    let pr_s = pr.to_str().unwrap().to_string();
+    // The serving benchmark appends its records to the same report the
+    // micro suite writes, so they ride the committed baseline's gate
+    // (new records are noted, never failed).
+    let (out, err, ok) = run(&[
+        "bench", "--serving", "--quick",
+        "--out", &pr_s, "--baseline", "BENCH_BASELINE.json",
+    ]);
+    assert!(ok, "stderr: {err}\nstdout: {out}");
+    assert!(out.contains("serving benchmark (quick profile)"), "{out}");
+    for rec in [
+        "serving: submit us/op",
+        "serving: submit p50",
+        "serving: submit p99",
+        "serving: open-loop e2e p99",
+        "serving: open-loop us/req",
+    ] {
+        assert!(out.contains(rec), "bench output missing '{rec}':\n{out}");
+    }
+    // The sampled submit-path breakdown surfaces in the bench report.
+    assert!(out.contains("submit path (n="), "{out}");
+    assert!(out.contains("regression gate"), "{out}");
+    let written = std::fs::read_to_string(&pr).unwrap();
+    assert!(written.contains("serving: submit us/op"), "{written}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_quick_without_serving_is_rejected() {
+    if binary().is_none() {
+        return;
+    }
+    let (_, err, ok) = run(&["bench", "--quick"]);
+    assert!(!ok);
+    assert!(err.contains("--serving"), "{err}");
+}
+
+#[test]
+fn serve_mock_reports_submit_path_breakdown() {
+    if binary().is_none() {
+        return;
+    }
+    // Default breakdown sampling is 1-in-16, so 32 requests guarantee
+    // at least two sampled submits and the summary line prints.
+    let (out, err, ok) = run(&["serve", "--mock", "--requests", "32"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("completed 32/32"), "{out}");
+    assert!(out.contains("submit path (n="), "{out}");
+    for stage in ["snapshot", "schedule", "admit"] {
+        assert!(out.contains(stage), "breakdown missing '{stage}' stage:\n{out}");
+    }
+}
+
+#[test]
 fn fleet_topology_prints_epoch_stamped_snapshot() {
     if binary().is_none() {
         return;

@@ -1048,3 +1048,199 @@ fn batch_migration_rehomes_pending_group_to_new_member() {
         stats.steals.get()
     );
 }
+
+// ----------------------------------------------------- the churn hammer --
+
+/// PR 8 hammer: four submitter threads drive the lock-free submit fast
+/// path while the control plane churns underneath them — retunes that
+/// flip gtx260's winner back and forth, a third member repeatedly
+/// joining and gracefully leaving, and scheduler swaps. Every mutation
+/// republishes the immutable `SubmitPlan`, so three invariants must
+/// hold under fire:
+///
+/// * **zero lost tickets** — every `Ok` ticket resolves (submitters may
+///   see `Saturated`/`ShuttingDown` mid-churn, both typed and
+///   retryable, never a hang or a dropped completion);
+/// * **balanced ownership accounting** — `admitted + steals ==
+///   completed + stolen` across every membership flip;
+/// * **the retune ack contract** — by the time `retune` returns the
+///   plan is republished (version bumped, tile preference flipped), so
+///   no submit that starts after the ack can route the stale tile.
+#[test]
+fn submit_hot_path_survives_control_plane_churn() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let t16x8 = TileDim::new(16, 8);
+    let t32x16 = TileDim::new(32, 16);
+    let tuning = |id: &str, best: TileDim, other: TileDim| {
+        DeviceTuning::from_points(
+            id.to_string(),
+            vec![
+                TunedPoint { tile: best, ms: 1.0 },
+                TunedPoint { tile: other, ms: 2.0 },
+            ],
+            2,
+        )
+        .unwrap()
+    };
+    let fp = TuningDb::tiles_fingerprint(&[t16x8, t32x16]);
+    // Two fleet outcomes differing only in gtx260's winner: the churn
+    // loop retunes back and forth between them.
+    let outcome_with = |gtx_best: TileDim, gtx_other: TileDim| {
+        let mut db = TuningDb::in_memory();
+        db.insert(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            tuning("gtx260", gtx_best, gtx_other),
+        );
+        db.insert(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            tuning("fermi", t32x16, t16x8),
+        );
+        db.outcome_for(
+            Interpolator::Bilinear,
+            2,
+            (64, 64),
+            "exhaustive",
+            &fp,
+            &["gtx260", "fermi"],
+        )
+        .unwrap()
+    };
+    let outcome_a = outcome_with(t16x8, t32x16);
+    let outcome_b = outcome_with(t32x16, t16x8);
+
+    let (gtx, fermi) = pair();
+    let spare = find_device("8800gts").unwrap();
+    let config = ServingConfig {
+        workers: 2,
+        batch_max: Some(4),
+        batch_deadline_ms: 0.2,
+        queue_cap: 512,
+        work_stealing: false, // keep the ownership ledger two-sided
+        ..ServingConfig::default()
+    };
+    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        .device(
+            gtx,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome_a.clone()),
+        )
+        .device(
+            fermi,
+            Arc::new(MockEngine::new()),
+            TilePolicy::PerDevice(outcome_a.clone()),
+        )
+        .scheduler(RoundRobin::default())
+        .admission(RejectWhenFull)
+        .build()
+        .unwrap();
+
+    let stop = AtomicBool::new(false);
+    let completed_ok: u64 = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for worker in 0..4u64 {
+            let svc = &svc;
+            let stop = &stop;
+            handles.push(s.spawn(move || {
+                let img = generate::test_scene(64, 64, 50 + worker);
+                let mut pending: Vec<_> = Vec::with_capacity(64);
+                let mut ok = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match svc.submit(Request::new(Interpolator::Bilinear, img.clone(), 2)) {
+                        Ok(t) => pending.push(t),
+                        // Both are typed, expected mid-churn outcomes:
+                        // a full queue under non-blocking admission, or
+                        // a stale plan racing a member's retirement.
+                        Err(SubmitError::Saturated) | Err(SubmitError::ShuttingDown) => {
+                            for t in pending.drain(..) {
+                                t.wait().expect("admitted ticket lost under churn");
+                                ok += 1;
+                            }
+                            std::thread::yield_now();
+                        }
+                        Err(e) => panic!("submitter {worker}: unexpected error: {e}"),
+                    }
+                    if pending.len() >= 64 {
+                        for t in pending.drain(..) {
+                            t.wait().expect("admitted ticket lost under churn");
+                            ok += 1;
+                        }
+                    }
+                }
+                for t in pending {
+                    t.wait().expect("admitted ticket lost at churn end");
+                    ok += 1;
+                }
+                ok
+            }));
+        }
+
+        // The churn loop: every iteration flips the retuned winner,
+        // bounces the third member through join + graceful leave, and
+        // swaps the scheduler — each op republishing the plan.
+        let ctl = svc.controller();
+        let tile_of_gtx = || {
+            svc.members()
+                .iter()
+                .find(|v| &*v.label == "gtx260")
+                .and_then(|v| v.tile_pref)
+        };
+        for i in 0..12usize {
+            let (outcome, expect) = if i % 2 == 0 {
+                (&outcome_b, t32x16)
+            } else {
+                (&outcome_a, t16x8)
+            };
+            let v_before = svc.plan_metrics().version;
+            assert_eq!(ctl.retune("gtx260", outcome).unwrap(), Some(expect));
+            // The ack contract: retune returned, so the republished plan
+            // is already the one any subsequent submit refreshes onto.
+            assert!(
+                svc.plan_metrics().version > v_before,
+                "retune ack precedes the plan republish"
+            );
+            assert_eq!(tile_of_gtx(), Some(expect), "stale tile visible after ack");
+
+            ctl.add_member(
+                spare.clone(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::PortableFallback,
+            )
+            .unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+            ctl.remove_member("8800gts", DrainMode::Graceful).unwrap();
+
+            ctl.set_scheduler_by_name(if i % 2 == 0 { "least-loaded" } else { "round-robin" })
+                .unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+
+    assert!(completed_ok > 0, "the hammer must actually admit work");
+    let metrics = svc.plan_metrics();
+    assert!(
+        metrics.fast_hits > 0,
+        "submitters must ride the version fast path between mutations"
+    );
+    let stats = svc.shutdown();
+    assert_eq!(
+        stats.completed.get(),
+        completed_ok,
+        "every Ok ticket resolves exactly once"
+    );
+    assert_eq!(stats.failed.get(), 0);
+    assert_eq!(
+        stats.admitted.get() + stats.steals.get(),
+        stats.completed.get() + stats.stolen.get(),
+        "ownership accounting balances across every churn event"
+    );
+}

@@ -723,9 +723,91 @@ fn prop_net_topology_and_stats_round_trip() {
             latency_mean_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
             latency_p50_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
             latency_p99_us: (g.f64(0.0, 1e6) * 1e3).round() / 1e3,
+            submit_samples: g.usize(0, 999) as u64,
+            submit_snapshot_p99_us: (g.f64(0.0, 1e4) * 1e3).round() / 1e3,
+            submit_schedule_p99_us: (g.f64(0.0, 1e4) * 1e3).round() / 1e3,
+            submit_admit_p99_us: (g.f64(0.0, 1e4) * 1e3).round() / 1e3,
         };
         let back = WireStats::from_json(&stats.to_json()).map_err(|e| e.to_string())?;
         prop_assert(back == stats, "stats round trip differs")
+    });
+}
+
+// ------------------------------------------------ submit-plan routing --
+
+#[test]
+fn prop_reused_plan_buffer_routes_like_a_fresh_snapshot() {
+    use tilekit::coordinator::{scheduler_by_name, DeviceSnapshot, RequestKey, Scheduler};
+
+    // The lock-free submit path refills one reusable thread-local buffer
+    // per request where the old path allocated a fresh `Vec` of member
+    // snapshots. Property: for ANY member state and every named
+    // scheduler, routing over the reused (clear + refill, dirty
+    // capacity) buffer is indistinguishable from routing over a freshly
+    // allocated snapshot — same pick, same ETA floor — and a pick always
+    // lands on a supporting member, existing iff one does.
+    forall("plan buffer = fresh snapshot", 300, |g| {
+        let key = RequestKey {
+            kernel: if g.bool() {
+                Interpolator::Bilinear
+            } else {
+                Interpolator::Nearest
+            },
+            src: (64, 64),
+            scale: 2,
+        };
+        let n = g.usize(1, 6);
+        let fresh: Vec<DeviceSnapshot> = (0..n)
+            .map(|index| DeviceSnapshot {
+                index,
+                device_id: format!("d{index}").into(),
+                supports: g.bool(),
+                inflight: g.usize(0, 64) as u64,
+                cost_ms: if g.bool() { Some(g.f64(0.01, 8.0)) } else { None },
+                slots: g.usize(1, 16) as u64,
+                queued: g.usize(0, 32) as u64,
+                stealable: g.bool(),
+            })
+            .collect();
+        // The reused buffer arrives dirty from a previous, differently
+        // sized submit — exactly what the thread-local sees.
+        let mut reused: Vec<DeviceSnapshot> = (0..g.usize(0, 8))
+            .map(|index| DeviceSnapshot {
+                index,
+                device_id: "stale".into(),
+                supports: true,
+                inflight: 999,
+                cost_ms: Some(999.0),
+                slots: 1,
+                queued: 999,
+                stealable: true,
+            })
+            .collect();
+        reused.clear();
+        reused.extend(fresh.iter().cloned());
+        for name in ["round-robin", "least-loaded", "cost-eta"] {
+            // Two fresh instances, so a stateful scheduler (round-robin's
+            // rotation counter) sees both buffers from the same state.
+            let a = scheduler_by_name(name).map_err(|e| e.to_string())?;
+            let b = scheduler_by_name(name).map_err(|e| e.to_string())?;
+            let pa = a.pick(&key, &fresh);
+            let pb = b.pick(&key, &reused);
+            prop_assert(pa == pb, format!("{name}: picks differ: {pa:?} vs {pb:?}"))?;
+            let ea = a.min_eta_ms(&key, &fresh);
+            let eb = b.min_eta_ms(&key, &reused);
+            prop_assert(ea == eb, format!("{name}: ETA floors differ: {ea:?} vs {eb:?}"))?;
+            prop_assert(
+                pa.is_some() == fresh.iter().any(|s| s.supports),
+                format!("{name}: pick exists iff a member supports the key"),
+            )?;
+            if let Some(i) = pa {
+                prop_assert(
+                    fresh[i].supports,
+                    format!("{name}: picked a non-supporting member"),
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 
