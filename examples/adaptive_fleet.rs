@@ -23,7 +23,7 @@ use std::time::Duration;
 use tilekit::autotuner::{SimCostModel, TuningSession};
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    Biased, BlockWithTimeout, Priority, RequestKey, ServiceBuilder, TilePolicy,
+    Biased, BlockWithTimeout, FleetBuilder, Priority, RequestKey, TilePolicy,
 };
 use tilekit::image::Interpolator;
 use tilekit::runtime::{Manifest, MockEngine};
@@ -55,7 +55,7 @@ fn serve_skewed(
         ..ServingConfig::default()
     };
     let delay = Duration::from_millis(2);
-    let svc = ServiceBuilder::new(&cfg, manifest)
+    let svc = FleetBuilder::new(&cfg, manifest)
         .device(
             tilekit::device::find_device("gtx260").expect("builtin"),
             Arc::new(MockEngine::with_delay(delay)),

@@ -33,7 +33,7 @@ use std::time::Duration;
 use tilekit::autotuner::{SimCostModel, TuningSession};
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    Autoscaler, AutoscalerOpts, RejectWhenFull, RoundRobin, ServiceBuilder, StandbyMember,
+    Autoscaler, AutoscalerOpts, FleetBuilder, RejectWhenFull, RoundRobin, StandbyMember,
     TilePolicy,
 };
 use tilekit::device::DeviceDescriptor;
@@ -115,7 +115,7 @@ fn main() -> anyhow::Result<()> {
     let run = |members: &[&DeviceDescriptor],
                standby: bool|
      -> anyhow::Result<(f64, f64, u64, u64, usize)> {
-        let mut builder = ServiceBuilder::new(&cfg, &manifest)
+        let mut builder = FleetBuilder::new(&cfg, &manifest)
             .scheduler(RoundRobin::default())
             .admission(RejectWhenFull);
         for d in members {

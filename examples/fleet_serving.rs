@@ -22,7 +22,7 @@ use std::time::Duration;
 use tilekit::autotuner::{SimCostModel, TuningSession};
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    BlockWithTimeout, RoundRobin, ServiceBuilder, TilePolicy,
+    BlockWithTimeout, FleetBuilder, RoundRobin, TilePolicy,
 };
 use tilekit::device::{find_device, DeviceDescriptor};
 use tilekit::runtime::{Manifest, MockEngine};
@@ -47,7 +47,7 @@ fn serve_once(
         work_stealing: false,
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&cfg, manifest)
+    let svc = FleetBuilder::new(&cfg, manifest)
         .device(devices[0].clone(), Arc::new(MockEngine::new()), policy.clone())
         .device(devices[1].clone(), Arc::new(MockEngine::new()), policy)
         .scheduler(RoundRobin::default())

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
-    BlockWithTimeout, Priority, Request, ServiceBuilder, TilePolicy,
+    BlockWithTimeout, FleetBuilder, Priority, Request, TilePolicy,
 };
 use tilekit::image::{generate, Image};
 use tilekit::runtime::executor::EngineHandle;
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     let backend: Arc<dyn ResizeBackend> = Arc::new(EngineHandle::new(manifest.clone()));
     // Single-backend deployment: largest-tile (CPU-optimal) variants
     // (EXPERIMENTS.md §Perf); closed loop, so block on backpressure.
-    let svc = ServiceBuilder::new(&cfg, &manifest)
+    let svc = FleetBuilder::new(&cfg, &manifest)
         .backend(backend, TilePolicy::PortableFallback)
         .admission(BlockWithTimeout(Duration::from_secs(60)))
         .build()?;

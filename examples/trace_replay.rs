@@ -10,7 +10,7 @@
 use std::path::Path;
 use std::sync::Arc;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{RejectWhenFull, Request, ServiceBuilder, TilePolicy};
+use tilekit::coordinator::{FleetBuilder, RejectWhenFull, Request, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
             // Open-loop driver: backpressure must be recorded, not
             // absorbed, so admission is strictly non-blocking (largest-
             // tile variants per EXPERIMENTS.md §Perf).
-            let svc = ServiceBuilder::new(&cfg, &manifest)
+            let svc = FleetBuilder::new(&cfg, &manifest)
                 .backend(make_backend(), TilePolicy::PortableFallback)
                 .admission(RejectWhenFull)
                 .build()?;

@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, FleetBuilder, Request, TilePolicy};
 use tilekit::image::generate;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
@@ -67,7 +67,7 @@ fn main() {
         };
         // Largest-tile (CPU-optimal) variants (EXPERIMENTS.md §Perf);
         // closed loop, so block on backpressure instead of rejecting.
-        let svc = ServiceBuilder::new(&cfg, &manifest)
+        let svc = FleetBuilder::new(&cfg, &manifest)
             .backend(Arc::clone(&backend), TilePolicy::PortableFallback)
             .admission(BlockWithTimeout(Duration::from_secs(60)))
             .build()

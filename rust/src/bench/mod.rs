@@ -7,7 +7,9 @@ pub mod figures;
 pub mod gate;
 pub mod harness;
 pub mod serving;
+pub mod wire;
 
 pub use gate::{compare, smoke_suite, BenchReport, GateResult};
 pub use harness::{Bench, Measurement};
 pub use serving::{serving_suite, ServingProfile};
+pub use wire::{wire_suite, WireProfile};

@@ -1,0 +1,275 @@
+//! The loopback wire benchmark behind `tilekit bench --wire`: proof for
+//! the protocol-v2 redesign (pipelined frames + binary image payloads).
+//!
+//! One mock fleet is served over an ephemeral loopback TCP socket by
+//! [`NetServer`], then driven twice through [`FleetClient`] with the
+//! same request mix:
+//!
+//! 1. **v1** — [`PayloadEncoding::Json`] forces the pre-negotiation
+//!    protocol: pixels travel as a JSON `f32` array in the frame line.
+//! 2. **v2** — [`PayloadEncoding::Binary`] negotiates protocol v2 on
+//!    connect: pixels travel as a length-prefixed little-endian binary
+//!    block after the header line, both ways.
+//!
+//! Each run keeps a window of submits in flight (the client pipelines
+//! over one connection), and reports wall-clock µs per completed
+//! request plus — the deterministic half of the comparison — bytes on
+//! the wire per request, measured from the client's own
+//! [`wire_metrics`](FleetClient::wire_metrics) counters. The records
+//! land in `BENCH_PR.json` behind the same regression gate as the rest
+//! of the suite, so a change that silently reverts submits to JSON
+//! pixels (or breaks pipelining into lock-step) fails CI.
+
+use super::gate::BenchRecord;
+use crate::config::ServingConfig;
+use crate::coordinator::{Fleet, FleetBuilder, Request, TilePolicy};
+use crate::device::{find_device, DeviceDescriptor};
+use crate::image::generate;
+use crate::net::{
+    BackendFactory, FleetClient, ListenAddr, NetClientConfig, NetServer, NetServerConfig,
+    PayloadEncoding,
+};
+use crate::runtime::{Manifest, MockEngine, ResizeBackend};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs of one wire-bench run. The CLI uses [`quick`](Self::quick)
+/// (CI smoke) or [`full`](Self::full); tests shrink further. The
+/// request shape is not a knob: it comes from whatever the benched
+/// fleet's manifest serves, so the bench never drifts from a shippable
+/// configuration.
+#[derive(Debug, Clone)]
+pub struct WireProfile {
+    /// Submit+wait round trips per protocol version.
+    pub requests: usize,
+    /// Submits kept in flight on the connection at once.
+    pub inflight: usize,
+}
+
+impl WireProfile {
+    /// CI smoke profile: enough traffic to amortize connect/hello, small
+    /// enough to stay in the tier-1 budget.
+    pub fn quick() -> WireProfile {
+        WireProfile {
+            requests: 64,
+            inflight: 16,
+        }
+    }
+
+    /// The default profile.
+    pub fn full() -> WireProfile {
+        WireProfile {
+            requests: 256,
+            inflight: 16,
+        }
+    }
+}
+
+/// The benched fleet: two mock-backed members over the demo manifest —
+/// the same shape `serve --listen --mock` builds.
+fn wire_fleet() -> Result<Arc<Fleet>> {
+    let manifest = Manifest::fleet_demo();
+    let cfg = ServingConfig {
+        workers: 2,
+        batch_max: Some(8),
+        batch_deadline_ms: 0.2,
+        queue_cap: 256,
+        ..ServingConfig::default()
+    };
+    let mut b = FleetBuilder::new(&cfg, &manifest);
+    for id in ["gtx260", "fermi"] {
+        let dev = find_device(id)
+            .unwrap_or_else(|| panic!("built-in device '{id}' missing from the registry"));
+        let backend: Arc<dyn ResizeBackend> = Arc::new(MockEngine::new());
+        b = b.device(dev, backend, TilePolicy::PortableFallback);
+    }
+    Ok(Arc::new(b.build()?))
+}
+
+fn mock_factory() -> BackendFactory {
+    Arc::new(|_d: &DeviceDescriptor| Arc::new(MockEngine::new()) as Arc<dyn ResizeBackend>)
+}
+
+/// Client knobs for one protocol version. Identical apart from the
+/// payload encoding, so the two runs differ only in what the wire
+/// carries.
+fn client_cfg(encoding: PayloadEncoding) -> NetClientConfig {
+    NetClientConfig {
+        wait_poll: Duration::from_millis(250),
+        payload_encoding: encoding,
+        ..NetClientConfig::default()
+    }
+}
+
+/// Drive `profile.requests` submit+wait round trips of `template`
+/// through `client`, keeping up to `profile.inflight` outstanding.
+/// Returns `(us_per_request, bytes_per_request)`; the byte count covers
+/// both directions and comes from the client's own transport counters,
+/// so it is deterministic for a fixed image.
+fn drive(client: &FleetClient, profile: &WireProfile, template: &Request) -> Result<(f64, f64)> {
+    let before = client.wire_metrics();
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < profile.requests {
+        let burst = profile.inflight.min(profile.requests - done);
+        let mut window = Vec::with_capacity(burst);
+        for _ in 0..burst {
+            window.push(
+                client
+                    .submit(template)
+                    .map_err(|e| anyhow!("wire bench submit failed: {e}"))?,
+            );
+        }
+        for t in window {
+            t.wait().map_err(|e| anyhow!("wire bench wait failed: {e}"))?;
+            done += 1;
+        }
+    }
+    let elapsed = t0.elapsed();
+    let after = client.wire_metrics();
+    let bytes = (after.bytes_sent - before.bytes_sent)
+        + (after.bytes_received - before.bytes_received);
+    let n = profile.requests as f64;
+    Ok((elapsed.as_secs_f64() * 1e6 / n, bytes as f64 / n))
+}
+
+/// Run one wire-bench profile and return its gate records, normalized
+/// against `calib_us` like every other suite. Byte records are
+/// deterministic; the µs records carry the loopback wall-clock.
+pub fn run_profile(calib_us: f64, profile: &WireProfile) -> Result<Vec<BenchRecord>> {
+    let calib = calib_us.max(f64::MIN_POSITIVE);
+    let fleet = wire_fleet()?;
+    let keys = fleet.keys();
+    let Some(key) = keys.first() else {
+        bail!("wire bench fleet serves no request shapes");
+    };
+    let img = generate::test_scene(key.src.1 as usize, key.src.0 as usize, 11);
+    let template = Request::new(key.kernel, img, key.scale);
+
+    let server = NetServer::bind(
+        &ListenAddr::Tcp("127.0.0.1:0".into()),
+        Arc::clone(&fleet),
+        mock_factory(),
+        NetServerConfig {
+            read_timeout: Duration::from_millis(25),
+            ..NetServerConfig::default()
+        },
+    )?;
+
+    let v1 = FleetClient::connect_with(server.local_addr(), client_cfg(PayloadEncoding::Json))
+        .map_err(|e| anyhow!("wire bench v1 connect failed: {e}"))?;
+    let (v1_us, v1_bytes) = drive(&v1, profile, &template)?;
+    drop(v1);
+
+    let v2 = FleetClient::connect_with(server.local_addr(), client_cfg(PayloadEncoding::Binary))
+        .map_err(|e| anyhow!("wire bench v2 connect failed: {e}"))?;
+    if !v2.wire_metrics().v2_session {
+        bail!("the in-tree server refused the v2 hello — negotiation is broken");
+    }
+    let (v2_us, v2_bytes) = drive(&v2, profile, &template)?;
+    drop(v2);
+
+    server.shutdown();
+    if let Ok(f) = Arc::try_unwrap(fleet) {
+        f.shutdown();
+    }
+
+    println!(
+        "wire loopback: {} requests, {} in flight | v1/v2 bytes/req {:.2}x",
+        profile.requests,
+        profile.inflight,
+        v1_bytes / v2_bytes.max(1.0)
+    );
+    let mut records = Vec::new();
+    let mut push = |name: &str, value: f64, unit: &str| {
+        println!("{name:<44} {value:>12.3} {unit}");
+        records.push(BenchRecord {
+            name: name.to_string(),
+            mean_us: value,
+            normalized: value / calib,
+        });
+    };
+    push("wire: v1 submit+wait us/req", v1_us, "us");
+    push("wire: v2 submit+wait us/req", v2_us, "us");
+    push("wire: v1 bytes/req", v1_bytes, "B");
+    push("wire: v2 bytes/req", v2_bytes, "B");
+    Ok(records)
+}
+
+/// The `tilekit bench --wire` entry point: run the quick (CI) or full
+/// profile.
+pub fn wire_suite(calib_us: f64, quick: bool) -> Result<Vec<BenchRecord>> {
+    let profile = if quick {
+        WireProfile::quick()
+    } else {
+        WireProfile::full()
+    };
+    run_profile(calib_us, &profile)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_profile_produces_all_records() {
+        let tiny = WireProfile {
+            requests: 12,
+            inflight: 4,
+        };
+        let recs = run_profile(10.0, &tiny).unwrap();
+        let names: Vec<&str> = recs.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "wire: v1 submit+wait us/req",
+                "wire: v2 submit+wait us/req",
+                "wire: v1 bytes/req",
+                "wire: v2 bytes/req",
+            ]
+        );
+        for r in &recs {
+            assert!(
+                r.mean_us.is_finite() && r.mean_us > 0.0,
+                "{}: {}",
+                r.name,
+                r.mean_us
+            );
+            assert!(r.normalized.is_finite() && r.normalized > 0.0);
+        }
+    }
+
+    #[test]
+    fn v2_moves_at_least_4x_fewer_bytes_per_request() {
+        // The PR's acceptance criterion, measured rather than derived:
+        // binary pixels cost 4 B each both ways, JSON pixels cost a
+        // shortest-round-trip f64 decimal (~18 chars) plus a comma.
+        let tiny = WireProfile {
+            requests: 8,
+            inflight: 4,
+        };
+        let recs = run_profile(10.0, &tiny).unwrap();
+        let by_name = |n: &str| {
+            recs.iter()
+                .find(|r| r.name == n)
+                .unwrap_or_else(|| panic!("missing record '{n}'"))
+                .mean_us
+        };
+        let v1 = by_name("wire: v1 bytes/req");
+        let v2 = by_name("wire: v2 bytes/req");
+        assert!(
+            v1 >= 4.0 * v2,
+            "v2 must move >=4x fewer bytes per request: v1={v1:.0} B, v2={v2:.0} B ({:.2}x)",
+            v1 / v2
+        );
+    }
+
+    #[test]
+    fn profiles_are_sane() {
+        for p in [WireProfile::quick(), WireProfile::full()] {
+            assert!(p.requests >= 32);
+            assert!(p.inflight >= 1 && p.inflight <= p.requests);
+        }
+    }
+}

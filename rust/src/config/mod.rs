@@ -302,6 +302,17 @@ pub struct NetConfig {
     pub max_line_kib: usize,
     /// Front-tier health poll cadence (ms).
     pub health_poll_ms: f64,
+    /// Most pipelined calls in flight per connection: the client blocks
+    /// past this, and the server's per-connection work queue is bounded
+    /// by it (back-pressuring TCP instead of buffering unboundedly).
+    pub max_inflight_per_conn: usize,
+    /// Base delay (ms) of the client's jittered exponential redial
+    /// backoff. 0 retries without sleeping.
+    pub reconnect_backoff_ms: f64,
+    /// Image payload encoding: `"binary"` negotiates protocol v2
+    /// (length-prefixed f32 blocks, falling back to v1 against old
+    /// servers); `"json"` forces v1 JSON-array frames.
+    pub payload_encoding: String,
 }
 
 impl Default for NetConfig {
@@ -314,6 +325,9 @@ impl Default for NetConfig {
             max_conns: 64,
             max_line_kib: 8192,
             health_poll_ms: 200.0,
+            max_inflight_per_conn: 32,
+            reconnect_backoff_ms: 50.0,
+            payload_encoding: "binary".to_string(),
         }
     }
 }
@@ -350,6 +364,21 @@ impl NetConfig {
         if self.max_line_kib == 0 {
             bail!("net.max_line_kib must be >= 1 (got 0)");
         }
+        if self.max_inflight_per_conn == 0 {
+            bail!("net.max_inflight_per_conn must be >= 1 (got 0)");
+        }
+        if self.reconnect_backoff_ms.is_nan() || self.reconnect_backoff_ms < 0.0 {
+            bail!(
+                "net.reconnect_backoff_ms must be >= 0 (got {})",
+                self.reconnect_backoff_ms
+            );
+        }
+        if crate::net::PayloadEncoding::parse(&self.payload_encoding).is_none() {
+            bail!(
+                "net.payload_encoding must be \"binary\" or \"json\" (got \"{}\")",
+                self.payload_encoding
+            );
+        }
         Ok(())
     }
 
@@ -361,6 +390,7 @@ impl NetConfig {
             idle_timeout: std::time::Duration::from_secs_f64(self.idle_timeout_ms / 1e3),
             max_line_bytes: self.max_line_kib * 1024,
             drain_timeout: std::time::Duration::from_secs(10),
+            max_inflight_per_conn: self.max_inflight_per_conn,
         }
     }
 
@@ -371,6 +401,13 @@ impl NetConfig {
             response_timeout: std::time::Duration::from_secs_f64(self.response_timeout_ms / 1e3),
             max_line_bytes: self.max_line_kib * 1024,
             wait_poll: std::time::Duration::from_secs(2),
+            max_inflight: self.max_inflight_per_conn,
+            reconnect_backoff: std::time::Duration::from_secs_f64(
+                self.reconnect_backoff_ms / 1e3,
+            ),
+            payload_encoding: crate::net::PayloadEncoding::parse(&self.payload_encoding)
+                .unwrap_or(crate::net::PayloadEncoding::Binary),
+            ..crate::net::NetClientConfig::default()
         }
     }
 }
@@ -551,6 +588,17 @@ impl Config {
             if let Some(v) = t.get("max_line_kib") {
                 cfg.net.max_line_kib = as_usize(v).context("net.max_line_kib")?;
             }
+            if let Some(v) = t.get("max_inflight_per_conn") {
+                cfg.net.max_inflight_per_conn =
+                    as_usize(v).context("net.max_inflight_per_conn")?;
+            }
+            float("reconnect_backoff_ms", &mut cfg.net.reconnect_backoff_ms)?;
+            if let Some(v) = t.get("payload_encoding") {
+                cfg.net.payload_encoding = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("net.payload_encoding must be a string"))?
+                    .to_string();
+            }
         }
 
         if let Some(devs) = doc.arrays.get("device") {
@@ -713,8 +761,11 @@ read_timeout_ms = 250.0        # server poll tick for idle/shutdown checks
 idle_timeout_ms = 30000.0      # server drops connections idle this long
 response_timeout_ms = 10000.0  # client per-call budget (> 5000 ms wait cap)
 max_conns = 64                 # per-server concurrent connection cap
-max_line_kib = 8192            # frame size bound (one JSON line)
+max_line_kib = 8192            # frame size bound (one JSON line or binary block)
 health_poll_ms = 200.0         # front tier topology/health poll cadence
+max_inflight_per_conn = 32     # pipelined calls per connection (both ends)
+reconnect_backoff_ms = 50.0    # base of the client's jittered redial backoff
+payload_encoding = "binary"    # "binary" = protocol v2 pixels, "json" = v1
 
 # Custom GPUs (merged over the registry by id):
 # [[device]]
@@ -1029,6 +1080,19 @@ global_mem_mib = 64
         .is_err());
         // client budget must outlast the server's wait cap
         assert!(Config::from_toml_str("[net]\nresponse_timeout_ms = 1000.0\n").is_err());
+        // v2 knobs parse and validate
+        let cfg = Config::from_toml_str(
+            "[net]\nmax_inflight_per_conn = 4\nreconnect_backoff_ms = 10.0\n\
+             payload_encoding = \"json\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.max_inflight_per_conn, 4);
+        assert_eq!(cfg.net.reconnect_backoff_ms, 10.0);
+        assert_eq!(cfg.net.payload_encoding, "json");
+        assert!(Config::from_toml_str("[net]\nmax_inflight_per_conn = 0\n").is_err());
+        assert!(Config::from_toml_str("[net]\nreconnect_backoff_ms = -1.0\n").is_err());
+        assert!(Config::from_toml_str("[net]\npayload_encoding = \"carrier-pigeon\"\n")
+            .is_err());
     }
 
     #[test]
@@ -1037,15 +1101,22 @@ global_mem_mib = 64
             max_conns: 3,
             max_line_kib: 2,
             read_timeout_ms: 100.0,
+            max_inflight_per_conn: 7,
+            reconnect_backoff_ms: 25.0,
+            payload_encoding: "json".to_string(),
             ..NetConfig::default()
         };
         let s = net.server_config();
         assert_eq!(s.max_conns, 3);
         assert_eq!(s.max_line_bytes, 2048);
         assert_eq!(s.read_timeout, std::time::Duration::from_millis(100));
+        assert_eq!(s.max_inflight_per_conn, 7);
         let c = net.client_config();
         assert_eq!(c.max_line_bytes, 2048);
         assert_eq!(c.connect_timeout, std::time::Duration::from_secs(2));
+        assert_eq!(c.max_inflight, 7);
+        assert_eq!(c.reconnect_backoff, std::time::Duration::from_millis(25));
+        assert_eq!(c.payload_encoding, crate::net::PayloadEncoding::Json);
     }
 
     #[test]

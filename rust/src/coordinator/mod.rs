@@ -121,9 +121,13 @@ pub use scheduler::{
     LeastLoaded, RoundRobin, Scheduler,
 };
 pub use server::{
-    DrainMode, Fleet, FleetBuilder, FleetController, MemberView, PlanMetrics, Service,
-    ServiceBuilder, SubmitError, TopologyView, ANON_BATCH_MAX,
+    DrainMode, Fleet, FleetBuilder, FleetController, MemberView, PlanMetrics, SubmitError,
+    TopologyView, ANON_BATCH_MAX,
 };
+// Deprecated pre-control-plane names, re-exported so downstream code
+// keeps compiling (with a deprecation warning) until it migrates.
+#[allow(deprecated)]
+pub use server::{Service, ServiceBuilder};
 pub use stats::ServingStats;
 pub use stealing::{
     select_batch_migration, select_steals, MigrationGroup, StealPolicy, MIGRATE_MIN_LIVE,

@@ -53,8 +53,9 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! `Service` and `ServiceBuilder` remain as aliases of [`Fleet`] and
-//! [`FleetBuilder`] for existing callers.
+//! `Service` and `ServiceBuilder` remain as **deprecated** aliases of
+//! [`Fleet`] and [`FleetBuilder`]; they are the same types, so a
+//! find/replace migrates existing callers.
 
 use super::admission::{admission_by_name, AdmissionPolicy};
 use super::batcher::{Batch, BatcherState, Shed};
@@ -96,7 +97,7 @@ const STEAL_POLL: Duration = Duration::from_millis(2);
 pub const ANON_BATCH_MAX: usize = 8;
 
 /// Why a submission was not admitted.
-#[derive(Debug, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
     /// Admission queue full (or the admission timeout elapsed) — retry
     /// later (backpressure).
@@ -453,6 +454,11 @@ pub struct FleetBuilder {
 }
 
 /// Compatibility alias for the pre-control-plane name.
+#[deprecated(
+    since = "0.2.0",
+    note = "the data plane grew a control plane and was renamed: use `FleetBuilder` \
+            (same type, same methods — a find/replace migrates callers)"
+)]
 pub type ServiceBuilder = FleetBuilder;
 
 impl FleetBuilder {
@@ -1257,6 +1263,11 @@ pub struct Fleet {
 }
 
 /// Compatibility alias for the pre-control-plane name.
+#[deprecated(
+    since = "0.2.0",
+    note = "the data plane grew a control plane and was renamed: use `Fleet` \
+            (same type, same methods — a find/replace migrates callers)"
+)]
 pub type Service = Fleet;
 
 impl Fleet {

@@ -34,11 +34,15 @@
 //!   [`RetuneDaemon`](coordinator::RetuneDaemon)), executing
 //!   AOT-compiled JAX/Pallas artifacts through PJRT ([`runtime`]).
 //!   The whole fleet is also reachable **out of process** via [`net`]:
-//!   a line-delimited JSON wire protocol served by
+//!   a versioned wire protocol (line-delimited JSON headers; protocol
+//!   v2 negotiates binary image payloads on connect) served by
 //!   [`NetServer`](net::NetServer) (`tilekit serve --listen`), consumed
-//!   by the blocking [`FleetClient`](net::FleetClient), and scaled out
-//!   by a consistent-hash [`FrontTier`](net::FrontTier) over N fleet
-//!   processes (`tilekit front --shards`).
+//!   by the pipelining, auto-reconnecting
+//!   [`FleetClient`](net::FleetClient), and scaled out by a
+//!   consistent-hash [`FrontTier`](net::FrontTier) over N fleet
+//!   processes (`tilekit front --shards`). The [`ops`] traits
+//!   ([`FleetOps`](ops::FleetOps) / [`ControlOps`](ops::ControlOps))
+//!   make the two transports interchangeable to callers.
 //! * **L2 (build time)** — `python/compile/model.py`, a JAX resize graph.
 //! * **L1 (build time)** — `python/compile/kernels/*.py`, Pallas kernels
 //!   whose `BlockSpec` output tile plays the role of the CUDA block shape.
@@ -81,6 +85,7 @@ pub mod exec;
 pub mod image;
 pub mod metrics;
 pub mod net;
+pub mod ops;
 pub mod prop;
 pub mod runtime;
 pub mod sim;

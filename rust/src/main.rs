@@ -26,9 +26,10 @@ use tilekit::bench::figures;
 use tilekit::cli::Args;
 use tilekit::config::Config;
 use tilekit::coordinator::{
-    Autoscaler, AutoscalerUpdate, FleetController, Priority, Request, RetuneDaemon, RetuneSpec,
-    ServiceBuilder, StandbyMember, SubmitError, TilePolicy,
+    Autoscaler, AutoscalerUpdate, FleetBuilder, FleetController, Priority, Request, RetuneDaemon,
+    RetuneSpec, StandbyMember, SubmitError, TilePolicy,
 };
+use tilekit::ops::{ControlOps, FleetOps, LocalFleet, TicketOps};
 use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
@@ -670,8 +671,13 @@ FLAGS
                        mean/p50/p99) and open-loop via a phased Poisson
                        trace (e2e p99, us/req), appended to the report
                        behind the same gate
-  --quick              with --serving: the small CI profile (2 members,
-                       short trace) instead of the 4-member default
+  --wire               also run the loopback wire benchmark: one mock
+                       fleet behind a NetServer, driven through a v1
+                       (JSON pixels) and a v2 (binary pixels, pipelined)
+                       FleetClient; records us/req and bytes/req for
+                       both protocol versions behind the same gate
+  --quick              with --serving/--wire: the small CI profile
+                       instead of the full default
 
 Scores are normalized by an in-run integer-spin calibration workload,
 so they transfer across machines far better than raw wall-clock us.
@@ -682,8 +688,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         print!("{BENCH_HELP}");
         return Ok(());
     }
-    if args.has("quick") && !args.has("serving") {
-        bail!("--quick only applies to the serving benchmark; add --serving");
+    if args.has("quick") && !args.has("serving") && !args.has("wire") {
+        bail!("--quick only applies to the serving/wire benchmarks; add --serving or --wire");
     }
     let full = args.has("full");
     let profile = if full {
@@ -707,6 +713,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .map(|r| r.mean_us)
             .unwrap_or(1.0);
         let records = tilekit::bench::serving_suite(calib_us, quick)?;
+        report.records.extend(records);
+    }
+    if args.has("wire") {
+        let quick = args.has("quick");
+        println!(
+            "\nwire loopback benchmark ({} profile):\n",
+            if quick { "quick" } else { "full" }
+        );
+        let calib_us = report
+            .record(tilekit::bench::gate::CALIBRATION)
+            .map(|r| r.mean_us)
+            .unwrap_or(1.0);
+        let records = tilekit::bench::wire_suite(calib_us, quick)?;
         report.records.extend(records);
     }
     if args.has("json") {
@@ -976,7 +995,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     // alongside the base fleet so scale-up routes straight to the new
     // member's best tile.
     let mut standby_policy: Option<TilePolicy> = None;
-    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    let mut builder = FleetBuilder::new(&serving, &manifest);
     if device_ids.is_empty() {
         let policy = match fixed {
             Some(t) => TilePolicy::Fixed(t),
@@ -1360,9 +1379,10 @@ FLAGS
 
 The demo fleet runs in-process over the built-in mock manifest: each
 command builds the fleet, applies the control-plane operation while
-requests are in flight, and prints the topology before and after. The
-same operations are available programmatically via Fleet::controller(),
-or remotely via net::FleetClient — which is exactly what --connect uses.
+requests are in flight, and prints the topology before and after. Both
+paths speak the transport-agnostic ops::{FleetOps, ControlOps} traits
+through one shared driver — the demo with an in-process ops::LocalFleet
+behind the traits, --connect with the pipelined net::FleetClient.
 "#;
 
 /// Print one epoch-stamped topology snapshot.
@@ -1455,7 +1475,7 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
         queue_cap: 1024,
         ..cfg.serving.clone()
     };
-    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    let mut builder = FleetBuilder::new(&serving, &manifest);
     for d in devices {
         builder = builder.device(
             d,
@@ -1468,14 +1488,19 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
             std::time::Duration::from_secs(30),
         ))
         .build()?;
-    let ctl = svc.controller();
+    // Every submit and control-plane mutation below goes through the
+    // transport-agnostic ops traits — the same code path `fleet
+    // --connect` drives over the wire, with LocalFleet behind the trait
+    // instead of FleetClient.
+    let fleet = Arc::new(svc);
+    let ops = LocalFleet::new(Arc::clone(&fleet), demo_backend_factory());
     println!(
         "demo fleet: {} member(s), mock backends, per-device tuned tiles\n",
-        svc.member_count()
+        fleet.member_count()
     );
-    print_topology(&ctl);
+    print_topology(ops.controller());
 
-    let keys = svc.keys();
+    let keys = fleet.keys();
     let mut rng = tilekit::util::Pcg32::seeded(7);
     let mut submit_wave = |n: usize| -> Result<Vec<tilekit::coordinator::Ticket>> {
         (0..n)
@@ -1486,7 +1511,7 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
                     key.src.0 as usize,
                     rng.next_u64(),
                 );
-                svc.submit(Request::new(key.kernel, img, key.scale))
+                ops.submit_request(Request::new(key.kernel, img, key.scale))
                     .map_err(|e| anyhow!("{e}"))
             })
             .collect()
@@ -1497,7 +1522,7 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
         "topology" => {}
         "drain" => {
             println!("\n=> drain('{target}') with {} requests in flight", first.len());
-            ctl.drain(&target)?;
+            ops.drain_member(&target).map_err(|e| anyhow!("{e}"))?;
         }
         "retune" => {
             let before = outcome
@@ -1507,7 +1532,9 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
             let flipped = outcome
                 .with_flipped_winner(&target)
                 .ok_or_else(|| anyhow!("no launchable point to flip for '{target}'"))?;
-            let after = ctl.retune(&target, &flipped)?;
+            let after = ops
+                .retune_member(&target, &flipped)
+                .map_err(|e| anyhow!("{e}"))?;
             println!(
                 "\n=> retune('{target}'): tile {before} -> {} with {} requests in flight \
                  (no drain; epoch unchanged — retune is not a membership change)",
@@ -1533,9 +1560,10 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
         completed += 1;
     }
     println!("\ncompleted {completed}/{n_requests}; final state:\n");
-    print_topology(&ctl);
+    print_topology(ops.controller());
     if action == "drain" {
-        let drained_new: u64 = ctl
+        let drained_new: u64 = ops
+            .controller()
             .topology()
             .members
             .iter()
@@ -1547,8 +1575,18 @@ fn cmd_fleet(args: &Args, cfg: &Config) -> Result<()> {
              the drain routed to its peers, and nothing in flight was lost"
         );
     }
-    svc.shutdown();
+    drop(submit_wave);
+    drop(ops);
+    if let Ok(f) = Arc::try_unwrap(fleet) {
+        f.shutdown();
+    }
     Ok(())
+}
+
+/// Mock backends for members a control verb adds at runtime — the demo
+/// analogue of the factory `serve --listen` hands its `NetServer`.
+fn demo_backend_factory() -> tilekit::net::BackendFactory {
+    Arc::new(|_d: &DeviceDescriptor| Arc::new(MockEngine::new()) as Arc<dyn ResizeBackend>)
 }
 
 /// Build an [`AutoscalerUpdate`] from `--low` / `--high` / `--cooldown-ms`.
@@ -1636,7 +1674,7 @@ fn cmd_fleet_autoscaler_demo(args: &Args, cfg: &Config) -> Result<()> {
         queue_cap: 1024,
         ..cfg.serving.clone()
     };
-    let mut builder = ServiceBuilder::new(&serving, &manifest);
+    let mut builder = FleetBuilder::new(&serving, &manifest);
     for d in devices {
         builder = builder.device(
             d,
@@ -1656,38 +1694,37 @@ fn cmd_fleet_autoscaler_demo(args: &Args, cfg: &Config) -> Result<()> {
     // The demo loop starts per the config table (parked by default), so
     // `status` shows the resting state and `enable` has work to do.
     let scaler = Autoscaler::spawn(svc.controller(), standby, cfg.autoscaler.opts())?;
-    let handle = scaler.handle();
+    let fleet = Arc::new(svc);
+    // The sub-action runs through the same transport-agnostic driver
+    // `fleet --connect autoscaler` uses, with the live handle wired into
+    // the in-process ControlOps implementation.
+    let ops = LocalFleet::new(Arc::clone(&fleet), demo_backend_factory())
+        .with_autoscaler(scaler.handle());
     println!(
         "demo fleet: {} member(s) + {} standby, mock backends, per-device tuned tiles\n",
-        svc.member_count(),
+        fleet.member_count(),
         standby_ids.len()
     );
-    println!("before: {}", handle.view().summary());
-    match sub {
-        "status" => {}
-        "enable" => handle.apply(&AutoscalerUpdate {
-            enabled: Some(true),
-            ..Default::default()
-        })?,
-        "disable" => handle.apply(&AutoscalerUpdate {
-            enabled: Some(false),
-            ..Default::default()
-        })?,
-        "set" => {
-            let update = autoscaler_update_from_flags(args, cfg.autoscaler.poll_ms)?;
-            handle.apply(&update)?;
-        }
-        _ => unreachable!("validated above"),
-    }
+    println!(
+        "before: {}",
+        ops.autoscaler_desc().map_err(|e| anyhow!("{e}"))?.summary()
+    );
     if sub != "status" {
-        println!("after:  {}", handle.view().summary());
+        let desc = fleet_autoscaler_action(&ops, args, sub)?;
+        println!("after:  {}", desc.summary());
     }
     scaler.stop();
-    svc.shutdown();
+    drop(ops);
+    if let Ok(f) = Arc::try_unwrap(fleet) {
+        f.shutdown();
+    }
     Ok(())
 }
 
-fn print_remote_topology(topo: &tilekit::net::TopologyDesc) {
+/// Print an epoch-stamped [`TopologyDesc`](tilekit::net::TopologyDesc)
+/// snapshot — the transport-neutral topology shape both `ControlOps`
+/// implementations hand out.
+fn print_topology_desc(topo: &tilekit::net::TopologyDesc) {
     println!("topology epoch {}:", topo.epoch);
     let mut t = tilekit::util::text::Table::new(vec![
         "id", "member", "device", "tile", "batch max", "draining", "admitted", "completed",
@@ -1709,40 +1746,67 @@ fn print_remote_topology(topo: &tilekit::net::TopologyDesc) {
     print!("{}", t.render());
 }
 
-/// `tilekit fleet --connect <addr> <action>`: the same control-plane verbs
-/// as the in-process demo, but spoken over the wire to a `serve --listen`
-/// fleet — plus the membership/reconfiguration verbs that only make sense
-/// against a long-lived remote process.
-fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
-    use tilekit::coordinator::DrainMode;
-    use tilekit::net::{FleetClient, ListenAddr};
+/// The `autoscaler <status|enable|disable|set>` sub-actions, written
+/// once against [`ControlOps`]: the in-process demo and `fleet
+/// --connect` both dispatch through here. Returns the post-action
+/// autoscaler state.
+fn fleet_autoscaler_action<C: ControlOps>(
+    ctl: &C,
+    args: &Args,
+    sub: &str,
+) -> Result<tilekit::net::AutoscalerDesc> {
+    match sub {
+        "status" => ctl.autoscaler_desc().map_err(|e| anyhow!("{e}")),
+        "enable" | "disable" => {
+            let update = AutoscalerUpdate {
+                enabled: Some(sub == "enable"),
+                ..Default::default()
+            };
+            ctl.apply_autoscaler(&update).map_err(|e| anyhow!("{e}"))
+        }
+        "set" => {
+            // The loop's own poll interval scales --cooldown-ms into
+            // ticks, wherever the loop runs.
+            let poll_ms = ctl.autoscaler_desc().map_err(|e| anyhow!("{e}"))?.poll_ms;
+            let update = autoscaler_update_from_flags(args, poll_ms as f64)?;
+            ctl.apply_autoscaler(&update).map_err(|e| anyhow!("{e}"))
+        }
+        other => bail!(
+            "unknown autoscaler action '{other}' (expected one of: status, \
+             enable, disable, set)"
+        ),
+    }
+}
 
-    let action = args.positional.first().map(String::as_str).ok_or_else(|| {
-        anyhow!(
-            "usage: tilekit fleet --connect <addr> <topology|stats|drain|retune|\
-             add-member|remove-member|set-scheduler|set-admission|set-steal|\
-             autoscaler> [flags]"
-        )
-    })?;
-    let addr = ListenAddr::parse(addr)?;
-    let client = FleetClient::connect_with(&addr, cfg.net.client_config())
-        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+/// One driver for every fleet control verb, written against the
+/// transport-agnostic ops traits. `fleet --connect` hands it the wire
+/// client; the in-process demo hands it a
+/// [`LocalFleet`](tilekit::ops::LocalFleet). Flag parsing, dispatch, and
+/// output are identical either way — only the implementation behind the
+/// traits differs.
+fn fleet_control_action<C: ControlOps + FleetOps>(
+    ctl: &C,
+    args: &Args,
+    cfg: &Config,
+    action: &str,
+) -> Result<()> {
+    use tilekit::coordinator::DrainMode;
     let need_device = || -> Result<&str> {
         args.get("device")
             .ok_or_else(|| anyhow!("'{action}' needs --device <registry id>"))
     };
     match action {
         "topology" => {
-            let topo = client.topology().map_err(|e| anyhow!("{e}"))?;
-            print_remote_topology(&topo);
+            let topo = ctl.topology_desc().map_err(|e| anyhow!("{e}"))?;
+            print_topology_desc(&topo);
         }
         "stats" => {
-            let stats = client.stats().map_err(|e| anyhow!("{e}"))?;
+            let stats = ctl.fleet_stats().map_err(|e| anyhow!("{e}"))?;
             println!("{}", stats.summary());
         }
         "drain" => {
             let device = need_device()?;
-            let epoch = client.drain(device).map_err(|e| anyhow!("{e}"))?;
+            let epoch = ctl.drain_member(device).map_err(|e| anyhow!("{e}"))?;
             println!("drain('{device}') acknowledged at epoch {epoch}");
         }
         "retune" => {
@@ -1766,7 +1830,9 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                         .ok_or_else(|| anyhow!("no launchable point to flip for '{device}'"))?
                 }
             };
-            let tile = client.retune(device, &outcome).map_err(|e| anyhow!("{e}"))?;
+            let tile = ctl
+                .retune_member(device, &outcome)
+                .map_err(|e| anyhow!("{e}"))?;
             println!(
                 "retune('{device}'): remote tile now {}",
                 tile.map(|t| t.label()).unwrap_or_else(|| "-".into())
@@ -1778,8 +1844,8 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                 Some(t) => TilePolicy::Fixed(t.parse().map_err(|e: String| anyhow!(e))?),
                 None => TilePolicy::PortableFallback,
             };
-            let (member, epoch) = client
-                .add_member(device, &policy)
+            let (member, epoch) = ctl
+                .add_member_by_id(device, &policy)
                 .map_err(|e| anyhow!("{e}"))?;
             println!("added '{device}' as member {member}; epoch {epoch}");
         }
@@ -1790,8 +1856,8 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                 "immediate" => DrainMode::Immediate,
                 other => bail!("unknown --mode '{other}' (graceful|immediate)"),
             };
-            let epoch = client
-                .remove_member(device, mode)
+            let epoch = ctl
+                .remove_member_by_id(device, mode)
                 .map_err(|e| anyhow!("{e}"))?;
             println!("removed '{device}'; epoch {epoch}");
         }
@@ -1799,7 +1865,7 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
             let name = args
                 .get("scheduler")
                 .ok_or_else(|| anyhow!("set-scheduler needs --scheduler <name>"))?;
-            client.set_scheduler(name).map_err(|e| anyhow!("{e}"))?;
+            ctl.set_scheduler_named(name).map_err(|e| anyhow!("{e}"))?;
             println!("scheduler set to '{name}'");
         }
         "set-admission" => {
@@ -1807,8 +1873,7 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                 .get("policy")
                 .ok_or_else(|| anyhow!("set-admission needs --policy <name>"))?;
             let timeout_ms: u64 = args.get_parsed_or("timeout-ms", 50)?;
-            client
-                .set_admission(name, std::time::Duration::from_millis(timeout_ms))
+            ctl.set_admission_named(name, std::time::Duration::from_millis(timeout_ms))
                 .map_err(|e| anyhow!("{e}"))?;
             println!("admission set to '{name}' (timeout {timeout_ms} ms)");
         }
@@ -1819,8 +1884,7 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
                 other => bail!("unknown --steal '{other}' (on|off)"),
             };
             let threshold: usize = args.get_parsed_or("steal-threshold", 2)?;
-            client
-                .set_steal_config(enabled, threshold)
+            ctl.set_stealing(enabled, threshold)
                 .map_err(|e| anyhow!("{e}"))?;
             println!(
                 "work stealing {} (threshold {threshold})",
@@ -1829,32 +1893,8 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
         }
         "autoscaler" => {
             let sub = args.positional.get(1).map(String::as_str).unwrap_or("status");
-            match sub {
-                "status" => {
-                    let desc = client.autoscaler().map_err(|e| anyhow!("{e}"))?;
-                    println!("{}", desc.summary());
-                }
-                "enable" | "disable" => {
-                    let update = AutoscalerUpdate {
-                        enabled: Some(sub == "enable"),
-                        ..Default::default()
-                    };
-                    let desc = client.set_autoscaler(&update).map_err(|e| anyhow!("{e}"))?;
-                    println!("{}", desc.summary());
-                }
-                "set" => {
-                    // The remote loop's own poll interval scales
-                    // --cooldown-ms into ticks.
-                    let poll_ms = client.autoscaler().map_err(|e| anyhow!("{e}"))?.poll_ms;
-                    let update = autoscaler_update_from_flags(args, poll_ms as f64)?;
-                    let desc = client.set_autoscaler(&update).map_err(|e| anyhow!("{e}"))?;
-                    println!("{}", desc.summary());
-                }
-                other => bail!(
-                    "unknown autoscaler action '{other}' (expected one of: status, \
-                     enable, disable, set)"
-                ),
-            }
+            let desc = fleet_autoscaler_action(ctl, args, sub)?;
+            println!("{}", desc.summary());
         }
         other => bail!(
             "unknown remote fleet action '{other}' (expected one of: topology, stats, \
@@ -1863,6 +1903,28 @@ fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
         ),
     }
     Ok(())
+}
+
+/// `tilekit fleet --connect <addr> <action>`: the same control-plane verbs
+/// as the in-process demo, but spoken over the wire to a `serve --listen`
+/// fleet — plus the membership/reconfiguration verbs that only make sense
+/// against a long-lived remote process. Everything after the dial is the
+/// shared [`fleet_control_action`] driver with the pipelined, v2-capable
+/// `FleetClient` behind the ops traits.
+fn cmd_fleet_remote(args: &Args, cfg: &Config, addr: &str) -> Result<()> {
+    use tilekit::net::{FleetClient, ListenAddr};
+
+    let action = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow!(
+            "usage: tilekit fleet --connect <addr> <topology|stats|drain|retune|\
+             add-member|remove-member|set-scheduler|set-admission|set-steal|\
+             autoscaler> [flags]"
+        )
+    })?;
+    let addr = ListenAddr::parse(addr)?;
+    let client = FleetClient::connect_with(&addr, cfg.net.client_config())
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    fleet_control_action(&client, args, cfg, action)
 }
 
 const SUBMIT_HELP: &str = r#"tilekit submit — send resize requests to a remote fleet over the wire
@@ -1913,6 +1975,33 @@ fn cmd_submit(args: &Args, cfg: &Config) -> Result<()> {
         "submitting {n_requests} {} {w}x{h} s{scale} request(s) to {addr}",
         kernel.label()
     );
+    run_submit_batch(
+        &client,
+        kernel,
+        (w, h),
+        scale,
+        n_requests,
+        seed,
+        priority,
+        deadline_ms,
+    )
+}
+
+/// Submit `n_requests` generated test scenes through any [`FleetOps`]
+/// implementation — `submit --connect` hands this the wire client — then
+/// wait for every ticket, printing the serving device and end-to-end
+/// latency per request.
+#[allow(clippy::too_many_arguments)]
+fn run_submit_batch<F: FleetOps>(
+    fleet: &F,
+    kernel: Interpolator,
+    (w, h): (u32, u32),
+    scale: u32,
+    n_requests: usize,
+    seed: u64,
+    priority: Priority,
+    deadline_ms: Option<u64>,
+) -> Result<()> {
     let mut tickets = Vec::with_capacity(n_requests);
     for i in 0..n_requests {
         let img = generate::test_scene(w as usize, h as usize, seed + i as u64);
@@ -1921,12 +2010,14 @@ fn cmd_submit(args: &Args, cfg: &Config) -> Result<()> {
             req = req.deadline(std::time::Duration::from_millis(ms));
         }
         let started = std::time::Instant::now();
-        let ticket = client.submit(&req).map_err(|e| anyhow!("submit: {e}"))?;
+        let ticket = fleet
+            .submit_request(req)
+            .map_err(|e| anyhow!("submit: {e}"))?;
         tickets.push((ticket, started));
     }
     for (i, (ticket, started)) in tickets.into_iter().enumerate() {
-        let device = ticket.device_id().map(str::to_string);
-        let img = ticket.wait().map_err(|e| anyhow!("wait: {e}"))?;
+        let device = TicketOps::device_id(&ticket).map(str::to_string);
+        let img = TicketOps::wait(ticket).map_err(|e| anyhow!("wait: {e}"))?;
         println!(
             "  #{i}: {}x{} from {} in {}",
             img.width(),

@@ -4,23 +4,38 @@
 //! in-process API: `submit(...)?.wait()?` on the data plane, and the
 //! full [`FleetController`](crate::coordinator::FleetController) verb
 //! set on the control plane. One client = one connection; the client is
-//! `Clone` (clones share the connection) and keeps exactly one call
-//! outstanding at a time, so responses always arrive in call order.
+//! `Clone` (clones share the connection) and **pipelines** its calls:
+//! many requests may be outstanding at once, a background reader thread
+//! demultiplexes responses by frame id to per-call waiters, and a slow
+//! `wait` on one thread never blocks a `topology` on another.
+//!
+//! On connect the client runs the `hello` exchange (see
+//! [`protocol`](super::protocol)): against a v2 server the session is
+//! pinned to protocol v2 and images travel as length-prefixed binary
+//! blocks; a pre-v2 server rejects the unknown verb on its id-0 error
+//! channel and the client silently falls back to v1 JSON-array frames.
+//! Set [`NetClientConfig::payload_encoding`] to
+//! [`PayloadEncoding::Json`] to skip negotiation and force v1.
 //!
 //! Errors stay typed end to end: a remote
 //! [`SubmitError`](crate::coordinator::SubmitError) comes back as
 //! [`ClientError::Submit`] carrying the same variant the in-process
 //! caller would have matched on.
 //!
-//! A response timeout (or any framing failure) **poisons** the shared
-//! connection: the late response can no longer be told apart from the
-//! next call's answer, so every subsequent call fails fast with a
-//! "connection is dead" transport error until
-//! [`FleetClient::reconnect`] dials a fresh connection in place.
+//! A response timeout or transport failure kills the current connection
+//! *generation*: its in-flight calls fail with typed transport errors,
+//! and the next call **automatically redials** with jittered
+//! exponential backoff (budget [`NetClientConfig::reconnect_max_tries`]
+//! attempts per call). Redialing is unconditional before anything hits
+//! the wire; once a frame may have reached the server, only replay-safe
+//! verbs (`topology`, `stats`, `autoscaler`) retry — a submit or
+//! control mutation surfaces the failure instead of risking a duplicate
+//! side effect. [`FleetClient::reconnect`] remains for callers that
+//! want to force a fresh dial eagerly.
 
 use super::protocol::{
-    self, AutoscalerDesc, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb,
-    WireError, WireStats,
+    self, AutoscalerDesc, PayloadEncoding, ProtocolError, RequestFrame, ResponseFrame,
+    TopologyDesc, Verb, WireError, WireStats, PROTOCOL_V2, PROTOCOL_VERSION,
 };
 use super::server::ListenAddr;
 use crate::autotuner::TuningOutcome;
@@ -28,12 +43,20 @@ use crate::codec::json::Json;
 use crate::coordinator::{AutoscalerUpdate, DrainMode, Request, SubmitError, TilePolicy};
 use crate::image::Image;
 use crate::tiling::TileDim;
+use crate::util::Pcg32;
+use std::collections::HashMap;
 use std::fmt;
-use std::io::{BufReader, Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::os::unix::net::UnixStream;
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, SystemTime};
+
+/// How often the demultiplexer reader wakes from a quiet socket to
+/// check whether its generation has been put down.
+const READER_TICK: Duration = Duration::from_millis(100);
 
 /// Client-side knobs; defaults match
 /// [`NetConfig`](crate::config::NetConfig).
@@ -45,10 +68,25 @@ pub struct NetClientConfig {
     /// connection is declared dead. Must exceed the server's per-call
     /// `wait` cap (5 s).
     pub response_timeout: Duration,
-    /// Per-line byte cap for responses.
+    /// Per-line byte cap for responses; binary payload blocks are held
+    /// to the same budget.
     pub max_line_bytes: usize,
     /// `timeout_ms` sent with each remote `wait` poll.
     pub wait_poll: Duration,
+    /// Most calls allowed in flight on the connection at once; callers
+    /// past the cap block until a response frees a slot.
+    pub max_inflight: usize,
+    /// Base delay of the jittered exponential backoff between automatic
+    /// redial attempts. Zero disables the sleep (retries stay bounded
+    /// by [`reconnect_max_tries`](Self::reconnect_max_tries)).
+    pub reconnect_backoff: Duration,
+    /// Attempt budget per call: how many times one call may dial (or
+    /// redial) before giving up with a transport error.
+    pub reconnect_max_tries: u32,
+    /// Wire encoding for image payloads. [`PayloadEncoding::Binary`]
+    /// negotiates protocol v2 on connect and falls back to v1 against
+    /// an old server; [`PayloadEncoding::Json`] forces v1.
+    pub payload_encoding: PayloadEncoding,
 }
 
 impl Default for NetClientConfig {
@@ -58,6 +96,10 @@ impl Default for NetClientConfig {
             response_timeout: Duration::from_secs(10),
             max_line_bytes: protocol::DEFAULT_MAX_LINE_BYTES,
             wait_poll: Duration::from_secs(2),
+            max_inflight: 32,
+            reconnect_backoff: Duration::from_millis(50),
+            reconnect_max_tries: 3,
+            payload_encoding: PayloadEncoding::Binary,
         }
     }
 }
@@ -99,6 +141,24 @@ impl fmt::Display for ClientError {
 }
 
 impl std::error::Error for ClientError {}
+
+/// Transport counters for one [`FleetClient`], cumulative across
+/// reconnects. The byte counters cover request and response frames
+/// (header line + binary block); the one-time `hello` exchange is not
+/// counted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireMetrics {
+    /// Total request bytes written to the socket.
+    pub bytes_sent: u64,
+    /// Total response bytes read from the socket.
+    pub bytes_received: u64,
+    /// How many times a fresh connection replaced a dead one (the
+    /// initial dial is not a reconnect).
+    pub reconnects: u64,
+    /// Whether the *current* session negotiated protocol v2 (false when
+    /// disconnected).
+    pub v2_session: bool,
+}
 
 enum NetStream {
     Tcp(TcpStream),
@@ -176,39 +236,246 @@ impl Write for NetStream {
     }
 }
 
-struct Conn {
-    reader: BufReader<NetStream>,
-    writer: NetStream,
-    next_id: u64,
-    /// Why this connection can no longer be trusted (response timeout,
-    /// framing failure, id desync). Once set, every call fails fast
-    /// with a clear error instead of reading a stale in-flight response
-    /// as if it answered the new request; [`FleetClient::reconnect`]
-    /// clears it by dialing fresh.
-    dead: Option<String>,
+/// A demultiplexed response: the frame plus its binary block, if the
+/// header announced one.
+type Reply = (ResponseFrame, Option<Vec<u8>>);
+
+/// One connection *generation*: a dialed socket, the protocol version
+/// its `hello` exchange pinned, and the table of calls awaiting
+/// responses on it. Generations are immutable once dead — a redial
+/// builds a new one, so late frames from an old socket can never be
+/// routed to new callers.
+struct Generation {
+    /// Protocol version the session speaks (1 or 2).
+    version: u64,
+    /// Write half. Callers serialize frame writes through this lock
+    /// only — reads happen on the reader thread.
+    writer: Mutex<NetStream>,
+    /// Spare handle used only to shut the socket down; shutdown takes
+    /// `&self`, so a killer never waits on the writer lock.
+    socket: NetStream,
+    state: Mutex<GenState>,
+    /// Signalled when a waiter slot frees up or the generation dies.
+    room: Condvar,
 }
 
-impl Conn {
-    /// Mark the connection dead and tear the socket down (so the server
-    /// notices and any late response is discarded by the kernel, not
-    /// misread by a later call).
-    fn poison(&mut self, why: String) -> ClientError {
-        if self.dead.is_none() {
-            self.dead = Some(why.clone());
+struct GenState {
+    /// Why this generation can no longer be trusted, once set.
+    dead: Option<String>,
+    /// In-flight calls by frame id. `len()` is the inflight count; the
+    /// map doubles as the admission gate for `max_inflight`.
+    waiters: HashMap<u64, mpsc::Sender<Reply>>,
+}
+
+impl Generation {
+    fn lock_state(&self) -> MutexGuard<'_, GenState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn is_dead(&self) -> bool {
+        self.lock_state().dead.is_some()
+    }
+
+    fn dead_reason(&self) -> String {
+        self.lock_state()
+            .dead
+            .clone()
+            .unwrap_or_else(|| "connection replaced".into())
+    }
+
+    /// Put the generation down: record why, fail every pending call
+    /// (dropping a waiter's sender wakes its `recv_timeout` with
+    /// `Disconnected`), and tear the socket down so the reader thread
+    /// and the server both notice.
+    fn kill(&self, why: &str) {
+        {
+            let mut st = self.lock_state();
+            if st.dead.is_none() {
+                st.dead = Some(why.to_string());
+            }
+            st.waiters.clear();
         }
-        self.writer.shutdown_both();
-        ClientError::Transport(why)
+        self.room.notify_all();
+        self.socket.shutdown_both();
+    }
+
+    /// Hand a response to whichever call registered its id. A missing
+    /// waiter means the caller already gave up; the frame is dropped
+    /// without disturbing the stream.
+    fn route(&self, resp: ResponseFrame, blob: Option<Vec<u8>>) {
+        let tx = self.lock_state().waiters.remove(&resp.id);
+        if let Some(tx) = tx {
+            let _ = tx.send((resp, blob));
+        }
+        self.room.notify_all();
+    }
+}
+
+/// Byte/reconnect counters shared with reader threads. Kept in its own
+/// `Arc` (not inside [`ClientShared`]) so a parked reader never keeps
+/// the client — and therefore itself — alive.
+#[derive(Default)]
+struct Metrics {
+    bytes_sent: AtomicU64,
+    bytes_received: AtomicU64,
+    reconnects: AtomicU64,
+}
+
+struct ClientShared {
+    cfg: NetClientConfig,
+    addr: ListenAddr,
+    /// Frame ids count up monotonically across generations, so frames
+    /// from two connection generations can never be confused.
+    next_id: AtomicU64,
+    current: Mutex<Option<Arc<Generation>>>,
+    /// Serializes redials so a burst of failing calls dials once, not
+    /// once each.
+    dial_lock: Mutex<()>,
+    jitter: Mutex<Pcg32>,
+    metrics: Arc<Metrics>,
+}
+
+impl Drop for ClientShared {
+    fn drop(&mut self) {
+        let gen = match self.current.get_mut() {
+            Ok(cur) => cur.take(),
+            Err(poisoned) => poisoned.into_inner().take(),
+        };
+        if let Some(g) = gen {
+            g.kill("client dropped");
+        }
+    }
+}
+
+/// The demultiplexer: reads frames off one generation's socket and
+/// routes them to per-call waiters by id. Any framing failure — or an
+/// id-0 error frame, the server's out-of-band channel for framing
+/// complaints — kills the generation, because the stream can no longer
+/// be trusted to answer anyone.
+fn reader_loop(
+    gen: &Generation,
+    reader: &mut BufReader<NetStream>,
+    max_line_bytes: usize,
+    metrics: &Metrics,
+) {
+    loop {
+        if gen.is_dead() {
+            return;
+        }
+        let line = match protocol::read_frame_line(reader, max_line_bytes) {
+            Ok(Some(l)) => l,
+            Ok(None) => {
+                gen.kill("server closed the connection");
+                return;
+            }
+            // Quiet socket: per-call deadlines live with the callers,
+            // the reader just checks for shutdown and keeps listening.
+            Err(ProtocolError::Timeout) => continue,
+            Err(e) => {
+                gen.kill(&e.to_string());
+                return;
+            }
+        };
+        let header = match Json::parse(line.trim_end_matches(['\r', '\n'])) {
+            Ok(j) => j,
+            Err(e) => {
+                gen.kill(&format!("malformed response frame: {e}"));
+                return;
+            }
+        };
+        let extra = match protocol::frame_extra_bytes(&header) {
+            Ok(n) => n,
+            Err(e) => {
+                gen.kill(&e.to_string());
+                return;
+            }
+        };
+        let blob = if extra > 0 {
+            match protocol::read_payload(reader, extra, max_line_bytes) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    gen.kill(&e.to_string());
+                    return;
+                }
+            }
+        } else {
+            None
+        };
+        metrics
+            .bytes_received
+            .fetch_add((line.len() + extra + 1) as u64, Ordering::Relaxed);
+        let resp = match ResponseFrame::from_json(&header) {
+            Ok(r) => r,
+            Err(e) => {
+                gen.kill(&e.to_string());
+                return;
+            }
+        };
+        if resp.id == 0 {
+            let why = match &resp.body {
+                Err(e) => format!("server reported: {e}"),
+                Ok(_) => "server sent an id-0 response".to_string(),
+            };
+            gen.kill(&why);
+            return;
+        }
+        gen.route(resp, blob);
+    }
+}
+
+/// Run the client half of the `hello` exchange on a fresh connection;
+/// returns whether the session speaks v2. A pre-v2 server answers the
+/// unknown verb with an error frame and keeps the connection usable —
+/// that is the v1 fallback, not a failure.
+fn negotiate_session<R: BufRead, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+    id: u64,
+    max_line_bytes: usize,
+) -> Result<bool, ClientError> {
+    let frame = RequestFrame::new(id, Verb::Hello, protocol::encode_hello(PROTOCOL_V2));
+    writer
+        .write_all(&frame.to_wire(PROTOCOL_VERSION, None))
+        .and_then(|_| writer.flush())
+        .map_err(|e| ClientError::Transport(format!("hello send failed: {e}")))?;
+    let line = match protocol::read_frame_line(reader, max_line_bytes) {
+        Ok(Some(l)) => l,
+        Ok(None) => {
+            return Err(ClientError::Transport(
+                "server closed the connection during hello".into(),
+            ))
+        }
+        Err(ProtocolError::Timeout) => {
+            return Err(ClientError::Transport("no response to hello".into()))
+        }
+        Err(e) => return Err(ClientError::Protocol(e)),
+    };
+    let resp = ResponseFrame::parse(&line).map_err(ClientError::Protocol)?;
+    match resp.body {
+        Ok(body) if resp.id == id => {
+            let version = body
+                .get("version")
+                .and_then(Json::as_u64)
+                .unwrap_or(PROTOCOL_VERSION);
+            Ok(version >= PROTOCOL_V2)
+        }
+        Ok(_) => Err(ClientError::Transport(format!(
+            "hello answered with id {} instead of {id}",
+            resp.id
+        ))),
+        // An old server reports `unknown verb 'hello'` (on its id-0
+        // error channel) and keeps the line open: speak v1 to it.
+        Err(_) => Ok(false),
     }
 }
 
 /// A blocking remote handle to a [`Fleet`](crate::coordinator::Fleet)
 /// served by a [`NetServer`](super::NetServer). Cheap to clone; clones
-/// share one connection and serialize their calls.
+/// share one pipelined connection, and each call gets its own response
+/// slot, so clones on different threads proceed concurrently.
 #[derive(Clone)]
 pub struct FleetClient {
-    conn: Arc<Mutex<Conn>>,
-    cfg: Arc<NetClientConfig>,
-    addr: Arc<ListenAddr>,
+    shared: Arc<ClientShared>,
 }
 
 impl FleetClient {
@@ -217,146 +484,336 @@ impl FleetClient {
         FleetClient::connect_with(addr, NetClientConfig::default())
     }
 
+    /// Connect with explicit knobs. Dials (and runs the `hello`
+    /// exchange, unless `payload_encoding` is `Json`) eagerly, so an
+    /// unreachable server fails here rather than on the first call.
     pub fn connect_with(
         addr: &ListenAddr,
         cfg: NetClientConfig,
     ) -> Result<FleetClient, ClientError> {
-        let stream = NetStream::connect(addr, &cfg)?;
-        stream
-            .set_read_timeout(cfg.response_timeout)
-            .map_err(|e| ClientError::Transport(e.to_string()))?;
-        let reader = BufReader::new(
-            stream
-                .try_clone()
-                .map_err(|e| ClientError::Transport(e.to_string()))?,
-        );
-        Ok(FleetClient {
-            conn: Arc::new(Mutex::new(Conn {
-                reader,
-                writer: stream,
-                next_id: 1,
-                dead: None,
-            })),
-            cfg: Arc::new(cfg),
-            addr: Arc::new(addr.clone()),
-        })
+        let seed = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| u64::from(d.subsec_nanos()) ^ d.as_secs())
+            .unwrap_or(0x9e37_79b9_7f4a_7c15);
+        let client = FleetClient {
+            shared: Arc::new(ClientShared {
+                cfg,
+                addr: addr.clone(),
+                next_id: AtomicU64::new(1),
+                current: Mutex::new(None),
+                dial_lock: Mutex::new(()),
+                jitter: Mutex::new(Pcg32::seeded(seed)),
+                metrics: Arc::new(Metrics::default()),
+            }),
+        };
+        client.ensure_gen()?;
+        Ok(client)
     }
 
     /// The address this client connected to.
     pub fn addr(&self) -> &ListenAddr {
-        &self.addr
+        &self.shared.addr
     }
 
-    /// One request/response exchange. Holding the lock across both
-    /// halves is what guarantees in-order, one-outstanding framing.
-    ///
-    /// A failure that leaves the stream untrustworthy — response
-    /// timeout (the late response would answer the *next* call),
-    /// transport/framing breakage, or an id desync — poisons the shared
-    /// connection: every later call fails fast with a "connection is
-    /// dead" transport error until [`reconnect`](FleetClient::reconnect).
-    fn call(&self, verb: Verb, payload: Json) -> Result<Json, ClientError> {
-        let mut conn = self
-            .conn
-            .lock()
-            .map_err(|_| ClientError::Transport("client connection poisoned".into()))?;
-        if let Some(why) = &conn.dead {
-            return Err(ClientError::Transport(format!(
-                "connection to {} is dead ({why}); reconnect to retry",
-                self.addr
-            )));
-        }
-        let id = conn.next_id;
-        conn.next_id += 1;
-        let line = RequestFrame::new(id, verb, payload).to_line();
-        if let Err(e) = conn
-            .writer
-            .write_all(line.as_bytes())
-            .and_then(|_| conn.writer.flush())
-        {
-            return Err(conn.poison(format!("send failed: {e}")));
-        }
-        let resp_line = match protocol::read_frame_line(&mut conn.reader, self.cfg.max_line_bytes)
-        {
-            Ok(Some(l)) => l,
-            Ok(None) => return Err(conn.poison("server closed the connection".into())),
-            Err(ProtocolError::Timeout) => {
-                return Err(conn.poison(format!(
-                    "no response within {:?}",
-                    self.cfg.response_timeout
-                )))
-            }
-            Err(e) => {
-                // Oversized/truncated/io all leave the line framing
-                // unrecoverable mid-stream.
-                conn.poison(e.to_string());
-                return Err(ClientError::Protocol(e));
-            }
-        };
-        let resp = ResponseFrame::parse(&resp_line).map_err(ClientError::Protocol)?;
-        if resp.id != id {
-            // id 0 is the server's out-of-band channel for framing
-            // errors; anything else means the stream is out of sync.
-            return match resp.body {
-                Err(e) => Err(ClientError::Remote(e)),
-                Ok(_) => Err(conn.poison(format!(
-                    "response id {} does not match call id {id}",
-                    resp.id
-                ))),
-            };
-        }
-        match resp.body {
-            Ok(body) => Ok(body),
-            Err(wire) => match wire.to_submit() {
-                Some(se) => Err(ClientError::Submit(se)),
-                None => Err(ClientError::Remote(wire)),
-            },
+    /// Cumulative transport counters (bytes on the wire, reconnects)
+    /// plus whether the current session speaks protocol v2.
+    pub fn wire_metrics(&self) -> WireMetrics {
+        let m = &self.shared.metrics;
+        WireMetrics {
+            bytes_sent: m.bytes_sent.load(Ordering::Relaxed),
+            bytes_received: m.bytes_received.load(Ordering::Relaxed),
+            reconnects: m.reconnects.load(Ordering::Relaxed),
+            v2_session: self
+                .live_gen()
+                .map(|g| g.version >= PROTOCOL_V2)
+                .unwrap_or(false),
         }
     }
 
-    /// Whether the shared connection has been declared dead — poisoned
-    /// by a response timeout, a framing failure, or an id desync.
+    /// Whether the client is currently disconnected (the last
+    /// connection died and nothing has redialed yet). Calls made in
+    /// this state redial automatically; this is observability, not a
+    /// gate.
     pub fn is_dead(&self) -> bool {
-        self.conn.lock().map(|c| c.dead.is_some()).unwrap_or(true)
+        self.live_gen().is_none()
     }
 
-    /// Replace a dead (or live) connection with a freshly dialed one,
-    /// shared by all clones of this client. Server-side tickets from
-    /// the old connection are settled by the server when it notices the
-    /// close, so outstanding [`RemoteTicket`]s will report not-found.
+    /// Force a fresh dial now, replacing the current connection (live
+    /// or dead) for all clones. Calls redial automatically on failure,
+    /// so this is only needed to *eagerly* re-establish connectivity —
+    /// e.g. a health prober that wants dial errors surfaced on its own
+    /// schedule. Server-side tickets from the old connection are
+    /// settled by the server when it notices the close.
     pub fn reconnect(&self) -> Result<(), ClientError> {
-        let stream = NetStream::connect(&self.addr, &self.cfg)?;
-        stream
-            .set_read_timeout(self.cfg.response_timeout)
-            .map_err(|e| ClientError::Transport(e.to_string()))?;
-        let reader = BufReader::new(
-            stream
-                .try_clone()
-                .map_err(|e| ClientError::Transport(e.to_string()))?,
-        );
-        let mut conn = self
-            .conn
+        {
+            let cur = self
+                .shared
+                .current
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            if let Some(g) = cur.as_ref() {
+                g.kill("explicitly reconnected");
+            }
+        }
+        self.ensure_gen().map(|_| ())
+    }
+
+    // ------------------------------------------- connection plumbing --
+
+    fn live_gen(&self) -> Option<Arc<Generation>> {
+        let cur = self
+            .shared
+            .current
             .lock()
-            .map_err(|_| ClientError::Transport("client connection poisoned".into()))?;
-        conn.writer.shutdown_both();
-        // Ids keep counting up, so frames from the two connection
-        // generations can never be confused.
-        *conn = Conn {
-            reader,
-            writer: stream,
-            next_id: conn.next_id,
-            dead: None,
+            .unwrap_or_else(|p| p.into_inner());
+        cur.as_ref().filter(|g| !g.is_dead()).map(Arc::clone)
+    }
+
+    /// The current generation, dialing a fresh one if the last died.
+    /// One dialer at a time: racers park on `dial_lock` and adopt the
+    /// winner's connection.
+    fn ensure_gen(&self) -> Result<Arc<Generation>, ClientError> {
+        if let Some(g) = self.live_gen() {
+            return Ok(g);
+        }
+        let _dialing = self
+            .shared
+            .dial_lock
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if let Some(g) = self.live_gen() {
+            return Ok(g);
+        }
+        let gen = self.dial()?;
+        let mut cur = self
+            .shared
+            .current
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if cur.is_some() {
+            self.shared.metrics.reconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        *cur = Some(Arc::clone(&gen));
+        Ok(gen)
+    }
+
+    fn dial(&self) -> Result<Arc<Generation>, ClientError> {
+        let cfg = &self.shared.cfg;
+        let io_err = |e: std::io::Error| ClientError::Transport(e.to_string());
+        let stream = NetStream::connect(&self.shared.addr, cfg)?;
+        stream.set_read_timeout(cfg.response_timeout).map_err(io_err)?;
+        let mut reader = BufReader::new(stream.try_clone().map_err(io_err)?);
+        let socket = stream.try_clone().map_err(io_err)?;
+        let mut writer = stream;
+        let version = match cfg.payload_encoding {
+            PayloadEncoding::Json => PROTOCOL_VERSION,
+            PayloadEncoding::Binary => {
+                let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+                if negotiate_session(&mut reader, &mut writer, id, cfg.max_line_bytes)? {
+                    PROTOCOL_V2
+                } else {
+                    PROTOCOL_VERSION
+                }
+            }
         };
-        Ok(())
+        socket.set_read_timeout(READER_TICK).map_err(io_err)?;
+        let gen = Arc::new(Generation {
+            version,
+            writer: Mutex::new(writer),
+            socket,
+            state: Mutex::new(GenState {
+                dead: None,
+                waiters: HashMap::new(),
+            }),
+            room: Condvar::new(),
+        });
+        let thread_gen = Arc::clone(&gen);
+        let thread_metrics = Arc::clone(&self.shared.metrics);
+        let max_line_bytes = cfg.max_line_bytes;
+        let spawned = thread::Builder::new()
+            .name("net-client-read".into())
+            .spawn(move || reader_loop(&thread_gen, &mut reader, max_line_bytes, &thread_metrics));
+        if let Err(e) = spawned {
+            gen.kill("reader thread spawn failed");
+            return Err(ClientError::Transport(format!("spawning reader: {e}")));
+        }
+        Ok(gen)
+    }
+
+    /// Claim an in-flight slot and register a response waiter under
+    /// `id`. Blocks (bounded by the response timeout) while the
+    /// connection is at `max_inflight`.
+    fn register(&self, gen: &Generation, id: u64) -> Result<mpsc::Receiver<Reply>, String> {
+        let cap = self.shared.cfg.max_inflight.max(1);
+        let mut st = gen.lock_state();
+        loop {
+            if let Some(why) = &st.dead {
+                return Err(format!(
+                    "connection to {} is dead ({why})",
+                    self.shared.addr
+                ));
+            }
+            if st.waiters.len() < cap {
+                break;
+            }
+            let (guard, waited) = match gen
+                .room
+                .wait_timeout(st, self.shared.cfg.response_timeout)
+            {
+                Ok(r) => r,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            st = guard;
+            if waited.timed_out() && st.waiters.len() >= cap && st.dead.is_none() {
+                return Err(format!(
+                    "no in-flight slot freed within {:?} ({} calls outstanding)",
+                    self.shared.cfg.response_timeout,
+                    st.waiters.len()
+                ));
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        st.waiters.insert(id, tx);
+        Ok(rx)
+    }
+
+    /// One pipelined request/response exchange, with automatic
+    /// redial-with-backoff. `build` maps the session's protocol version
+    /// to the payload (and optional binary block), so a submit can
+    /// choose binary pixels on v2 and JSON on v1 per attempt.
+    ///
+    /// Failures before the frame is written retry for any verb —
+    /// nothing reached the server. Once the frame may have been
+    /// received, only replay-safe verbs retry; everything else surfaces
+    /// a typed transport error so the caller decides about duplicated
+    /// side effects.
+    fn call_versioned<F>(&self, verb: Verb, build: F) -> Result<(Json, Option<Vec<u8>>), ClientError>
+    where
+        F: Fn(u64) -> (Json, Option<Vec<u8>>),
+    {
+        let replayable = matches!(verb, Verb::Topology | Verb::Stats | Verb::Autoscaler);
+        let budget = self.shared.cfg.reconnect_max_tries.max(1);
+        let mut attempt = 0u32;
+        loop {
+            attempt += 1;
+            let gen = match self.ensure_gen() {
+                Ok(g) => g,
+                Err(e) => {
+                    if attempt >= budget {
+                        return Err(e);
+                    }
+                    self.backoff_sleep(attempt);
+                    continue;
+                }
+            };
+            let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+            let rx = match self.register(&gen, id) {
+                Ok(rx) => rx,
+                // The generation died (or jammed) under us; nothing was
+                // written, so any verb may redial.
+                Err(why) => {
+                    if attempt >= budget {
+                        return Err(ClientError::Transport(why));
+                    }
+                    self.backoff_sleep(attempt);
+                    continue;
+                }
+            };
+            let (payload, blob) = build(gen.version);
+            let wire = RequestFrame::new(id, verb, payload).to_wire(gen.version, blob.as_deref());
+            let sent = {
+                let mut w = gen.writer.lock().unwrap_or_else(|p| p.into_inner());
+                w.write_all(&wire).and_then(|_| w.flush())
+            };
+            if let Err(e) = sent {
+                // A failed write may still have partially reached the
+                // server, so from here on only replay-safe verbs retry.
+                gen.kill(&format!("send failed: {e}"));
+                if replayable && attempt < budget {
+                    self.backoff_sleep(attempt);
+                    continue;
+                }
+                return Err(ClientError::Transport(format!("send failed: {e}")));
+            }
+            self.shared
+                .metrics
+                .bytes_sent
+                .fetch_add(wire.len() as u64, Ordering::Relaxed);
+            match rx.recv_timeout(self.shared.cfg.response_timeout) {
+                Ok((resp, resp_blob)) => {
+                    return match resp.body {
+                        Ok(body) => Ok((body, resp_blob)),
+                        Err(wire_err) => match wire_err.to_submit() {
+                            Some(se) => Err(ClientError::Submit(se)),
+                            None => Err(ClientError::Remote(wire_err)),
+                        },
+                    };
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // The server went quiet mid-call; the connection
+                    // can no longer be trusted to answer anyone.
+                    let why =
+                        format!("no response within {:?}", self.shared.cfg.response_timeout);
+                    gen.kill(&why);
+                    if replayable && attempt < budget {
+                        self.backoff_sleep(attempt);
+                        continue;
+                    }
+                    return Err(ClientError::Transport(why));
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    let why = gen.dead_reason();
+                    if replayable && attempt < budget {
+                        self.backoff_sleep(attempt);
+                        continue;
+                    }
+                    return Err(ClientError::Transport(format!(
+                        "connection to {} died mid-call ({why})",
+                        self.shared.addr
+                    )));
+                }
+            }
+        }
+    }
+
+    fn call(&self, verb: Verb, payload: Json) -> Result<Json, ClientError> {
+        self.call_versioned(verb, |_| (payload.clone(), None))
+            .map(|(body, _)| body)
+    }
+
+    /// Jittered exponential backoff before redial attempt
+    /// `attempt + 1`: a uniform draw from [1/2, 1] of
+    /// `reconnect_backoff * 2^(attempt-1)`, so synchronized clients fan
+    /// out instead of stampeding a recovering server.
+    fn backoff_sleep(&self, attempt: u32) {
+        let base = self.shared.cfg.reconnect_backoff;
+        if base.is_zero() {
+            return;
+        }
+        let step = base * 2u32.saturating_pow(attempt.saturating_sub(1)).min(64);
+        let frac = {
+            let mut rng = self.shared.jitter.lock().unwrap_or_else(|p| p.into_inner());
+            0.5 + 0.5 * rng.f64()
+        };
+        thread::sleep(step.mul_f64(frac));
     }
 
     // ------------------------------------------------- data plane --
 
     /// Submit a request to the remote fleet. Mirrors
     /// [`Fleet::submit`](crate::coordinator::Fleet::submit): a refusal
-    /// is a typed [`SubmitError`] via [`ClientError::Submit`].
+    /// is a typed [`SubmitError`] via [`ClientError::Submit`]. On a v2
+    /// session the pixels travel as a binary block after the header
+    /// line; on v1 as a JSON array.
     pub fn submit(&self, req: &Request) -> Result<RemoteTicket, ClientError> {
-        let body = self.call(Verb::Submit, protocol::encode_submit(req))?;
+        let (body, _) = self.call_versioned(Verb::Submit, |version| {
+            if version >= PROTOCOL_V2 {
+                let (payload, blob) = protocol::encode_submit_blob(req);
+                (payload, Some(blob))
+            } else {
+                (protocol::encode_submit(req), None)
+            }
+        })?;
         let id = body
             .get("ticket")
             .and_then(Json::as_u64)
@@ -498,7 +955,7 @@ impl FleetClient {
 
     /// Apply a partial [`AutoscalerUpdate`] to the remote autoscaler;
     /// returns the post-update state (no second round trip needed).
-    /// An invalid resulting band is a remote error, not a poisoned
+    /// An invalid resulting band is a remote error, not a dead
     /// connection.
     pub fn set_autoscaler(&self, update: &AutoscalerUpdate) -> Result<AutoscalerDesc, ClientError> {
         let body = self.call(
@@ -538,7 +995,9 @@ impl RemoteTicket {
             Some(b) => payload.set("timeout_ms", b.as_secs_f64() * 1e3),
             None => payload,
         };
-        let body = self.client.call(verb, payload)?;
+        let (body, blob) = self
+            .client
+            .call_versioned(verb, |_| (payload.clone(), None))?;
         let done = body
             .get("done")
             .and_then(Json::as_bool)
@@ -549,7 +1008,7 @@ impl RemoteTicket {
         let img = body
             .get("image")
             .ok_or_else(|| bad_body("completed wait response missing 'image'"))?;
-        protocol::decode_image(img)
+        protocol::decode_image_any(img, blob.as_deref())
             .map(Some)
             .map_err(ClientError::Protocol)
     }
@@ -559,7 +1018,7 @@ impl RemoteTicket {
     /// [`Ticket::wait`](crate::coordinator::Ticket::wait).
     pub fn wait(self) -> Result<Image<f32>, ClientError> {
         loop {
-            if let Some(img) = self.poll(Verb::Wait, Some(self.client.cfg.wait_poll))? {
+            if let Some(img) = self.poll(Verb::Wait, Some(self.client.shared.cfg.wait_poll))? {
                 return Ok(img);
             }
         }
@@ -581,5 +1040,65 @@ impl RemoteTicket {
     pub fn cancel(&self) -> Result<(), ClientError> {
         self.client.call(Verb::Cancel, Json::obj().set("ticket", self.id))?;
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::protocol::WireErrorKind;
+    use std::io::Cursor;
+
+    fn hello_ok_reply(id: u64, version: u64) -> Vec<u8> {
+        ResponseFrame::ok(id, Json::obj().set("version", version)).to_wire(PROTOCOL_VERSION, None)
+    }
+
+    #[test]
+    fn negotiation_accepts_a_v2_server() {
+        let mut reader = Cursor::new(hello_ok_reply(7, 2));
+        let mut writer = Vec::new();
+        assert!(negotiate_session(&mut reader, &mut writer, 7, 1 << 20).unwrap());
+        let sent = String::from_utf8(writer).unwrap();
+        assert!(sent.contains("\"verb\":\"hello\""), "sent: {sent}");
+        assert!(sent.contains("\"max\":2"), "sent: {sent}");
+    }
+
+    #[test]
+    fn negotiation_pins_v1_when_the_server_answers_v1() {
+        let mut reader = Cursor::new(hello_ok_reply(1, 1));
+        let mut writer = Vec::new();
+        assert!(!negotiate_session(&mut reader, &mut writer, 1, 1 << 20).unwrap());
+    }
+
+    #[test]
+    fn negotiation_falls_back_when_the_server_rejects_hello() {
+        // A pre-v2 server answers the unknown verb on its id-0 error
+        // channel and keeps the connection open — that pins v1.
+        let reply = ResponseFrame::err(
+            0,
+            WireError::new(WireErrorKind::Protocol, "unknown verb 'hello'"),
+        )
+        .to_wire(PROTOCOL_VERSION, None);
+        let mut reader = Cursor::new(reply);
+        let mut writer = Vec::new();
+        assert!(!negotiate_session(&mut reader, &mut writer, 3, 1 << 20).unwrap());
+    }
+
+    #[test]
+    fn negotiation_fails_on_a_closed_stream() {
+        let mut reader = Cursor::new(Vec::new());
+        let mut writer = Vec::new();
+        let err = negotiate_session(&mut reader, &mut writer, 1, 1 << 20).unwrap_err();
+        assert!(matches!(err, ClientError::Transport(_)), "got {err}");
+    }
+
+    #[test]
+    fn negotiation_rejects_a_desynced_ok() {
+        // An ok response for some *other* id means the stream is not
+        // answering our hello — that is a hard error, not a fallback.
+        let mut reader = Cursor::new(hello_ok_reply(99, 2));
+        let mut writer = Vec::new();
+        let err = negotiate_session(&mut reader, &mut writer, 3, 1 << 20).unwrap_err();
+        assert!(matches!(err, ClientError::Transport(_)), "got {err}");
     }
 }

@@ -5,16 +5,23 @@
 //! through Rust. This module puts that fleet on a socket:
 //!
 //! * [`protocol`] — the versioned, line-delimited JSON wire format
-//!   (15 verbs spanning the data plane, the full controller surface,
-//!   and the autoscaler, typed error frames that round-trip
-//!   [`SubmitError`](crate::coordinator::SubmitError)).
+//!   (16 verbs spanning the data plane, the full controller surface,
+//!   the autoscaler, and version negotiation; typed error frames that
+//!   round-trip [`SubmitError`](crate::coordinator::SubmitError)).
+//!   Protocol **v2** moves image pixels out of the JSON header into a
+//!   length-prefixed little-endian f32 block after the line — see the
+//!   frame-layout section in [`protocol`]'s docs.
 //! * [`server`] — [`NetServer`]: binds TCP or a Unix socket over a live
-//!   fleet (`tilekit serve --listen`), bounded accept loop,
-//!   per-connection reader/writer threads, idle/read timeouts, graceful
-//!   ticket-draining shutdown.
+//!   fleet (`tilekit serve --listen`), bounded accept loop, and a
+//!   per-connection reader → worker-pool → writer pipeline, so a slow
+//!   `wait` never head-of-line-blocks a `topology` on the same
+//!   connection; idle/read timeouts, graceful ticket-draining shutdown.
 //! * [`client`] — [`FleetClient`]: the same `submit(...)?.wait()?` and
 //!   controller surface, blocking, over the wire (`tilekit fleet
-//!   --connect`, `tilekit submit --connect`).
+//!   --connect`, `tilekit submit --connect`). Pipelines calls from all
+//!   clones over one connection, negotiates v2 (falling back to v1
+//!   against old servers), and redials dead connections automatically
+//!   with jittered exponential backoff.
 //! * [`shard`] — [`FrontTier`]: consistent-hash routing by request
 //!   shape across N fleet servers with health-driven failover and
 //!   merged stats (`tilekit front --shards`).
@@ -24,10 +31,10 @@ pub mod protocol;
 pub mod server;
 pub mod shard;
 
-pub use client::{ClientError, FleetClient, NetClientConfig, RemoteTicket};
+pub use client::{ClientError, FleetClient, NetClientConfig, RemoteTicket, WireMetrics};
 pub use protocol::{
-    AutoscalerDesc, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc, Verb, WireError,
-    WireErrorKind, WireStats, PROTOCOL_VERSION,
+    AutoscalerDesc, PayloadEncoding, ProtocolError, RequestFrame, ResponseFrame, TopologyDesc,
+    Verb, WireError, WireErrorKind, WireStats, PROTOCOL_V2, PROTOCOL_VERSION,
 };
 pub use server::{BackendFactory, ListenAddr, NetServer, NetServerConfig};
 pub use shard::{shape_hash, FrontTier, FrontTierConfig, Ring, ShardView};

@@ -33,11 +33,45 @@
 //! | `stats`            | `{}`                                         | counters + latency |
 //! | `autoscaler`       | `{}`                                         | [`AutoscalerDesc`] |
 //! | `set_autoscaler`   | partial [`AutoscalerUpdate`] fields          | [`AutoscalerDesc`] |
+//! | `hello`            | `{max}`                                      | `{version}` |
 //!
-//! An image is `{"w":W,"h":H,"px":[row-major f32 ...]}`. A tile policy is
-//! `"portable"`, `{"fixed":"32x4"}`, or `{"per_device":<TuningOutcome>}`.
-//! Frame parsing never panics: malformed input, an oversized line, or a
+//! An image is `{"w":W,"h":H,"px":[row-major f32 ...]}` (v1) or a
+//! binary block reference (v2, below). A tile policy is `"portable"`,
+//! `{"fixed":"32x4"}`, or `{"per_device":<TuningOutcome>}`. Frame
+//! parsing never panics: malformed input, an oversized line, or a
 //! stream truncated mid-line all surface as a typed [`ProtocolError`].
+//!
+//! # Protocol v2 frame layout
+//!
+//! A session starts at v1. A client that wants v2 sends `hello` as its
+//! first frame (payload `{"max":2}`); the server answers `{"version":v}`
+//! with `v = min(client max, server max)` (see [`negotiate`]) and the
+//! session switches to `v`. A pre-v2 server instead answers the unknown
+//! verb with an id-0 `protocol` error and keeps the connection open, so
+//! the client falls back to v1 — old peers keep working in both
+//! directions.
+//!
+//! In a v2 session a frame may carry a binary block after its header
+//! line: the header gains `"payload_bytes":N` and exactly `N` raw bytes
+//! follow the newline. Image pixels travel in that block as a 4-byte
+//! little-endian u32 pixel count followed by count x 4 bytes of
+//! little-endian f32, row-major ([`encode_image_blob`]); the image
+//! header shrinks to `{"w":W,"h":H,"bin":true}`. At most one image
+//! rides per frame (a `submit` request, or a `wait`/`try_wait`
+//! response), so header and block pair unambiguously. Read the block
+//! with [`read_payload`], which mirrors [`read_frame_line`]'s
+//! Oversized/Truncated/stall discipline. v2 also lifts the
+//! one-outstanding-call rule: clients pipeline many requests per
+//! connection and responses may return out of order (ids do the
+//! matching).
+//!
+//! ```text
+//! -> {"v":1,"id":1,"verb":"hello","payload":{"max":2}}
+//! <- {"v":1,"id":1,"ok":{"version":2}}
+//! -> {"v":2,"id":2,"verb":"submit","payload":{...,"image":{"w":64,"h":64,"bin":true}},"payload_bytes":16388}
+//!    <16388 raw bytes: 4-byte LE pixel count, then 4096 LE f32 pixels>
+//! <- {"v":2,"id":2,"ok":{"ticket":1,"device":"gtx260"}}
+//! ```
 
 use crate::codec::json::Json;
 use crate::coordinator::{
@@ -47,13 +81,65 @@ use crate::coordinator::{
 use crate::image::{Image, Interpolator};
 use crate::tiling::TileDim;
 use std::fmt;
-use std::io::BufRead;
+use std::io::{BufRead, Read};
 use std::time::Duration;
 
-/// Wire format version; bumped on incompatible frame changes. Both ends
-/// reject frames from a different major version with
+/// The baseline wire format version: line-delimited JSON frames, one
+/// outstanding call per connection. Every peer speaks it; frames from a
+/// version past [`PROTOCOL_V2`] are rejected with
 /// [`ProtocolError::Version`].
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// The highest protocol revision this build speaks: pipelined frames
+/// plus binary image payloads, entered via a `hello` exchange (see the
+/// module docs).
+pub const PROTOCOL_V2: u64 = 2;
+
+/// Pick the version a `hello` exchange pins the session to: the smaller
+/// of the two maxima, floored at the baseline [`PROTOCOL_VERSION`].
+pub fn negotiate(client_max: u64, server_max: u64) -> u64 {
+    client_max.min(server_max).max(PROTOCOL_VERSION)
+}
+
+/// Encode the `hello` request payload (`{"max":N}`).
+pub fn encode_hello(max: u64) -> Json {
+    Json::obj().set("max", max)
+}
+
+/// The peer's maximum version from a `hello` payload. A missing or
+/// mistyped `max` counts as the baseline version rather than an error:
+/// the exchange's whole job is tolerating peers that know less.
+pub fn decode_hello_max(j: &Json) -> u64 {
+    j.get("max").and_then(Json::as_u64).unwrap_or(PROTOCOL_VERSION)
+}
+
+/// How a client ships image pixels: `Binary` opens each connection with
+/// a `hello` exchange and uses v2 binary blocks when the server agrees;
+/// `Json` skips negotiation and speaks pure v1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadEncoding {
+    /// Pixels as a JSON number array (protocol v1).
+    Json,
+    /// Pixels as a little-endian f32 block (protocol v2, negotiated).
+    Binary,
+}
+
+impl PayloadEncoding {
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadEncoding::Json => "json",
+            PayloadEncoding::Binary => "binary",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PayloadEncoding> {
+        match s {
+            "json" => Some(PayloadEncoding::Json),
+            "binary" => Some(PayloadEncoding::Binary),
+            _ => None,
+        }
+    }
+}
 
 /// Default per-line byte cap. A 512x512 f32 image serializes to a few
 /// MiB of JSON, so the cap is generous — it bounds memory per
@@ -104,10 +190,13 @@ pub enum Verb {
     Stats,
     Autoscaler,
     SetAutoscaler,
+    /// Version negotiation (v2): first frame on a connection that wants
+    /// to speak past the baseline version.
+    Hello,
 }
 
 impl Verb {
-    pub const ALL: [Verb; 15] = [
+    pub const ALL: [Verb; 16] = [
         Verb::Submit,
         Verb::Wait,
         Verb::TryWait,
@@ -123,6 +212,7 @@ impl Verb {
         Verb::Stats,
         Verb::Autoscaler,
         Verb::SetAutoscaler,
+        Verb::Hello,
     ];
 
     pub fn name(self) -> &'static str {
@@ -142,6 +232,7 @@ impl Verb {
             Verb::Stats => "stats",
             Verb::Autoscaler => "autoscaler",
             Verb::SetAutoscaler => "set_autoscaler",
+            Verb::Hello => "hello",
         }
     }
 
@@ -188,7 +279,7 @@ impl fmt::Display for ProtocolError {
             ProtocolError::Malformed(m) => write!(f, "malformed frame: {m}"),
             ProtocolError::Version { got } => write!(
                 f,
-                "peer speaks protocol version {got}, this end speaks {PROTOCOL_VERSION}"
+                "peer speaks protocol version {got}, this end speaks up to {PROTOCOL_V2}"
             ),
         }
     }
@@ -323,11 +414,32 @@ impl fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
-fn check_version(j: &Json) -> Result<(), ProtocolError> {
+/// The version stamp of a parsed frame header. Both revisions are
+/// accepted — each end emits at the negotiated session version but must
+/// keep parsing baseline frames from an un-negotiated peer.
+pub fn frame_version(j: &Json) -> Result<u64, ProtocolError> {
     match j.get("v").and_then(Json::as_u64) {
-        Some(PROTOCOL_VERSION) => Ok(()),
+        Some(v @ (PROTOCOL_VERSION | PROTOCOL_V2)) => Ok(v),
         Some(got) => Err(ProtocolError::Version { got }),
         None => Err(malformed("frame missing 'v'")),
+    }
+}
+
+/// The byte count of the binary block following this frame's header
+/// line (`payload_bytes`), 0 when absent. Consume the block with
+/// [`read_payload`] before reading the next frame — even when the
+/// header turns out to be otherwise malformed, so the stream stays in
+/// sync.
+pub fn frame_extra_bytes(j: &Json) -> Result<usize, ProtocolError> {
+    match j.get("payload_bytes") {
+        None => Ok(0),
+        Some(v) => {
+            let n = v
+                .as_u64()
+                .ok_or_else(|| malformed("'payload_bytes' must be a non-negative integer"))?;
+            usize::try_from(n)
+                .map_err(|_| malformed(format!("payload_bytes {n} does not fit in usize")))
+        }
     }
 }
 
@@ -344,23 +456,44 @@ impl RequestFrame {
         RequestFrame { id, verb, payload }
     }
 
-    /// One compact `\n`-terminated wire line.
+    /// One compact `\n`-terminated baseline (v1) wire line.
     pub fn to_line(&self) -> String {
-        let mut s = Json::obj()
-            .set("v", PROTOCOL_VERSION)
+        // Frames without a binary block are pure UTF-8 by construction.
+        String::from_utf8(self.to_wire(PROTOCOL_VERSION, None)).unwrap()
+    }
+
+    /// Encode at a negotiated session version, appending the binary
+    /// block (and its `payload_bytes` stamp) when one is present. v1
+    /// frames never carry a block.
+    pub fn to_wire(&self, version: u64, blob: Option<&[u8]>) -> Vec<u8> {
+        let mut j = Json::obj()
+            .set("v", version)
             .set("id", self.id)
             .set("verb", self.verb.name())
-            .set("payload", self.payload.clone())
-            .to_string();
-        s.push('\n');
-        s
+            .set("payload", self.payload.clone());
+        if let Some(b) = blob {
+            j = j.set("payload_bytes", b.len() as u64);
+        }
+        let mut out = j.to_string().into_bytes();
+        out.push(b'\n');
+        if let Some(b) = blob {
+            out.extend_from_slice(b);
+        }
+        out
     }
 
     /// Parse one line (trailing newline optional).
     pub fn parse(line: &str) -> Result<RequestFrame, ProtocolError> {
         let j = Json::parse(line.trim_end_matches(['\r', '\n']))
             .map_err(|e| malformed(e.to_string()))?;
-        check_version(&j)?;
+        RequestFrame::from_json(&j)
+    }
+
+    /// Decode an already-parsed header object (either version). Readers
+    /// that must extract [`frame_extra_bytes`] first use this to avoid
+    /// parsing the header twice.
+    pub fn from_json(j: &Json) -> Result<RequestFrame, ProtocolError> {
+        frame_version(j)?;
         let id = j
             .get("id")
             .and_then(Json::as_u64)
@@ -392,23 +525,44 @@ impl ResponseFrame {
         ResponseFrame { id, body: Err(e) }
     }
 
-    /// One compact `\n`-terminated wire line.
+    /// One compact `\n`-terminated baseline (v1) wire line.
     pub fn to_line(&self) -> String {
-        let j = Json::obj().set("v", PROTOCOL_VERSION).set("id", self.id);
-        let j = match &self.body {
+        // Frames without a binary block are pure UTF-8 by construction.
+        String::from_utf8(self.to_wire(PROTOCOL_VERSION, None)).unwrap()
+    }
+
+    /// Encode at a negotiated session version, appending the binary
+    /// block (and its `payload_bytes` stamp) when one is present. v1
+    /// frames never carry a block.
+    pub fn to_wire(&self, version: u64, blob: Option<&[u8]>) -> Vec<u8> {
+        let mut j = Json::obj().set("v", version).set("id", self.id);
+        j = match &self.body {
             Ok(body) => j.set("ok", body.clone()),
             Err(e) => j.set("err", e.to_json()),
         };
-        let mut s = j.to_string();
-        s.push('\n');
-        s
+        if let Some(b) = blob {
+            j = j.set("payload_bytes", b.len() as u64);
+        }
+        let mut out = j.to_string().into_bytes();
+        out.push(b'\n');
+        if let Some(b) = blob {
+            out.extend_from_slice(b);
+        }
+        out
     }
 
     /// Parse one line (trailing newline optional).
     pub fn parse(line: &str) -> Result<ResponseFrame, ProtocolError> {
         let j = Json::parse(line.trim_end_matches(['\r', '\n']))
             .map_err(|e| malformed(e.to_string()))?;
-        check_version(&j)?;
+        ResponseFrame::from_json(&j)
+    }
+
+    /// Decode an already-parsed header object (either version). Readers
+    /// that must extract [`frame_extra_bytes`] first use this to avoid
+    /// parsing the header twice.
+    pub fn from_json(j: &Json) -> Result<ResponseFrame, ProtocolError> {
+        frame_version(j)?;
         let id = j
             .get("id")
             .and_then(Json::as_u64)
@@ -430,11 +584,6 @@ pub fn read_frame_line(
     max_bytes: usize,
 ) -> Result<Option<String>, ProtocolError> {
     let mut buf: Vec<u8> = Vec::new();
-    // A peer that sends half a frame and hangs must not pin the reader
-    // forever: after this many consecutive zero-byte read timeouts
-    // mid-line (~4 min at a 250 ms socket read timeout) the frame is
-    // declared truncated and the connection dies.
-    const MAX_MID_FRAME_STALLS: u32 = 1024;
     let mut stalls = 0u32;
     loop {
         let chunk = match r.fill_buf() {
@@ -481,6 +630,52 @@ pub fn read_frame_line(
             return Ok(Some(line));
         }
     }
+}
+
+/// A peer that sends half a frame and hangs must not pin a reader
+/// forever: after this many consecutive zero-byte read timeouts
+/// mid-frame (~4 min at a 250 ms socket read timeout) the frame is
+/// declared truncated and the connection dies.
+const MAX_MID_FRAME_STALLS: u32 = 1024;
+
+/// Read the `n`-byte binary block that follows a frame header, with
+/// [`read_frame_line`]'s typed-error discipline: a block past the byte
+/// cap is [`ProtocolError::Oversized`], EOF inside the block is
+/// [`ProtocolError::Truncated`], and a peer that stalls mid-block past
+/// the stall budget is also truncated — the header already arrived, so
+/// a zero-byte timeout here is never an idle connection.
+pub fn read_payload(
+    r: &mut impl BufRead,
+    n: usize,
+    max_bytes: usize,
+) -> Result<Vec<u8>, ProtocolError> {
+    if n > max_bytes {
+        return Err(ProtocolError::Oversized { limit: max_bytes });
+    }
+    let mut buf = vec![0u8; n];
+    let mut filled = 0usize;
+    let mut stalls = 0u32;
+    while filled < n {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(ProtocolError::Truncated),
+            Ok(k) => {
+                filled += k;
+                stalls = 0;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                stalls += 1;
+                if stalls > MAX_MID_FRAME_STALLS {
+                    return Err(ProtocolError::Truncated);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtocolError::Io(e.to_string())),
+        }
+    }
+    Ok(buf)
 }
 
 // --------------------------------------------------- payload codecs --
@@ -538,13 +733,90 @@ pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
     Ok(Image::from_vec(w as usize, h as usize, data))
 }
 
-/// Encode a submit request.
+/// Encode an image as a v2 binary payload: a `{"w","h","bin":true}`
+/// header plus a length-prefixed little-endian block — a 4-byte LE u32
+/// pixel count, then count x 4 bytes of LE f32, row-major. 4 bytes per
+/// pixel on the wire versus the ~17-20 a random f32 costs as a
+/// shortest-round-trip JSON number, and bit-exact for every value
+/// including NaN and the infinities.
+pub fn encode_image_blob(img: &Image<f32>) -> (Json, Vec<u8>) {
+    let px = img.to_dense();
+    let mut blob = Vec::with_capacity(4 + 4 * px.len());
+    // MAX_IMAGE_PIXELS (2^26) bounds the count well under u32::MAX.
+    blob.extend_from_slice(&(px.len() as u32).to_le_bytes());
+    for p in &px {
+        blob.extend_from_slice(&p.to_le_bytes());
+    }
+    let header = Json::obj()
+        .set("w", img.width())
+        .set("h", img.height())
+        .set("bin", true);
+    (header, blob)
+}
+
+/// Decode an image from either encoding: a `{"bin":true}` header pairs
+/// with the frame's binary block ([`encode_image_blob`]); anything else
+/// falls through to the v1 JSON-array decoder ([`decode_image`]).
+pub fn decode_image_any(j: &Json, blob: Option<&[u8]>) -> Result<Image<f32>, ProtocolError> {
+    if j.get("bin").and_then(Json::as_bool) != Some(true) {
+        return decode_image(j);
+    }
+    let w = j
+        .get("w")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| malformed("image missing 'w'"))?;
+    let h = j
+        .get("h")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| malformed("image missing 'h'"))?;
+    if w == 0 || h == 0 {
+        return Err(malformed("image dims must be positive"));
+    }
+    let total = w
+        .checked_mul(h)
+        .filter(|&n| n <= MAX_IMAGE_PIXELS)
+        .ok_or_else(|| {
+            malformed(format!(
+                "image dims {w}x{h} exceed the {MAX_IMAGE_PIXELS}-pixel cap"
+            ))
+        })?;
+    let blob = blob.ok_or_else(|| malformed("binary image with no payload block"))?;
+    if blob.len() < 4 {
+        return Err(malformed("binary image block shorter than its count prefix"));
+    }
+    let count = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]) as u64;
+    if count != total || blob.len() as u64 != 4 + 4 * total {
+        return Err(malformed(format!(
+            "binary image block carries {count} pixels in {} bytes, expected {w}x{h}={total}",
+            blob.len(),
+        )));
+    }
+    let data = blob[4..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Image::from_vec(w as usize, h as usize, data))
+}
+
+/// Encode a submit request with a v1 JSON-array image.
 pub fn encode_submit(req: &Request) -> Json {
+    submit_qos(req).set("image", encode_image(&req.image))
+}
+
+/// Encode a submit request with the image as a v2 binary block. The
+/// returned blob must travel as the frame's `payload_bytes` block.
+pub fn encode_submit_blob(req: &Request) -> (Json, Vec<u8>) {
+    let (img, blob) = encode_image_blob(&req.image);
+    (submit_qos(req).set("image", img), blob)
+}
+
+/// The non-image submit fields (kernel, scale, QoS) shared by both
+/// encodings.
+fn submit_qos(req: &Request) -> Json {
     let j = Json::obj()
         .set("kernel", req.kernel.label())
         .set("scale", req.scale)
-        .set("priority", req.priority.label())
-        .set("image", encode_image(&req.image));
+        .set("priority", req.priority.label());
     match req.deadline {
         Some(d) => j.set("deadline_ms", d.as_secs_f64() * 1e3),
         None => j,
@@ -553,6 +825,12 @@ pub fn encode_submit(req: &Request) -> Json {
 
 /// Decode what [`encode_submit`] wrote back into a [`Request`].
 pub fn decode_submit(j: &Json) -> Result<Request, ProtocolError> {
+    decode_submit_with(j, None)
+}
+
+/// Decode a submit payload whose image may live in the frame's binary
+/// block ([`encode_submit_blob`]) or inline as a v1 JSON array.
+pub fn decode_submit_with(j: &Json, blob: Option<&[u8]>) -> Result<Request, ProtocolError> {
     let kernel_s = j
         .get("kernel")
         .and_then(Json::as_str)
@@ -565,9 +843,10 @@ pub fn decode_submit(j: &Json) -> Result<Request, ProtocolError> {
         .ok_or_else(|| malformed("submit missing 'scale'"))?;
     let scale = u32::try_from(scale64)
         .map_err(|_| malformed(format!("scale {scale64} does not fit in u32")))?;
-    let image = decode_image(
+    let image = decode_image_any(
         j.get("image")
             .ok_or_else(|| malformed("submit missing 'image'"))?,
+        blob,
     )?;
     let mut req = Request::new(kernel, image, scale);
     if let Some(p) = j.get("priority").and_then(Json::as_str) {
@@ -675,6 +954,30 @@ pub struct TopologyDesc {
 }
 
 impl TopologyDesc {
+    /// Snapshot a live [`TopologyView`] — the one wire-independent
+    /// topology shape both the in-process and remote control planes
+    /// hand out (see [`crate::ops::ControlOps`]).
+    pub fn of(t: &TopologyView) -> TopologyDesc {
+        TopologyDesc {
+            epoch: t.epoch,
+            members: t
+                .members
+                .iter()
+                .map(|m| MemberDesc {
+                    id: m.id,
+                    label: m.label.to_string(),
+                    device: m.device.as_ref().map(|d| d.id.clone()),
+                    tile: m.tile_pref,
+                    batch_max: m.batch_max as u64,
+                    draining: m.draining,
+                    admitted: m.stats.admitted.get(),
+                    completed: m.stats.completed.get(),
+                    inflight: m.stats.inflight(),
+                })
+                .collect(),
+        }
+    }
+
     /// True when no member can accept new work (empty fleet or every
     /// member draining) — the shard tier routes around such fleets.
     pub fn is_draining(&self) -> bool {
@@ -770,25 +1073,7 @@ impl TopologyDesc {
 
 /// Snapshot a live [`TopologyView`] into its wire form.
 pub fn encode_topology(t: &TopologyView) -> Json {
-    TopologyDesc {
-        epoch: t.epoch,
-        members: t
-            .members
-            .iter()
-            .map(|m| MemberDesc {
-                id: m.id,
-                label: m.label.to_string(),
-                device: m.device.as_ref().map(|d| d.id.clone()),
-                tile: m.tile_pref,
-                batch_max: m.batch_max as u64,
-                draining: m.draining,
-                admitted: m.stats.admitted.get(),
-                completed: m.stats.completed.get(),
-                inflight: m.stats.inflight(),
-            })
-            .collect(),
-    }
-    .to_json()
+    TopologyDesc::of(t).to_json()
 }
 
 // ------------------------------------------------------ stats frame --
@@ -1220,11 +1505,131 @@ mod tests {
 
     #[test]
     fn version_mismatch_is_typed() {
-        let line = "{\"v\":2,\"id\":1,\"verb\":\"stats\",\"payload\":{}}";
+        let line = "{\"v\":3,\"id\":1,\"verb\":\"stats\",\"payload\":{}}";
         assert_eq!(
             RequestFrame::parse(line),
-            Err(ProtocolError::Version { got: 2 })
+            Err(ProtocolError::Version { got: 3 })
         );
+        // Both live revisions parse.
+        for v in [1, 2] {
+            let line = format!("{{\"v\":{v},\"id\":1,\"verb\":\"stats\",\"payload\":{{}}}}");
+            assert_eq!(RequestFrame::parse(&line).unwrap().verb, Verb::Stats);
+        }
+    }
+
+    #[test]
+    fn hello_negotiation_pins_the_smaller_version() {
+        assert_eq!(negotiate(PROTOCOL_V2, PROTOCOL_V2), PROTOCOL_V2);
+        assert_eq!(negotiate(PROTOCOL_V2, PROTOCOL_VERSION), PROTOCOL_VERSION);
+        assert_eq!(negotiate(PROTOCOL_VERSION, PROTOCOL_V2), PROTOCOL_VERSION);
+        // A nonsense max of 0 still floors at the baseline.
+        assert_eq!(negotiate(0, PROTOCOL_V2), PROTOCOL_VERSION);
+        assert_eq!(decode_hello_max(&encode_hello(2)), 2);
+        assert_eq!(decode_hello_max(&Json::obj()), PROTOCOL_VERSION);
+        assert_eq!(
+            decode_hello_max(&Json::obj().set("max", "two")),
+            PROTOCOL_VERSION
+        );
+    }
+
+    #[test]
+    fn payload_encoding_names_round_trip() {
+        for enc in [PayloadEncoding::Json, PayloadEncoding::Binary] {
+            assert_eq!(PayloadEncoding::parse(enc.name()), Some(enc));
+        }
+        assert_eq!(PayloadEncoding::parse("msgpack"), None);
+    }
+
+    #[test]
+    fn image_blob_round_trips_bit_exactly() {
+        let mut img = generate::test_scene(13, 7, 42);
+        // Values JSON cannot carry at all must survive the blob.
+        img.set(0, 0, f32::NAN);
+        img.set(1, 0, f32::INFINITY);
+        img.set(2, 0, f32::NEG_INFINITY);
+        let (header, blob) = encode_image_blob(&img);
+        assert_eq!(blob.len(), 4 + 4 * 13 * 7);
+        let back = decode_image_any(&header, Some(&blob)).unwrap();
+        assert_eq!(back.width(), 13);
+        assert_eq!(back.height(), 7);
+        let (a, b) = (img.to_dense(), back.to_dense());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "pixels must be bit-identical");
+        }
+        // A non-binary header falls through to the v1 decoder.
+        let plain = generate::test_scene(5, 3, 9);
+        let v1 = decode_image_any(&encode_image(&plain), None).unwrap();
+        assert_eq!(plain.max_abs_diff(&v1), 0.0);
+    }
+
+    #[test]
+    fn image_blob_rejects_corrupt_blocks() {
+        let img = generate::gradient(4, 4);
+        let (header, blob) = encode_image_blob(&img);
+        // Missing block, truncated block, short prefix, and a count
+        // prefix that disagrees with the dims are all typed errors.
+        assert!(decode_image_any(&header, None).is_err());
+        assert!(decode_image_any(&header, Some(&blob[..blob.len() - 1])).is_err());
+        assert!(decode_image_any(&header, Some(&blob[..2])).is_err());
+        let mut lying = blob.clone();
+        lying[0] ^= 1;
+        assert!(decode_image_any(&header, Some(&lying)).is_err());
+        // Hostile dims are rejected before the block is even consulted.
+        let huge = Json::obj()
+            .set("w", (MAX_IMAGE_PIXELS + 1) as f64)
+            .set("h", 1u64)
+            .set("bin", true);
+        assert!(decode_image_any(&huge, Some(&blob)).is_err());
+    }
+
+    #[test]
+    fn submit_blob_round_trips_through_a_v2_frame() {
+        let req = Request::new(Interpolator::Bilinear, generate::test_scene(16, 9, 7), 2)
+            .priority(Priority::Batch)
+            .deadline(Duration::from_millis(125));
+        let (payload, blob) = encode_submit_blob(&req);
+        let frame = RequestFrame::new(9, Verb::Submit, payload);
+        let wire = frame.to_wire(PROTOCOL_V2, Some(&blob));
+        // Replay the bytes the way a server reader would.
+        let mut r = BufReader::new(&wire[..]);
+        let line = read_frame_line(&mut r, DEFAULT_MAX_LINE_BYTES)
+            .unwrap()
+            .unwrap();
+        let j = Json::parse(line.trim_end()).unwrap();
+        let extra = frame_extra_bytes(&j).unwrap();
+        assert_eq!(extra, blob.len());
+        let got = read_payload(&mut r, extra, DEFAULT_MAX_LINE_BYTES).unwrap();
+        let parsed = RequestFrame::from_json(&j).unwrap();
+        assert_eq!(parsed.id, 9);
+        let back = decode_submit_with(&parsed.payload, Some(&got)).unwrap();
+        assert_eq!(back.kernel, Interpolator::Bilinear);
+        assert_eq!(back.scale, 2);
+        assert_eq!(back.priority, Priority::Batch);
+        assert_eq!(back.deadline, Some(Duration::from_millis(125)));
+        assert_eq!(back.image.max_abs_diff(&req.image), 0.0);
+        // A v1 line has no block and stays pure JSON.
+        assert_eq!(frame_extra_bytes(&Json::parse(frame.to_line().trim_end()).unwrap()).unwrap(), 0);
+    }
+
+    #[test]
+    fn read_payload_enforces_caps_and_truncation() {
+        let bytes = [7u8; 32];
+        let mut r = BufReader::new(&bytes[..]);
+        assert_eq!(read_payload(&mut r, 32, 64).unwrap(), vec![7u8; 32]);
+        let mut r = BufReader::new(&bytes[..]);
+        assert_eq!(
+            read_payload(&mut r, 65, 64),
+            Err(ProtocolError::Oversized { limit: 64 })
+        );
+        // EOF inside the block is truncation, not a short read.
+        let mut r = BufReader::new(&bytes[..]);
+        assert_eq!(
+            read_payload(&mut r, 33, 64),
+            Err(ProtocolError::Truncated)
+        );
+        // A zero-length block is legal and consumes nothing.
+        let mut r = BufReader::new(&bytes[..]);
+        assert_eq!(read_payload(&mut r, 0, 64).unwrap(), Vec::<u8>::new());
     }
 
     #[test]

@@ -7,12 +7,14 @@
 //!
 //! Threading model: one accept-loop thread polls a nonblocking listener
 //! under a connection cap; each accepted connection gets a **reader**
-//! thread (parses frames, executes verbs) and a **writer** thread
-//! (serializes responses from a channel), so a slow client write never
-//! stalls verb execution. Because the [`FleetClient`](super::FleetClient)
-//! keeps one outstanding call per connection, `wait` is served inline
-//! with a bounded per-call timeout — the client re-polls, and responses
-//! stay in order.
+//! thread (frames bytes, answers `hello`, consumes binary blocks), a
+//! small **worker pool** that executes verbs pulled from a bounded
+//! queue, and a **writer** thread (serializes responses from a
+//! channel). Pipelined clients keep many calls in flight on one
+//! connection; because the workers run concurrently, a slow `wait`
+//! never head-of-line-blocks a `topology`, and the bounded work queue
+//! turns a flooding client into plain TCP backpressure. Responses may
+//! complete out of order — frame ids do the matching.
 //!
 //! Shutdown is graceful: new submits are refused with
 //! [`SubmitError::ShuttingDown`], the listener stops accepting, and the
@@ -20,8 +22,9 @@
 //! a remote caller to resolve before connections are torn down.
 
 use super::protocol::{
-    self, encode_topology, read_frame_line, AutoscalerDesc, ProtocolError, RequestFrame,
-    ResponseFrame, Verb, WireError, WireErrorKind, WireStats, DEFAULT_MAX_LINE_BYTES,
+    self, encode_topology, read_frame_line, read_payload, AutoscalerDesc, ProtocolError,
+    RequestFrame, ResponseFrame, Verb, WireError, WireErrorKind, WireStats,
+    DEFAULT_MAX_LINE_BYTES, PROTOCOL_V2, PROTOCOL_VERSION,
 };
 use crate::codec::json::Json;
 use crate::coordinator::{AutoscalerHandle, Fleet, FleetController, SubmitError, Ticket};
@@ -97,10 +100,15 @@ pub struct NetServerConfig {
     pub read_timeout: Duration,
     /// Close a connection with no complete frame for this long.
     pub idle_timeout: Duration,
-    /// Per-line byte cap (frame size bound).
+    /// Per-line byte cap (frame size bound); binary payload blocks are
+    /// held to the same budget.
     pub max_line_bytes: usize,
     /// How long graceful shutdown waits for outstanding remote tickets.
     pub drain_timeout: Duration,
+    /// Bound on queued-but-unexecuted frames per connection. A pipelined
+    /// client past this depth blocks in the reader — TCP backpressure,
+    /// not unbounded server memory.
+    pub max_inflight_per_conn: usize,
 }
 
 impl Default for NetServerConfig {
@@ -111,9 +119,15 @@ impl Default for NetServerConfig {
             idle_timeout: Duration::from_secs(30),
             max_line_bytes: DEFAULT_MAX_LINE_BYTES,
             drain_timeout: Duration::from_secs(10),
+            max_inflight_per_conn: 32,
         }
     }
 }
+
+/// Verb-execution threads per connection. Small on purpose: enough that
+/// a blocking `wait` (bounded at 5 s) cannot starve control verbs, yet
+/// a saturated server stays at a sane thread count.
+const CONN_WORKERS: usize = 4;
 
 enum Listener {
     Tcp(TcpListener),
@@ -387,20 +401,33 @@ impl Drop for ConnGuard {
     }
 }
 
-/// A connection's outstanding tickets. On drop — clean exit or panic
-/// unwinding — tickets the client never collected are subtracted from
-/// the server-wide open-ticket count, so graceful shutdown is not held
-/// hostage by a vanished (or crashed) connection.
-struct TicketLedger<'a> {
-    shared: &'a Arc<ServerShared>,
-    tickets: HashMap<u64, Ticket>,
+/// Per-connection state shared by the reader and its verb workers: the
+/// negotiated session version and the connection's outstanding tickets.
+/// On drop — clean exit or panic unwinding — tickets the client never
+/// collected are subtracted from the server-wide open-ticket count, so
+/// graceful shutdown is not held hostage by a vanished (or crashed)
+/// connection.
+struct ConnSession {
+    shared: Arc<ServerShared>,
+    /// The negotiated protocol version; starts at the baseline and is
+    /// raised by a `hello` exchange. Responses are stamped with it.
+    version: AtomicU64,
+    tickets: Mutex<HashMap<u64, Ticket>>,
 }
 
-impl Drop for TicketLedger<'_> {
+impl ConnSession {
+    fn version(&self) -> u64 {
+        self.version.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ConnSession {
     fn drop(&mut self) {
-        let abandoned = self.tickets.len() as u64;
+        let abandoned = self.tickets.get_mut().map(|t| t.len()).unwrap_or(0) as u64;
         if abandoned > 0 {
-            self.shared.open_tickets.fetch_sub(abandoned, Ordering::SeqCst);
+            self.shared
+                .open_tickets
+                .fetch_sub(abandoned, Ordering::SeqCst);
         }
     }
 }
@@ -419,8 +446,8 @@ fn refuse_connection(mut stream: Stream, cap: usize) {
     stream.shutdown_both();
 }
 
-/// Per-connection reader: parse frames, execute verbs, push responses
-/// to the writer thread. Owns the connection's outstanding tickets.
+/// Per-connection reader: frame the byte stream, answer `hello`
+/// inline, and feed everything else to the connection's worker pool.
 fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
     let (read_half, write_half) = match stream.split(shared.cfg.read_timeout) {
         Ok(halves) => halves,
@@ -429,7 +456,7 @@ fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
             return;
         }
     };
-    let (tx, rx) = mpsc::channel::<String>();
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
     let writer = thread::Builder::new()
         .name("net-write".into())
         .spawn(move || writer_loop(write_half, rx));
@@ -441,14 +468,47 @@ fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
         }
     };
 
+    let session = Arc::new(ConnSession {
+        shared: Arc::clone(shared),
+        version: AtomicU64::new(PROTOCOL_VERSION),
+        tickets: Mutex::new(HashMap::new()),
+    });
+    // The bounded queue is the per-connection inflight cap: when a
+    // pipelining client outruns the workers, the reader blocks here and
+    // the kernel's socket buffers push back on the client.
+    let (work_tx, work_rx) =
+        mpsc::sync_channel::<(RequestFrame, Option<Vec<u8>>)>(shared.cfg.max_inflight_per_conn);
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let workers: Vec<_> = (0..CONN_WORKERS)
+        .filter_map(|i| {
+            let rx = Arc::clone(&work_rx);
+            let tx = tx.clone();
+            let session = Arc::clone(&session);
+            thread::Builder::new()
+                .name(format!("net-verb-{i}"))
+                .spawn(move || worker_loop(&session, &rx, &tx))
+                .ok()
+        })
+        .collect();
+    if workers.is_empty() {
+        drop(work_tx);
+        drop(tx);
+        let _ = writer.join();
+        stream.shutdown_both();
+        return;
+    }
+
     let mut reader = BufReader::new(read_half);
-    let mut ledger = TicketLedger {
-        shared,
-        tickets: HashMap::new(),
-    };
     let mut last_activity = Instant::now();
+    // Reports a framing-level problem on the id-0 out-of-band channel.
+    let report = |e: &dyn fmt::Display| {
+        let f = ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()));
+        tx.send(f.to_wire(session.version(), None)).is_ok()
+    };
     loop {
-        if shared.closed.load(Ordering::SeqCst) && ledger.tickets.is_empty() {
+        if shared.closed.load(Ordering::SeqCst)
+            && session.tickets.lock().map(|t| t.is_empty()).unwrap_or(true)
+        {
             break;
         }
         let line = match read_frame_line(&mut reader, shared.cfg.max_line_bytes) {
@@ -461,49 +521,105 @@ fn serve_connection(stream: Stream, shared: &Arc<ServerShared>) {
                 continue;
             }
             Err(e @ (ProtocolError::Oversized { .. } | ProtocolError::Truncated)) => {
-                let _ = tx.send(
-                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
-                        .to_line(),
-                );
+                report(&e);
                 break;
             }
             Err(_) => break,
         };
         last_activity = Instant::now();
-        let frame = match RequestFrame::parse(&line) {
-            Ok(f) => f,
-            Err(e @ ProtocolError::Version { .. }) => {
-                let _ = tx.send(
-                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
-                        .to_line(),
-                );
-                break;
-            }
+        let header = match Json::parse(line.trim_end_matches(['\r', '\n'])) {
+            Ok(j) => j,
             Err(e) => {
-                // One bad frame does not corrupt line framing; report it
-                // and keep the connection.
-                let _ = tx.send(
-                    ResponseFrame::err(0, WireError::new(WireErrorKind::Protocol, e.to_string()))
-                        .to_line(),
-                );
+                // Line framing survives a non-JSON line; report it and
+                // keep the connection.
+                report(&ProtocolError::Malformed(e.to_string()));
                 continue;
             }
         };
-        let response = dispatch(shared, &mut ledger.tickets, frame);
-        if tx.send(response.to_line()).is_err() {
+        // Consume the binary block before judging the header, so a
+        // well-formed-JSON-but-bad frame cannot desynchronize framing.
+        let blob = match protocol::frame_extra_bytes(&header) {
+            Ok(0) => None,
+            Ok(n) => match read_payload(&mut reader, n, shared.cfg.max_line_bytes) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    report(&e);
+                    break;
+                }
+            },
+            Err(e) => {
+                // `payload_bytes` itself unreadable: the block length is
+                // unknown, so framing is lost — close.
+                report(&e);
+                break;
+            }
+        };
+        let frame = match RequestFrame::from_json(&header) {
+            Ok(f) => f,
+            Err(e @ ProtocolError::Version { .. }) => {
+                report(&e);
+                break;
+            }
+            Err(e) => {
+                report(&e);
+                continue;
+            }
+        };
+        if frame.verb == Verb::Hello {
+            // Answered inline (not pooled) so the version flips before
+            // any later frame's response is encoded.
+            let v = protocol::negotiate(protocol::decode_hello_max(&frame.payload), PROTOCOL_V2);
+            let resp = ok(frame.id, Json::obj().set("version", v));
+            // The reply itself is pre-upgrade: stamp it baseline.
+            if tx.send(resp.to_wire(PROTOCOL_VERSION, None)).is_err() {
+                break;
+            }
+            session.version.store(v, Ordering::SeqCst);
+            continue;
+        }
+        if work_tx.send((frame, blob)).is_err() {
             break;
         }
     }
-    // Settles any tickets the client never collected via its Drop.
-    drop(ledger);
+    drop(work_tx); // workers drain the queue, then exit
+    for w in workers {
+        let _ = w.join();
+    }
+    // Settles any tickets the client never collected via its Drop —
+    // the workers' session clones are gone once they are joined.
+    drop(session);
     drop(tx); // writer drains then exits
     let _ = writer.join();
     stream.shutdown_both();
 }
 
-fn writer_loop(mut w: Stream, rx: mpsc::Receiver<String>) {
-    while let Ok(line) = rx.recv() {
-        if w.write_all(line.as_bytes()).is_err() || w.flush().is_err() {
+/// One verb-execution worker: pull a frame, run it, hand the encoded
+/// response to the writer. Exits when the reader drops the work queue
+/// or the writer goes away.
+fn worker_loop(
+    session: &Arc<ConnSession>,
+    work_rx: &Arc<Mutex<mpsc::Receiver<(RequestFrame, Option<Vec<u8>>)>>>,
+    tx: &mpsc::Sender<Vec<u8>>,
+) {
+    loop {
+        let job = match work_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => return,
+        };
+        let Ok((frame, blob)) = job else { return };
+        let (resp, resp_blob) = dispatch(session, frame, blob.as_deref());
+        if tx
+            .send(resp.to_wire(session.version(), resp_blob.as_deref()))
+            .is_err()
+        {
+            return;
+        }
+    }
+}
+
+fn writer_loop(mut w: Stream, rx: mpsc::Receiver<Vec<u8>>) {
+    while let Ok(bytes) = rx.recv() {
+        if w.write_all(&bytes).is_err() || w.flush().is_err() {
             return;
         }
     }
@@ -517,25 +633,48 @@ fn err(id: u64, kind: WireErrorKind, msg: impl Into<String>) -> ResponseFrame {
     ResponseFrame::err(id, WireError::new(kind, msg))
 }
 
-/// Execute one verb against the fleet/controller.
+/// Encode a resolved image at the session's negotiated version: inline
+/// JSON pixels at baseline, a binary block in a v2 session.
+fn image_body(session: &ConnSession, img: &crate::image::Image<f32>) -> (Json, Option<Vec<u8>>) {
+    if session.version() >= PROTOCOL_V2 {
+        let (header, blob) = protocol::encode_image_blob(img);
+        (header, Some(blob))
+    } else {
+        (protocol::encode_image(img), None)
+    }
+}
+
+/// Execute one verb against the fleet/controller. Returns the response
+/// frame plus the binary block backing it, when the session version
+/// ships pixels out of band.
 fn dispatch(
-    shared: &Arc<ServerShared>,
-    tickets: &mut HashMap<u64, Ticket>,
+    session: &ConnSession,
     frame: RequestFrame,
-) -> ResponseFrame {
+    blob: Option<&[u8]>,
+) -> (ResponseFrame, Option<Vec<u8>>) {
+    let shared = &session.shared;
     let id = frame.id;
     let p = &frame.payload;
+    let lock_tickets = || session.tickets.lock().expect("ticket table poisoned");
+    let plain = |resp: ResponseFrame| (resp, None);
     match frame.verb {
+        // The reader answers hello inline before the pool; a mid-stream
+        // repeat landing here is a protocol misuse, not a crash.
+        Verb::Hello => plain(err(
+            id,
+            WireErrorKind::Protocol,
+            "hello must be the first frame on a connection",
+        )),
         Verb::Submit => {
             if shared.closed.load(Ordering::SeqCst) {
-                return ResponseFrame::err(
+                return plain(ResponseFrame::err(
                     id,
                     WireError::from_submit(&SubmitError::ShuttingDown),
-                );
+                ));
             }
-            let req = match protocol::decode_submit(p) {
+            let req = match protocol::decode_submit_with(p, blob) {
                 Ok(r) => r,
-                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                Err(e) => return plain(err(id, WireErrorKind::Protocol, e.to_string())),
             };
             match shared.fleet.submit(req) {
                 Ok(ticket) => {
@@ -545,15 +684,15 @@ fn dispatch(
                         Some(d) => body.set("device", d),
                         None => body,
                     };
-                    tickets.insert(ticket.id, ticket);
-                    ok(id, body)
+                    lock_tickets().insert(ticket.id, ticket);
+                    plain(ok(id, body))
                 }
-                Err(e) => ResponseFrame::err(id, WireError::from_submit(&e)),
+                Err(e) => plain(ResponseFrame::err(id, WireError::from_submit(&e))),
             }
         }
         Verb::Wait => {
             let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
-                return err(id, WireErrorKind::Protocol, "wait missing 'ticket'");
+                return plain(err(id, WireErrorKind::Protocol, "wait missing 'ticket'"));
             };
             // Per-call budget, capped so one call never outlives the
             // idle timeout; the client loops until done. NaN (which
@@ -564,8 +703,11 @@ fn dispatch(
                 .filter(|ms| ms.is_finite())
                 .unwrap_or(1000.0)
                 .clamp(0.0, 5000.0);
-            let Some(ticket) = tickets.remove(&tid) else {
-                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+            // Removing the ticket claims it for this call — a second
+            // pipelined wait on the same id sees not-found rather than
+            // two workers blocking on one resolution.
+            let Some(ticket) = lock_tickets().remove(&tid) else {
+                return plain(err(id, WireErrorKind::NotFound, format!("no ticket {tid}")));
             };
             let deadline = Instant::now() + Duration::from_secs_f64(budget_ms / 1e3);
             loop {
@@ -574,83 +716,81 @@ fn dispatch(
                 match ticket.wait_timeout(step) {
                     Ok(Some(img)) => {
                         shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
-                        return ok(
-                            id,
-                            Json::obj()
-                                .set("done", true)
-                                .set("image", protocol::encode_image(&img)),
-                        );
+                        let (image, blob) = image_body(session, &img);
+                        let body = Json::obj().set("done", true).set("image", image);
+                        return (ok(id, body), blob);
                     }
                     Ok(None) => {
                         if Instant::now() >= deadline {
-                            tickets.insert(tid, ticket);
-                            return ok(id, Json::obj().set("done", false));
+                            lock_tickets().insert(tid, ticket);
+                            return plain(ok(id, Json::obj().set("done", false)));
                         }
                     }
                     Err(e) => {
                         shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
-                        return err(id, WireErrorKind::Failed, format!("{e:#}"));
+                        return plain(err(id, WireErrorKind::Failed, format!("{e:#}")));
                     }
                 }
             }
         }
         Verb::TryWait => {
             let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
-                return err(id, WireErrorKind::Protocol, "try_wait missing 'ticket'");
+                return plain(err(id, WireErrorKind::Protocol, "try_wait missing 'ticket'"));
             };
+            let mut tickets = lock_tickets();
             let Some(ticket) = tickets.get(&tid) else {
-                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+                return plain(err(id, WireErrorKind::NotFound, format!("no ticket {tid}")));
             };
             match ticket.try_wait() {
                 Ok(Some(img)) => {
-                    let body = Json::obj()
-                        .set("done", true)
-                        .set("image", protocol::encode_image(&img));
+                    let (image, blob) = image_body(session, &img);
+                    let body = Json::obj().set("done", true).set("image", image);
                     tickets.remove(&tid);
                     shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
-                    ok(id, body)
+                    (ok(id, body), blob)
                 }
-                Ok(None) => ok(id, Json::obj().set("done", false)),
+                Ok(None) => plain(ok(id, Json::obj().set("done", false))),
                 Err(e) => {
                     tickets.remove(&tid);
                     shared.open_tickets.fetch_sub(1, Ordering::SeqCst);
-                    err(id, WireErrorKind::Failed, format!("{e:#}"))
+                    plain(err(id, WireErrorKind::Failed, format!("{e:#}")))
                 }
             }
         }
         Verb::Cancel => {
             let Some(tid) = p.get("ticket").and_then(Json::as_u64) else {
-                return err(id, WireErrorKind::Protocol, "cancel missing 'ticket'");
+                return plain(err(id, WireErrorKind::Protocol, "cancel missing 'ticket'"));
             };
+            let tickets = lock_tickets();
             let Some(ticket) = tickets.get(&tid) else {
-                return err(id, WireErrorKind::NotFound, format!("no ticket {tid}"));
+                return plain(err(id, WireErrorKind::NotFound, format!("no ticket {tid}")));
             };
             ticket.cancel();
             // The ticket stays registered: a later wait/try_wait
             // observes the cancelled resolution and settles the count.
-            ok(id, Json::obj().set("cancelled", true))
+            plain(ok(id, Json::obj().set("cancelled", true)))
         }
-        Verb::Topology => ok(id, encode_topology(&shared.controller.topology())),
+        Verb::Topology => plain(ok(id, encode_topology(&shared.controller.topology()))),
         Verb::AddMember => {
             let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "add_member missing 'device'");
+                return plain(err(id, WireErrorKind::Protocol, "add_member missing 'device'"));
             };
             let Some(desc) = crate::device::find_device(dev_id) else {
-                return err(
+                return plain(err(
                     id,
                     WireErrorKind::NotFound,
                     format!("no device '{dev_id}' in the registry"),
-                );
+                ));
             };
             let policy = match p.get("policy") {
                 Some(pp) => match protocol::decode_policy(pp) {
                     Ok(pol) => pol,
-                    Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                    Err(e) => return plain(err(id, WireErrorKind::Protocol, e.to_string())),
                 },
                 None => crate::coordinator::TilePolicy::PortableFallback,
             };
             let backend = (shared.backends)(&desc);
-            match shared.controller.add_member(desc, backend, policy) {
+            plain(match shared.controller.add_member(desc, backend, policy) {
                 Ok(member) => ok(
                     id,
                     Json::obj()
@@ -658,45 +798,49 @@ fn dispatch(
                         .set("epoch", shared.controller.epoch()),
                 ),
                 Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
-            }
+            })
         }
         Verb::RemoveMember => {
             let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "remove_member missing 'device'");
+                return plain(err(
+                    id,
+                    WireErrorKind::Protocol,
+                    "remove_member missing 'device'",
+                ));
             };
             let mode = match p.get("mode").and_then(Json::as_str) {
                 None => crate::coordinator::DrainMode::Graceful,
                 Some(m) => match protocol::parse_drain_mode(m) {
                     Ok(m) => m,
-                    Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                    Err(e) => return plain(err(id, WireErrorKind::Protocol, e.to_string())),
                 },
             };
-            match shared.controller.remove_member(dev_id, mode) {
+            plain(match shared.controller.remove_member(dev_id, mode) {
                 Ok(()) => ok(id, Json::obj().set("epoch", shared.controller.epoch())),
                 Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
-            }
+            })
         }
         Verb::Drain => {
             let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "drain missing 'device'");
+                return plain(err(id, WireErrorKind::Protocol, "drain missing 'device'"));
             };
-            match shared.controller.drain(dev_id) {
+            plain(match shared.controller.drain(dev_id) {
                 Ok(()) => ok(id, Json::obj().set("epoch", shared.controller.epoch())),
                 Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
-            }
+            })
         }
         Verb::Retune => {
             let Some(dev_id) = p.get("device").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "retune missing 'device'");
+                return plain(err(id, WireErrorKind::Protocol, "retune missing 'device'"));
             };
             let Some(oj) = p.get("outcome") else {
-                return err(id, WireErrorKind::Protocol, "retune missing 'outcome'");
+                return plain(err(id, WireErrorKind::Protocol, "retune missing 'outcome'"));
             };
             let outcome = match crate::autotuner::TuningOutcome::from_json(oj) {
                 Ok(o) => o,
-                Err(e) => return err(id, WireErrorKind::Protocol, format!("{e:#}")),
+                Err(e) => return plain(err(id, WireErrorKind::Protocol, format!("{e:#}"))),
             };
-            match shared.controller.retune(dev_id, &outcome) {
+            plain(match shared.controller.retune(dev_id, &outcome) {
                 Ok(tile) => ok(
                     id,
                     Json::obj().set(
@@ -708,71 +852,73 @@ fn dispatch(
                     ),
                 ),
                 Err(e) => err(id, WireErrorKind::NotFound, format!("{e:#}")),
-            }
+            })
         }
         Verb::SetScheduler => {
             let Some(name) = p.get("name").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "set_scheduler missing 'name'");
+                return plain(err(id, WireErrorKind::Protocol, "set_scheduler missing 'name'"));
             };
-            match shared.controller.set_scheduler_by_name(name) {
+            plain(match shared.controller.set_scheduler_by_name(name) {
                 Ok(()) => ok(id, Json::obj().set("ok", true)),
                 Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
-            }
+            })
         }
         Verb::SetAdmission => {
             let Some(name) = p.get("name").and_then(Json::as_str) else {
-                return err(id, WireErrorKind::Protocol, "set_admission missing 'name'");
+                return plain(err(id, WireErrorKind::Protocol, "set_admission missing 'name'"));
             };
             let timeout_ms = p.get("timeout_ms").and_then(Json::as_f64).unwrap_or(50.0);
             let timeout = match protocol::duration_from_ms(timeout_ms, "timeout_ms") {
                 Ok(t) => t,
-                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                Err(e) => return plain(err(id, WireErrorKind::Protocol, e.to_string())),
             };
-            match shared.controller.set_admission_by_name(name, timeout) {
+            plain(match shared.controller.set_admission_by_name(name, timeout) {
                 Ok(()) => ok(id, Json::obj().set("ok", true)),
                 Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
-            }
+            })
         }
         Verb::SetStealConfig => {
             let Some(enabled) = p.get("enabled").and_then(Json::as_bool) else {
-                return err(
+                return plain(err(
                     id,
                     WireErrorKind::Protocol,
                     "set_steal_config missing 'enabled'",
-                );
+                ));
             };
             let Some(threshold) = p.get("threshold").and_then(Json::as_u64) else {
-                return err(
+                return plain(err(
                     id,
                     WireErrorKind::Protocol,
                     "set_steal_config missing 'threshold'",
-                );
+                ));
             };
-            match shared
-                .controller
-                .set_steal_config(enabled, threshold as usize)
-            {
-                Ok(()) => ok(id, Json::obj().set("ok", true)),
-                Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
-            }
+            plain(
+                match shared
+                    .controller
+                    .set_steal_config(enabled, threshold as usize)
+                {
+                    Ok(()) => ok(id, Json::obj().set("ok", true)),
+                    Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
+                },
+            )
         }
-        Verb::Stats => ok(id, WireStats::of(&shared.fleet.stats()).to_json()),
-        Verb::Autoscaler => match &shared.autoscaler {
+        Verb::Stats => plain(ok(id, WireStats::of(&shared.fleet.stats()).to_json())),
+        Verb::Autoscaler => plain(match &shared.autoscaler {
             Some(h) => ok(id, AutoscalerDesc::of(&h.view()).to_json()),
             None => err(id, WireErrorKind::NotFound, "no autoscaler running"),
-        },
+        }),
         Verb::SetAutoscaler => {
             let Some(h) = &shared.autoscaler else {
-                return err(id, WireErrorKind::NotFound, "no autoscaler running");
+                return plain(err(id, WireErrorKind::NotFound, "no autoscaler running"));
             };
             let update = match protocol::decode_autoscaler_update(p) {
                 Ok(u) => u,
-                Err(e) => return err(id, WireErrorKind::Protocol, e.to_string()),
+                Err(e) => return plain(err(id, WireErrorKind::Protocol, e.to_string())),
             };
-            match h.apply(&update) {
+            plain(match h.apply(&update) {
                 Ok(()) => ok(id, AutoscalerDesc::of(&h.view()).to_json()),
                 Err(e) => err(id, WireErrorKind::Protocol, format!("{e:#}")),
-            }
+            })
         }
     }
 }

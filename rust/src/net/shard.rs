@@ -277,13 +277,9 @@ impl Drop for FrontTier {
 
 fn poll_all(shards: &[ShardState]) {
     for s in shards {
-        // A poisoned client (response timeout, framing failure) fails
-        // every call until redialed — reconnect here so a shard that
-        // comes back gets its arc of the ring back.
-        if s.client.is_dead() && s.client.reconnect().is_err() {
-            s.alive.store(false, Ordering::SeqCst);
-            continue;
-        }
+        // topology() is replay-safe, so the client redials a dead
+        // connection itself (with backoff) — one call both probes the
+        // shard and gives a returned shard its arc of the ring back.
         match s.client.topology() {
             Ok(t) => {
                 s.epoch.store(t.epoch, Ordering::SeqCst);

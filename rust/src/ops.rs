@@ -1,0 +1,538 @@
+//! Transport-agnostic fleet operations.
+//!
+//! The serving system has two ways to drive a fleet: in process through
+//! [`Fleet`]/[`FleetController`], and over the wire through
+//! [`FleetClient`]. Before this module existed the CLI carried two
+//! parallel drivers — one per transport — that drifted whenever a verb
+//! grew a flag. This module is the single vocabulary both transports
+//! speak:
+//!
+//! * [`FleetOps`] — the data plane: submit a [`Request`], get back a
+//!   waitable/pollable/cancellable [`TicketOps`] handle, read fleet
+//!   stats.
+//! * [`ControlOps`] — the control plane: every controller verb
+//!   (`topology`, membership, drain, retune, scheduler/admission/steal
+//!   swaps) plus the autoscaler surface.
+//!
+//! [`LocalFleet`] implements both over an in-process fleet with exactly
+//! the semantics [`NetServer`](crate::net::NetServer) gives the same
+//! verbs (registry device lookup, epoch-stamped membership changes,
+//! "no autoscaler running" when none was started). [`FleetClient`]
+//! implements both over the wire. Code written against the traits —
+//! `tilekit fleet` is the in-tree example — cannot tell the difference:
+//!
+//! ```no_run
+//! use tilekit::ops::ControlOps;
+//!
+//! fn epoch_of(ctl: &dyn ControlOps) -> anyhow::Result<u64> {
+//!     Ok(ctl.topology_desc().map_err(|e| anyhow::anyhow!("{e}"))?.epoch)
+//! }
+//! ```
+//!
+//! Results come back in the wire-level descriptor types
+//! ([`TopologyDesc`], [`WireStats`], [`AutoscalerDesc`]) rather than the
+//! in-process views: those are the transport-neutral lingua franca — the
+//! local implementation snapshots into them for free, and the remote one
+//! already receives them.
+
+use crate::autotuner::TuningOutcome;
+use crate::coordinator::{
+    AutoscalerHandle, AutoscalerUpdate, DrainMode, Fleet, FleetController, Request, SubmitError,
+    Ticket, TilePolicy,
+};
+use crate::image::Image;
+use crate::net::{
+    AutoscalerDesc, BackendFactory, ClientError, FleetClient, RemoteTicket, TopologyDesc,
+    WireStats,
+};
+use crate::tiling::TileDim;
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Why a fleet operation failed, independent of transport.
+#[derive(Debug)]
+pub enum OpsError {
+    /// The fleet refused the submission — the same typed backpressure
+    /// whether it was reached in process or over the wire.
+    Submit(SubmitError),
+    /// The path to the fleet failed (socket died, protocol violation).
+    /// Never produced by the in-process implementation.
+    Transport(String),
+    /// The operation reached the fleet and failed there (unknown
+    /// device, invalid knob value, no autoscaler running, ...).
+    Failed(String),
+}
+
+impl OpsError {
+    /// The typed [`SubmitError`], when this error is one.
+    pub fn submit_error(&self) -> Option<SubmitError> {
+        match self {
+            OpsError::Submit(e) => Some(*e),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for OpsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpsError::Submit(e) => write!(f, "fleet refused submit: {e}"),
+            OpsError::Transport(m) | OpsError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for OpsError {}
+
+impl From<ClientError> for OpsError {
+    fn from(e: ClientError) -> OpsError {
+        match e {
+            ClientError::Submit(s) => OpsError::Submit(s),
+            remote @ ClientError::Remote(_) => OpsError::Failed(remote.to_string()),
+            broken => OpsError::Transport(broken.to_string()),
+        }
+    }
+}
+
+/// Map the `anyhow` errors the in-process fleet hands back onto
+/// [`OpsError`], preserving the typed refusal when there is one (the
+/// wire does the same: the server encodes the [`SubmitError`] kind and
+/// the client rehydrates it).
+fn local_err(e: anyhow::Error) -> OpsError {
+    match e.downcast::<SubmitError>() {
+        Ok(s) => OpsError::Submit(s),
+        Err(e) => OpsError::Failed(format!("{e:#}")),
+    }
+}
+
+/// A pending submission, waitable regardless of transport. Implemented
+/// by the in-process [`Ticket`] and the remote
+/// [`RemoteTicket`](crate::net::RemoteTicket).
+pub trait TicketOps {
+    /// The submission id (stable across polls).
+    fn ticket_id(&self) -> u64;
+    /// The device the scheduler picked, when known.
+    fn device_id(&self) -> Option<&str>;
+    /// Block until the response arrives.
+    fn wait(self) -> Result<Image<f32>, OpsError>
+    where
+        Self: Sized;
+    /// Wait with a budget; `Ok(None)` on timeout.
+    fn wait_timeout(&self, budget: Duration) -> Result<Option<Image<f32>>, OpsError>;
+    /// Non-blocking poll; `Ok(None)` while still pending.
+    fn try_wait(&self) -> Result<Option<Image<f32>>, OpsError>;
+    /// Request cooperative cancellation.
+    fn cancel(&self) -> Result<(), OpsError>;
+}
+
+/// The fleet data plane, transport-agnostic.
+pub trait FleetOps {
+    /// The pending-submission handle this transport hands out.
+    type Ticket: TicketOps;
+
+    /// Submit a request; a refusal is a typed
+    /// [`OpsError::Submit`].
+    fn submit_request(&self, req: Request) -> Result<Self::Ticket, OpsError>;
+
+    /// Fleet-wide serving counters in the wire summary shape.
+    fn fleet_stats(&self) -> Result<WireStats, OpsError>;
+}
+
+/// The fleet control plane, transport-agnostic. Object-safe: the CLI
+/// drives `&dyn ControlOps` so one driver serves both transports.
+pub trait ControlOps {
+    /// Epoch-stamped topology snapshot.
+    fn topology_desc(&self) -> Result<TopologyDesc, OpsError>;
+
+    /// Current topology epoch.
+    fn current_epoch(&self) -> Result<u64, OpsError>;
+
+    /// Add a registry device as a member; returns
+    /// `(member id, new epoch)`.
+    fn add_member_by_id(&self, device: &str, policy: &TilePolicy) -> Result<(u64, u64), OpsError>;
+
+    /// Remove a member; returns the new epoch.
+    fn remove_member_by_id(&self, device: &str, mode: DrainMode) -> Result<u64, OpsError>;
+
+    /// Stop admissions to a member without removing it; returns the new
+    /// epoch.
+    fn drain_member(&self, device: &str) -> Result<u64, OpsError>;
+
+    /// Hot-swap a member's tuned tile from a fresh outcome; returns the
+    /// tile now in effect (`None` if the outcome had no tile for it).
+    fn retune_member(
+        &self,
+        device: &str,
+        outcome: &TuningOutcome,
+    ) -> Result<Option<TileDim>, OpsError>;
+
+    /// Swap the scheduler by registry name.
+    fn set_scheduler_named(&self, name: &str) -> Result<(), OpsError>;
+
+    /// Swap the admission policy by registry name.
+    fn set_admission_named(&self, name: &str, timeout: Duration) -> Result<(), OpsError>;
+
+    /// Reconfigure work stealing.
+    fn set_stealing(&self, enabled: bool, threshold: usize) -> Result<(), OpsError>;
+
+    /// Snapshot the autoscaler's knobs and counters. Fails with a
+    /// "no autoscaler running" [`OpsError::Failed`] when none was
+    /// started.
+    fn autoscaler_desc(&self) -> Result<AutoscalerDesc, OpsError>;
+
+    /// Apply a partial update to the autoscaler; returns the post-update
+    /// state.
+    fn apply_autoscaler(&self, update: &AutoscalerUpdate) -> Result<AutoscalerDesc, OpsError>;
+}
+
+// ------------------------------------------------------- in process --
+
+/// The in-process implementation of [`FleetOps`] + [`ControlOps`]: a
+/// fleet, its controller, a backend factory for `add_member`, and
+/// (optionally) the autoscaler handle — the same four things
+/// [`NetServer`](crate::net::NetServer) holds, with the same verb
+/// semantics.
+pub struct LocalFleet {
+    fleet: Arc<Fleet>,
+    controller: FleetController,
+    backends: BackendFactory,
+    autoscaler: Option<AutoscalerHandle>,
+}
+
+impl LocalFleet {
+    /// Wrap a fleet. `backends` builds the execution backend when
+    /// [`ControlOps::add_member_by_id`] brings a registry device in.
+    pub fn new(fleet: Arc<Fleet>, backends: BackendFactory) -> LocalFleet {
+        let controller = fleet.controller();
+        LocalFleet {
+            fleet,
+            controller,
+            backends,
+            autoscaler: None,
+        }
+    }
+
+    /// Attach a running autoscaler so the autoscaler verbs resolve.
+    pub fn with_autoscaler(mut self, handle: AutoscalerHandle) -> LocalFleet {
+        self.autoscaler = Some(handle);
+        self
+    }
+
+    /// The wrapped fleet.
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
+    }
+
+    /// The fleet's controller handle.
+    pub fn controller(&self) -> &FleetController {
+        &self.controller
+    }
+
+    fn autoscaler_handle(&self) -> Result<&AutoscalerHandle, OpsError> {
+        self.autoscaler
+            .as_ref()
+            .ok_or_else(|| OpsError::Failed("no autoscaler running".into()))
+    }
+}
+
+impl TicketOps for Ticket {
+    fn ticket_id(&self) -> u64 {
+        self.id
+    }
+
+    fn device_id(&self) -> Option<&str> {
+        Ticket::device_id(self)
+    }
+
+    fn wait(self) -> Result<Image<f32>, OpsError> {
+        Ticket::wait(self).map_err(local_err)
+    }
+
+    fn wait_timeout(&self, budget: Duration) -> Result<Option<Image<f32>>, OpsError> {
+        Ticket::wait_timeout(self, budget).map_err(local_err)
+    }
+
+    fn try_wait(&self) -> Result<Option<Image<f32>>, OpsError> {
+        Ticket::try_wait(self).map_err(local_err)
+    }
+
+    fn cancel(&self) -> Result<(), OpsError> {
+        Ticket::cancel(self);
+        Ok(())
+    }
+}
+
+impl FleetOps for LocalFleet {
+    type Ticket = Ticket;
+
+    fn submit_request(&self, req: Request) -> Result<Ticket, OpsError> {
+        self.fleet.submit(req).map_err(OpsError::Submit)
+    }
+
+    fn fleet_stats(&self) -> Result<WireStats, OpsError> {
+        Ok(WireStats::of(&self.fleet.stats()))
+    }
+}
+
+impl ControlOps for LocalFleet {
+    fn topology_desc(&self) -> Result<TopologyDesc, OpsError> {
+        Ok(TopologyDesc::of(&self.controller.topology()))
+    }
+
+    fn current_epoch(&self) -> Result<u64, OpsError> {
+        Ok(self.controller.epoch())
+    }
+
+    fn add_member_by_id(&self, device: &str, policy: &TilePolicy) -> Result<(u64, u64), OpsError> {
+        // Same lookup + message as the wire server's add_member verb.
+        let desc = crate::device::find_device(device)
+            .ok_or_else(|| OpsError::Failed(format!("no device '{device}' in the registry")))?;
+        let backend = (self.backends)(&desc);
+        let member = self
+            .controller
+            .add_member(desc, backend, policy.clone())
+            .map_err(local_err)?;
+        Ok((member, self.controller.epoch()))
+    }
+
+    fn remove_member_by_id(&self, device: &str, mode: DrainMode) -> Result<u64, OpsError> {
+        self.controller
+            .remove_member(device, mode)
+            .map_err(local_err)?;
+        Ok(self.controller.epoch())
+    }
+
+    fn drain_member(&self, device: &str) -> Result<u64, OpsError> {
+        self.controller.drain(device).map_err(local_err)?;
+        Ok(self.controller.epoch())
+    }
+
+    fn retune_member(
+        &self,
+        device: &str,
+        outcome: &TuningOutcome,
+    ) -> Result<Option<TileDim>, OpsError> {
+        self.controller.retune(device, outcome).map_err(local_err)
+    }
+
+    fn set_scheduler_named(&self, name: &str) -> Result<(), OpsError> {
+        self.controller.set_scheduler_by_name(name).map_err(local_err)
+    }
+
+    fn set_admission_named(&self, name: &str, timeout: Duration) -> Result<(), OpsError> {
+        self.controller
+            .set_admission_by_name(name, timeout)
+            .map_err(local_err)
+    }
+
+    fn set_stealing(&self, enabled: bool, threshold: usize) -> Result<(), OpsError> {
+        self.controller
+            .set_steal_config(enabled, threshold)
+            .map_err(local_err)
+    }
+
+    fn autoscaler_desc(&self) -> Result<AutoscalerDesc, OpsError> {
+        Ok(AutoscalerDesc::of(&self.autoscaler_handle()?.view()))
+    }
+
+    fn apply_autoscaler(&self, update: &AutoscalerUpdate) -> Result<AutoscalerDesc, OpsError> {
+        let handle = self.autoscaler_handle()?;
+        handle.apply(update).map_err(local_err)?;
+        Ok(AutoscalerDesc::of(&handle.view()))
+    }
+}
+
+// ---------------------------------------------------------- remote --
+
+impl TicketOps for RemoteTicket {
+    fn ticket_id(&self) -> u64 {
+        self.id()
+    }
+
+    fn device_id(&self) -> Option<&str> {
+        RemoteTicket::device_id(self)
+    }
+
+    fn wait(self) -> Result<Image<f32>, OpsError> {
+        RemoteTicket::wait(self).map_err(OpsError::from)
+    }
+
+    fn wait_timeout(&self, budget: Duration) -> Result<Option<Image<f32>>, OpsError> {
+        RemoteTicket::wait_timeout(self, budget).map_err(OpsError::from)
+    }
+
+    fn try_wait(&self) -> Result<Option<Image<f32>>, OpsError> {
+        RemoteTicket::try_wait(self).map_err(OpsError::from)
+    }
+
+    fn cancel(&self) -> Result<(), OpsError> {
+        RemoteTicket::cancel(self).map_err(OpsError::from)
+    }
+}
+
+impl FleetOps for FleetClient {
+    type Ticket = RemoteTicket;
+
+    fn submit_request(&self, req: Request) -> Result<RemoteTicket, OpsError> {
+        self.submit(&req).map_err(OpsError::from)
+    }
+
+    fn fleet_stats(&self) -> Result<WireStats, OpsError> {
+        self.stats().map_err(OpsError::from)
+    }
+}
+
+impl ControlOps for FleetClient {
+    fn topology_desc(&self) -> Result<TopologyDesc, OpsError> {
+        self.topology().map_err(OpsError::from)
+    }
+
+    fn current_epoch(&self) -> Result<u64, OpsError> {
+        self.epoch().map_err(OpsError::from)
+    }
+
+    fn add_member_by_id(&self, device: &str, policy: &TilePolicy) -> Result<(u64, u64), OpsError> {
+        self.add_member(device, policy).map_err(OpsError::from)
+    }
+
+    fn remove_member_by_id(&self, device: &str, mode: DrainMode) -> Result<u64, OpsError> {
+        self.remove_member(device, mode).map_err(OpsError::from)
+    }
+
+    fn drain_member(&self, device: &str) -> Result<u64, OpsError> {
+        self.drain(device).map_err(OpsError::from)
+    }
+
+    fn retune_member(
+        &self,
+        device: &str,
+        outcome: &TuningOutcome,
+    ) -> Result<Option<TileDim>, OpsError> {
+        self.retune(device, outcome).map_err(OpsError::from)
+    }
+
+    fn set_scheduler_named(&self, name: &str) -> Result<(), OpsError> {
+        self.set_scheduler(name).map_err(OpsError::from)
+    }
+
+    fn set_admission_named(&self, name: &str, timeout: Duration) -> Result<(), OpsError> {
+        self.set_admission(name, timeout).map_err(OpsError::from)
+    }
+
+    fn set_stealing(&self, enabled: bool, threshold: usize) -> Result<(), OpsError> {
+        self.set_steal_config(enabled, threshold)
+            .map_err(OpsError::from)
+    }
+
+    fn autoscaler_desc(&self) -> Result<AutoscalerDesc, OpsError> {
+        self.autoscaler().map_err(OpsError::from)
+    }
+
+    fn apply_autoscaler(&self, update: &AutoscalerUpdate) -> Result<AutoscalerDesc, OpsError> {
+        self.set_autoscaler(update).map_err(OpsError::from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+    use crate::coordinator::FleetBuilder;
+    use crate::device::{find_device, DeviceDescriptor};
+    use crate::image::{generate, Interpolator};
+    use crate::runtime::{Manifest, MockEngine, ResizeBackend};
+
+    fn mock_factory() -> BackendFactory {
+        Arc::new(|_d: &DeviceDescriptor| Arc::new(MockEngine::new()) as Arc<dyn ResizeBackend>)
+    }
+
+    fn local() -> LocalFleet {
+        let serving = ServingConfig {
+            workers: 1,
+            batch_max: Some(4),
+            batch_deadline_ms: 0.5,
+            queue_cap: 64,
+            ..ServingConfig::default()
+        };
+        let fleet = FleetBuilder::new(&serving, &Manifest::fleet_demo())
+            .device(
+                find_device("gtx260").unwrap(),
+                Arc::new(MockEngine::new()),
+                TilePolicy::Fixed(TileDim::new(16, 8)),
+            )
+            .build()
+            .unwrap();
+        LocalFleet::new(Arc::new(fleet), mock_factory())
+    }
+
+    #[test]
+    fn local_fleet_serves_through_the_traits() {
+        let ops = local();
+        let img = generate::test_scene(64, 64, 1);
+        let ticket = ops
+            .submit_request(Request::new(Interpolator::Bilinear, img, 2))
+            .unwrap();
+        assert!(TicketOps::device_id(&ticket).is_some());
+        let out = TicketOps::wait(ticket).unwrap();
+        assert_eq!(out.width(), 128);
+        assert!(ops.fleet_stats().unwrap().completed >= 1);
+    }
+
+    #[test]
+    fn local_fleet_mirrors_the_wire_control_plane() {
+        let ops = local();
+        let before = ops.topology_desc().unwrap();
+        assert_eq!(before.members.len(), 1);
+        assert_eq!(ops.current_epoch().unwrap(), before.epoch);
+
+        let (member, epoch) = ops
+            .add_member_by_id("fermi", &TilePolicy::Fixed(TileDim::new(16, 8)))
+            .unwrap();
+        assert!(epoch > before.epoch, "membership bumps the epoch");
+        let topo = ops.topology_desc().unwrap();
+        assert!(topo.members.iter().any(|m| m.id == member));
+
+        ops.drain_member("fermi").unwrap();
+        let epoch2 = ops
+            .remove_member_by_id("fermi", DrainMode::Graceful)
+            .unwrap();
+        assert!(epoch2 > epoch);
+
+        ops.set_scheduler_named("least-loaded").unwrap();
+        ops.set_admission_named("block", Duration::from_millis(50))
+            .unwrap();
+        ops.set_stealing(false, 4).unwrap();
+        assert!(ops.set_scheduler_named("no-such-scheduler").is_err());
+    }
+
+    #[test]
+    fn unknown_devices_and_missing_autoscaler_fail_like_the_server() {
+        let ops = local();
+        let err = ops
+            .add_member_by_id("not-a-gpu", &TilePolicy::Fixed(TileDim::new(16, 8)))
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("no device 'not-a-gpu' in the registry"),
+            "got: {err}"
+        );
+        let err = ops.autoscaler_desc().unwrap_err();
+        assert!(err.to_string().contains("no autoscaler running"), "{err}");
+        let err = ops
+            .apply_autoscaler(&AutoscalerUpdate::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("no autoscaler running"), "{err}");
+    }
+
+    #[test]
+    fn typed_refusals_survive_the_trait_boundary() {
+        let ops = local();
+        // The demo manifest has no bicubic artifact.
+        let img = generate::test_scene(64, 64, 2);
+        let err = ops
+            .submit_request(Request::new(Interpolator::Bicubic, img, 2))
+            .unwrap_err();
+        assert_eq!(err.submit_error(), Some(SubmitError::Unsupported));
+        assert!(err.to_string().contains("fleet refused submit"));
+    }
+}

@@ -1,4 +1,4 @@
-//! Open-loop trace replay against a running [`Service`].
+//! Open-loop trace replay against a running [`Fleet`].
 //!
 //! The replayer sleeps until each event's timestamp, submits without
 //! blocking (backpressure rejections are *recorded*, not retried — an
@@ -8,7 +8,7 @@
 //! vs achieved load, which is what a serving evaluation needs.
 
 use super::trace::Trace;
-use crate::coordinator::{Request, Service, SubmitError, Ticket};
+use crate::coordinator::{Fleet, Request, SubmitError, Ticket};
 use crate::image::generate;
 use crate::metrics::Histogram;
 use std::time::{Duration, Instant};
@@ -50,7 +50,7 @@ impl ReplayOutcome {
 
 /// Replay `trace` against `svc`. Blocks until every submitted request
 /// has resolved.
-pub fn replay(svc: &Service, trace: &Trace) -> ReplayOutcome {
+pub fn replay(svc: &Fleet, trace: &Trace) -> ReplayOutcome {
     // Pre-generate every input OUTSIDE the timed loop: synthesizing a
     // 128x128 test scene costs milliseconds, which would otherwise make
     // the driver lag the trace and corrupt the latency measurement.
@@ -147,12 +147,12 @@ pub fn replay(svc: &Service, trace: &Trace) -> ReplayOutcome {
 mod tests {
     use super::*;
     use crate::config::ServingConfig;
-    use crate::coordinator::{RejectWhenFull, RequestKey, ServiceBuilder, TilePolicy};
+    use crate::coordinator::{FleetBuilder, RejectWhenFull, RequestKey, TilePolicy};
     use crate::runtime::{Manifest, MockEngine};
     use crate::workload::trace::Arrival;
     use std::sync::Arc;
 
-    fn setup(queue_cap: usize, delay_ms: u64) -> (Service, Vec<RequestKey>) {
+    fn setup(queue_cap: usize, delay_ms: u64) -> (Fleet, Vec<RequestKey>) {
         let manifest = Manifest::parse(
             r#"{
               "version": 1,
@@ -176,7 +176,7 @@ mod tests {
             queue_cap,
             ..ServingConfig::default()
         };
-        let svc = ServiceBuilder::new(&cfg, &manifest)
+        let svc = FleetBuilder::new(&cfg, &manifest)
             .backend(backend, TilePolicy::PortableFallback)
             .admission(RejectWhenFull)
             .build()

@@ -444,6 +444,38 @@ fn bench_serving_quick_reports_and_gates() {
 }
 
 #[test]
+fn bench_wire_quick_reports_and_gates() {
+    if binary().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join("tilekit_cli_bench_wire");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pr = dir.join("BENCH_PR.json");
+    let pr_s = pr.to_str().unwrap().to_string();
+    // The wire benchmark appends per-protocol-version records to the
+    // same gated report: us/req (wall-clock) and bytes/req
+    // (deterministic transport counters).
+    let (out, err, ok) = run(&[
+        "bench", "--wire", "--quick",
+        "--out", &pr_s, "--baseline", "BENCH_BASELINE.json",
+    ]);
+    assert!(ok, "stderr: {err}\nstdout: {out}");
+    assert!(out.contains("wire loopback benchmark (quick profile)"), "{out}");
+    for rec in [
+        "wire: v1 submit+wait us/req",
+        "wire: v2 submit+wait us/req",
+        "wire: v1 bytes/req",
+        "wire: v2 bytes/req",
+    ] {
+        assert!(out.contains(rec), "bench output missing '{rec}':\n{out}");
+    }
+    assert!(out.contains("regression gate"), "{out}");
+    let written = std::fs::read_to_string(&pr).unwrap();
+    assert!(written.contains("wire: v2 bytes/req"), "{written}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn bench_quick_without_serving_is_rejected() {
     if binary().is_none() {
         return;

@@ -10,7 +10,7 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, FleetBuilder, Request, TilePolicy};
 use tilekit::image::{generate, Image, Interpolator};
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Engine, Manifest, ResizeBackend};
@@ -123,7 +123,7 @@ fn service_serves_real_artifacts_end_to_end() {
         artifacts_dir: "artifacts".into(),
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&cfg, &m)
+    let svc = FleetBuilder::new(&cfg, &m)
         .backend(backend, TilePolicy::Fixed("32x4".parse().unwrap()))
         .admission(BlockWithTimeout(Duration::from_secs(60)))
         .build()

@@ -13,8 +13,8 @@ use tilekit::autotuner::{
 use tilekit::config::ServingConfig;
 use tilekit::coordinator::{
     Autoscaler, AutoscalerOpts, Biased, BlockWithTimeout, CostModelEta, DrainMode, Priority,
-    RejectWhenFull, Request, RequestKey, RetuneDaemon, RetuneSpec, RoundRobin, Service,
-    ServiceBuilder, StandbyMember, SubmitError, TilePolicy,
+    FleetBuilder, RejectWhenFull, Request, RequestKey, RetuneDaemon, RetuneSpec, RoundRobin,
+    StandbyMember, SubmitError, TilePolicy,
 };
 use tilekit::device::{find_device, DeviceDescriptor};
 use tilekit::image::{generate, Interpolator};
@@ -85,7 +85,7 @@ fn deadline_expiry_sheds_before_execution() {
         queue_cap: 64,
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&config, &manifest)
+    let svc = FleetBuilder::new(&config, &manifest)
         .backend(backend, TilePolicy::PortableFallback)
         .admission(BlockWithTimeout(Duration::from_secs(10)))
         .build()
@@ -115,7 +115,7 @@ fn deadline_expiry_sheds_before_execution() {
 #[test]
 fn zero_budget_fails_fast_at_submit() {
     let manifest = fleet_manifest();
-    let svc = Service::single(
+    let svc = Fleet::single(
         &cfg(),
         &manifest,
         Arc::new(MockEngine::new()),
@@ -146,7 +146,7 @@ fn cancel_before_batch_pickup_never_reaches_a_worker() {
         queue_cap: 64,
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&config, &manifest)
+    let svc = FleetBuilder::new(&config, &manifest)
         .backend(backend, TilePolicy::PortableFallback)
         .admission(RejectWhenFull)
         .build()
@@ -167,7 +167,7 @@ fn cancel_before_batch_pickup_never_reaches_a_worker() {
 #[test]
 fn priority_class_histograms_fill_in_e2e_serving() {
     let manifest = fleet_manifest();
-    let svc = Service::single(
+    let svc = Fleet::single(
         &cfg(),
         &manifest,
         Arc::new(MockEngine::new()),
@@ -218,7 +218,7 @@ fn every_admitted_request_lands_on_a_supporting_device() {
     for name in ["round-robin", "least-loaded", "cost-eta"] {
         let mut config = cfg();
         config.scheduler = name.to_string();
-        let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        let svc = FleetBuilder::new(&config, &fleet_manifest())
             .device(
                 gtx.clone(),
                 Arc::new(MockEngine::new()),
@@ -289,7 +289,7 @@ fn aggregate_sim_cost(policy: TilePolicy, trace: &Trace) -> f64 {
         work_stealing: false,
         ..cfg()
     };
-    let svc = ServiceBuilder::new(&config, &manifest)
+    let svc = FleetBuilder::new(&config, &manifest)
         .device(gtx, Arc::new(MockEngine::new()), policy.clone())
         .device(fermi, Arc::new(MockEngine::new()), policy)
         .scheduler(RoundRobin::default())
@@ -398,7 +398,7 @@ fn adaptive_fleet_beats_static_fleet_on_skewed_trace() {
             ..ServingConfig::default()
         };
         let delay = Duration::from_millis(2);
-        let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        let svc = FleetBuilder::new(&config, &fleet_manifest())
             .device(
                 gtx.clone(),
                 Arc::new(MockEngine::with_delay(delay)),
@@ -457,7 +457,7 @@ fn adaptive_fleet_beats_static_fleet_on_skewed_trace() {
 // ------------------------------------------------- tuned-tile refresh --
 
 /// A `TuningDb` refresh changed a member's winner: `TuningDb::outcome_for`
-/// assembles the fresh fleet outcome and `Service::retune` hot-swaps the
+/// assembles the fresh fleet outcome and `Fleet::retune` hot-swaps the
 /// member's router without draining the fleet.
 #[test]
 fn tuning_db_refresh_drives_retune() {
@@ -486,7 +486,7 @@ fn tuning_db_refresh_drives_retune() {
         .unwrap();
 
     let (gtx, fermi) = pair();
-    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+    let svc = FleetBuilder::new(&cfg(), &fleet_manifest())
         .device(gtx, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale.clone()))
         .device(fermi, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale))
         .admission(BlockWithTimeout(Duration::from_secs(10)))
@@ -569,7 +569,7 @@ fn live_add_member_improves_cost_without_losing_a_ticket() {
             work_stealing: false, // isolate the scheduler's contribution
             ..ServingConfig::default()
         };
-        let svc = ServiceBuilder::new(&config, &fleet_manifest())
+        let svc = FleetBuilder::new(&config, &fleet_manifest())
             .device(
                 solo.clone(),
                 Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
@@ -641,7 +641,7 @@ fn graceful_remove_under_load_completes_every_ticket() {
         ..ServingConfig::default()
     };
     let n = 40usize;
-    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+    let svc = FleetBuilder::new(&config, &fleet_manifest())
         .device(
             gtx,
             Arc::new(MockEngine::with_delay(Duration::from_millis(2))),
@@ -728,7 +728,7 @@ fn retune_daemon_applies_tuning_db_file_refresh() {
         .unwrap();
 
     let (gtx, fermi) = pair();
-    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+    let svc = FleetBuilder::new(&cfg(), &fleet_manifest())
         .device(gtx, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale.clone()))
         .device(fermi, Arc::new(MockEngine::new()), TilePolicy::PerDevice(stale))
         .admission(BlockWithTimeout(Duration::from_secs(10)))
@@ -797,7 +797,7 @@ fn retune_daemon_applies_tuning_db_file_refresh() {
 #[test]
 fn drained_member_takes_no_new_work_but_finishes_old() {
     let (gtx, fermi) = pair();
-    let svc = ServiceBuilder::new(&cfg(), &fleet_manifest())
+    let svc = FleetBuilder::new(&cfg(), &fleet_manifest())
         .device(
             gtx,
             Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
@@ -909,7 +909,7 @@ fn autoscaled_fleet_beats_every_fixed_size_under_burst_trace() {
     // control loop instead of building it in. Returns (sim cost ms,
     // interactive p99 us, scale_ups, scale_downs).
     let run = |members: &[&DeviceDescriptor], standby: bool| -> (f64, f64, u64, u64) {
-        let mut builder = ServiceBuilder::new(&config, &manifest)
+        let mut builder = FleetBuilder::new(&config, &manifest)
             .scheduler(RoundRobin::default())
             .admission(RejectWhenFull);
         for d in members {
@@ -1005,7 +1005,7 @@ fn batch_migration_rehomes_pending_group_to_new_member() {
         steal_threshold: 2,
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+    let svc = FleetBuilder::new(&config, &fleet_manifest())
         .device(
             gtx,
             Arc::new(MockEngine::with_delay(Duration::from_millis(1))),
@@ -1127,7 +1127,7 @@ fn submit_hot_path_survives_control_plane_churn() {
         work_stealing: false, // keep the ownership ledger two-sided
         ..ServingConfig::default()
     };
-    let svc = ServiceBuilder::new(&config, &fleet_manifest())
+    let svc = FleetBuilder::new(&config, &fleet_manifest())
         .device(
             gtx,
             Arc::new(MockEngine::new()),

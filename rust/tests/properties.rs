@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 use tilekit::codec::json::Json;
 use tilekit::config::ServingConfig;
-use tilekit::coordinator::{BlockWithTimeout, Request, ServiceBuilder, TilePolicy};
+use tilekit::coordinator::{BlockWithTimeout, FleetBuilder, Request, TilePolicy};
 use tilekit::device::{builtin_devices, ComputeCapability};
 use tilekit::image::{generate, Interpolator};
 use tilekit::prop::{forall, prop_assert, prop_close};
@@ -271,7 +271,7 @@ fn prop_coordinator_conserves_requests() {
             ..ServingConfig::default()
         };
         let backend = Arc::new(MockEngine::failing_every(fail_every));
-        let svc = ServiceBuilder::new(&cfg, &manifest)
+        let svc = FleetBuilder::new(&cfg, &manifest)
             .backend(backend, TilePolicy::PortableFallback)
             .admission(BlockWithTimeout(Duration::from_secs(10)))
             .build()
@@ -1036,5 +1036,154 @@ fn prop_autoscaler_desc_round_trips() {
         };
         let back = AutoscalerDesc::from_json(&d.to_json()).map_err(|e| e.to_string())?;
         prop_assert(back == d, "autoscaler desc round trip differs")
+    });
+}
+
+#[test]
+fn prop_net_v2_binary_image_round_trips_bit_exactly() {
+    use tilekit::image::Image;
+    use tilekit::net::protocol::{decode_image_any, encode_image_blob};
+
+    forall("v2 binary image round trip", 200, |g| {
+        let w = g.usize(1, 24);
+        let h = g.usize(1, 24);
+        let mut data = generate::test_scene(w, h, g.u32(0, 10_000) as u64).to_dense();
+        // Sprinkle in the values JSON cannot carry (or mangles): the
+        // binary block must round-trip every f32 bit pattern.
+        for _ in 0..g.usize(0, 6) {
+            let i = g.usize(0, data.len() - 1);
+            data[i] = *g.choose(&[
+                f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                -0.0,
+                f32::MIN_POSITIVE,
+                f32::MAX,
+            ]);
+        }
+        let img = Image::from_vec(w, h, data.clone());
+        let (header, blob) = encode_image_blob(&img);
+        prop_assert(
+            blob.len() == 4 + 4 * w * h,
+            "block must cost exactly 4 bytes per pixel plus the count prefix",
+        )?;
+        let back = decode_image_any(&header, Some(blob.as_slice())).map_err(|e| e.to_string())?;
+        prop_assert(
+            back.width() == w && back.height() == h,
+            "dims must survive the block",
+        )?;
+        let back_px = back.to_dense();
+        for (i, (a, b)) in data.iter().zip(back_px.iter()).enumerate() {
+            prop_assert(
+                a.to_bits() == b.to_bits(),
+                format!("pixel {i} changed bits: {a:?} -> {b:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_v2_hostile_blocks_yield_typed_errors() {
+    use std::io::Cursor;
+    use tilekit::net::protocol::{decode_image_any, encode_image_blob, read_payload};
+    use tilekit::net::ProtocolError;
+
+    forall("v2 hostile payload blocks", 300, |g| {
+        let w = g.usize(1, 12);
+        let h = g.usize(1, 12);
+        let img = generate::test_scene(w, h, g.u32(0, 10_000) as u64);
+        let (header, blob) = encode_image_blob(&img);
+
+        // A block truncated anywhere short of full length must be a
+        // typed error, never a panic or a silently shorter image.
+        let cut = g.usize(0, blob.len() - 1);
+        prop_assert(
+            decode_image_any(&header, Some(&blob[..cut])).is_err(),
+            format!("truncation at {cut}/{} went unnoticed", blob.len()),
+        )?;
+
+        // A count prefix that disagrees with the header must be
+        // rejected (low byte flipped: the count always changes, because
+        // MAX_IMAGE_PIXELS keeps it far below the wrap).
+        let mut lying = blob.clone();
+        lying[0] ^= 0xff;
+        prop_assert(
+            decode_image_any(&header, Some(lying.as_slice())).is_err(),
+            "mismatched count prefix went unnoticed",
+        )?;
+
+        // A binary header with no block at all is malformed.
+        prop_assert(
+            decode_image_any(&header, None).is_err(),
+            "binary header with a missing block went unnoticed",
+        )?;
+
+        // read_payload: a block past the byte cap is Oversized before a
+        // single byte is read; EOF inside the block is Truncated.
+        let cap = g.usize(4, 256);
+        let n = g.usize(0, 512);
+        let avail = g.usize(0, n);
+        match read_payload(&mut Cursor::new(vec![0u8; avail]), n, cap) {
+            Ok(b) => prop_assert(
+                n <= cap && avail == n && b.len() == n,
+                "read_payload returned a block it could not have read",
+            )?,
+            Err(ProtocolError::Oversized { limit }) => {
+                prop_assert(n > cap && limit == cap, "wrong Oversized report")?;
+            }
+            Err(ProtocolError::Truncated) => {
+                prop_assert(n <= cap && avail < n, "wrong Truncated report")?;
+            }
+            Err(e) => return Err(format!("unexpected error: {e}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_net_hello_negotiation_is_sound_both_directions() {
+    use tilekit::net::protocol::{decode_hello_max, encode_hello, negotiate};
+    use tilekit::net::{PROTOCOL_V2, PROTOCOL_VERSION};
+
+    forall("hello negotiation", 300, |g| {
+        let client_max = g.usize(0, 6) as u64;
+        let server_max = g.usize(0, 6) as u64;
+        let v = negotiate(client_max, server_max);
+        prop_assert(
+            v >= PROTOCOL_VERSION,
+            "negotiation may never go below the baseline",
+        )?;
+        prop_assert(
+            v <= client_max.max(PROTOCOL_VERSION) && v <= server_max.max(PROTOCOL_VERSION),
+            "negotiation may never exceed either peer's maximum",
+        )?;
+        // Symmetric: both ends of the exchange compute the same pin.
+        prop_assert(
+            v == negotiate(server_max, client_max),
+            "negotiation must not depend on which side computes it",
+        )?;
+        // A v2-capable pair lands on v2; a pair with a v1 peer on v1.
+        if client_max >= PROTOCOL_V2 && server_max >= PROTOCOL_V2 {
+            prop_assert(v >= PROTOCOL_V2, "two v2 peers must speak v2")?;
+        }
+        if client_max <= PROTOCOL_VERSION || server_max <= PROTOCOL_VERSION {
+            prop_assert(v == PROTOCOL_VERSION, "a v1 peer pins the session to v1")?;
+        }
+        // The payload round-trips the advertised maximum exactly...
+        prop_assert(
+            decode_hello_max(&encode_hello(client_max)) == client_max,
+            "hello payload must carry the advertised maximum",
+        )?;
+        // ... and an alien payload (old peer, junk shape, no 'max')
+        // degrades to the baseline instead of erroring.
+        prop_assert(
+            decode_hello_max(&gen_payload(g, 1)) == PROTOCOL_VERSION,
+            "an unreadable hello must degrade to the baseline",
+        )?;
+        prop_assert(
+            decode_hello_max(&Json::obj()) == PROTOCOL_VERSION,
+            "a hello without 'max' must mean the baseline",
+        )
     });
 }
