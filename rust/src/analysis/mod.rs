@@ -1,0 +1,420 @@
+//! # `analysis` — the self-hosted invariant analyzer behind `tilekit analyze`
+//!
+//! Six of the last eight PRs in this repo were authored without a Rust
+//! toolchain and verified by audit alone, and every audit found a slip
+//! the previous one missed. This module turns the recurring classes of
+//! slip — wire-path panics, narrowing decodes, unbounded Durations,
+//! lock-order inversions, mismatched atomic orderings, guards held
+//! across blocking calls — into machine-checked rules that run in CI,
+//! in the same vendored-offline idiom as `codec::json`: a hand-rolled
+//! tokenizer, no crate dependencies, no `syn`.
+//!
+//! ## Pipeline
+//!
+//! [`analyze_paths`] walks `.rs` files (skipping `target/`, `vendor/`,
+//! `.git/`, and the deliberately-bad `analysis_fixtures/`), lexes each
+//! with [`tokenizer::lex`] into a token stream plus a comment stream,
+//! marks `#[cfg(test)] mod` spans, runs every rule in [`rules`], then
+//! applies inline suppressions and returns a [`Report`]. The pure core
+//! is [`analyze_corpus`], which takes `(path, source)` pairs directly —
+//! tests feed it fixture text under pretend paths so path-scoped rules
+//! fire without touching the real tree.
+//!
+//! ## Suppressions
+//!
+//! A finding on line N is suppressed by a comment
+//!
+//! ```text
+//! // analyze::allow(rule-id): why this one is sound
+//! ```
+//!
+//! on line N itself or on the closest preceding comment-only run (an
+//! allow "covers" every line up to and including the next line that
+//! carries code). The reason is mandatory: a bare
+//! `// analyze::allow(rule-id)` is reported as `bare-allow`, and an
+//! allow that matches no finding is reported as `unused-allow` under
+//! `--strict` — so stale annotations rot loudly, not silently. Neither
+//! meta-finding can itself be suppressed.
+//!
+//! ## Adding a rule
+//!
+//! 1. Write `fn my_rule(cx: &FileCx, out: &mut Vec<Finding>)` in
+//!    `rules.rs` (take `&[Guard]` from [`rules::track_guards`] if you
+//!    need lock-guard liveness, or see `rules::atomics_pairing` for a
+//!    corpus-wide pass). Skip tokens with `cx.is_test[i]` set.
+//! 2. Add its id to [`rules::RULE_IDS`] (this is what makes
+//!    `analyze::allow(my-rule)` valid) and call it from
+//!    [`analyze_corpus`].
+//! 3. Document the motivating incident in the rule's doc comment and
+//!    the ROADMAP "Invariant analysis" table. A rule that doesn't
+//!    encode a real incident is a lint, and lints belong in clippy.
+//! 4. Add a known-bad and a known-clean fixture under
+//!    `rust/tests/analysis_fixtures/` and assert the bad one produces
+//!    exactly your finding (see `rust/tests/analysis.rs`).
+//! 5. Re-run `tilekit analyze --strict` over the tree and fix or
+//!    annotate every new true positive before committing — the rule
+//!    ships together with its cleanup, never ahead of it.
+
+pub mod rules;
+pub mod tokenizer;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use tokenizer::{Comment, Tok, TokKind};
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Path as analyzed (normalized to `/` separators).
+    pub path: String,
+    /// 1-based source line.
+    pub line: u32,
+    /// Rule id (one of [`rules::RULE_IDS`], or `bare-allow` /
+    /// `unused-allow` for suppression-hygiene findings).
+    pub rule: &'static str,
+    /// Human rationale: what is wrong and which incident it re-creates.
+    pub message: String,
+}
+
+impl Finding {
+    pub(crate) fn new(path: &str, line: u32, rule: &'static str, message: String) -> Self {
+        Finding { path: path.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The result of an analysis run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Unsuppressed findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of files analyzed.
+    pub files: usize,
+    /// Number of findings silenced by `analyze::allow` annotations.
+    pub suppressed: usize,
+}
+
+impl Report {
+    /// True when the run found nothing actionable.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Per-file context handed to every rule.
+pub struct FileCx {
+    /// Normalized (`/`-separated) path, used for path-scoped rules.
+    pub path: String,
+    /// The token stream (comments excluded — see `comments`).
+    pub toks: Vec<Tok>,
+    /// The comment stream, for suppression parsing.
+    pub comments: Vec<Comment>,
+    /// `is_test[i]` — token `i` lies inside a `#[cfg(test)] mod` body.
+    pub is_test: Vec<bool>,
+    /// File lives under a `tests/` directory (integration tests).
+    pub in_tests_dir: bool,
+}
+
+/// Mark tokens inside `#[cfg(test)] mod NAME { ... }` bodies. Rules
+/// skip these: test code panics on purpose.
+fn test_spans(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        // #[cfg(test)]
+        let is_cfg_test = toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct && t.text == "[")
+            && toks.get(i + 2).is_some_and(|t| t.kind == TokKind::Ident && t.text == "cfg")
+            && toks.get(i + 3).is_some_and(|t| t.kind == TokKind::Punct && t.text == "(")
+            && toks.get(i + 4).is_some_and(|t| t.kind == TokKind::Ident && t.text == "test")
+            && toks.get(i + 5).is_some_and(|t| t.kind == TokKind::Punct && t.text == ")")
+            && toks.get(i + 6).is_some_and(|t| t.kind == TokKind::Punct && t.text == "]");
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Skip any further attributes, visibility, then require `mod`.
+        let mut j = i + 7;
+        loop {
+            match toks.get(j) {
+                Some(t) if t.kind == TokKind::Punct && t.text == "#" => {
+                    // skip the whole #[...] group
+                    let mut depth = 0usize;
+                    j += 1;
+                    while let Some(t) = toks.get(j) {
+                        if t.kind == TokKind::Punct && t.text == "[" {
+                            depth += 1;
+                        } else if t.kind == TokKind::Punct && t.text == "]" {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                Some(t) if t.kind == TokKind::Ident && t.text == "pub" => {
+                    j += 1;
+                    if toks.get(j).is_some_and(|t| t.kind == TokKind::Punct && t.text == "(") {
+                        while let Some(t) = toks.get(j) {
+                            if t.kind == TokKind::Punct && t.text == ")" {
+                                break;
+                            }
+                            j += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let is_mod = toks.get(j).is_some_and(|t| t.kind == TokKind::Ident && t.text == "mod");
+        if !is_mod {
+            i += 1;
+            continue;
+        }
+        // find the opening `{` then mark to its matching `}`
+        while let Some(t) = toks.get(j) {
+            if t.kind == TokKind::Punct && t.text == "{" {
+                break;
+            }
+            if t.kind == TokKind::Punct && t.text == ";" {
+                break; // `mod name;` — out-of-line, nothing to mark
+            }
+            j += 1;
+        }
+        if !toks.get(j).is_some_and(|t| t.text == "{") {
+            i = j;
+            continue;
+        }
+        let mut depth = 0usize;
+        let start = i;
+        while let Some(t) = toks.get(j) {
+            if t.kind == TokKind::Punct && t.text == "{" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let end = j.min(toks.len().saturating_sub(1));
+        for m in mask.iter_mut().take(end + 1).skip(start) {
+            *m = true;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// A parsed `analyze::allow(...)` annotation.
+struct Allow {
+    line: u32,
+    /// Last line this allow covers: the first line at or after `line`
+    /// that carries a code token (so an allow on its own line covers
+    /// the statement that follows it, and a trailing allow covers its
+    /// own line).
+    covers_to: u32,
+    rule: String,
+    has_reason: bool,
+    used: bool,
+}
+
+const ALLOW_MARKER: &str = "analyze::allow";
+
+/// Parse allows out of a file's comments and compute their coverage.
+///
+/// The annotation must START the comment (`// analyze::allow(..): ..`)
+/// — mid-comment mentions are prose (this very module's docs talk
+/// about the syntax) and are not parsed.
+fn parse_allows(cx: &FileCx, out: &mut Vec<Finding>) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for c in &cx.comments {
+        let Some(rest) = c.text.trim_start().strip_prefix(ALLOW_MARKER) else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(stripped) = rest.strip_prefix('(') else {
+            out.push(Finding::new(
+                &cx.path,
+                c.line,
+                "bare-allow",
+                "malformed `analyze::allow` — expected `analyze::allow(rule-id): reason`"
+                    .to_string(),
+            ));
+            continue;
+        };
+        let Some(close) = stripped.find(')') else {
+            out.push(Finding::new(
+                &cx.path,
+                c.line,
+                "bare-allow",
+                "malformed `analyze::allow` — missing `)` after rule id".to_string(),
+            ));
+            continue;
+        };
+        let rule = stripped[..close].trim().to_string();
+        if !rules::RULE_IDS.contains(&rule.as_str()) {
+            out.push(Finding::new(
+                &cx.path,
+                c.line,
+                "bare-allow",
+                format!("unknown rule id `{rule}` in `analyze::allow`"),
+            ));
+            continue;
+        }
+        let after = stripped[close + 1..].trim_start();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            out.push(Finding::new(
+                &cx.path,
+                c.line,
+                "bare-allow",
+                format!(
+                    "`analyze::allow({rule})` without a reason — state why this exception is \
+                     sound: `analyze::allow({rule}): reason`"
+                ),
+            ));
+            continue;
+        }
+        // Coverage: up to and including the first code-bearing line >= c.line.
+        let covers_to = cx
+            .toks
+            .iter()
+            .map(|t| t.line)
+            .find(|&l| l >= c.line)
+            .unwrap_or(c.line);
+        allows.push(Allow { line: c.line, covers_to, rule, has_reason: true, used: false });
+    }
+    allows
+}
+
+/// Run every rule over one lexed file (the per-file rules; the
+/// corpus-wide atomics pass runs in [`analyze_corpus`]).
+fn run_file_rules(cx: &FileCx, out: &mut Vec<Finding>) {
+    rules::no_panic_on_wire(cx, out);
+    rules::no_as_narrowing(cx, out);
+    rules::duration_through_bounds(cx, out);
+    let guards = rules::track_guards(cx);
+    rules::lock_order(cx, &guards, out);
+    rules::guard_across_block(cx, &guards, out);
+}
+
+/// Analyze in-memory `(path, source)` pairs. The pure core of the
+/// subsystem: `analyze` the CLI subcommand is a directory walk plus
+/// this function, and tests call it directly with fixture text under
+/// pretend paths so path-scoped rules fire.
+pub fn analyze_corpus(files: &[(String, String)], strict: bool) -> Report {
+    let mut cxs = Vec::with_capacity(files.len());
+    for (path, src) in files {
+        let path = path.replace('\\', "/");
+        let lexed = tokenizer::lex(src);
+        let is_test = test_spans(&lexed.toks);
+        let in_tests_dir = path.contains("tests/");
+        cxs.push(FileCx { path, toks: lexed.toks, comments: lexed.comments, is_test, in_tests_dir });
+    }
+    let mut raw: Vec<Finding> = Vec::new();
+    for cx in &cxs {
+        run_file_rules(cx, &mut raw);
+    }
+    rules::atomics_pairing(&cxs, &mut raw);
+
+    // Apply suppressions per file. Meta-findings (bare-allow,
+    // unused-allow) are appended unsuppressable.
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut suppressed = 0usize;
+    for cx in &cxs {
+        let mut meta: Vec<Finding> = Vec::new();
+        let mut allows = parse_allows(cx, &mut meta);
+        for f in raw.iter().filter(|f| f.path == cx.path) {
+            let hit = allows.iter_mut().find(|a| {
+                a.rule == f.rule && a.has_reason && a.line <= f.line && f.line <= a.covers_to
+            });
+            match hit {
+                Some(a) => {
+                    a.used = true;
+                    suppressed += 1;
+                }
+                None => findings.push(f.clone()),
+            }
+        }
+        if strict {
+            for a in allows.iter().filter(|a| !a.used) {
+                meta.push(Finding::new(
+                    &cx.path,
+                    a.line,
+                    "unused-allow",
+                    format!(
+                        "`analyze::allow({})` suppresses nothing — the finding it covered is \
+                         gone; delete the annotation",
+                        a.rule
+                    ),
+                ));
+            }
+        }
+        findings.append(&mut meta);
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Report { findings, files: cxs.len(), suppressed }
+}
+
+/// Directory names never descended into.
+const SKIP_DIRS: &[&str] = &["target", "vendor", ".git", "analysis_fixtures"];
+
+fn collect_rs(root: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(root)
+        .with_context(|| format!("analyze: cannot read {}", root.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Walk `paths` (files or directories), lex every `.rs` file, and
+/// analyze the corpus. Deterministic: files are visited in sorted
+/// order and findings are sorted.
+pub fn analyze_paths(paths: &[PathBuf], strict: bool) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(p, &mut files)?;
+        } else if p.is_file() {
+            files.push(p.clone());
+        } else {
+            bail!("analyze: no such path: {}", p.display());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut corpus = Vec::with_capacity(files.len());
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .with_context(|| format!("analyze: cannot read {}", f.display()))?;
+        corpus.push((f.to_string_lossy().into_owned(), src));
+    }
+    Ok(analyze_corpus(&corpus, strict))
+}

@@ -1,0 +1,818 @@
+//! The invariant rules. Each rule is one function over a lexed file
+//! (plus one corpus-wide pass for atomics pairing), pattern-matching
+//! short token windows — no type information, no name resolution. The
+//! rules are deliberately conservative heuristics: every one encodes an
+//! incident this repo actually shipped (see the rule docs and the
+//! ROADMAP "Invariant analysis" table), and every deliberate exception
+//! carries an inline `// analyze::allow(rule-id): reason` annotation.
+//!
+//! Known limitations (by design, documented here once):
+//!
+//! * Guard tracking follows `let NAME = <expr ending in .lock()/.read()
+//!   /.write() [+ .unwrap()/.expect(..)/.unwrap_or_else(..)]>;` bindings
+//!   only. Guards bound through match-arm patterns (`match m.lock() {
+//!   Ok(g) => g.recv(), .. }`) or tuple patterns are not tracked.
+//! * Lock names are the field identifier before the acquisition call
+//!   (`self.inner.topology.write()` → `topology`), so the lock-order
+//!   rule keys on the fleet's documented field names.
+//! * The narrowing rule is type-blind: it flags every integer `as` cast
+//!   in decode-path functions and relies on annotations for verified
+//!   widenings. That cost is the point — each annotation states WHY the
+//!   cast cannot alias.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::tokenizer::{Tok, TokKind};
+use super::{FileCx, Finding};
+
+/// Rule ids, exactly as they appear in findings and in
+/// `analyze::allow(...)` annotations.
+pub const RULE_IDS: &[&str] = &[
+    "no-panic-on-wire",
+    "no-as-narrowing-in-decode",
+    "duration-through-bounds",
+    "lock-order",
+    "atomics-pairing",
+    "no-guard-across-block",
+];
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// Does `path` (normalized to `/` separators) name one of `files`?
+fn file_is(path: &str, files: &[&str]) -> bool {
+    files.iter().any(|f| path.ends_with(f))
+}
+
+/// Token index of the `)` matching the `(` at `open` (which must be a
+/// `(`), or `toks.len()` when unbalanced.
+fn matching_close(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len()
+}
+
+// ------------------------------------------------- no-panic-on-wire --
+
+/// Files whose non-test code faces the wire: every byte they handle may
+/// come from a hostile peer, so a panic is a remote denial of service.
+const WIRE_FILES: &[&str] = &["net/protocol.rs", "net/server.rs"];
+
+/// Keywords that legitimately precede a `[` without forming an index
+/// expression (slice patterns, array expressions in returns, …).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "let", "in", "return", "match", "mut", "ref", "else", "move", "box",
+];
+
+/// **no-panic-on-wire** — no `unwrap`/`expect`/`panic!`-family/slice
+/// indexing in `net::protocol` decode paths or `net::server` dispatch.
+///
+/// Incident: the PR 6 review pass found five remote-panic paths in the
+/// wire tier (a hostile `deadline_ms` reaching `Duration::from_secs_f64`
+/// among them) plus an unflagged sixth — every one a connection-handler
+/// panic a single malformed frame could trigger.
+pub(crate) fn no_panic_on_wire(cx: &FileCx, out: &mut Vec<Finding>) {
+    if !file_is(&cx.path, WIRE_FILES) {
+        return;
+    }
+    let t = &cx.toks;
+    let mut seen = BTreeSet::new();
+    let mut push = |line: u32, msg: String, seen: &mut BTreeSet<u32>| {
+        if seen.insert(line) {
+            out.push(Finding::new(&cx.path, line, "no-panic-on-wire", msg));
+        }
+    };
+    for i in 0..t.len() {
+        if cx.is_test[i] {
+            continue;
+        }
+        let tok = &t[i];
+        if tok.kind == TokKind::Ident
+            && (tok.text == "unwrap" || tok.text == "expect")
+            && i > 0
+            && is_punct(&t[i - 1], ".")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+        {
+            push(
+                tok.line,
+                format!(
+                    "`.{}()` on the wire path panics the connection handler on hostile or \
+                     truncated input (the PR 6 remote-panic class); return a typed error",
+                    tok.text
+                ),
+                &mut seen,
+            );
+        }
+        if tok.kind == TokKind::Ident
+            && matches!(
+                tok.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            )
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "!"))
+        {
+            push(
+                tok.line,
+                format!(
+                    "`{}!` on the wire path is a remote denial of service (the PR 6 \
+                     remote-panic class); return a typed error",
+                    tok.text
+                ),
+                &mut seen,
+            );
+        }
+        if is_punct(tok, "[") && i > 0 {
+            let p = &t[i - 1];
+            let indexes = match p.kind {
+                TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&p.text.as_str()),
+                TokKind::Punct => p.text == "]" || p.text == ")",
+                _ => false,
+            };
+            if indexes {
+                push(
+                    tok.line,
+                    "slice indexing on the wire path panics on short input (the PR 6 \
+                     `read_payload` bounds class); use `get(..)`/length checks"
+                        .to_string(),
+                    &mut seen,
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------ no-as-narrowing-in-decode --
+
+/// Files whose decode paths turn untrusted bytes into typed values.
+const DECODE_FILES: &[&str] = &[
+    "net/protocol.rs",
+    "net/server.rs",
+    "codec/json.rs",
+    "codec/toml.rs",
+];
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+/// Encode-side functions are exempt: they cast values this process
+/// produced, not values a peer chose.
+fn is_encode_fn(name: &str) -> bool {
+    name.starts_with("encode")
+        || name.starts_with("to_")
+        || name.starts_with("write")
+        || name.starts_with("escape")
+        || name.starts_with("fmt")
+        || name.ends_with("_to_json")
+}
+
+/// For each token, the name of the innermost `fn` whose body contains
+/// it (empty string at module scope). A flat, brace-depth-driven pass:
+/// after `fn NAME`, the first `{` at paren/bracket depth 0 opens the
+/// body.
+struct FnSpans {
+    /// Interned function names; index 0 is the empty "no fn" name.
+    names: Vec<String>,
+    /// Per-token index into `names`.
+    of: Vec<usize>,
+}
+
+impl FnSpans {
+    fn name_at(&self, i: usize) -> &str {
+        &self.names[self.of[i]]
+    }
+}
+
+fn fn_spans(toks: &[Tok]) -> FnSpans {
+    let mut names_of = vec![0usize; toks.len()];
+    let mut names: Vec<String> = vec![String::new()];
+    let mut stack: Vec<(usize, usize)> = Vec::new(); // (name idx, depth at open)
+    let mut pending: Option<usize> = None;
+    let mut sig_depth = 0usize;
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" => {
+                    if pending.is_some() {
+                        sig_depth += 1;
+                    }
+                }
+                ")" | "]" => {
+                    if pending.is_some() {
+                        sig_depth = sig_depth.saturating_sub(1);
+                    }
+                }
+                ";" => {
+                    if sig_depth == 0 {
+                        pending = None; // trait method declaration
+                    }
+                }
+                "{" => {
+                    depth += 1;
+                    if sig_depth == 0 {
+                        if let Some(n) = pending.take() {
+                            stack.push((n, depth));
+                        }
+                    }
+                }
+                "}" => {
+                    if stack.last().is_some_and(|&(_, d)| d == depth) {
+                        stack.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                _ => {}
+            }
+        } else if is_ident(t, "fn") {
+            if let Some(n) = toks.get(i + 1) {
+                if n.kind == TokKind::Ident {
+                    names.push(n.text.clone());
+                    pending = Some(names.len() - 1);
+                    sig_depth = 0;
+                }
+            }
+        }
+        names_of[i] = stack.last().map_or(0, |&(n, _)| n);
+    }
+    FnSpans { names, of: names_of }
+}
+
+/// **no-as-narrowing-in-decode** — no integer `as` casts in decode-path
+/// functions of the wire/codec files; use `try_from` (or annotate a
+/// verified widening with the reason it cannot alias).
+///
+/// Incident: PR 6's hardening pass found the wire `scale` field decoded
+/// with `as u32`, so a hostile `scale: 2^32 + 2` aliased to `2` and
+/// produced a "valid" response for an absurd request instead of a typed
+/// rejection.
+pub(crate) fn no_as_narrowing(cx: &FileCx, out: &mut Vec<Finding>) {
+    if !file_is(&cx.path, DECODE_FILES) {
+        return;
+    }
+    let t = &cx.toks;
+    let spans = fn_spans(t);
+    for i in 0..t.len() {
+        if cx.is_test[i] {
+            continue;
+        }
+        if is_ident(&t[i], "as")
+            && t.get(i + 1)
+                .is_some_and(|n| n.kind == TokKind::Ident && INT_TYPES.contains(&n.text.as_str()))
+        {
+            let f = spans.name_at(i);
+            if f.is_empty() || is_encode_fn(f) {
+                continue;
+            }
+            out.push(Finding::new(
+                &cx.path,
+                t[i].line,
+                "no-as-narrowing-in-decode",
+                format!(
+                    "`as {}` in decode path `{f}` silently truncates out-of-range wire values \
+                     (the PR 6 `scale` 2^32+2 -> 2 aliasing bug); use `try_from`, or annotate \
+                     why this cast cannot narrow",
+                    t[i + 1].text
+                ),
+            ));
+        }
+    }
+}
+
+// --------------------------------------------- duration-through-bounds --
+
+/// **duration-through-bounds** — never call the panicking float Duration
+/// constructors directly; route wire/config milliseconds through
+/// `net::protocol::duration_from_ms` (typed rejection) or
+/// `saturating_duration_from_ms` (clamp-to-bounds).
+///
+/// Incident: `f64::clamp` passes NaN through, so a hostile `deadline_ms:
+/// NaN` survived a `clamp(0.0, 5000.0)` "bound" and reached
+/// `Duration::from_secs_f64`, which panics on NaN — the sixth remote
+/// panic of the PR 6 class, found only after the first five were fixed.
+/// (`Duration::from_millis` takes a `u64` and cannot panic, so it is
+/// not flagged — the rule covers the constructors with panic paths.)
+pub(crate) fn duration_through_bounds(cx: &FileCx, out: &mut Vec<Finding>) {
+    for (i, t) in cx.toks.iter().enumerate() {
+        if cx.is_test[i] {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && (t.text == "from_secs_f64" || t.text == "from_secs_f32")
+        {
+            out.push(Finding::new(
+                &cx.path,
+                t.line,
+                "duration-through-bounds",
+                format!(
+                    "`Duration::{}` panics on NaN/negative/overflowing input and clamp passes \
+                     NaN through (the PR 6 `deadline_ms` incident); route milliseconds through \
+                     `net::protocol::duration_from_ms` or `saturating_duration_from_ms`",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------------- guard tracking --
+
+/// A tracked lock guard: a `let`-binding whose initializer ends in a
+/// no-arg `.lock()`/`.read()`/`.write()` call (optionally unwrapped).
+/// Live from the end of its `let` statement to an explicit
+/// `drop(binding)` or the close of its enclosing block.
+pub(crate) struct Guard {
+    /// The `let` binding name (`guard`, `st`, `topo`, …).
+    pub binding: String,
+    /// The lock field acquired (`topology`, `retiring`, `plan`, …).
+    pub lock: String,
+    /// Source line of the acquisition.
+    pub line: u32,
+    /// First token index at which the guard is live (the `;` of the
+    /// `let` statement).
+    pub start: usize,
+    /// Token index at which it dies (a `drop` or a closing `}`).
+    pub end: usize,
+}
+
+impl Guard {
+    fn live_at(&self, i: usize) -> bool {
+        self.start < i && i < self.end
+    }
+}
+
+/// Method names that may tail a lock-acquisition chain without changing
+/// what the binding holds.
+const UNWRAPPERS: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+
+/// Walk a statement's tail backwards from its `;` and return the lock
+/// field name if the chain ends in `.lock()`/`.read()`/`.write()`
+/// (no-arg), seen through any [`UNWRAPPERS`] suffix.
+fn lock_chain_tail(toks: &[Tok], semi: usize) -> Option<String> {
+    let mut k = semi.checked_sub(1)?;
+    loop {
+        if !is_punct(&toks[k], ")") {
+            return None;
+        }
+        // find the matching `(` backwards
+        let mut depth = 0isize;
+        let mut open = k;
+        loop {
+            match toks[open].text.as_str() {
+                ")" if toks[open].kind == TokKind::Punct => depth += 1,
+                "(" if toks[open].kind == TokKind::Punct => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            open = open.checked_sub(1)?;
+        }
+        if open < 2 || !is_punct(&toks[open - 2], ".") || toks[open - 1].kind != TokKind::Ident {
+            return None;
+        }
+        let method = toks[open - 1].text.as_str();
+        if UNWRAPPERS.contains(&method) {
+            k = open.checked_sub(3)?;
+            continue;
+        }
+        if matches!(method, "lock" | "read" | "write") && k == open + 1 {
+            // no-arg call: `.lock()` — `.read(&mut buf)` never matches
+            let recv = &toks[open.checked_sub(3)?];
+            return Some(if recv.kind == TokKind::Ident {
+                recv.text.clone()
+            } else {
+                "<expr>".to_string()
+            });
+        }
+        return None;
+    }
+}
+
+/// Track every guard binding in the file. See the module doc for the
+/// (deliberate) limitations.
+pub(crate) fn track_guards(cx: &FileCx) -> Vec<Guard> {
+    let t = &cx.toks;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut live: Vec<usize> = Vec::new(); // indices into guards
+    let mut depth_of: Vec<usize> = Vec::new(); // parallel to live
+    let mut depth = 0usize;
+    let mut i = 0usize;
+    while i < t.len() {
+        let tok = &t[i];
+        if tok.kind == TokKind::Punct {
+            match tok.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    let mut j = 0;
+                    while j < live.len() {
+                        if depth_of[j] == depth {
+                            guards[live[j]].end = i;
+                            live.remove(j);
+                            depth_of.remove(j);
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        // drop(binding) ends a guard early
+        if is_ident(tok, "drop")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            && t.get(i + 3).is_some_and(|n| is_punct(n, ")"))
+        {
+            if let Some(name) = t.get(i + 2).filter(|n| n.kind == TokKind::Ident) {
+                let mut j = 0;
+                while j < live.len() {
+                    if guards[live[j]].binding == name.text {
+                        guards[live[j]].end = i;
+                        live.remove(j);
+                        depth_of.remove(j);
+                    } else {
+                        j += 1;
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if is_ident(tok, "let") {
+            // `if let` / `while let` bind through patterns and their
+            // "initializer" ends at `{`, not `;` — out of scope.
+            if i > 0 && (is_ident(&t[i - 1], "if") || is_ident(&t[i - 1], "while")) {
+                i += 1;
+                continue;
+            }
+            // binding name: `let [mut] NAME …`
+            let mut j = i + 1;
+            if t.get(j).is_some_and(|n| is_ident(n, "mut")) {
+                j += 1;
+            }
+            let name = match t.get(j) {
+                Some(n) if n.kind == TokKind::Ident => n.text.clone(),
+                _ => {
+                    i += 1;
+                    continue; // tuple / struct pattern: not tracked
+                }
+            };
+            // find `=` (skipping a `: Type` annotation), then the
+            // statement-ending `;` at balanced nesting
+            let mut k = j + 1;
+            let mut nest = 0isize;
+            let mut eq = None;
+            while let Some(n) = t.get(k) {
+                match n.text.as_str() {
+                    "(" | "[" | "{" if n.kind == TokKind::Punct => nest += 1,
+                    ")" | "]" | "}" if n.kind == TokKind::Punct => nest -= 1,
+                    "=" if n.kind == TokKind::Punct && nest == 0 => {
+                        // `==`/`=>`/`<=` never appear here at nest 0
+                        eq = Some(k);
+                        break;
+                    }
+                    ";" if n.kind == TokKind::Punct && nest == 0 => break,
+                    _ => {}
+                }
+                k += 1;
+            }
+            let Some(eq) = eq else {
+                i += 1;
+                continue;
+            };
+            // A closure initializer (`let f = || m.lock()...;`) defers
+            // the acquisition to each call site — the binding is a
+            // closure, not a guard.
+            if t.get(eq + 1)
+                .is_some_and(|n| is_punct(n, "|") || is_ident(n, "move"))
+            {
+                i = eq + 1;
+                continue;
+            }
+            let mut semi = eq + 1;
+            let mut nest = 0isize;
+            let mut found = false;
+            while let Some(n) = t.get(semi) {
+                match n.text.as_str() {
+                    "(" | "[" | "{" if n.kind == TokKind::Punct => nest += 1,
+                    ")" | "]" | "}" if n.kind == TokKind::Punct => nest -= 1,
+                    ";" if n.kind == TokKind::Punct && nest == 0 => {
+                        found = true;
+                        break;
+                    }
+                    _ => {}
+                }
+                if nest < 0 {
+                    break; // escaped the enclosing block — no `;` belongs to this `let`
+                }
+                semi += 1;
+            }
+            if found {
+                if let Some(lock) = lock_chain_tail(t, semi) {
+                    guards.push(Guard {
+                        binding: name,
+                        lock,
+                        line: tok.line,
+                        start: semi,
+                        end: t.len(),
+                    });
+                    live.push(guards.len() - 1);
+                    depth_of.push(depth);
+                }
+                i = semi + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    guards
+}
+
+// --------------------------------------------------------- lock-order --
+
+/// The fleet's documented acquisition orders, first-then-second.
+/// `rebuild_plan` publishes under plan-write then topology-read; every
+/// stats/removal path takes topology then retiring.
+const LOCK_ORDERS: &[(&str, &str)] = &[("plan", "topology"), ("topology", "retiring")];
+
+/// The lock fields the ordering contract tracks (re-acquiring any of
+/// these while already holding it self-deadlocks: std's RwLock/Mutex
+/// are not reentrant).
+const ORDERED_LOCKS: &[&str] = &["plan", "topology", "retiring"];
+
+/// **lock-order** — within one function body, never acquire `plan`
+/// while holding `topology`, or `topology` while holding `retiring`
+/// (the documented orders run the other way), never re-acquire a
+/// tracked lock you already hold, and never call `rebuild_plan()` with
+/// a `plan`/`topology` guard live (it takes plan-write then
+/// topology-read itself).
+///
+/// Incident: PR 8's audit found `rebuild_plan` called with the topology
+/// write guard still live — a guaranteed self-deadlock on the
+/// non-reentrant RwLock — and fixed it with an explicit `drop(guard)`;
+/// this rule pins that contract so the next refactor cannot undo it.
+pub(crate) fn lock_order(cx: &FileCx, guards: &[Guard], out: &mut Vec<Finding>) {
+    let t = &cx.toks;
+    for i in 0..t.len() {
+        if cx.is_test[i] {
+            continue;
+        }
+        // an acquisition site: IDENT . (lock|read|write) ( )
+        if t[i].kind == TokKind::Ident
+            && matches!(t[i].text.as_str(), "lock" | "read" | "write")
+            && i >= 2
+            && is_punct(&t[i - 1], ".")
+            && t[i - 2].kind == TokKind::Ident
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            && t.get(i + 2).is_some_and(|n| is_punct(n, ")"))
+        {
+            let acquired = t[i - 2].text.as_str();
+            if !ORDERED_LOCKS.contains(&acquired) {
+                continue;
+            }
+            for g in guards.iter().filter(|g| g.live_at(i)) {
+                if g.lock == acquired {
+                    out.push(Finding::new(
+                        &cx.path,
+                        t[i].line,
+                        "lock-order",
+                        format!(
+                            "re-acquiring `{acquired}` while the guard from line {} is still \
+                             held self-deadlocks (std locks are not reentrant; the PR 8 \
+                             `rebuild_plan` contract) — drop the guard first",
+                            g.line
+                        ),
+                    ));
+                }
+                for (first, second) in LOCK_ORDERS {
+                    if g.lock == *second && acquired == *first {
+                        out.push(Finding::new(
+                            &cx.path,
+                            t[i].line,
+                            "lock-order",
+                            format!(
+                                "acquiring `{first}` while holding `{second}` (line {}) inverts \
+                                 the documented `{first}` -> `{second}` order and can deadlock \
+                                 against the writers that follow it",
+                                g.line
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        // calling rebuild_plan() re-acquires plan-write then
+        // topology-read internally
+        if is_ident(&t[i], "rebuild_plan")
+            && t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            && i > 0
+            && !is_ident(&t[i - 1], "fn")
+        {
+            for g in guards.iter().filter(|g| g.live_at(i)) {
+                if g.lock == "topology" || g.lock == "plan" {
+                    out.push(Finding::new(
+                        &cx.path,
+                        t[i].line,
+                        "lock-order",
+                        format!(
+                            "`rebuild_plan()` takes the plan write lock then the topology read \
+                             lock; calling it while the `{}` guard from line {} is live \
+                             self-deadlocks (the PR 8 contract) — drop the guard first",
+                            g.lock, g.line
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------- atomics-pairing --
+
+const ATOMIC_WRITE_OPS: &[&str] = &[
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_max",
+    "fetch_min",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+const RELEASING: &[&str] = &["Release", "AcqRel", "SeqCst"];
+
+/// **atomics-pairing** — corpus-wide: an atomic field that is stored
+/// with Release (or stronger) ordering anywhere must never be loaded
+/// `Relaxed` elsewhere. Keys on the field name; test code (and
+/// tests-dir files, whose same-named locals are different objects) is
+/// out of scope.
+///
+/// Incident: the `plan_version` protocol — the submit path pairs an
+/// Acquire load with `rebuild_plan`'s Release store to see the plan the
+/// version stamps; a Relaxed load there would let a submitter race a
+/// republish and tag a response with a version from a plan it never
+/// read. The one deliberate Relaxed load (under the plan write lock) is
+/// annotated.
+pub(crate) fn atomics_pairing(cxs: &[FileCx], out: &mut Vec<Finding>) {
+    struct Sites {
+        release_store: Option<(String, u32)>,
+        relaxed_loads: Vec<(String, u32)>,
+    }
+    let mut fields: BTreeMap<String, Sites> = BTreeMap::new();
+    for cx in cxs {
+        if cx.in_tests_dir {
+            continue;
+        }
+        let t = &cx.toks;
+        for i in 0..t.len() {
+            if cx.is_test[i] {
+                continue;
+            }
+            let tok = &t[i];
+            if tok.kind != TokKind::Ident
+                || i < 2
+                || !is_punct(&t[i - 1], ".")
+                || t[i - 2].kind != TokKind::Ident
+                || !t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            {
+                continue;
+            }
+            let is_load = tok.text == "load";
+            let is_write = ATOMIC_WRITE_OPS.contains(&tok.text.as_str());
+            if !is_load && !is_write {
+                continue;
+            }
+            let close = matching_close(t, i + 1);
+            let orderings: Vec<&str> = t[i + 1..close.min(t.len())]
+                .iter()
+                .filter(|n| {
+                    n.kind == TokKind::Ident
+                        && matches!(
+                            n.text.as_str(),
+                            "Relaxed" | "Release" | "Acquire" | "AcqRel" | "SeqCst"
+                        )
+                })
+                .map(|n| n.text.as_str())
+                .collect();
+            if orderings.is_empty() {
+                continue; // not an atomic op (e.g. `rx.load(...)` of something else)
+            }
+            let field = t[i - 2].text.clone();
+            let entry = fields.entry(field).or_insert(Sites {
+                release_store: None,
+                relaxed_loads: Vec::new(),
+            });
+            if is_write && orderings.iter().any(|o| RELEASING.contains(o)) {
+                if entry.release_store.is_none() {
+                    entry.release_store = Some((cx.path.clone(), tok.line));
+                }
+            } else if is_load && orderings == ["Relaxed"] {
+                entry.relaxed_loads.push((cx.path.clone(), tok.line));
+            }
+        }
+    }
+    for (field, sites) in fields {
+        let Some((spath, sline)) = sites.release_store else {
+            continue;
+        };
+        for (lpath, lline) in sites.relaxed_loads {
+            out.push(Finding::new(
+                &lpath,
+                lline,
+                "atomics-pairing",
+                format!(
+                    "atomic `{field}` is stored with Release ordering at {spath}:{sline} but \
+                     loaded Relaxed here — the load is unordered with the writer's publish \
+                     protocol (the `plan_version` contract); use Acquire or annotate why \
+                     Relaxed is sound"
+                ),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------ no-guard-across-block --
+
+/// Calls that park the current thread.
+const BLOCKING_CALLS: &[&str] = &[
+    "wait",
+    "wait_timeout",
+    "join",
+    "recv",
+    "recv_timeout",
+    "send_timeout",
+    "sleep",
+];
+
+/// **no-guard-across-block** — a tracked lock guard must not be live
+/// across a blocking call, unless the guard is handed TO the call
+/// (the condvar protocol: `cv.wait(guard)` releases it atomically).
+///
+/// Incident: `Member::join_threads` held the member's `threads` mutex
+/// across `JoinHandle::join`, so any thread touching the handle table
+/// during a slow worker shutdown blocked for the worker's whole drain
+/// — fixed in this PR by taking the handles out under the lock and
+/// joining outside it.
+pub(crate) fn guard_across_block(cx: &FileCx, guards: &[Guard], out: &mut Vec<Finding>) {
+    let t = &cx.toks;
+    for i in 0..t.len() {
+        if cx.is_test[i] {
+            continue;
+        }
+        if t[i].kind != TokKind::Ident
+            || !BLOCKING_CALLS.contains(&t[i].text.as_str())
+            || !t.get(i + 1).is_some_and(|n| is_punct(n, "("))
+            || i == 0
+            || !(is_punct(&t[i - 1], ".") || is_punct(&t[i - 1], ":"))
+        {
+            continue;
+        }
+        let close = matching_close(t, i + 1);
+        for g in guards.iter().filter(|g| g.live_at(i)) {
+            let handed_over = t[i + 1..close.min(t.len())]
+                .iter()
+                .any(|a| a.kind == TokKind::Ident && a.text == g.binding);
+            if handed_over {
+                continue; // condvar protocol: wait(guard) releases it
+            }
+            out.push(Finding::new(
+                &cx.path,
+                t[i].line,
+                "no-guard-across-block",
+                format!(
+                    "`{}` blocks while the `{}` guard `{}` (line {}) is held, stalling every \
+                     other acquirer for the full wait (the `join_threads` incident); drop the \
+                     guard first",
+                    t[i].text, g.lock, g.binding, g.line
+                ),
+            ));
+        }
+    }
+}

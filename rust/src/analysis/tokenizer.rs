@@ -1,0 +1,526 @@
+//! A hand-rolled Rust lexer for the invariant analyzer.
+//!
+//! Same vendored-offline idiom as [`crate::codec::json`]: a byte cursor
+//! over the source, no external crates, no regexes. The lexer does NOT
+//! parse Rust — it produces a flat token stream precise enough for the
+//! line-oriented invariant rules in [`super::rules`]:
+//!
+//! * comments are separated out (they carry suppression annotations),
+//! * string/char literals are opaque single tokens (so `"unwrap()"`
+//!   inside a string never trips a rule),
+//! * lifetimes are distinguished from char literals,
+//! * raw strings (`r"…"`, `r#"…"#`, any hash depth, `b`/`br` prefixes)
+//!   and nested block comments are handled,
+//! * every token records the 1-based source line it starts on.
+//!
+//! What it deliberately does not do: interpret numeric values, glue
+//! multi-char operators (`::` is two `Punct(':')` tokens), or build a
+//! syntax tree. Rules pattern-match short token windows instead.
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifiers and keywords (`fn`, `unwrap`, `topology`, `as`, …).
+    Ident,
+    /// A lifetime (`'a`, `'static`) — kept distinct so `'a>` in generics
+    /// is never confused with a char literal.
+    Lifetime,
+    /// A numeric literal, suffix included (`1e3`, `0x2F`, `4.0f64`).
+    Num,
+    /// A string literal (normal, raw, or byte), quotes included.
+    Str,
+    /// A char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// A single punctuation byte (`.`, `(`, `[`, `!`, …).
+    Punct,
+}
+
+/// One lexed token with its starting line (1-based).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment with its starting line. `text` is the comment interior
+/// (markers stripped, trimmed) — this is where `analyze::allow(...)`
+/// annotations live.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// The lexer output: code tokens and comments, both in source order.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated literals
+/// simply run to end-of-file (the analyzer scans real, compiling source;
+/// garbage in degrades to fewer tokens, not a panic).
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        b: src.as_bytes(),
+        src,
+        i: 0,
+        line: 1,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Lexed {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(),
+                b'r' | b'b' if self.raw_or_byte_prefix() => {}
+                b'\'' => self.char_or_lifetime(),
+                _ if is_ident_start(c) => self.ident(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push(TokKind::Punct, self.i, self.i + 1, self.line);
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, end: usize, line: u32) {
+        self.out.toks.push(Tok {
+            kind,
+            text: self.src[start..end].to_string(),
+            line,
+        });
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut start = self.i + 2;
+        // Doc comments: strip the extra marker so `/// analyze::allow`
+        // and `//! …` interiors read the same as plain comments.
+        if matches!(self.b.get(start), Some(b'/') | Some(b'!')) {
+            start += 1;
+        }
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.out.comments.push(Comment {
+            line,
+            text: self.src[start.min(self.i)..self.i].trim().to_string(),
+        });
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        let start = self.i + 2;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let end = self.i.saturating_sub(2).max(start);
+        self.out.comments.push(Comment {
+            line,
+            text: self.src[start..end].trim().to_string(),
+        });
+    }
+
+    /// Normal string literal, escapes honored, newlines counted —
+    /// including a line-continuation escape (`\` at end of line), whose
+    /// skipped newline still advances the line counter.
+    fn string(&mut self) {
+        let (line, start) = (self.line, self.i);
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => {
+                    if self.peek(1) == Some(b'\n') {
+                        self.line += 1;
+                    }
+                    self.i += 2;
+                }
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'"' => {
+                    self.i += 1;
+                    break;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(TokKind::Str, start, self.i.min(self.b.len()), line);
+    }
+
+    /// Handle `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `b'x'`, and raw
+    /// identifiers (`r#type`). Returns true when it consumed input;
+    /// false means the `r`/`b` is an ordinary identifier start (the
+    /// caller's match falls through to `ident` via the guard).
+    fn raw_or_byte_prefix(&mut self) -> bool {
+        let mut j = self.i;
+        let c = self.b[j];
+        if c == b'b' {
+            if self.peek(1) == Some(b'\'') {
+                // byte char literal: delegate with the prefix consumed
+                let (line, start) = (self.line, self.i);
+                self.i += 1;
+                self.char_literal_body(start, line);
+                return true;
+            }
+            j += 1;
+            if self.b.get(j) == Some(&b'r') {
+                j += 1;
+            }
+        } else {
+            // c == 'r'
+            j += 1;
+            if self.b.get(j) == Some(&b'#') && self.b.get(j + 1).copied().is_some_and(is_ident_start)
+            {
+                // raw identifier r#type
+                let (line, start) = (self.line, self.i);
+                self.i = j + 1;
+                while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+                    self.i += 1;
+                }
+                self.push(TokKind::Ident, start, self.i, line);
+                return true;
+            }
+        }
+        let mut hashes = 0usize;
+        while self.b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.b.get(j) != Some(&b'"') {
+            return false; // plain identifier like `radius` or `bytes`
+        }
+        // Raw/byte string: scan for `"` followed by `hashes` hashes.
+        // (hashes == 0 covers b"…" — escapes still apply there, but a
+        // `\"` inside b"…" only matters for where the token ends; for
+        // `r"…"` there are no escapes at all.)
+        let (line, start) = (self.line, self.i);
+        let raw = self.src[self.i..j].contains('r');
+        self.i = j + 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'\\' if !raw => {
+                    if self.peek(1) == Some(b'\n') {
+                        self.line += 1;
+                    }
+                    self.i += 2;
+                }
+                b'"' => {
+                    let mut k = 0usize;
+                    while k < hashes && self.b.get(self.i + 1 + k) == Some(&b'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        self.i += 1 + hashes;
+                        self.push(TokKind::Str, start, self.i.min(self.b.len()), line);
+                        return true;
+                    }
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(TokKind::Str, start, self.b.len(), line);
+        true
+    }
+
+    /// At a `'`: char literal or lifetime. A `'` that is followed by an
+    /// escape, or whose closing quote arrives within one (possibly
+    /// multi-byte) character, is a char literal; otherwise a lifetime.
+    fn char_or_lifetime(&mut self) {
+        let (line, start) = (self.line, self.i);
+        match self.peek(1) {
+            Some(b'\\') => {
+                self.char_literal_body(start, line);
+            }
+            Some(c) if c != b'\'' => {
+                // Find the closing quote within the next 1..=4 bytes
+                // (one UTF-8 scalar). `'a'` -> char; `'a>` -> lifetime.
+                let close = (2..=5).find(|&k| self.b.get(start + k) == Some(&b'\''));
+                match close {
+                    Some(k) if !is_ident_continue(c) || k == 2 => {
+                        self.i = start + k + 1;
+                        self.push(TokKind::Char, start, self.i, line);
+                    }
+                    _ => {
+                        // lifetime: consume ident chars after the quote
+                        self.i = start + 1;
+                        while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+                            self.i += 1;
+                        }
+                        self.push(TokKind::Lifetime, start, self.i, line);
+                    }
+                }
+            }
+            _ => {
+                // `''` or a trailing `'`: emit as punct and move on.
+                self.push(TokKind::Punct, start, start + 1, line);
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Body of an escaped char/byte literal, `start` already at the
+    /// prefix. Consumes through the closing quote.
+    fn char_literal_body(&mut self, start: usize, line: u32) {
+        // skip to the opening quote, then past it
+        while self.i < self.b.len() && self.b[self.i] != b'\'' {
+            self.i += 1;
+        }
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'\'' => {
+                    self.i += 1;
+                    break;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(TokKind::Char, start, self.i.min(self.b.len()), line);
+    }
+
+    fn ident(&mut self) {
+        let (line, start) = (self.line, self.i);
+        while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+            self.i += 1;
+        }
+        self.push(TokKind::Ident, start, self.i, line);
+    }
+
+    fn number(&mut self) {
+        let (line, start) = (self.line, self.i);
+        self.i += 1;
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            let prev = self.b[self.i - 1];
+            if is_ident_continue(c) {
+                self.i += 1;
+            } else if c == b'.' && self.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+                // `1.5` continues the number; `0..n` and tuple-field
+                // chains like `self.0.q` do not (so `.lock()` after a
+                // tuple index still tokenizes as a method call).
+                self.i += 1;
+            } else if (c == b'+' || c == b'-') && (prev == b'e' || prev == b'E') {
+                // exponent sign: `1.5e-3`
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Num, start, self.i, line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src)
+            .toks
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = kinds("let x = a.unwrap();");
+        let texts: Vec<&str> = toks.iter().map(|(_, t)| t.as_str()).collect();
+        assert_eq!(texts, ["let", "x", "=", "a", ".", "unwrap", "(", ")", ";"]);
+        assert_eq!(toks[0].0, TokKind::Ident);
+        assert_eq!(toks[2].0, TokKind::Punct);
+    }
+
+    #[test]
+    fn comments_are_separated_with_lines() {
+        let l = lex("a // one\n/* two\nlines */ b\n/// doc three\nc");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["a", "b", "c"]);
+        assert_eq!(l.comments.len(), 3);
+        assert_eq!((l.comments[0].line, l.comments[0].text.as_str()), (1, "one"));
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.comments[1].text, "two\nlines");
+        assert_eq!((l.comments[2].line, l.comments[2].text.as_str()), (4, "doc three"));
+        assert_eq!(l.toks[2].line, 5, "token after multi-line comment");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* outer /* inner */ still */ b");
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["a", "b"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let l = lex(r#"f("no.unwrap() // here", 'x', "esc\"aped")"#);
+        let idents: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["f"]);
+        assert!(l.comments.is_empty());
+        assert_eq!(
+            l.toks.iter().filter(|t| t.kind == TokKind::Str).count(),
+            2
+        );
+        assert_eq!(
+            l.toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex(r##"let s = r#"quote " and // slash"# ; done"##);
+        let texts: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts[0], "let");
+        assert_eq!(l.toks[3].kind, TokKind::Str);
+        assert!(l.toks[3].text.starts_with("r#\""));
+        assert_eq!(texts.last(), Some(&"done"));
+        assert!(l.comments.is_empty(), "// inside a raw string is not a comment");
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let l = lex(r#"(b"P5\n", b'\n', br"raw")"#);
+        assert_eq!(
+            l.toks.iter().filter(|t| t.kind == TokKind::Str).count(),
+            2
+        );
+        assert_eq!(
+            l.toks.iter().filter(|t| t.kind == TokKind::Char).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { g('a', '\\n', 'static') }");
+        let lifetimes: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        let chars: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, ["'a'", "'\\n'"]);
+        // 'static' (quoted above as a 7-char token) is NOT valid Rust;
+        // the lexer reads it as the lifetime 'static followed by a
+        // stray quote — degradation, not a panic.
+        assert!(l.toks.iter().any(|t| t.text == "'static"));
+    }
+
+    #[test]
+    fn nested_generics_stay_flat_puncts() {
+        let l = lex("let m: HashMap<u64, Vec<Arc<Member>>> = HashMap::new();");
+        let gt = l.toks.iter().filter(|t| t.text == ">").count();
+        assert_eq!(gt, 3, "each closing angle is its own punct");
+        assert!(l.toks.iter().all(|t| t.kind != TokKind::Str));
+    }
+
+    #[test]
+    fn numbers_with_exponents_and_ranges() {
+        let l = lex("a(1e3, 4.0f64, 1.5e-3, 0x2F, 0..n, 18_446_744_073_709_551_616.0)");
+        let nums: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(
+            nums,
+            ["1e3", "4.0f64", "1.5e-3", "0x2F", "0", "18_446_744_073_709_551_616.0"]
+        );
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let l = lex("let r#type = 1;");
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "r#type"));
+    }
+
+    #[test]
+    fn line_numbers_across_multiline_strings() {
+        let l = lex("let a = \"one\ntwo\";\nlet b = 1;");
+        let b = l.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn line_numbers_across_string_continuations() {
+        // A `\` at end of line inside a string skips the newline but
+        // must still count it.
+        let l = lex("let a = \"one \\\n two\";\nlet b = 1;");
+        let b = l.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

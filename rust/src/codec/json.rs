@@ -55,9 +55,17 @@ impl Json {
         }
     }
 
+    /// Integer view of a number: non-negative, fraction-free, and below
+    /// 2^64. The upper bound matters — `1e300 as u64` would silently
+    /// saturate to `u64::MAX` instead of reporting "not a u64".
     pub fn as_u64(&self) -> Option<u64> {
+        const TWO_POW_64: f64 = 18_446_744_073_709_551_616.0;
         match self {
-            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            Json::Num(n) if *n >= 0.0 && *n < TWO_POW_64 && n.fract() == 0.0 => {
+                // analyze::allow(no-as-narrowing-in-decode): guarded —
+                // 0 <= n < 2^64 and fraction-free, so the cast is exact.
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
@@ -385,8 +393,10 @@ impl<'a> Parser<'a> {
                             if !(0xDC00..0xE000).contains(&lo) {
                                 return Err(self.err("invalid low surrogate"));
                             }
+                            // analyze::allow(no-as-narrowing-in-decode): u16 -> u32 widenings of range-checked surrogate halves
                             0x10000 + (((hi - 0xD800) as u32) << 10) + (lo - 0xDC00) as u32
                         } else {
+                            // analyze::allow(no-as-narrowing-in-decode): u16 -> u32 widening cannot truncate
                             hi as u32
                         };
                         s.push(
@@ -424,6 +434,8 @@ impl<'a> Parser<'a> {
             let d = (c as char)
                 .to_digit(16)
                 .ok_or_else(|| self.err("bad hex digit"))?;
+            // analyze::allow(no-as-narrowing-in-decode): to_digit(16)
+            // returns 0..=15; the u32 -> u16 cast cannot truncate.
             v = (v << 4) | d as u16;
         }
         Ok(v)

@@ -7,6 +7,7 @@
 use crate::codec::toml::{TomlDoc, TomlValue};
 use crate::device::{builtin_devices, DeviceDescriptor};
 use crate::image::Interpolator;
+use crate::net::protocol::{saturating_duration_from_ms, MAX_DURATION_MS};
 use crate::tiling::TileDim;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
@@ -154,15 +155,19 @@ impl ServingConfig {
         if self.queue_cap == 0 {
             bail!("serving.queue_cap must be >= 1 (got 0)");
         }
-        if self.batch_deadline_ms.is_nan() || self.batch_deadline_ms < 0.0 {
+        if !self.batch_deadline_ms.is_finite()
+            || !(0.0..=MAX_DURATION_MS).contains(&self.batch_deadline_ms)
+        {
             bail!(
-                "serving.batch_deadline_ms must be >= 0 (got {})",
+                "serving.batch_deadline_ms must be in 0..={MAX_DURATION_MS} (got {})",
                 self.batch_deadline_ms
             );
         }
-        if self.admission_timeout_ms.is_nan() || self.admission_timeout_ms < 0.0 {
+        if !self.admission_timeout_ms.is_finite()
+            || !(0.0..=MAX_DURATION_MS).contains(&self.admission_timeout_ms)
+        {
             bail!(
-                "serving.admission_timeout_ms must be >= 0 (got {})",
+                "serving.admission_timeout_ms must be in 0..={MAX_DURATION_MS} (got {})",
                 self.admission_timeout_ms
             );
         }
@@ -178,9 +183,12 @@ impl ServingConfig {
         if self.steal_threshold == 0 {
             bail!("serving.steal_threshold must be >= 1 (got 0)");
         }
-        if self.retune_poll_ms.is_nan() || self.retune_poll_ms <= 0.0 {
+        if !self.retune_poll_ms.is_finite()
+            || self.retune_poll_ms <= 0.0
+            || self.retune_poll_ms > MAX_DURATION_MS
+        {
             bail!(
-                "serving.retune_poll_ms must be > 0 (got {})",
+                "serving.retune_poll_ms must be > 0 and <= {MAX_DURATION_MS} (got {})",
                 self.retune_poll_ms
             );
         }
@@ -234,18 +242,21 @@ impl Default for AutoscalerConfig {
 
 impl AutoscalerConfig {
     pub fn validate(&self) -> Result<()> {
-        if self.poll_ms.is_nan() || self.poll_ms <= 0.0 {
-            bail!("autoscaler.poll_ms must be > 0 (got {})", self.poll_ms);
-        }
-        if self.cooldown_ms.is_nan() || self.cooldown_ms < 0.0 {
+        if !self.poll_ms.is_finite() || self.poll_ms <= 0.0 || self.poll_ms > MAX_DURATION_MS {
             bail!(
-                "autoscaler.cooldown_ms must be >= 0 (got {})",
+                "autoscaler.poll_ms must be > 0 and <= {MAX_DURATION_MS} (got {})",
+                self.poll_ms
+            );
+        }
+        if !self.cooldown_ms.is_finite() || !(0.0..=MAX_DURATION_MS).contains(&self.cooldown_ms) {
+            bail!(
+                "autoscaler.cooldown_ms must be in 0..={MAX_DURATION_MS} (got {})",
                 self.cooldown_ms
             );
         }
-        if self.high_p99_ms.is_nan() || self.high_p99_ms < 0.0 {
+        if !self.high_p99_ms.is_finite() || !(0.0..=MAX_DURATION_MS).contains(&self.high_p99_ms) {
             bail!(
-                "autoscaler.high_p99_ms must be >= 0 (got {})",
+                "autoscaler.high_p99_ms must be in 0..={MAX_DURATION_MS} (got {})",
                 self.high_p99_ms
             );
         }
@@ -272,7 +283,7 @@ impl AutoscalerConfig {
     pub fn opts(&self) -> crate::coordinator::AutoscalerOpts {
         let poll = self.poll_ms.max(1.0);
         crate::coordinator::AutoscalerOpts {
-            poll: std::time::Duration::from_secs_f64(poll / 1e3),
+            poll: saturating_duration_from_ms(poll),
             low_queue: self.low_queue,
             high_queue: self.high_queue,
             high_p99_us: (self.high_p99_ms * 1e3) as u64,
@@ -341,8 +352,8 @@ impl NetConfig {
             ("net.response_timeout_ms", self.response_timeout_ms),
             ("net.health_poll_ms", self.health_poll_ms),
         ] {
-            if v.is_nan() || v <= 0.0 {
-                bail!("{name} must be > 0 (got {v})");
+            if !v.is_finite() || v <= 0.0 || v > MAX_DURATION_MS {
+                bail!("{name} must be > 0 and <= {MAX_DURATION_MS} (got {v})");
             }
         }
         if self.idle_timeout_ms < self.read_timeout_ms {
@@ -367,9 +378,11 @@ impl NetConfig {
         if self.max_inflight_per_conn == 0 {
             bail!("net.max_inflight_per_conn must be >= 1 (got 0)");
         }
-        if self.reconnect_backoff_ms.is_nan() || self.reconnect_backoff_ms < 0.0 {
+        if !self.reconnect_backoff_ms.is_finite()
+            || !(0.0..=MAX_DURATION_MS).contains(&self.reconnect_backoff_ms)
+        {
             bail!(
-                "net.reconnect_backoff_ms must be >= 0 (got {})",
+                "net.reconnect_backoff_ms must be in 0..={MAX_DURATION_MS} (got {})",
                 self.reconnect_backoff_ms
             );
         }
@@ -386,8 +399,8 @@ impl NetConfig {
     pub fn server_config(&self) -> crate::net::NetServerConfig {
         crate::net::NetServerConfig {
             max_conns: self.max_conns,
-            read_timeout: std::time::Duration::from_secs_f64(self.read_timeout_ms / 1e3),
-            idle_timeout: std::time::Duration::from_secs_f64(self.idle_timeout_ms / 1e3),
+            read_timeout: saturating_duration_from_ms(self.read_timeout_ms),
+            idle_timeout: saturating_duration_from_ms(self.idle_timeout_ms),
             max_line_bytes: self.max_line_kib * 1024,
             drain_timeout: std::time::Duration::from_secs(10),
             max_inflight_per_conn: self.max_inflight_per_conn,
@@ -397,14 +410,12 @@ impl NetConfig {
     /// Materialize the client-side knobs.
     pub fn client_config(&self) -> crate::net::NetClientConfig {
         crate::net::NetClientConfig {
-            connect_timeout: std::time::Duration::from_secs_f64(self.connect_timeout_ms / 1e3),
-            response_timeout: std::time::Duration::from_secs_f64(self.response_timeout_ms / 1e3),
+            connect_timeout: saturating_duration_from_ms(self.connect_timeout_ms),
+            response_timeout: saturating_duration_from_ms(self.response_timeout_ms),
             max_line_bytes: self.max_line_kib * 1024,
             wait_poll: std::time::Duration::from_secs(2),
             max_inflight: self.max_inflight_per_conn,
-            reconnect_backoff: std::time::Duration::from_secs_f64(
-                self.reconnect_backoff_ms / 1e3,
-            ),
+            reconnect_backoff: saturating_duration_from_ms(self.reconnect_backoff_ms),
             payload_encoding: crate::net::PayloadEncoding::parse(&self.payload_encoding)
                 .unwrap_or(crate::net::PayloadEncoding::Binary),
             ..crate::net::NetClientConfig::default()
@@ -659,7 +670,7 @@ impl Config {
         crate::coordinator::scheduler_by_name(&self.serving.scheduler)?;
         crate::coordinator::admission_by_name(
             &self.serving.admission,
-            std::time::Duration::from_secs_f64(self.serving.admission_timeout_ms / 1e3),
+            saturating_duration_from_ms(self.serving.admission_timeout_ms),
         )?;
         Ok(())
     }

@@ -72,6 +72,7 @@ use crate::config::ServingConfig;
 use crate::device::DeviceDescriptor;
 use crate::exec::{bounded, Receiver, Sender};
 use crate::metrics::Counter;
+use crate::net::protocol::saturating_duration_from_ms;
 use crate::runtime::{Manifest, ResizeBackend};
 use crate::tiling::TileDim;
 use anyhow::{bail, Context, Result};
@@ -230,11 +231,18 @@ impl Member {
     }
 
     fn join_threads(&self) {
-        let mut t = self.threads.lock().unwrap();
-        if let Some(b) = t.batcher.take() {
+        // Take the handles out under the lock, join OUTSIDE it: a slow
+        // worker drain must not block every other thread touching the
+        // handle table for its whole shutdown (and `analyze`'s
+        // no-guard-across-block rule pins this shape).
+        let (batcher, workers) = {
+            let mut t = self.threads.lock().unwrap();
+            (t.batcher.take(), std::mem::take(&mut t.workers))
+        };
+        if let Some(b) = batcher {
             let _ = b.join();
         }
-        for w in t.workers.drain(..) {
+        for w in workers {
             let _ = w.join();
         }
     }
@@ -566,7 +574,7 @@ impl FleetBuilder {
             Some(a) => Arc::from(a),
             None => Arc::from(admission_by_name(
                 &self.cfg.admission,
-                Duration::from_secs_f64(self.cfg.admission_timeout_ms / 1e3),
+                saturating_duration_from_ms(self.cfg.admission_timeout_ms),
             )?),
         };
         let steal = Arc::new(StealRuntime::new(
@@ -653,7 +661,7 @@ fn register_member(inner: &Arc<FleetInner>, spec: MemberSpec) -> Result<u64> {
     // peer thieves lock it for whole-group batch migration.
     let pending = Arc::new(Mutex::new(BatcherState::new(
         batch_max,
-        Duration::from_secs_f64(inner.cfg.batch_deadline_ms / 1e3),
+        saturating_duration_from_ms(inner.cfg.batch_deadline_ms),
     )));
     let ctx = BatcherCtx {
         self_id: id,
@@ -1057,6 +1065,10 @@ impl FleetInner {
                 .collect()
         };
         let steal_on = self.steal.enabled() && members.len() > 1;
+        // analyze::allow(atomics-pairing): single-writer read — every
+        // plan_version store happens under the plan write lock we hold,
+        // so this Relaxed load observes the latest value; readers
+        // pairing with the Release store below still use Acquire.
         let version = self.plan_version.load(Ordering::Relaxed) + 1;
         *slot = Arc::new(SubmitPlan {
             version,

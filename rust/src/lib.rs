@@ -66,14 +66,17 @@
 //! The environment is fully offline, so foundational substrates that would
 //! normally come from crates.io are implemented in-tree: [`codec`] (JSON +
 //! TOML subset), [`cli`], [`exec`] (thread pool), [`bench`] (benchmark
-//! harness), and [`prop`] (property-based testing). The `anyhow` and
-//! `xla` dependencies are vendored under `rust/vendor/`.
+//! harness), [`prop`] (property-based testing), and [`analysis`] (the
+//! `tilekit analyze` invariant analyzer that machine-checks the fleet's
+//! concurrency and wire-safety contracts). The `anyhow` and `xla`
+//! dependencies are vendored under `rust/vendor/`.
 //!
 //! Start with [`device::registry`] and [`autotuner`] (its module docs
 //! include a migration guide from the old `sweep`/`portable_tile` free
 //! functions), or run `tilekit tune` / `tilekit sweep --fig3` to
 //! regenerate the paper's headline results.
 
+pub mod analysis;
 pub mod autotuner;
 pub mod bench;
 pub mod cli;

@@ -14,6 +14,8 @@
 //!   fleet        drive the typed control plane (topology/drain/retune)
 //!                against a live demo fleet
 //!   init-config  write an example tilekit.toml
+//!   analyze      self-hosted invariant analyzer (wire-safety, lock
+//!                order, atomics pairing); nonzero exit on findings
 //!
 //! Run `tilekit help` for the full flag list, or `tilekit tune --help` /
 //! `tilekit sweep --help` for the tuning flags.
@@ -32,6 +34,7 @@ use tilekit::coordinator::{
 use tilekit::ops::{ControlOps, FleetOps, LocalFleet, TicketOps};
 use tilekit::device::DeviceDescriptor;
 use tilekit::image::{generate, pnm, Interpolator};
+use tilekit::net::protocol::saturating_duration_from_ms;
 use tilekit::runtime::executor::EngineHandle;
 use tilekit::runtime::{Manifest, MockEngine, ResizeBackend};
 use tilekit::sim::{simulate, KernelCost, Launch, Straggler};
@@ -81,6 +84,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("front") => cmd_front(args, &cfg),
         Some("bench") => cmd_bench(args),
         Some("artifacts") => cmd_artifacts(args, &cfg),
+        Some("analyze") => cmd_analyze(args),
         Some("init-config") => {
             let path = args.get_or("out", "tilekit.toml");
             std::fs::write(path, tilekit::config::EXAMPLE_CONFIG)?;
@@ -179,10 +183,52 @@ COMMANDS
                                         list AOT artifacts with HLO stats;
                                         --verify compiles + checks numerics
   init-config [--out tilekit.toml]      write an example config
+  analyze [--strict] [paths…]           run the invariant analyzer over
+                                        rust/src + rust/tests (or the given
+                                        files/dirs); exits nonzero on any
+                                        unsuppressed finding; --strict also
+                                        reports unused analyze::allow
+                                        annotations
 
 GLOBAL FLAGS
   --config path.toml                    load configuration
 "#;
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let strict = args.has("strict");
+    let mut paths: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    if paths.is_empty() {
+        let defaults: &[&str] = if Path::new("rust/src").is_dir() {
+            &["rust/src", "rust/tests"]
+        } else {
+            &["src", "tests"]
+        };
+        paths = defaults
+            .iter()
+            .map(std::path::PathBuf::from)
+            .filter(|p| p.is_dir())
+            .collect();
+        if paths.is_empty() {
+            bail!("analyze: no rust/src (or src) directory here; pass paths explicitly");
+        }
+    }
+    let report = tilekit::analysis::analyze_paths(&paths, strict)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "analyze: {} file(s), {} finding(s), {} suppressed{}",
+        report.files,
+        report.findings.len(),
+        report.suppressed,
+        if strict { " (strict)" } else { "" },
+    );
+    if !report.clean() {
+        bail!("analyze found {} issue(s)", report.findings.len());
+    }
+    Ok(())
+}
 
 fn cmd_devices(args: &Args, cfg: &Config) -> Result<()> {
     if args.has("table1") {
@@ -1111,7 +1157,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 svc.controller(),
                 std::path::PathBuf::from(db_path),
                 spec,
-                std::time::Duration::from_secs_f64(poll_ms / 1e3),
+                saturating_duration_from_ms(poll_ms),
             ))
         }
     };
@@ -1158,7 +1204,7 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
                 if ms.is_nan() || ms < 0.0 {
                     bail!("--listen-for-ms must be >= 0 (got {ms})");
                 }
-                std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+                std::thread::sleep(saturating_duration_from_ms(ms));
             }
             None => loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -2068,9 +2114,7 @@ fn cmd_front(args: &Args, cfg: &Config) -> Result<()> {
     let seed: u64 = args.get_parsed_or("seed", 7)?;
 
     let tier_cfg = FrontTierConfig {
-        health_poll: Some(std::time::Duration::from_secs_f64(
-            cfg.net.health_poll_ms / 1e3,
-        )),
+        health_poll: Some(saturating_duration_from_ms(cfg.net.health_poll_ms)),
         client: cfg.net.client_config(),
     };
     let tier = FrontTier::connect(&addrs, tier_cfg).map_err(|e| anyhow!("{e}"))?;

@@ -167,7 +167,23 @@ pub fn duration_from_ms(ms: f64, field: &str) -> Result<Duration, ProtocolError>
     if !ms.is_finite() || !(0.0..=MAX_DURATION_MS).contains(&ms) {
         return Err(malformed(format!("bad {field} {ms}")));
     }
+    // analyze::allow(duration-through-bounds): this IS the blessed
+    // constructor — the guard above rejects every input from_secs_f64
+    // panics on (NaN, negatives, > MAX_DURATION_MS).
     Ok(Duration::from_secs_f64(ms / 1e3))
+}
+
+/// Clamp a millisecond value into a [`Duration`] instead of rejecting:
+/// NaN and negatives become zero, magnitudes past [`MAX_DURATION_MS`]
+/// saturate to the cap. For config fields and operator-supplied CLI
+/// knobs, where the right response to a wild value is "bound it", not
+/// "error out mid-run". Wire fields keep using [`duration_from_ms`] so
+/// hostile peers get a typed rejection.
+pub fn saturating_duration_from_ms(ms: f64) -> Duration {
+    let ms = if ms.is_finite() { ms.clamp(0.0, MAX_DURATION_MS) } else { 0.0 };
+    // analyze::allow(duration-through-bounds): NaN/negative/overflow all
+    // eliminated above; from_secs_f64 cannot panic on this input.
+    Duration::from_secs_f64(ms / 1e3)
 }
 
 /// Every operation the wire protocol can carry: the data plane
@@ -458,7 +474,8 @@ impl RequestFrame {
 
     /// One compact `\n`-terminated baseline (v1) wire line.
     pub fn to_line(&self) -> String {
-        // Frames without a binary block are pure UTF-8 by construction.
+        // analyze::allow(no-panic-on-wire): encode side — the bytes come
+        // from our own Json encoder (pure UTF-8, no blob), never a peer.
         String::from_utf8(self.to_wire(PROTOCOL_VERSION, None)).unwrap()
     }
 
@@ -527,7 +544,8 @@ impl ResponseFrame {
 
     /// One compact `\n`-terminated baseline (v1) wire line.
     pub fn to_line(&self) -> String {
-        // Frames without a binary block are pure UTF-8 by construction.
+        // analyze::allow(no-panic-on-wire): encode side — the bytes come
+        // from our own Json encoder (pure UTF-8, no blob), never a peer.
         String::from_utf8(self.to_wire(PROTOCOL_VERSION, None)).unwrap()
     }
 
@@ -621,6 +639,8 @@ pub fn read_frame_line(
             r.consume(take);
             return Err(ProtocolError::Oversized { limit: max_bytes });
         }
+        // analyze::allow(no-panic-on-wire): take = position+1 or
+        // chunk.len(), both <= chunk.len(); the range cannot overrun.
         buf.extend_from_slice(&chunk[..take]);
         r.consume(take);
         stalls = 0;
@@ -656,6 +676,8 @@ pub fn read_payload(
     let mut filled = 0usize;
     let mut stalls = 0u32;
     while filled < n {
+        // analyze::allow(no-panic-on-wire): filled < n = buf.len() is the
+        // loop condition; the slice start is always in bounds.
         match r.read(&mut buf[filled..]) {
             Ok(0) => return Err(ProtocolError::Truncated),
             Ok(k) => {
@@ -719,6 +741,8 @@ pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
         .get("px")
         .and_then(Json::as_arr)
         .ok_or_else(|| malformed("image missing 'px'"))?;
+    // analyze::allow(no-as-narrowing-in-decode): usize -> u64 widening
+    // (this tree only targets 64-bit); cannot truncate.
     if px.len() as u64 != total {
         return Err(malformed(format!(
             "image has {} pixels, expected {w}x{h}={total}",
@@ -730,6 +754,9 @@ pub fn decode_image(j: &Json) -> Result<Image<f32>, ProtocolError> {
         .map(|p| p.as_f64().map(|f| f as f32))
         .collect::<Option<Vec<f32>>>()
         .ok_or_else(|| malformed("image 'px' entries must be numbers"))?;
+    // analyze::allow(no-as-narrowing-in-decode): w*h passed the
+    // MAX_IMAGE_PIXELS (2^26) checked_mul gate above, so each dim fits
+    // usize with room to spare.
     Ok(Image::from_vec(w as usize, h as usize, data))
 }
 
@@ -784,17 +811,27 @@ pub fn decode_image_any(j: &Json, blob: Option<&[u8]>) -> Result<Image<f32>, Pro
     if blob.len() < 4 {
         return Err(malformed("binary image block shorter than its count prefix"));
     }
+    // analyze::allow(no-panic-on-wire): blob.len() >= 4 checked above.
+    // analyze::allow(no-as-narrowing-in-decode): u32 -> u64 widening.
     let count = u32::from_le_bytes([blob[0], blob[1], blob[2], blob[3]]) as u64;
+    // analyze::allow(no-as-narrowing-in-decode): usize -> u64 widening.
     if count != total || blob.len() as u64 != 4 + 4 * total {
         return Err(malformed(format!(
             "binary image block carries {count} pixels in {} bytes, expected {w}x{h}={total}",
             blob.len(),
         )));
     }
+    // analyze::allow(no-panic-on-wire): 4 <= blob.len() checked above,
+    // so the open range cannot overrun.
     let data = blob[4..]
         .chunks_exact(4)
+        // analyze::allow(no-panic-on-wire): chunks_exact(4) yields
+        // exactly 4-byte chunks; indexes 0..=3 are always in bounds.
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
+    // analyze::allow(no-as-narrowing-in-decode): w*h passed the
+    // MAX_IMAGE_PIXELS (2^26) checked_mul gate above, so each dim fits
+    // usize with room to spare.
     Ok(Image::from_vec(w as usize, h as usize, data))
 }
 
@@ -968,6 +1005,8 @@ impl TopologyDesc {
                     label: m.label.to_string(),
                     device: m.device.as_ref().map(|d| d.id.clone()),
                     tile: m.tile_pref,
+                    // analyze::allow(no-as-narrowing-in-decode): encoding
+                    // a local snapshot; usize -> u64 widening.
                     batch_max: m.batch_max as u64,
                     draining: m.draining,
                     admitted: m.stats.admitted.get(),
@@ -1314,10 +1353,15 @@ impl AutoscalerDesc {
             low_queue: v.low_queue,
             high_queue: v.high_queue,
             high_p99_us: v.high_p99_us,
+            // analyze::allow(no-as-narrowing-in-decode): encoding a local
+            // snapshot; all four casts are usize -> u64 widenings.
             cooldown_ticks: v.cooldown_ticks as u64,
             poll_ms: v.poll_ms,
+            // analyze::allow(no-as-narrowing-in-decode): usize -> u64.
             min_members: v.min_members as u64,
+            // analyze::allow(no-as-narrowing-in-decode): usize -> u64.
             max_members: v.max_members as u64,
+            // analyze::allow(no-as-narrowing-in-decode): usize -> u64.
             standby_free: v.standby_free as u64,
             ticks: v.ticks,
             scale_ups: v.scale_ups,

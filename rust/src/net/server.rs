@@ -423,6 +423,8 @@ impl ConnSession {
 
 impl Drop for ConnSession {
     fn drop(&mut self) {
+        // analyze::allow(no-as-narrowing-in-decode): usize -> u64
+        // widening of a local table length; cannot truncate.
         let abandoned = self.tickets.get_mut().map(|t| t.len()).unwrap_or(0) as u64;
         if abandoned > 0 {
             self.shared
@@ -655,7 +657,15 @@ fn dispatch(
     let shared = &session.shared;
     let id = frame.id;
     let p = &frame.payload;
-    let lock_tickets = || session.tickets.lock().expect("ticket table poisoned");
+    // Poison recovery instead of expect: a worker that panicked while
+    // holding the table must not turn every later frame on this
+    // connection into a second panic (the table holds plain data).
+    let lock_tickets = || {
+        session
+            .tickets
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    };
     let plain = |resp: ResponseFrame| (resp, None);
     match frame.verb {
         // The reader answers hello inline before the pool; a mid-stream
@@ -709,7 +719,7 @@ fn dispatch(
             let Some(ticket) = lock_tickets().remove(&tid) else {
                 return plain(err(id, WireErrorKind::NotFound, format!("no ticket {tid}")));
             };
-            let deadline = Instant::now() + Duration::from_secs_f64(budget_ms / 1e3);
+            let deadline = Instant::now() + protocol::saturating_duration_from_ms(budget_ms);
             loop {
                 let left = deadline.saturating_duration_since(Instant::now());
                 let step = left.min(Duration::from_millis(100));
@@ -892,11 +902,11 @@ fn dispatch(
                     "set_steal_config missing 'threshold'",
                 ));
             };
+            // A threshold past usize::MAX (32-bit targets) saturates: it
+            // means "never steal", which is what the peer asked for.
+            let threshold = usize::try_from(threshold).unwrap_or(usize::MAX);
             plain(
-                match shared
-                    .controller
-                    .set_steal_config(enabled, threshold as usize)
-                {
+                match shared.controller.set_steal_config(enabled, threshold) {
                     Ok(()) => ok(id, Json::obj().set("ok", true)),
                     Err(e) => err(id, WireErrorKind::Internal, format!("{e:#}")),
                 },

@@ -1,0 +1,235 @@
+//! Integration tests for `tilekit::analysis` — the invariant analyzer
+//! behind `tilekit analyze`.
+//!
+//! Every rule has a known-bad fixture asserted to produce exactly its
+//! finding and a known-clean twin asserted to produce none (the
+//! fixtures live under `analysis_fixtures/`, which the analyzer walk
+//! skips, and are fed to [`analyze_corpus`] under pretend paths so
+//! path-scoped rules fire). The last test is the self-hosting gate:
+//! the real tree under `rust/src` + `rust/tests` must be clean under
+//! `--strict` — the same invocation CI runs.
+
+use tilekit::analysis::{analyze_corpus, analyze_paths, Report};
+
+fn run_one(pretend_path: &str, src: &str, strict: bool) -> Report {
+    analyze_corpus(&[(pretend_path.to_string(), src.to_string())], strict)
+}
+
+fn rules_of(report: &Report) -> Vec<&'static str> {
+    report.findings.iter().map(|f| f.rule).collect()
+}
+
+// ------------------------------------------------- no-panic-on-wire --
+
+const NO_PANIC_BAD: &str = include_str!("analysis_fixtures/no_panic_bad.rs");
+const NO_PANIC_CLEAN: &str = include_str!("analysis_fixtures/no_panic_clean.rs");
+
+#[test]
+fn no_panic_bad_fixture_fires() {
+    let r = run_one("rust/src/net/protocol.rs", NO_PANIC_BAD, false);
+    assert_eq!(
+        rules_of(&r),
+        ["no-panic-on-wire", "no-panic-on-wire", "no-panic-on-wire"],
+        "expected the index, unwrap, and panic! violations: {:?}",
+        r.findings
+    );
+    // One finding per line: index at 10, unwrap at 14, panic! at 16.
+    let lines: Vec<u32> = r.findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, [10, 14, 16]);
+}
+
+#[test]
+fn no_panic_clean_fixture_is_clean() {
+    let r = run_one("rust/src/net/protocol.rs", NO_PANIC_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+#[test]
+fn no_panic_rule_is_scoped_to_wire_files() {
+    let r = run_one("rust/src/tiling/mod.rs", NO_PANIC_BAD, false);
+    assert!(r.clean(), "rule fired off the wire path: {:?}", r.findings);
+}
+
+// ------------------------------------------ no-as-narrowing-in-decode --
+
+const NARROWING_BAD: &str = include_str!("analysis_fixtures/narrowing_bad.rs");
+const NARROWING_CLEAN: &str = include_str!("analysis_fixtures/narrowing_clean.rs");
+
+#[test]
+fn narrowing_bad_fixture_fires() {
+    let r = run_one("rust/src/codec/json.rs", NARROWING_BAD, false);
+    assert_eq!(rules_of(&r), ["no-as-narrowing-in-decode"], "{:?}", r.findings);
+    assert!(
+        r.findings[0].message.contains("decode_scale"),
+        "message should name the decode fn: {}",
+        r.findings[0].message
+    );
+}
+
+#[test]
+fn narrowing_clean_fixture_is_clean() {
+    // `try_from` in the decode fn, a cast only in the encode-named fn.
+    let r = run_one("rust/src/codec/json.rs", NARROWING_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+#[test]
+fn narrowing_rule_is_scoped_to_decode_files() {
+    let r = run_one("rust/src/tiling/mod.rs", NARROWING_BAD, false);
+    assert!(r.clean(), "rule fired off the decode files: {:?}", r.findings);
+}
+
+// --------------------------------------------- duration-through-bounds --
+
+const DURATION_BAD: &str = include_str!("analysis_fixtures/duration_bad.rs");
+const DURATION_CLEAN: &str = include_str!("analysis_fixtures/duration_clean.rs");
+
+#[test]
+fn duration_bad_fixture_fires() {
+    let r = run_one("rust/src/config/mod.rs", DURATION_BAD, false);
+    assert_eq!(rules_of(&r), ["duration-through-bounds"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].line, 10);
+}
+
+#[test]
+fn duration_clean_fixture_is_clean() {
+    let r = run_one("rust/src/config/mod.rs", DURATION_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+// --------------------------------------------------------- lock-order --
+
+const LOCK_ORDER_BAD: &str = include_str!("analysis_fixtures/lock_order_bad.rs");
+const LOCK_ORDER_CLEAN: &str = include_str!("analysis_fixtures/lock_order_clean.rs");
+
+#[test]
+fn lock_order_bad_fixture_fires() {
+    let r = run_one("rust/src/coordinator/server.rs", LOCK_ORDER_BAD, false);
+    assert_eq!(rules_of(&r), ["lock-order", "lock-order"], "{:?}", r.findings);
+    // The inversion (plan acquired under topology) and the
+    // rebuild_plan-under-guard call, in source order.
+    assert!(r.findings[0].message.contains("inverts"), "{}", r.findings[0].message);
+    assert!(r.findings[1].message.contains("rebuild_plan"), "{}", r.findings[1].message);
+}
+
+#[test]
+fn lock_order_clean_fixture_is_clean() {
+    let r = run_one("rust/src/coordinator/server.rs", LOCK_ORDER_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+// ---------------------------------------------------- atomics-pairing --
+
+const ATOMICS_BAD: &str = include_str!("analysis_fixtures/atomics_bad.rs");
+const ATOMICS_CLEAN: &str = include_str!("analysis_fixtures/atomics_clean.rs");
+
+#[test]
+fn atomics_bad_fixture_fires() {
+    let r = run_one("rust/src/exec/pool.rs", ATOMICS_BAD, false);
+    assert_eq!(rules_of(&r), ["atomics-pairing"], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("halt"), "{}", r.findings[0].message);
+}
+
+#[test]
+fn atomics_clean_fixture_is_clean() {
+    let r = run_one("rust/src/exec/pool.rs", ATOMICS_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+#[test]
+fn atomics_rule_skips_tests_dir_files() {
+    // A tests-dir file's same-named atomics are different objects;
+    // pairing them with src fields would be a false positive.
+    let r = run_one("rust/tests/foo.rs", ATOMICS_BAD, false);
+    assert!(r.clean(), "rule fired in a tests-dir file: {:?}", r.findings);
+}
+
+// ------------------------------------------------ no-guard-across-block --
+
+const GUARD_BAD: &str = include_str!("analysis_fixtures/guard_bad.rs");
+const GUARD_CLEAN: &str = include_str!("analysis_fixtures/guard_clean.rs");
+
+#[test]
+fn guard_bad_fixture_fires() {
+    let r = run_one("rust/src/coordinator/member.rs", GUARD_BAD, false);
+    assert_eq!(rules_of(&r), ["no-guard-across-block"], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("join"), "{}", r.findings[0].message);
+}
+
+#[test]
+fn guard_clean_fixture_is_clean() {
+    // Handle taken out under the lock; condvar wait hands the guard
+    // over (and `if let Some(..)` patterns must not bind phantom
+    // guards from a later statement's lock chain).
+    let r = run_one("rust/src/coordinator/member.rs", GUARD_CLEAN, false);
+    assert!(r.clean(), "unexpected findings: {:?}", r.findings);
+}
+
+// ------------------------------------------------------- suppressions --
+
+const ALLOW_OK: &str = include_str!("analysis_fixtures/allow_ok.rs");
+const BARE_ALLOW: &str = include_str!("analysis_fixtures/bare_allow.rs");
+const UNUSED_ALLOW: &str = include_str!("analysis_fixtures/unused_allow.rs");
+
+#[test]
+fn reasoned_allow_suppresses_and_counts() {
+    let r = run_one("rust/src/config/mod.rs", ALLOW_OK, true);
+    assert!(r.clean(), "suppression failed: {:?}", r.findings);
+    assert_eq!(r.suppressed, 1);
+}
+
+#[test]
+fn bare_and_unknown_allows_are_findings_and_do_not_suppress() {
+    let r = run_one("rust/src/config/mod.rs", BARE_ALLOW, false);
+    assert_eq!(
+        rules_of(&r),
+        [
+            "bare-allow",
+            "duration-through-bounds",
+            "bare-allow",
+            "duration-through-bounds",
+        ],
+        "{:?}",
+        r.findings
+    );
+    assert_eq!(r.suppressed, 0);
+}
+
+#[test]
+fn unused_allow_is_strict_only() {
+    let strict = run_one("rust/src/config/mod.rs", UNUSED_ALLOW, true);
+    assert_eq!(rules_of(&strict), ["unused-allow"], "{:?}", strict.findings);
+    let lax = run_one("rust/src/config/mod.rs", UNUSED_ALLOW, false);
+    assert!(lax.clean(), "unused-allow leaked outside --strict: {:?}", lax.findings);
+}
+
+#[test]
+fn findings_render_as_file_line_rule() {
+    let r = run_one("rust/src/config/mod.rs", DURATION_BAD, false);
+    let line = r.findings[0].to_string();
+    assert!(
+        line.starts_with("rust/src/config/mod.rs:10: [duration-through-bounds]"),
+        "unexpected rendering: {line}"
+    );
+}
+
+// ------------------------------------------------------- self-hosting --
+
+#[test]
+fn the_tree_is_clean_under_strict() {
+    // Integration tests run from the package root, which is the repo
+    // root (Cargo.toml points lib/bin/tests into rust/).
+    let report = analyze_paths(
+        &["rust/src".into(), "rust/tests".into()],
+        true,
+    )
+    .expect("walk failed");
+    assert!(report.files > 50, "walk looks truncated: {} files", report.files);
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.clean(),
+        "the tree must self-host clean under --strict:\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.suppressed > 0, "the deliberate exceptions should register");
+}

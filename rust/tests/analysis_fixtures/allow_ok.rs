@@ -1,0 +1,8 @@
+// Suppression fixture: a violation silenced by a well-formed
+// `analyze::allow(rule-id): reason` annotation — zero findings, one
+// suppression, and no `unused-allow` under `--strict`.
+
+pub fn poll_interval(ms: f64) -> std::time::Duration {
+    // analyze::allow(duration-through-bounds): fixture — demonstrates a reasoned suppression
+    std::time::Duration::from_secs_f64(ms / 1e3)
+}

@@ -1,0 +1,18 @@
+// Known-bad fixture for `atomics-pairing`. Analyzed under a pretend
+// `rust/src/exec/pool.rs` path; never compiled.
+//
+// `halt` is published with Release ordering but observed Relaxed: the
+// reader is unordered with everything the writer did before the store
+// (the `plan_version` contract, inverted).
+
+impl Pool {
+    fn shutdown(&self) {
+        self.halt.store(true, Ordering::Release);
+    }
+
+    fn run(&self) {
+        while !self.halt.load(Ordering::Relaxed) {
+            self.step();
+        }
+    }
+}

@@ -1,0 +1,15 @@
+// Known-clean twin of `atomics_bad.rs`: the Acquire load pairs with
+// the Release store, so the reader sees everything the writer published
+// before setting the flag.
+
+impl Pool {
+    fn shutdown(&self) {
+        self.halt.store(true, Ordering::Release);
+    }
+
+    fn run(&self) {
+        while !self.halt.load(Ordering::Acquire) {
+            self.step();
+        }
+    }
+}

@@ -1,0 +1,13 @@
+// Suppression-hygiene fixture: an allow without a reason and an allow
+// naming an unknown rule are both `bare-allow` findings, and neither
+// suppresses the violation beneath it.
+
+pub fn poll_interval(ms: f64) -> std::time::Duration {
+    // analyze::allow(duration-through-bounds)
+    std::time::Duration::from_secs_f64(ms / 1e3)
+}
+
+pub fn other_interval(ms: f64) -> std::time::Duration {
+    // analyze::allow(not-a-rule): the id must come from RULE_IDS
+    std::time::Duration::from_secs_f64(ms / 1e3)
+}

@@ -1,0 +1,11 @@
+// Known-bad fixture for `duration-through-bounds`. Path-independent
+// (the rule fires everywhere outside test spans); never compiled.
+//
+// The PR 6 `deadline_ms` incident in miniature: `f64::clamp` passes
+// NaN through, so a "bounded" hostile value still reaches the panicking
+// float Duration constructor.
+
+pub fn poll_interval(ms: f64) -> std::time::Duration {
+    let bounded = ms.clamp(0.0, 5000.0);
+    std::time::Duration::from_secs_f64(bounded / 1e3)
+}

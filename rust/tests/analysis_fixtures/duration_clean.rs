@@ -1,0 +1,12 @@
+// Known-clean twin of `duration_bad.rs`: milliseconds route through
+// the blessed bounds in `net::protocol` — `duration_from_ms` for typed
+// rejection, `saturating_duration_from_ms` for clamp-to-bounds — and
+// the integer constructor, which cannot panic, is not flagged.
+
+pub fn poll_interval(ms: f64) -> std::time::Duration {
+    crate::net::protocol::saturating_duration_from_ms(ms)
+}
+
+pub fn fixed_interval() -> std::time::Duration {
+    std::time::Duration::from_millis(250)
+}

@@ -1,0 +1,15 @@
+// Known-bad fixture for `no-guard-across-block`. Analyzed under a
+// pretend `rust/src/coordinator/member.rs` path; never compiled.
+//
+// The `join_threads` incident re-created: the `threads` mutex is held
+// across `JoinHandle::join`, so every other acquirer stalls for the
+// worker's whole drain.
+
+impl Member {
+    fn join_threads(&self) {
+        let mut t = self.threads.lock().unwrap();
+        if let Some(h) = t.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,23 @@
+// Known-clean twin of `guard_bad.rs`: the handle is taken out under
+// the lock and joined outside it (this PR's fix), and the condvar wait
+// — which hands the guard TO the blocking call, releasing it
+// atomically — is exempt by design.
+
+impl Member {
+    fn join_threads(&self) {
+        let handle = {
+            let mut t = self.threads.lock().unwrap();
+            t.batcher.take()
+        };
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn wait_ready(&self) {
+        let mut st = self.state.lock().unwrap();
+        while !st.ready {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}

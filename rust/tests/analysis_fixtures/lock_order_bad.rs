@@ -1,0 +1,21 @@
+// Known-bad fixture for `lock-order`. Analyzed under a pretend
+// `rust/src/coordinator/server.rs` path; never compiled.
+//
+// Two violations: `invert` acquires `plan` while holding `topology`
+// (the documented order runs plan -> topology), and `republish` calls
+// `rebuild_plan()` with the topology write guard still live — the PR 8
+// self-deadlock, re-created.
+
+impl Fleet {
+    fn invert(&self) {
+        let topo = self.topology.write().unwrap();
+        let plan = self.plan.write().unwrap();
+        plan.rebalance(&topo);
+    }
+
+    fn republish(&self) {
+        let topo = self.topology.write().unwrap();
+        topo.bump();
+        self.rebuild_plan();
+    }
+}

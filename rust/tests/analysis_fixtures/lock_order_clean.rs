@@ -1,0 +1,22 @@
+// Known-clean twin of `lock_order_bad.rs`: the topology guard dies in
+// its own block before `rebuild_plan()` runs (the PR 8 fix), and
+// `ordered` takes the locks in the documented plan -> topology order
+// with explicit drops.
+
+impl Fleet {
+    fn republish(&self) {
+        {
+            let mut topo = self.topology.write().unwrap();
+            topo.bump();
+        }
+        self.rebuild_plan();
+    }
+
+    fn ordered(&self) {
+        let plan = self.plan.write().unwrap();
+        let topo = self.topology.read().unwrap();
+        plan.rebalance(&topo);
+        drop(topo);
+        drop(plan);
+    }
+}

@@ -1,0 +1,9 @@
+// Known-bad fixture for `no-as-narrowing-in-decode`. Analyzed under a
+// pretend `rust/src/codec/json.rs` path; never compiled.
+//
+// The PR 6 `scale` bug in miniature: `as u32` silently aliases a
+// hostile 2^32 + 2 to 2, so an absurd request decodes as a valid one.
+
+pub fn decode_scale(raw: u64) -> u32 {
+    raw as u32
+}

@@ -1,0 +1,12 @@
+// Known-clean twin of `narrowing_bad.rs`: the decode path rejects
+// out-of-range values with `try_from`, and the encode-side cast (a
+// value this process produced, not one a peer chose) is exempt by the
+// `encode*`/`to_*`/`write*` function-name rule.
+
+pub fn decode_scale(raw: u64) -> Result<u32, String> {
+    u32::try_from(raw).map_err(|_| format!("scale {raw} out of range"))
+}
+
+pub fn encode_scale(v: u32) -> u64 {
+    v as u64
+}

@@ -1,0 +1,19 @@
+// Known-bad fixture for `no-panic-on-wire`. Analyzed under a pretend
+// `rust/src/net/protocol.rs` path by rust/tests/analysis.rs; never
+// compiled (the analyzer walk skips `analysis_fixtures/`).
+//
+// Three violations, one per line: a slice index, an `.unwrap()`, and a
+// `panic!` — each is a remote denial of service when `buf` comes off
+// the wire.
+
+pub fn decode_len(buf: &[u8]) -> usize {
+    let hi = buf[0];
+    let lo = buf
+        .get(1)
+        .copied()
+        .unwrap();
+    if hi == 0xFF {
+        panic!("bad frame");
+    }
+    (usize::from(hi) << 8) | usize::from(lo)
+}

@@ -1,0 +1,12 @@
+// Known-clean twin of `no_panic_bad.rs`: the same decode written the
+// way the wire tier must be written — bounds-checked access and typed
+// errors, nothing that can panic on hostile input.
+
+pub fn decode_len(buf: &[u8]) -> Result<usize, String> {
+    let hi = *buf.first().ok_or("short frame")?;
+    let lo = *buf.get(1).ok_or("short frame")?;
+    if hi == 0xFF {
+        return Err("bad frame".to_string());
+    }
+    Ok((usize::from(hi) << 8) | usize::from(lo))
+}

@@ -1,0 +1,8 @@
+// Suppression-hygiene fixture: an allow whose finding is gone is an
+// `unused-allow` under `--strict` (and silently inert otherwise) — so
+// stale annotations rot loudly.
+
+// analyze::allow(duration-through-bounds): the violation this covered was fixed long ago
+pub fn poll_interval(ms: u64) -> std::time::Duration {
+    std::time::Duration::from_millis(ms)
+}

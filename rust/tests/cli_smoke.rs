@@ -249,6 +249,33 @@ fn serve_rejects_unknown_scheduler_and_policy() {
 }
 
 #[test]
+fn analyze_gates_on_findings_and_self_hosts() {
+    if binary().is_none() {
+        return;
+    }
+    let (out, _, ok) = run(&["help"]);
+    assert!(ok);
+    assert!(out.contains("analyze"), "help missing 'analyze':\n{out}");
+    // A known-bad fixture exits nonzero, prints file:line and the rule
+    // id on stdout, and carries the gate message on stderr.
+    let (out, err, ok) = run(&["analyze", "rust/tests/analysis_fixtures/duration_bad.rs"]);
+    assert!(!ok, "bad fixture must gate\nstdout: {out}");
+    assert!(out.contains("duration_bad.rs:10"), "{out}");
+    assert!(out.contains("[duration-through-bounds]"), "{out}");
+    assert!(err.contains("analyze found"), "{err}");
+    // A missing path is a friendly error, not a panic.
+    let (_, err, ok) = run(&["analyze", "no/such/path.rs"]);
+    assert!(!ok);
+    assert!(err.contains("no such path"), "{err}");
+    // The self-hosting gate CI runs: the committed tree is clean under
+    // --strict (zero findings, zero unused allows).
+    let (out, err, ok) = run(&["analyze", "--strict"]);
+    assert!(ok, "stderr: {err}\nstdout: {out}");
+    assert!(out.contains("0 finding(s)"), "{out}");
+    assert!(out.contains("(strict)"), "{out}");
+}
+
+#[test]
 fn unknown_command_fails_cleanly() {
     if binary().is_none() {
         return;
